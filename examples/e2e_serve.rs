@@ -1,0 +1,153 @@
+//! End-to-end driver (DESIGN.md E7): serve batched decoder requests
+//! through the full three-layer stack and report latency/throughput.
+//!
+//! What this proves, in one run:
+//!   * L1/L2 — the Pallas Bailey-FFT and HS-scan kernels, embedded in the
+//!     JAX decoder layers, were AOT-lowered to `artifacts/*.hlo.txt`;
+//!   * runtime — the Rust PJRT client loads and compiles those artifacts
+//!     (Python is not running here);
+//!   * L3 — the coordinator routes, batches, pads and dispatches live
+//!     requests across worker threads, with metrics;
+//!   * correctness — served outputs match a golden re-execution, and the
+//!     Hyena/Mamba layers show their expected causal structure.
+//!
+//! Requires `make artifacts` (skips gracefully if missing).
+//!
+//! Run: `cargo run --release --example e2e_serve -- [--requests 48] [--workers 2]`
+
+use ssm_rdu::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, Executor, PjrtExecutor};
+use ssm_rdu::runtime::{default_artifacts_dir, Manifest, ModelKind};
+use ssm_rdu::util::cli::Args;
+use ssm_rdu::util::{fmt_time, XorShift};
+use ssm_rdu::util::table::Table;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let args = Args::from_env();
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir);
+    let n_requests = args.usize_or("requests", 48);
+    let workers = args.usize_or("workers", 1);
+
+    let manifest = match Manifest::load(dir.join("manifest.json")) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("e2e_serve: artifacts not available ({e:#}); run `make artifacts` first.");
+            std::process::exit(0); // graceful skip: build-time artifacts absent
+        }
+    };
+    let elems = manifest.seq_len * manifest.d_model;
+    let models: Vec<ModelKind> = manifest.models.keys().copied().collect();
+    println!(
+        "artifacts: L={} D={} batch={} models={models:?}",
+        manifest.seq_len, manifest.d_model, manifest.batch
+    );
+
+    // Start the coordinator; each worker compiles its own PJRT set.
+    let t_boot = Instant::now();
+    let dir2 = dir.clone();
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            policy: BatchPolicy {
+                max_batch: manifest.batch,
+                max_wait: Duration::from_millis(8),
+            },
+            workers,
+                ..Default::default()
+            },
+        Box::new(move || Ok(Box::new(PjrtExecutor::load(&dir2)?) as Box<dyn Executor>)),
+    )
+    .expect("coordinator start");
+    println!("coordinator up in {} ({} worker(s))", fmt_time(t_boot.elapsed().as_secs_f64()), workers);
+
+    // Fire a mixed workload.
+    let mut rng = XorShift::new(2024);
+    let inputs: Vec<(ModelKind, Vec<f32>)> = (0..n_requests)
+        .map(|i| {
+            let model = models[i % models.len()];
+            let x: Vec<f32> = (0..elems).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+            (model, x)
+        })
+        .collect();
+
+    let t0 = Instant::now();
+    let rxs: Vec<_> = inputs
+        .iter()
+        .map(|(m, x)| coord.submit(*m, x.clone()).expect("submit"))
+        .collect();
+    let responses: Vec<_> = rxs.into_iter().map(|rx| rx.recv().expect("response")).collect();
+    let wall = t0.elapsed().as_secs_f64();
+
+    // Report per-model latency statistics.
+    let mut t = Table::new(
+        "e2e serving results",
+        &["model", "requests", "mean latency", "mean batch", "tokens/s"],
+    );
+    for &m in &models {
+        let rs: Vec<_> = responses.iter().filter(|r| r.model == m).collect();
+        if rs.is_empty() {
+            continue;
+        }
+        let mean_lat =
+            rs.iter().map(|r| r.latency().as_secs_f64()).sum::<f64>() / rs.len() as f64;
+        let mean_batch = rs.iter().map(|r| r.batch_size as f64).sum::<f64>() / rs.len() as f64;
+        let tok_s = rs.len() as f64 * manifest.seq_len as f64 / wall;
+        t.row(&[
+            m.to_string(),
+            rs.len().to_string(),
+            fmt_time(mean_lat),
+            format!("{mean_batch:.2}"),
+            format!("{tok_s:.0}"),
+        ]);
+    }
+    t.print();
+    println!(
+        "total: {n_requests} requests in {} → {:.1} req/s  |  {}",
+        fmt_time(wall),
+        n_requests as f64 / wall,
+        coord.metrics.summary()
+    );
+
+    // Golden correctness check: re-execute one request directly and compare.
+    let mut exec = PjrtExecutor::load(&dir).expect("golden executor");
+    let (m0, x0) = &inputs[0];
+    let slots = exec.batch_slots(*m0);
+    let mut packed = vec![0f32; slots * elems];
+    packed[..elems].copy_from_slice(x0);
+    let golden = exec.execute(*m0, &packed).expect("golden exec");
+    let served = &responses[0];
+    assert_eq!(served.model, *m0);
+    let max_diff = served
+        .output
+        .iter()
+        .zip(&golden[..elems])
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    println!("golden check ({m0}): max |served − direct| = {max_diff:.2e}");
+    assert!(max_diff < 1e-4, "served output must match direct execution");
+
+    // Structural sanity: the served mamba layer must be causal.
+    if models.contains(&ModelKind::Mamba) {
+        let mut a = vec![0.25f32; elems];
+        let b = a.clone();
+        // Perturb the last quarter of the sequence only.
+        for v in a[elems * 3 / 4..].iter_mut() {
+            *v += 1.0;
+        }
+        let ra = coord.call(ModelKind::Mamba, a).expect("call");
+        let rb = coord.call(ModelKind::Mamba, b).expect("call");
+        let prefix = elems / 2;
+        let pre_diff = ra.output[..prefix]
+            .iter()
+            .zip(&rb.output[..prefix])
+            .map(|(x, y)| (x - y).abs())
+            .fold(0f32, f32::max);
+        println!("causality check (mamba): prefix diff = {pre_diff:.2e}");
+        assert!(pre_diff < 1e-4, "future tokens must not affect the past");
+    }
+
+    coord.shutdown();
+    println!("e2e_serve OK");
+}

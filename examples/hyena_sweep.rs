@@ -1,0 +1,74 @@
+//! Hyena design-space sweep (the paper's §III story, interactively).
+//!
+//! Sweeps sequence length and FFT tile size R, printing for every point the
+//! latency of the four Fig. 7 designs plus the GEMM-FFT/Vector-FFT FLOP
+//! ratio — showing where the FFT-mode interconnect pays off and how the
+//! Bailey tile size trades FLOPs against hardware friendliness.
+//!
+//! Run: `cargo run --release --example hyena_sweep -- [--seq-lens 65536,262144]`
+
+use ssm_rdu::arch::RduConfig;
+use ssm_rdu::dfmodel;
+use ssm_rdu::fft::{gemm_fft_flops, vector_fft_flops, BaileyVariant};
+use ssm_rdu::figures::seq_label;
+use ssm_rdu::util::cli::Args;
+use ssm_rdu::util::fmt_time;
+use ssm_rdu::util::table::Table;
+use ssm_rdu::workloads::{attention_decoder, hyena_decoder, DecoderConfig};
+
+fn main() {
+    let args = Args::from_env();
+    let seq_lens = args.usize_list_or("seq-lens", &[1 << 16, 1 << 18, 1 << 20]);
+
+    let base = RduConfig::baseline();
+    let fftm = RduConfig::fft_mode();
+
+    let mut t = Table::new(
+        "Hyena design-space sweep",
+        &["L", "attention", "vec-fft/base", "gemm-fft/base", "vec-fft/fft-mode", "best design"],
+    );
+    for &l in &seq_lens {
+        let dc = DecoderConfig::paper(l);
+        let lat = [
+            dfmodel::estimate(&attention_decoder(&dc), &base).unwrap().total_seconds,
+            dfmodel::estimate(&hyena_decoder(&dc, BaileyVariant::Vector), &base).unwrap().total_seconds,
+            dfmodel::estimate(&hyena_decoder(&dc, BaileyVariant::Gemm), &base).unwrap().total_seconds,
+            dfmodel::estimate(&hyena_decoder(&dc, BaileyVariant::Vector), &fftm).unwrap().total_seconds,
+        ];
+        let names = ["attention", "vec-fft/base", "gemm-fft/base", "vec-fft/fft-mode"];
+        let best = lat
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| names[i])
+            .unwrap();
+        t.row(&[
+            seq_label(l),
+            fmt_time(lat[0]),
+            fmt_time(lat[1]),
+            fmt_time(lat[2]),
+            fmt_time(lat[3]),
+            best.to_string(),
+        ]);
+    }
+    t.print();
+
+    // Tile-size ablation: the §III-A FLOP trade-off (GEMM-FFT overhead is
+    // R/log₂R — 6.4× at R=32, 4× at R=16).
+    let mut t2 = Table::new(
+        "Bailey tile-size ablation (L = 1M transforms)",
+        &["R", "vector-FFT GFLOP", "GEMM-FFT GFLOP", "overhead (paper: R/log2R)"],
+    );
+    let l = 1 << 21;
+    for r in [8usize, 16, 32, 64] {
+        let v = vector_fft_flops(l);
+        let g = gemm_fft_flops(l, r);
+        t2.row(&[
+            r.to_string(),
+            format!("{:.2}", v / 1e9),
+            format!("{:.2}", g / 1e9),
+            format!("{:.2}x", g / v),
+        ]);
+    }
+    t2.print();
+}

@@ -1,0 +1,82 @@
+//! Mamba scan design-space sweep (the paper's §IV story, interactively).
+//!
+//! Sweeps sequence length across the five Fig. 11 designs and shows the
+//! Amdahl decomposition (scan vs MLP vs rest) that bounds the scan-mode
+//! speedup at 1.75× in the paper. Includes the full selective-SSM shape
+//! (N = 16, E = 2) as an ablation against the paper's scalar-state shape.
+//!
+//! Run: `cargo run --release --example mamba_sweep -- [--seq-lens ...]`
+
+use ssm_rdu::arch::RduConfig;
+use ssm_rdu::dfmodel;
+use ssm_rdu::figures::seq_label;
+use ssm_rdu::util::cli::Args;
+use ssm_rdu::util::fmt_time;
+use ssm_rdu::util::table::Table;
+use ssm_rdu::workloads::{mamba_decoder, DecoderConfig, ScanVariant};
+
+fn main() {
+    let args = Args::from_env();
+    let seq_lens = args.usize_list_or("seq-lens", &[1 << 16, 1 << 18, 1 << 20]);
+
+    let base = RduConfig::baseline();
+    let hs = RduConfig::hs_scan_mode();
+    let b = RduConfig::b_scan_mode();
+
+    let mut t = Table::new(
+        "Mamba scan design sweep (paper shape: scalar state per channel)",
+        &["L", "c-scan/base", "par/base", "par/hs-mode", "par/b-mode", "scan-mode gain"],
+    );
+    for &l in &seq_lens {
+        let dc = DecoderConfig::paper(l);
+        let lat = [
+            dfmodel::estimate(&mamba_decoder(&dc, ScanVariant::CScan), &base).unwrap().total_seconds,
+            dfmodel::estimate(&mamba_decoder(&dc, ScanVariant::Parallel), &base).unwrap().total_seconds,
+            dfmodel::estimate(&mamba_decoder(&dc, ScanVariant::Parallel), &hs).unwrap().total_seconds,
+            dfmodel::estimate(&mamba_decoder(&dc, ScanVariant::Parallel), &b).unwrap().total_seconds,
+        ];
+        t.row(&[
+            seq_label(l),
+            fmt_time(lat[0]),
+            fmt_time(lat[1]),
+            fmt_time(lat[2]),
+            fmt_time(lat[3]),
+            format!("{:.2}x (paper 1.75x)", lat[1] / lat[2]),
+        ]);
+    }
+    t.print();
+
+    // Amdahl decomposition at 1M: why the gain is MLP-bound (paper §IV-C).
+    let dc = DecoderConfig::paper(1 << 20);
+    let g = mamba_decoder(&dc, ScanVariant::Parallel);
+    let mut t2 = Table::new(
+        "Amdahl decomposition of parallel-scan Mamba @ 1M",
+        &["config", "total", "scan share", "MLP share", "rest"],
+    );
+    for cfg in [&base, &hs] {
+        let est = dfmodel::estimate(&g, cfg).unwrap();
+        let scan = est.share_where(|k| k.name.contains("scan"));
+        let mlp = est.share_where(|k| k.name.starts_with("mlp."));
+        t2.row(&[
+            cfg.name(),
+            fmt_time(est.total_seconds),
+            fmt_time(scan),
+            fmt_time(mlp),
+            fmt_time(est.total_seconds - scan - mlp),
+        ]);
+    }
+    t2.print();
+
+    // Ablation: the full selective-SSM shape (N=16, E=2) re-weights the
+    // scan and shifts the crossover.
+    let full = DecoderConfig::mamba_full(1 << 20);
+    let gf = mamba_decoder(&full, ScanVariant::Parallel);
+    let e_base = dfmodel::estimate(&gf, &base).unwrap().total_seconds;
+    let e_hs = dfmodel::estimate(&gf, &hs).unwrap().total_seconds;
+    println!(
+        "\nfull selective-SSM shape (N=16, E=2) @ 1M: baseline {} → scan-mode {} ({:.2}x)",
+        fmt_time(e_base),
+        fmt_time(e_hs),
+        e_base / e_hs
+    );
+}

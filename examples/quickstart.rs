@@ -1,0 +1,69 @@
+//! Quickstart: the whole library in ~60 lines.
+//!
+//! 1. Describe the chip (Table I) and pick a configuration.
+//! 2. Build a workload dataflow graph (a Hyena decoder at 1M tokens).
+//! 3. Ask DFModel for the optimal mapping + latency estimate.
+//! 4. Compare against the baseline RDU and the A100 GPU.
+//! 5. Poke the cycle-level PCU simulator that grounds the estimates.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use ssm_rdu::arch::{GpuSpec, RduConfig};
+use ssm_rdu::dfmodel;
+use ssm_rdu::fft::BaileyVariant;
+use ssm_rdu::gpu;
+use ssm_rdu::pcusim::{self, Pcu};
+use ssm_rdu::util::fmt_time;
+use ssm_rdu::workloads::{hyena_decoder, DecoderConfig};
+
+fn main() {
+    // 1. The paper's chip (520 PCUs of 32×12 FUs, 1.6 GHz, 8 TB/s HBM3e)
+    //    in its baseline and FFT-extended configurations.
+    let baseline = RduConfig::baseline();
+    let fft_mode = RduConfig::fft_mode();
+    println!("chip: {} / {}", baseline.spec.table1_report().render().lines().nth(3).unwrap_or(""), fft_mode);
+
+    // 2. A Hyena decoder layer at 1M tokens, hidden dim 32 (paper §III-C).
+    let cfg = DecoderConfig::paper(1 << 20);
+    let hyena = hyena_decoder(&cfg, BaileyVariant::Vector);
+    println!(
+        "workload: {} — {} kernels, {:.2} GFLOP",
+        hyena.name,
+        hyena.kernels.len(),
+        hyena.total_flops() / 1e9
+    );
+
+    // 3. DFModel: map and estimate on the FFT-mode RDU.
+    let est = dfmodel::estimate(&hyena, &fft_mode).expect("mappable");
+    println!(
+        "fft-mode RDU:  {} (bottleneck: {}, {} section(s))",
+        fmt_time(est.total_seconds),
+        est.bottleneck(),
+        est.sections
+    );
+
+    // 4. The same workload on the baseline RDU and the GPU.
+    let base_est = dfmodel::estimate(&hyena, &baseline).expect("mappable");
+    let gpu_est = gpu::estimate(&hyena, &GpuSpec::a100());
+    println!("baseline RDU:  {} ({:.2}x slower)", fmt_time(base_est.total_seconds),
+        base_est.total_seconds / est.total_seconds);
+    println!("A100 GPU:      {} ({:.2}x slower — paper: 5.95x)", fmt_time(gpu_est.total_seconds),
+        gpu_est.total_seconds / est.total_seconds);
+
+    // 5. Why: the butterfly fabric turns the serialized FFT spatial.
+    let prog = pcusim::fft_program(32);
+    let inputs: Vec<Vec<_>> = (0..512)
+        .map(|i| (0..32).map(|j| ssm_rdu::util::C64::real(((i * 31 + j) % 7) as f64)).collect())
+        .collect();
+    for (name, pcu) in [
+        ("baseline PCU", Pcu::baseline(baseline.spec.pcu)),
+        ("fft-mode PCU", Pcu::fft_mode(baseline.spec.pcu)),
+    ] {
+        let (_, stats) = pcu.run(&prog, &inputs);
+        println!(
+            "{name}: {} regime, {:.2} cycles/FFT-tile",
+            if stats.spatial { "spatial" } else { "serialized" },
+            stats.initiation_interval()
+        );
+    }
+}

@@ -1,0 +1,109 @@
+"""AOT lowering: JAX/Pallas decoder layers → HLO text artifacts.
+
+Build-time only (`make artifacts`); the Rust runtime
+(``rust/src/runtime``) loads the text with ``HloModuleProto::from_text_file``,
+compiles on the PJRT CPU client and executes — Python never runs on the
+request path.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--seq-len 2048]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange).
+
+    ``print_large_constants`` is ESSENTIAL: the default printer elides big
+    literals as ``constant({...})``, which XLA 0.5.1's text parser silently
+    reads back as zeros — the baked model weights would vanish and every
+    decoder layer would collapse to the residual identity.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # New-jax metadata carries `source_end_line` etc. that the 0.5.1 text
+    # parser rejects; metadata is debug-only, drop it.
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def lower_layer(name: str, cfg: model.ModelConfig, batch: int, seed: int = 0) -> str:
+    """Lower one decoder layer with parameters baked in as constants, so
+    the artifact's only runtime input is the activation tensor."""
+    params = model.init_params(cfg, seed=seed)
+    layer = model.LAYERS[name]
+
+    def fn(x):
+        return (layer(params, x),)
+
+    spec = jax.ShapeDtypeStruct((batch, cfg.seq_len, cfg.d_model), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seq-len", type=int, default=2048)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--d-model", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--models",
+        default="attention,hyena,mamba",
+        help="comma-separated subset of attention,hyena,mamba",
+    )
+    args = ap.parse_args()
+
+    cfg = model.ModelConfig(seq_len=args.seq_len, d_model=args.d_model)
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {
+        "seq_len": cfg.seq_len,
+        "d_model": cfg.d_model,
+        "batch": args.batch,
+        "seed": args.seed,
+        "dtype": "f32",
+        "models": {},
+    }
+    for name in args.models.split(","):
+        name = name.strip()
+        if name not in model.LAYERS:
+            raise SystemExit(f"unknown model `{name}`")
+        text = lower_layer(name, cfg, args.batch, seed=args.seed)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["models"][name] = {
+            "path": f"{name}.hlo.txt",
+            "input_shape": [args.batch, cfg.seq_len, cfg.d_model],
+            "output_shape": [args.batch, cfg.seq_len, cfg.d_model],
+            "sha256_16": digest,
+            "chars": len(text),
+        }
+        print(f"wrote {path}: {len(text)} chars, sha256/16={digest}")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,237 @@
+"""L1 Pallas kernel: Bailey 4-step FFT built from R-point tiles
+(paper §III-A, Fig. 6; FFT-mode PCU of Fig. 5).
+
+The Pallas kernel (`_fft_tile_kernel`) computes radix-2 Cooley–Tukey FFTs
+over the **last axis of an (M, R) tile batch** — the software twin of the
+paper's FFT-mode PCU: each of the log₂R butterfly levels is one pipeline
+stage, lane *i* exchanges with lane *i ⊕ 2^s*, the twiddles sit in the FU
+constant ports. The same program is simulated cycle-by-cycle in
+``rust/src/pcusim/programs.rs::fft_program``.
+
+Hardware adaptation (DESIGN.md §3): on a real TPU the (block_m, R) tile is
+sized to VMEM and the static `for s in range(levels)` loop unrolls into a
+fused elementwise chain on the VPU; `interpret=True` is mandatory here —
+real TPU lowering emits a Mosaic custom call the CPU PJRT client cannot
+execute.
+
+All interfaces are float32 re/im pairs (AOT-friendly; see ref.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Default tile width — matches the 32-lane PCU of Table I.
+DEFAULT_R = 32
+# Rows per Pallas grid step (VMEM-footprint knob; see DESIGN.md §Perf).
+# Large default: fewer grid steps → fewer dynamic-slice loop iterations in
+# the lowered HLO (15× end-to-end on the L=2048 Hyena artifact; see
+# EXPERIMENTS.md §Perf). On a real TPU this would be re-tiled to VMEM.
+DEFAULT_BLOCK_M = 8192
+
+
+def _bit_reverse_perm(n):
+    """Static bit-reversal permutation of 0..n-1 (host-side numpy)."""
+    bits = int(n).bit_length() - 1
+    idx = np.arange(n)
+    rev = np.zeros(n, dtype=np.int32)
+    for b in range(bits):
+        rev |= ((idx >> b) & 1) << (bits - 1 - b)
+    return rev
+
+
+def _butterfly_tables(r, inverse):
+    """Per-level twiddle constants, shaped (levels, R/2): level *s* uses the
+    first `2^s` entries (`e^{∓2πi·j/2^{s+1}}`, j < 2^s) — the FU constant
+    ports of the FFT-mode PCU, passed to the kernel as inputs (Pallas
+    forbids captured traced constants)."""
+    levels = int(r).bit_length() - 1
+    sign = 1.0 if inverse else -1.0
+    half_r = max(r // 2, 1)
+    wr = np.zeros((levels, half_r), np.float32)
+    wi = np.zeros((levels, half_r), np.float32)
+    for s in range(levels):
+        half = 1 << s
+        length = half << 1
+        j = np.arange(half_r) % half
+        ang = sign * 2.0 * np.pi * j / length
+        wr[s] = np.cos(ang)
+        wi[s] = np.sin(ang)
+    return wr, wi
+
+
+def _fft_tile_kernel(xr_ref, xi_ref, wr_ref, wi_ref, or_ref, oi_ref, *, r, levels):
+    """Radix-2 DIT FFT over the last axis of one (block_m, R) tile.
+
+    Expects bit-reversed input order (the host permutes — on the RDU the
+    PMU address generators do this for free while streaming the tile in).
+
+    With bit-reversed input, level *s*'s stride-2^s butterfly partners are
+    the two contiguous halves of each length-2^{s+1} block, so every level
+    is pure reshape + slice + FMA — no gathers in the lowered HLO (a 5.6×
+    win over the `jnp.take` formulation; EXPERIMENTS.md §Perf). On the PCU
+    this is the same dataflow: lane i exchanges with lane i ⊕ 2^s.
+    """
+    xr = xr_ref[...]
+    xi = xi_ref[...]
+    m = xr.shape[0]
+    for s in range(levels):  # static → unrolls into `levels` fused stages
+        half = 1 << s
+        length = half << 1
+        groups = r // length
+        ar4 = xr.reshape(m, groups, 2, half)
+        ai4 = xi.reshape(m, groups, 2, half)
+        a_r, b_r = ar4[:, :, 0, :], ar4[:, :, 1, :]
+        a_i, b_i = ai4[:, :, 0, :], ai4[:, :, 1, :]
+        wr = wr_ref[s, :half][None, None, :]
+        wi = wi_ref[s, :half][None, None, :]
+        # t = w · b; out = [a + t, a − t].
+        tr = wr * b_r - wi * b_i
+        ti = wr * b_i + wi * b_r
+        xr = jnp.concatenate([a_r + tr, a_r - tr], axis=-1).reshape(m, r)
+        xi = jnp.concatenate([a_i + ti, a_i - ti], axis=-1).reshape(m, r)
+    or_ref[...] = xr
+    oi_ref[...] = xi
+
+
+@functools.partial(jax.jit, static_argnames=("r", "inverse", "block_m"))
+def fft_tiles(xr, xi, *, r=DEFAULT_R, inverse=False, block_m=DEFAULT_BLOCK_M):
+    """R-point FFTs over the last axis of `(M, R)` float32 re/im arrays."""
+    m = xr.shape[0]
+    assert xr.shape == (m, r) and xi.shape == (m, r), (xr.shape, r)
+    levels = int(r).bit_length() - 1
+    rev = _bit_reverse_perm(r)
+    xr = xr[:, rev]
+    xi = xi[:, rev]
+    twr, twi = _butterfly_tables(r, inverse)
+    bm = min(block_m, m)
+    assert m % bm == 0, f"M={m} not a multiple of block_m={bm}"
+    grid = (m // bm,)
+    spec = pl.BlockSpec((bm, r), lambda i: (i, 0))
+    # Twiddle tables are broadcast to every grid step.
+    tspec = pl.BlockSpec(twr.shape, lambda i: (0, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((m, r), jnp.float32),
+        jax.ShapeDtypeStruct((m, r), jnp.float32),
+    ]
+    yr, yi = pl.pallas_call(
+        functools.partial(_fft_tile_kernel, r=r, levels=levels),
+        grid=grid,
+        in_specs=[spec, spec, tspec, tspec],
+        out_specs=[spec, spec],
+        out_shape=out_shape,
+        interpret=True,  # CPU-PJRT executable; real-TPU lowering is Mosaic
+    )(xr, xi, jnp.asarray(twr), jnp.asarray(twi))
+    if inverse:
+        yr = yr / r
+        yi = yi / r
+    return yr, yi
+
+
+def bailey_fft(xr, xi, *, r=DEFAULT_R, inverse=False):
+    """Bailey 4-step FFT along the last axis of `(..., L)` float32 pairs,
+    decomposed entirely into R-point Pallas tile transforms.
+
+    Follows ``rust/src/fft/bailey.rs``: with the DIT split `n = n1·C + n2`,
+      1. reshape to an R×C matrix `A[n1, n2] = x[n1·C + n2]`,
+      2. column FFTs (length R — the Pallas tile kernel),
+      3. twiddle scaling `e^{∓2πi·n2·k1/L}`,
+      4. row FFTs (length C, recursing until C ≤ R),
+    output index `X[k1 + R·k2]`.
+    """
+    l = xr.shape[-1]
+    assert l & (l - 1) == 0, f"L={l} must be a power of two"
+    lead = xr.shape[:-1]
+    xr2 = xr.reshape((-1, l))
+    xi2 = xi.reshape((-1, l))
+    yr, yi = _bailey_rec(xr2, xi2, l, r, inverse)
+    if inverse:
+        # Each inverse tile transform divides by its own width, so the
+        # recursion has applied 1/_ifft_norm_applied(l, r) in total; rescale
+        # to the correct 1/L.
+        fix = _ifft_norm_applied(l, r) / l
+        if fix != 1.0:
+            yr = yr * fix
+            yi = yi * fix
+    return yr.reshape(lead + (l,)), yi.reshape(lead + (l,))
+
+
+def _ifft_norm_applied(l, r):
+    """Normalization already applied by inverse tile transforms in the
+    recursion: each level of column tiles divides by r; the base row
+    transform divides by its own length."""
+    if l <= r:
+        return l
+    return r * _ifft_norm_applied(l // r, r)
+
+
+def _bailey_rec(xr, xi, l, r, inverse):
+    """Recursive 4-step on `(B, L)` arrays; returns `(B, L)`."""
+    b = xr.shape[0]
+    if l <= r:
+        # Base tile: pad batch rows up to a block multiple if needed.
+        return _tile_batch(xr, xi, l, inverse)
+    c = l // r
+    # Step 1: A[n1, n2] = x[n1*C + n2] → shape (B, R, C).
+    ar = xr.reshape(b, r, c)
+    ai = xi.reshape(b, r, c)
+    # Step 2: column FFTs along n1: move axis to last, tile-transform.
+    colr = jnp.swapaxes(ar, 1, 2).reshape(b * c, r)   # (B*C, R)
+    coli = jnp.swapaxes(ai, 1, 2).reshape(b * c, r)
+    tr, ti = _tile_batch(colr, coli, r, inverse)
+    tr = tr.reshape(b, c, r)
+    ti = ti.reshape(b, c, r)
+    # Step 3: twiddles e^{∓2πi n2 k1 / L}; t[n2, k1] layout here.
+    n2 = np.arange(c)[:, None]
+    k1 = np.arange(r)[None, :]
+    sign = 1.0 if inverse else -1.0
+    ang = sign * 2.0 * np.pi * (n2 * k1 % l) / l
+    twr = np.cos(ang).astype(np.float32)
+    twi = np.sin(ang).astype(np.float32)
+    ur = tr * twr - ti * twi
+    ui = tr * twi + ti * twr
+    # Step 4: row FFTs along n2 for each k1: rows are u[:, :, k1] (length C).
+    rowr = jnp.swapaxes(ur, 1, 2).reshape(b * r, c)   # (B*R, C)
+    rowi = jnp.swapaxes(ui, 1, 2).reshape(b * r, c)
+    vr, vi = _bailey_rec(rowr, rowi, c, r, inverse)
+    vr = vr.reshape(b, r, c)
+    vi = vi.reshape(b, r, c)
+    # Output X[k1 + R*k2]: axis order (k2, k1) flattened.
+    outr = jnp.swapaxes(vr, 1, 2).reshape(b, l)
+    outi = jnp.swapaxes(vi, 1, 2).reshape(b, l)
+    return outr, outi
+
+
+def _tile_batch(xr, xi, width, inverse):
+    """Apply the Pallas tile kernel to `(M, width)` arrays, padding M to a
+    block multiple."""
+    m = xr.shape[0]
+    bm = DEFAULT_BLOCK_M if m >= DEFAULT_BLOCK_M else m
+    pad = (-m) % bm
+    if pad:
+        xr = jnp.concatenate([xr, jnp.zeros((pad, width), jnp.float32)], axis=0)
+        xi = jnp.concatenate([xi, jnp.zeros((pad, width), jnp.float32)], axis=0)
+    yr, yi = fft_tiles(xr, xi, r=width, inverse=inverse, block_m=bm)
+    return yr[:m], yi[:m]
+
+
+def causal_fftconv(u, k, *, r=DEFAULT_R):
+    """Hyena long convolution: causal conv of real `(..., L)` signals via
+    zero-padded Bailey FFTs — the paper's two-forward-FFTs + pointwise
+    product + one-inverse-FFT kernel replacement (§II-B)."""
+    l = u.shape[-1]
+    n = 2 * l
+    pad = [(0, 0)] * (u.ndim - 1) + [(0, n - l)]
+    up = jnp.pad(u, pad).astype(jnp.float32)
+    kp = jnp.pad(k, pad).astype(jnp.float32)
+    zero = jnp.zeros_like(up)
+    ur, ui = bailey_fft(up, zero, r=r)                 # forward FFT #1
+    kr, ki = bailey_fft(kp, jnp.zeros_like(kp), r=r)   # forward FFT #2
+    # Frequency-domain complex product.
+    pr = ur * kr - ui * ki
+    pi_ = ur * ki + ui * kr
+    yr, _ = bailey_fft(pr, pi_, r=r, inverse=True)     # inverse FFT
+    return yr[..., :l]

@@ -1,0 +1,133 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every Pallas kernel in this package is tested against these references in
+``python/tests``; the same algorithms exist in Rust
+(``rust/src/fft``, ``rust/src/scan``) and the cycle-level PCU simulator
+(``rust/src/pcusim/programs.rs``), closing the cross-layer correctness loop
+described in DESIGN.md §7.
+
+All interfaces use float32 re/im pairs rather than complex dtypes so the
+same signatures survive AOT lowering to the Rust PJRT runtime unchanged.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# FFT references
+# ---------------------------------------------------------------------------
+
+def fft_ref(xr, xi):
+    """Reference FFT along the last axis; returns (re, im) float32."""
+    y = jnp.fft.fft(xr.astype(jnp.complex64) + 1j * xi.astype(jnp.complex64))
+    return y.real.astype(jnp.float32), y.imag.astype(jnp.float32)
+
+
+def ifft_ref(xr, xi):
+    """Reference inverse FFT along the last axis."""
+    y = jnp.fft.ifft(xr.astype(jnp.complex64) + 1j * xi.astype(jnp.complex64))
+    return y.real.astype(jnp.float32), y.imag.astype(jnp.float32)
+
+
+def bailey_fft_ref(xr, xi, r):
+    """Bailey 4-step FFT reference (paper §III-A, Fig. 6), one level.
+
+    Mirrors ``rust/src/fft/bailey.rs``: reshape the length-L axis as an
+    R×C matrix with the DIT split ``n = n1·C + n2``, column FFTs, twiddle
+    scaling ``e^{-2πi·n2·k1/L}``, row FFTs, output index ``k1 + R·k2``.
+    """
+    l = xr.shape[-1]
+    assert l % r == 0
+    c = l // r
+    x = xr.astype(jnp.complex64) + 1j * xi.astype(jnp.complex64)
+    # A[n1, n2] = x[n1*C + n2]  (leading batch dims preserved).
+    a = x.reshape(x.shape[:-1] + (r, c))
+    # Step 2: column FFTs = transforms along n1 (axis -2).
+    t = jnp.fft.fft(a, axis=-2)
+    # Step 3: twiddles e^{-2πi n2 k1 / L}.
+    k1 = np.arange(r)[:, None]
+    n2 = np.arange(c)[None, :]
+    tw = np.exp(-2j * np.pi * (k1 * n2) / l).astype(np.complex64)
+    t = t * tw
+    # Step 4: row FFTs along n2 (axis -1); output X[k1 + R*k2].
+    y = jnp.fft.fft(t, axis=-1)
+    out = jnp.swapaxes(y, -1, -2).reshape(x.shape)
+    return out.real.astype(jnp.float32), out.imag.astype(jnp.float32)
+
+
+def fftconv_ref(u, k):
+    """Circular FFT convolution of real signals along the last axis."""
+    y = jnp.fft.ifft(jnp.fft.fft(u) * jnp.fft.fft(k)).real
+    return y.astype(jnp.float32)
+
+
+def causal_fftconv_ref(u, k):
+    """Causal (linear, truncated to L) convolution via zero-padded FFT —
+    the Hyena long-convolution operator."""
+    l = u.shape[-1]
+    n = 2 * l
+    pad = [(0, 0)] * (u.ndim - 1) + [(0, n - l)]
+    up = jnp.pad(u, pad)
+    kp = jnp.pad(k, pad)
+    y = jnp.fft.ifft(jnp.fft.fft(up) * jnp.fft.fft(kp)).real[..., :l]
+    return y.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Scan references
+# ---------------------------------------------------------------------------
+
+def cumsum_exclusive_ref(x):
+    """Exclusive prefix sum along the last axis (the paper's §IV-A example:
+    [2,4,6,8] → [0,2,6,12])."""
+    inc = jnp.cumsum(x, axis=-1)
+    return (inc - x).astype(x.dtype)
+
+
+def linear_scan_ref(a, b):
+    """Serial reference of the Mamba recurrence h[t] = a[t]·h[t−1] + b[t]
+    (h[−1] = 0), scanning the last axis. Shapes: (..., L)."""
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    a_t = jnp.moveaxis(a, -1, 0)
+    b_t = jnp.moveaxis(b, -1, 0)
+    h0 = jnp.zeros(a_t.shape[1:], a.dtype)
+    _, hs = lax.scan(step, h0, (a_t, b_t))
+    return jnp.moveaxis(hs, 0, -1)
+
+
+def linear_scan_assoc_ref(a, b):
+    """Parallel formulation of ``linear_scan_ref`` via the associative lift
+    (A, B)∘(A', B') = (A·A', B·A' + B') using ``lax.associative_scan`` —
+    validates that the lift is exact."""
+
+    def combine(p, q):
+        ap, bp = p
+        aq, bq = q
+        return ap * aq, bp * aq + bq
+
+    _, bb = lax.associative_scan(combine, (a, b), axis=-1)
+    return bb
+
+
+# ---------------------------------------------------------------------------
+# Layer-level references (used by python/tests/test_model.py)
+# ---------------------------------------------------------------------------
+
+def softmax_ref(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def attention_ref(q, k, v):
+    """Single-head scaled dot-product attention, (B, L, D) inputs."""
+    d = q.shape[-1]
+    scores = jnp.einsum("bld,bmd->blm", q, k) / jnp.sqrt(d)
+    return jnp.einsum("blm,bmd->bld", softmax_ref(scores), v)

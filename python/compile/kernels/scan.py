@@ -1,0 +1,144 @@
+"""L1 Pallas kernel: parallel linear-recurrence scan (paper §IV, Figs. 9/10).
+
+The kernel computes the Mamba recurrence ``h[t] = a[t]·h[t−1] + b[t]``
+(h[−1] = 0) along the last axis with a **Hillis–Steele scan over the
+associative lift** ``(A, B)∘(A', B') = (A·A', B·A' + B')`` — log₂L steps of
+stride-doubling shifts, exactly the dataflow the HS-scan-mode PCU wires into
+its cross-lane fabric (Fig. 10 top; simulated cycle-accurately in
+``rust/src/pcusim/programs.rs::hs_scan_program``).
+
+Grid layout: one Pallas program per block of channels; the full length-L
+sequence of a channel lives in the block (VMEM analogue). A tiled variant
+(`linear_scan_tiled`) splits long sequences into R-element tiles and scans
+tile aggregates recursively — the GPU-Gems tiled scan the paper adopts for
+mapping long sequences across PCUs (§IV-A).
+
+`interpret=True` is mandatory on CPU PJRT (real TPU lowering is Mosaic).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Channels per Pallas grid step.
+DEFAULT_BLOCK_C = 8
+
+
+def _hs_scan_kernel(a_ref, b_ref, ha_ref, hb_ref, *, length):
+    """Hillis–Steele scan of the (A, B) lift over the last axis."""
+    av = a_ref[...]
+    bv = b_ref[...]
+    steps = int(length).bit_length() - 1
+    for s in range(steps):  # static → unrolls into log₂L shift-MAC stages
+        d = 1 << s
+        # Shifted-in prefix identity: (A, B) = (1, 0).
+        a_prev = jnp.pad(av, ((0, 0), (d, 0)), constant_values=1.0)[:, :length]
+        b_prev = jnp.pad(bv, ((0, 0), (d, 0)), constant_values=0.0)[:, :length]
+        # combine(prev, cur): A ← A·A_prev, B ← B·... cur∘prev with cur
+        # applied after prev: (A_c·A_p, B_p·A_c + B_c).
+        av, bv = av * a_prev, b_prev * av + bv
+    ha_ref[...] = av
+    hb_ref[...] = bv
+
+
+@functools.partial(jax.jit, static_argnames=("block_c",))
+def linear_scan(a, b, *, block_c=DEFAULT_BLOCK_C):
+    """Inclusive scan of ``h[t] = a[t]·h[t−1] + b[t]`` along the last axis.
+
+    Shapes: ``a``, ``b`` are float32 ``(C, L)`` with power-of-two L;
+    returns ``h`` of the same shape (== the lift's B component, since
+    h[−1] = 0).
+    """
+    c, l = a.shape
+    assert b.shape == (c, l)
+    assert l & (l - 1) == 0, f"L={l} must be a power of two"
+    bc = min(block_c, c)
+    pad = (-c) % bc
+    if pad:
+        a = jnp.concatenate([a, jnp.ones((pad, l), jnp.float32)], axis=0)
+        b = jnp.concatenate([b, jnp.zeros((pad, l), jnp.float32)], axis=0)
+    grid = ((c + pad) // bc,)
+    spec = pl.BlockSpec((bc, l), lambda i: (i, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((c + pad, l), jnp.float32),
+        jax.ShapeDtypeStruct((c + pad, l), jnp.float32),
+    ]
+    _, hb = pl.pallas_call(
+        functools.partial(_hs_scan_kernel, length=l),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=out_shape,
+        interpret=True,
+    )(a, b)
+    return hb[:c]
+
+
+def linear_scan_tiled(a, b, *, r=1024, block_c=DEFAULT_BLOCK_C):
+    """Tiled scan for long sequences (GPU-Gems §39.2.4, paper §IV-A):
+
+    1. scan each R-element tile independently (one PCU per tile),
+    2. scan the per-tile aggregates ``(A_tile, B_tile)``,
+    3. apply each tile's incoming carry ``h_in``: ``h ← A_prefix·h_in + h``.
+    """
+    c, l = a.shape
+    if l <= r:
+        return linear_scan(a, b, block_c=block_c)
+    assert l % r == 0
+    t = l // r
+    at = a.reshape(c * t, r)
+    bt = b.reshape(c * t, r)
+    # Step 1: intra-tile scans of both lift components.
+    ha, hb = _linear_scan_full(at, bt, block_c=block_c)
+    ha = ha.reshape(c, t, r)
+    hb = hb.reshape(c, t, r)
+    # Step 2: aggregates are the last element of each tile's lift.
+    agg_a = ha[:, :, -1]
+    agg_b = hb[:, :, -1]
+    carry = linear_scan_tiled(agg_a, agg_b, r=r, block_c=block_c)  # (C, T)
+    # Exclusive carries: tile j receives the scan up to tile j−1.
+    h_in = jnp.pad(carry, ((0, 0), (1, 0)))[:, :t]
+    # Step 3: h = A_prefix·h_in + B_prefix within each tile.
+    out = ha * h_in[:, :, None] + hb
+    return out.reshape(c, l)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c",))
+def _linear_scan_full(a, b, *, block_c=DEFAULT_BLOCK_C):
+    """Like `linear_scan` but returns both lift components (A, B)."""
+    c, l = a.shape
+    bc = min(block_c, c)
+    pad = (-c) % bc
+    if pad:
+        a = jnp.concatenate([a, jnp.ones((pad, l), jnp.float32)], axis=0)
+        b = jnp.concatenate([b, jnp.zeros((pad, l), jnp.float32)], axis=0)
+    grid = ((c + pad) // bc,)
+    spec = pl.BlockSpec((bc, l), lambda i: (i, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((c + pad, l), jnp.float32),
+        jax.ShapeDtypeStruct((c + pad, l), jnp.float32),
+    ]
+    ha, hb = pl.pallas_call(
+        functools.partial(_hs_scan_kernel, length=l),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=out_shape,
+        interpret=True,
+    )(a, b)
+    return ha[:c], hb[:c]
+
+
+def cumsum_exclusive(x, *, block_c=DEFAULT_BLOCK_C):
+    """Exclusive prefix sum along the last axis via the scan kernel
+    (a ≡ 1 reduces the recurrence to a plain prefix sum; shift right for
+    exclusivity — the paper's [2,4,6,8] → [0,2,6,12] example)."""
+    inc = linear_scan(jnp.ones_like(x), x, block_c=block_c)
+    return jnp.pad(inc, ((0, 0), (1, 0)))[:, : x.shape[-1]]
+
+
+def _np_pow2_check(n):
+    return n & (n - 1) == 0 and n > 0

@@ -1,0 +1,167 @@
+"""L2: JAX decoder layers (paper Fig. 3) calling the L1 Pallas kernels.
+
+Three decoder layers sharing the transformer template — LN → mixer →
+out-proj → residual → LN → MLP → residual:
+
+* ``attention_layer``  — Fig. 3A: quadratic softmax(QKᵀ)·V mixer,
+* ``hyena_layer``      — Fig. 3B: FFT-convolution mixer (two forward FFTs +
+  pointwise product + inverse FFT) via the Bailey Pallas kernel,
+* ``mamba_layer``      — Fig. 3C: selective linear-recurrence scan mixer via
+  the HS-scan Pallas kernel.
+
+Everything is build-time Python: ``aot.py`` lowers these (with parameters
+baked in) to HLO text that the Rust runtime loads and executes — Python is
+never on the request path.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import bailey_fft, scan
+from .kernels.ref import attention_ref, softmax_ref  # noqa: F401 (re-export for tests)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Shapes of one decoder layer (paper: D = 32)."""
+
+    seq_len: int = 2048
+    d_model: int = 32
+    mlp_mult: int = 4
+    fft_tile: int = 32
+
+    @property
+    def d_hidden(self):
+        return self.mlp_mult * self.d_model
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Deterministic parameter pytree shared by all three layers."""
+    rng = np.random.default_rng(seed)
+    d, h, l = cfg.d_model, cfg.d_hidden, cfg.seq_len
+
+    def mat(*shape):
+        scale = 1.0 / np.sqrt(shape[0])
+        return jnp.asarray(rng.uniform(-scale, scale, shape), jnp.float32)
+
+    return {
+        "ln1_g": jnp.ones((d,), jnp.float32),
+        "ln1_b": jnp.zeros((d,), jnp.float32),
+        "ln2_g": jnp.ones((d,), jnp.float32),
+        "ln2_b": jnp.zeros((d,), jnp.float32),
+        "wq": mat(d, d),
+        "wk": mat(d, d),
+        "wv": mat(d, d),
+        "wo": mat(d, d),
+        "mlp_w1": mat(d, h),
+        "mlp_b1": jnp.zeros((h,), jnp.float32),
+        "mlp_w2": mat(h, d),
+        "mlp_b2": jnp.zeros((d,), jnp.float32),
+        # Hyena long filters (one per conv), per-channel, length L, decayed
+        # so the convolution is well-conditioned.
+        "filt1": jnp.asarray(
+            rng.standard_normal((d, l)) * np.exp(-np.arange(l) / (l / 8.0)) / 8.0, jnp.float32
+        ),
+        "filt2": jnp.asarray(
+            rng.standard_normal((d, l)) * np.exp(-np.arange(l) / (l / 8.0)) / 8.0, jnp.float32
+        ),
+        # Mamba selective-decay parameters.
+        "w_dt": mat(d, d),
+        "b_dt": jnp.full((d,), -1.0, jnp.float32),
+        "w_in": mat(d, d),
+        "conv_k": jnp.asarray(rng.uniform(-0.5, 0.5, (d, 4)), jnp.float32),
+    }
+
+
+def _layer_norm(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def _mlp_block(x, res, p):
+    """Residual → LN → GELU MLP → residual (common decoder tail)."""
+    y = x + res
+    z = _layer_norm(y, p["ln2_g"], p["ln2_b"])
+    z = jax.nn.gelu(z @ p["mlp_w1"] + p["mlp_b1"])
+    z = z @ p["mlp_w2"] + p["mlp_b2"]
+    return y + z
+
+
+def attention_layer(p, x):
+    """Fig. 3A — (B, L, D) → (B, L, D)."""
+    u = _layer_norm(x, p["ln1_g"], p["ln1_b"])
+    q, k, v = u @ p["wq"], u @ p["wk"], u @ p["wv"]
+    d = q.shape[-1]
+    scores = jnp.einsum("bld,bmd->blm", q, k) / jnp.sqrt(d)
+    # Causal mask (decoder layer).
+    l = scores.shape[-1]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    scores = jnp.where(mask, scores, -1e30)
+    att = jax.nn.softmax(scores, axis=-1)
+    mix = jnp.einsum("blm,bmd->bld", att, v) @ p["wo"]
+    return _mlp_block(mix, x, p)
+
+
+def hyena_layer(p, x, *, use_pallas=True):
+    """Fig. 3B — the two big GEMMs replaced by causal FFT convolutions
+    (two forward FFTs + pointwise product + inverse FFT each)."""
+    cfg_r = 32
+    u = _layer_norm(x, p["ln1_g"], p["ln1_b"])
+    q, k, v = u @ p["wq"], u @ p["wk"], u @ p["wv"]
+    # Channels-last → channels-major (C, L) layout for the conv kernel.
+    def conv(sig, filt):
+        b, l, d = sig.shape
+        s = jnp.moveaxis(sig, -1, 1).reshape(b * d, l)
+        f = jnp.broadcast_to(filt, (b, d, l)).reshape(b * d, l)
+        if use_pallas:
+            y = bailey_fft.causal_fftconv(s, f, r=cfg_r)
+        else:
+            from .kernels.ref import causal_fftconv_ref
+
+            y = causal_fftconv_ref(s, f)
+        return jnp.moveaxis(y.reshape(b, d, l), 1, -1)
+
+    y1 = conv(q, p["filt1"]) * k          # conv1 (replaces Q·Kᵀ) + gate
+    y2 = conv(y1, p["filt2"]) * v         # conv2 (replaces A·V) + gate
+    mix = y2 @ p["wo"]
+    return _mlp_block(mix, x, p)
+
+
+def mamba_layer(p, x, *, use_pallas=True):
+    """Fig. 3C — selective scan mixer: h[t] = a[t]·h[t−1] + b[t] per
+    channel, with input-dependent decay a (the "selective" part)."""
+    u = _layer_norm(x, p["ln1_g"], p["ln1_b"])
+    # Short depthwise causal conv (width 4) on the input branch.
+    b, l, d = u.shape
+    xc = jnp.moveaxis(u, -1, 1)  # (B, D, L)
+    k = p["conv_k"]  # (D, 4)
+    xp = jnp.pad(xc, ((0, 0), (0, 0), (3, 0)))
+    conv = sum(xp[:, :, 3 - i : 3 - i + l] * k[None, :, i : i + 1] for i in range(4))
+    xs = jax.nn.silu(jnp.moveaxis(conv, 1, -1))
+    # Selective decay a ∈ (0, 1) and drive b.
+    a = jax.nn.sigmoid(xs @ p["w_dt"] + p["b_dt"])
+    bdrive = xs @ p["w_in"]
+    # Scan per channel: (B, L, D) → (B·D, L).
+    a2 = jnp.moveaxis(a, -1, 1).reshape(b * d, l)
+    b2 = jnp.moveaxis(bdrive, -1, 1).reshape(b * d, l)
+    if use_pallas:
+        h = scan.linear_scan(a2, b2)
+    else:
+        from .kernels.ref import linear_scan_ref
+
+        h = linear_scan_ref(a2, b2)
+    h = jnp.moveaxis(h.reshape(b, d, l), 1, -1)
+    # Gate with the (SiLU'd) input branch and project out.
+    mix = (h * jax.nn.silu(u)) @ p["wo"]
+    return _mlp_block(mix, x, p)
+
+
+LAYERS = {
+    "attention": attention_layer,
+    "hyena": hyena_layer,
+    "mamba": mamba_layer,
+}

@@ -1,0 +1,204 @@
+"""L1 correctness: Pallas kernels vs pure-jnp references.
+
+Hypothesis sweeps shapes and value regimes; every property asserts
+``assert_allclose`` against the oracles in ``compile.kernels.ref`` — the
+core correctness signal for the kernels the AOT artifacts embed.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import bailey_fft as bf
+from compile.kernels import ref, scan
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# FFT tile kernel
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    r=st.sampled_from([8, 16, 32, 64]),
+    m=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fft_tiles_match_reference(r, m, seed):
+    rng = np.random.default_rng(seed)
+    xr, xi = _rand(rng, m, r), _rand(rng, m, r)
+    # block_m must divide M (fft_tiles contract; bailey_fft pads for us).
+    yr, yi = bf.fft_tiles(jnp.array(xr), jnp.array(xi), r=r, block_m=m)
+    rr, ri = ref.fft_ref(xr, xi)
+    assert_allclose(yr, rr, atol=1e-4, rtol=1e-4)
+    assert_allclose(yi, ri, atol=1e-4, rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    logl=st.integers(5, 12),
+    seed=st.integers(0, 2**31 - 1),
+    r=st.sampled_from([16, 32]),
+)
+def test_bailey_fft_matches_reference(logl, seed, r):
+    l = 1 << logl
+    rng = np.random.default_rng(seed)
+    xr, xi = _rand(rng, 2, l), _rand(rng, 2, l)
+    yr, yi = bf.bailey_fft(jnp.array(xr), jnp.array(xi), r=r)
+    rr, ri = ref.fft_ref(xr, xi)
+    tol = 1e-3 * np.sqrt(l)  # fp32 butterfly accumulation
+    assert_allclose(yr, rr, atol=tol, rtol=1e-3)
+    assert_allclose(yi, ri, atol=tol, rtol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(logl=st.integers(5, 11), seed=st.integers(0, 2**31 - 1))
+def test_bailey_ifft_roundtrip(logl, seed):
+    l = 1 << logl
+    rng = np.random.default_rng(seed)
+    xr, xi = _rand(rng, 1, l), _rand(rng, 1, l)
+    yr, yi = bf.bailey_fft(jnp.array(xr), jnp.array(xi))
+    br, bi = bf.bailey_fft(yr, yi, inverse=True)
+    assert_allclose(br, xr, atol=1e-4, rtol=1e-4)
+    assert_allclose(bi, xi, atol=1e-4, rtol=1e-4)
+
+
+def test_bailey_matches_bailey_ref_structure():
+    """The tiled decomposition agrees with the explicit 4-step reference
+    (not just with jnp.fft) — validates the step structure itself."""
+    rng = np.random.default_rng(7)
+    xr, xi = _rand(rng, 1, 1024), _rand(rng, 1, 1024)
+    rr, ri = ref.bailey_fft_ref(jnp.array(xr), jnp.array(xi), r=32)
+    fr, fi = ref.fft_ref(xr, xi)
+    assert_allclose(rr, fr, atol=1e-2, rtol=1e-3)
+    assert_allclose(ri, fi, atol=1e-2, rtol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(
+    logl=st.integers(5, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_causal_fftconv_matches_reference(logl, seed):
+    l = 1 << logl
+    rng = np.random.default_rng(seed)
+    u, k = _rand(rng, 3, l), _rand(rng, 3, l)
+    y = bf.causal_fftconv(jnp.array(u), jnp.array(k))
+    yref = ref.causal_fftconv_ref(jnp.array(u), jnp.array(k))
+    assert_allclose(y, yref, atol=1e-3 * np.sqrt(l), rtol=1e-3)
+
+
+def test_causal_fftconv_is_causal():
+    """Output at position t must not depend on inputs after t."""
+    rng = np.random.default_rng(3)
+    u = _rand(rng, 1, 128)
+    k = _rand(rng, 1, 128)
+    y0 = np.asarray(bf.causal_fftconv(jnp.array(u), jnp.array(k)))
+    u2 = u.copy()
+    u2[0, 100:] += 5.0  # perturb the future
+    y1 = np.asarray(bf.causal_fftconv(jnp.array(u2), jnp.array(k)))
+    assert_allclose(y0[0, :100], y1[0, :100], atol=1e-4)
+    assert not np.allclose(y0[0, 100:], y1[0, 100:])
+
+
+def test_fft_linearity():
+    rng = np.random.default_rng(11)
+    xr, xi = _rand(rng, 1, 256), _rand(rng, 1, 256)
+    yr2, yi2 = bf.bailey_fft(jnp.array(2 * xr), jnp.array(2 * xi))
+    yr, yi = bf.bailey_fft(jnp.array(xr), jnp.array(xi))
+    assert_allclose(yr2, 2 * np.asarray(yr), atol=1e-3, rtol=1e-4)
+    assert_allclose(yi2, 2 * np.asarray(yi), atol=1e-3, rtol=1e-4)
+
+
+def test_fft_impulse_is_flat():
+    x = np.zeros((1, 64), np.float32)
+    x[0, 0] = 1.0
+    yr, yi = bf.bailey_fft(jnp.array(x), jnp.zeros_like(jnp.array(x)))
+    assert_allclose(yr, np.ones((1, 64), np.float32), atol=1e-5)
+    assert_allclose(yi, np.zeros((1, 64), np.float32), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Scan kernel
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    c=st.integers(1, 12),
+    logl=st.integers(2, 11),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_scan_matches_serial_reference(c, logl, seed):
+    l = 1 << logl
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(0.0, 1.0, (c, l)).astype(np.float32)
+    b = _rand(rng, c, l)
+    h = scan.linear_scan(jnp.array(a), jnp.array(b))
+    hr = ref.linear_scan_ref(jnp.array(a), jnp.array(b))
+    assert_allclose(h, hr, atol=1e-4 * l, rtol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_linear_scan_matches_associative_reference(seed):
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(0.5, 1.0, (4, 512)).astype(np.float32)
+    b = _rand(rng, 4, 512)
+    h = scan.linear_scan(jnp.array(a), jnp.array(b))
+    hr = ref.linear_scan_assoc_ref(jnp.array(a), jnp.array(b))
+    assert_allclose(h, hr, atol=1e-3, rtol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(
+    logl=st.integers(6, 12),
+    logr=st.integers(4, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_tiled_scan_matches_flat_scan(logl, logr, seed):
+    l, r = 1 << logl, 1 << logr
+    if r >= l:
+        return
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(0.5, 1.0, (3, l)).astype(np.float32)
+    b = _rand(rng, 3, l)
+    ht = scan.linear_scan_tiled(jnp.array(a), jnp.array(b), r=r)
+    hf = ref.linear_scan_ref(jnp.array(a), jnp.array(b))
+    assert_allclose(ht, hf, atol=1e-3, rtol=1e-3)
+
+
+def test_cumsum_paper_example():
+    """Paper §IV-A: exclusive scan of [2,4,6,8] is [0,2,6,12]."""
+    x = jnp.array([[2.0, 4.0, 6.0, 8.0]], jnp.float32)
+    y = scan.cumsum_exclusive(x)
+    assert_allclose(np.asarray(y), [[0.0, 2.0, 6.0, 12.0]], atol=1e-6)
+
+
+def test_scan_zero_decay_passthrough():
+    """a ≡ 0 → h[t] = b[t]."""
+    rng = np.random.default_rng(5)
+    b = _rand(rng, 2, 64)
+    h = scan.linear_scan(jnp.zeros((2, 64), jnp.float32), jnp.array(b))
+    assert_allclose(np.asarray(h), b, atol=1e-6)
+
+
+def test_scan_unit_decay_is_cumsum():
+    """a ≡ 1 → inclusive prefix sum."""
+    rng = np.random.default_rng(6)
+    b = _rand(rng, 2, 256)
+    h = scan.linear_scan(jnp.ones((2, 256), jnp.float32), jnp.array(b))
+    assert_allclose(np.asarray(h), np.cumsum(b, axis=-1), atol=1e-3, rtol=1e-4)
+
+
+@pytest.mark.parametrize("l", [48, 100])
+def test_scan_rejects_non_pow2(l):
+    a = jnp.ones((1, l), jnp.float32)
+    with pytest.raises(AssertionError):
+        scan.linear_scan(a, a)

@@ -1,0 +1,114 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!   * chip scale (PCU count) — where the extensions' gains saturate;
+//!   * memory technology — when the dataflow pipeline goes memory-bound;
+//!   * pipeline depth — the serialized penalty (1/stages) vs spatial
+//!     factor (levels/stages) trade the paper's §III-B argument rests on;
+//!   * Bailey tile size R — the §III-A FLOP-vs-hardware trade-off;
+//!   * Mamba state shape — paper scalar-state vs full selective SSM;
+//!   * energy per inference — Table IV's power story carried to its
+//!     end-to-end conclusion.
+
+use ssm_rdu::arch::{MemTech, RduConfig};
+use ssm_rdu::bench::Bencher;
+use ssm_rdu::dfmodel::{self, sweep};
+use ssm_rdu::fft::{gemm_fft_flops, vector_fft_flops, BaileyVariant};
+use ssm_rdu::synth::energy;
+use ssm_rdu::util::fmt_time;
+use ssm_rdu::util::table::Table;
+use ssm_rdu::workloads::{hyena_decoder, mamba_decoder, DecoderConfig, ScanVariant};
+
+fn sweep_table(title: &str, pts: &[sweep::SweepPoint]) -> Table {
+    let mut t = Table::new(title, &["design point", "hyena", "mamba", "fft-mode gain", "scan-mode gain"]);
+    for p in pts {
+        t.row(&[
+            p.label.clone(),
+            fmt_time(p.hyena_seconds),
+            fmt_time(p.mamba_seconds),
+            format!("{:.2}x", p.hyena_gain),
+            format!("{:.2}x", p.mamba_gain),
+        ]);
+    }
+    t
+}
+
+fn main() {
+    let mut b = Bencher::from_env("ablations");
+    let dc = DecoderConfig::paper(1 << 20);
+
+    b.report("ablation: chip scale (PCU count)", || {
+        sweep_table(
+            "chip scale @ L=1M",
+            &sweep::sweep_pcu_count(&dc, &[65, 130, 260, 520, 1040]),
+        )
+        .print()
+    });
+
+    b.report("ablation: memory technology", || {
+        sweep_table(
+            "off-chip bandwidth @ L=1M",
+            &sweep::sweep_bandwidth(&dc, &[MemTech::Ddr5, MemTech::Hbm2e, MemTech::Hbm3e]),
+        )
+        .print()
+    });
+
+    b.report("ablation: pipeline depth (stages)", || {
+        sweep_table("pipeline depth @ L=1M", &sweep::sweep_stages(&dc, &[6, 8, 12, 16, 24])).print()
+    });
+
+    b.report("ablation: Bailey tile size R (transform FLOPs)", || {
+        let mut t = Table::new(
+            "GEMM-FFT FLOP overhead vs R (paper §III-A: R/log2R)",
+            &["R", "overhead"],
+        );
+        let l = 1 << 21;
+        for r in [8usize, 16, 32, 64, 128] {
+            t.row(&[r.to_string(), format!("{:.2}x", gemm_fft_flops(l, r) / vector_fft_flops(l))]);
+        }
+        t.print()
+    });
+
+    b.report("ablation: Mamba state shape", || {
+        let mut t = Table::new(
+            "Mamba shape ablation @ L=1M",
+            &["shape", "baseline RDU", "scan-mode RDU", "gain"],
+        );
+        for (name, cfg) in [
+            ("paper scalar-state (C=32)", DecoderConfig::paper(1 << 20)),
+            ("selective SSM (N=16, E=2)", DecoderConfig::mamba_full(1 << 20)),
+        ] {
+            let g = mamba_decoder(&cfg, ScanVariant::Parallel);
+            let e0 = dfmodel::estimate(&g, &RduConfig::baseline()).unwrap().total_seconds;
+            let e1 = dfmodel::estimate(&g, &RduConfig::hs_scan_mode()).unwrap().total_seconds;
+            t.row(&[name.to_string(), fmt_time(e0), fmt_time(e1), format!("{:.2}x", e0 / e1)]);
+        }
+        t.print()
+    });
+
+    b.report("ablation: energy per inference", || {
+        let mut t = Table::new(
+            "energy per decoder pass @ L=1M (chip power x latency + DRAM)",
+            &["workload", "baseline RDU", "extended RDU", "energy gain", "power overhead"],
+        );
+        let hy = hyena_decoder(&dc, BaileyVariant::Vector);
+        let ma = mamba_decoder(&dc, ScanVariant::Parallel);
+        for (name, g, ext, mode) in [
+            ("hyena", &hy, RduConfig::fft_mode(), ssm_rdu::arch::PcuMode::Fft),
+            ("mamba", &ma, RduConfig::hs_scan_mode(), ssm_rdu::arch::PcuMode::HsScan),
+        ] {
+            let base = RduConfig::baseline();
+            let io = g.external_input_bytes() + g.external_output_bytes() + g.total_weight_bytes();
+            let e0 = energy::inference_energy(&base, &dfmodel::estimate(g, &base).unwrap(), io);
+            let e1 = energy::inference_energy(&ext, &dfmodel::estimate(g, &ext).unwrap(), io);
+            t.row(&[
+                name.to_string(),
+                format!("{:.2} mJ", e0 * 1e3),
+                format!("{:.2} mJ", e1 * 1e3),
+                format!("{:.2}x", e0 / e1),
+                format!("{:.3}x", energy::extension_power_overhead(mode)),
+            ]);
+        }
+        t.print()
+    });
+
+    b.finish();
+}

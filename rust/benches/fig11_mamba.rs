@@ -1,0 +1,23 @@
+//! Bench E4 — Figure 11: the five Mamba-side designs (attention, C-scan,
+//! parallel-scan/baseline, parallel-scan/HS-mode, parallel-scan/B-mode)
+//! across L ∈ {256K, 512K, 1M}, with paper-vs-measured speedups.
+
+use ssm_rdu::arch::RduConfig;
+use ssm_rdu::bench::Bencher;
+use ssm_rdu::dfmodel;
+use ssm_rdu::figures::mamba::fig11;
+use ssm_rdu::workloads::{mamba_decoder, DecoderConfig, ScanVariant};
+
+fn main() {
+    let mut b = Bencher::from_env("fig11_mamba");
+    let f = b.report("Fig. 11 dataset (DFModel, paper sweep)", fig11);
+    f.table().print();
+    f.speedup_report().print();
+
+    let dc = DecoderConfig::paper(1 << 20);
+    let cfg = RduConfig::hs_scan_mode();
+    b.bench("build mamba graph (L=1M)", || mamba_decoder(&dc, ScanVariant::Parallel));
+    let g = mamba_decoder(&dc, ScanVariant::Parallel);
+    b.bench("dfmodel::estimate mamba (L=1M)", || dfmodel::estimate(&g, &cfg).unwrap());
+    b.finish();
+}

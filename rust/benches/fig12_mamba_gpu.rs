@@ -1,0 +1,36 @@
+//! Bench E5 — Table III + Figure 12: parallel-scan Mamba on the A100 GPU
+//! vs the scan-mode RDU (paper: 2.12×).
+
+use ssm_rdu::arch::{GpuSpec, RduSpec};
+use ssm_rdu::bench::Bencher;
+use ssm_rdu::figures::mamba::fig12;
+use ssm_rdu::util::table::Table;
+
+fn table3() -> Table {
+    let g = GpuSpec::a100();
+    let r = RduSpec::table1();
+    let mut t = Table::new(
+        "TABLE III — architectural specifications of two accelerators",
+        &["", "GPU", "Scan RDU"],
+    );
+    t.row(&[
+        "GEMM FP16 TFLOPS".into(),
+        format!("{:.2}", g.tensor_flops / 1e12),
+        format!("{:.2}", r.peak_flops() / 1e12),
+    ]);
+    t.row(&[
+        "Scan FP16 TFLOPS".into(),
+        format!("{:.2}", g.cuda_flops / 1e12),
+        format!("{:.2}", r.peak_flops() / 1e12),
+    ]);
+    t
+}
+
+fn main() {
+    let mut b = Bencher::from_env("fig12_mamba_gpu");
+    b.report("TABLE III (platform specs)", || table3().print());
+    let f = b.report("Fig. 12 dataset (GPU vs scan-mode RDU, L=1M)", fig12);
+    f.table().print();
+    f.speedup_report().print();
+    b.finish();
+}

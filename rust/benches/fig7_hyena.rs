@@ -1,0 +1,27 @@
+//! Bench E2 — Figure 7: FLOP count and latency of the four Hyena-side
+//! designs (attention, Vector-FFT/baseline, GEMM-FFT/baseline,
+//! Vector-FFT/FFT-mode) across L ∈ {256K, 512K, 1M}, with paper-vs-measured
+//! speedups. Also times the DFModel estimation pipeline itself.
+
+use ssm_rdu::arch::RduConfig;
+use ssm_rdu::bench::Bencher;
+use ssm_rdu::dfmodel;
+use ssm_rdu::fft::BaileyVariant;
+use ssm_rdu::figures::hyena::fig7;
+use ssm_rdu::workloads::{hyena_decoder, DecoderConfig};
+
+fn main() {
+    let mut b = Bencher::from_env("fig7_hyena");
+
+    let f = b.report("Fig. 7 dataset (DFModel, paper sweep)", fig7);
+    f.table().print();
+    f.speedup_report().print();
+
+    // Time the modeling pipeline (the thing a DFModel user iterates on).
+    let dc = DecoderConfig::paper(1 << 20);
+    let cfg = RduConfig::fft_mode();
+    b.bench("build hyena graph (L=1M)", || hyena_decoder(&dc, BaileyVariant::Vector));
+    let g = hyena_decoder(&dc, BaileyVariant::Vector);
+    b.bench("dfmodel::estimate hyena (L=1M)", || dfmodel::estimate(&g, &cfg).unwrap());
+    b.finish();
+}

@@ -1,0 +1,23 @@
+//! Bench E3 — Table II + Figure 8: the Hyena decoder across GPU, VGA and
+//! FFT-mode RDU, with paper-vs-measured speedups.
+
+use ssm_rdu::arch::GpuSpec;
+use ssm_rdu::bench::Bencher;
+use ssm_rdu::fft::BaileyVariant;
+use ssm_rdu::figures::platforms::{fig8, table2};
+use ssm_rdu::gpu;
+use ssm_rdu::workloads::{hyena_decoder, DecoderConfig};
+
+fn main() {
+    let mut b = Bencher::from_env("fig8_platforms");
+    b.report("TABLE II (platform specs)", || table2().print());
+    let f = b.report("Fig. 8 dataset (three platforms, paper sweep)", fig8);
+    f.table().print();
+    f.speedup_report().print();
+
+    let dc = DecoderConfig::paper(1 << 20);
+    let g = hyena_decoder(&dc, BaileyVariant::Vector);
+    let spec = GpuSpec::a100();
+    b.bench("gpu::estimate hyena (L=1M)", || gpu::estimate(&g, &spec));
+    b.finish();
+}

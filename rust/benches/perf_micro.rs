@@ -1,0 +1,69 @@
+//! Perf microbenchmarks: the hot paths of each Rust layer — algorithm
+//! substrates, PCU simulator, DFModel pipeline, coordinator batching —
+//! tracked across the optimization pass (EXPERIMENTS.md §Perf).
+
+use ssm_rdu::arch::{PcuGeometry, RduConfig};
+use ssm_rdu::bench::{black_box, Bencher};
+use ssm_rdu::coordinator::{run_batch, Batch, Executor, Metrics, MockExecutor, Request};
+use ssm_rdu::dfmodel;
+use ssm_rdu::fft::{bailey_fft, fft, to_complex, BaileyVariant};
+use ssm_rdu::pcusim::{self, Pcu};
+use ssm_rdu::runtime::ModelKind;
+use ssm_rdu::scan::{blelloch_exclusive, c_scan_exclusive, hillis_steele_inclusive, tiled_exclusive};
+use ssm_rdu::util::{C64, XorShift};
+use ssm_rdu::workloads::{hyena_decoder, DecoderConfig};
+use std::sync::mpsc::channel;
+
+fn main() {
+    let mut b = Bencher::from_env("perf_micro");
+    let mut rng = XorShift::new(99);
+
+    // --- FFT substrate ----------------------------------------------------
+    let x16k = to_complex(&rng.vec(1 << 14, -1.0, 1.0));
+    b.bench("fft substrate: cooley-tukey 16K", || fft(&x16k));
+    b.bench("fft substrate: bailey-vector 16K (R=32)", || {
+        bailey_fft(&x16k, 32, BaileyVariant::Vector)
+    });
+    b.bench("fft substrate: bailey-gemm 16K (R=32)", || {
+        bailey_fft(&x16k, 32, BaileyVariant::Gemm)
+    });
+
+    // --- Scan substrate ---------------------------------------------------
+    let v64k = rng.vec(1 << 16, -1.0, 1.0);
+    b.bench("scan substrate: c-scan 64K", || c_scan_exclusive(&v64k));
+    b.bench("scan substrate: hillis-steele 64K", || hillis_steele_inclusive(&v64k));
+    b.bench("scan substrate: blelloch 64K", || blelloch_exclusive(&v64k));
+    b.bench("scan substrate: tiled (R=32) 64K", || tiled_exclusive(&v64k, 32));
+
+    // --- PCU simulator ----------------------------------------------------
+    let geom = PcuGeometry::table1();
+    let prog = pcusim::fft_program(32);
+    let batch: Vec<Vec<C64>> = (0..256)
+        .map(|_| (0..32).map(|_| C64::real(rng.uniform(-1.0, 1.0))).collect())
+        .collect();
+    let pcu = Pcu::fft_mode(geom);
+    b.bench("pcusim: fft32 spatial x256 vectors", || pcu.run(&prog, &batch));
+    let base = Pcu::baseline(geom);
+    b.bench("pcusim: fft32 serialized x256 vectors", || base.run(&prog, &batch));
+
+    // --- DFModel pipeline ---------------------------------------------------
+    let dc = DecoderConfig::paper(1 << 20);
+    let g = hyena_decoder(&dc, BaileyVariant::Vector);
+    let cfg = RduConfig::fft_mode();
+    b.bench("dfmodel: map+estimate hyena L=1M", || dfmodel::estimate(&g, &cfg).unwrap());
+
+    // --- Coordinator hot path ----------------------------------------------
+    let metrics = Metrics::new();
+    let mut exec: Box<dyn Executor> = Box::new(MockExecutor::new(4, 1024));
+    b.bench("coordinator: pack+dispatch 4x1K batch (mock)", || {
+        let (tx, rx) = channel();
+        let requests = (0..4)
+            .map(|i| (Request::new(i, ModelKind::Mamba, vec![0.5; 1024]), tx.clone()))
+            .collect();
+        run_batch(exec.as_mut(), Batch { model: ModelKind::Mamba, requests }, &metrics);
+        drop(tx);
+        black_box(rx.try_iter().count())
+    });
+
+    b.finish();
+}

@@ -1,0 +1,30 @@
+//! Bench E1 — Table I: the RDU architectural specification, plus the
+//! derived peak-throughput arithmetic that Tables II/III rest on.
+
+use ssm_rdu::arch::RduSpec;
+use ssm_rdu::bench::Bencher;
+use ssm_rdu::figures;
+
+fn main() {
+    let mut b = Bencher::from_env("table1_spec");
+    b.report("TABLE I (paper) vs model", || figures::table1().print());
+    b.report("derived peak arithmetic", || {
+        let spec = RduSpec::table1();
+        println!(
+            "  {} PCUs x {} FUs x 2 flop x {:.1} GHz = {:.2} TFLOPS (paper: 638.98, \"640\")",
+            spec.n_pcu,
+            spec.pcu.fu_count(),
+            spec.clock_hz / 1e9,
+            spec.peak_flops() / 1e12
+        );
+        println!(
+            "  on-chip SRAM: {} PMUs x {:.1} MB = {:.0} MB",
+            spec.n_pmu,
+            spec.pmu_bytes as f64 / (1 << 20) as f64,
+            spec.sram_bytes() as f64 / (1 << 20) as f64
+        );
+        assert!((spec.peak_flops() / 1e12 - 638.98).abs() < 0.01);
+    });
+    b.bench("RduSpec::table1 construction", RduSpec::table1);
+    b.finish();
+}

@@ -1,0 +1,44 @@
+//! Bench E6 — Table IV: area/power overheads of the enhanced PCUs from the
+//! 45 nm synthesis model, plus the route-count ablation across geometries.
+
+use ssm_rdu::arch::{PcuGeometry, PcuMode};
+use ssm_rdu::bench::Bencher;
+use ssm_rdu::figures::table4;
+use ssm_rdu::pcusim::topology;
+use ssm_rdu::synth;
+
+fn main() {
+    let mut b = Bencher::from_env("table4_overheads");
+    b.report("TABLE IV (model vs paper)", || table4().print());
+
+    b.report("route-count ablation (mux additions per geometry)", || {
+        println!("  geometry   fft  hs-scan  b-scan");
+        for geom in [PcuGeometry::synthesis(), PcuGeometry::new(16, 8), PcuGeometry::table1()] {
+            println!(
+                "  {:8} {:5} {:8} {:7}",
+                geom.to_string(),
+                topology::added_mux_count(PcuMode::Fft, geom),
+                topology::added_mux_count(PcuMode::HsScan, geom),
+                topology::added_mux_count(PcuMode::BScan, geom),
+            );
+        }
+    });
+
+    b.report("production-PCU (32x12) overhead projection", || {
+        let geom = PcuGeometry::table1();
+        for mode in [PcuMode::Fft, PcuMode::HsScan, PcuMode::BScan] {
+            let s = synth::synthesize(geom, Some(mode));
+            println!(
+                "  {:8} area {:.1} µm² ({:.3}x)  power {:.1} mW ({:.3}x)",
+                mode.label(),
+                s.area_um2,
+                s.area_ratio(),
+                s.power_mw,
+                s.power_ratio()
+            );
+        }
+    });
+
+    b.bench("synthesize all four variants", synth::table4_rows);
+    b.finish();
+}

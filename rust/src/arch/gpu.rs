@@ -1,0 +1,58 @@
+//! GPU architectural specification (paper Tables II and III).
+//!
+//! The paper's GPU baseline is an NVIDIA A100 whose FP16 throughput is split
+//! between tensor cores (GEMM-shaped kernels) and CUDA cores (everything
+//! else), with the CUDA-core path at ¼ the tensor-core throughput. For the
+//! cross-platform studies all platforms are given the same 8 TB/s HBM3e.
+
+use super::mem::MemTech;
+
+/// GPU specification used by the analytical model in [`crate::gpu`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub name: String,
+    /// Peak FP16 tensor-core FLOP/s (GEMM path).
+    pub tensor_flops: f64,
+    /// Peak FP16 CUDA-core FLOP/s (vector path: FFT butterflies, scans,
+    /// element-wise, softmax).
+    pub cuda_flops: f64,
+    /// Off-chip memory.
+    pub dram: MemTech,
+}
+
+impl GpuSpec {
+    /// Table II/III A100: 311.87 TFLOPS GEMM, 77.97 TFLOPS vector,
+    /// modeled with 8 TB/s HBM3e like the RDU for a fair comparison.
+    pub fn a100() -> Self {
+        Self {
+            name: "NVIDIA A100".to_string(),
+            tensor_flops: 311.87e12,
+            cuda_flops: 77.97e12,
+            dram: MemTech::Hbm3e,
+        }
+    }
+
+    /// Tensor-core : CUDA-core throughput ratio (paper: "the tensor cores
+    /// offer 4× higher compute throughput compared to the CUDA cores").
+    pub fn tensor_to_cuda_ratio(&self) -> f64 {
+        self.tensor_flops / self.cuda_flops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_matches_table2() {
+        let g = GpuSpec::a100();
+        assert!((g.tensor_flops / 1e12 - 311.87).abs() < 1e-9);
+        assert!((g.cuda_flops / 1e12 - 77.97).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tensor_cores_are_4x_cuda_cores() {
+        let r = GpuSpec::a100().tensor_to_cuda_ratio();
+        assert!((r - 4.0).abs() < 0.01, "ratio={r}");
+    }
+}

@@ -1,0 +1,62 @@
+//! Memory technology models (paper §II-C: DFModel supports DDR and HBM).
+
+use std::fmt;
+
+/// Off-chip memory technology with its sustained bandwidth.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MemTech {
+    /// HBM3e stack — the paper models all three platforms with 8 TB/s HBM3e.
+    Hbm3e,
+    /// HBM2e (A100's native memory, ~2 TB/s) — kept for ablations.
+    Hbm2e,
+    /// DDR5 channel group, ~0.4 TB/s — kept for ablations.
+    Ddr5,
+    /// Custom bandwidth in bytes/s.
+    Custom(f64),
+}
+
+impl MemTech {
+    /// Sustained bandwidth in bytes/second.
+    pub fn bandwidth(self) -> f64 {
+        match self {
+            MemTech::Hbm3e => 8e12,
+            MemTech::Hbm2e => 2e12,
+            MemTech::Ddr5 => 0.4e12,
+            MemTech::Custom(bw) => bw,
+        }
+    }
+
+    /// Time to move `bytes` at this technology's bandwidth.
+    pub fn transfer_time(self, bytes: f64) -> f64 {
+        bytes / self.bandwidth()
+    }
+}
+
+impl fmt::Display for MemTech {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MemTech::Hbm3e => write!(f, "HBM3e (8 TB/s)"),
+            MemTech::Hbm2e => write!(f, "HBM2e (2 TB/s)"),
+            MemTech::Ddr5 => write!(f, "DDR5 (0.4 TB/s)"),
+            MemTech::Custom(bw) => write!(f, "custom ({:.2} TB/s)", bw / 1e12),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_memory_is_8tbs() {
+        assert_eq!(MemTech::Hbm3e.bandwidth(), 8e12);
+    }
+
+    #[test]
+    fn transfer_time_scales() {
+        // 8 TB at 8 TB/s = 1 s.
+        assert!((MemTech::Hbm3e.transfer_time(8e12) - 1.0).abs() < 1e-12);
+        // Custom override.
+        assert_eq!(MemTech::Custom(1e12).transfer_time(2e12), 2.0);
+    }
+}

@@ -1,0 +1,19 @@
+//! Architecture descriptions: the RDU chip (paper Table I), its PCU geometry
+//! and execution modes, and the comparison platforms (A100 GPU, VGA ASIC —
+//! Tables II/III) plus memory technologies.
+//!
+//! This module holds *specifications only*; behaviour lives in
+//! [`crate::pcusim`] (cycle-level PCU simulation), [`crate::dfmodel`] (RDU
+//! performance model), [`crate::gpu`] and [`crate::vga`] (comparison models).
+
+pub mod gpu;
+pub mod mem;
+pub mod pcu;
+pub mod rdu;
+pub mod vga;
+
+pub use gpu::GpuSpec;
+pub use mem::MemTech;
+pub use pcu::{PcuGeometry, PcuMode};
+pub use rdu::{RduConfig, RduSpec};
+pub use vga::VgaSpec;

@@ -1,0 +1,173 @@
+//! Pattern Compute Unit (PCU) geometry and execution modes (paper §II-A, Fig. 2).
+//!
+//! A PCU is a pipelined SIMD array of `lanes × stages` functional units (FUs).
+//! Each FU has four input sources (two lane-dimension, one stage-dimension,
+//! one constant) and supports scalar add, scalar multiply and MAC. The paper's
+//! contribution is three *additional* cross-lane interconnect fabrics between
+//! pipeline stages — FFT butterflies, Hillis–Steele shifts and Blelloch tree
+//! links — enabling spatial mapping of FFT and scan dataflows.
+
+use std::fmt;
+
+/// Execution mode of a PCU. The first three are the baseline modes of the
+/// Plasticine/SambaNova-style RDU (paper Fig. 2); the last three are the
+/// paper's proposed extensions (Figs. 5 and 10).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PcuMode {
+    /// Data flows left→right, lane-parallel; no cross-lane traffic.
+    ElementWise,
+    /// Data flows left→right and top→down; MAC chains for GEMM.
+    Systolic,
+    /// Left→right with an inter-stage reduction-tree interconnect.
+    Reduction,
+    /// Paper §III-B: butterfly interconnects between pipeline stages so a
+    /// radix-2 FFT unrolls spatially across the pipeline.
+    Fft,
+    /// Paper §IV-B: Hillis–Steele shift interconnects (lane *i* also reads
+    /// lane *i − 2^s* at stage boundary *s*).
+    HsScan,
+    /// Paper §IV-B: Blelloch up-sweep/down-sweep tree interconnects.
+    BScan,
+}
+
+impl PcuMode {
+    /// The three baseline modes every RDU PCU supports.
+    pub const BASELINE: [PcuMode; 3] = [PcuMode::ElementWise, PcuMode::Systolic, PcuMode::Reduction];
+
+    /// The paper's proposed extension modes.
+    pub const EXTENSIONS: [PcuMode; 3] = [PcuMode::Fft, PcuMode::HsScan, PcuMode::BScan];
+
+    /// Is this one of the paper's proposed extension modes?
+    pub fn is_extension(self) -> bool {
+        matches!(self, PcuMode::Fft | PcuMode::HsScan | PcuMode::BScan)
+    }
+
+    /// Short label used in tables and reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            PcuMode::ElementWise => "element-wise",
+            PcuMode::Systolic => "systolic",
+            PcuMode::Reduction => "reduction",
+            PcuMode::Fft => "fft",
+            PcuMode::HsScan => "hs-scan",
+            PcuMode::BScan => "b-scan",
+        }
+    }
+}
+
+impl fmt::Display for PcuMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Physical shape of a PCU's FU array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PcuGeometry {
+    /// SIMD width (vertical dimension in Fig. 2).
+    pub lanes: usize,
+    /// Pipeline depth (horizontal dimension in Fig. 2).
+    pub stages: usize,
+}
+
+impl PcuGeometry {
+    /// Construct a geometry; lanes must be a power of two (the butterfly and
+    /// scan fabrics are defined on power-of-two lane counts).
+    pub fn new(lanes: usize, stages: usize) -> Self {
+        assert!(lanes.is_power_of_two(), "PCU lanes must be a power of two, got {lanes}");
+        assert!(stages > 0, "PCU needs at least one pipeline stage");
+        Self { lanes, stages }
+    }
+
+    /// The production-scale PCU of Table I: 32 lanes × 12 stages.
+    pub fn table1() -> Self {
+        Self::new(32, 12)
+    }
+
+    /// The synthesis-study PCU of §V / Table IV: 8 lanes × 6 stages.
+    pub fn synthesis() -> Self {
+        Self::new(8, 6)
+    }
+
+    /// Total functional units in the array.
+    pub fn fu_count(self) -> usize {
+        self.lanes * self.stages
+    }
+
+    /// Peak FLOP/s of one PCU at `clock_hz`: every FU retires one MAC
+    /// (2 flops) per cycle.
+    pub fn peak_flops(self, clock_hz: f64) -> f64 {
+        self.fu_count() as f64 * 2.0 * clock_hz
+    }
+
+    /// Number of radix-2 butterfly / scan levels for a full-width tile:
+    /// `log₂(lanes)`.
+    pub fn levels(self) -> usize {
+        self.lanes.trailing_zeros() as usize
+    }
+
+    /// Can a full radix-2 FFT over `lanes` points unroll spatially across the
+    /// pipeline? Requires `log₂(lanes) ≤ stages`.
+    pub fn fits_fft(self) -> bool {
+        self.levels() <= self.stages
+    }
+
+    /// Can a Blelloch scan over `lanes` points unroll spatially? Requires
+    /// `2·log₂(lanes) − 1 ≤ stages` (the root up-sweep and the first
+    /// down-sweep level share a stage boundary; see `pcusim::programs`).
+    pub fn fits_bscan(self) -> bool {
+        2 * self.levels() <= self.stages
+    }
+}
+
+impl fmt::Display for PcuGeometry {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}x{}", self.lanes, self.stages)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_geometry() {
+        let g = PcuGeometry::table1();
+        assert_eq!(g.fu_count(), 384);
+        assert_eq!(g.levels(), 5);
+        assert!(g.fits_fft());
+        assert!(g.fits_bscan());
+    }
+
+    #[test]
+    fn synthesis_geometry() {
+        let g = PcuGeometry::synthesis();
+        assert_eq!(g.fu_count(), 48);
+        assert_eq!(g.levels(), 3);
+        assert!(g.fits_fft());
+        assert!(g.fits_bscan()); // 2·3 = 6 ≤ 6
+    }
+
+    #[test]
+    fn peak_flops_one_pcu() {
+        // 384 FUs × 2 flop × 1.6 GHz = 1.2288 TFLOP/s per PCU.
+        let g = PcuGeometry::table1();
+        assert_eq!(g.peak_flops(1.6e9), 384.0 * 2.0 * 1.6e9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_pow2_lanes_panics() {
+        PcuGeometry::new(24, 6);
+    }
+
+    #[test]
+    fn mode_classification() {
+        for m in PcuMode::BASELINE {
+            assert!(!m.is_extension());
+        }
+        for m in PcuMode::EXTENSIONS {
+            assert!(m.is_extension());
+        }
+    }
+}

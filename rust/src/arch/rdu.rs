@@ -1,0 +1,201 @@
+//! RDU chip-level specification (paper Table I) and configuration.
+
+use super::mem::MemTech;
+use super::pcu::{PcuGeometry, PcuMode};
+use crate::util::table::Table;
+use std::collections::BTreeSet;
+use std::fmt;
+
+/// Chip-level architectural specification of the RDU (paper Table I).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RduSpec {
+    /// Number of Pattern Compute Units on the die.
+    pub n_pcu: usize,
+    /// Geometry of each PCU.
+    pub pcu: PcuGeometry,
+    /// Number of Pattern Memory Units on the die.
+    pub n_pmu: usize,
+    /// SRAM capacity of each PMU in bytes.
+    pub pmu_bytes: usize,
+    /// Clock frequency in Hz.
+    pub clock_hz: f64,
+    /// Off-chip memory technology.
+    pub dram: MemTech,
+}
+
+impl RduSpec {
+    /// The paper's Table I configuration:
+    /// 520 PCUs (32×12), 520 PMUs (1.5 MB), 1.6 GHz, 8 TB/s HBM3e.
+    pub fn table1() -> Self {
+        Self {
+            n_pcu: 520,
+            pcu: PcuGeometry::table1(),
+            n_pmu: 520,
+            pmu_bytes: (1.5 * (1 << 20) as f64) as usize,
+            clock_hz: 1.6e9,
+            dram: MemTech::Hbm3e,
+        }
+    }
+
+    /// Peak chip FLOP/s (FP16): `n_pcu × lanes × stages × 2 × clock`.
+    ///
+    /// For Table I: 520 × 384 × 2 × 1.6 GHz = 638.98 TFLOPS — the paper
+    /// rounds this to "640 TFLOPS" in Table I and uses the exact value in
+    /// Tables II/III.
+    pub fn peak_flops(&self) -> f64 {
+        self.n_pcu as f64 * self.pcu.peak_flops(self.clock_hz)
+    }
+
+    /// Total on-chip SRAM in bytes (520 × 1.5 MB = 780 MB for Table I).
+    pub fn sram_bytes(&self) -> usize {
+        self.n_pmu * self.pmu_bytes
+    }
+
+    /// Off-chip bandwidth in bytes/s.
+    pub fn dram_bandwidth(&self) -> f64 {
+        self.dram.bandwidth()
+    }
+
+    /// Render the Table I specification block.
+    pub fn table1_report(&self) -> Table {
+        let mut t = Table::new("TABLE I — RDU architectural specification", &["Specification", "Value"]);
+        t.row(&["Compute".into(), format!("{} PCUs, {} each", self.n_pcu, self.pcu)]);
+        t.row(&[
+            "On-chip SRAM".into(),
+            format!("{} PMUs, {:.1} MB each", self.n_pmu, self.pmu_bytes as f64 / (1 << 20) as f64),
+        ]);
+        t.row(&[
+            "Clock frequency".into(),
+            // Table I rounds 638.98 to "640TFLOPS"; match that rounding.
+            format!(
+                "{:.1}GHz, {:.0}TFLOPS FP16",
+                self.clock_hz / 1e9,
+                (self.peak_flops() / 1e13).round() * 10.0
+            ),
+        ]);
+        t.row(&["Off-chip DRAM".into(), format!("{}", self.dram)]);
+        t
+    }
+}
+
+/// An RDU configuration = chip spec + the set of PCU interconnect extensions
+/// fabricated into the tiles. The paper evaluates:
+///   * baseline        — no extensions,
+///   * FFT-mode RDU    — `{Fft}`,
+///   * HS-scan-mode    — `{HsScan}`,
+///   * B-scan-mode     — `{BScan}`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RduConfig {
+    pub spec: RduSpec,
+    /// Extension modes available in every PCU (baseline modes are always
+    /// available).
+    pub extensions: BTreeSet<PcuMode>,
+}
+
+impl RduConfig {
+    /// Baseline RDU: Table I spec, no interconnect extensions.
+    pub fn baseline() -> Self {
+        Self { spec: RduSpec::table1(), extensions: BTreeSet::new() }
+    }
+
+    /// FFT-mode RDU (paper §III-B).
+    pub fn fft_mode() -> Self {
+        Self::baseline().with_extension(PcuMode::Fft)
+    }
+
+    /// HS-scan-mode RDU (paper §IV-B).
+    pub fn hs_scan_mode() -> Self {
+        Self::baseline().with_extension(PcuMode::HsScan)
+    }
+
+    /// B-scan-mode RDU (paper §IV-B).
+    pub fn b_scan_mode() -> Self {
+        Self::baseline().with_extension(PcuMode::BScan)
+    }
+
+    /// Add one extension mode.
+    pub fn with_extension(mut self, mode: PcuMode) -> Self {
+        assert!(mode.is_extension(), "{mode} is a baseline mode, not an extension");
+        self.extensions.insert(mode);
+        self
+    }
+
+    /// Replace the chip spec (for scaled/ablation studies).
+    pub fn with_spec(mut self, spec: RduSpec) -> Self {
+        self.spec = spec;
+        self
+    }
+
+    /// Is `mode` available in this configuration's PCUs?
+    pub fn supports(&self, mode: PcuMode) -> bool {
+        !mode.is_extension() || self.extensions.contains(&mode)
+    }
+
+    /// Human-readable configuration name, matching the paper's design labels.
+    pub fn name(&self) -> String {
+        if self.extensions.is_empty() {
+            "baseline RDU".to_string()
+        } else {
+            let modes: Vec<&str> = self.extensions.iter().map(|m| m.label()).collect();
+            format!("{}-mode RDU", modes.join("+"))
+        }
+    }
+}
+
+impl fmt::Display for RduConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_peak_is_paper_63898_tflops() {
+        // Table II lists the RDU at 638.98 TFLOPS; Table I rounds to 640.
+        let spec = RduSpec::table1();
+        let tflops = spec.peak_flops() / 1e12;
+        assert!((tflops - 638.98).abs() < 0.01, "got {tflops}");
+    }
+
+    #[test]
+    fn table1_sram_is_780_mb() {
+        let spec = RduSpec::table1();
+        assert_eq!(spec.sram_bytes(), 520 * (1536 << 10));
+    }
+
+    #[test]
+    fn baseline_supports_only_baseline_modes() {
+        let cfg = RduConfig::baseline();
+        for m in PcuMode::BASELINE {
+            assert!(cfg.supports(m), "{m}");
+        }
+        for m in PcuMode::EXTENSIONS {
+            assert!(!cfg.supports(m), "{m}");
+        }
+    }
+
+    #[test]
+    fn fft_mode_adds_only_fft() {
+        let cfg = RduConfig::fft_mode();
+        assert!(cfg.supports(PcuMode::Fft));
+        assert!(!cfg.supports(PcuMode::HsScan));
+        assert!(!cfg.supports(PcuMode::BScan));
+        assert_eq!(cfg.name(), "fft-mode RDU");
+    }
+
+    #[test]
+    #[should_panic]
+    fn baseline_mode_as_extension_panics() {
+        RduConfig::baseline().with_extension(PcuMode::Systolic);
+    }
+
+    #[test]
+    fn table1_report_renders() {
+        let r = RduSpec::table1().table1_report().render();
+        assert!(r.contains("520 PCUs, 32x12 each"), "{r}");
+        assert!(r.contains("640TFLOPS"), "{r}");
+    }
+}

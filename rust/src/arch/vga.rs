@@ -1,0 +1,45 @@
+//! VGA fixed-function ASIC specification (paper Table II, ref. [22]).
+//!
+//! VGA is a domain-specific accelerator for long-sequence model inference
+//! supporting GEMM and FFT pipelines. The paper scales its configuration to
+//! match the RDU's compute throughput (655.36 TFLOPS for both GEMM and FFT)
+//! and gives it the same 8 TB/s HBM3e. VGA has *no* scan support — the paper
+//! uses this to argue the RDU's generality (it cannot run Mamba).
+
+use super::mem::MemTech;
+
+/// VGA specification used by the analytical model in [`crate::vga`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct VgaSpec {
+    pub name: String,
+    /// Peak FP16 FLOP/s of the GEMM pipeline.
+    pub gemm_flops: f64,
+    /// Peak FP16 FLOP/s of the FFT pipeline.
+    pub fft_flops: f64,
+    /// Off-chip memory.
+    pub dram: MemTech,
+}
+
+impl VgaSpec {
+    /// Table II configuration: scaled to RDU-class throughput.
+    pub fn table2() -> Self {
+        Self {
+            name: "VGA (scaled)".to_string(),
+            gemm_flops: 655.36e12,
+            fft_flops: 655.36e12,
+            dram: MemTech::Hbm3e,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_vga_throughput() {
+        let v = VgaSpec::table2();
+        assert_eq!(v.gemm_flops, 655.36e12);
+        assert_eq!(v.fft_flops, v.gemm_flops);
+    }
+}

@@ -1,0 +1,196 @@
+//! Mini benchmark harness — a criterion-flavoured stand-in (the `criterion`
+//! crate is not vendored in the offline image).
+//!
+//! Usage in a `harness = false` bench target:
+//!
+//! ```no_run
+//! use ssm_rdu::bench::Bencher;
+//! let mut b = Bencher::from_env("fig7_hyena");
+//! b.bench("map attention L=1M", || { /* work */ });
+//! b.finish();
+//! ```
+//!
+//! Each benchmark is warmed up, then timed over enough iterations to cover a
+//! target measurement window; mean / stddev / min are reported. `--quick`
+//! (or env `SSM_RDU_BENCH_QUICK=1`) shrinks the window for CI runs.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's statistics, in seconds.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    /// Benchmark label.
+    pub name: String,
+    /// Number of timed iterations.
+    pub iters: u64,
+    /// Mean wall time per iteration.
+    pub mean: f64,
+    /// Sample standard deviation per iteration.
+    pub stddev: f64,
+    /// Fastest iteration.
+    pub min: f64,
+}
+
+impl Stats {
+    fn fmt_line(&self) -> String {
+        format!(
+            "{:<48} {:>12}/iter  (min {:>12}, sd {:>10}, n={})",
+            self.name,
+            crate::util::fmt_time(self.mean),
+            crate::util::fmt_time(self.min),
+            crate::util::fmt_time(self.stddev),
+            self.iters
+        )
+    }
+}
+
+/// Collects and prints benchmark results for one bench target.
+pub struct Bencher {
+    group: String,
+    warmup: Duration,
+    measure: Duration,
+    results: Vec<Stats>,
+}
+
+impl Bencher {
+    /// Create a bencher with explicit windows.
+    pub fn new(group: &str, warmup: Duration, measure: Duration) -> Self {
+        println!("\n### bench group: {group}\n");
+        Self {
+            group: group.to_string(),
+            warmup,
+            measure,
+            results: Vec::new(),
+        }
+    }
+
+    /// Create from the environment: honours `--quick` in argv and
+    /// `SSM_RDU_BENCH_QUICK` for short CI runs.
+    pub fn from_env(group: &str) -> Self {
+        let quick = std::env::args().any(|a| a == "--quick")
+            || std::env::var("SSM_RDU_BENCH_QUICK").is_ok();
+        if quick {
+            Self::new(group, Duration::from_millis(20), Duration::from_millis(100))
+        } else {
+            Self::new(group, Duration::from_millis(200), Duration::from_millis(1000))
+        }
+    }
+
+    /// Time a closure. The closure should perform one logical iteration and
+    /// return a value (returned values are black-boxed to defeat DCE).
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &Stats {
+        // Warmup, also estimates per-iter cost.
+        let wstart = Instant::now();
+        let mut witers: u64 = 0;
+        while wstart.elapsed() < self.warmup {
+            black_box(f());
+            witers += 1;
+        }
+        let est = wstart.elapsed().as_secs_f64() / witers.max(1) as f64;
+        let target_iters =
+            ((self.measure.as_secs_f64() / est.max(1e-9)).ceil() as u64).clamp(5, 5_000_000);
+
+        // Timed runs: collect per-batch samples to get a stddev without
+        // timing overhead dominating sub-microsecond bodies.
+        let batches = 10u64.min(target_iters);
+        let per_batch = (target_iters / batches).max(1);
+        let mut samples = Vec::with_capacity(batches as usize);
+        for _ in 0..batches {
+            let t0 = Instant::now();
+            for _ in 0..per_batch {
+                black_box(f());
+            }
+            samples.push(t0.elapsed().as_secs_f64() / per_batch as f64);
+        }
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = if samples.len() > 1 {
+            samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / (n - 1.0)
+        } else {
+            0.0
+        };
+        let stats = Stats {
+            name: name.to_string(),
+            iters: batches * per_batch,
+            mean,
+            stddev: var.sqrt(),
+            min: samples.iter().copied().fold(f64::INFINITY, f64::min),
+        };
+        println!("{}", stats.fmt_line());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Run a closure once (for report-style "benches" that print a paper
+    /// table rather than timing a hot loop) while still recording wall time.
+    pub fn report<T, F: FnOnce() -> T>(&mut self, name: &str, f: F) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<48} {:>12}  (one-shot report)",
+            name,
+            crate::util::fmt_time(dt)
+        );
+        self.results.push(Stats {
+            name: name.to_string(),
+            iters: 1,
+            mean: dt,
+            stddev: 0.0,
+            min: dt,
+        });
+        out
+    }
+
+    /// Access collected results.
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+
+    /// Print the closing summary.
+    pub fn finish(self) {
+        println!(
+            "\n### {}: {} benchmark(s) complete\n",
+            self.group,
+            self.results.len()
+        );
+    }
+}
+
+/// Opaque value sink to prevent the optimizer from deleting benched work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut b = Bencher::new(
+            "test",
+            Duration::from_millis(5),
+            Duration::from_millis(20),
+        );
+        let s = b.bench("noop-ish", || 1 + 1).clone();
+        assert!(s.mean >= 0.0);
+        assert!(s.min <= s.mean * 1.5 + 1e-9);
+        assert!(s.iters >= 5);
+        b.finish();
+    }
+
+    #[test]
+    fn report_runs_once() {
+        let mut b = Bencher::new(
+            "test",
+            Duration::from_millis(1),
+            Duration::from_millis(1),
+        );
+        let mut count = 0;
+        b.report("one-shot", || count += 1);
+        assert_eq!(count, 1);
+        assert_eq!(b.results()[0].iters, 1);
+    }
+}

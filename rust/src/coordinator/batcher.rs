@@ -1,0 +1,187 @@
+//! Dynamic batcher: per-model request queues flushed by size or deadline —
+//! the vLLM-router-style policy adapted to fixed-batch AOT artifacts.
+//!
+//! A batch launches when either (a) `max_batch` requests of one model are
+//! queued, or (b) the oldest queued request has waited `max_wait`. Partial
+//! batches are padded to the artifact's batch dimension by the worker.
+
+use super::request::Request;
+use crate::runtime::ModelKind;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc::Sender;
+use std::time::{Duration, Instant};
+
+/// A group of requests sharing one PJRT dispatch.
+#[derive(Debug)]
+pub struct Batch {
+    pub model: ModelKind,
+    pub requests: Vec<(Request, Sender<super::request::Response>)>,
+}
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Max requests per batch (clamped to the artifact's batch slots).
+    pub max_batch: usize,
+    /// Max time the oldest request may wait before a partial batch launches.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 4, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// Per-model FIFO queues with deadline tracking.
+pub struct DynamicBatcher {
+    policy: BatchPolicy,
+    queues: BTreeMap<ModelKind, VecDeque<(Request, Sender<super::request::Response>)>>,
+}
+
+impl DynamicBatcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self { policy, queues: BTreeMap::new() }
+    }
+
+    /// Enqueue one request.
+    pub fn push(&mut self, req: Request, reply: Sender<super::request::Response>) {
+        self.queues.entry(req.model).or_default().push_back((req, reply));
+    }
+
+    /// Total queued requests.
+    pub fn queued(&self) -> usize {
+        self.queues.values().map(VecDeque::len).sum()
+    }
+
+    /// Pop a batch that is ready *now* (full, or past deadline), if any.
+    pub fn pop_ready(&mut self, now: Instant) -> Option<Batch> {
+        // Full batches first (throughput), then expired partials (latency).
+        let full = self
+            .queues
+            .iter()
+            .find(|(_, q)| q.len() >= self.policy.max_batch)
+            .map(|(&m, _)| m);
+        let model = full.or_else(|| {
+            self.queues
+                .iter()
+                .filter(|(_, q)| !q.is_empty())
+                .find(|(_, q)| {
+                    now.duration_since(q.front().unwrap().0.submitted) >= self.policy.max_wait
+                })
+                .map(|(&m, _)| m)
+        })?;
+        let q = self.queues.get_mut(&model).unwrap();
+        let n = q.len().min(self.policy.max_batch);
+        let requests: Vec<_> = q.drain(..n).collect();
+        Some(Batch { model, requests })
+    }
+
+    /// Earliest queue deadline, for the dispatcher's timed wait.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queues
+            .values()
+            .filter_map(|q| q.front())
+            .map(|(r, _)| r.submitted + self.policy.max_wait)
+            .min()
+    }
+
+    /// Drain everything (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<Batch> {
+        let mut out = Vec::new();
+        for (&model, q) in self.queues.iter_mut() {
+            while !q.is_empty() {
+                let n = q.len().min(self.policy.max_batch);
+                out.push(Batch { model, requests: q.drain(..n).collect() });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn req(id: u64, model: ModelKind) -> Request {
+        Request::new(id, model, vec![0.0; 4])
+    }
+
+    fn policy(max_batch: usize, wait_ms: u64) -> BatchPolicy {
+        BatchPolicy { max_batch, max_wait: Duration::from_millis(wait_ms) }
+    }
+
+    #[test]
+    fn full_batch_launches_immediately() {
+        let mut b = DynamicBatcher::new(policy(2, 1000));
+        let (tx, _rx) = channel();
+        b.push(req(1, ModelKind::Hyena), tx.clone());
+        assert!(b.pop_ready(Instant::now()).is_none(), "partial batch must wait");
+        b.push(req(2, ModelKind::Hyena), tx);
+        let batch = b.pop_ready(Instant::now()).expect("full batch ready");
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn partial_batch_launches_after_deadline() {
+        let mut b = DynamicBatcher::new(policy(8, 5));
+        let (tx, _rx) = channel();
+        b.push(req(1, ModelKind::Mamba), tx);
+        assert!(b.pop_ready(Instant::now()).is_none());
+        let later = Instant::now() + Duration::from_millis(6);
+        let batch = b.pop_ready(later).expect("deadline batch");
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(batch.model, ModelKind::Mamba);
+    }
+
+    #[test]
+    fn models_batch_independently() {
+        let mut b = DynamicBatcher::new(policy(2, 1000));
+        let (tx, _rx) = channel();
+        b.push(req(1, ModelKind::Hyena), tx.clone());
+        b.push(req(2, ModelKind::Mamba), tx.clone());
+        assert!(b.pop_ready(Instant::now()).is_none(), "no cross-model batching");
+        b.push(req(3, ModelKind::Hyena), tx);
+        let batch = b.pop_ready(Instant::now()).unwrap();
+        assert_eq!(batch.model, ModelKind::Hyena);
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(b.queued(), 1);
+    }
+
+    #[test]
+    fn fifo_order_within_model() {
+        let mut b = DynamicBatcher::new(policy(3, 0));
+        let (tx, _rx) = channel();
+        for id in 1..=3 {
+            b.push(req(id, ModelKind::Attention), tx.clone());
+        }
+        let batch = b.pop_ready(Instant::now()).unwrap();
+        let ids: Vec<u64> = batch.requests.iter().map(|(r, _)| r.id).collect();
+        assert_eq!(ids, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest() {
+        let mut b = DynamicBatcher::new(policy(8, 10));
+        assert!(b.next_deadline().is_none());
+        let (tx, _rx) = channel();
+        let r1 = req(1, ModelKind::Hyena);
+        let t1 = r1.submitted;
+        b.push(r1, tx);
+        assert_eq!(b.next_deadline(), Some(t1 + Duration::from_millis(10)));
+    }
+
+    #[test]
+    fn drain_all_chunks_by_max_batch() {
+        let mut b = DynamicBatcher::new(policy(2, 1000));
+        let (tx, _rx) = channel();
+        for id in 0..5 {
+            b.push(req(id, ModelKind::Mamba), tx.clone());
+        }
+        let batches = b.drain_all();
+        assert_eq!(batches.len(), 3); // 2 + 2 + 1
+        assert_eq!(b.queued(), 0);
+    }
+}

@@ -1,0 +1,136 @@
+//! Executor abstraction: what a worker thread runs batches on.
+//!
+//! Production uses [`PjrtExecutor`] (compiled AOT artifacts via the PJRT CPU
+//! client); tests and model-free benches use [`MockExecutor`] so the
+//! coordinator's routing/batching logic is exercisable without artifacts.
+
+use crate::runtime::{ModelKind, Runtime};
+use crate::Result;
+use anyhow::anyhow;
+
+/// A backend able to execute packed batches for a set of models.
+///
+/// Deliberately **not** `Send`: PJRT executables are thread-affine
+/// (`Rc`-backed in the `xla` crate), so each worker thread constructs its
+/// own executor via [`ExecutorFactory`] and never moves it.
+pub trait Executor {
+    /// Models this executor can serve.
+    fn models(&self) -> Vec<ModelKind>;
+    /// Elements of one request's activation for `model`.
+    fn slot_elems(&self, model: ModelKind) -> usize;
+    /// Batch slots the compiled artifact expects for `model`.
+    fn batch_slots(&self, model: ModelKind) -> usize;
+    /// Execute a fully packed `(batch_slots × slot_elems)` buffer; returns
+    /// the packed outputs of the same shape.
+    fn execute(&mut self, model: ModelKind, packed: &[f32]) -> Result<Vec<f32>>;
+}
+
+/// The production executor: one compiled PJRT executable per model.
+pub struct PjrtExecutor {
+    runtime: Runtime,
+}
+
+impl PjrtExecutor {
+    pub fn new(runtime: Runtime) -> Self {
+        Self { runtime }
+    }
+
+    /// Load artifacts from a directory (convenience).
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        Ok(Self::new(Runtime::load(dir)?))
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn models(&self) -> Vec<ModelKind> {
+        self.runtime.kinds()
+    }
+
+    fn slot_elems(&self, model: ModelKind) -> usize {
+        self.runtime.model(model).map(|m| m.elems_per_slot()).unwrap_or(0)
+    }
+
+    fn batch_slots(&self, model: ModelKind) -> usize {
+        self.runtime.model(model).map(|m| m.batch_slots()).unwrap_or(0)
+    }
+
+    fn execute(&mut self, model: ModelKind, packed: &[f32]) -> Result<Vec<f32>> {
+        self.runtime.model(model)?.execute(packed)
+    }
+}
+
+/// Deterministic mock: output = input + 1, with a configurable artificial
+/// latency — lets tests assert batching/routing behaviour precisely.
+pub struct MockExecutor {
+    pub slots: usize,
+    pub elems: usize,
+    pub delay: std::time::Duration,
+    /// Fail every request whose packed buffer contains this poison value —
+    /// failure-injection hook for coordinator tests.
+    pub poison: Option<f32>,
+}
+
+impl MockExecutor {
+    pub fn new(slots: usize, elems: usize) -> Self {
+        Self { slots, elems, delay: std::time::Duration::ZERO, poison: None }
+    }
+}
+
+impl Executor for MockExecutor {
+    fn models(&self) -> Vec<ModelKind> {
+        ModelKind::ALL.to_vec()
+    }
+
+    fn slot_elems(&self, _model: ModelKind) -> usize {
+        self.elems
+    }
+
+    fn batch_slots(&self, _model: ModelKind) -> usize {
+        self.slots
+    }
+
+    fn execute(&mut self, _model: ModelKind, packed: &[f32]) -> Result<Vec<f32>> {
+        if packed.len() != self.slots * self.elems {
+            return Err(anyhow!("mock: bad packed size {}", packed.len()));
+        }
+        if let Some(p) = self.poison {
+            if packed.contains(&p) {
+                return Err(anyhow!("mock: poisoned batch"));
+            }
+        }
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        Ok(packed.iter().map(|v| v + 1.0).collect())
+    }
+}
+
+/// Factory constructing one executor per worker thread (PJRT executables are
+/// not shared across threads; each worker owns its own compiled set).
+pub type ExecutorFactory = Box<dyn Fn() -> Result<Box<dyn Executor>> + Send + Sync>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_executes_plus_one() {
+        let mut m = MockExecutor::new(2, 3);
+        let out = m.execute(ModelKind::Hyena, &[1.0; 6]).unwrap();
+        assert_eq!(out, vec![2.0; 6]);
+    }
+
+    #[test]
+    fn mock_rejects_bad_size() {
+        let mut m = MockExecutor::new(2, 3);
+        assert!(m.execute(ModelKind::Hyena, &[1.0; 5]).is_err());
+    }
+
+    #[test]
+    fn mock_poison_injects_failure() {
+        let mut m = MockExecutor::new(1, 2);
+        m.poison = Some(-999.0);
+        assert!(m.execute(ModelKind::Mamba, &[1.0, -999.0]).is_err());
+        assert!(m.execute(ModelKind::Mamba, &[1.0, 2.0]).is_ok());
+    }
+}

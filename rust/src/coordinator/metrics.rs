@@ -1,0 +1,126 @@
+//! Serving metrics: throughput counters and a lock-free latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Logarithmic latency histogram: bucket i covers [2^i, 2^{i+1}) µs.
+const BUCKETS: usize = 32;
+
+/// Shared counters updated by workers, snapshotted by observers.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub failures: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    pub exec_nanos: AtomicU64,
+    pub queue_nanos: AtomicU64,
+    latency_us: [AtomicU64; BUCKETS],
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket(us: u64) -> usize {
+        (63 - us.max(1).leading_zeros() as usize).min(BUCKETS - 1)
+    }
+
+    /// Record one completed request.
+    pub fn record_response(&self, queue: Duration, exec: Duration) {
+        self.responses.fetch_add(1, Ordering::Relaxed);
+        self.exec_nanos.fetch_add(exec.as_nanos() as u64, Ordering::Relaxed);
+        self.queue_nanos.fetch_add(queue.as_nanos() as u64, Ordering::Relaxed);
+        let us = (queue + exec).as_micros() as u64;
+        self.latency_us[Self::bucket(us)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one dispatched batch of `n` requests.
+    pub fn record_batch(&self, n: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Latency quantile estimate from the histogram (bucket upper bound).
+    pub fn latency_quantile_us(&self, q: f64) -> u64 {
+        let counts: Vec<u64> =
+            self.latency_us.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << BUCKETS
+    }
+
+    /// Mean batch occupancy.
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        let resp = self.responses.load(Ordering::Relaxed);
+        format!(
+            "responses={resp} failures={} batches={} mean_batch={:.2} p50={}µs p95={}µs",
+            self.failures.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.latency_quantile_us(0.50),
+            self.latency_quantile_us(0.95),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_log2() {
+        assert_eq!(Metrics::bucket(1), 0);
+        assert_eq!(Metrics::bucket(2), 1);
+        assert_eq!(Metrics::bucket(1000), 9);
+        assert_eq!(Metrics::bucket(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn quantiles_monotone() {
+        let m = Metrics::new();
+        for i in 0..100 {
+            m.record_response(Duration::from_micros(i * 10), Duration::from_micros(50));
+        }
+        let p50 = m.latency_quantile_us(0.5);
+        let p95 = m.latency_quantile_us(0.95);
+        assert!(p50 <= p95, "p50={p50} p95={p95}");
+        assert!(p50 > 0);
+    }
+
+    #[test]
+    fn batch_occupancy() {
+        let m = Metrics::new();
+        m.record_batch(4);
+        m.record_batch(2);
+        assert_eq!(m.mean_batch_size(), 3.0);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_quantile_us(0.9), 0);
+        assert_eq!(m.mean_batch_size(), 0.0);
+    }
+}

@@ -1,0 +1,59 @@
+//! Request/response types of the serving coordinator.
+
+use crate::runtime::ModelKind;
+use std::time::{Duration, Instant};
+
+/// A single inference request: one activation tensor for one decoder model.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub model: ModelKind,
+    /// Flattened `(seq_len × d_model)` activation.
+    pub input: Vec<f32>,
+    pub submitted: Instant,
+}
+
+impl Request {
+    pub fn new(id: u64, model: ModelKind, input: Vec<f32>) -> Self {
+        Self { id, model, input, submitted: Instant::now() }
+    }
+}
+
+/// The completed result for one request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub model: ModelKind,
+    pub output: Vec<f32>,
+    /// Time spent queued before its batch launched.
+    pub queue_time: Duration,
+    /// PJRT execution time of the batch that carried this request.
+    pub exec_time: Duration,
+    /// How many requests shared the batch.
+    pub batch_size: usize,
+}
+
+impl Response {
+    /// End-to-end latency as observed by the client.
+    pub fn latency(&self) -> Duration {
+        self.queue_time + self.exec_time
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_sums_components() {
+        let r = Response {
+            id: 1,
+            model: ModelKind::Mamba,
+            output: vec![],
+            queue_time: Duration::from_millis(3),
+            exec_time: Duration::from_millis(7),
+            batch_size: 2,
+        };
+        assert_eq!(r.latency(), Duration::from_millis(10));
+    }
+}

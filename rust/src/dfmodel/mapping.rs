@@ -1,0 +1,301 @@
+//! Dataflow mapping optimizer: allocate PCUs/PMUs to every kernel of a
+//! workload graph so the on-chip pipeline is balanced (paper §III-B: "it is
+//! essential to optimally allocate resources to each kernel within the
+//! graph. This ensures a balanced on-chip pipeline, thereby achieving
+//! maximum overall throughput. DFModel addresses this challenge…").
+//!
+//! When a graph's resident state exceeds on-chip SRAM the mapper *sections*
+//! it: contiguous topological chunks execute one after another with the
+//! section-boundary tensors staged through DRAM — DFModel's multi-level
+//! optimization's outer loop.
+
+use super::throughput::{is_serial, pcu_seconds};
+use crate::arch::RduConfig;
+use crate::graph::{Graph, KernelId};
+
+/// Resource assignment for one kernel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Allocation {
+    pub kernel: KernelId,
+    /// PCUs granted (≥ 1; serial kernels always get exactly 1).
+    pub pcus: usize,
+    /// PMUs granted (≥ 1).
+    pub pmus: usize,
+    /// Demand: seconds on a single PCU.
+    pub pcu_seconds: f64,
+    /// Achieved kernel time under this allocation.
+    pub time: f64,
+}
+
+/// A contiguous chunk of the graph resident on-chip at once.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Section {
+    pub kernels: Vec<KernelId>,
+    pub allocs: Vec<Allocation>,
+    /// Bytes of weights + corner-turn buffers resident in PMUs.
+    pub resident_bytes: f64,
+    /// Steady-state pipeline interval: max kernel time in the section.
+    pub pipeline_seconds: f64,
+}
+
+/// A complete mapping of a graph onto an RDU configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mapping {
+    pub sections: Vec<Section>,
+    pub cfg_name: String,
+}
+
+/// Why a graph cannot be mapped.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MapFailure {
+    /// A single kernel's resident state exceeds total SRAM.
+    KernelTooLarge { kernel: KernelId, bytes: f64, sram: f64 },
+    /// Empty graph.
+    EmptyGraph,
+}
+
+impl std::fmt::Display for MapFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MapFailure::KernelTooLarge { kernel, bytes, sram } => {
+                write!(f, "kernel {kernel} needs {bytes:.3e} B resident > {sram:.3e} B SRAM")
+            }
+            MapFailure::EmptyGraph => write!(f, "empty graph"),
+        }
+    }
+}
+
+/// Bytes a kernel must keep resident in PMUs: its parameters plus — for the
+/// FFT classes — its largest input tensor (Bailey's 4-step needs the
+/// reshape/corner-turn buffered on-chip, §III-A). Streaming kernels only
+/// need double-buffered tiles, charged as one PMU's worth.
+pub fn resident_bytes(g: &Graph, id: KernelId, cfg: &RduConfig) -> f64 {
+    use crate::graph::OpClass;
+    let k = &g.kernels[id];
+    let tile = cfg.spec.pmu_bytes as f64; // one PMU of stream buffering
+    let corner_turn = match k.op {
+        OpClass::VectorFft | OpClass::GemmFft => g
+            .edges
+            .iter()
+            .filter(|e| e.dst == Some(id))
+            .map(|e| e.bytes)
+            .fold(0.0, f64::max),
+        _ => 0.0,
+    };
+    k.weight_bytes + corner_turn + tile
+}
+
+/// Largest-remainder proportional allocation of `total` units by `weights`,
+/// every entry ≥ 1. `fixed` entries are pinned to exactly 1 unit.
+fn proportional(total: usize, weights: &[f64], fixed: &[bool]) -> Vec<usize> {
+    let n = weights.len();
+    assert!(total >= n, "need at least one unit per kernel: {total} < {n}");
+    let mut alloc = vec![1usize; n];
+    let mut spare = total - n;
+    let free_weight: f64 = weights
+        .iter()
+        .zip(fixed)
+        .filter(|(_, &f)| !f)
+        .map(|(w, _)| *w)
+        .sum();
+    if free_weight <= 0.0 || spare == 0 {
+        return alloc;
+    }
+    // Integer floor share + largest remainder.
+    let mut rema: Vec<(usize, f64)> = Vec::new();
+    let spare0 = spare;
+    for i in 0..n {
+        if fixed[i] {
+            continue;
+        }
+        let share = weights[i] / free_weight * spare0 as f64;
+        let fl = share.floor() as usize;
+        let fl = fl.min(spare);
+        alloc[i] += fl;
+        spare -= fl;
+        rema.push((i, share - share.floor()));
+    }
+    rema.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    for (i, _) in rema {
+        if spare == 0 {
+            break;
+        }
+        alloc[i] += 1;
+        spare -= 1;
+    }
+    // Any remainder (all fixed): give to the heaviest free kernel, or drop.
+    if spare > 0 {
+        if let Some(i) = (0..n).filter(|&i| !fixed[i]).max_by(|&a, &b| {
+            weights[a].partial_cmp(&weights[b]).unwrap()
+        }) {
+            alloc[i] += spare;
+        }
+    }
+    alloc
+}
+
+/// Map `g` onto `cfg`, sectioning if the resident state exceeds SRAM.
+pub fn map_graph(g: &Graph, cfg: &RduConfig) -> Result<Mapping, MapFailure> {
+    if g.kernels.is_empty() {
+        return Err(MapFailure::EmptyGraph);
+    }
+    let sram = cfg.spec.sram_bytes() as f64;
+    let order = g.topo_order();
+
+    // Pass 1: greedy sectioning along topological order.
+    let mut sections_ids: Vec<Vec<KernelId>> = Vec::new();
+    let mut cur: Vec<KernelId> = Vec::new();
+    let mut cur_bytes = 0.0;
+    for &id in &order {
+        let rb = resident_bytes(g, id, cfg);
+        if rb > sram {
+            return Err(MapFailure::KernelTooLarge { kernel: id, bytes: rb, sram });
+        }
+        let too_full = cur_bytes + rb > sram || cur.len() + 1 > cfg.spec.n_pcu;
+        if too_full && !cur.is_empty() {
+            sections_ids.push(std::mem::take(&mut cur));
+            cur_bytes = 0.0;
+        }
+        cur.push(id);
+        cur_bytes += rb;
+    }
+    if !cur.is_empty() {
+        sections_ids.push(cur);
+    }
+
+    // Pass 2: balanced PCU/PMU allocation per section.
+    let mut sections = Vec::with_capacity(sections_ids.len());
+    for ids in sections_ids {
+        let demands: Vec<f64> = ids.iter().map(|&i| pcu_seconds(&g.kernels[i], cfg)).collect();
+        let fixed: Vec<bool> = ids.iter().map(|&i| is_serial(&g.kernels[i])).collect();
+        let pcu_alloc = proportional(cfg.spec.n_pcu, &demands, &fixed);
+        let res: Vec<f64> = ids.iter().map(|&i| resident_bytes(g, i, cfg)).collect();
+        let pmu_alloc = proportional(cfg.spec.n_pmu, &res, &vec![false; ids.len()]);
+
+        let mut allocs = Vec::with_capacity(ids.len());
+        let mut pipeline = 0.0f64;
+        let mut resident = 0.0;
+        for (j, &id) in ids.iter().enumerate() {
+            let time = if fixed[j] { demands[j] } else { demands[j] / pcu_alloc[j] as f64 };
+            pipeline = pipeline.max(time);
+            resident += res[j];
+            allocs.push(Allocation {
+                kernel: id,
+                pcus: pcu_alloc[j],
+                pmus: pmu_alloc[j],
+                pcu_seconds: demands[j],
+                time,
+            });
+        }
+        sections.push(Section {
+            kernels: ids,
+            allocs,
+            resident_bytes: resident,
+            pipeline_seconds: pipeline,
+        });
+    }
+
+    Ok(Mapping { sections, cfg_name: cfg.name() })
+}
+
+impl Mapping {
+    /// Total PCUs allocated in the busiest section (≤ chip PCUs invariant).
+    pub fn max_pcus_used(&self) -> usize {
+        self.sections
+            .iter()
+            .map(|s| s.allocs.iter().map(|a| a.pcus).sum::<usize>())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Sum of the per-section pipeline intervals (the compute component of
+    /// the total latency).
+    pub fn compute_seconds(&self) -> f64 {
+        self.sections.iter().map(|s| s.pipeline_seconds).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::BaileyVariant;
+    use crate::workloads::{hyena_decoder, mamba_decoder, DecoderConfig, ScanVariant};
+
+    #[test]
+    fn proportional_conserves_and_floors() {
+        let a = proportional(10, &[1.0, 3.0, 6.0], &[false, false, false]);
+        assert_eq!(a.iter().sum::<usize>(), 10);
+        assert!(a.iter().all(|&x| x >= 1));
+        assert!(a[2] > a[1] && a[1] > a[0], "{a:?}");
+    }
+
+    #[test]
+    fn proportional_pins_serial() {
+        let a = proportional(10, &[100.0, 1.0], &[true, false]);
+        assert_eq!(a[0], 1);
+        assert_eq!(a[1], 9);
+    }
+
+    #[test]
+    fn hyena_maps_single_section() {
+        let cfg = RduConfig::fft_mode();
+        let g = hyena_decoder(&DecoderConfig::paper(1 << 18), BaileyVariant::Vector);
+        let m = map_graph(&g, &cfg).unwrap();
+        assert_eq!(m.sections.len(), 1, "256K Hyena fits on-chip");
+        assert!(m.max_pcus_used() <= cfg.spec.n_pcu);
+    }
+
+    #[test]
+    fn allocation_never_exceeds_chip() {
+        for cfg in [RduConfig::baseline(), RduConfig::fft_mode(), RduConfig::b_scan_mode()] {
+            for dc in DecoderConfig::paper_sweep() {
+                let g = hyena_decoder(&dc, BaileyVariant::Vector);
+                let m = map_graph(&g, &cfg).unwrap();
+                for s in &m.sections {
+                    assert!(s.allocs.iter().map(|a| a.pcus).sum::<usize>() <= cfg.spec.n_pcu);
+                    assert!(s.allocs.iter().map(|a| a.pmus).sum::<usize>() <= cfg.spec.n_pmu);
+                    assert!(s.resident_bytes <= cfg.spec.sram_bytes() as f64);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn heaviest_kernel_gets_most_pcus() {
+        let cfg = RduConfig::baseline();
+        let g = hyena_decoder(&DecoderConfig::paper(1 << 20), BaileyVariant::Vector);
+        let m = map_graph(&g, &cfg).unwrap();
+        // The serialized vector-FFT kernels dominate demand on the baseline.
+        for s in &m.sections {
+            let (max_alloc_id, _) = s
+                .allocs
+                .iter()
+                .map(|a| (a.kernel, a.pcus))
+                .max_by_key(|&(_, p)| p)
+                .unwrap();
+            let name = &g.kernels[max_alloc_id].name;
+            assert!(name.contains("fft"), "heaviest = {name}");
+        }
+    }
+
+    #[test]
+    fn serial_scan_pinned_to_one_pcu() {
+        let cfg = RduConfig::baseline();
+        let g = mamba_decoder(&DecoderConfig::paper(1 << 18), ScanVariant::CScan);
+        let m = map_graph(&g, &cfg).unwrap();
+        let scan_id = g.kernels.iter().position(|k| k.name == "selective_scan").unwrap();
+        let alloc = m
+            .sections
+            .iter()
+            .flat_map(|s| &s.allocs)
+            .find(|a| a.kernel == scan_id)
+            .unwrap();
+        assert_eq!(alloc.pcus, 1);
+    }
+
+    #[test]
+    fn empty_graph_rejected() {
+        let g = Graph::new("empty");
+        assert_eq!(map_graph(&g, &RduConfig::baseline()), Err(MapFailure::EmptyGraph));
+    }
+}

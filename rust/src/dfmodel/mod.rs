@@ -1,0 +1,26 @@
+//! Reproduction of DFModel [20] — the dataflow performance-modeling
+//! framework every figure in the paper is produced with (paper §II-C,
+//! Fig. 4): *"DFModel takes a workload and a system configuration as
+//! inputs, performs a multi-level optimization process to identify the
+//! optimal dataflow mapping, and estimates the corresponding performance."*
+//!
+//! * [`throughput`] — per-kernel effective rates on an RDU configuration,
+//!   grounded in the cycle-level PCU measurements of
+//!   [`crate::pcusim::utilization`].
+//! * [`mapping`] — the mapping optimizer: balanced PCU/PMU allocation and
+//!   SRAM-capacity sectioning.
+//! * [`perf`] — the latency estimator: per-section pipeline bottleneck,
+//!   overlapped DRAM streaming, per-kernel and per-op-class breakdowns.
+//!
+//! The GPU and VGA comparison backends live in [`crate::gpu`] and
+//! [`crate::vga`]; they consume the same [`crate::graph::Graph`] workloads.
+
+pub mod mapping;
+pub mod perf;
+pub mod sweep;
+pub mod throughput;
+
+pub use mapping::{map_graph, Allocation, MapFailure, Mapping, Section};
+pub use perf::{estimate, Estimate, KernelEstimate};
+pub use sweep::{sweep_bandwidth, sweep_pcu_count, sweep_stages, SweepPoint};
+pub use throughput::{kernel_rate, pcu_seconds, Rate};

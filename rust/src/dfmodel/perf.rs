@@ -1,0 +1,244 @@
+//! DFModel performance estimator: dataflow-execution latency of a workload
+//! graph on an RDU configuration (paper Fig. 4: workload + system config →
+//! optimal mapping → performance).
+//!
+//! Under dataflow execution (Fig. 1B) every kernel of a section runs
+//! concurrently as a stage of an on-chip pipeline, so a section's
+//! steady-state latency is its *bottleneck* kernel time, and DRAM traffic is
+//! only the graph's external inputs/outputs (+ weights, loaded once) —
+//! intermediates never leave the chip. Compute and memory streams overlap;
+//! the section takes `max(compute, memory)`.
+
+use super::mapping::{map_graph, MapFailure, Mapping};
+use crate::arch::RduConfig;
+use crate::graph::{Graph, OpClass};
+use std::collections::BTreeMap;
+
+/// Per-kernel line item of an estimate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelEstimate {
+    pub name: String,
+    pub op: OpClass,
+    pub flops: f64,
+    pub pcus: usize,
+    /// Kernel time under its allocation (pipeline stage interval).
+    pub seconds: f64,
+}
+
+/// Performance estimate for one graph on one RDU configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Estimate {
+    pub graph_name: String,
+    pub cfg_name: String,
+    /// End-to-end latency: Σ over sections of max(compute, memory).
+    pub total_seconds: f64,
+    /// Compute component (Σ section pipeline intervals).
+    pub compute_seconds: f64,
+    /// Memory component (graph I/O + weights at DRAM bandwidth).
+    pub memory_seconds: f64,
+    pub sections: usize,
+    pub kernels: Vec<KernelEstimate>,
+}
+
+impl Estimate {
+    /// Name of the slowest kernel (the pipeline bottleneck).
+    pub fn bottleneck(&self) -> &str {
+        self.kernels
+            .iter()
+            .max_by(|a, b| a.seconds.partial_cmp(&b.seconds).unwrap())
+            .map(|k| k.name.as_str())
+            .unwrap_or("-")
+    }
+
+    /// Attribute the total latency to op classes proportionally to kernel
+    /// demand — the Fig. 7/11 "latency breakdown" view.
+    pub fn breakdown_by_op(&self) -> BTreeMap<&'static str, f64> {
+        let total_demand: f64 = self.kernels.iter().map(|k| k.seconds * k.pcus as f64).sum();
+        let mut m = BTreeMap::new();
+        if total_demand <= 0.0 {
+            return m;
+        }
+        for k in &self.kernels {
+            *m.entry(k.op.label()).or_insert(0.0) +=
+                self.total_seconds * (k.seconds * k.pcus as f64) / total_demand;
+        }
+        m
+    }
+
+    /// Latency attributed to a kernel-name predicate (e.g. the FFT share).
+    pub fn share_where(&self, pred: impl Fn(&KernelEstimate) -> bool) -> f64 {
+        let total_demand: f64 = self.kernels.iter().map(|k| k.seconds * k.pcus as f64).sum();
+        if total_demand <= 0.0 {
+            return 0.0;
+        }
+        let sel: f64 = self
+            .kernels
+            .iter()
+            .filter(|k| pred(k))
+            .map(|k| k.seconds * k.pcus as f64)
+            .sum();
+        self.total_seconds * sel / total_demand
+    }
+}
+
+/// Estimate dataflow-execution latency of `g` on `cfg`.
+pub fn estimate(g: &Graph, cfg: &RduConfig) -> Result<Estimate, MapFailure> {
+    let mapping = map_graph(g, cfg)?;
+    Ok(estimate_with_mapping(g, cfg, &mapping))
+}
+
+/// Estimate with a precomputed mapping (lets callers inspect the mapping).
+pub fn estimate_with_mapping(g: &Graph, cfg: &RduConfig, mapping: &Mapping) -> Estimate {
+    let bw = cfg.spec.dram_bandwidth();
+
+    // Memory: external inputs + outputs + weights, streamed once, plus
+    // section-boundary tensors staged through DRAM when sectioned.
+    let boundary_bytes = if mapping.sections.len() > 1 {
+        // Approximate: each extra section boundary re-stages one activation
+        // tensor of the largest intermediate size.
+        (mapping.sections.len() - 1) as f64 * g.max_intermediate_bytes() * 2.0
+    } else {
+        0.0
+    };
+    let io_bytes = g.external_input_bytes() + g.external_output_bytes() + g.total_weight_bytes()
+        + boundary_bytes;
+    let memory_seconds = io_bytes / bw;
+
+    let compute_seconds = mapping.compute_seconds();
+    // Compute and DRAM streams overlap under dataflow execution.
+    let total_seconds = compute_seconds.max(memory_seconds);
+
+    let mut kernels = Vec::with_capacity(g.kernels.len());
+    for s in &mapping.sections {
+        for a in &s.allocs {
+            let k = &g.kernels[a.kernel];
+            kernels.push(KernelEstimate {
+                name: k.name.clone(),
+                op: k.op,
+                flops: k.flops,
+                pcus: a.pcus,
+                seconds: a.time,
+            });
+        }
+    }
+
+    Estimate {
+        graph_name: g.name.clone(),
+        cfg_name: cfg.name(),
+        total_seconds,
+        compute_seconds,
+        memory_seconds,
+        sections: mapping.sections.len(),
+        kernels,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::BaileyVariant;
+    use crate::workloads::{
+        attention_decoder, hyena_decoder, mamba_decoder, DecoderConfig, ScanVariant,
+    };
+
+    fn paper_1m() -> DecoderConfig {
+        DecoderConfig::paper(1 << 20)
+    }
+
+    #[test]
+    fn attention_slowest_of_all_designs() {
+        // Fig. 7 / Fig. 11 Design 1: attention has the highest latency.
+        let cfg = paper_1m();
+        let base = RduConfig::baseline();
+        let at = estimate(&attention_decoder(&cfg), &base).unwrap().total_seconds;
+        let hy = estimate(&hyena_decoder(&cfg, BaileyVariant::Vector), &base).unwrap().total_seconds;
+        let ma = estimate(&mamba_decoder(&cfg, ScanVariant::Parallel), &base).unwrap().total_seconds;
+        assert!(at > hy && at > ma, "at={at} hy={hy} ma={ma}");
+    }
+
+    #[test]
+    fn fig7_design_ordering() {
+        // Fig. 7: attention > VecFFT/baseline > GEMM-FFT/baseline >
+        // VecFFT/FFT-mode.
+        let cfg = paper_1m();
+        let base = RduConfig::baseline();
+        let fftm = RduConfig::fft_mode();
+        let d1 = estimate(&attention_decoder(&cfg), &base).unwrap().total_seconds;
+        let d2 = estimate(&hyena_decoder(&cfg, BaileyVariant::Vector), &base).unwrap().total_seconds;
+        let d3 = estimate(&hyena_decoder(&cfg, BaileyVariant::Gemm), &base).unwrap().total_seconds;
+        let d4 = estimate(&hyena_decoder(&cfg, BaileyVariant::Vector), &fftm).unwrap().total_seconds;
+        assert!(d1 > d2 && d2 > d3 && d3 > d4, "d1={d1} d2={d2} d3={d3} d4={d4}");
+        // Paper headline factors (shape check, generous bands):
+        let s21 = d1 / d2; // paper 217.74×
+        let s32 = d2 / d3; // paper 2.61×
+        let s43 = d3 / d4; // paper 1.95×
+        assert!(s21 > 50.0, "s21={s21}");
+        assert!(s32 > 1.2 && s32 < 6.0, "s32={s32}");
+        assert!(s43 > 1.2 && s43 < 6.0, "s43={s43}");
+    }
+
+    #[test]
+    fn fig11_design_ordering() {
+        // Fig. 11: attention > C-scan > parallel/baseline > parallel/scan-mode.
+        let cfg = paper_1m();
+        let base = RduConfig::baseline();
+        let d1 = estimate(&attention_decoder(&cfg), &base).unwrap().total_seconds;
+        let d2 = estimate(&mamba_decoder(&cfg, ScanVariant::CScan), &base).unwrap().total_seconds;
+        let d3 = estimate(&mamba_decoder(&cfg, ScanVariant::Parallel), &base).unwrap().total_seconds;
+        let d4 = estimate(&mamba_decoder(&cfg, ScanVariant::Parallel), &RduConfig::hs_scan_mode())
+            .unwrap()
+            .total_seconds;
+        let d5 = estimate(&mamba_decoder(&cfg, ScanVariant::Parallel), &RduConfig::b_scan_mode())
+            .unwrap()
+            .total_seconds;
+        assert!(d1 > d2 && d2 > d3 && d3 > d4, "d1={d1} d2={d2} d3={d3} d4={d4}");
+        // Paper: HS-mode and B-mode identical.
+        assert!((d4 - d5).abs() / d4 < 0.01, "d4={d4} d5={d5}");
+        // Paper headline factors (shape):
+        assert!(d1 / d2 > 2.0, "d1/d2={}", d1 / d2); // paper 7.34×
+        assert!(d2 / d3 > 100.0, "d2/d3={}", d2 / d3); // paper 562.98×
+        let s = d3 / d4; // paper 1.75×
+        assert!(s > 1.05 && s < 3.0, "d3/d4={s}");
+    }
+
+    #[test]
+    fn speedups_stable_across_sweep() {
+        // Paper: "achieves a 1.95× speedup … across different sequence
+        // lengths" — the design-vs-design ratios are ~constant over L.
+        let base = RduConfig::baseline();
+        let fftm = RduConfig::fft_mode();
+        let mut ratios = Vec::new();
+        for dc in DecoderConfig::paper_sweep() {
+            let d3 = estimate(&hyena_decoder(&dc, BaileyVariant::Gemm), &base).unwrap().total_seconds;
+            let d4 = estimate(&hyena_decoder(&dc, BaileyVariant::Vector), &fftm).unwrap().total_seconds;
+            ratios.push(d3 / d4);
+        }
+        let spread = ratios.iter().cloned().fold(0.0f64, f64::max)
+            / ratios.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(spread < 1.1, "ratios={ratios:?}");
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let cfg = paper_1m();
+        let e = estimate(&hyena_decoder(&cfg, BaileyVariant::Vector), &RduConfig::fft_mode()).unwrap();
+        let sum: f64 = e.breakdown_by_op().values().sum();
+        assert!((sum - e.total_seconds).abs() / e.total_seconds < 1e-9);
+    }
+
+    #[test]
+    fn memory_model_nonzero_and_overlapped() {
+        let cfg = paper_1m();
+        let e = estimate(&hyena_decoder(&cfg, BaileyVariant::Vector), &RduConfig::fft_mode()).unwrap();
+        assert!(e.memory_seconds > 0.0);
+        assert!(e.total_seconds >= e.memory_seconds);
+        assert!(e.total_seconds >= e.compute_seconds * 0.999);
+    }
+
+    #[test]
+    fn bottleneck_is_fft_on_baseline_hyena() {
+        let cfg = paper_1m();
+        let e = estimate(&hyena_decoder(&cfg, BaileyVariant::Vector), &RduConfig::baseline()).unwrap();
+        assert!(e.bottleneck().contains("fft"), "bottleneck={}", e.bottleneck());
+    }
+}

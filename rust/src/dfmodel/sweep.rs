@@ -1,0 +1,129 @@
+//! Design-space exploration: sweep chip parameters (PCU count, geometry,
+//! memory bandwidth, Bailey tile size) and report how the paper's headline
+//! results move — the ablation study DFModel (paper Fig. 4: "multi-level
+//! optimization … design space optimization") was built for.
+
+use super::perf::estimate;
+use crate::arch::{MemTech, RduConfig};
+use crate::fft::BaileyVariant;
+use crate::workloads::{hyena_decoder, mamba_decoder, DecoderConfig, ScanVariant};
+
+/// One swept design point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepPoint {
+    pub label: String,
+    /// Hyena (Vector-FFT) latency on the extended config.
+    pub hyena_seconds: f64,
+    /// Mamba (parallel-scan) latency on the extended config.
+    pub mamba_seconds: f64,
+    /// Speedup of the extended config over the baseline config at this
+    /// design point (Hyena / Mamba).
+    pub hyena_gain: f64,
+    pub mamba_gain: f64,
+}
+
+fn point(label: String, spec_edit: impl Fn(&mut RduConfig), dc: &DecoderConfig) -> SweepPoint {
+    let mut base = RduConfig::baseline();
+    spec_edit(&mut base);
+    let mut fftm = RduConfig::fft_mode();
+    spec_edit(&mut fftm);
+    let mut scanm = RduConfig::hs_scan_mode();
+    spec_edit(&mut scanm);
+
+    let hy = hyena_decoder(dc, BaileyVariant::Vector);
+    let ma = mamba_decoder(dc, ScanVariant::Parallel);
+    let hy_base = estimate(&hy, &base).expect("mappable").total_seconds;
+    let hy_ext = estimate(&hy, &fftm).expect("mappable").total_seconds;
+    let ma_base = estimate(&ma, &base).expect("mappable").total_seconds;
+    let ma_ext = estimate(&ma, &scanm).expect("mappable").total_seconds;
+    SweepPoint {
+        label,
+        hyena_seconds: hy_ext,
+        mamba_seconds: ma_ext,
+        hyena_gain: hy_base / hy_ext,
+        mamba_gain: ma_base / ma_ext,
+    }
+}
+
+/// Sweep the PCU count (chip scale) at fixed geometry. SRAM (PMU count) is
+/// held at the Table I capacity so the sweep isolates *compute* scale —
+/// shrinking SRAM too would conflate it with the sectioning threshold.
+pub fn sweep_pcu_count(dc: &DecoderConfig, counts: &[usize]) -> Vec<SweepPoint> {
+    counts
+        .iter()
+        .map(|&n| point(format!("{n} PCUs"), |cfg| cfg.spec.n_pcu = n, dc))
+        .collect()
+}
+
+/// Sweep off-chip bandwidth (memory technology).
+pub fn sweep_bandwidth(dc: &DecoderConfig, techs: &[MemTech]) -> Vec<SweepPoint> {
+    techs
+        .iter()
+        .map(|&t| point(format!("{t}"), |cfg| cfg.spec.dram = t, dc))
+        .collect()
+}
+
+/// Sweep pipeline depth (stages) at fixed lane width — moves the
+/// serialized-execution penalty (1/stages) and the spatial factor
+/// (levels/stages) in opposite directions.
+pub fn sweep_stages(dc: &DecoderConfig, stages: &[usize]) -> Vec<SweepPoint> {
+    stages
+        .iter()
+        .map(|&s| {
+            point(format!("{} stages", s), |cfg| {
+                cfg.spec.pcu = crate::arch::PcuGeometry::new(cfg.spec.pcu.lanes, s);
+            }, dc)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dc() -> DecoderConfig {
+        DecoderConfig::paper(1 << 18)
+    }
+
+    #[test]
+    fn more_pcus_never_slower() {
+        let pts = sweep_pcu_count(&dc(), &[128, 256, 520]);
+        for w in pts.windows(2) {
+            assert!(w[1].hyena_seconds <= w[0].hyena_seconds * 1.001, "{w:?}");
+            assert!(w[1].mamba_seconds <= w[0].mamba_seconds * 1.001, "{w:?}");
+        }
+    }
+
+    #[test]
+    fn more_bandwidth_never_slower() {
+        let pts = sweep_bandwidth(&dc(), &[MemTech::Ddr5, MemTech::Hbm2e, MemTech::Hbm3e]);
+        for w in pts.windows(2) {
+            assert!(w[1].hyena_seconds <= w[0].hyena_seconds * 1.001, "{w:?}");
+        }
+    }
+
+    #[test]
+    fn deeper_pipelines_raise_extension_gain() {
+        // The serialized penalty is 1/stages, so the FFT-mode gain grows
+        // with pipeline depth — the paper's architectural argument in
+        // ablation form.
+        let pts = sweep_stages(&dc(), &[6, 12, 24]);
+        for w in pts.windows(2) {
+            assert!(
+                w[1].hyena_gain >= w[0].hyena_gain * 0.999,
+                "{} {} vs {} {}",
+                w[0].label,
+                w[0].hyena_gain,
+                w[1].label,
+                w[1].hyena_gain
+            );
+        }
+    }
+
+    #[test]
+    fn gains_always_at_least_one() {
+        for p in sweep_pcu_count(&dc(), &[64, 520]) {
+            assert!(p.hyena_gain >= 1.0 && p.mamba_gain >= 1.0, "{p:?}");
+        }
+    }
+}

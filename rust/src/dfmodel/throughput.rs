@@ -1,0 +1,179 @@
+//! Per-kernel effective throughput on an RDU configuration — the link
+//! between the cycle-level PCU simulator and the performance estimator.
+//!
+//! For each [`OpClass`] the model derives how fast one PCU retires the
+//! kernel's work, *measured* from [`crate::pcusim::utilization`] rather than
+//! hand-entered:
+//!
+//! | op class      | baseline RDU                 | extended RDU              |
+//! |---------------|------------------------------|---------------------------|
+//! | gemm/gemm-fft | systolic, full MAC rate      | (same)                    |
+//! | vector-fft    | serialized: 1/stages of peak | spatial: levels/stages    |
+//! | parallel scan | serialized: 1/stages of peak | spatial: levels/stages¹   |
+//! | c-scan        | 1 element-update per cycle, chip-wide (inherently serial) |
+//! | eltwise/softmax/norm | full lane rate (element-wise mode)              |
+//!
+//! ¹ measured on whichever scan fabric the config provides; the HS and B
+//!   fabrics give identical *tile* throughput (one scan per cycle, §IV-C),
+//!   which the flop-rate normalization below preserves.
+
+use crate::arch::RduConfig;
+use crate::graph::{Kernel, OpClass};
+use crate::pcusim::utilization;
+
+/// How one PCU retires a kernel's work.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Rate {
+    /// Effective FLOP/s per PCU; the kernel divides freely across PCUs.
+    FlopsPerPcu(f64),
+    /// The kernel is inherently sequential: fixed time in seconds,
+    /// independent of how many PCUs are allocated (paper §IV-A on C-scan).
+    SerialSeconds(f64),
+}
+
+/// Effective per-PCU throughput for `kernel` on `cfg`.
+pub fn kernel_rate(kernel: &Kernel, cfg: &RduConfig) -> Rate {
+    let spec = &cfg.spec;
+    let pcu_peak = spec.pcu.peak_flops(spec.clock_hz);
+    match kernel.op {
+        // Systolic mode sustains a MAC in every FU (paper Fig. 2); the
+        // GEMM-FFT variant exists precisely because it reaches this rate.
+        OpClass::Gemm | OpClass::GemmFft => Rate::FlopsPerPcu(pcu_peak),
+
+        // Vector FFT: pipeline factor measured on the cycle-level engine —
+        // 1/stages serialized on the baseline (paper §III-B: "only the
+        // first stage of the pipeline"), levels/stages spatial on the
+        // FFT-mode PCU.
+        OpClass::VectorFft => {
+            let m = utilization::vector_fft(cfg);
+            Rate::FlopsPerPcu(pcu_peak * m.pipeline_factor)
+        }
+
+        // Parallel scan: the fabric's *tile rate* is what matters — both the
+        // HS and B fabrics retire one `lanes`-element scan per cycle
+        // (paper §IV-C: "each mode supports a throughput of one scan per
+        // cycle"), so their effective rates are identical even though their
+        // stage occupancies differ. Serialized on the baseline, the tile
+        // rate drops by the level count (II = levels).
+        OpClass::ScanParallel => {
+            let m = utilization::parallel_scan(cfg);
+            let lanes = spec.pcu.lanes as f64;
+            let updates_per_sec = lanes * spec.clock_hz / m.initiation_interval;
+            let updates = kernel.elements * kernel.channels;
+            if updates > 0.0 {
+                // Normalize the kernel's own FLOP accounting to its update
+                // count so the rate is tile-throughput-faithful.
+                Rate::FlopsPerPcu(kernel.flops / updates * updates_per_sec)
+            } else {
+                // No stream metadata: assume the Blelloch-lift accounting
+                // (6 FLOP per element-update, see workloads::mamba).
+                Rate::FlopsPerPcu(6.0 * updates_per_sec)
+            }
+        }
+
+        // C-scan: "inherently sequential, computing each output element one
+        // at a time" (§IV-A) — one element-update (2 FLOP) per cycle no
+        // matter how much hardware is thrown at it.
+        OpClass::ScanSerial => {
+            let updates = kernel.elements * kernel.channels;
+            Rate::SerialSeconds(updates / spec.clock_hz)
+        }
+
+        // Vector-path kernels run in element-wise mode: every lane busy,
+        // one op per FU per cycle, i.e. half the MAC peak.
+        OpClass::Elementwise | OpClass::Softmax | OpClass::Norm => {
+            Rate::FlopsPerPcu(pcu_peak / 2.0)
+        }
+    }
+}
+
+/// Time for one PCU to retire the kernel (the mapper's demand metric).
+pub fn pcu_seconds(kernel: &Kernel, cfg: &RduConfig) -> f64 {
+    match kernel_rate(kernel, cfg) {
+        Rate::FlopsPerPcu(r) => kernel.flops / r,
+        Rate::SerialSeconds(t) => t,
+    }
+}
+
+/// Is the kernel's time independent of PCU allocation?
+pub fn is_serial(kernel: &Kernel) -> bool {
+    matches!(kernel.op, OpClass::ScanSerial)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Kernel;
+
+    fn k(op: OpClass, flops: f64) -> Kernel {
+        Kernel::new("k", op, flops, 1.0, 1.0)
+    }
+
+    #[test]
+    fn gemm_runs_at_peak() {
+        let cfg = RduConfig::baseline();
+        let peak = cfg.spec.pcu.peak_flops(cfg.spec.clock_hz);
+        match kernel_rate(&k(OpClass::Gemm, 1e9), &cfg) {
+            Rate::FlopsPerPcu(r) => assert_eq!(r, peak),
+            _ => panic!("gemm should be divisible"),
+        }
+    }
+
+    #[test]
+    fn vector_fft_12x_gap_between_configs() {
+        let kern = k(OpClass::VectorFft, 1e12);
+        let base = pcu_seconds(&kern, &RduConfig::baseline());
+        let fft = pcu_seconds(&kern, &RduConfig::fft_mode());
+        // baseline 1/12 vs fft-mode 5/12 → 5× faster per PCU.
+        let ratio = base / fft;
+        assert!((ratio - 5.0).abs() < 1e-9, "ratio={ratio}");
+    }
+
+    #[test]
+    fn scan_levels_gap_between_configs() {
+        // Serialized II = 5 levels vs spatial II = 1 → ~5× rate gap on the
+        // 32-lane PCU (paper Fig. 11's Design 3 → 4 per-kernel gain).
+        let kern = k(OpClass::ScanParallel, 1e12).with_stream(1e6, 32.0);
+        let base = pcu_seconds(&kern, &RduConfig::baseline());
+        let hs = pcu_seconds(&kern, &RduConfig::hs_scan_mode());
+        let ratio = base / hs;
+        assert!(ratio > 4.5 && ratio < 5.5, "ratio={ratio}");
+    }
+
+    #[test]
+    fn hs_and_b_equal_rates() {
+        // Paper §IV-C: HS-mode and B-mode deliver identical performance —
+        // one scan tile per cycle on either fabric.
+        let kern = k(OpClass::ScanParallel, 1e12).with_stream(1e6, 32.0);
+        let hs = pcu_seconds(&kern, &RduConfig::hs_scan_mode());
+        let b = pcu_seconds(&kern, &RduConfig::b_scan_mode());
+        assert!((hs - b).abs() / hs < 0.01, "hs={hs} b={b}");
+        // The metadata-free fallback path agrees too.
+        let bare = k(OpClass::ScanParallel, 1e12);
+        let hs2 = pcu_seconds(&bare, &RduConfig::hs_scan_mode());
+        let b2 = pcu_seconds(&bare, &RduConfig::b_scan_mode());
+        assert!((hs2 - b2).abs() / hs2 < 0.01, "hs2={hs2} b2={b2}");
+    }
+
+    #[test]
+    fn c_scan_is_fixed_time() {
+        let cfg = RduConfig::baseline();
+        let kern = Kernel::new("scan", OpClass::ScanSerial, 2e6, 1.0, 1.0).with_stream(1e6, 1.0);
+        match kernel_rate(&kern, &cfg) {
+            Rate::SerialSeconds(t) => {
+                // 1e6 updates at 1.6 GHz = 625 µs.
+                assert!((t - 1e6 / 1.6e9).abs() < 1e-12);
+            }
+            _ => panic!("c-scan must be serial"),
+        }
+        assert!(is_serial(&kern));
+    }
+
+    #[test]
+    fn c_scan_unaffected_by_extensions() {
+        let kern = Kernel::new("scan", OpClass::ScanSerial, 2e6, 1.0, 1.0).with_stream(1e6, 32.0);
+        let a = pcu_seconds(&kern, &RduConfig::baseline());
+        let b = pcu_seconds(&kern, &RduConfig::b_scan_mode());
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,214 @@
+//! Bailey's 4-step FFT (paper §III-A, Fig. 6).
+//!
+//! Decomposes an L-point FFT over a 2-D reshape `L = R × C`:
+//!
+//! 1. reshape the input into an `R × C` matrix (column-major segments),
+//! 2. FFT each **column** (length-R transforms — the "tiles" sized to the
+//!    hardware's vector width, R = 16 or 32),
+//! 3. multiply elementwise by twiddle factors `e^{-2πi·r·c/L}`,
+//! 4. FFT each **row** (length-C transforms, applied recursively when C > R).
+//!
+//! The R-point column transforms come in the paper's two flavours:
+//! [`BaileyVariant::Vector`] computes them with Cooley–Tukey butterflies
+//! (optimal FLOPs, needs the FFT-mode interconnect), and
+//! [`BaileyVariant::Gemm`] computes them as a dense R×R matrix multiply
+//! (R/log₂R more FLOPs, but maps onto systolic hardware / tensor cores).
+
+use super::{cooley_tukey, dft, is_pow2};
+use crate::util::C64;
+use std::f64::consts::PI;
+
+/// How the R-point tile transforms are computed (paper §III-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BaileyVariant {
+    /// R-point tiles via Cooley–Tukey butterflies: O(L·log₂L) total FLOPs.
+    Vector,
+    /// R-point tiles via dense DFT matmul: O(L·R·log_R L) total FLOPs.
+    Gemm,
+}
+
+/// Transform length-R slices with the selected tile algorithm.
+fn tile_fft(variant: BaileyVariant, dft_mat: &[C64], x: &mut [C64]) {
+    match variant {
+        BaileyVariant::Vector => cooley_tukey::fft_in_place(x),
+        BaileyVariant::Gemm => {
+            let y = dft::dft_by_matmul(dft_mat, x);
+            x.copy_from_slice(&y);
+        }
+    }
+}
+
+/// Bailey 4-step FFT of `x` with tile size `r`.
+///
+/// Requirements: `x.len()` and `r` are powers of two and `r ≤ x.len()`.
+/// When the row length still exceeds `r` the row transforms recurse, so the
+/// whole transform is built exclusively from R-point tiles — exactly the
+/// hierarchical decomposition the paper maps onto PCUs.
+pub fn bailey_fft(x: &[C64], r: usize, variant: BaileyVariant) -> Vec<C64> {
+    let l = x.len();
+    assert!(is_pow2(l), "bailey_fft: L={l} not a power of two");
+    assert!(is_pow2(r) && r >= 2, "bailey_fft: R={r} not a power of two >= 2");
+    let dft_mat = dft::dft_matrix(r);
+    bailey_rec(x, r, variant, &dft_mat)
+}
+
+fn bailey_rec(x: &[C64], r: usize, variant: BaileyVariant, dft_mat: &[C64]) -> Vec<C64> {
+    let l = x.len();
+    if l <= r {
+        // Base case: a single tile.
+        let mut tile = x.to_vec();
+        if l == r {
+            tile_fft(variant, dft_mat, &mut tile);
+        } else {
+            // L smaller than the tile width: plain CT (degenerate input).
+            cooley_tukey::fft_in_place(&mut tile);
+        }
+        return tile;
+    }
+    let c = l / r; // columns count: matrix is R rows x C cols, column-major in time
+                   // x[n] with n = r_idx + R*c_idx  ==>  decimation: rows are strided segments.
+
+    // Step 1+2: column FFTs. Column `ci` is the length-R sequence
+    // x[ci], x[ci + C], ..., x[ci + (R-1)*C]  (stride C), per the DIT split
+    // n = c_idx + C * r_idx. This is the standard 4-step indexing:
+    //   X[k1 + R*k2] = Σ_{n2} e^{-2πi n2 k2 / C} · T[n2,k1]
+    //   T[n2,k1]     = e^{-2πi n2 k1 / L} · Σ_{n1} x[n1*C + n2] e^{-2πi n1 k1 / R}
+    let mut cols: Vec<Vec<C64>> = Vec::with_capacity(c);
+    for n2 in 0..c {
+        let mut col: Vec<C64> = (0..r).map(|n1| x[n1 * c + n2]).collect();
+        tile_fft(variant, dft_mat, &mut col);
+        cols.push(col);
+    }
+
+    // Step 3: twiddle scaling T[n2, k1] *= e^{-2πi·n2·k1/L}.
+    for (n2, col) in cols.iter_mut().enumerate() {
+        for (k1, v) in col.iter_mut().enumerate() {
+            let ang = -2.0 * PI * ((n2 * k1) % l) as f64 / l as f64;
+            *v = *v * C64::cis(ang);
+        }
+    }
+
+    // Step 4: row FFTs (length C), recursing so rows are also tiled.
+    let mut out = vec![C64::ZERO; l];
+    for k1 in 0..r {
+        let row: Vec<C64> = (0..c).map(|n2| cols[n2][k1]).collect();
+        let row_f = bailey_rec(&row, r, variant, dft_mat);
+        // Output index: X[k1 + R*k2].
+        for (k2, v) in row_f.into_iter().enumerate() {
+            out[k1 + r * k2] = v;
+        }
+    }
+    out
+}
+
+/// Number of R-point tile transforms performed by the hierarchical Bailey
+/// decomposition of an L-point FFT (used by the perf model and the PCU
+/// mapping: each tile is one pass through a PCU).
+pub fn tile_count(l: usize, r: usize) -> usize {
+    if l <= r {
+        return 1;
+    }
+    let c = l / r;
+    // C column tiles + R recursive rows of length C.
+    c + r * tile_count(c, r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::{dft::dft, fft, to_complex};
+    use crate::util::complex::max_abs_diff_c;
+    use crate::util::{prop, XorShift};
+
+    fn rand_complex(rng: &mut XorShift, n: usize) -> Vec<C64> {
+        (0..n)
+            .map(|_| C64::new(rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0)))
+            .collect()
+    }
+
+    #[test]
+    fn vector_variant_matches_ct() {
+        let mut rng = XorShift::new(31);
+        for &(l, r) in &[(64usize, 4usize), (256, 16), (1024, 32), (4096, 32)] {
+            let x = rand_complex(&mut rng, l);
+            let got = bailey_fft(&x, r, BaileyVariant::Vector);
+            let want = fft(&x);
+            let d = max_abs_diff_c(&got, &want);
+            assert!(d < 1e-8, "L={l} R={r}: diff={d}");
+        }
+    }
+
+    #[test]
+    fn gemm_variant_matches_ct() {
+        let mut rng = XorShift::new(32);
+        for &(l, r) in &[(64usize, 8usize), (512, 32), (2048, 32)] {
+            let x = rand_complex(&mut rng, l);
+            let got = bailey_fft(&x, r, BaileyVariant::Gemm);
+            let want = fft(&x);
+            let d = max_abs_diff_c(&got, &want);
+            assert!(d < 1e-8, "L={l} R={r}: diff={d}");
+        }
+    }
+
+    #[test]
+    fn non_divisible_recursion_levels() {
+        // L = 2^11, R = 32 = 2^5: log_R L is not an integer; the recursion
+        // must still be exact because rows fall back to smaller tiles.
+        let mut rng = XorShift::new(33);
+        let x = rand_complex(&mut rng, 2048);
+        let got = bailey_fft(&x, 32, BaileyVariant::Vector);
+        let want = dft(&to_complex(&crate::fft::to_real(&x))); // not equal input; use fft
+        let want_ct = fft(&x);
+        let _ = want;
+        assert!(max_abs_diff_c(&got, &want_ct) < 1e-8);
+    }
+
+    #[test]
+    fn single_tile_base_case() {
+        let mut rng = XorShift::new(34);
+        let x = rand_complex(&mut rng, 32);
+        let got = bailey_fft(&x, 32, BaileyVariant::Gemm);
+        assert!(max_abs_diff_c(&got, &fft(&x)) < 1e-9);
+    }
+
+    #[test]
+    fn input_shorter_than_tile() {
+        let mut rng = XorShift::new(35);
+        let x = rand_complex(&mut rng, 8);
+        let got = bailey_fft(&x, 32, BaileyVariant::Vector);
+        assert!(max_abs_diff_c(&got, &fft(&x)) < 1e-10);
+    }
+
+    #[test]
+    fn tile_count_single_level() {
+        // L = R^2: C = R columns + R rows of length R -> R + R*1 = 2R tiles.
+        assert_eq!(tile_count(1024, 32), 32 + 32);
+        assert_eq!(tile_count(32, 32), 1);
+    }
+
+    #[test]
+    fn prop_bailey_matches_fft() {
+        prop::quick(
+            "bailey == fft",
+            |rng| {
+                let l = 1usize << rng.range(5, 12);
+                let r = 1usize << rng.range(2, 5);
+                let xs = rng.vec(2 * l, -1.0, 1.0);
+                (l, r, xs)
+            },
+            prop::no_shrink,
+            |(l, r, xs)| {
+                let x: Vec<C64> = (0..*l)
+                    .map(|i| C64::new(xs[2 * i], xs[2 * i + 1]))
+                    .collect();
+                for variant in [BaileyVariant::Vector, BaileyVariant::Gemm] {
+                    let d = max_abs_diff_c(&bailey_fft(&x, *r, variant), &fft(&x));
+                    if d > 1e-7 {
+                        return Err(format!("L={l} R={r} {variant:?}: diff {d}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

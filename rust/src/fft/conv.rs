@@ -1,0 +1,153 @@
+//! FFT-based convolution — the Hyena decoder's core operator (paper Fig. 3B).
+//!
+//! Each Hyena "attention-replacement" computes `y = iFFT(FFT(u) ⊙ FFT(k))`:
+//! two forward transforms, an elementwise (gating) multiply in frequency
+//! domain, and one inverse transform. These functions are the golden model
+//! for the Pallas `fftconv` kernel and for the PCU-simulator FFT programs.
+
+use super::{cooley_tukey::{fft, ifft}, is_pow2, to_complex, to_real};
+use crate::util::C64;
+
+/// Circular convolution of two equal-length real signals via FFT.
+///
+/// `y[n] = Σ_m u[m]·k[(n-m) mod N]`; N must be a power of two.
+pub fn fft_conv_circular(u: &[f64], k: &[f64]) -> Vec<f64> {
+    assert_eq!(u.len(), k.len(), "fft_conv_circular: length mismatch");
+    assert!(is_pow2(u.len()), "fft_conv_circular: length must be 2^k");
+    let fu = fft(&to_complex(u));
+    let fk = fft(&to_complex(k));
+    let prod: Vec<C64> = fu.iter().zip(&fk).map(|(&a, &b)| a * b).collect();
+    to_real(&ifft(&prod))
+}
+
+/// Causal/linear convolution of a length-L signal with a length-L filter,
+/// truncated to the first L outputs (Hyena's long-convolution semantics:
+/// the FFT is zero-padded to 2L to avoid wrap-around).
+pub fn fft_conv_linear(u: &[f64], k: &[f64]) -> Vec<f64> {
+    assert_eq!(u.len(), k.len(), "fft_conv_linear: length mismatch");
+    let l = u.len();
+    let n = (2 * l).next_power_of_two();
+    let mut up = vec![0.0; n];
+    let mut kp = vec![0.0; n];
+    up[..l].copy_from_slice(u);
+    kp[..l].copy_from_slice(k);
+    let out = fft_conv_circular(&up, &kp);
+    out[..l].to_vec()
+}
+
+/// Direct O(N²) circular convolution (oracle).
+pub fn direct_conv_circular(u: &[f64], k: &[f64]) -> Vec<f64> {
+    let n = u.len();
+    assert_eq!(n, k.len());
+    let mut y = vec![0.0; n];
+    for (out_idx, yo) in y.iter_mut().enumerate() {
+        let mut acc = 0.0;
+        for m in 0..n {
+            acc += u[m] * k[(out_idx + n - m) % n];
+        }
+        *yo = acc;
+    }
+    y
+}
+
+/// Direct O(N²) causal linear convolution, truncated to N outputs (oracle).
+pub fn direct_conv_linear(u: &[f64], k: &[f64]) -> Vec<f64> {
+    let n = u.len();
+    assert_eq!(n, k.len());
+    let mut y = vec![0.0; n];
+    for (out_idx, yo) in y.iter_mut().enumerate() {
+        let mut acc = 0.0;
+        for m in 0..=out_idx {
+            acc += u[m] * k[out_idx - m];
+        }
+        *yo = acc;
+    }
+    y
+}
+
+/// FLOPs of a Hyena FFT-convolution over L points (paper convention):
+/// three L'-point transforms (two forward + one inverse, L' = 2L padded)
+/// plus the elementwise complex product.
+pub fn fftconv_flops(l: usize, variant: super::BaileyVariant, r: usize) -> f64 {
+    let n = (2 * l).next_power_of_two();
+    let fft_cost = match variant {
+        super::BaileyVariant::Vector => super::vector_fft_flops(n),
+        super::BaileyVariant::Gemm => super::gemm_fft_flops(n, r),
+    };
+    3.0 * fft_cost + 6.0 * n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{max_abs_diff, prop, XorShift};
+
+    #[test]
+    fn circular_matches_direct() {
+        let mut rng = XorShift::new(41);
+        let u = rng.vec(64, -1.0, 1.0);
+        let k = rng.vec(64, -1.0, 1.0);
+        let d = max_abs_diff(&fft_conv_circular(&u, &k), &direct_conv_circular(&u, &k));
+        assert!(d < 1e-10, "diff={d}");
+    }
+
+    #[test]
+    fn linear_matches_direct() {
+        let mut rng = XorShift::new(42);
+        let u = rng.vec(100, -1.0, 1.0); // deliberately non-pow2
+        let k = rng.vec(100, -1.0, 1.0);
+        let d = max_abs_diff(&fft_conv_linear(&u, &k), &direct_conv_linear(&u, &k));
+        assert!(d < 1e-9, "diff={d}");
+    }
+
+    #[test]
+    fn identity_filter_is_noop() {
+        let mut rng = XorShift::new(43);
+        let u = rng.vec(32, -1.0, 1.0);
+        let mut k = vec![0.0; 32];
+        k[0] = 1.0;
+        let y = fft_conv_linear(&u, &k);
+        assert!(max_abs_diff(&y, &u) < 1e-11);
+    }
+
+    #[test]
+    fn shift_filter_delays() {
+        let mut u = vec![0.0; 16];
+        u[3] = 1.0;
+        let mut k = vec![0.0; 16];
+        k[2] = 1.0;
+        let y = fft_conv_linear(&u, &k);
+        let mut want = vec![0.0; 16];
+        want[5] = 1.0;
+        assert!(max_abs_diff(&y, &want) < 1e-11);
+    }
+
+    #[test]
+    fn fftconv_flop_counts_scale() {
+        // Vector variant ~ 15 N log2 N; GEMM variant = R/log2R times more FFT work.
+        let l = 1 << 16;
+        let v = fftconv_flops(l, crate::fft::BaileyVariant::Vector, 32);
+        let g = fftconv_flops(l, crate::fft::BaileyVariant::Gemm, 32);
+        assert!(g / v > 6.0 && g / v < 6.5, "ratio={}", g / v);
+    }
+
+    #[test]
+    fn prop_linear_conv_matches_direct() {
+        prop::quick(
+            "fftconv == direct",
+            |rng| {
+                let n = rng.range(1, 200);
+                (rng.vec(n, -1.0, 1.0), rng.vec(n, -1.0, 1.0))
+            },
+            prop::no_shrink,
+            |(u, k)| {
+                let d = max_abs_diff(&fft_conv_linear(u, k), &direct_conv_linear(u, k));
+                if d < 1e-8 {
+                    Ok(())
+                } else {
+                    Err(format!("diff {d}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,160 @@
+//! Radix-2 Cooley–Tukey FFT (decimation in time, iterative, in-place).
+//!
+//! This is the algorithm whose *variable-distance butterflies* motivate the
+//! paper's FFT-mode PCU: stage `s` exchanges elements at distance `2^s`,
+//! which a SIMD pipeline without cross-lane links cannot route (§III-B).
+
+use crate::util::C64;
+use std::f64::consts::PI;
+
+/// In-place bit-reversal permutation.
+fn bit_reverse_permute(x: &mut [C64]) {
+    let n = x.len();
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = (i as u32).reverse_bits() >> (32 - bits);
+        let j = j as usize;
+        if j > i {
+            x.swap(i, j);
+        }
+    }
+}
+
+/// Forward radix-2 FFT. `x.len()` must be a power of two.
+pub fn fft(x: &[C64]) -> Vec<C64> {
+    let mut buf = x.to_vec();
+    fft_in_place(&mut buf);
+    buf
+}
+
+/// Forward radix-2 FFT, in place.
+pub fn fft_in_place(x: &mut [C64]) {
+    let n = x.len();
+    assert!(super::is_pow2(n), "fft: length {n} is not a power of two");
+    if n == 1 {
+        return;
+    }
+    bit_reverse_permute(x);
+    // Precompute per-stage twiddles lazily: stage `len` uses w = e^{-2πi/len}.
+    let mut len = 2;
+    while len <= n {
+        let ang = -2.0 * PI / len as f64;
+        let wlen = C64::cis(ang);
+        let half = len / 2;
+        for start in (0..n).step_by(len) {
+            let mut w = C64::ONE;
+            for k in 0..half {
+                let a = x[start + k];
+                let b = x[start + k + half] * w;
+                x[start + k] = a + b;
+                x[start + k + half] = a - b;
+                w = w * wlen;
+            }
+        }
+        len <<= 1;
+    }
+}
+
+/// Inverse FFT via conjugation: `ifft(x) = conj(fft(conj(x)))/N`.
+pub fn ifft(x: &[C64]) -> Vec<C64> {
+    let n = x.len() as f64;
+    let conj: Vec<C64> = x.iter().map(|z| z.conj()).collect();
+    fft(&conj).into_iter().map(|z| z.conj().scale(1.0 / n)).collect()
+}
+
+/// Number of butterfly operations in an N-point radix-2 FFT: `N/2·log₂N`.
+pub fn butterfly_count(n: usize) -> usize {
+    assert!(super::is_pow2(n));
+    n / 2 * n.trailing_zeros() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::{dft::dft, to_complex};
+    use crate::util::complex::max_abs_diff_c;
+    use crate::util::{prop, XorShift};
+
+    #[test]
+    fn matches_dft_small_sizes() {
+        let mut rng = XorShift::new(21);
+        for logn in 0..=10 {
+            let n = 1 << logn;
+            let x = to_complex(&rng.vec(n, -1.0, 1.0));
+            let got = fft(&x);
+            let want = dft(&x);
+            assert!(
+                max_abs_diff_c(&got, &want) < 1e-8,
+                "n={n}: diff={}",
+                max_abs_diff_c(&got, &want)
+            );
+        }
+    }
+
+    #[test]
+    fn ifft_inverts_fft() {
+        let mut rng = XorShift::new(22);
+        let x: Vec<_> = (0..256)
+            .map(|_| crate::util::C64::new(rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0)))
+            .collect();
+        let rt = ifft(&fft(&x));
+        assert!(max_abs_diff_c(&x, &rt) < 1e-10);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a power of two")]
+    fn non_pow2_rejected() {
+        fft(&vec![C64::ZERO; 24]);
+    }
+
+    #[test]
+    fn butterfly_count_formula() {
+        assert_eq!(butterfly_count(8), 12);
+        assert_eq!(butterfly_count(1024), 512 * 10);
+    }
+
+    #[test]
+    fn prop_fft_equals_dft_random_lengths() {
+        prop::quick(
+            "fft == dft",
+            |r| {
+                let n = 1usize << r.range(0, 8);
+                r.vec(n, -2.0, 2.0)
+            },
+            prop::shrink_vec_f64,
+            |xs| {
+                if !crate::fft::is_pow2(xs.len()) {
+                    return Ok(()); // shrinker may produce non-pow2; skip
+                }
+                let x = to_complex(xs);
+                let d = max_abs_diff_c(&fft(&x), &dft(&x));
+                if d < 1e-7 {
+                    Ok(())
+                } else {
+                    Err(format!("diff {d}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_parseval() {
+        prop::quick(
+            "parseval",
+            |r| { let n = 1usize << r.range(1, 9); r.vec(n, -1.0, 1.0) },
+            prop::no_shrink,
+            |xs| {
+                let x = to_complex(xs);
+                let y = fft(&x);
+                let ex: f64 = x.iter().map(|z| z.abs().powi(2)).sum();
+                let ey: f64 =
+                    y.iter().map(|z| z.abs().powi(2)).sum::<f64>() / x.len() as f64;
+                if (ex - ey).abs() < 1e-7 * ex.max(1.0) {
+                    Ok(())
+                } else {
+                    Err(format!("energy {ex} vs {ey}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,134 @@
+//! Naive O(N²) discrete Fourier transform — the numerical ground truth every
+//! FFT variant (and the Pallas kernels, transitively) is checked against.
+
+use crate::util::C64;
+use std::f64::consts::PI;
+
+/// Forward DFT: `X[k] = Σ_n x[n]·e^{-2πi·kn/N}`.
+///
+/// O(N²); intended for oracle use at small-to-moderate N.
+pub fn dft(x: &[C64]) -> Vec<C64> {
+    let n = x.len();
+    let mut out = vec![C64::ZERO; n];
+    for (k, o) in out.iter_mut().enumerate() {
+        let mut acc = C64::ZERO;
+        for (j, &xj) in x.iter().enumerate() {
+            // e^{-2πi·kj/n}; compute the angle mod n to bound error at large kj.
+            let angle = -2.0 * PI * ((k * j) % n) as f64 / n as f64;
+            acc += xj * C64::cis(angle);
+        }
+        *o = acc;
+    }
+    out
+}
+
+/// Inverse DFT: `x[n] = (1/N)·Σ_k X[k]·e^{+2πi·kn/N}`.
+pub fn idft(x: &[C64]) -> Vec<C64> {
+    let n = x.len();
+    let mut out = vec![C64::ZERO; n];
+    for (k, o) in out.iter_mut().enumerate() {
+        let mut acc = C64::ZERO;
+        for (j, &xj) in x.iter().enumerate() {
+            let angle = 2.0 * PI * ((k * j) % n) as f64 / n as f64;
+            acc += xj * C64::cis(angle);
+        }
+        *o = acc.scale(1.0 / n as f64);
+    }
+    out
+}
+
+/// The dense R×R DFT matrix, row-major — this is exactly the operand the
+/// GEMM-FFT variant feeds to a systolic array / tensor core.
+pub fn dft_matrix(r: usize) -> Vec<C64> {
+    let mut m = vec![C64::ZERO; r * r];
+    for k in 0..r {
+        for j in 0..r {
+            m[k * r + j] = C64::cis(-2.0 * PI * ((k * j) % r) as f64 / r as f64);
+        }
+    }
+    m
+}
+
+/// Apply the dense DFT matrix to a vector: the GEMM formulation of an
+/// R-point Fourier transform (O(R²) complex MACs).
+pub fn dft_by_matmul(m: &[C64], x: &[C64]) -> Vec<C64> {
+    let r = x.len();
+    assert_eq!(m.len(), r * r, "dft_by_matmul: matrix/vector size mismatch");
+    let mut out = vec![C64::ZERO; r];
+    for k in 0..r {
+        let mut acc = C64::ZERO;
+        for j in 0..r {
+            acc += m[k * r + j] * x[j];
+        }
+        out[k] = acc;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::to_complex;
+    use crate::util::complex::max_abs_diff_c;
+    use crate::util::XorShift;
+
+    #[test]
+    fn dft_of_impulse_is_flat() {
+        let mut x = vec![C64::ZERO; 8];
+        x[0] = C64::ONE;
+        let y = dft(&x);
+        for z in y {
+            assert!((z - C64::ONE).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dft_of_constant_is_impulse() {
+        let x = vec![C64::ONE; 8];
+        let y = dft(&x);
+        assert!((y[0] - C64::real(8.0)).abs() < 1e-12);
+        for z in &y[1..] {
+            assert!(z.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn idft_inverts_dft() {
+        let mut rng = XorShift::new(5);
+        let x = to_complex(&rng.vec(16, -1.0, 1.0));
+        let rt = idft(&dft(&x));
+        assert!(max_abs_diff_c(&x, &rt) < 1e-12);
+    }
+
+    #[test]
+    fn dft_matrix_matches_direct_dft() {
+        let mut rng = XorShift::new(6);
+        let x = to_complex(&rng.vec(32, -1.0, 1.0));
+        let m = dft_matrix(32);
+        let via_matmul = dft_by_matmul(&m, &x);
+        let direct = dft(&x);
+        assert!(max_abs_diff_c(&via_matmul, &direct) < 1e-10);
+    }
+
+    #[test]
+    fn parseval_energy_preserved() {
+        let mut rng = XorShift::new(7);
+        let x = to_complex(&rng.vec(64, -1.0, 1.0));
+        let y = dft(&x);
+        let ex: f64 = x.iter().map(|z| z.abs().powi(2)).sum();
+        let ey: f64 = y.iter().map(|z| z.abs().powi(2)).sum::<f64>() / 64.0;
+        assert!((ex - ey).abs() < 1e-9, "ex={ex} ey={ey}");
+    }
+
+    #[test]
+    fn linearity() {
+        let mut rng = XorShift::new(8);
+        let a = to_complex(&rng.vec(16, -1.0, 1.0));
+        let b = to_complex(&rng.vec(16, -1.0, 1.0));
+        let sum: Vec<C64> = a.iter().zip(&b).map(|(&x, &y)| x + y).collect();
+        let lhs = dft(&sum);
+        let (da, db) = (dft(&a), dft(&b));
+        let rhs: Vec<C64> = da.iter().zip(&db).map(|(&x, &y)| x + y).collect();
+        assert!(max_abs_diff_c(&lhs, &rhs) < 1e-10);
+    }
+}

@@ -1,0 +1,92 @@
+//! FFT algorithm substrate (paper §III-A).
+//!
+//! Implements every FFT variant the paper discusses, with real numerics used
+//! both as correctness oracles for the Pallas kernels (L1) and as functional
+//! golden models for the cycle-level PCU simulator:
+//!
+//! * [`dft`] — naive O(N²) discrete Fourier transform (the ground truth).
+//! * [`cooley_tukey`] — radix-2 Cooley–Tukey FFT, the classic
+//!   O(N log₂ N) algorithm with variable-distance butterflies.
+//! * [`bailey`] — Bailey's 4-step FFT: reshape to 2-D, column FFTs, twiddle
+//!   scaling, row FFTs. Two variants per the paper:
+//!   **Vector-FFT** (R-point tiles via Cooley–Tukey, optimal
+//!   O(N log₂ N) FLOPs, needs butterfly interconnects) and
+//!   **GEMM-FFT** (R-point tiles via dense DFT matrix multiplication,
+//!   O(N·R·log_R N) FLOPs, maps onto systolic/tensor-core hardware).
+//! * [`conv`] — FFT-based (circular and linear) convolution, the Hyena
+//!   decoder's core operator.
+//!
+//! FLOP accounting follows the paper's convention (§III-A): a Vector-FFT of
+//! length L costs `5·L·log₂L`, a GEMM-FFT costs `5·L·R·log_R L` — i.e. the
+//! GEMM variant is exactly `R/log₂R`× more work (6.4× at R=32).
+
+pub mod bailey;
+pub mod conv;
+pub mod cooley_tukey;
+pub mod dft;
+
+pub use bailey::{bailey_fft, BaileyVariant};
+pub use conv::{fft_conv_circular, fft_conv_linear};
+pub use cooley_tukey::{fft, ifft};
+pub use dft::dft;
+
+use crate::util::C64;
+
+/// FLOPs of an L-point Vector-FFT (Cooley–Tukey butterflies): `5·L·log₂L`.
+///
+/// Paper convention: each of the `L/2·log₂L` butterflies is one complex
+/// multiply (6 flops) + two complex adds (4 flops) = 10 flops.
+pub fn vector_fft_flops(l: usize) -> f64 {
+    let l = l as f64;
+    5.0 * l * l.log2()
+}
+
+/// FLOPs of an L-point GEMM-FFT built from R-point dense DFTs:
+/// `5·L·R·log_R L` — `R/log₂R`× the Vector-FFT count (paper: ~6.4× at R=32).
+pub fn gemm_fft_flops(l: usize, r: usize) -> f64 {
+    let (lf, rf) = (l as f64, r as f64);
+    5.0 * lf * rf * (lf.log2() / rf.log2())
+}
+
+/// Check `n` is a power of two (required by the radix-2 substrate).
+pub fn is_pow2(n: usize) -> bool {
+    n != 0 && n & (n - 1) == 0
+}
+
+/// Convert a real slice to complex.
+pub fn to_complex(xs: &[f64]) -> Vec<C64> {
+    xs.iter().map(|&x| C64::real(x)).collect()
+}
+
+/// Real parts of a complex slice (imaginary parts must be numerically zero
+/// for the conversion to be meaningful; not enforced here).
+pub fn to_real(xs: &[C64]) -> Vec<f64> {
+    xs.iter().map(|z| z.re).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flop_ratio_matches_paper() {
+        // Paper §III-A: GEMM-FFT is ~6.4x more FLOPs at R=32.
+        let l = 1 << 20;
+        let ratio = gemm_fft_flops(l, 32) / vector_fft_flops(l);
+        assert!((ratio - 6.4).abs() < 1e-9, "ratio={ratio}");
+    }
+
+    #[test]
+    fn pow2_detection() {
+        assert!(is_pow2(1));
+        assert!(is_pow2(1 << 20));
+        assert!(!is_pow2(0));
+        assert!(!is_pow2(24));
+    }
+
+    #[test]
+    fn complex_roundtrip() {
+        let xs = [1.0, -2.0, 3.5];
+        assert_eq!(to_real(&to_complex(&xs)), xs.to_vec());
+    }
+}

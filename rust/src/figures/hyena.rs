@@ -1,0 +1,156 @@
+//! Figure 7: FLOP count and latency of the four Hyena-side designs across
+//! the paper's sequence-length sweep.
+//!
+//! Designs (paper §III-C): (1) attention on baseline RDU, (2) Vector-FFT
+//! Hyena on baseline, (3) GEMM-FFT Hyena on baseline, (4) Vector-FFT Hyena
+//! on the FFT-mode RDU. Paper speedups: D1→D2 217.74×, D2→D3 2.61×,
+//! D3→D4 1.95×.
+
+use super::{seq_label, speedup_table, SpeedupRow, PAPER_SEQ_LENS};
+use crate::arch::RduConfig;
+use crate::dfmodel;
+use crate::fft::BaileyVariant;
+use crate::util::table::Table;
+use crate::util::{eng, fmt_time};
+use crate::workloads::{attention_decoder, hyena_decoder, DecoderConfig};
+
+/// One design point at one sequence length.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DesignPoint {
+    pub design: &'static str,
+    pub seq_len: usize,
+    pub flops: f64,
+    pub latency: f64,
+    /// Latency attributed to the FFT/attention core vs the rest.
+    pub core_latency: f64,
+}
+
+/// The full Fig. 7 dataset.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Fig7 {
+    pub points: Vec<DesignPoint>,
+    pub speedups: Vec<SpeedupRow>,
+}
+
+/// Paper Fig. 7 design labels.
+pub const DESIGNS: [&str; 4] = [
+    "(1) attention / baseline RDU",
+    "(2) vector-fft hyena / baseline RDU",
+    "(3) gemm-fft hyena / baseline RDU",
+    "(4) vector-fft hyena / fft-mode RDU",
+];
+
+fn core_pred(k: &dfmodel::KernelEstimate) -> bool {
+    k.name.contains("fft") || k.name.starts_with("attn.")
+}
+
+/// Compute the Fig. 7 dataset over `seq_lens`.
+pub fn fig7_at(seq_lens: &[usize]) -> Fig7 {
+    let base = RduConfig::baseline();
+    let fftm = RduConfig::fft_mode();
+    let mut points = Vec::new();
+    let mut per_len_latencies: Vec<[f64; 4]> = Vec::new();
+
+    for &l in seq_lens {
+        let dc = DecoderConfig::paper(l);
+        let graphs_cfgs = [
+            (attention_decoder(&dc), &base),
+            (hyena_decoder(&dc, BaileyVariant::Vector), &base),
+            (hyena_decoder(&dc, BaileyVariant::Gemm), &base),
+            (hyena_decoder(&dc, BaileyVariant::Vector), &fftm),
+        ];
+        let mut lat = [0f64; 4];
+        for (i, (g, cfg)) in graphs_cfgs.iter().enumerate() {
+            let est = dfmodel::estimate(g, cfg).expect("mappable");
+            lat[i] = est.total_seconds;
+            points.push(DesignPoint {
+                design: DESIGNS[i],
+                seq_len: l,
+                flops: g.total_flops(),
+                latency: est.total_seconds,
+                core_latency: est.share_where(core_pred),
+            });
+        }
+        per_len_latencies.push(lat);
+    }
+
+    // Speedups at the largest swept length (the paper reports them as
+    // constant across lengths; integration tests check the stability).
+    let lat = per_len_latencies.last().expect("non-empty sweep");
+    let speedups = vec![
+        SpeedupRow::new("design 2 over design 1", 217.74, lat[0] / lat[1]),
+        SpeedupRow::new("design 3 over design 2", 2.61, lat[1] / lat[2]),
+        SpeedupRow::new("design 4 over design 3", 1.95, lat[2] / lat[3]),
+    ];
+    Fig7 { points, speedups }
+}
+
+/// The paper's exact sweep.
+pub fn fig7() -> Fig7 {
+    fig7_at(&PAPER_SEQ_LENS)
+}
+
+impl Fig7 {
+    /// Latency of design `d` (0-based) at `seq_len`.
+    pub fn latency(&self, d: usize, seq_len: usize) -> f64 {
+        self.points
+            .iter()
+            .find(|p| p.design == DESIGNS[d] && p.seq_len == seq_len)
+            .map(|p| p.latency)
+            .expect("design point present")
+    }
+
+    /// Render the per-design table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "Fig. 7 — Hyena designs: FLOP count and latency (DFModel)",
+            &["Design", "L", "FLOPs", "Latency", "core", "rest"],
+        );
+        for p in &self.points {
+            t.row(&[
+                p.design.to_string(),
+                seq_label(p.seq_len),
+                eng(p.flops),
+                fmt_time(p.latency),
+                fmt_time(p.core_latency),
+                fmt_time(p.latency - p.core_latency),
+            ]);
+        }
+        t
+    }
+
+    /// Render the paper-vs-measured speedups.
+    pub fn speedup_report(&self) -> Table {
+        speedup_table("Fig. 7 — design speedups, paper vs measured", &self.speedups)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_small_sweep_ordering() {
+        // Use smaller lengths to keep the test fast; ordering must hold.
+        let f = fig7_at(&[1 << 16, 1 << 17]);
+        for &l in &[1 << 16, 1 << 17] {
+            let d: Vec<f64> = (0..4).map(|i| f.latency(i, l)).collect();
+            assert!(d[0] > d[1] && d[1] > d[2] && d[2] > d[3], "L={l}: {d:?}");
+        }
+    }
+
+    #[test]
+    fn speedups_all_positive() {
+        let f = fig7_at(&[1 << 16]);
+        for s in &f.speedups {
+            assert!(s.measured > 1.0, "{}: {}", s.label, s.measured);
+        }
+    }
+
+    #[test]
+    fn tables_render() {
+        let f = fig7_at(&[1 << 16]);
+        assert!(f.table().render().contains("vector-fft"));
+        assert!(f.speedup_report().render().contains("217.74x"));
+    }
+}

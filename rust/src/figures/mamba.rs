@@ -1,0 +1,223 @@
+//! Figures 11 and 12: the Mamba-side evaluation.
+//!
+//! Fig. 11 (paper §IV-C): five designs — (1) attention/baseline, (2) C-scan
+//! Mamba/baseline, (3) parallel-scan Mamba/baseline, (4) parallel-scan on
+//! HS-scan-mode RDU, (5) parallel-scan on B-scan-mode RDU. Paper speedups:
+//! D1→D2 7.34×, D2→D3 562.98×, D3→D4,5 1.75×, D4 ≡ D5.
+//!
+//! Fig. 12: parallel-scan Mamba on GPU vs scan-mode RDU — paper 2.12×.
+
+use super::{seq_label, speedup_table, SpeedupRow, PAPER_SEQ_LENS};
+use crate::arch::{GpuSpec, RduConfig};
+use crate::dfmodel;
+use crate::gpu;
+use crate::util::table::Table;
+use crate::util::{eng, fmt_time};
+use crate::workloads::{attention_decoder, mamba_decoder, DecoderConfig, ScanVariant};
+
+/// One design point at one sequence length.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DesignPoint {
+    pub design: &'static str,
+    pub seq_len: usize,
+    pub flops: f64,
+    pub latency: f64,
+    /// Latency attributed to the scan/attention core.
+    pub core_latency: f64,
+}
+
+/// The Fig. 11 dataset.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Fig11 {
+    pub points: Vec<DesignPoint>,
+    pub speedups: Vec<SpeedupRow>,
+}
+
+/// Paper Fig. 11 design labels.
+pub const DESIGNS: [&str; 5] = [
+    "(1) attention / baseline RDU",
+    "(2) c-scan mamba / baseline RDU",
+    "(3) parallel-scan mamba / baseline RDU",
+    "(4) parallel-scan mamba / hs-scan-mode RDU",
+    "(5) parallel-scan mamba / b-scan-mode RDU",
+];
+
+fn core_pred(k: &dfmodel::KernelEstimate) -> bool {
+    k.name.contains("scan") || k.name.starts_with("attn.")
+}
+
+/// Compute the Fig. 11 dataset over `seq_lens`.
+pub fn fig11_at(seq_lens: &[usize]) -> Fig11 {
+    let base = RduConfig::baseline();
+    let hs = RduConfig::hs_scan_mode();
+    let b = RduConfig::b_scan_mode();
+    let mut points = Vec::new();
+    let mut last = [0f64; 5];
+
+    for &l in seq_lens {
+        let dc = DecoderConfig::paper(l);
+        let cases = [
+            (attention_decoder(&dc), &base),
+            (mamba_decoder(&dc, ScanVariant::CScan), &base),
+            (mamba_decoder(&dc, ScanVariant::Parallel), &base),
+            (mamba_decoder(&dc, ScanVariant::Parallel), &hs),
+            (mamba_decoder(&dc, ScanVariant::Parallel), &b),
+        ];
+        for (i, (g, cfg)) in cases.iter().enumerate() {
+            let est = dfmodel::estimate(g, cfg).expect("mappable");
+            last[i] = est.total_seconds;
+            points.push(DesignPoint {
+                design: DESIGNS[i],
+                seq_len: l,
+                flops: g.total_flops(),
+                latency: est.total_seconds,
+                core_latency: est.share_where(core_pred),
+            });
+        }
+    }
+
+    let speedups = vec![
+        SpeedupRow::new("design 2 over design 1", 7.34, last[0] / last[1]),
+        SpeedupRow::new("design 3 over design 2", 562.98, last[1] / last[2]),
+        SpeedupRow::new("design 4 over design 3", 1.75, last[2] / last[3]),
+        SpeedupRow::new("design 5 over design 4 (≡1.0)", 1.0, last[3] / last[4]),
+    ];
+    Fig11 { points, speedups }
+}
+
+/// The paper's exact sweep.
+pub fn fig11() -> Fig11 {
+    fig11_at(&PAPER_SEQ_LENS)
+}
+
+impl Fig11 {
+    pub fn latency(&self, d: usize, seq_len: usize) -> f64 {
+        self.points
+            .iter()
+            .find(|p| p.design == DESIGNS[d] && p.seq_len == seq_len)
+            .map(|p| p.latency)
+            .expect("design point present")
+    }
+
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "Fig. 11 — Mamba designs: FLOP count and latency (DFModel)",
+            &["Design", "L", "FLOPs", "Latency", "core", "rest"],
+        );
+        for p in &self.points {
+            t.row(&[
+                p.design.to_string(),
+                seq_label(p.seq_len),
+                eng(p.flops),
+                fmt_time(p.latency),
+                fmt_time(p.core_latency),
+                fmt_time(p.latency - p.core_latency),
+            ]);
+        }
+        t
+    }
+
+    pub fn speedup_report(&self) -> Table {
+        speedup_table("Fig. 11 — design speedups, paper vs measured", &self.speedups)
+    }
+}
+
+/// The Fig. 12 dataset: GPU vs scan-mode RDU on parallel-scan Mamba.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Fig12 {
+    pub seq_len: usize,
+    pub gpu_latency: f64,
+    pub gpu_compute_latency: f64,
+    pub rdu_latency: f64,
+    pub speedups: Vec<SpeedupRow>,
+}
+
+/// Compute Fig. 12 at one sequence length.
+pub fn fig12_at(seq_len: usize) -> Fig12 {
+    let dc = DecoderConfig::paper(seq_len);
+    let g = mamba_decoder(&dc, ScanVariant::Parallel);
+    let gpu_est = gpu::estimate(&g, &GpuSpec::a100());
+    let rdu_est = dfmodel::estimate(&g, &RduConfig::hs_scan_mode()).expect("mappable");
+    let speedups = vec![
+        SpeedupRow::new(
+            "scan-mode RDU over GPU (full kernel-by-kernel model)",
+            2.12,
+            gpu_est.total_seconds / rdu_est.total_seconds,
+        ),
+        // The paper's DFModel GPU appears compute-dominated at these shapes;
+        // the compute-only ratio is the closer analogue (see EXPERIMENTS.md).
+        SpeedupRow::new(
+            "scan-mode RDU over GPU (compute-only)",
+            2.12,
+            gpu_est.compute_seconds / rdu_est.total_seconds,
+        ),
+    ];
+    Fig12 {
+        seq_len,
+        gpu_latency: gpu_est.total_seconds,
+        gpu_compute_latency: gpu_est.compute_seconds,
+        rdu_latency: rdu_est.total_seconds,
+        speedups,
+    }
+}
+
+/// The paper's largest swept length.
+pub fn fig12() -> Fig12 {
+    fig12_at(*PAPER_SEQ_LENS.last().unwrap())
+}
+
+impl Fig12 {
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "Fig. 12 — parallel-scan Mamba: GPU vs scan-mode RDU",
+            &["Platform", "L", "Latency"],
+        );
+        t.row(&[
+            "NVIDIA A100 (kernel-by-kernel)".into(),
+            seq_label(self.seq_len),
+            fmt_time(self.gpu_latency),
+        ]);
+        t.row(&[
+            "NVIDIA A100 (compute only)".into(),
+            seq_label(self.seq_len),
+            fmt_time(self.gpu_compute_latency),
+        ]);
+        t.row(&["scan-mode RDU (dataflow)".into(), seq_label(self.seq_len), fmt_time(self.rdu_latency)]);
+        t
+    }
+
+    pub fn speedup_report(&self) -> Table {
+        speedup_table("Fig. 12 — RDU-over-GPU speedup, paper vs measured", &self.speedups)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig11_ordering_and_hs_b_parity() {
+        // Needs a paper-regime length: below L ≈ 1e5 the quadratic
+        // attention is still cheaper than the serial C-scan (the crossover
+        // the paper's long-sequence motivation is about).
+        let f = fig11_at(&[1 << 18]);
+        let d: Vec<f64> = (0..5).map(|i| f.latency(i, 1 << 18)).collect();
+        assert!(d[0] > d[1] && d[1] > d[2] && d[2] > d[3], "{d:?}");
+        assert!((d[3] - d[4]).abs() / d[3] < 0.01, "HS ≡ B: {d:?}");
+    }
+
+    #[test]
+    fn fig12_rdu_beats_gpu() {
+        let f = fig12_at(1 << 16);
+        assert!(f.rdu_latency < f.gpu_latency);
+        assert!(f.speedups[0].measured > 1.0);
+    }
+
+    #[test]
+    fn tables_render() {
+        let f = fig11_at(&[1 << 16]);
+        assert!(f.table().render().contains("c-scan"));
+        let g = fig12_at(1 << 16);
+        assert!(g.table().render().contains("A100"));
+    }
+}

@@ -1,0 +1,91 @@
+//! Reproduction of every table and figure in the paper's evaluation —
+//! shared by the CLI (`ssm-rdu fig7 …`), the benches (`cargo bench`) and
+//! the integration tests, so all three always report the same numbers.
+//!
+//! Each function returns a data struct plus a rendered table carrying
+//! paper-vs-measured columns; EXPERIMENTS.md records the runs.
+
+pub mod hyena;
+pub mod mamba;
+pub mod overheads;
+pub mod platforms;
+
+pub use hyena::{fig7, Fig7};
+pub use mamba::{fig11, fig12, Fig11, Fig12};
+pub use overheads::table4;
+pub use platforms::{fig8, Fig8};
+
+use crate::arch::RduSpec;
+use crate::util::table::Table;
+
+/// Table I: the RDU architectural specification.
+pub fn table1() -> Table {
+    RduSpec::table1().table1_report()
+}
+
+/// The paper's sequence-length sweep, in tokens.
+pub const PAPER_SEQ_LENS: [usize; 3] = [256 * 1024, 512 * 1024, 1024 * 1024];
+
+/// Pretty "256K/512K/1M" labels for the sweep.
+pub fn seq_label(l: usize) -> String {
+    if l >= 1024 * 1024 && l.is_multiple_of(1024 * 1024) {
+        format!("{}M", l / (1024 * 1024))
+    } else {
+        format!("{}K", l / 1024)
+    }
+}
+
+/// A paper-vs-measured speedup comparison row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpeedupRow {
+    pub label: String,
+    pub paper: f64,
+    pub measured: f64,
+}
+
+impl SpeedupRow {
+    pub fn new(label: &str, paper: f64, measured: f64) -> Self {
+        Self { label: label.to_string(), paper, measured }
+    }
+
+    /// measured / paper ratio — 1.0 means exact reproduction.
+    pub fn fidelity(&self) -> f64 {
+        self.measured / self.paper
+    }
+}
+
+/// Render a block of speedup rows.
+pub fn speedup_table(title: &str, rows: &[SpeedupRow]) -> Table {
+    let mut t = Table::new(title, &["Speedup", "Paper", "Measured", "Measured/Paper"]);
+    for r in rows {
+        t.row(&[
+            r.label.clone(),
+            format!("{:.2}x", r.paper),
+            format!("{:.2}x", r.measured),
+            format!("{:.2}", r.fidelity()),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seq_labels() {
+        assert_eq!(seq_label(256 * 1024), "256K");
+        assert_eq!(seq_label(1024 * 1024), "1M");
+    }
+
+    #[test]
+    fn fidelity_math() {
+        let r = SpeedupRow::new("x", 2.0, 3.0);
+        assert_eq!(r.fidelity(), 1.5);
+    }
+
+    #[test]
+    fn table1_renders() {
+        assert!(table1().render().contains("520 PCUs"));
+    }
+}

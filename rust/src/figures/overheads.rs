@@ -1,0 +1,29 @@
+//! Table IV: area and power overheads of the enhanced PCUs — delegated to
+//! the synthesis model, re-exported here so every table/figure lives under
+//! `figures::`.
+
+use crate::synth;
+use crate::util::table::Table;
+
+/// Render Table IV (model vs paper columns).
+pub fn table4() -> Table {
+    synth::table4_report()
+}
+
+/// The raw rows, for assertions.
+pub fn table4_rows() -> Vec<synth::PcuSynthesis> {
+    synth::table4_rows()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_four_rows() {
+        let s = table4().render();
+        for name in ["Baseline", "FFT-Mode", "HS-Scan", "B-Scan"] {
+            assert!(s.contains(name), "{s}");
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! Table II + Figure 8: the Hyena decoder across three platforms — A100
+//! GPU (kernel-by-kernel), VGA ASIC (fixed-function dataflow) and the
+//! FFT-mode RDU (reconfigurable dataflow).
+//!
+//! Paper observations (§III-C): GEMM-FFT — VGA and RDU ≈ 2× over GPU;
+//! Vector-FFT — VGA and RDU ≈ 5.95× over GPU; VGA ≈ RDU on both.
+
+use super::{seq_label, speedup_table, SpeedupRow, PAPER_SEQ_LENS};
+use crate::arch::{GpuSpec, RduConfig, VgaSpec};
+use crate::dfmodel;
+use crate::fft::BaileyVariant;
+use crate::gpu;
+use crate::util::table::Table;
+use crate::util::fmt_time;
+use crate::vga;
+use crate::workloads::{hyena_decoder, DecoderConfig};
+
+/// Latencies of one Hyena variant on the three platforms.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlatformRow {
+    pub variant: &'static str,
+    pub seq_len: usize,
+    pub gpu: f64,
+    pub vga: f64,
+    pub rdu: f64,
+}
+
+/// The Fig. 8 dataset.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Fig8 {
+    pub rows: Vec<PlatformRow>,
+    pub speedups: Vec<SpeedupRow>,
+}
+
+/// Render Table II (platform specifications).
+pub fn table2() -> Table {
+    let g = GpuSpec::a100();
+    let v = VgaSpec::table2();
+    let r = crate::arch::RduSpec::table1();
+    let mut t = Table::new(
+        "TABLE II — architectural specifications of three accelerators",
+        &["", "GPU", "VGA", "FFT RDU"],
+    );
+    t.row(&[
+        "GEMM FP16 TFLOPS".into(),
+        format!("{:.2}", g.tensor_flops / 1e12),
+        format!("{:.2}", v.gemm_flops / 1e12),
+        format!("{:.2}", r.peak_flops() / 1e12),
+    ]);
+    t.row(&[
+        "FFT FP16 TFLOPS".into(),
+        format!("{:.2}", g.cuda_flops / 1e12),
+        format!("{:.2}", v.fft_flops / 1e12),
+        format!("{:.2}", r.peak_flops() / 1e12),
+    ]);
+    t
+}
+
+/// Compute the Fig. 8 dataset over `seq_lens`.
+///
+/// The VGA is "scaled to match the compute throughput of the RDU"
+/// (paper §III-C); we scale it to the RDU's *effective* per-class rates so
+/// the paper's "VGA and RDU achieve similar performance" observation is
+/// reproduced (the Table II nameplate rates are reported by [`table2`]).
+pub fn fig8_at(seq_lens: &[usize]) -> Fig8 {
+    let gpu_spec = GpuSpec::a100();
+    let fftm = RduConfig::fft_mode();
+    // Effective RDU rates, measured from the pcusim-backed throughput table.
+    let probe_fft = crate::graph::Kernel::new(
+        "probe",
+        crate::graph::OpClass::VectorFft,
+        1.0,
+        1.0,
+        1.0,
+    );
+    let eff_fft = match dfmodel::kernel_rate(&probe_fft, &fftm) {
+        dfmodel::Rate::FlopsPerPcu(r) => r * fftm.spec.n_pcu as f64,
+        _ => unreachable!(),
+    };
+    let vga_spec = vga::scaled_to_rdu_effective(eff_fft, fftm.spec.peak_flops());
+
+    let mut rows = Vec::new();
+    let mut last = [[0f64; 3]; 2];
+    for &l in seq_lens {
+        let dc = DecoderConfig::paper(l);
+        for (vi, variant, vname) in [
+            (0usize, BaileyVariant::Gemm, "gemm-fft hyena"),
+            (1, BaileyVariant::Vector, "vector-fft hyena"),
+        ] {
+            let g = hyena_decoder(&dc, variant);
+            let gpu_t = gpu::estimate(&g, &gpu_spec).total_seconds;
+            let vga_t = vga::estimate(&g, &vga_spec).expect("vga runs hyena").total_seconds;
+            let rdu_t = dfmodel::estimate(&g, &fftm).expect("mappable").total_seconds;
+            last[vi] = [gpu_t, vga_t, rdu_t];
+            rows.push(PlatformRow { variant: vname, seq_len: l, gpu: gpu_t, vga: vga_t, rdu: rdu_t });
+        }
+    }
+
+    let speedups = vec![
+        SpeedupRow::new("gemm-fft: RDU over GPU", 2.0, last[0][0] / last[0][2]),
+        SpeedupRow::new("gemm-fft: VGA over GPU", 2.0, last[0][0] / last[0][1]),
+        SpeedupRow::new("vector-fft: RDU over GPU", 5.95, last[1][0] / last[1][2]),
+        SpeedupRow::new("vector-fft: VGA over GPU", 5.95, last[1][0] / last[1][1]),
+        SpeedupRow::new("vector-fft: VGA over RDU (≡1.0)", 1.0, last[1][2] / last[1][1]),
+    ];
+    Fig8 { rows, speedups }
+}
+
+/// The paper's exact sweep.
+pub fn fig8() -> Fig8 {
+    fig8_at(&PAPER_SEQ_LENS)
+}
+
+impl Fig8 {
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "Fig. 8 — Hyena latency across platforms",
+            &["Variant", "L", "GPU", "VGA (scaled)", "FFT-mode RDU"],
+        );
+        for r in &self.rows {
+            t.row(&[
+                r.variant.to_string(),
+                seq_label(r.seq_len),
+                fmt_time(r.gpu),
+                fmt_time(r.vga),
+                fmt_time(r.rdu),
+            ]);
+        }
+        t
+    }
+
+    pub fn speedup_report(&self) -> Table {
+        speedup_table("Fig. 8 — platform speedups, paper vs measured", &self.speedups)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpu_always_slowest() {
+        let f = fig8_at(&[1 << 16]);
+        for r in &f.rows {
+            assert!(r.gpu > r.rdu, "{}: gpu={} rdu={}", r.variant, r.gpu, r.rdu);
+            assert!(r.gpu > r.vga, "{}: gpu={} vga={}", r.variant, r.gpu, r.vga);
+        }
+    }
+
+    #[test]
+    fn vector_fft_gap_larger_than_gemm_fft_gap() {
+        // The paper's core claim: the GPU is *much* worse at Vector-FFT
+        // (CUDA cores) than at GEMM-FFT (tensor cores).
+        let f = fig8_at(&[1 << 16]);
+        let gemm = f.speedups[0].measured;
+        let vec = f.speedups[2].measured;
+        assert!(vec > gemm, "vec={vec} gemm={gemm}");
+    }
+
+    #[test]
+    fn vga_tracks_rdu() {
+        let f = fig8_at(&[1 << 16]);
+        let parity = f.speedups[4].measured;
+        assert!((parity - 1.0).abs() < 0.35, "parity={parity}");
+    }
+
+    #[test]
+    fn table2_matches_paper_numbers() {
+        let s = table2().render();
+        assert!(s.contains("311.87"));
+        assert!(s.contains("77.97"));
+        assert!(s.contains("655.36"));
+        assert!(s.contains("638.98"));
+    }
+}

@@ -1,0 +1,157 @@
+//! Kernel descriptions: the vertices of the workload dataflow graph
+//! (paper Fig. 1A — "vertices represent computation kernels").
+
+use std::fmt;
+
+/// Computational class of a kernel — determines which hardware resource the
+//  kernel maps to on each platform (tensor cores vs CUDA cores on the GPU;
+/// systolic vs FFT-mode vs scan-mode PCUs on the RDU).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpClass {
+    /// Dense matrix multiplication (projections, MLP, attention scores).
+    Gemm,
+    /// R-point DFTs expressed as dense matmuls (Bailey GEMM-FFT, §III-A).
+    GemmFft,
+    /// Radix-2 butterflies (Bailey Vector-FFT, §III-A).
+    VectorFft,
+    /// The sequential C-scan: one element at a time (§IV-A).
+    ScanSerial,
+    /// Parallel scan (Hillis–Steele or Blelloch, §IV-A).
+    ScanParallel,
+    /// Element-wise map (gates, residuals, twiddle scaling, activations).
+    Elementwise,
+    /// Attention softmax (row max, exp, normalize) — a vector-path kernel.
+    Softmax,
+    /// Layer normalization.
+    Norm,
+}
+
+impl OpClass {
+    /// Does this class execute on the GPU's tensor cores (true) or CUDA
+    /// cores (false)? Paper §III-C: "GEMM-FFT operations are executed on
+    /// the tensor cores, while Vector-FFT operations are executed on the
+    /// CUDA cores"; §IV-C: "scans are executed on CUDA cores".
+    pub fn gpu_tensor_core(self) -> bool {
+        matches!(self, OpClass::Gemm | OpClass::GemmFft)
+    }
+
+    /// Short label for tables.
+    pub fn label(self) -> &'static str {
+        match self {
+            OpClass::Gemm => "gemm",
+            OpClass::GemmFft => "gemm-fft",
+            OpClass::VectorFft => "vector-fft",
+            OpClass::ScanSerial => "c-scan",
+            OpClass::ScanParallel => "par-scan",
+            OpClass::Elementwise => "eltwise",
+            OpClass::Softmax => "softmax",
+            OpClass::Norm => "norm",
+        }
+    }
+}
+
+impl fmt::Display for OpClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// One computation kernel: work, tensor-traffic and streaming metadata.
+///
+/// Byte fields describe the kernel's *logical* tensor traffic; how much of
+/// it touches DRAM depends on the execution model (dataflow keeps
+/// intermediates on-chip, kernel-by-kernel stages them — paper Fig. 1B/C).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Kernel {
+    pub name: String,
+    pub op: OpClass,
+    /// Floating-point operations (paper accounting; see `fft`/`scan`).
+    pub flops: f64,
+    /// Bytes of activations read.
+    pub input_bytes: f64,
+    /// Bytes of activations written.
+    pub output_bytes: f64,
+    /// Bytes of resident parameters (weights, filters, twiddles).
+    pub weight_bytes: f64,
+    /// Sequence positions streamed through the kernel (drives the serial
+    /// C-scan latency: one element per cycle, paper §IV-A).
+    pub elements: f64,
+    /// Independent channels the kernel processes (lanes of parallelism
+    /// orthogonal to `elements`).
+    pub channels: f64,
+}
+
+impl Kernel {
+    /// Construct with explicit traffic; `elements`/`channels` default to 0/1.
+    pub fn new(name: &str, op: OpClass, flops: f64, input_bytes: f64, output_bytes: f64) -> Self {
+        Self {
+            name: name.to_string(),
+            op,
+            flops,
+            input_bytes,
+            output_bytes,
+            weight_bytes: 0.0,
+            elements: 0.0,
+            channels: 1.0,
+        }
+    }
+
+    /// Builder: set resident parameter bytes.
+    pub fn with_weights(mut self, bytes: f64) -> Self {
+        self.weight_bytes = bytes;
+        self
+    }
+
+    /// Builder: set streaming extent (elements × channels).
+    pub fn with_stream(mut self, elements: f64, channels: f64) -> Self {
+        self.elements = elements;
+        self.channels = channels;
+        self
+    }
+
+    /// Total logical tensor traffic (reads + writes, excluding weights).
+    pub fn activation_bytes(&self) -> f64 {
+        self.input_bytes + self.output_bytes
+    }
+
+    /// Arithmetic intensity in FLOP/byte over activation traffic.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        if self.activation_bytes() == 0.0 {
+            return f64::INFINITY;
+        }
+        self.flops / self.activation_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpu_core_assignment_matches_paper() {
+        assert!(OpClass::Gemm.gpu_tensor_core());
+        assert!(OpClass::GemmFft.gpu_tensor_core());
+        assert!(!OpClass::VectorFft.gpu_tensor_core());
+        assert!(!OpClass::ScanParallel.gpu_tensor_core());
+        assert!(!OpClass::ScanSerial.gpu_tensor_core());
+        assert!(!OpClass::Softmax.gpu_tensor_core());
+    }
+
+    #[test]
+    fn intensity() {
+        let k = Kernel::new("k", OpClass::Gemm, 1000.0, 100.0, 100.0);
+        assert_eq!(k.arithmetic_intensity(), 5.0);
+        let z = Kernel::new("z", OpClass::Gemm, 1000.0, 0.0, 0.0);
+        assert!(z.arithmetic_intensity().is_infinite());
+    }
+
+    #[test]
+    fn builders() {
+        let k = Kernel::new("k", OpClass::ScanSerial, 10.0, 1.0, 1.0)
+            .with_weights(64.0)
+            .with_stream(1024.0, 32.0);
+        assert_eq!(k.weight_bytes, 64.0);
+        assert_eq!(k.elements, 1024.0);
+        assert_eq!(k.channels, 32.0);
+    }
+}

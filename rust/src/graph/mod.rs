@@ -1,0 +1,290 @@
+//! Workload dataflow-graph IR (paper Fig. 1A): vertices are computation
+//! kernels, edges are tensors. [`crate::workloads`] builds the attention /
+//! Hyena / Mamba decoder graphs; [`crate::dfmodel`], [`crate::gpu`] and
+//! [`crate::vga`] consume them to estimate performance under dataflow vs
+//! kernel-by-kernel execution (Fig. 1B/C).
+
+pub mod kernel;
+
+pub use kernel::{Kernel, OpClass};
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Index of a kernel within a [`Graph`].
+pub type KernelId = usize;
+
+/// A tensor edge between two kernels (or from the graph input / to the graph
+/// output when `src`/`dst` is `None`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Edge {
+    /// Producing kernel, or `None` for a graph input from DRAM.
+    pub src: Option<KernelId>,
+    /// Consuming kernel, or `None` for a graph output to DRAM.
+    pub dst: Option<KernelId>,
+    /// Tensor size in bytes.
+    pub bytes: f64,
+}
+
+/// A workload dataflow graph.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Graph {
+    pub name: String,
+    pub kernels: Vec<Kernel>,
+    pub edges: Vec<Edge>,
+}
+
+impl Graph {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), kernels: Vec::new(), edges: Vec::new() }
+    }
+
+    /// Add a kernel, returning its id.
+    pub fn add(&mut self, k: Kernel) -> KernelId {
+        self.kernels.push(k);
+        self.kernels.len() - 1
+    }
+
+    /// Add an internal tensor edge.
+    pub fn connect(&mut self, src: KernelId, dst: KernelId, bytes: f64) {
+        assert!(src < self.kernels.len() && dst < self.kernels.len());
+        self.edges.push(Edge { src: Some(src), dst: Some(dst), bytes });
+    }
+
+    /// Mark a kernel as reading a graph input of `bytes` from DRAM.
+    pub fn input(&mut self, dst: KernelId, bytes: f64) {
+        assert!(dst < self.kernels.len());
+        self.edges.push(Edge { src: None, dst: Some(dst), bytes });
+    }
+
+    /// Mark a kernel as writing a graph output of `bytes` to DRAM.
+    pub fn output(&mut self, src: KernelId, bytes: f64) {
+        assert!(src < self.kernels.len());
+        self.edges.push(Edge { src: Some(src), dst: None, bytes });
+    }
+
+    /// Total FLOPs over all kernels.
+    pub fn total_flops(&self) -> f64 {
+        self.kernels.iter().map(|k| k.flops).sum()
+    }
+
+    /// Total resident parameter bytes.
+    pub fn total_weight_bytes(&self) -> f64 {
+        self.kernels.iter().map(|k| k.weight_bytes).sum()
+    }
+
+    /// Bytes entering the graph from DRAM (dataflow execution's only reads,
+    /// paper Fig. 1B).
+    pub fn external_input_bytes(&self) -> f64 {
+        self.edges.iter().filter(|e| e.src.is_none()).map(|e| e.bytes).sum()
+    }
+
+    /// Bytes leaving the graph to DRAM.
+    pub fn external_output_bytes(&self) -> f64 {
+        self.edges.iter().filter(|e| e.dst.is_none()).map(|e| e.bytes).sum()
+    }
+
+    /// Bytes of intermediate tensors between kernels — staged through DRAM
+    /// under kernel-by-kernel execution (Fig. 1C), kept on-chip under
+    /// dataflow execution (Fig. 1B).
+    pub fn intermediate_bytes(&self) -> f64 {
+        self.edges
+            .iter()
+            .filter(|e| e.src.is_some() && e.dst.is_some())
+            .map(|e| e.bytes)
+            .sum()
+    }
+
+    /// Peak bytes of any single intermediate tensor — the PMU-capacity
+    /// constraint checker uses this.
+    pub fn max_intermediate_bytes(&self) -> f64 {
+        self.edges
+            .iter()
+            .filter(|e| e.src.is_some() && e.dst.is_some())
+            .map(|e| e.bytes)
+            .fold(0.0, f64::max)
+    }
+
+    /// FLOPs grouped by op class (the paper's Fig. 7/11 FLOP breakdowns).
+    pub fn flops_by_op(&self) -> BTreeMap<&'static str, f64> {
+        let mut m = BTreeMap::new();
+        for k in &self.kernels {
+            *m.entry(k.op.label()).or_insert(0.0) += k.flops;
+        }
+        m
+    }
+
+    /// Kernel ids in a valid topological order. Panics if the graph is
+    /// cyclic (dataflow graphs are DAGs by construction).
+    pub fn topo_order(&self) -> Vec<KernelId> {
+        let n = self.kernels.len();
+        let mut indeg = vec![0usize; n];
+        let mut succ: Vec<Vec<KernelId>> = vec![Vec::new(); n];
+        for e in &self.edges {
+            if let (Some(s), Some(d)) = (e.src, e.dst) {
+                indeg[d] += 1;
+                succ[s].push(d);
+            }
+        }
+        let mut ready: Vec<KernelId> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(i) = ready.pop() {
+            order.push(i);
+            for &d in &succ[i] {
+                indeg[d] -= 1;
+                if indeg[d] == 0 {
+                    ready.push(d);
+                }
+            }
+        }
+        assert_eq!(order.len(), n, "graph `{}` contains a cycle", self.name);
+        order
+    }
+
+    /// Structural validation: edge endpoints in range, DAG, every kernel
+    /// reachable from some input and reaching some output.
+    pub fn validate(&self) -> Result<(), String> {
+        for e in &self.edges {
+            if let Some(s) = e.src {
+                if s >= self.kernels.len() {
+                    return Err(format!("edge src {s} out of range"));
+                }
+            }
+            if let Some(d) = e.dst {
+                if d >= self.kernels.len() {
+                    return Err(format!("edge dst {d} out of range"));
+                }
+            }
+            if e.src.is_none() && e.dst.is_none() {
+                return Err("edge with neither src nor dst".to_string());
+            }
+            if !e.bytes.is_finite() || e.bytes < 0.0 {
+                return Err(format!("edge bytes {} invalid", e.bytes));
+            }
+        }
+        // topo_order panics on cycles; convert to an error.
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.topo_order()));
+        if r.is_err() {
+            return Err(format!("graph `{}` contains a cycle", self.name));
+        }
+        for (i, k) in self.kernels.iter().enumerate() {
+            let has_in = self.edges.iter().any(|e| e.dst == Some(i));
+            let has_out = self.edges.iter().any(|e| e.src == Some(i));
+            if !has_in || !has_out {
+                return Err(format!("kernel `{}` ({i}) is dangling", k.name));
+            }
+        }
+        Ok(())
+    }
+
+    /// Graphviz dot rendering, for DESIGN.md-style inspection.
+    pub fn to_dot(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "digraph \"{}\" {{", self.name);
+        let _ = writeln!(s, "  rankdir=LR; node [shape=box];");
+        for (i, k) in self.kernels.iter().enumerate() {
+            let _ = writeln!(
+                s,
+                "  k{i} [label=\"{}\\n{} | {} FLOP\"];",
+                k.name,
+                k.op,
+                crate::util::eng(k.flops)
+            );
+        }
+        for (j, e) in self.edges.iter().enumerate() {
+            let src = match e.src {
+                Some(s) => format!("k{s}"),
+                None => {
+                    let _ = writeln!(s, "  in{j} [shape=plaintext,label=\"DRAM\"];");
+                    format!("in{j}")
+                }
+            };
+            let dst = match e.dst {
+                Some(d) => format!("k{d}"),
+                None => {
+                    let _ = writeln!(s, "  out{j} [shape=plaintext,label=\"DRAM\"];");
+                    format!("out{j}")
+                }
+            };
+            let _ = writeln!(s, "  {src} -> {dst} [label=\"{}B\"];", crate::util::eng(e.bytes));
+        }
+        s.push_str("}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain() -> Graph {
+        let mut g = Graph::new("chain");
+        let a = g.add(Kernel::new("a", OpClass::Gemm, 100.0, 10.0, 10.0));
+        let b = g.add(Kernel::new("b", OpClass::Softmax, 50.0, 10.0, 10.0));
+        let c = g.add(Kernel::new("c", OpClass::Gemm, 100.0, 10.0, 10.0));
+        g.input(a, 10.0);
+        g.connect(a, b, 10.0);
+        g.connect(b, c, 10.0);
+        g.output(c, 10.0);
+        g
+    }
+
+    #[test]
+    fn totals() {
+        let g = chain();
+        assert_eq!(g.total_flops(), 250.0);
+        assert_eq!(g.external_input_bytes(), 10.0);
+        assert_eq!(g.external_output_bytes(), 10.0);
+        assert_eq!(g.intermediate_bytes(), 20.0);
+        assert_eq!(g.max_intermediate_bytes(), 10.0);
+    }
+
+    #[test]
+    fn topo_and_validate() {
+        let g = chain();
+        let order = g.topo_order();
+        let pos = |i: usize| order.iter().position(|&x| x == i).unwrap();
+        assert!(pos(0) < pos(1) && pos(1) < pos(2));
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = chain();
+        g.connect(2, 0, 1.0);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn dangling_kernel_detected() {
+        let mut g = chain();
+        g.add(Kernel::new("orphan", OpClass::Norm, 1.0, 1.0, 1.0));
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn flops_by_op_groups() {
+        let g = chain();
+        let m = g.flops_by_op();
+        assert_eq!(m["gemm"], 200.0);
+        assert_eq!(m["softmax"], 50.0);
+    }
+
+    #[test]
+    fn dot_renders() {
+        let d = chain().to_dot();
+        assert!(d.contains("digraph"));
+        assert!(d.contains("k0 -> k1"));
+        assert!(d.contains("DRAM"));
+    }
+
+    #[test]
+    fn bad_edges_rejected() {
+        let mut g = chain();
+        g.edges.push(Edge { src: None, dst: None, bytes: 1.0 });
+        assert!(g.validate().is_err());
+        let mut g2 = chain();
+        g2.edges.push(Edge { src: Some(0), dst: Some(1), bytes: f64::NAN });
+        assert!(g2.validate().is_err());
+    }
+}

@@ -1,0 +1,49 @@
+//! # SSM-RDU — Reconfigurable Dataflow Unit for Long-Sequence State-Space Models
+//!
+//! Full-system reproduction of *"SSM-RDU: A Reconfigurable Dataflow Unit for
+//! Long-Sequence State-Space Models"* (Sho Ko, CS.AR 2025).
+//!
+//! The paper proposes lightweight cross-lane interconnect extensions to the
+//! Pattern Compute Units (PCUs) of a Reconfigurable Dataflow Unit (RDU) so that
+//! FFT-based (Hyena) and scan-based (Mamba) state-space models map spatially
+//! onto the fabric. This crate rebuilds the paper's entire evaluation stack:
+//!
+//! * [`arch`] — the RDU chip description (Table I) and platform abstractions.
+//! * [`pcusim`] — a cycle-level functional simulator of a PCU in every mode
+//!   (element-wise / systolic / reduction / FFT / HS-scan / B-scan); numerics
+//!   checked against the algorithm substrates, utilization feeds the perf model.
+//! * [`fft`], [`scan`] — the algorithm substrates (Cooley–Tukey, Bailey 4-step
+//!   Vector/GEMM variants, C-scan, Hillis–Steele, Blelloch, tiled scan).
+//! * [`graph`], [`workloads`] — dataflow-graph IR and the attention / Hyena /
+//!   Mamba decoder builders (paper Fig. 3).
+//! * [`dfmodel`] — reproduction of the DFModel mapping optimizer + performance
+//!   estimator used for every figure in the paper.
+//! * [`gpu`], [`vga`] — the A100 and VGA comparison platforms (Tables II/III).
+//! * [`synth`] — 45 nm area/power model reproducing Table IV.
+//! * [`runtime`], [`coordinator`] — the serving stack: PJRT artifact execution
+//!   plus a request router / dynamic batcher, so the decoder layers built in
+//!   JAX/Pallas (L1/L2) actually run end-to-end under the Rust leader (L3).
+//! * [`util`], [`bench`] — offline-friendly infrastructure (PRNG, mini
+//!   property-test runner, CLI parsing, bench harness).
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results on every table and figure.
+
+pub mod arch;
+pub mod bench;
+pub mod coordinator;
+pub mod dfmodel;
+pub mod fft;
+pub mod figures;
+pub mod gpu;
+pub mod graph;
+pub mod pcusim;
+pub mod runtime;
+pub mod scan;
+pub mod synth;
+pub mod util;
+pub mod vga;
+pub mod workloads;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,237 @@
+//! `ssm-rdu` — leader entrypoint and CLI.
+//!
+//! Subcommands:
+//!   spec                         print Table I (RDU architectural spec)
+//!   table2                       print Table II (platform specs)
+//!   table4                       print Table IV (area/power overheads)
+//!   fig7 | fig8 | fig11 | fig12  regenerate a paper figure (DFModel)
+//!   all                          every table and figure in order
+//!   simulate [--lanes N --stages M]
+//!                                run the cycle-level PCU simulator demo
+//!   dot --model <attention|hyena|mamba> [--seq-len L]
+//!                                dump a workload dataflow graph (graphviz)
+//!   serve [--artifacts DIR --requests N --workers W --max-batch B]
+//!                                serve batched requests through the PJRT
+//!                                runtime (the E2E driver's engine)
+
+use ssm_rdu::arch::{PcuGeometry, RduConfig};
+use ssm_rdu::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, Executor, PjrtExecutor};
+use ssm_rdu::figures;
+use ssm_rdu::pcusim::{self, Pcu};
+use ssm_rdu::runtime::{default_artifacts_dir, ModelKind};
+use ssm_rdu::util::cli::Args;
+use ssm_rdu::util::{fmt_time, C64, XorShift};
+use ssm_rdu::workloads::{attention_decoder, hyena_decoder, mamba_decoder, DecoderConfig, ScanVariant};
+use std::time::Duration;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("all");
+    let code = match cmd {
+        "spec" => {
+            figures::table1().print();
+            0
+        }
+        "table2" => {
+            figures::platforms::table2().print();
+            0
+        }
+        "table4" => {
+            figures::table4().print();
+            0
+        }
+        "fig7" => {
+            let f = figures::hyena::fig7_at(&seq_lens(&args));
+            f.table().print();
+            f.speedup_report().print();
+            0
+        }
+        "fig8" => {
+            let f = figures::platforms::fig8_at(&seq_lens(&args));
+            f.table().print();
+            f.speedup_report().print();
+            0
+        }
+        "fig11" => {
+            let f = figures::mamba::fig11_at(&seq_lens(&args));
+            f.table().print();
+            f.speedup_report().print();
+            0
+        }
+        "fig12" => {
+            let f = figures::mamba::fig12_at(*seq_lens(&args).last().unwrap());
+            f.table().print();
+            f.speedup_report().print();
+            0
+        }
+        "all" => {
+            figures::table1().print();
+            figures::platforms::table2().print();
+            let f7 = figures::fig7();
+            f7.table().print();
+            f7.speedup_report().print();
+            let f8 = figures::fig8();
+            f8.table().print();
+            f8.speedup_report().print();
+            let f11 = figures::fig11();
+            f11.table().print();
+            f11.speedup_report().print();
+            let f12 = figures::fig12();
+            f12.table().print();
+            f12.speedup_report().print();
+            figures::table4().print();
+            0
+        }
+        "simulate" => simulate(&args),
+        "dot" => dot(&args),
+        "serve" => serve(&args),
+        other => {
+            eprintln!("unknown subcommand `{other}`; see `rust/src/main.rs` docs for usage");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn seq_lens(args: &Args) -> Vec<usize> {
+    args.usize_list_or("seq-lens", &figures::PAPER_SEQ_LENS)
+}
+
+/// Demonstrate the PCU simulator: FFT and scan programs on baseline vs
+/// extended PCUs, printing regime, throughput and utilization.
+fn simulate(args: &Args) -> i32 {
+    let lanes = args.usize_or("lanes", 32);
+    let stages = args.usize_or("stages", 12);
+    let geom = PcuGeometry::new(lanes, stages);
+    let mut rng = XorShift::new(42);
+    let batch: Vec<Vec<C64>> = (0..2048)
+        .map(|_| (0..lanes).map(|_| C64::real(rng.uniform(-1.0, 1.0))).collect())
+        .collect();
+
+    println!("PCU simulator: {geom} geometry, {} input vectors", batch.len());
+    let prog = pcusim::fft_program(lanes);
+    for (name, pcu) in [("baseline", Pcu::baseline(geom)), ("fft-mode", Pcu::fft_mode(geom))] {
+        let (_, stats) = pcu.run(&prog, &batch);
+        println!(
+            "  {name:9} fft{lanes}:     {} regime, II={:.2} cyc/vec, FU util={:.1}%",
+            if stats.spatial { "spatial   " } else { "serialized" },
+            stats.initiation_interval(),
+            stats.utilization() * 100.0
+        );
+    }
+    let scan = pcusim::hs_scan_program(lanes);
+    for (name, pcu) in [("baseline", Pcu::baseline(geom)), ("hs-mode", Pcu::hs_scan_mode(geom))] {
+        let (_, stats) = pcu.run(&scan, &batch);
+        println!(
+            "  {name:9} hs-scan{lanes}: {} regime, II={:.2} cyc/vec, FU util={:.1}%",
+            if stats.spatial { "spatial   " } else { "serialized" },
+            stats.initiation_interval(),
+            stats.utilization() * 100.0
+        );
+    }
+    0
+}
+
+/// Dump a workload graph as graphviz dot.
+fn dot(args: &Args) -> i32 {
+    let l = args.usize_or("seq-len", 1 << 20);
+    let dc = DecoderConfig::paper(l);
+    let model = args.get_or("model", "hyena");
+    let g = match model.as_str() {
+        "attention" => attention_decoder(&dc),
+        "hyena" => hyena_decoder(&dc, ssm_rdu::fft::BaileyVariant::Vector),
+        "mamba" => mamba_decoder(&dc, ScanVariant::Parallel),
+        other => {
+            eprintln!("unknown model `{other}`");
+            return 2;
+        }
+    };
+    println!("{}", g.to_dot());
+    0
+}
+
+/// Serve synthetic batched requests through the PJRT runtime.
+fn serve(args: &Args) -> i32 {
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir);
+    let n = args.usize_or("requests", 32);
+    let workers = args.usize_or("workers", 1);
+    let max_batch = args.usize_or("max-batch", 4);
+    let wait_ms = args.usize_or("max-wait-ms", 5);
+
+    println!("loading artifacts from {} …", dir.display());
+    // Shape probe (cheap manifest read) before spinning up workers.
+    let manifest = match ssm_rdu::runtime::Manifest::load(dir.join("manifest.json")) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("cannot read manifest: {e:#}\nhint: run `make artifacts` first");
+            return 1;
+        }
+    };
+    let elems = manifest.seq_len * manifest.d_model;
+    let models: Vec<ModelKind> = manifest.models.keys().copied().collect();
+
+    let dir2 = dir.clone();
+    let coord = match Coordinator::start(
+        CoordinatorConfig {
+            policy: BatchPolicy { max_batch, max_wait: Duration::from_millis(wait_ms as u64) },
+            workers,
+                ..Default::default()
+            },
+        Box::new(move || {
+            let exec = PjrtExecutor::load(&dir2)?;
+            Ok(Box::new(exec) as Box<dyn Executor>)
+        }),
+    ) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("failed to start coordinator: {e:#}");
+            return 1;
+        }
+    };
+
+    println!("serving {n} requests round-robin over {models:?} …");
+    let mut rng = XorShift::new(7);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let model = models[i % models.len()];
+            let input: Vec<f32> = (0..elems).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+            coord.submit(model, input).expect("submit")
+        })
+        .collect();
+    let mut ok = 0;
+    for rx in rxs {
+        if rx.recv().is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    println!(
+        "done: {ok}/{n} ok in {} ({:.1} req/s)  |  {}",
+        fmt_time(wall.as_secs_f64()),
+        ok as f64 / wall.as_secs_f64(),
+        coord.metrics.summary()
+    );
+    coord.shutdown();
+
+    // Tie the serving stack back to the paper's performance model: print the
+    // modeled-RDU latency for the same decoder shapes.
+    let dc = DecoderConfig::paper(manifest.seq_len);
+    for (name, g, cfg) in [
+        ("hyena", hyena_decoder(&dc, ssm_rdu::fft::BaileyVariant::Vector), RduConfig::fft_mode()),
+        ("mamba", mamba_decoder(&dc, ScanVariant::Parallel), RduConfig::hs_scan_mode()),
+    ] {
+        if let Ok(est) = ssm_rdu::dfmodel::estimate(&g, &cfg) {
+            println!(
+                "modeled {} latency for {name} @ L={}: {}",
+                cfg.name(),
+                manifest.seq_len,
+                fmt_time(est.total_seconds)
+            );
+        }
+    }
+    0
+}

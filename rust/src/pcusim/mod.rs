@@ -1,0 +1,30 @@
+//! Cycle-level functional simulator of the RDU's Pattern Compute Unit.
+//!
+//! This module is the hardware half of the reproduction: it models a PCU as
+//! a `lanes × stages` pipelined SIMD array (paper Fig. 2) with per-mode
+//! inter-stage interconnect fabrics (Figs. 5 and 10), executes real programs
+//! with real numerics, and measures the pipeline utilizations DFModel's
+//! performance estimates rest on.
+//!
+//! * [`topology`] — the interconnect fabrics of each [`crate::arch::PcuMode`]
+//!   and the added-route counts behind Table IV.
+//! * [`program`] — FU-level program IR + spatial-mapping validation.
+//! * [`programs`] — canonical FFT / HS-scan / B-scan / reduction programs,
+//!   verified against the [`crate::fft`] and [`crate::scan`] substrates.
+//! * [`engine`] — spatial vs serialized ("first stage only", §III-B)
+//!   execution with cycle and FU-utilization accounting.
+//! * [`utilization`] — the measured steady-state factors DFModel consumes.
+//! * [`noc`] — chip-grid placement, hop counts, fill latency and link
+//!   bandwidth audit of mapped sections.
+
+pub mod engine;
+pub mod noc;
+pub mod program;
+pub mod programs;
+pub mod topology;
+pub mod utilization;
+
+pub use engine::{ExecStats, Pcu};
+pub use program::{Level, MapError, Op, Program};
+pub use programs::{b_scan_program, bit_reverse, fft_program, hs_scan_program};
+pub use utilization::Measurement;

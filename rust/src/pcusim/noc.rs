@@ -1,0 +1,239 @@
+//! Chip-level network-on-chip model (paper §I/§II-A: "distributed pattern
+//! compute units (PCUs) and pattern memory units (PMUs) coupled with
+//! programmable network-on-chip (NoC) switches").
+//!
+//! The RDU die is a checkerboard of PCU and PMU tiles joined by a mesh of
+//! switches. This module places a mapped dataflow section onto the grid and
+//! computes the wire-level consequences DFModel's steady-state numbers
+//! abstract away:
+//!
+//! * **hop counts** per tensor edge (Manhattan distance on the mesh),
+//! * **pipeline fill latency** — the longest producer→consumer switch path
+//!   from a graph input to a graph output: the time for the first datum to
+//!   emerge, paid once per section launch (steady-state throughput is
+//!   unaffected, which is why the paper's Figs. 7/11 can ignore it),
+//! * **link-bandwidth audit** — whether any mesh link is oversubscribed by
+//!   the streaming tensors crossing it under dimension-ordered (X–Y)
+//!   routing.
+
+use crate::arch::RduSpec;
+use crate::dfmodel::Mapping;
+use crate::graph::Graph;
+
+/// Mesh position in switch-grid coordinates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tile {
+    pub x: usize,
+    pub y: usize,
+}
+
+impl Tile {
+    /// Manhattan distance (mesh hops) to `other`.
+    pub fn hops(self, other: Tile) -> usize {
+        self.x.abs_diff(other.x) + self.y.abs_diff(other.y)
+    }
+}
+
+/// Per-hop latency in cycles (switch traversal + link).
+pub const CYCLES_PER_HOP: f64 = 2.0;
+
+/// Per-link bandwidth in bytes/cycle (512-bit links, matching one PCU
+/// lane-vector per cycle at FP16).
+pub const LINK_BYTES_PER_CYCLE: f64 = 64.0;
+
+/// Placement of one mapped section onto the die grid.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    /// Grid side (the die is modeled square: side² ≥ n_pcu tiles).
+    pub side: usize,
+    /// One anchor tile per kernel (the centroid of its PCU cluster).
+    pub anchors: Vec<(usize /* kernel id */, Tile)>,
+}
+
+/// NoC analysis of one placed section.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NocReport {
+    /// Total mesh hops over all internal tensor edges.
+    pub total_hops: usize,
+    /// Longest input→output path in hops (drives fill latency).
+    pub critical_path_hops: usize,
+    /// Pipeline fill latency in seconds at the chip clock.
+    pub fill_seconds: f64,
+    /// Peak link utilization (streamed bytes/cycle ÷ link capacity) under
+    /// X–Y routing; > 1.0 means an oversubscribed link.
+    pub peak_link_utilization: f64,
+}
+
+/// Grid side for a chip with `n_pcu` compute tiles (PCU/PMU checkerboard:
+/// 2 tiles per PCU+PMU pair).
+pub fn grid_side(spec: &RduSpec) -> usize {
+    (((spec.n_pcu + spec.n_pmu) as f64).sqrt().ceil()) as usize
+}
+
+/// Place a mapping's first section greedily along a row-major snake in
+/// topological order — adjacent pipeline stages land on adjacent tiles,
+/// which is what a dataflow compiler's placer optimizes for.
+pub fn place(graph: &Graph, mapping: &Mapping, spec: &RduSpec) -> Placement {
+    let side = grid_side(spec);
+    let order = graph.topo_order();
+    let section = &mapping.sections[0];
+    let mut anchors = Vec::with_capacity(section.kernels.len());
+    // Walk tiles in snake order, advancing by each kernel's PCU allocation
+    // so the anchor sits at its cluster centroid.
+    let mut cursor = 0usize;
+    for &kid in order.iter().filter(|k| section.kernels.contains(k)) {
+        let alloc = section
+            .allocs
+            .iter()
+            .find(|a| a.kernel == kid)
+            .map(|a| a.pcus)
+            .unwrap_or(1);
+        let center = cursor + alloc / 2;
+        let row = (center / side).min(side - 1);
+        let col_raw = center % side;
+        // Snake: odd rows run right-to-left.
+        let col = if row.is_multiple_of(2) { col_raw } else { side - 1 - col_raw };
+        anchors.push((kid, Tile { x: col, y: row }));
+        cursor += alloc;
+    }
+    Placement { side, anchors }
+}
+
+/// Analyze the NoC behaviour of a placed section.
+pub fn analyze(graph: &Graph, placement: &Placement, spec: &RduSpec) -> NocReport {
+    let tile_of = |kid: usize| -> Option<Tile> {
+        placement.anchors.iter().find(|(k, _)| *k == kid).map(|&(_, t)| t)
+    };
+
+    // Hop counts per internal edge.
+    let mut total_hops = 0usize;
+    // Link load accounting under X-then-Y routing: bytes crossing each
+    // (direction-agnostic) link per streamed element.
+    let mut link_load: std::collections::HashMap<(usize, usize, u8), f64> =
+        std::collections::HashMap::new();
+    for e in &graph.edges {
+        if let (Some(s), Some(d)) = (e.src, e.dst) {
+            if let (Some(a), Some(b)) = (tile_of(s), tile_of(d)) {
+                total_hops += a.hops(b);
+                // X leg then Y leg; charge the edge's steady-state byte rate
+                // (bytes per element-cycle ≈ bytes / elements).
+                let rate = if graph.kernels[s].elements > 0.0 {
+                    e.bytes / graph.kernels[s].elements
+                } else {
+                    0.0
+                };
+                let (mut x, y0) = (a.x, a.y);
+                while x != b.x {
+                    let nx = if b.x > x { x + 1 } else { x - 1 };
+                    *link_load.entry((x.min(nx), y0, 0)).or_default() += rate;
+                    x = nx;
+                }
+                let mut y = y0;
+                while y != b.y {
+                    let ny = if b.y > y { y + 1 } else { y - 1 };
+                    *link_load.entry((b.x, y.min(ny), 1)).or_default() += rate;
+                    y = ny;
+                }
+            }
+        }
+    }
+
+    // Critical path: longest hop-weighted path over the DAG.
+    let order = graph.topo_order();
+    let mut dist = vec![0usize; graph.kernels.len()];
+    for &k in &order {
+        for e in graph.edges.iter().filter(|e| e.src == Some(k)) {
+            if let Some(d) = e.dst {
+                if let (Some(a), Some(b)) = (tile_of(k), tile_of(d)) {
+                    dist[d] = dist[d].max(dist[k] + a.hops(b));
+                }
+            }
+        }
+    }
+    let critical = dist.into_iter().max().unwrap_or(0);
+    let fill_seconds = critical as f64 * CYCLES_PER_HOP / spec.clock_hz;
+    let peak = link_load
+        .values()
+        .fold(0.0f64, |m, &v| m.max(v / LINK_BYTES_PER_CYCLE));
+
+    NocReport {
+        total_hops,
+        critical_path_hops: critical,
+        fill_seconds,
+        peak_link_utilization: peak,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::RduConfig;
+    use crate::dfmodel::map_graph;
+    use crate::fft::BaileyVariant;
+    use crate::workloads::{hyena_decoder, DecoderConfig};
+
+    fn setup() -> (Graph, Placement, RduSpec) {
+        let cfg = RduConfig::fft_mode();
+        let g = hyena_decoder(&DecoderConfig::paper(1 << 18), BaileyVariant::Vector);
+        let m = map_graph(&g, &cfg).unwrap();
+        let p = place(&g, &m, &cfg.spec);
+        (g, p, cfg.spec)
+    }
+
+    #[test]
+    fn tile_hops_manhattan() {
+        assert_eq!(Tile { x: 0, y: 0 }.hops(Tile { x: 3, y: 4 }), 7);
+        assert_eq!(Tile { x: 2, y: 2 }.hops(Tile { x: 2, y: 2 }), 0);
+    }
+
+    #[test]
+    fn grid_fits_all_tiles() {
+        let spec = RduSpec::table1();
+        let side = grid_side(&spec);
+        assert!(side * side >= spec.n_pcu + spec.n_pmu);
+        assert_eq!(side, 33); // ceil(sqrt(1040))
+    }
+
+    #[test]
+    fn placement_covers_section_kernels() {
+        let (g, p, _) = setup();
+        assert_eq!(p.anchors.len(), g.kernels.len().min(p.anchors.len()));
+        for (_, t) in &p.anchors {
+            assert!(t.x < p.side && t.y < p.side);
+        }
+    }
+
+    #[test]
+    fn fill_latency_negligible_vs_steady_state() {
+        // The justification for DFModel ignoring fill: microseconds of
+        // steady-state vs nanoseconds of fill.
+        let (g, p, spec) = setup();
+        let rep = analyze(&g, &p, &spec);
+        assert!(rep.critical_path_hops > 0);
+        assert!(rep.fill_seconds < 1e-6, "fill={}", rep.fill_seconds);
+    }
+
+    #[test]
+    fn no_link_oversubscription_at_paper_shapes() {
+        let (g, p, spec) = setup();
+        let rep = analyze(&g, &p, &spec);
+        assert!(rep.peak_link_utilization.is_finite());
+        assert!(
+            rep.peak_link_utilization < 8.0,
+            "util={} (D=32 fp16 streams over 64B links)",
+            rep.peak_link_utilization
+        );
+    }
+
+    #[test]
+    fn adjacent_stages_land_near_each_other() {
+        // Snake placement: average hops per edge stays far below the grid
+        // diameter.
+        let (g, p, spec) = setup();
+        let rep = analyze(&g, &p, &spec);
+        let edges = g.edges.iter().filter(|e| e.src.is_some() && e.dst.is_some()).count();
+        let avg = rep.total_hops as f64 / edges as f64;
+        let diameter = (2 * (grid_side(&spec) - 1)) as f64;
+        assert!(avg < diameter / 2.0, "avg={avg} diameter={diameter}");
+    }
+}

@@ -1,0 +1,290 @@
+//! PCU program representation and validation.
+//!
+//! A [`Program`] is a sequence of *levels*; each level assigns one [`Op`] to
+//! every lane. Levels are the logical dataflow steps of the kernel
+//! (butterfly levels of an FFT, shift steps of a Hillis–Steele scan, …).
+//! Mapping a program onto a PCU assigns consecutive levels to consecutive
+//! pipeline stages; an op whose cross-lane source is not wired in the PCU's
+//! configured mode makes the spatial mapping invalid, in which case the
+//! engine falls back to the paper's "first stage only" serialized execution
+//! (§III-B: *"mapping Vector FFT onto the baseline PCU restricts execution
+//! to only the first stage of the pipeline"*).
+
+use crate::arch::{PcuGeometry, PcuMode};
+use crate::pcusim::topology;
+use crate::util::C64;
+use std::fmt;
+
+/// One functional-unit operation. `a` denotes the straight input (same lane,
+/// previous level); `b` denotes the cross-lane input from `src`; `c` is the
+/// FU's constant port — matching the paper's four-input FU (Fig. 2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Op {
+    /// `out = a` — forward the lane value (consumes no arithmetic FU slot).
+    Pass,
+    /// `out = c` — load a constant.
+    Const(C64),
+    /// `out = a + b` — scalar addition across lanes.
+    Add { src: usize },
+    /// `out = a − b` — subtraction (add with negated operand).
+    Sub { src: usize },
+    /// `out = a · c` — scalar multiply by constant.
+    MulConst(C64),
+    /// `out = a + c·b` — multiply-and-accumulate, the butterfly/scan
+    /// workhorse (paper Fig. 2's MAC configuration).
+    Mac { src: usize, c: C64 },
+    /// `out = c·a + b` — the mirrored MAC (butterfly subtract side:
+    /// `x[i] − w·x[p]` computed on lane `p` as `(−w)·a + b`). The FU's
+    /// mul/add units operate "between any two of the four input sources"
+    /// (paper Fig. 2), so both MAC orientations are single-FU operations.
+    MacSelf { src: usize, c: C64 },
+    /// `out = b` — take the cross-lane value (down-sweep swap).
+    Take { src: usize },
+}
+
+impl Op {
+    /// Lane this op reads across the fabric, if any.
+    pub fn cross_src(&self) -> Option<usize> {
+        match *self {
+            Op::Add { src }
+            | Op::Sub { src }
+            | Op::Mac { src, .. }
+            | Op::MacSelf { src, .. }
+            | Op::Take { src } => Some(src),
+            _ => None,
+        }
+    }
+
+    /// Does this op perform useful arithmetic (counted for utilization)?
+    pub fn is_useful(&self) -> bool {
+        !matches!(self, Op::Pass)
+    }
+
+    /// Real-FLOP cost of the op under the paper's FP16 accounting
+    /// (complex MAC on a complex-valued lane = 1 mul + 1 add slot; the
+    /// engine works in C64 for numerical convenience but costs ops as the
+    /// scalar FUs the paper describes).
+    pub fn flops(&self) -> f64 {
+        match self {
+            Op::Pass | Op::Const(_) | Op::Take { .. } => 0.0,
+            Op::Add { .. } | Op::Sub { .. } | Op::MulConst(_) => 1.0,
+            Op::Mac { .. } | Op::MacSelf { .. } => 2.0,
+        }
+    }
+}
+
+/// One dataflow level: an op per lane.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Level {
+    pub ops: Vec<Op>,
+}
+
+impl Level {
+    pub fn new(ops: Vec<Op>) -> Self {
+        Self { ops }
+    }
+
+    /// A level that passes every lane through unchanged.
+    pub fn pass(lanes: usize) -> Self {
+        Self { ops: vec![Op::Pass; lanes] }
+    }
+
+    /// Number of ops doing useful arithmetic.
+    pub fn useful_ops(&self) -> usize {
+        self.ops.iter().filter(|o| o.is_useful()).count()
+    }
+
+    /// Is this level mappable at `boundary` of a PCU in `mode`?
+    pub fn mappable(&self, mode: PcuMode, geom: PcuGeometry, boundary: usize) -> bool {
+        self.ops.iter().enumerate().all(|(dest, op)| match op.cross_src() {
+            None => true,
+            Some(src) => topology::allows(mode, geom, boundary, dest, src),
+        })
+    }
+}
+
+/// A complete PCU program: the kernel's dataflow levels plus the mode whose
+/// interconnect the cross-lane traffic assumes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Program {
+    /// The interconnect mode this program's cross-lane ops require.
+    pub mode: PcuMode,
+    pub levels: Vec<Level>,
+    /// Human-readable kernel name for reports.
+    pub name: String,
+}
+
+/// Why a program cannot be spatially mapped onto a PCU configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MapError {
+    /// The PCU configuration lacks the required interconnect mode.
+    ModeUnavailable { required: PcuMode },
+    /// More levels than pipeline stages — needs multi-pass execution.
+    TooDeep { levels: usize, stages: usize },
+    /// A lane op reads a source the mode's fabric does not wire.
+    IllegalEdge { level: usize, dest: usize, src: usize },
+    /// Lane-count mismatch between program and PCU.
+    WidthMismatch { program: usize, pcu: usize },
+}
+
+impl fmt::Display for MapError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MapError::ModeUnavailable { required } => {
+                write!(f, "PCU configuration lacks required mode `{required}`")
+            }
+            MapError::TooDeep { levels, stages } => {
+                write!(f, "program has {levels} levels but PCU has {stages} stages")
+            }
+            MapError::IllegalEdge { level, dest, src } => {
+                write!(f, "level {level}: lane {dest} reads lane {src}, not wired in this mode")
+            }
+            MapError::WidthMismatch { program, pcu } => {
+                write!(f, "program width {program} != PCU lanes {pcu}")
+            }
+        }
+    }
+}
+
+impl Program {
+    pub fn new(name: &str, mode: PcuMode, levels: Vec<Level>) -> Self {
+        let width = levels.first().map(|l| l.ops.len()).unwrap_or(0);
+        assert!(
+            levels.iter().all(|l| l.ops.len() == width),
+            "all levels of `{name}` must have equal width"
+        );
+        Self { mode, levels, name: name.to_string() }
+    }
+
+    /// Lane width of the program.
+    pub fn width(&self) -> usize {
+        self.levels.first().map(|l| l.ops.len()).unwrap_or(0)
+    }
+
+    /// Total useful FU ops per input vector.
+    pub fn useful_ops(&self) -> usize {
+        self.levels.iter().map(Level::useful_ops).sum()
+    }
+
+    /// Total real FLOPs per input vector under the paper's accounting.
+    pub fn flops(&self) -> f64 {
+        self.levels.iter().flat_map(|l| l.ops.iter()).map(Op::flops).sum()
+    }
+
+    /// Validate a full spatial mapping onto a PCU of `geom` configured with
+    /// the extensions in `available`, level *i* at stage boundary *i*.
+    pub fn validate_spatial(
+        &self,
+        geom: PcuGeometry,
+        supports_mode: bool,
+    ) -> Result<(), MapError> {
+        if self.width() != geom.lanes {
+            return Err(MapError::WidthMismatch { program: self.width(), pcu: geom.lanes });
+        }
+        if self.levels.len() > geom.stages {
+            return Err(MapError::TooDeep { levels: self.levels.len(), stages: geom.stages });
+        }
+        let needs_cross = self
+            .levels
+            .iter()
+            .any(|l| l.ops.iter().any(|o| o.cross_src().is_some()));
+        if needs_cross && self.mode.is_extension() && !supports_mode {
+            return Err(MapError::ModeUnavailable { required: self.mode });
+        }
+        for (li, level) in self.levels.iter().enumerate() {
+            for (dest, op) in level.ops.iter().enumerate() {
+                if let Some(src) = op.cross_src() {
+                    if src >= geom.lanes {
+                        return Err(MapError::IllegalEdge { level: li, dest, src });
+                    }
+                    if !topology::allows(self.mode, geom, li, dest, src) {
+                        return Err(MapError::IllegalEdge { level: li, dest, src });
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom() -> PcuGeometry {
+        PcuGeometry::synthesis()
+    }
+
+    #[test]
+    fn op_cross_sources() {
+        assert_eq!(Op::Pass.cross_src(), None);
+        assert_eq!(Op::Add { src: 3 }.cross_src(), Some(3));
+        assert_eq!(Op::Mac { src: 1, c: C64::real(2.0) }.cross_src(), Some(1));
+    }
+
+    #[test]
+    fn level_useful_ops() {
+        let l = Level::new(vec![Op::Pass, Op::Add { src: 0 }, Op::MulConst(C64::real(1.0))]);
+        assert_eq!(l.useful_ops(), 2);
+    }
+
+    #[test]
+    fn program_flops() {
+        let p = Program::new(
+            "t",
+            PcuMode::ElementWise,
+            vec![Level::new(vec![Op::Mac { src: 0, c: C64::real(1.0) }; 8])],
+        );
+        assert_eq!(p.flops(), 16.0);
+    }
+
+    #[test]
+    fn width_mismatch_detected() {
+        let p = Program::new("t", PcuMode::ElementWise, vec![Level::pass(4)]);
+        assert_eq!(
+            p.validate_spatial(geom(), true),
+            Err(MapError::WidthMismatch { program: 4, pcu: 8 })
+        );
+    }
+
+    #[test]
+    fn too_deep_detected() {
+        let levels = (0..7).map(|_| Level::pass(8)).collect();
+        let p = Program::new("t", PcuMode::ElementWise, levels);
+        assert_eq!(p.validate_spatial(geom(), true), Err(MapError::TooDeep { levels: 7, stages: 6 }));
+    }
+
+    #[test]
+    fn illegal_edge_detected() {
+        // Butterfly edge at level 0 (1 ← 0) requires FFT mode wiring.
+        let mut ops = vec![Op::Pass; 8];
+        ops[1] = Op::Add { src: 0 };
+        let p = Program::new("t", PcuMode::ElementWise, vec![Level::new(ops)]);
+        assert_eq!(
+            p.validate_spatial(geom(), true),
+            Err(MapError::IllegalEdge { level: 0, dest: 1, src: 0 })
+        );
+    }
+
+    #[test]
+    fn mode_unavailable_detected() {
+        let mut ops = vec![Op::Pass; 8];
+        ops[0] = Op::Add { src: 1 };
+        let p = Program::new("t", PcuMode::Fft, vec![Level::new(ops)]);
+        assert_eq!(
+            p.validate_spatial(geom(), false),
+            Err(MapError::ModeUnavailable { required: PcuMode::Fft })
+        );
+        assert_eq!(p.validate_spatial(geom(), true), Ok(()));
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_levels_panic() {
+        Program::new(
+            "bad",
+            PcuMode::ElementWise,
+            vec![Level::pass(8), Level::pass(4)],
+        );
+    }
+}

@@ -1,0 +1,291 @@
+//! Canonical PCU programs for the paper's kernels: the radix-2 FFT
+//! (Fig. 5), the Hillis–Steele scan and the Blelloch scan (Figs. 9/10),
+//! plus the baseline reduction tree. Each builder emits a [`Program`] whose
+//! level-*b* cross-lane traffic exactly matches the mode's boundary-*b*
+//! fabric, so `Program::validate_spatial` succeeds on the extended PCU and
+//! fails (→ serialized fallback) on the baseline PCU.
+//!
+//! Functional correctness of every program is asserted against the
+//! [`crate::fft`] / [`crate::scan`] substrates in the tests below — the same
+//! oracles the Pallas kernels are tested against in `python/tests`, closing
+//! the cross-layer loop promised in DESIGN.md §7.
+
+use crate::arch::PcuMode;
+use crate::pcusim::program::{Level, Op, Program};
+use crate::util::C64;
+use std::f64::consts::PI;
+
+/// Bit-reversal permutation of a power-of-two-length slice. On the RDU this
+/// reordering is performed by the PMU's address generators while streaming
+/// the tile into the PCU (the paper's PMUs own all address computation), so
+/// it costs no PCU cycles.
+pub fn bit_reverse(x: &[C64]) -> Vec<C64> {
+    let n = x.len();
+    assert!(n.is_power_of_two());
+    let bits = n.trailing_zeros();
+    (0..n)
+        .map(|i| {
+            let j = ((i as u32).reverse_bits() >> (32 - bits)) as usize;
+            x[j]
+        })
+        .collect()
+}
+
+/// Radix-2 decimation-in-time FFT over `lanes` complex points, expecting
+/// bit-reversed input (see [`bit_reverse`]). Level *b* performs the
+/// stride-`2^b` butterflies: the pair-leader lane computes `a + w·b` (MAC)
+/// and the partner lane computes `a_partner − w·b_self` via the mirrored MAC
+/// — exactly the dataflow Fig. 5 unrolls across the pipeline.
+#[allow(clippy::needless_range_loop)] // lanes indexed by butterfly position math
+pub fn fft_program(lanes: usize) -> Program {
+    assert!(lanes.is_power_of_two() && lanes >= 2);
+    let levels_n = lanes.trailing_zeros() as usize;
+    let mut levels = Vec::with_capacity(levels_n);
+    for b in 0..levels_n {
+        let half = 1 << b;
+        let len = half << 1;
+        let mut ops = vec![Op::Pass; lanes];
+        for i in 0..lanes {
+            let j = i % len;
+            if j < half {
+                // x[i] ← x[i] + w_j · x[i+half]
+                let w = C64::cis(-2.0 * PI * j as f64 / len as f64);
+                ops[i] = Op::Mac { src: i + half, c: w };
+            } else {
+                // x[i] ← x[i−half] − w_{j−half} · x[i]  =  (−w)·a + b
+                let w = C64::cis(-2.0 * PI * (j - half) as f64 / len as f64);
+                ops[i] = Op::MacSelf { src: i - half, c: C64::real(-1.0) * w };
+            }
+        }
+        levels.push(Level::new(ops));
+    }
+    Program::new(&format!("fft{lanes}"), PcuMode::Fft, levels)
+}
+
+/// Inclusive Hillis–Steele scan over `lanes` elements: level *b* has lane
+/// *i ≥ 2^b* add lane *i − 2^b* (Fig. 9 left / Fig. 10 top).
+#[allow(clippy::needless_range_loop)] // lanes indexed by shift-distance math
+pub fn hs_scan_program(lanes: usize) -> Program {
+    assert!(lanes.is_power_of_two() && lanes >= 2);
+    let levels_n = lanes.trailing_zeros() as usize;
+    let mut levels = Vec::with_capacity(levels_n);
+    for b in 0..levels_n {
+        let stride = 1 << b;
+        let mut ops = vec![Op::Pass; lanes];
+        for i in stride..lanes {
+            ops[i] = Op::Add { src: i - stride };
+        }
+        levels.push(Level::new(ops));
+    }
+    Program::new(&format!("hs-scan{lanes}"), PcuMode::HsScan, levels)
+}
+
+/// Exclusive Blelloch scan over `lanes` elements: `log₂(lanes)` up-sweep
+/// levels build the reduction tree, then `log₂(lanes)` down-sweep levels
+/// distribute prefixes (Fig. 9 right / Fig. 10 bottom). The root zeroing is
+/// folded into the first down-sweep level, so the program needs exactly
+/// `2·log₂(lanes)` stages.
+pub fn b_scan_program(lanes: usize) -> Program {
+    assert!(lanes.is_power_of_two() && lanes >= 2);
+    let levels_n = lanes.trailing_zeros() as usize;
+    let mut levels = Vec::with_capacity(2 * levels_n);
+    // Up-sweep: at stride 2^b, tree nodes accumulate their left sibling.
+    for b in 0..levels_n {
+        let stride = 1 << b;
+        let group = stride << 1;
+        let mut ops = vec![Op::Pass; lanes];
+        for i in ((group - 1)..lanes).step_by(group) {
+            ops[i] = Op::Add { src: i - stride };
+        }
+        levels.push(Level::new(ops));
+    }
+    // Down-sweep. First level folds the root-zeroing: after the up-sweep the
+    // root would be set to 0, so its left child receives Const(0) and the
+    // root receives the left child's value.
+    for (step, _) in (0..levels_n).enumerate() {
+        let stride = 1 << (levels_n - 1 - step);
+        let group = stride << 1;
+        let mut ops = vec![Op::Pass; lanes];
+        for i in ((group - 1)..lanes).step_by(group) {
+            if step == 0 {
+                // Root pair: left child ← 0, root ← left child.
+                ops[i - stride] = Op::Const(C64::ZERO);
+                ops[i] = Op::Take { src: i - stride };
+            } else {
+                // t = x[i−k]; x[i−k] = x[i]; x[i] = t + x[i].
+                ops[i - stride] = Op::Take { src: i };
+                ops[i] = Op::Add { src: i - stride };
+            }
+        }
+        levels.push(Level::new(ops));
+    }
+    Program::new(&format!("b-scan{lanes}"), PcuMode::BScan, levels)
+}
+
+/// Baseline reduction-tree sum into lane 0 (Fig. 2, reduction mode).
+pub fn reduction_program(lanes: usize) -> Program {
+    assert!(lanes.is_power_of_two() && lanes >= 2);
+    let levels_n = lanes.trailing_zeros() as usize;
+    let mut levels = Vec::with_capacity(levels_n);
+    for b in 0..levels_n {
+        let stride = 1 << b;
+        let group = stride << 1;
+        let mut ops = vec![Op::Pass; lanes];
+        for i in (0..lanes).step_by(group) {
+            ops[i] = Op::Add { src: i + stride };
+        }
+        levels.push(Level::new(ops));
+    }
+    Program::new(&format!("reduce{lanes}"), PcuMode::Reduction, levels)
+}
+
+/// Element-wise multiply by per-lane constants — the Bailey twiddle-scaling
+/// step (§III-A step 3), runnable on any PCU in element-wise mode.
+pub fn twiddle_program(factors: &[C64]) -> Program {
+    let ops = factors.iter().map(|&c| Op::MulConst(c)).collect();
+    Program::new("twiddle", PcuMode::ElementWise, vec![Level::new(ops)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::PcuGeometry;
+    use crate::fft::cooley_tukey;
+    use crate::pcusim::engine::Pcu;
+    use crate::scan::{blelloch_exclusive, c_scan_exclusive, hillis_steele_inclusive};
+    use crate::util::complex::max_abs_diff_c;
+    use crate::util::XorShift;
+
+    fn rand_c(rng: &mut XorShift, n: usize) -> Vec<C64> {
+        (0..n).map(|_| C64::new(rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0))).collect()
+    }
+
+    #[test]
+    fn fft_program_matches_cooley_tukey_8() {
+        let mut rng = XorShift::new(7);
+        let pcu = Pcu::fft_mode(PcuGeometry::synthesis());
+        let prog = fft_program(8);
+        for _ in 0..20 {
+            let x = rand_c(&mut rng, 8);
+            let got = pcu.eval(&prog, &bit_reverse(&x));
+            let want = cooley_tukey::fft(&x);
+            assert!(max_abs_diff_c(&got, &want) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fft_program_matches_cooley_tukey_32() {
+        let mut rng = XorShift::new(8);
+        let pcu = Pcu::fft_mode(PcuGeometry::table1());
+        let prog = fft_program(32);
+        for _ in 0..10 {
+            let x = rand_c(&mut rng, 32);
+            let got = pcu.eval(&prog, &bit_reverse(&x));
+            let want = cooley_tukey::fft(&x);
+            assert!(max_abs_diff_c(&got, &want) < 1e-11);
+        }
+    }
+
+    #[test]
+    fn fft_program_maps_spatially_only_with_fft_fabric() {
+        let prog = fft_program(8);
+        assert!(Pcu::fft_mode(PcuGeometry::synthesis()).mappable(&prog).is_ok());
+        assert!(Pcu::baseline(PcuGeometry::synthesis()).mappable(&prog).is_err());
+        // ...and the scan fabrics don't help:
+        assert!(Pcu::hs_scan_mode(PcuGeometry::synthesis()).mappable(&prog).is_err());
+    }
+
+    #[test]
+    fn hs_program_matches_substrate() {
+        let mut rng = XorShift::new(9);
+        for lanes in [8usize, 32] {
+            let geom = if lanes == 8 { PcuGeometry::synthesis() } else { PcuGeometry::table1() };
+            let pcu = Pcu::hs_scan_mode(geom);
+            let prog = hs_scan_program(lanes);
+            let xs = rng.vec(lanes, -2.0, 2.0);
+            let x: Vec<C64> = xs.iter().map(|&v| C64::real(v)).collect();
+            let got: Vec<f64> = pcu.eval(&prog, &x).iter().map(|z| z.re).collect();
+            let want = hillis_steele_inclusive(&xs);
+            assert!(crate::util::max_abs_diff(&got, &want) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn b_program_matches_substrate() {
+        let mut rng = XorShift::new(10);
+        for lanes in [8usize, 32] {
+            let geom = if lanes == 8 { PcuGeometry::synthesis() } else { PcuGeometry::table1() };
+            let pcu = Pcu::b_scan_mode(geom);
+            let prog = b_scan_program(lanes);
+            assert!(pcu.mappable(&prog).is_ok(), "b-scan{lanes} should map spatially");
+            let xs = rng.vec(lanes, -2.0, 2.0);
+            let x: Vec<C64> = xs.iter().map(|&v| C64::real(v)).collect();
+            let got: Vec<f64> = pcu.eval(&prog, &x).iter().map(|z| z.re).collect();
+            let want = blelloch_exclusive(&xs);
+            assert!(crate::util::max_abs_diff(&got, &want) < 1e-12, "lanes={lanes}");
+            // Cross-check against the serial C-scan oracle too.
+            let want2 = c_scan_exclusive(&xs);
+            assert!(crate::util::max_abs_diff(&got, &want2) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn scan_programs_fail_on_baseline_and_wrong_fabric() {
+        let hs = hs_scan_program(8);
+        let b = b_scan_program(8);
+        let base = Pcu::baseline(PcuGeometry::synthesis());
+        assert!(base.mappable(&hs).is_err());
+        assert!(base.mappable(&b).is_err());
+        // HS program does not fit the B fabric and vice versa.
+        assert!(Pcu::b_scan_mode(PcuGeometry::synthesis()).mappable(&hs).is_err());
+        assert!(Pcu::hs_scan_mode(PcuGeometry::synthesis()).mappable(&b).is_err());
+    }
+
+    #[test]
+    fn reduction_program_sums_on_baseline() {
+        let pcu = Pcu::baseline(PcuGeometry::synthesis());
+        let prog = reduction_program(8);
+        assert!(pcu.mappable(&prog).is_ok(), "reduction is a baseline mode");
+        let x: Vec<C64> = (1..=8).map(|i| C64::real(i as f64)).collect();
+        let y = pcu.eval(&prog, &x);
+        assert_eq!(y[0].re, 36.0);
+    }
+
+    #[test]
+    fn twiddle_program_elementwise() {
+        let pcu = Pcu::baseline(PcuGeometry::synthesis());
+        let factors: Vec<C64> = (0..8).map(|i| C64::cis(-PI * i as f64 / 8.0)).collect();
+        let prog = twiddle_program(&factors);
+        assert!(pcu.mappable(&prog).is_ok());
+        let x = vec![C64::real(1.0); 8];
+        let y = pcu.eval(&prog, &x);
+        for (yi, f) in y.iter().zip(&factors) {
+            assert!((*yi - *f).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn program_depths_fit_geometries() {
+        // Table I PCU (32×12): FFT needs 5 ≤ 12, B-scan needs 10 ≤ 12.
+        assert_eq!(fft_program(32).levels.len(), 5);
+        assert_eq!(b_scan_program(32).levels.len(), 10);
+        assert_eq!(hs_scan_program(32).levels.len(), 5);
+        // Synthesis PCU (8×6): FFT 3 ≤ 6, B-scan 6 ≤ 6.
+        assert_eq!(fft_program(8).levels.len(), 3);
+        assert_eq!(b_scan_program(8).levels.len(), 6);
+    }
+
+    #[test]
+    fn serialized_fft_still_correct_on_baseline() {
+        // The baseline PCU *can* run the FFT — just 12× slower (paper
+        // §III-B). Functional output must be identical.
+        let mut rng = XorShift::new(11);
+        let base = Pcu::baseline(PcuGeometry::table1());
+        let prog = fft_program(32);
+        let x = rand_c(&mut rng, 32);
+        let (outs, stats) = base.run(&prog, &[bit_reverse(&x)]);
+        assert!(!stats.spatial);
+        let want = cooley_tukey::fft(&x);
+        assert!(max_abs_diff_c(&outs[0], &want) < 1e-11);
+    }
+}

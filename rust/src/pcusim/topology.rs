@@ -1,0 +1,245 @@
+//! Inter-stage interconnect topologies of the PCU (paper Figs. 2, 5, 10).
+//!
+//! A PCU of `lanes × stages` has `stages` *boundaries*: boundary `b` feeds
+//! the inputs of stage `b` from the outputs of stage `b−1` (boundary 0 feeds
+//! stage 0 from the PCU input FIFO). Every mode allows the *straight* edge
+//! (lane *i* → lane *i*) at every boundary; the modes differ in which
+//! **cross-lane** edges exist:
+//!
+//! * element-wise / systolic — no cross-lane edges between stages (systolic
+//!   vertical movement is *within* a stage and modeled by the engine's
+//!   streamed MAC, not by boundary edges);
+//! * reduction — a binary reduction tree: at boundary `b < log₂(lanes)`,
+//!   lane `i` (with `i ≡ 0 mod 2^{b+1}`) also reads lane `i + 2^b`;
+//! * **fft** (extension) — full butterfly pairing: at boundary
+//!   `b < log₂(lanes)`, every lane `i` also reads lane `i ⊕ 2^b`;
+//! * **hs-scan** (extension) — Hillis–Steele shifts: at boundary
+//!   `b < log₂(lanes)`, lane `i ≥ 2^b` also reads lane `i − 2^b`;
+//! * **b-scan** (extension) — Blelloch tree: up-sweep boundaries
+//!   `b < log₂(lanes)` give lane `i ≡ 2^{b+1}−1 (mod 2^{b+1})` an edge from
+//!   lane `i − 2^b`; down-sweep boundaries `log₂(lanes) ≤ b < 2·log₂(lanes)`
+//!   connect each tree pair in *both* directions (the down-sweep swap+add).
+//!
+//! [`added_mux_count`] counts the cross-lane edges an extension adds — each
+//! edge is one extra FU input source, i.e. one W-bit 2:1 mux plus wiring.
+//! This count drives the Table IV area/power model in [`crate::synth`].
+
+use crate::arch::{PcuGeometry, PcuMode};
+
+/// A directed cross-lane edge at a stage boundary: the FU at
+/// `(dest, stage b)` may additionally read the output of `(src, stage b−1)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Edge {
+    pub boundary: usize,
+    pub dest: usize,
+    pub src: usize,
+}
+
+/// Enumerate the cross-lane edges a mode provides on `geom`.
+///
+/// Straight edges (src == dest) are implicit and not listed.
+pub fn cross_lane_edges(mode: PcuMode, geom: PcuGeometry) -> Vec<Edge> {
+    let lanes = geom.lanes;
+    let levels = geom.levels();
+    let mut edges = Vec::new();
+    match mode {
+        PcuMode::ElementWise | PcuMode::Systolic => {}
+        PcuMode::Reduction => {
+            // Binary reduction tree folded into the first `levels` boundaries.
+            for b in 0..levels.min(geom.stages) {
+                let stride = 1 << b;
+                let group = stride << 1;
+                for dest in (0..lanes).step_by(group) {
+                    edges.push(Edge { boundary: b, dest, src: dest + stride });
+                }
+            }
+        }
+        PcuMode::Fft => {
+            // Full butterfly pairing at each of the first `levels` boundaries
+            // (paper Fig. 5): every lane reads its partner lane i ⊕ 2^b.
+            for b in 0..levels.min(geom.stages) {
+                let stride = 1 << b;
+                for dest in 0..lanes {
+                    edges.push(Edge { boundary: b, dest, src: dest ^ stride });
+                }
+            }
+        }
+        PcuMode::HsScan => {
+            // Hillis–Steele shift network (paper Figs. 9/10): at step b,
+            // lane i reads lane i − 2^b when it exists.
+            for b in 0..levels.min(geom.stages) {
+                let stride = 1 << b;
+                for dest in stride..lanes {
+                    edges.push(Edge { boundary: b, dest, src: dest - stride });
+                }
+            }
+        }
+        PcuMode::BScan => {
+            // Up-sweep: boundaries 0..levels, tree-parent accumulation.
+            for b in 0..levels.min(geom.stages) {
+                let stride = 1 << b;
+                let group = stride << 1;
+                for dest in ((group - 1)..lanes).step_by(group) {
+                    edges.push(Edge { boundary: b, dest, src: dest - stride });
+                }
+            }
+            // Down-sweep: boundaries levels..2·levels, strides back down.
+            // Each pair (i−k, i) exchanges: left child takes the parent's
+            // value, the parent adds the left child's old value.
+            for (step, b) in (levels..2 * levels).enumerate() {
+                if b >= geom.stages {
+                    break;
+                }
+                let stride = 1 << (levels - 1 - step);
+                let group = stride << 1;
+                for i in ((group - 1)..lanes).step_by(group) {
+                    edges.push(Edge { boundary: b, dest: i - stride, src: i });
+                    edges.push(Edge { boundary: b, dest: i, src: i - stride });
+                }
+            }
+        }
+    }
+    edges
+}
+
+/// Does `mode` permit reading `(src, stage b−1)` from `(dest, stage b)`?
+pub fn allows(mode: PcuMode, geom: PcuGeometry, boundary: usize, dest: usize, src: usize) -> bool {
+    if dest == src {
+        return true; // straight edge, always present
+    }
+    cross_lane_edges(mode, geom)
+        .iter()
+        .any(|e| e.boundary == boundary && e.dest == dest && e.src == src)
+}
+
+/// Number of 2:1 input muxes an extension mode adds to the PCU — one per
+/// **distinct directed lane route** `(dest ← src)` the mode introduces.
+///
+/// The physical fabric provisions one W-bit route + destination-side 2:1 mux
+/// per lane pair and time-multiplexes it across stage boundaries (the same
+/// butterfly stride never appears at two boundaries in any of the modes'
+/// schedules, and the B-scan down-sweep reuses the up-sweep's tree links in
+/// the reverse direction). For the paper's 8×6 synthesis PCU this yields
+/// **24 (FFT), 17 (HS-scan), 14 (B-scan)** — the ordering and magnitudes
+/// behind Table IV (overheads 1.007× > 1.005× > 1.004×).
+pub fn added_mux_count(mode: PcuMode, geom: PcuGeometry) -> usize {
+    if !mode.is_extension() {
+        return 0;
+    }
+    let mut routes: std::collections::HashSet<(usize, usize)> = std::collections::HashSet::new();
+    for e in cross_lane_edges(mode, geom) {
+        routes.insert((e.dest, e.src));
+    }
+    routes.len()
+}
+
+/// Longest wire an extension adds, in lane pitches — drives the wire-load
+/// component of the Table IV power model.
+pub fn max_wire_span(mode: PcuMode, geom: PcuGeometry) -> usize {
+    cross_lane_edges(mode, geom)
+        .iter()
+        .map(|e| e.dest.abs_diff(e.src))
+        .max()
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    fn synth() -> PcuGeometry {
+        PcuGeometry::synthesis() // 8×6, the Table IV geometry
+    }
+
+    #[test]
+    fn baseline_modes_add_nothing() {
+        for m in [PcuMode::ElementWise, PcuMode::Systolic, PcuMode::Reduction] {
+            assert_eq!(added_mux_count(m, synth()), 0, "{m}");
+        }
+    }
+
+    #[test]
+    fn fft_edge_count_8x6() {
+        // 8 lanes × log₂8 = 3 boundaries of full butterflies = 24 edges.
+        assert_eq!(added_mux_count(PcuMode::Fft, synth()), 24);
+    }
+
+    #[test]
+    fn hs_edge_count_8x6() {
+        // (8−1) + (8−2) + (8−4) = 17 edges.
+        assert_eq!(added_mux_count(PcuMode::HsScan, synth()), 17);
+    }
+
+    #[test]
+    fn bscan_route_count_8x6() {
+        // Up-sweep directed routes: 4 + 2 + 1 = 7. The down-sweep's add-edges
+        // (i ← i−k) coincide with the up-sweep routes; only the swap
+        // direction (i−k ← i) is new: +7 → 14 total.
+        let n = added_mux_count(PcuMode::BScan, synth());
+        assert_eq!(n, 14);
+    }
+
+    #[test]
+    fn route_ordering_matches_table4() {
+        // Table IV area overhead ordering: FFT (1.007×) > HS (1.005×) >
+        // B-scan (1.004×) — exactly the 24 > 17 > 14 route counts.
+        let fft = added_mux_count(PcuMode::Fft, synth());
+        let hs = added_mux_count(PcuMode::HsScan, synth());
+        let b = added_mux_count(PcuMode::BScan, synth());
+        assert_eq!((fft, hs, b), (24, 17, 14));
+    }
+
+    #[test]
+    fn table1_pcu_route_counts() {
+        // 32×12 production PCU: butterflies 32·5 = 160, HS Σ(32−2^b) = 129,
+        // B-scan 2·(16+8+4+2+1) = 62.
+        let g = PcuGeometry::table1();
+        assert_eq!(added_mux_count(PcuMode::Fft, g), 160);
+        assert_eq!(added_mux_count(PcuMode::HsScan, g), 31 + 30 + 28 + 24 + 16);
+        assert_eq!(added_mux_count(PcuMode::BScan, g), 62);
+    }
+
+    #[test]
+    fn straight_edges_always_allowed() {
+        for m in [PcuMode::ElementWise, PcuMode::Fft, PcuMode::BScan] {
+            assert!(allows(m, synth(), 3, 5, 5), "{m}");
+        }
+    }
+
+    #[test]
+    fn butterfly_allowed_only_in_fft_mode() {
+        assert!(allows(PcuMode::Fft, synth(), 0, 0, 1));
+        assert!(!allows(PcuMode::ElementWise, synth(), 0, 0, 1));
+        // Reduction tree has (0 ← 1) at boundary 0 too (tree pair):
+        assert!(allows(PcuMode::Reduction, synth(), 0, 0, 1));
+        // ...but not the mirrored butterfly edge (1 ← 0):
+        assert!(!allows(PcuMode::Reduction, synth(), 0, 1, 0));
+    }
+
+    #[test]
+    fn edges_are_unique() {
+        for m in [PcuMode::Reduction, PcuMode::Fft, PcuMode::HsScan, PcuMode::BScan] {
+            let edges = cross_lane_edges(m, synth());
+            let set: HashSet<_> = edges.iter().copied().collect();
+            assert_eq!(edges.len(), set.len(), "{m} has duplicate edges");
+        }
+    }
+
+    #[test]
+    fn edges_within_bounds() {
+        for m in [PcuMode::Reduction, PcuMode::Fft, PcuMode::HsScan, PcuMode::BScan] {
+            for e in cross_lane_edges(m, PcuGeometry::table1()) {
+                assert!(e.dest < 32 && e.src < 32 && e.boundary < 12, "{m} {e:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn wire_span() {
+        // FFT's longest butterfly on 8 lanes spans 4 lane pitches.
+        assert_eq!(max_wire_span(PcuMode::Fft, synth()), 4);
+        assert_eq!(max_wire_span(PcuMode::HsScan, synth()), 4);
+        assert_eq!(max_wire_span(PcuMode::ElementWise, synth()), 0);
+    }
+}

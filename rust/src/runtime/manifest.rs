@@ -1,0 +1,137 @@
+//! Artifact manifest (`artifacts/manifest.json`, written by
+//! `python/compile/aot.py`): which models were lowered, with what shapes.
+
+use super::ModelKind;
+use crate::util::json::Json;
+use crate::Result;
+use anyhow::{anyhow, Context};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Metadata of one lowered model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelMeta {
+    /// Artifact file name, relative to the artifacts directory.
+    pub path: String,
+    /// `[batch, seq_len, d_model]`.
+    pub input_shape: [usize; 3],
+    pub output_shape: [usize; 3],
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub batch: usize,
+    pub models: BTreeMap<ModelKind, ModelMeta>,
+}
+
+fn shape3(j: &Json, key: &str) -> Result<[usize; 3]> {
+    let arr = j
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("manifest: missing array `{key}`"))?;
+    if arr.len() != 3 {
+        return Err(anyhow!("manifest: `{key}` must have 3 dims, got {}", arr.len()));
+    }
+    let mut out = [0usize; 3];
+    for (o, v) in out.iter_mut().zip(arr) {
+        *o = v.as_usize().ok_or_else(|| anyhow!("manifest: bad dim in `{key}`"))?;
+    }
+    Ok(out)
+}
+
+impl Manifest {
+    /// Parse a manifest document.
+    pub fn parse(doc: &str) -> Result<Self> {
+        let j = Json::parse(doc).context("manifest.json")?;
+        let field = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest: missing numeric `{k}`"))
+        };
+        let mut models = BTreeMap::new();
+        let model_obj = j
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest: missing `models`"))?;
+        for (name, meta) in model_obj {
+            let kind = ModelKind::from_name(name)
+                .ok_or_else(|| anyhow!("manifest: unknown model `{name}`"))?;
+            let path = meta
+                .get("path")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("manifest: `{name}` missing path"))?
+                .to_string();
+            models.insert(
+                kind,
+                ModelMeta {
+                    path,
+                    input_shape: shape3(meta, "input_shape")?,
+                    output_shape: shape3(meta, "output_shape")?,
+                },
+            );
+        }
+        if models.is_empty() {
+            return Err(anyhow!("manifest: no models"));
+        }
+        Ok(Self {
+            seq_len: field("seq_len")?,
+            d_model: field("d_model")?,
+            batch: field("batch")?,
+            models,
+        })
+    }
+
+    /// Load from a file path.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let doc = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse(&doc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+        "seq_len": 2048, "d_model": 32, "batch": 4, "seed": 0, "dtype": "f32",
+        "models": {
+            "hyena": {"path": "hyena.hlo.txt",
+                      "input_shape": [4, 2048, 32],
+                      "output_shape": [4, 2048, 32],
+                      "sha256_16": "abc", "chars": 10}
+        }
+    }"#;
+
+    #[test]
+    fn parses_valid_manifest() {
+        let m = Manifest::parse(DOC).unwrap();
+        assert_eq!(m.seq_len, 2048);
+        assert_eq!(m.batch, 4);
+        let hy = &m.models[&ModelKind::Hyena];
+        assert_eq!(hy.input_shape, [4, 2048, 32]);
+        assert_eq!(hy.path, "hyena.hlo.txt");
+    }
+
+    #[test]
+    fn rejects_unknown_model() {
+        let doc = DOC.replace("\"hyena\"", "\"gpt2\"");
+        assert!(Manifest::parse(&doc).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_shape() {
+        let doc = DOC.replace("[4, 2048, 32]", "[4, 2048]");
+        assert!(Manifest::parse(&doc).is_err());
+    }
+
+    #[test]
+    fn rejects_empty_models() {
+        let doc = r#"{"seq_len": 1, "d_model": 1, "batch": 1, "models": {}}"#;
+        assert!(Manifest::parse(doc).is_err());
+    }
+}

@@ -1,0 +1,180 @@
+//! PJRT runtime: load the AOT artifacts produced by `python/compile/aot.py`
+//! and execute them from Rust — the L3 hot path's compute engine.
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`); see
+//! `aot.py` and /opt/xla-example/README.md for why serialized protos are
+//! rejected by the image's xla_extension 0.5.1. One compiled executable per
+//! model variant; Python is never on the request path.
+
+pub mod manifest;
+
+pub use manifest::{Manifest, ModelMeta};
+
+use crate::Result;
+use anyhow::{anyhow, Context};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Which decoder layer a request targets (the artifact set of `aot.py`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ModelKind {
+    Attention,
+    Hyena,
+    Mamba,
+}
+
+impl ModelKind {
+    pub const ALL: [ModelKind; 3] = [ModelKind::Attention, ModelKind::Hyena, ModelKind::Mamba];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelKind::Attention => "attention",
+            ModelKind::Hyena => "hyena",
+            ModelKind::Mamba => "mamba",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<ModelKind> {
+        Self::ALL.into_iter().find(|m| m.name() == s)
+    }
+}
+
+impl std::fmt::Display for ModelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One compiled decoder-layer executable.
+pub struct LoadedModel {
+    pub kind: ModelKind,
+    pub meta: ModelMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModel {
+    /// Execute on a packed `(batch, seq_len, d_model)` activation buffer.
+    ///
+    /// `input.len()` must equal the artifact's full input element count —
+    /// the dynamic batcher pads partial batches before calling this.
+    pub fn execute(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let want: usize = self.meta.input_shape.iter().product();
+        if input.len() != want {
+            return Err(anyhow!(
+                "{}: input has {} elements, artifact expects {want}",
+                self.kind,
+                input.len()
+            ));
+        }
+        let dims: Vec<i64> = self.meta.input_shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input).reshape(&dims)?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Elements in one request's activation (`seq_len × d_model`).
+    pub fn elems_per_slot(&self) -> usize {
+        self.meta.input_shape[1] * self.meta.input_shape[2]
+    }
+
+    /// Batch slots in the artifact.
+    pub fn batch_slots(&self) -> usize {
+        self.meta.input_shape[0]
+    }
+}
+
+/// A PJRT CPU client with every artifact from a manifest compiled.
+pub struct Runtime {
+    pub manifest: Manifest,
+    models: BTreeMap<ModelKind, LoadedModel>,
+    pub artifacts_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load and compile every model listed in `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut models = BTreeMap::new();
+        for (kind, meta) in &manifest.models {
+            let path = dir.join(&meta.path);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-UTF8 path"))?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            models.insert(*kind, LoadedModel { kind: *kind, meta: meta.clone(), exe });
+        }
+        Ok(Self { manifest, models, artifacts_dir: dir })
+    }
+
+    /// Load a subset of models (cheaper for tests/examples).
+    pub fn load_subset(dir: impl AsRef<Path>, kinds: &[ModelKind]) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let mut manifest = Manifest::load(dir.join("manifest.json"))?;
+        manifest.models.retain(|k, _| kinds.contains(k));
+        if manifest.models.is_empty() {
+            return Err(anyhow!("no requested models present in manifest"));
+        }
+        let client = xla::PjRtClient::cpu()?;
+        let mut models = BTreeMap::new();
+        for (kind, meta) in &manifest.models {
+            let path = dir.join(&meta.path);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-UTF8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            models.insert(*kind, LoadedModel { kind: *kind, meta: meta.clone(), exe });
+        }
+        Ok(Self { manifest, models, artifacts_dir: dir })
+    }
+
+    /// Access a compiled model.
+    pub fn model(&self, kind: ModelKind) -> Result<&LoadedModel> {
+        self.models
+            .get(&kind)
+            .ok_or_else(|| anyhow!("model `{kind}` not loaded (artifact missing?)"))
+    }
+
+    /// Kinds available in this runtime.
+    pub fn kinds(&self) -> Vec<ModelKind> {
+        self.models.keys().copied().collect()
+    }
+}
+
+/// Default artifacts directory: `$SSM_RDU_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("SSM_RDU_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_kind_names_roundtrip() {
+        for k in ModelKind::ALL {
+            assert_eq!(ModelKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(ModelKind::from_name("gpt"), None);
+    }
+
+    #[test]
+    fn missing_dir_is_clean_error() {
+        let err = match Runtime::load("/nonexistent/path") {
+            Err(e) => e,
+            Ok(_) => panic!("load of missing dir must fail"),
+        };
+        let s = format!("{err:#}");
+        assert!(s.contains("manifest"), "{s}");
+    }
+}

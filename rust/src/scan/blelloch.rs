@@ -1,0 +1,135 @@
+//! Blelloch scan (paper §IV-A, Fig. 9 right).
+//!
+//! `2·log₂N` parallel steps, `2N` total work: a binary-tree **up-sweep**
+//! (reduction) builds partial sums, then a **down-sweep** distributes
+//! prefixes back to the leaves, producing an *exclusive* scan. The
+//! work-efficient variant whose tree pattern the B-scan-mode PCU wires into
+//! its interconnect.
+
+/// Exclusive Blelloch scan. `x.len()` must be a power of two.
+pub fn blelloch_exclusive(x: &[f64]) -> Vec<f64> {
+    blelloch_exclusive_op(x, 0.0, |a, b| a + b)
+}
+
+/// Exclusive Blelloch scan under an arbitrary associative operator with
+/// identity `id`. The two phases below mirror paper Fig. 9 exactly.
+pub fn blelloch_exclusive_op<T: Copy>(x: &[T], id: T, op: impl Fn(T, T) -> T) -> Vec<T> {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "blelloch: N={n} not a power of two");
+    let mut a = x.to_vec();
+    if n == 1 {
+        return vec![id];
+    }
+
+    // Up-sweep (reduce): for d = 1, 2, 4, ..., n/2:
+    //   a[j + 2d - 1] = a[j + d - 1] ⊕ a[j + 2d - 1]
+    let mut d = 1;
+    while d < n {
+        let stride = 2 * d;
+        for j in (0..n).step_by(stride) {
+            a[j + stride - 1] = op(a[j + d - 1], a[j + stride - 1]);
+        }
+        d = stride;
+    }
+
+    // Clear the root, then down-sweep: each node passes its value to the
+    // left child and (left ⊕ value) to the right child.
+    a[n - 1] = id;
+    let mut d = n / 2;
+    while d >= 1 {
+        let stride = 2 * d;
+        for j in (0..n).step_by(stride) {
+            let left = a[j + d - 1];
+            a[j + d - 1] = a[j + stride - 1];
+            a[j + stride - 1] = op(left, a[j + stride - 1]);
+        }
+        d /= 2;
+    }
+    a
+}
+
+/// Work performed (binary-op applications) by an N-point Blelloch scan:
+/// `(N−1)` in the up-sweep + `(N−1)` in the down-sweep ≈ `2N` (paper Fig. 9).
+pub fn b_work(n: usize) -> usize {
+    assert!(n.is_power_of_two());
+    2 * (n - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::serial::c_scan_exclusive;
+    use crate::util::{max_abs_diff, prop};
+
+    #[test]
+    fn paper_example() {
+        assert_eq!(
+            blelloch_exclusive(&[2.0, 4.0, 6.0, 8.0]),
+            vec![0.0, 2.0, 6.0, 12.0]
+        );
+    }
+
+    #[test]
+    fn matches_serial_various_sizes() {
+        for logn in 0..=10 {
+            let n = 1 << logn;
+            let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+            let d = max_abs_diff(&blelloch_exclusive(&x), &c_scan_exclusive(&x));
+            assert!(d < 1e-9, "n={n} diff={d}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not a power of two")]
+    fn non_pow2_rejected() {
+        blelloch_exclusive(&[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn generic_op_product_scan() {
+        let x = [2.0, 3.0, 4.0, 5.0];
+        let got = blelloch_exclusive_op(&x, 1.0, |a, b| a * b);
+        assert_eq!(got, vec![1.0, 2.0, 6.0, 24.0]);
+    }
+
+    #[test]
+    fn work_formula() {
+        assert_eq!(b_work(8), 14);
+        assert_eq!(b_work(1024), 2046);
+    }
+
+    #[test]
+    fn prop_matches_serial() {
+        prop::quick(
+            "blelloch == serial",
+            |rng| { let n = 1usize << rng.range(0, 10); rng.vec(n, -10.0, 10.0) },
+            prop::no_shrink,
+            |xs| {
+                let d = max_abs_diff(&blelloch_exclusive(xs), &c_scan_exclusive(xs));
+                if d < 1e-9 {
+                    Ok(())
+                } else {
+                    Err(format!("diff {d}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_agrees_with_hillis_steele() {
+        use crate::scan::hillis_steele::hillis_steele_exclusive;
+        prop::quick(
+            "blelloch == hillis-steele",
+            |rng| { let n = 1usize << rng.range(0, 9); rng.vec(n, -5.0, 5.0) },
+            prop::no_shrink,
+            |xs| {
+                let d = max_abs_diff(&blelloch_exclusive(xs), &hillis_steele_exclusive(xs));
+                if d < 1e-9 {
+                    Ok(())
+                } else {
+                    Err(format!("diff {d}"))
+                }
+            },
+        );
+    }
+}

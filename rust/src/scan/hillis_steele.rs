@@ -1,0 +1,115 @@
+//! Hillis–Steele scan (paper §IV-A, Fig. 9 left).
+//!
+//! `log₂N` parallel steps, `N·log₂N` total work. In step `i` every element
+//! `j` adds the value at `j − 2^{i−1}` (when it exists). High parallelism,
+//! more data movement — the variant whose cross-lane pattern the HS-scan-mode
+//! PCU wires directly into its inter-stage interconnect.
+
+/// Inclusive Hillis–Steele scan. `x.len()` must be a power of two (matching
+/// the hardware mapping; arbitrary lengths are handled by the tiled driver).
+pub fn hillis_steele_inclusive(x: &[f64]) -> Vec<f64> {
+    hillis_steele_inclusive_op(x, |a, b| a + b)
+}
+
+/// Inclusive Hillis–Steele scan under an arbitrary associative operator.
+///
+/// The step structure (`offset = 1, 2, 4, …`) is exactly the dataflow in
+/// paper Fig. 9; each outer iteration is one PCU pipeline stage in the
+/// HS-scan-mode mapping.
+pub fn hillis_steele_inclusive_op<T: Copy>(x: &[T], op: impl Fn(T, T) -> T) -> Vec<T> {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "hillis_steele: N={n} not a power of two");
+    let mut cur = x.to_vec();
+    let mut next = x.to_vec();
+    let mut offset = 1;
+    while offset < n {
+        for j in 0..n {
+            next[j] = if j >= offset {
+                op(cur[j - offset], cur[j])
+            } else {
+                cur[j]
+            };
+        }
+        std::mem::swap(&mut cur, &mut next);
+        offset <<= 1;
+    }
+    cur
+}
+
+/// Exclusive HS-scan: inclusive scan shifted right with 0 injected.
+pub fn hillis_steele_exclusive(x: &[f64]) -> Vec<f64> {
+    let inc = hillis_steele_inclusive(x);
+    let mut out = Vec::with_capacity(x.len());
+    out.push(0.0);
+    out.extend_from_slice(&inc[..x.len().saturating_sub(1)]);
+    out
+}
+
+/// Work performed (add operations) by an N-point HS-scan — matches the
+/// paper's `N·log₂N` accounting (border elements that merely copy are
+/// counted as occupied lanes, as in the hardware mapping).
+pub fn hs_work(n: usize) -> usize {
+    assert!(n.is_power_of_two());
+    n * n.trailing_zeros() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::serial::{c_scan_exclusive, c_scan_inclusive};
+    use crate::util::{max_abs_diff, prop};
+
+    #[test]
+    fn matches_serial_inclusive() {
+        let x: Vec<f64> = (1..=16).map(|i| i as f64).collect();
+        assert_eq!(hillis_steele_inclusive(&x), c_scan_inclusive(&x));
+    }
+
+    #[test]
+    fn exclusive_matches_serial() {
+        let x = [2.0, 4.0, 6.0, 8.0];
+        assert_eq!(hillis_steele_exclusive(&x), c_scan_exclusive(&x));
+    }
+
+    #[test]
+    fn single_element() {
+        assert_eq!(hillis_steele_inclusive(&[7.0]), vec![7.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a power of two")]
+    fn non_pow2_rejected() {
+        hillis_steele_inclusive(&[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn generic_op_max() {
+        let x = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let got = hillis_steele_inclusive_op(&x, f64::max);
+        let want = vec![3.0, 3.0, 4.0, 4.0, 5.0, 9.0, 9.0, 9.0];
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn work_formula() {
+        assert_eq!(hs_work(8), 24);
+        assert_eq!(hs_work(1024), 10240);
+    }
+
+    #[test]
+    fn prop_matches_serial() {
+        prop::quick(
+            "hs == serial",
+            |rng| { let n = 1usize << rng.range(0, 10); rng.vec(n, -10.0, 10.0) },
+            prop::no_shrink,
+            |xs| {
+                let d = max_abs_diff(&hillis_steele_inclusive(xs), &c_scan_inclusive(xs));
+                if d < 1e-9 {
+                    Ok(())
+                } else {
+                    Err(format!("diff {d}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,97 @@
+//! Scan algorithm substrate (paper §IV-A).
+//!
+//! Implements every scan variant the paper discusses, plus the *selective
+//! state-space* first-order linear recurrence that is Mamba's actual scan
+//! payload. These are the golden models for the Pallas scan kernel and the
+//! PCU scan-mode simulator programs.
+//!
+//! * [`serial`] — C-scan: the inherently sequential one-element-at-a-time
+//!   prefix sum (1 element/cycle/channel — the paper's Design 2 baseline).
+//! * [`hillis_steele`] — HS-scan: `log₂N` steps, `N·log₂N` work, an
+//!   *inclusive* scan with maximal step-parallelism (Fig. 9 left).
+//! * [`blelloch`] — B-scan: `2·log₂N` steps, `2N` work, the work-efficient
+//!   up-sweep/down-sweep *exclusive* scan (Fig. 9 right).
+//! * [`tiled`] — the GPU-Gems tiled scan the paper adopts for long
+//!   sequences: R-element tiles scanned locally (one PCU each), tile sums
+//!   scanned recursively, offsets added back.
+//! * [`recurrence`] — generic associative-operator scans and the Mamba
+//!   `h[t] = a[t]·h[t-1] + b[t]` recurrence with its associative lift.
+
+pub mod blelloch;
+pub mod hillis_steele;
+pub mod recurrence;
+pub mod serial;
+pub mod tiled;
+
+pub use blelloch::blelloch_exclusive;
+pub use hillis_steele::hillis_steele_inclusive;
+pub use recurrence::{mamba_scan_parallel, mamba_scan_serial};
+pub use serial::{c_scan_exclusive, c_scan_inclusive};
+pub use tiled::tiled_exclusive;
+
+/// FLOPs for a serial C-scan over N elements: `N` additions.
+pub fn c_scan_flops(n: usize) -> f64 {
+    n as f64
+}
+
+/// FLOPs for a Hillis–Steele scan: `N·log₂N` (paper Fig. 9).
+pub fn hs_scan_flops(n: usize) -> f64 {
+    let nf = n as f64;
+    nf * nf.log2()
+}
+
+/// FLOPs for a Blelloch scan: `2N` (paper Fig. 9).
+pub fn b_scan_flops(n: usize) -> f64 {
+    2.0 * n as f64
+}
+
+/// Parallel step count of HS-scan: `log₂N`.
+pub fn hs_scan_steps(n: usize) -> usize {
+    assert!(n.is_power_of_two());
+    n.trailing_zeros() as usize
+}
+
+/// Parallel step count of B-scan: `2·log₂N`.
+pub fn b_scan_steps(n: usize) -> usize {
+    assert!(n.is_power_of_two());
+    2 * n.trailing_zeros() as usize
+}
+
+/// Exclusive→inclusive conversion helper: shift left and append total.
+pub fn exclusive_to_inclusive(input: &[f64], exclusive: &[f64]) -> Vec<f64> {
+    assert_eq!(input.len(), exclusive.len());
+    input
+        .iter()
+        .zip(exclusive)
+        .map(|(x, e)| x + e)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_exclusive() {
+        // Paper §IV-A: input [2,4,6,8] -> exclusive scan [0,2,6,12].
+        let got = c_scan_exclusive(&[2.0, 4.0, 6.0, 8.0]);
+        assert_eq!(got, vec![0.0, 2.0, 6.0, 12.0]);
+    }
+
+    #[test]
+    fn flop_models() {
+        assert_eq!(c_scan_flops(1024), 1024.0);
+        assert_eq!(hs_scan_flops(1024), 1024.0 * 10.0);
+        assert_eq!(b_scan_flops(1024), 2048.0);
+        assert_eq!(hs_scan_steps(1024), 10);
+        assert_eq!(b_scan_steps(1024), 20);
+    }
+
+    #[test]
+    fn exclusive_to_inclusive_works() {
+        let x = [2.0, 4.0, 6.0, 8.0];
+        let ex = c_scan_exclusive(&x);
+        let inc = exclusive_to_inclusive(&x, &ex);
+        assert_eq!(inc, vec![2.0, 6.0, 12.0, 20.0]);
+    }
+}

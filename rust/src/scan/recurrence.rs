@@ -1,0 +1,188 @@
+//! Mamba's selective-scan recurrence and its associative (parallel) lift.
+//!
+//! Mamba's core op evolves hidden state `h[t] = a[t]·h[t-1] + b[t]·x[t]`
+//! per (channel, state) pair. A first-order linear recurrence is *not* a
+//! plain prefix sum, but it is scannable: lift each step to the pair
+//! `(a, b)` with the associative combinator
+//!
+//! ```text
+//! (a₁, b₁) ∘ (a₂, b₂) = (a₁·a₂, a₂·b₁ + b₂)
+//! ```
+//!
+//! and an inclusive scan of the pairs yields `h[t]` directly. This is what
+//! the Pallas scan kernel computes and what the scan-mode PCU executes with
+//! 2 FUs per combine (mul + MAC).
+
+use super::hillis_steele::hillis_steele_inclusive_op;
+
+/// One step of the lifted recurrence: coefficient and offset.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinStep {
+    /// Multiplicative coefficient `a[t]` (state decay).
+    pub a: f64,
+    /// Additive term `b[t]` (input injection, already `b[t]·x[t]`).
+    pub b: f64,
+}
+
+/// The associative combinator for first-order linear recurrences.
+///
+/// `combine(p, q)` composes "apply p then q": `h → q.a·(p.a·h + p.b) + q.b`.
+pub fn combine(p: LinStep, q: LinStep) -> LinStep {
+    LinStep {
+        a: p.a * q.a,
+        b: q.a * p.b + q.b,
+    }
+}
+
+/// Serial (C-scan-style) evaluation of the Mamba recurrence from `h0 = 0`:
+/// returns `h[0..N)` — the sequential golden model.
+pub fn mamba_scan_serial(a: &[f64], b: &[f64]) -> Vec<f64> {
+    assert_eq!(a.len(), b.len(), "mamba_scan: a/b length mismatch");
+    let mut h = 0.0;
+    a.iter()
+        .zip(b)
+        .map(|(&ai, &bi)| {
+            h = ai * h + bi;
+            h
+        })
+        .collect()
+}
+
+/// Parallel evaluation via the associative lift + Hillis–Steele scan.
+/// Requires a power-of-two length (hardware mapping); the tiled driver
+/// handles general lengths.
+pub fn mamba_scan_parallel(a: &[f64], b: &[f64]) -> Vec<f64> {
+    assert_eq!(a.len(), b.len(), "mamba_scan: a/b length mismatch");
+    let steps: Vec<LinStep> = a
+        .iter()
+        .zip(b)
+        .map(|(&a, &b)| LinStep { a, b })
+        .collect();
+    let scanned = hillis_steele_inclusive_op(&steps, combine);
+    // h[t] = scanned[t].a * h0 + scanned[t].b with h0 = 0.
+    scanned.into_iter().map(|s| s.b).collect()
+}
+
+/// Tiled parallel evaluation for arbitrary lengths: R-element tiles scanned
+/// in parallel, carry composed across tiles (the long-sequence PCU mapping).
+pub fn mamba_scan_tiled(a: &[f64], b: &[f64], r: usize) -> Vec<f64> {
+    assert_eq!(a.len(), b.len());
+    assert!(r.is_power_of_two() && r >= 2);
+    let n = a.len();
+    let mut out = Vec::with_capacity(n);
+    // Carry is the state h at the end of the previous tile.
+    let mut carry = 0.0;
+    for lo in (0..n).step_by(r) {
+        let hi = (lo + r).min(n);
+        let mut ta = vec![1.0; r];
+        let mut tb = vec![0.0; r];
+        ta[..hi - lo].copy_from_slice(&a[lo..hi]);
+        tb[..hi - lo].copy_from_slice(&b[lo..hi]);
+        // Inject the carry into the first step: h = a0*(carry) + b0.
+        tb[0] += ta[0] * carry;
+        let h = mamba_scan_parallel(&ta, &tb);
+        out.extend_from_slice(&h[..hi - lo]);
+        carry = h[hi - lo - 1];
+    }
+    out
+}
+
+/// FLOPs of a Mamba selective scan over `n` steps with the paper's
+/// accounting: each lifted combine is 3 flops (1 mul for `a`, 1 mul + 1 add
+/// for `b`), HS-scan does `n·log₂n` combines, B-scan does `2n`.
+pub fn mamba_parallel_scan_flops(n: usize, work_per_elem: f64) -> f64 {
+    3.0 * work_per_elem * n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{max_abs_diff, prop, XorShift};
+
+    #[test]
+    fn combinator_is_associative() {
+        let mut rng = XorShift::new(51);
+        for _ in 0..100 {
+            let p = LinStep { a: rng.uniform(-1.0, 1.0), b: rng.uniform(-1.0, 1.0) };
+            let q = LinStep { a: rng.uniform(-1.0, 1.0), b: rng.uniform(-1.0, 1.0) };
+            let s = LinStep { a: rng.uniform(-1.0, 1.0), b: rng.uniform(-1.0, 1.0) };
+            let l = combine(combine(p, q), s);
+            let r = combine(p, combine(q, s));
+            assert!((l.a - r.a).abs() < 1e-12 && (l.b - r.b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut rng = XorShift::new(52);
+        for logn in 0..=10 {
+            let n = 1 << logn;
+            // Decay in (0,1) like a stable SSM.
+            let a: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 0.99)).collect();
+            let b = rng.vec(n, -1.0, 1.0);
+            let d = max_abs_diff(&mamba_scan_parallel(&a, &b), &mamba_scan_serial(&a, &b));
+            assert!(d < 1e-10, "n={n} diff={d}");
+        }
+    }
+
+    #[test]
+    fn tiled_matches_serial_ragged() {
+        let mut rng = XorShift::new(53);
+        let n = 1000;
+        let a: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 0.99)).collect();
+        let b = rng.vec(n, -1.0, 1.0);
+        let d = max_abs_diff(&mamba_scan_tiled(&a, &b, 32), &mamba_scan_serial(&a, &b));
+        assert!(d < 1e-10, "diff={d}");
+    }
+
+    #[test]
+    fn pure_prefix_sum_special_case() {
+        // a == 1 reduces the recurrence to an inclusive prefix sum.
+        let b = [2.0, 4.0, 6.0, 8.0];
+        let a = [1.0; 4];
+        assert_eq!(mamba_scan_serial(&a, &b), vec![2.0, 6.0, 12.0, 20.0]);
+        let d = max_abs_diff(
+            &mamba_scan_parallel(&a, &b),
+            &mamba_scan_serial(&a, &b),
+        );
+        assert!(d < 1e-12);
+    }
+
+    #[test]
+    fn zero_decay_passes_input_through() {
+        // a == 0 means h[t] = b[t].
+        let a = [0.0; 8];
+        let b: Vec<f64> = (0..8).map(|i| i as f64).collect();
+        assert_eq!(mamba_scan_parallel(&a, &b), b);
+    }
+
+    #[test]
+    fn prop_parallel_and_tiled_match_serial() {
+        prop::quick(
+            "mamba scan variants agree",
+            |rng| {
+                let n = rng.range(1, 600);
+                let a: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+                let b = rng.vec(n, -2.0, 2.0);
+                (a, b)
+            },
+            prop::no_shrink,
+            |(a, b)| {
+                let want = mamba_scan_serial(a, b);
+                let tiled = mamba_scan_tiled(a, b, 16);
+                let d1 = max_abs_diff(&tiled, &want);
+                if a.len().is_power_of_two() {
+                    let par = mamba_scan_parallel(a, b);
+                    let d0 = max_abs_diff(&par, &want);
+                    if d0 > 1e-8 {
+                        return Err(format!("parallel diff {d0}"));
+                    }
+                }
+                if d1 > 1e-8 {
+                    return Err(format!("tiled diff {d1}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,83 @@
+//! C-scan: the sequential prefix sum (paper §IV-A).
+//!
+//! One element per step, inherently serial — the paper's Design 2 runs this
+//! on the baseline RDU and is limited to 1 element/cycle/channel no matter
+//! how wide the fabric is.
+
+/// Exclusive serial scan: `y[i] = Σ_{j<i} x[j]`, `y[0] = 0`.
+pub fn c_scan_exclusive(x: &[f64]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(x.len());
+    let mut acc = 0.0;
+    for &v in x {
+        out.push(acc);
+        acc += v;
+    }
+    out
+}
+
+/// Inclusive serial scan: `y[i] = Σ_{j<=i} x[j]`.
+pub fn c_scan_inclusive(x: &[f64]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(x.len());
+    let mut acc = 0.0;
+    for &v in x {
+        acc += v;
+        out.push(acc);
+    }
+    out
+}
+
+/// Serial exclusive scan under an arbitrary associative operator with
+/// identity `id` (used by the tiled scan's tile-sum pass).
+pub fn serial_exclusive_op<T: Copy>(x: &[T], id: T, op: impl Fn(T, T) -> T) -> Vec<T> {
+    let mut out = Vec::with_capacity(x.len());
+    let mut acc = id;
+    for &v in x {
+        out.push(acc);
+        acc = op(acc, v);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exclusive_empty_and_single() {
+        assert!(c_scan_exclusive(&[]).is_empty());
+        assert_eq!(c_scan_exclusive(&[5.0]), vec![0.0]);
+    }
+
+    #[test]
+    fn inclusive_matches_manual() {
+        assert_eq!(
+            c_scan_inclusive(&[1.0, 2.0, 3.0]),
+            vec![1.0, 3.0, 6.0]
+        );
+    }
+
+    #[test]
+    fn exclusive_shifted_inclusive() {
+        let x = [3.0, 1.0, 4.0, 1.0, 5.0];
+        let ex = c_scan_exclusive(&x);
+        let inc = c_scan_inclusive(&x);
+        for i in 1..x.len() {
+            assert_eq!(ex[i], inc[i - 1]);
+        }
+        assert_eq!(ex[0], 0.0);
+    }
+
+    #[test]
+    fn generic_op_matches_specialized() {
+        let x = [2.0, 4.0, 6.0, 8.0];
+        let got = serial_exclusive_op(&x, 0.0, |a, b| a + b);
+        assert_eq!(got, c_scan_exclusive(&x));
+    }
+
+    #[test]
+    fn generic_op_max_scan() {
+        let x = [1.0, 5.0, 3.0, 7.0];
+        let got = serial_exclusive_op(&x, f64::NEG_INFINITY, f64::max);
+        assert_eq!(got, vec![f64::NEG_INFINITY, 1.0, 5.0, 5.0]);
+    }
+}

@@ -1,0 +1,148 @@
+//! Tiled scan for long sequences (paper §IV-A, after GPU Gems ch. 39 [16]).
+//!
+//! A length-N sequence is partitioned into R-element tiles, each sized to fit
+//! one PCU (R = PCU lane width, mirroring the FFT tiling of §III). Each tile
+//! is scanned locally by a parallel-scan PCU program, the per-tile totals are
+//! scanned recursively, and the resulting tile offsets are added back.
+
+use super::blelloch::blelloch_exclusive_op;
+
+/// Exclusive tiled scan with tile size `r` (power of two). Handles arbitrary
+/// `x.len()` by padding the final tile with the identity.
+pub fn tiled_exclusive(x: &[f64], r: usize) -> Vec<f64> {
+    tiled_exclusive_op(x, r, 0.0, |a, b| a + b)
+}
+
+/// Exclusive tiled scan under an arbitrary associative operator.
+pub fn tiled_exclusive_op<T: Copy>(
+    x: &[T],
+    r: usize,
+    id: T,
+    op: impl Fn(T, T) -> T + Copy,
+) -> Vec<T> {
+    assert!(r.is_power_of_two() && r >= 2, "tiled scan: R={r} must be 2^k >= 2");
+    let n = x.len();
+    if n == 0 {
+        return Vec::new();
+    }
+
+    // Local exclusive scan per padded tile + capture each tile's total.
+    let ntiles = n.div_ceil(r);
+    let mut local = Vec::with_capacity(ntiles * r);
+    let mut totals = Vec::with_capacity(ntiles);
+    for t in 0..ntiles {
+        let lo = t * r;
+        let hi = (lo + r).min(n);
+        let mut tile = vec![id; r];
+        tile[..hi - lo].copy_from_slice(&x[lo..hi]);
+        let scanned = blelloch_exclusive_op(&tile, id, op);
+        // Tile total = exclusive[last] ⊕ last input.
+        totals.push(op(scanned[r - 1], tile[r - 1]));
+        local.extend_from_slice(&scanned);
+    }
+
+    // Scan the tile totals (recursively tiled when there are many tiles —
+    // exactly the hierarchical PCU mapping for million-point sequences).
+    let offsets = if ntiles > r {
+        tiled_exclusive_op(&totals, r, id, op)
+    } else {
+        let mut padded = vec![id; ntiles.next_power_of_two()];
+        padded[..ntiles].copy_from_slice(&totals);
+        blelloch_exclusive_op(&padded, id, op)[..ntiles].to_vec()
+    };
+
+    // Add offsets back and truncate padding.
+    let mut out = Vec::with_capacity(n);
+    for (t, &off) in offsets.iter().enumerate() {
+        let lo = t * r;
+        let hi = (lo + r).min(n);
+        for j in lo..hi {
+            out.push(op(off, local[t * r + (j - lo)]));
+        }
+    }
+    out
+}
+
+/// Number of R-element tile scans performed for an N-point tiled scan
+/// (including the recursive total-scans); each is one PCU pass in the
+/// scan-mode mapping, so this drives the perf model.
+pub fn tile_count(n: usize, r: usize) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    let ntiles = n.div_ceil(r);
+    if ntiles > r {
+        ntiles + tile_count(ntiles, r)
+    } else if ntiles > 1 {
+        ntiles + 1
+    } else {
+        1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::serial::c_scan_exclusive;
+    use crate::util::{max_abs_diff, prop};
+
+    #[test]
+    fn matches_serial_exact_tiles() {
+        let x: Vec<f64> = (0..64).map(|i| i as f64).collect();
+        let d = max_abs_diff(&tiled_exclusive(&x, 8), &c_scan_exclusive(&x));
+        assert!(d < 1e-9);
+    }
+
+    #[test]
+    fn matches_serial_ragged_tail() {
+        let x: Vec<f64> = (0..53).map(|i| (i as f64).cos()).collect();
+        let d = max_abs_diff(&tiled_exclusive(&x, 8), &c_scan_exclusive(&x));
+        assert!(d < 1e-9);
+    }
+
+    #[test]
+    fn deep_recursion_many_tiles() {
+        // 4096 elements, R=4 -> 1024 tiles -> 256 -> 64 -> 16 -> 4 -> 1: 5 levels.
+        let x: Vec<f64> = (0..4096).map(|i| ((i * 37) % 11) as f64 - 5.0).collect();
+        let d = max_abs_diff(&tiled_exclusive(&x, 4), &c_scan_exclusive(&x));
+        assert!(d < 1e-8);
+    }
+
+    #[test]
+    fn empty_and_tiny() {
+        assert!(tiled_exclusive(&[], 8).is_empty());
+        assert_eq!(tiled_exclusive(&[5.0], 8), vec![0.0]);
+    }
+
+    #[test]
+    fn tile_count_examples() {
+        assert_eq!(tile_count(0, 32), 0);
+        assert_eq!(tile_count(32, 32), 1);
+        assert_eq!(tile_count(64, 32), 2 + 1); // 2 tiles + 1 totals scan
+        // 1024 tiles of 32 over 32768 elems -> 1024 + recurse(1024, 32)
+        assert_eq!(tile_count(32768, 32), 1024 + 32 + 1);
+    }
+
+    #[test]
+    fn prop_matches_serial() {
+        prop::quick(
+            "tiled == serial",
+            |rng| {
+                let n = rng.range(0, 3000);
+                let r = 1usize << rng.range(1, 6);
+                (rng.vec(n, -10.0, 10.0), r)
+            },
+            prop::no_shrink,
+            |(xs, r)| {
+                let got = tiled_exclusive(xs, *r);
+                let want = c_scan_exclusive(xs);
+                let d = max_abs_diff(&got, &want);
+                if d < 1e-8 {
+                    Ok(())
+                } else {
+                    Err(format!("R={r} diff {d}"))
+                }
+            },
+        );
+    }
+}

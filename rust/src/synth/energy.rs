@@ -1,0 +1,112 @@
+//! Chip-level power and per-inference energy model — the natural corollary
+//! of Table IV: the extensions add ≤ 0.5 % chip power while cutting
+//! latency by 2–5×, so *energy per inference* drops almost proportionally
+//! to the speedup.
+//!
+//! Chip power = Σ PCU power (per-variant, from the Table IV model, scaled
+//! to the production 32×12 geometry) + PMU SRAM power + HBM interface
+//! power. Energy(workload) = chip power × modeled latency (+ DRAM transfer
+//! energy at pJ/bit).
+
+use super::{baseline_power, synthesize};
+use crate::arch::{PcuMode, RduConfig};
+use crate::dfmodel::Estimate;
+
+/// PMU (1.5 MB SRAM + address generators) power at 1.6 GHz, mW.
+/// Literature-scale figure for a 45 nm 1.5 MB SRAM macro under activity.
+pub const PMU_POWER_MW: f64 = 95.0;
+
+/// HBM interface energy, pJ per bit transferred.
+pub const HBM_PJ_PER_BIT: f64 = 3.5;
+
+/// Chip-level power breakdown in watts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChipPower {
+    pub pcu_w: f64,
+    pub pmu_w: f64,
+    pub total_w: f64,
+}
+
+/// Static+dynamic chip power of an RDU configuration (compute + SRAM).
+pub fn chip_power(cfg: &RduConfig) -> ChipPower {
+    let geom = cfg.spec.pcu;
+    // Per-PCU power: baseline plus every fabricated extension's routes.
+    let mut pcu_mw = baseline_power(geom);
+    for &mode in &cfg.extensions {
+        let s = synthesize(geom, Some(mode));
+        pcu_mw += s.power_mw - baseline_power(geom);
+    }
+    let pcu_w = pcu_mw * cfg.spec.n_pcu as f64 / 1e3;
+    let pmu_w = PMU_POWER_MW * cfg.spec.n_pmu as f64 / 1e3;
+    ChipPower { pcu_w, pmu_w, total_w: pcu_w + pmu_w }
+}
+
+/// Energy (joules) to run one workload whose DFModel estimate is `est` on
+/// configuration `cfg`: chip power × latency + DRAM transfer energy.
+pub fn inference_energy(cfg: &RduConfig, est: &Estimate, dram_bytes: f64) -> f64 {
+    let p = chip_power(cfg);
+    p.total_w * est.total_seconds + dram_bytes * 8.0 * HBM_PJ_PER_BIT * 1e-12
+}
+
+/// Energy overhead ratio of fabricating `mode` into every PCU, chip-wide —
+/// Table IV's < 1 % claim expressed at chip scale.
+pub fn extension_power_overhead(mode: PcuMode) -> f64 {
+    let base = RduConfig::baseline();
+    let ext = RduConfig::baseline().with_extension(mode);
+    chip_power(&ext).total_w / chip_power(&base).total_w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfmodel;
+    use crate::fft::BaileyVariant;
+    use crate::workloads::{hyena_decoder, DecoderConfig};
+
+    #[test]
+    fn chip_power_plausible() {
+        // 520 production PCUs + 520 PMUs in 45 nm-scale figures: hundreds
+        // of watts (accelerator-class), not milliwatts or megawatts.
+        let p = chip_power(&RduConfig::baseline());
+        assert!(p.total_w > 100.0 && p.total_w < 2000.0, "{p:?}");
+    }
+
+    #[test]
+    fn extension_power_under_one_percent_chipwide() {
+        for mode in [PcuMode::Fft, PcuMode::HsScan, PcuMode::BScan] {
+            let r = extension_power_overhead(mode);
+            assert!(r > 1.0 && r < 1.01, "{mode}: {r}");
+        }
+    }
+
+    #[test]
+    fn fft_mode_cuts_energy_per_inference() {
+        // The paper's implicit energy story: ~0.3 % more power, ~4× less
+        // time → ~4× less energy per inference.
+        let dc = DecoderConfig::paper(1 << 20);
+        let g = hyena_decoder(&dc, BaileyVariant::Vector);
+        let base = RduConfig::baseline();
+        let fftm = RduConfig::fft_mode();
+        let io = g.external_input_bytes() + g.external_output_bytes() + g.total_weight_bytes();
+        let e_base = inference_energy(&base, &dfmodel::estimate(&g, &base).unwrap(), io);
+        let e_fft = inference_energy(&fftm, &dfmodel::estimate(&g, &fftm).unwrap(), io);
+        let gain = e_base / e_fft;
+        assert!(gain > 2.0, "energy gain {gain}");
+    }
+
+    #[test]
+    fn dram_energy_counts() {
+        let cfg = RduConfig::baseline();
+        let est = Estimate {
+            graph_name: "x".into(),
+            cfg_name: cfg.name(),
+            total_seconds: 0.0,
+            compute_seconds: 0.0,
+            memory_seconds: 0.0,
+            sections: 1,
+            kernels: vec![],
+        };
+        let e = inference_energy(&cfg, &est, 1e9);
+        assert!((e - 1e9 * 8.0 * HBM_PJ_PER_BIT * 1e-12).abs() < 1e-12);
+    }
+}

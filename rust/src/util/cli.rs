@@ -1,0 +1,161 @@
+//! Tiny CLI argument parser (the `clap` crate is not vendored offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional arguments,
+//! which is all the `ssm-rdu` binary and the examples need.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals in order plus `--key [value]` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// Positional arguments in order of appearance.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options; bare `--flag` maps to `"true"`.
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless the next token is another option.
+                    let takes_value =
+                        matches!(it.peek(), Some(n) if !n.starts_with("--"));
+                    if takes_value {
+                        out.options
+                            .insert(stripped.to_string(), it.next().unwrap());
+                    } else {
+                        out.options.insert(stripped.to_string(), "true".into());
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process's own arguments.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Look up an option by key.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    /// Option as string with a default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Whether a bare flag (or any value) was supplied.
+    pub fn flag(&self, key: &str) -> bool {
+        self.options.contains_key(key)
+    }
+
+    /// Parse an option as `usize` with a default. Panics with a clear message
+    /// on malformed input (CLI boundary — fail fast).
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .replace('_', "")
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key}: expected integer, got `{v}`")),
+        }
+    }
+
+    /// Parse an option as `f64` with a default.
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key}: expected number, got `{v}`")),
+        }
+    }
+
+    /// Parse a comma-separated list of `usize` (e.g. `--seq-lens 262144,524288`).
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim().replace('_', "").parse().unwrap_or_else(|_| {
+                        panic!("--{key}: expected comma-separated integers, got `{v}`")
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["map", "hyena", "--seq-len", "1024", "--verbose"]);
+        assert_eq!(a.positional, vec!["map", "hyena"]);
+        assert_eq!(a.get("seq-len"), Some("1024"));
+        assert!(a.flag("verbose"));
+        // A bare flag followed by a positional consumes it as a value —
+        // documented greedy behaviour; use `--flag=true` to avoid it.
+        let b = parse(&["--verbose", "hyena"]);
+        assert_eq!(b.get("verbose"), Some("hyena"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["--model=mamba", "--l=65536"]);
+        assert_eq!(a.get("model"), Some("mamba"));
+        assert_eq!(a.usize_or("l", 0), 65536);
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = parse(&["--dry-run", "--out", "x.txt"]);
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.get("out"), Some("x.txt"));
+    }
+
+    #[test]
+    fn numeric_helpers_defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.usize_or("n", 7), 7);
+        assert_eq!(a.f64_or("x", 1.5), 1.5);
+        assert_eq!(a.usize_list_or("ls", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn underscores_in_integers() {
+        let a = parse(&["--l", "1_048_576"]);
+        assert_eq!(a.usize_or("l", 0), 1 << 20);
+    }
+
+    #[test]
+    fn usize_list_parses() {
+        let a = parse(&["--ls", "262144, 524288,1048576"]);
+        assert_eq!(a.usize_list_or("ls", &[]), vec![262144, 524288, 1048576]);
+    }
+
+    #[test]
+    #[should_panic(expected = "expected integer")]
+    fn malformed_integer_panics() {
+        parse(&["--n", "abc"]).usize_or("n", 0);
+    }
+}

@@ -1,0 +1,134 @@
+//! Minimal complex arithmetic for the FFT substrate (`num-complex` is not
+//! vendored in the offline image).
+
+use std::ops::{Add, AddAssign, Mul, Neg, Sub};
+
+/// Complex number over `f64`.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct C64 {
+    /// Real part.
+    pub re: f64,
+    /// Imaginary part.
+    pub im: f64,
+}
+
+impl C64 {
+    /// Construct from real and imaginary parts.
+    pub const fn new(re: f64, im: f64) -> Self {
+        Self { re, im }
+    }
+
+    /// The additive identity.
+    pub const ZERO: C64 = C64::new(0.0, 0.0);
+    /// The multiplicative identity.
+    pub const ONE: C64 = C64::new(1.0, 0.0);
+
+    /// Purely real value.
+    pub const fn real(re: f64) -> Self {
+        Self { re, im: 0.0 }
+    }
+
+    /// `e^{iθ}` on the unit circle.
+    pub fn cis(theta: f64) -> Self {
+        Self::new(theta.cos(), theta.sin())
+    }
+
+    /// Complex conjugate.
+    pub fn conj(self) -> Self {
+        Self::new(self.re, -self.im)
+    }
+
+    /// Magnitude `|z|`.
+    pub fn abs(self) -> f64 {
+        self.re.hypot(self.im)
+    }
+
+    /// Scale by a real factor.
+    pub fn scale(self, s: f64) -> Self {
+        Self::new(self.re * s, self.im * s)
+    }
+}
+
+impl Add for C64 {
+    type Output = C64;
+    fn add(self, o: C64) -> C64 {
+        C64::new(self.re + o.re, self.im + o.im)
+    }
+}
+
+impl AddAssign for C64 {
+    fn add_assign(&mut self, o: C64) {
+        self.re += o.re;
+        self.im += o.im;
+    }
+}
+
+impl Sub for C64 {
+    type Output = C64;
+    fn sub(self, o: C64) -> C64 {
+        C64::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+impl Mul for C64 {
+    type Output = C64;
+    fn mul(self, o: C64) -> C64 {
+        C64::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+}
+
+impl Neg for C64 {
+    type Output = C64;
+    fn neg(self) -> C64 {
+        C64::new(-self.re, -self.im)
+    }
+}
+
+/// Max elementwise |a - b| over complex slices.
+pub fn max_abs_diff_c(a: &[C64], b: &[C64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "max_abs_diff_c: length mismatch");
+    a.iter().zip(b).map(|(x, y)| (*x - *y).abs()).fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mul_matches_hand_computation() {
+        let a = C64::new(1.0, 2.0);
+        let b = C64::new(3.0, -1.0);
+        let c = a * b; // (3+2) + i(-1+6)
+        assert_eq!(c, C64::new(5.0, 5.0));
+    }
+
+    #[test]
+    fn cis_unit_magnitude() {
+        for k in 0..16 {
+            let z = C64::cis(k as f64 * 0.7);
+            assert!((z.abs() - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn conj_negates_im() {
+        assert_eq!(C64::new(1.0, 2.0).conj(), C64::new(1.0, -2.0));
+    }
+
+    #[test]
+    fn add_sub_roundtrip() {
+        let a = C64::new(0.5, -0.25);
+        let b = C64::new(-2.0, 4.0);
+        let r = a + b - b;
+        assert!((r - a).abs() < 1e-15);
+    }
+
+    #[test]
+    fn scale_and_neg() {
+        assert_eq!(C64::new(1.0, -2.0).scale(2.0), C64::new(2.0, -4.0));
+        assert_eq!(-C64::new(1.0, -2.0), C64::new(-1.0, 2.0));
+    }
+}

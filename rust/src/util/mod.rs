@@ -1,0 +1,120 @@
+//! Offline-friendly infrastructure: PRNG, complex arithmetic, property-test
+//! runner, CLI parsing and table formatting.
+//!
+//! The build image vendors only the `xla` crate's dependency closure, so the
+//! usual ecosystem crates (`rand`, `proptest`, `clap`, `prettytable`) are not
+//! available; these modules provide the small slices of them this crate needs.
+
+pub mod cli;
+pub mod complex;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod table;
+
+pub use complex::C64;
+pub use rng::XorShift;
+
+/// Relative-error comparison for floating point model outputs.
+///
+/// Returns `true` when `a` and `b` agree to within `rel` relative error
+/// (measured against the larger magnitude) or within `abs` absolute error.
+pub fn approx_eq(a: f64, b: f64, rel: f64, abs: f64) -> bool {
+    let diff = (a - b).abs();
+    if diff <= abs {
+        return true;
+    }
+    let scale = a.abs().max(b.abs());
+    diff <= rel * scale
+}
+
+/// Maximum absolute elementwise difference between two slices.
+///
+/// Panics if lengths differ — callers compare tensors of identical shape.
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "max_abs_diff: length mismatch");
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+/// Format a quantity in engineering units (k / M / G / T / P).
+pub fn eng(x: f64) -> String {
+    let ax = x.abs();
+    let (scale, suffix) = if ax >= 1e15 {
+        (1e15, "P")
+    } else if ax >= 1e12 {
+        (1e12, "T")
+    } else if ax >= 1e9 {
+        (1e9, "G")
+    } else if ax >= 1e6 {
+        (1e6, "M")
+    } else if ax >= 1e3 {
+        (1e3, "k")
+    } else {
+        (1.0, "")
+    };
+    format!("{:.3}{}", x / scale, suffix)
+}
+
+/// Format seconds with an adaptive unit (s / ms / µs / ns).
+pub fn fmt_time(seconds: f64) -> String {
+    let a = seconds.abs();
+    if a >= 1.0 {
+        format!("{seconds:.3} s")
+    } else if a >= 1e-3 {
+        format!("{:.3} ms", seconds * 1e3)
+    } else if a >= 1e-6 {
+        format!("{:.3} µs", seconds * 1e6)
+    } else {
+        format!("{:.1} ns", seconds * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn approx_eq_exact() {
+        assert!(approx_eq(1.0, 1.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn approx_eq_rel_band() {
+        assert!(approx_eq(100.0, 100.9, 0.01, 0.0));
+        assert!(!approx_eq(100.0, 102.0, 0.01, 0.0));
+    }
+
+    #[test]
+    fn approx_eq_abs_band() {
+        assert!(approx_eq(1e-12, 0.0, 0.0, 1e-9));
+    }
+
+    #[test]
+    fn max_abs_diff_basic() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.0, 4.0]), 2.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn max_abs_diff_len_mismatch_panics() {
+        max_abs_diff(&[1.0], &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn eng_units() {
+        assert_eq!(eng(640e12), "640.000T");
+        assert_eq!(eng(1.5e3), "1.500k");
+        assert_eq!(eng(12.0), "12.000");
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert_eq!(fmt_time(2.0), "2.000 s");
+        assert_eq!(fmt_time(2e-3), "2.000 ms");
+        assert_eq!(fmt_time(2e-6), "2.000 µs");
+        assert_eq!(fmt_time(2e-9), "2.0 ns");
+    }
+}

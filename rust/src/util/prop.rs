@@ -1,0 +1,179 @@
+//! Mini property-testing runner — a deliberately small stand-in for
+//! `proptest`, which is not vendored in the offline image.
+//!
+//! The runner draws `cases` random inputs from a generator, checks a property
+//! returning `Result<(), String>`, and on failure performs greedy shrinking
+//! using a caller-supplied shrink function before panicking with the minimal
+//! counterexample. Deterministic: the seed is part of the call, so failures
+//! reproduce exactly.
+
+use super::rng::XorShift;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of random cases to draw.
+    pub cases: usize,
+    /// RNG seed (failures reproduce with the same seed).
+    pub seed: u64,
+    /// Maximum shrink iterations on failure.
+    pub max_shrink: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 128,
+            seed: 0xD15EA5E,
+            max_shrink: 512,
+        }
+    }
+}
+
+/// Run a property over random inputs with shrinking.
+///
+/// * `gen` — draws one random input.
+/// * `shrink` — proposes strictly "smaller" candidates for a failing input
+///   (return an empty vec when fully shrunk).
+/// * `prop` — the property; `Err(msg)` marks a failure.
+///
+/// Panics with the minimal counterexample on failure.
+pub fn check<T, G, S, P>(cfg: &Config, name: &str, mut gen: G, shrink: S, prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut XorShift) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = XorShift::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            // Greedy shrink: repeatedly take the first still-failing candidate.
+            let mut cur = input;
+            let mut msg = first_msg;
+            let mut budget = cfg.max_shrink;
+            'outer: while budget > 0 {
+                for cand in shrink(&cur) {
+                    budget -= 1;
+                    if let Err(m) = prop(&cand) {
+                        cur = cand;
+                        msg = m;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property `{name}` failed (case {case}, seed {seed:#x}):\n  \
+                 counterexample: {cur:?}\n  error: {msg}",
+                seed = cfg.seed
+            );
+        }
+    }
+}
+
+/// Convenience: run a property with the default config.
+pub fn quick<T, G, S, P>(name: &str, gen: G, shrink: S, prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut XorShift) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    check(&Config::default(), name, gen, shrink, prop)
+}
+
+/// Shrinker for `usize`: halves and decrements.
+pub fn shrink_usize(x: &usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    if *x > 0 {
+        out.push(x / 2);
+        out.push(x - 1);
+    }
+    out.dedup();
+    out
+}
+
+/// Shrinker for `Vec<f64>`: drop halves, zero elements, halve magnitudes.
+#[allow(clippy::ptr_arg)] // shrinkers take &T where T = Vec<f64>
+pub fn shrink_vec_f64(xs: &Vec<f64>) -> Vec<Vec<f64>> {
+    let mut out = Vec::new();
+    let n = xs.len();
+    if n > 1 {
+        out.push(xs[..n / 2].to_vec());
+        out.push(xs[n / 2..].to_vec());
+    }
+    if xs.iter().any(|&x| x != 0.0) {
+        out.push(xs.iter().map(|&x| x / 2.0).collect());
+        out.push(vec![0.0; n]);
+    }
+    out
+}
+
+/// No-op shrinker for inputs where shrinking isn't meaningful.
+pub fn no_shrink<T>(_: &T) -> Vec<T> {
+    Vec::new()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        quick(
+            "add-commutes",
+            |r| (r.uniform(-1e3, 1e3), r.uniform(-1e3, 1e3)),
+            no_shrink,
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("not commutative".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        // Property "x < 10" fails; shrinking should land on exactly 10.
+        let result = std::panic::catch_unwind(|| {
+            check(
+                &Config { cases: 64, seed: 3, max_shrink: 256 },
+                "lt-ten",
+                |r| r.range(10, 1000),
+                |x| shrink_usize(x).into_iter().filter(|&c| c >= 10).collect(),
+                |&x| if x < 10 { Ok(()) } else { Err(format!("{x} >= 10")) },
+            );
+        });
+        let err = result.expect_err("property should fail");
+        let msg = err.downcast_ref::<String>().expect("panic message");
+        assert!(msg.contains("counterexample: 10"), "msg: {msg}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        // Two identical failing runs produce identical messages.
+        let run = || {
+            std::panic::catch_unwind(|| {
+                check(
+                    &Config { cases: 16, seed: 77, max_shrink: 8 },
+                    "always-fails",
+                    |r| r.below(100),
+                    no_shrink,
+                    |&x| Err(format!("x={x}")),
+                )
+            })
+            .expect_err("fails")
+            .downcast_ref::<String>()
+            .unwrap()
+            .clone()
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,120 @@
+//! Plain-text table rendering for benchmark and report output.
+//!
+//! Every figure/table bench prints its rows through this module so the output
+//! lines up with the paper's tables for eyeball comparison.
+
+/// A simple left/right-aligned text table.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with a title and column headers.
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match the header width).
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "table `{}`: row width {} != header width {}",
+            self.title,
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Append a row of string slices.
+    pub fn row_str(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    /// Render to a string. First column is left-aligned, the rest right-aligned.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let sep: String = {
+            let total: usize = widths.iter().sum::<usize>() + 3 * (ncols - 1);
+            "-".repeat(total)
+        };
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| {
+                    if i == 0 {
+                        format!("{:<w$}", c, w = widths[i])
+                    } else {
+                        format!("{:>w$}", c, w = widths[i])
+                    }
+                })
+                .collect::<Vec<_>>()
+                .join(" | ")
+        };
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render and print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_columns() {
+        let mut t = Table::new("demo", &["design", "latency", "speedup"]);
+        t.row_str(&["attention", "1.00 s", "1.00x"]);
+        t.row_str(&["vector-fft", "4.59 ms", "217.74x"]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("attention"));
+        // Right-aligned numeric columns: speedup column ends aligned.
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 5); // title, header, sep, 2 rows
+        assert_eq!(lines[3].len(), lines[4].len());
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn row_width_mismatch_panics() {
+        Table::new("t", &["a", "b"]).row_str(&["only-one"]);
+    }
+
+    #[test]
+    fn unicode_width_counts_chars() {
+        let mut t = Table::new("µ", &["col"]);
+        t.row_str(&["1.0 µs"]);
+        assert!(t.render().contains("µs"));
+    }
+}

@@ -1,0 +1,111 @@
+//! Attention decoder workload graph (paper Fig. 3A): the quadratic
+//! self-attention baseline every SSM design is compared against.
+
+use super::blocks::{self, gemm, gemm_flops, layer_norm};
+use super::config::DecoderConfig;
+use crate::graph::{Graph, Kernel, OpClass};
+
+/// Build the attention decoder layer: LN → QKV projections →
+/// `Q·Kᵀ` (GEMM, 2·L²·D) → softmax → `A·V` (GEMM, 2·L²·D) → output
+/// projection → residual/LN/MLP/residual.
+pub fn attention_decoder(cfg: &DecoderConfig) -> Graph {
+    let l = cfg.seq_len;
+    let d = cfg.d_model;
+    let b = cfg.dtype_bytes;
+    let act = cfg.act_bytes();
+    let lsq = l as f64 * l as f64;
+
+    let mut g = Graph::new(&format!("attention-decoder L={l} D={d}"));
+
+    let ln1 = layer_norm(&mut g, cfg, "ln1", d);
+    g.input(ln1, act);
+
+    let q = gemm(&mut g, cfg, "proj.q", l, d, d);
+    let k = gemm(&mut g, cfg, "proj.k", l, d, d);
+    let v = gemm(&mut g, cfg, "proj.v", l, d, d);
+    g.connect(ln1, q, act);
+    g.connect(ln1, k, act);
+    g.connect(ln1, v, act);
+
+    // Scores: Q·Kᵀ — the quadratic kernel (L×L output).
+    let scores = g.add(
+        Kernel::new("attn.qk", OpClass::Gemm, gemm_flops(l, l, d), 2.0 * act, lsq * b)
+            .with_stream(l as f64, l as f64),
+    );
+    g.connect(q, scores, act);
+    g.connect(k, scores, act);
+
+    // Softmax over each of the L rows: max + exp + sum + divide ≈ 5 FLOP/elem.
+    let softmax = g.add(
+        Kernel::new("attn.softmax", OpClass::Softmax, 5.0 * lsq, lsq * b, lsq * b)
+            .with_stream(l as f64, l as f64),
+    );
+    g.connect(scores, softmax, lsq * b);
+
+    // Attention output: A·V.
+    let av = g.add(
+        Kernel::new("attn.av", OpClass::Gemm, gemm_flops(l, d, l), lsq * b + act, act)
+            .with_stream(l as f64, d as f64),
+    );
+    g.connect(softmax, av, lsq * b);
+    g.connect(v, av, act);
+
+    let out = gemm(&mut g, cfg, "proj.out", l, d, d);
+    g.connect(av, out, act);
+
+    let last = blocks::mlp_block(&mut g, cfg, out);
+    g.output(last, act);
+
+    debug_assert!(g.validate().is_ok());
+    g
+}
+
+/// Closed-form FLOP count of the attention core (scores + softmax + AV):
+/// `4·L²·D + 5·L²` — the quadratic term dominating Fig. 7/11's Design 1.
+pub fn attention_core_flops(cfg: &DecoderConfig) -> f64 {
+    let l = cfg.seq_len as f64;
+    let d = cfg.d_model as f64;
+    4.0 * l * l * d + 5.0 * l * l
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn graph_is_valid() {
+        let g = attention_decoder(&DecoderConfig::paper(1 << 14));
+        assert!(g.validate().is_ok());
+        assert_eq!(g.kernels.len(), 14);
+    }
+
+    #[test]
+    fn quadratic_core_dominates_at_paper_lengths() {
+        let cfg = DecoderConfig::paper(1 << 18); // 256K
+        let g = attention_decoder(&cfg);
+        let core = attention_core_flops(&cfg);
+        let total = g.total_flops();
+        assert!(core / total > 0.99, "core={core} total={total}");
+    }
+
+    #[test]
+    fn flops_scale_quadratically() {
+        let f1 = attention_decoder(&DecoderConfig::paper(1 << 18)).total_flops();
+        let f2 = attention_decoder(&DecoderConfig::paper(1 << 19)).total_flops();
+        let ratio = f2 / f1;
+        assert!((ratio - 4.0).abs() < 0.05, "ratio={ratio}");
+    }
+
+    #[test]
+    fn core_flops_match_graph() {
+        let cfg = DecoderConfig::paper(1 << 16);
+        let g = attention_decoder(&cfg);
+        let got: f64 = g
+            .kernels
+            .iter()
+            .filter(|k| k.name.starts_with("attn."))
+            .map(|k| k.flops)
+            .sum();
+        assert_eq!(got, attention_core_flops(&cfg));
+    }
+}

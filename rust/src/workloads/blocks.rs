@@ -1,0 +1,123 @@
+//! Shared decoder building blocks: GEMMs, norms, element-wise maps and the
+//! MLP — the parts of the template common to all three decoders (Fig. 3).
+
+use super::config::DecoderConfig;
+use crate::graph::{Graph, Kernel, KernelId, OpClass};
+
+/// FLOPs of a `m × n × k` GEMM: `2·m·n·k`.
+pub fn gemm_flops(m: usize, n: usize, k: usize) -> f64 {
+    2.0 * m as f64 * n as f64 * k as f64
+}
+
+/// Add a dense projection `[rows × k] · [k × n] → [rows × n]`.
+pub fn gemm(g: &mut Graph, cfg: &DecoderConfig, name: &str, rows: usize, n: usize, k: usize) -> KernelId {
+    let b = cfg.dtype_bytes;
+    let kern = Kernel::new(
+        name,
+        OpClass::Gemm,
+        gemm_flops(rows, n, k),
+        rows as f64 * k as f64 * b,
+        rows as f64 * n as f64 * b,
+    )
+    .with_weights(k as f64 * n as f64 * b)
+    .with_stream(rows as f64, n as f64);
+    g.add(kern)
+}
+
+/// Add a layer norm over `[L × d]` (mean, variance, normalize, scale+shift
+/// ≈ 8 FLOP/element).
+pub fn layer_norm(g: &mut Graph, cfg: &DecoderConfig, name: &str, d: usize) -> KernelId {
+    let l = cfg.seq_len as f64;
+    let b = cfg.dtype_bytes;
+    let elems = l * d as f64;
+    let kern = Kernel::new(name, OpClass::Norm, 8.0 * elems, elems * b, elems * b)
+        .with_weights(2.0 * d as f64 * b)
+        .with_stream(l, d as f64);
+    g.add(kern)
+}
+
+/// Add an element-wise kernel over `elems` elements at `flops_per_elem`.
+pub fn eltwise(
+    g: &mut Graph,
+    cfg: &DecoderConfig,
+    name: &str,
+    elems: f64,
+    flops_per_elem: f64,
+    n_inputs: f64,
+) -> KernelId {
+    let b = cfg.dtype_bytes;
+    let kern = Kernel::new(
+        name,
+        OpClass::Elementwise,
+        flops_per_elem * elems,
+        n_inputs * elems * b,
+        elems * b,
+    )
+    .with_stream(cfg.seq_len as f64, elems / cfg.seq_len as f64);
+    g.add(kern)
+}
+
+/// Append the post-mixer half of the decoder: residual add → LN → MLP
+/// (two GEMMs with GELU) → residual add. Returns the final kernel id.
+///
+/// Paper §IV-C explicitly calls out the MLP as the Amdahl bound on the
+/// scan-mode speedup, so the MLP is part of every decoder graph.
+pub fn mlp_block(g: &mut Graph, cfg: &DecoderConfig, after: KernelId) -> KernelId {
+    let l = cfg.seq_len;
+    let d = cfg.d_model;
+    let h = cfg.mlp_mult * d;
+    let b = cfg.dtype_bytes;
+    let act = cfg.act_bytes();
+
+    let res1 = eltwise(g, cfg, "residual1", (l * d) as f64, 1.0, 2.0);
+    g.connect(after, res1, act);
+
+    let ln2 = layer_norm(g, cfg, "ln2", d);
+    g.connect(res1, ln2, act);
+
+    let fc1 = gemm(g, cfg, "mlp.fc1", l, h, d);
+    g.connect(ln2, fc1, act);
+
+    let gelu = eltwise(g, cfg, "mlp.gelu", (l * h) as f64, 8.0, 1.0);
+    g.connect(fc1, gelu, l as f64 * h as f64 * b);
+
+    let fc2 = gemm(g, cfg, "mlp.fc2", l, d, h);
+    g.connect(gelu, fc2, l as f64 * h as f64 * b);
+
+    let res2 = eltwise(g, cfg, "residual2", (l * d) as f64, 1.0, 2.0);
+    g.connect(fc2, res2, act);
+    g.connect(res1, res2, act);
+    res2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_flops_formula() {
+        assert_eq!(gemm_flops(10, 20, 30), 12000.0);
+    }
+
+    #[test]
+    fn mlp_block_wires_residuals() {
+        let cfg = DecoderConfig::paper(1 << 12);
+        let mut g = Graph::new("t");
+        let src = g.add(Kernel::new("src", OpClass::Gemm, 1.0, 1.0, 1.0));
+        g.input(src, 1.0);
+        let last = mlp_block(&mut g, &cfg, src);
+        g.output(last, cfg.act_bytes());
+        assert!(g.validate().is_ok());
+        // MLP GEMM flops: 2·L·4D·D × 2 directions.
+        let l = cfg.seq_len;
+        let d = cfg.d_model;
+        let want = 2.0 * gemm_flops(l, 4 * d, d);
+        let got: f64 = g
+            .kernels
+            .iter()
+            .filter(|k| k.name.starts_with("mlp.fc"))
+            .map(|k| k.flops)
+            .sum();
+        assert_eq!(got, want);
+    }
+}

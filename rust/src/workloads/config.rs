@@ -1,0 +1,98 @@
+//! Decoder configuration shared by all workload builders.
+
+/// Model/shape parameters of one decoder layer (paper §III-C/§IV-C: "All
+/// decoders are configured with a hidden dimension of 32" and swept over
+/// sequence lengths 256K, 512K, 1M).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DecoderConfig {
+    /// Sequence length L.
+    pub seq_len: usize,
+    /// Hidden (model) dimension D.
+    pub d_model: usize,
+    /// MLP expansion factor (4× in the standard transformer template).
+    pub mlp_mult: usize,
+    /// Bytes per element (FP16 = 2).
+    pub dtype_bytes: f64,
+    /// Bailey FFT tile length R (paper: 16 or 32, matched to lane width).
+    pub fft_tile: usize,
+    /// Mamba SSM state dimension N.
+    pub state_dim: usize,
+    /// Mamba channel expansion factor E (d_inner = E·D).
+    pub expand: usize,
+}
+
+impl DecoderConfig {
+    /// The paper's evaluation configuration at sequence length `seq_len`:
+    /// D = 32, FP16, R = 32.
+    ///
+    /// The paper describes its Mamba decoder as "a linear time-invariant
+    /// (LTI) model that evolves hidden states across the sequence" whose
+    /// "core operation is a scan" (§II-B) — i.e. one scalar recurrence per
+    /// hidden channel (`N = 1`, `E = 1`, scan channels = D = 32). The full
+    /// selective-SSM shape (`N = 16`, `E = 2`) is available via
+    /// [`DecoderConfig::mamba_full`] for ablations.
+    pub fn paper(seq_len: usize) -> Self {
+        Self {
+            seq_len,
+            d_model: 32,
+            mlp_mult: 4,
+            dtype_bytes: 2.0,
+            fft_tile: 32,
+            state_dim: 1,
+            expand: 1,
+        }
+    }
+
+    /// Modern selective-SSM Mamba shape (N = 16 states, 2× channel
+    /// expansion) — used by the ablation benches, not by the paper figures.
+    pub fn mamba_full(seq_len: usize) -> Self {
+        Self { state_dim: 16, expand: 2, ..Self::paper(seq_len) }
+    }
+
+    /// The paper's three sequence-length sweep points: 256K, 512K, 1M.
+    pub fn paper_sweep() -> [Self; 3] {
+        [
+            Self::paper(256 * 1024),
+            Self::paper(512 * 1024),
+            Self::paper(1024 * 1024),
+        ]
+    }
+
+    /// Mamba inner channel count `E·D`.
+    pub fn d_inner(&self) -> usize {
+        self.expand * self.d_model
+    }
+
+    /// Bytes of one `L × D` activation tensor.
+    pub fn act_bytes(&self) -> f64 {
+        self.seq_len as f64 * self.d_model as f64 * self.dtype_bytes
+    }
+
+    /// Zero-padded FFT length for linear convolution over L points.
+    pub fn fft_len(&self) -> usize {
+        (2 * self.seq_len).next_power_of_two()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config() {
+        let c = DecoderConfig::paper(1 << 20);
+        assert_eq!(c.d_model, 32);
+        assert_eq!(c.d_inner(), 32);
+        assert_eq!(c.fft_len(), 1 << 21);
+        assert_eq!(c.act_bytes(), (1 << 20) as f64 * 32.0 * 2.0);
+        let full = DecoderConfig::mamba_full(1 << 20);
+        assert_eq!(full.d_inner(), 64);
+        assert_eq!(full.state_dim, 16);
+    }
+
+    #[test]
+    fn sweep_lengths() {
+        let ls: Vec<usize> = DecoderConfig::paper_sweep().iter().map(|c| c.seq_len).collect();
+        assert_eq!(ls, vec![262_144, 524_288, 1_048_576]);
+    }
+}

@@ -1,0 +1,202 @@
+//! Hyena decoder workload graph (paper Fig. 3B): "the same structural
+//! template as the attention decoder but replaces the GEMM kernel with an
+//! FFT-based convolution kernel… each GEMM is replaced by three FFT
+//! operations: two forward FFTs … and one inverse FFT".
+
+use super::blocks::{self, eltwise, gemm, layer_norm};
+use super::config::DecoderConfig;
+use crate::fft::{gemm_fft_flops, vector_fft_flops, BaileyVariant};
+use crate::graph::{Graph, Kernel, KernelId, OpClass};
+
+/// FLOPs of one N-point FFT under the chosen Bailey variant, per channel.
+fn fft_flops(n: usize, variant: BaileyVariant, r: usize) -> f64 {
+    match variant {
+        BaileyVariant::Vector => vector_fft_flops(n),
+        BaileyVariant::Gemm => gemm_fft_flops(n, r),
+    }
+}
+
+/// The op class FFT kernels carry under each variant: Vector-FFT runs
+/// butterflies (CUDA-core / FFT-mode path), GEMM-FFT runs dense R-point
+/// DFT matmuls (tensor-core / systolic path).
+fn fft_op(variant: BaileyVariant) -> OpClass {
+    match variant {
+        BaileyVariant::Vector => OpClass::VectorFft,
+        BaileyVariant::Gemm => OpClass::GemmFft,
+    }
+}
+
+/// Add one FFT-convolution module: FFT(x), FFT(filter), frequency-domain
+/// complex product, iFFT. All transforms are length `fft_len` (= 2L padded)
+/// over `D` independent channels.
+fn fft_conv(
+    g: &mut Graph,
+    cfg: &DecoderConfig,
+    tag: &str,
+    variant: BaileyVariant,
+    x: KernelId,
+    filt: KernelId,
+) -> KernelId {
+    let n = cfg.fft_len();
+    let d = cfg.d_model as f64;
+    let b = cfg.dtype_bytes;
+    let op = fft_op(variant);
+    let per_fft = fft_flops(n, variant, cfg.fft_tile) * d;
+    // Real input of N elements → N complex outputs (2 values each).
+    let real_bytes = n as f64 * d * b;
+    let cplx_bytes = 2.0 * real_bytes;
+
+    let fft_x = g.add(
+        Kernel::new(&format!("{tag}.fft_x"), op, per_fft, real_bytes, cplx_bytes)
+            .with_stream(n as f64, d),
+    );
+    g.connect(x, fft_x, cfg.act_bytes());
+
+    let fft_k = g.add(
+        Kernel::new(&format!("{tag}.fft_k"), op, per_fft, real_bytes, cplx_bytes)
+            .with_stream(n as f64, d),
+    );
+    g.connect(filt, fft_k, cfg.act_bytes());
+
+    // Frequency-domain pointwise complex multiply: 6 FLOP per complex pair.
+    let mul = g.add(
+        Kernel::new(
+            &format!("{tag}.freqmul"),
+            OpClass::Elementwise,
+            6.0 * n as f64 * d,
+            2.0 * cplx_bytes,
+            cplx_bytes,
+        )
+        .with_stream(n as f64, d),
+    );
+    g.connect(fft_x, mul, cplx_bytes);
+    g.connect(fft_k, mul, cplx_bytes);
+
+    let ifft = g.add(
+        Kernel::new(&format!("{tag}.ifft"), op, per_fft, cplx_bytes, real_bytes)
+            .with_stream(n as f64, d),
+    );
+    g.connect(mul, ifft, cplx_bytes);
+    ifft
+}
+
+/// Build the Hyena decoder layer under the chosen FFT variant.
+///
+/// Template (Fig. 3B): LN → q/k/v projections + filter generators → first
+/// FFT-conv (replacing `Q·Kᵀ`) → gate with v → second FFT-conv (replacing
+/// `A·V`) → output projection → residual/LN/MLP/residual.
+pub fn hyena_decoder(cfg: &DecoderConfig, variant: BaileyVariant) -> Graph {
+    let l = cfg.seq_len;
+    let d = cfg.d_model;
+    let act = cfg.act_bytes();
+    let vname = match variant {
+        BaileyVariant::Vector => "vector-fft",
+        BaileyVariant::Gemm => "gemm-fft",
+    };
+    let mut g = Graph::new(&format!("hyena-decoder[{vname}] L={l} D={d}"));
+
+    let ln1 = layer_norm(&mut g, cfg, "ln1", d);
+    g.input(ln1, act);
+
+    let q = gemm(&mut g, cfg, "proj.q", l, d, d);
+    let k = gemm(&mut g, cfg, "proj.k", l, d, d);
+    let v = gemm(&mut g, cfg, "proj.v", l, d, d);
+    g.connect(ln1, q, act);
+    g.connect(ln1, k, act);
+    g.connect(ln1, v, act);
+
+    // Implicit long-filter generation (Hyena's positional MLP), one filter
+    // per conv, cheap relative to the transforms.
+    let filt1 = eltwise(&mut g, cfg, "filter1", (l * d) as f64, 4.0, 1.0);
+    let filt2 = eltwise(&mut g, cfg, "filter2", (l * d) as f64, 4.0, 1.0);
+    g.connect(ln1, filt1, act);
+    g.connect(ln1, filt2, act);
+
+    // First conv replaces Q·Kᵀ.
+    let conv1 = fft_conv(&mut g, cfg, "conv1", variant, q, filt1);
+
+    // Gate with k (Hyena's element-wise multiplicative gating).
+    let gate1 = eltwise(&mut g, cfg, "gate1", (l * d) as f64, 1.0, 2.0);
+    g.connect(conv1, gate1, act);
+    g.connect(k, gate1, act);
+
+    // Second conv replaces A·V.
+    let conv2 = fft_conv(&mut g, cfg, "conv2", variant, gate1, filt2);
+
+    let gate2 = eltwise(&mut g, cfg, "gate2", (l * d) as f64, 1.0, 2.0);
+    g.connect(conv2, gate2, act);
+    g.connect(v, gate2, act);
+
+    let out = gemm(&mut g, cfg, "proj.out", l, d, d);
+    g.connect(gate2, out, act);
+
+    let last = blocks::mlp_block(&mut g, cfg, out);
+    g.output(last, act);
+
+    debug_assert!(g.validate().is_ok());
+    g
+}
+
+/// Total FFT-transform FLOPs in the decoder (6 transforms × D channels) —
+/// the Fig. 7 breakdown's FFT component.
+pub fn fft_core_flops(cfg: &DecoderConfig, variant: BaileyVariant) -> f64 {
+    6.0 * cfg.d_model as f64 * fft_flops(cfg.fft_len(), variant, cfg.fft_tile)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn graphs_are_valid() {
+        for v in [BaileyVariant::Vector, BaileyVariant::Gemm] {
+            let g = hyena_decoder(&DecoderConfig::paper(1 << 14), v);
+            assert!(g.validate().is_ok(), "{}", g.name);
+        }
+    }
+
+    #[test]
+    fn gemm_fft_flop_ratio_is_6_4x_on_transforms() {
+        // §III-A: GEMM-FFT does ~6.4× the FLOPs of Vector-FFT at R=32.
+        let cfg = DecoderConfig::paper(1 << 18);
+        let r = fft_core_flops(&cfg, BaileyVariant::Gemm) / fft_core_flops(&cfg, BaileyVariant::Vector);
+        assert!((r - 6.4).abs() < 0.01, "r={r}");
+    }
+
+    #[test]
+    fn whole_decoder_flop_ratio_near_paper_4_19x() {
+        // §III-C: "The GEMM-FFT Hyena decoder exhibits a higher FLOP count,
+        // approximately 4.19× greater than the Vector-FFT variant" — the
+        // Amdahl blend of 6.4× transforms with the unchanged remainder.
+        let cfg = DecoderConfig::paper(1 << 20);
+        let fv = hyena_decoder(&cfg, BaileyVariant::Vector).total_flops();
+        let fg = hyena_decoder(&cfg, BaileyVariant::Gemm).total_flops();
+        let r = fg / fv;
+        assert!(r > 3.0 && r < 6.0, "whole-decoder ratio {r} out of paper band");
+    }
+
+    #[test]
+    fn log_linear_scaling() {
+        // Hyena total FLOPs scale ~L·log L (vs attention's L²).
+        let f1 = hyena_decoder(&DecoderConfig::paper(1 << 18), BaileyVariant::Vector).total_flops();
+        let f2 = hyena_decoder(&DecoderConfig::paper(1 << 20), BaileyVariant::Vector).total_flops();
+        let ratio = f2 / f1;
+        assert!(ratio > 4.0 && ratio < 4.6, "ratio={ratio}");
+    }
+
+    #[test]
+    fn hyena_beats_attention_on_flops() {
+        let cfg = DecoderConfig::paper(1 << 20);
+        let hy = hyena_decoder(&cfg, BaileyVariant::Vector).total_flops();
+        let at = super::super::attention::attention_decoder(&cfg).total_flops();
+        // The paper's ~2000× FLOP gap at 1M (before utilization effects).
+        assert!(at / hy > 500.0, "at/hy = {}", at / hy);
+    }
+
+    #[test]
+    fn six_transforms_per_decoder() {
+        let g = hyena_decoder(&DecoderConfig::paper(1 << 14), BaileyVariant::Vector);
+        let n = g.kernels.iter().filter(|k| k.op == OpClass::VectorFft).count();
+        assert_eq!(n, 6);
+    }
+}

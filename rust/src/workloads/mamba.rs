@@ -1,0 +1,194 @@
+//! Mamba decoder workload graph (paper Fig. 3C): a selective state-space
+//! layer whose core is an exclusive scan applying the recurrence
+//! `h[t] = a[t]·h[t−1] + b[t]` across the sequence (§II-B, §IV-A).
+
+use super::blocks::{self, eltwise, gemm, layer_norm};
+use super::config::DecoderConfig;
+use crate::graph::{Graph, Kernel, OpClass};
+
+/// Which scan algorithm the decoder's core uses (paper Fig. 11 designs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ScanVariant {
+    /// The sequential C-scan: one element at a time (§IV-A).
+    CScan,
+    /// Parallel scan (Hillis–Steele / Blelloch, tiled per §IV-A).
+    Parallel,
+}
+
+impl ScanVariant {
+    pub fn label(self) -> &'static str {
+        match self {
+            ScanVariant::CScan => "c-scan",
+            ScanVariant::Parallel => "parallel-scan",
+        }
+    }
+}
+
+/// FLOPs of the selective scan over `L` positions, `C = d_inner·N` state
+/// channels:
+///
+/// * serial — `2` FLOP per element-update (`a·h + b`) → `2·L·C`;
+/// * parallel — the Blelloch lift on `(a, b)` pairs costs 3 FLOP per
+///   combine (`a₂·a₁`, `a₂·b₁ + b₂`) over `2·L` combines → `6·L·C`.
+pub fn scan_flops(cfg: &DecoderConfig, variant: ScanVariant) -> f64 {
+    let l = cfg.seq_len as f64;
+    let c = (cfg.d_inner() * cfg.state_dim) as f64;
+    match variant {
+        ScanVariant::CScan => 2.0 * l * c,
+        ScanVariant::Parallel => 6.0 * l * c,
+    }
+}
+
+/// Build the Mamba decoder layer under the chosen scan variant.
+///
+/// Template: LN → input projection (x, z branches) → short depthwise conv +
+/// SiLU → SSM parameter projections (x_proj, dt_proj) → discretization →
+/// **selective scan** → output contraction `y = C·h` → gate with z →
+/// output projection → residual/LN/MLP/residual.
+pub fn mamba_decoder(cfg: &DecoderConfig, variant: ScanVariant) -> Graph {
+    let l = cfg.seq_len;
+    let d = cfg.d_model;
+    let di = cfg.d_inner();
+    let n = cfg.state_dim;
+    let b = cfg.dtype_bytes;
+    let act = cfg.act_bytes();
+    let act_inner = l as f64 * di as f64 * b;
+    let dt_rank = (d / 16).max(1);
+
+    let mut g = Graph::new(&format!("mamba-decoder[{}] L={l} D={d}", variant.label()));
+
+    let ln1 = layer_norm(&mut g, cfg, "ln1", d);
+    g.input(ln1, act);
+
+    // Input projection produces both the x branch and the z gate branch.
+    let in_proj = gemm(&mut g, cfg, "in_proj", l, 2 * di, d);
+    g.connect(ln1, in_proj, act);
+
+    // Short depthwise causal conv (kernel width 4) + SiLU on the x branch.
+    let conv1d = eltwise(&mut g, cfg, "conv1d", (l * di) as f64, 8.0, 1.0);
+    g.connect(in_proj, conv1d, act_inner);
+    let silu = eltwise(&mut g, cfg, "silu.x", (l * di) as f64, 4.0, 1.0);
+    g.connect(conv1d, silu, act_inner);
+
+    // Data-dependent SSM parameters: B, C, Δ (the "selective" part).
+    let x_proj = gemm(&mut g, cfg, "x_proj", l, dt_rank + 2 * n, di);
+    g.connect(silu, x_proj, act_inner);
+    let dt_proj = gemm(&mut g, cfg, "dt_proj", l, di, dt_rank);
+    g.connect(x_proj, dt_proj, l as f64 * dt_rank as f64 * b);
+
+    // Discretization: ā = exp(Δ·A), b̄ = Δ·B·x per (position, channel,
+    // state) ≈ 4 FLOP each.
+    let disc = g.add(
+        Kernel::new(
+            "discretize",
+            OpClass::Elementwise,
+            4.0 * (l * di * n) as f64,
+            act_inner + l as f64 * (2 * n) as f64 * b,
+            2.0 * (l * di * n) as f64 * b,
+        )
+        .with_stream(l as f64, (di * n) as f64),
+    );
+    g.connect(dt_proj, disc, act_inner);
+    g.connect(x_proj, disc, l as f64 * (2 * n) as f64 * b);
+
+    // The selective scan: h[t] = ā[t]·h[t−1] + b̄[t] over L positions for
+    // every (channel, state) pair.
+    let scan_op = match variant {
+        ScanVariant::CScan => OpClass::ScanSerial,
+        ScanVariant::Parallel => OpClass::ScanParallel,
+    };
+    let scan_bytes = 2.0 * (l * di * n) as f64 * b;
+    let scan = g.add(
+        Kernel::new("selective_scan", scan_op, scan_flops(cfg, variant), scan_bytes, scan_bytes / 2.0)
+            .with_stream(l as f64, (di * n) as f64),
+    );
+    g.connect(disc, scan, scan_bytes);
+
+    // Output contraction y[t,c] = Σ_n C[t,n]·h[t,c,n].
+    let contract = g.add(
+        Kernel::new(
+            "c_contract",
+            OpClass::Elementwise,
+            2.0 * (l * di * n) as f64,
+            scan_bytes / 2.0 + l as f64 * n as f64 * b,
+            act_inner,
+        )
+        .with_stream(l as f64, di as f64),
+    );
+    g.connect(scan, contract, scan_bytes / 2.0);
+    g.connect(x_proj, contract, l as f64 * n as f64 * b);
+
+    // Gate with the z branch (SiLU(z) ⊙ y).
+    let gate = eltwise(&mut g, cfg, "gate.z", (l * di) as f64, 5.0, 2.0);
+    g.connect(contract, gate, act_inner);
+    g.connect(in_proj, gate, act_inner);
+
+    let out_proj = gemm(&mut g, cfg, "out_proj", l, d, di);
+    g.connect(gate, out_proj, act_inner);
+
+    let last = blocks::mlp_block(&mut g, cfg, out_proj);
+    g.output(last, act);
+
+    debug_assert!(g.validate().is_ok());
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn graphs_are_valid() {
+        for v in [ScanVariant::CScan, ScanVariant::Parallel] {
+            let g = mamba_decoder(&DecoderConfig::paper(1 << 14), v);
+            assert!(g.validate().is_ok(), "{}", g.name);
+        }
+    }
+
+    #[test]
+    fn scan_flops_formulas() {
+        // Paper shape: C = D = 32 scalar-state channels.
+        let cfg = DecoderConfig::paper(1 << 10);
+        assert_eq!(scan_flops(&cfg, ScanVariant::CScan), 2.0 * 1024.0 * 32.0);
+        assert_eq!(scan_flops(&cfg, ScanVariant::Parallel), 6.0 * 1024.0 * 32.0);
+        // Full selective-SSM shape: C = 64 × 16 = 1024.
+        let full = DecoderConfig::mamba_full(1 << 10);
+        assert_eq!(scan_flops(&full, ScanVariant::CScan), 2.0 * 1024.0 * 1024.0);
+    }
+
+    #[test]
+    fn linear_scaling() {
+        let f1 = mamba_decoder(&DecoderConfig::paper(1 << 18), ScanVariant::Parallel).total_flops();
+        let f2 = mamba_decoder(&DecoderConfig::paper(1 << 20), ScanVariant::Parallel).total_flops();
+        let ratio = f2 / f1;
+        assert!((ratio - 4.0).abs() < 0.05, "ratio={ratio}"); // 4× length → 4× work
+    }
+
+    #[test]
+    fn mamba_beats_attention_on_flops() {
+        let cfg = DecoderConfig::paper(1 << 20);
+        let ma = mamba_decoder(&cfg, ScanVariant::Parallel).total_flops();
+        let at = super::super::attention::attention_decoder(&cfg).total_flops();
+        assert!(at / ma > 500.0, "at/ma = {}", at / ma);
+    }
+
+    #[test]
+    fn one_scan_kernel_with_stream_metadata() {
+        let cfg = DecoderConfig::paper(1 << 14);
+        let g = mamba_decoder(&cfg, ScanVariant::CScan);
+        let scans: Vec<_> = g.kernels.iter().filter(|k| k.op == OpClass::ScanSerial).collect();
+        assert_eq!(scans.len(), 1);
+        assert_eq!(scans[0].elements, cfg.seq_len as f64);
+        assert_eq!(scans[0].channels, (cfg.d_inner() * cfg.state_dim) as f64);
+    }
+
+    #[test]
+    fn mlp_dominates_nonscan_flops() {
+        // Paper §IV-C: the scan-mode speedup is Amdahl-bounded by the MLP.
+        let cfg = DecoderConfig::paper(1 << 20);
+        let g = mamba_decoder(&cfg, ScanVariant::Parallel);
+        let mlp: f64 = g.kernels.iter().filter(|k| k.name.starts_with("mlp.")).map(|k| k.flops).sum();
+        let total = g.total_flops();
+        assert!(mlp / total > 0.2, "mlp share = {}", mlp / total);
+    }
+}

@@ -1,0 +1,51 @@
+//! Decoder workload builders (paper Fig. 3): the attention baseline, the
+//! FFT-based Hyena decoder, and the scan-based Mamba decoder, each emitted
+//! as a [`crate::graph::Graph`] with the paper's FLOP accounting.
+//!
+//! * [`config::DecoderConfig`] — the paper's shapes (D = 32, L ∈ {256K,
+//!   512K, 1M}, FP16, R = 32).
+//! * [`attention::attention_decoder`] — Fig. 3A, quadratic `Q·Kᵀ`/`A·V`.
+//! * [`hyena::hyena_decoder`] — Fig. 3B, each big GEMM replaced by two
+//!   forward FFTs + pointwise product + one inverse FFT, in either the
+//!   Vector-FFT or GEMM-FFT Bailey variant (§III-A).
+//! * [`mamba::mamba_decoder`] — Fig. 3C, selective scan core in either
+//!   C-scan or parallel-scan form (§IV-A).
+
+pub mod attention;
+pub mod blocks;
+pub mod config;
+pub mod hyena;
+pub mod mamba;
+
+pub use attention::attention_decoder;
+pub use config::DecoderConfig;
+pub use hyena::hyena_decoder;
+pub use mamba::{mamba_decoder, ScanVariant};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::BaileyVariant;
+
+    #[test]
+    fn all_decoders_build_at_paper_sweep() {
+        for cfg in DecoderConfig::paper_sweep() {
+            assert!(attention_decoder(&cfg).validate().is_ok());
+            assert!(hyena_decoder(&cfg, BaileyVariant::Vector).validate().is_ok());
+            assert!(hyena_decoder(&cfg, BaileyVariant::Gemm).validate().is_ok());
+            assert!(mamba_decoder(&cfg, ScanVariant::CScan).validate().is_ok());
+            assert!(mamba_decoder(&cfg, ScanVariant::Parallel).validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn flop_ordering_attention_worst() {
+        let cfg = DecoderConfig::paper(1 << 20);
+        let at = attention_decoder(&cfg).total_flops();
+        let hy = hyena_decoder(&cfg, BaileyVariant::Vector).total_flops();
+        let hg = hyena_decoder(&cfg, BaileyVariant::Gemm).total_flops();
+        let ma = mamba_decoder(&cfg, ScanVariant::Parallel).total_flops();
+        assert!(at > hg && hg > hy, "at={at} hg={hg} hy={hy}");
+        assert!(at > ma);
+    }
+}

@@ -1,0 +1,174 @@
+//! Cross-module integration: workload builders → DFModel mapping →
+//! estimates → platform models, plus the cross-layer algorithm agreement
+//! (PCU simulator vs the algorithm substrates) promised in DESIGN.md §7.
+
+use ssm_rdu::arch::{GpuSpec, PcuGeometry, RduConfig, VgaSpec};
+use ssm_rdu::dfmodel;
+use ssm_rdu::fft::{self, BaileyVariant};
+use ssm_rdu::gpu;
+use ssm_rdu::pcusim::{self, Pcu};
+use ssm_rdu::scan;
+use ssm_rdu::util::complex::max_abs_diff_c;
+use ssm_rdu::util::{max_abs_diff, C64, XorShift};
+use ssm_rdu::vga;
+use ssm_rdu::workloads::{
+    attention_decoder, hyena_decoder, mamba_decoder, DecoderConfig, ScanVariant,
+};
+
+/// Every decoder × every RDU config maps and estimates without error.
+#[test]
+fn all_workloads_map_on_all_configs() {
+    let configs = [
+        RduConfig::baseline(),
+        RduConfig::fft_mode(),
+        RduConfig::hs_scan_mode(),
+        RduConfig::b_scan_mode(),
+    ];
+    let dc = DecoderConfig::paper(1 << 18);
+    let graphs = vec![
+        attention_decoder(&dc),
+        hyena_decoder(&dc, BaileyVariant::Vector),
+        hyena_decoder(&dc, BaileyVariant::Gemm),
+        mamba_decoder(&dc, ScanVariant::CScan),
+        mamba_decoder(&dc, ScanVariant::Parallel),
+    ];
+    for cfg in &configs {
+        for g in &graphs {
+            let est = dfmodel::estimate(g, cfg).expect("mappable");
+            assert!(est.total_seconds.is_finite() && est.total_seconds > 0.0, "{} on {}", g.name, cfg);
+            assert!(est.total_seconds >= est.memory_seconds);
+        }
+    }
+}
+
+/// The interconnect extension only ever *helps* (monotonicity invariant).
+#[test]
+fn extensions_never_hurt() {
+    let dc = DecoderConfig::paper(1 << 18);
+    let hy = hyena_decoder(&dc, BaileyVariant::Vector);
+    let ma = mamba_decoder(&dc, ScanVariant::Parallel);
+    let base = RduConfig::baseline();
+    assert!(
+        dfmodel::estimate(&hy, &RduConfig::fft_mode()).unwrap().total_seconds
+            <= dfmodel::estimate(&hy, &base).unwrap().total_seconds
+    );
+    assert!(
+        dfmodel::estimate(&ma, &RduConfig::hs_scan_mode()).unwrap().total_seconds
+            <= dfmodel::estimate(&ma, &base).unwrap().total_seconds
+    );
+    // ...and is irrelevant to workloads that don't use it.
+    let at = attention_decoder(&dc);
+    let a_base = dfmodel::estimate(&at, &base).unwrap().total_seconds;
+    let a_fft = dfmodel::estimate(&at, &RduConfig::fft_mode()).unwrap().total_seconds;
+    assert!((a_base - a_fft).abs() / a_base < 1e-9);
+}
+
+/// Dataflow execution (RDU) beats kernel-by-kernel (GPU) per unit compute:
+/// the RDU at the same nameplate FLOPs would still win on memory traffic.
+#[test]
+fn dataflow_beats_kernel_by_kernel_on_memory_traffic() {
+    let dc = DecoderConfig::paper(1 << 20);
+    let g = hyena_decoder(&dc, BaileyVariant::Vector);
+    let rdu = dfmodel::estimate(&g, &RduConfig::fft_mode()).unwrap();
+    let gpu_est = gpu::estimate(&g, &GpuSpec::a100());
+    // GPU stages every intermediate through DRAM; RDU only the graph I/O.
+    assert!(gpu_est.memory_seconds > rdu.memory_seconds * 5.0);
+}
+
+/// VGA runs Hyena but rejects Mamba (fixed-function), RDU runs both —
+/// the paper's generality argument.
+#[test]
+fn vga_generality_gap() {
+    let dc = DecoderConfig::paper(1 << 18);
+    let spec = VgaSpec::table2();
+    assert!(vga::estimate(&hyena_decoder(&dc, BaileyVariant::Vector), &spec).is_ok());
+    assert!(vga::estimate(&mamba_decoder(&dc, ScanVariant::Parallel), &spec).is_err());
+    assert!(dfmodel::estimate(&mamba_decoder(&dc, ScanVariant::Parallel), &RduConfig::b_scan_mode()).is_ok());
+}
+
+/// Cross-layer loop 1: the PCU FFT program (cycle-level simulator) agrees
+/// with the Bailey substrate's tiles and the Cooley–Tukey oracle.
+#[test]
+fn pcusim_fft_agrees_with_substrates() {
+    let mut rng = XorShift::new(77);
+    let pcu = Pcu::fft_mode(PcuGeometry::table1());
+    let prog = pcusim::fft_program(32);
+    for _ in 0..50 {
+        let x: Vec<C64> = (0..32)
+            .map(|_| C64::new(rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0)))
+            .collect();
+        let via_pcu = pcu.eval(&prog, &pcusim::bit_reverse(&x));
+        let via_ct = fft::fft(&x);
+        let via_bailey = fft::bailey_fft(&x, 32, BaileyVariant::Vector);
+        assert!(max_abs_diff_c(&via_pcu, &via_ct) < 1e-10);
+        assert!(max_abs_diff_c(&via_pcu, &via_bailey) < 1e-10);
+    }
+}
+
+/// Cross-layer loop 2: the PCU scan programs agree with the scan
+/// substrates on random tiles.
+#[test]
+fn pcusim_scans_agree_with_substrates() {
+    let mut rng = XorShift::new(78);
+    let hs_pcu = Pcu::hs_scan_mode(PcuGeometry::table1());
+    let b_pcu = Pcu::b_scan_mode(PcuGeometry::table1());
+    let hs_prog = pcusim::hs_scan_program(32);
+    let b_prog = pcusim::b_scan_program(32);
+    for _ in 0..50 {
+        let xs = rng.vec(32, -2.0, 2.0);
+        let x: Vec<C64> = xs.iter().map(|&v| C64::real(v)).collect();
+        let hs: Vec<f64> = hs_pcu.eval(&hs_prog, &x).iter().map(|z| z.re).collect();
+        let b: Vec<f64> = b_pcu.eval(&b_prog, &x).iter().map(|z| z.re).collect();
+        assert!(max_abs_diff(&hs, &scan::hillis_steele_inclusive(&xs)) < 1e-12);
+        assert!(max_abs_diff(&b, &scan::blelloch_exclusive(&xs)) < 1e-12);
+        // HS (inclusive) minus input = B (exclusive).
+        let derived: Vec<f64> = hs.iter().zip(&xs).map(|(h, v)| h - v).collect();
+        assert!(max_abs_diff(&derived, &b) < 1e-10);
+    }
+}
+
+/// The tiled scan (multi-PCU decomposition) matches the flat algorithms at
+/// paper-scale lengths.
+#[test]
+fn tiled_scan_composes_at_scale() {
+    let mut rng = XorShift::new(79);
+    let xs = rng.vec(1 << 15, -1.0, 1.0);
+    let flat = scan::c_scan_exclusive(&xs);
+    let tiled = scan::tiled_exclusive(&xs, 32);
+    assert!(max_abs_diff(&flat, &tiled) < 1e-7);
+}
+
+/// Mamba's recurrence: the parallel (lifted) form matches the serial form —
+/// the algorithmic fact the scan-mode hardware exploits.
+#[test]
+fn mamba_recurrence_lift_exact() {
+    let mut rng = XorShift::new(80);
+    let n = 1 << 12;
+    let a: Vec<f64> = (0..n).map(|_| rng.uniform(0.2, 0.999)).collect();
+    let b: Vec<f64> = rng.vec(n, -1.0, 1.0);
+    let serial = scan::mamba_scan_serial(&a, &b);
+    let parallel = scan::mamba_scan_parallel(&a, &b);
+    assert!(max_abs_diff(&serial, &parallel) < 1e-9);
+}
+
+/// Sectioning invariant: when a graph is forced to section (tiny SRAM),
+/// the estimate still covers all kernels and only gets slower.
+#[test]
+fn sectioning_preserves_totals() {
+    let dc = DecoderConfig::paper(1 << 18);
+    let g = hyena_decoder(&dc, BaileyVariant::Vector);
+    let normal = RduConfig::fft_mode();
+    let mut tiny = RduConfig::fft_mode();
+    // Shrink SRAM enough to force multi-sectioning while every single
+    // kernel (largest corner-turn buffer = one 64 MB iFFT input) still fits.
+    tiny.spec.pmu_bytes /= 8;
+    let e1 = dfmodel::estimate(&g, &normal).unwrap();
+    let e2 = dfmodel::estimate(&g, &tiny).unwrap();
+    assert!(e2.sections > e1.sections, "{} vs {}", e2.sections, e1.sections);
+    assert_eq!(e1.kernels.len(), e2.kernels.len());
+    // Sectioning is compute-neutral under balanced allocation (the same
+    // total PCU-seconds spread over more phases, modulo integer rounding)
+    // but strictly adds DRAM boundary staging.
+    assert!(e2.total_seconds >= e1.total_seconds * 0.9);
+    assert!(e2.memory_seconds > e1.memory_seconds, "boundary staging must cost DRAM traffic");
+}

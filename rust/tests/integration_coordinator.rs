@@ -1,0 +1,214 @@
+//! Coordinator integration: routing, batching, padding, failure injection
+//! and metrics under the mock executor (deterministic), plus one full
+//! PJRT-backed serving pass when artifacts are present.
+
+use ssm_rdu::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, Executor, ExecutorFactory, MockExecutor,
+    PjrtExecutor,
+};
+use ssm_rdu::runtime::ModelKind;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+fn mock_factory(slots: usize, elems: usize, delay_ms: u64) -> ExecutorFactory {
+    Box::new(move || {
+        let mut m = MockExecutor::new(slots, elems);
+        m.delay = Duration::from_millis(delay_ms);
+        Ok(Box::new(m) as Box<dyn Executor>)
+    })
+}
+
+#[test]
+fn responses_match_requests_under_mixed_load() {
+    let c = Coordinator::start(
+        CoordinatorConfig {
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
+            workers: 2,
+                ..Default::default()
+            },
+        mock_factory(4, 16, 0),
+    )
+    .unwrap();
+    // Tag each request with a unique value; mock adds 1.0.
+    let rxs: Vec<_> = (0..64)
+        .map(|i| {
+            let model = ModelKind::ALL[i % 3];
+            let rx = c.submit(model, vec![i as f32; 16]).unwrap();
+            (i, model, rx)
+        })
+        .collect();
+    for (i, model, rx) in rxs {
+        let r = rx.recv().expect("response");
+        assert_eq!(r.model, model);
+        assert_eq!(r.output, vec![i as f32 + 1.0; 16], "request {i}");
+    }
+    assert_eq!(c.metrics.responses.load(Ordering::Relaxed), 64);
+    c.shutdown();
+}
+
+#[test]
+fn deadline_flush_bounds_latency() {
+    // A single request must not wait for a full batch.
+    let c = Coordinator::start(
+        CoordinatorConfig {
+            policy: BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(10) },
+            workers: 1,
+                ..Default::default()
+            },
+        mock_factory(64, 4, 0),
+    )
+    .unwrap();
+    let t0 = std::time::Instant::now();
+    let r = c.call(ModelKind::Hyena, vec![0.0; 4]).unwrap();
+    assert!(t0.elapsed() < Duration::from_millis(500));
+    assert_eq!(r.batch_size, 1);
+    c.shutdown();
+}
+
+#[test]
+fn poisoned_batches_fail_without_hanging_others() {
+    let factory: ExecutorFactory = Box::new(|| {
+        let mut m = MockExecutor::new(2, 2);
+        m.poison = Some(-13.0);
+        Ok(Box::new(m) as Box<dyn Executor>)
+    });
+    let c = Coordinator::start(
+        CoordinatorConfig {
+            policy: BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
+            workers: 1,
+                ..Default::default()
+            },
+        factory,
+    )
+    .unwrap();
+    let bad = c.submit(ModelKind::Mamba, vec![-13.0, 0.0]).unwrap();
+    let good = c.submit(ModelKind::Mamba, vec![1.0, 1.0]).unwrap();
+    assert!(bad.recv().is_err(), "poisoned request fails");
+    assert_eq!(good.recv().unwrap().output, vec![2.0, 2.0]);
+    assert_eq!(c.metrics.failures.load(Ordering::Relaxed), 1);
+    c.shutdown();
+}
+
+#[test]
+fn worker_construction_failure_surfaces_at_start() {
+    let factory: ExecutorFactory = Box::new(|| anyhow::bail!("no backend"));
+    let r = Coordinator::start(CoordinatorConfig::default(), factory);
+    assert!(r.is_err());
+}
+
+#[test]
+fn throughput_scales_with_workers() {
+    let run = |workers: usize| {
+        let c = Coordinator::start(
+            CoordinatorConfig {
+                policy: BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
+                workers,
+                ..Default::default()
+            },
+            mock_factory(1, 4, 5),
+        )
+        .unwrap();
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> =
+            (0..12).map(|_| c.submit(ModelKind::Attention, vec![0.0; 4]).unwrap()).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let dt = t0.elapsed();
+        c.shutdown();
+        dt
+    };
+    let one = run(1);
+    let four = run(4);
+    assert!(four < one, "4 workers {four:?} should beat 1 worker {one:?}");
+}
+
+#[test]
+fn metrics_track_batching() {
+    let c = Coordinator::start(
+        CoordinatorConfig {
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(20) },
+            workers: 1,
+                ..Default::default()
+            },
+        mock_factory(4, 4, 1),
+    )
+    .unwrap();
+    let rxs: Vec<_> =
+        (0..8).map(|_| c.submit(ModelKind::Hyena, vec![0.0; 4]).unwrap()).collect();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let mean = c.metrics.mean_batch_size();
+    assert!(mean > 1.0, "bursty load should batch: mean={mean}");
+    assert!(c.metrics.latency_quantile_us(0.5) > 0);
+    c.shutdown();
+}
+
+/// Full PJRT-backed serving pass (skips when artifacts are absent).
+#[test]
+fn pjrt_serving_end_to_end() {
+    let dir = ssm_rdu::runtime::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let manifest = ssm_rdu::runtime::Manifest::load(dir.join("manifest.json")).unwrap();
+    let elems = manifest.seq_len * manifest.d_model;
+    let dir2 = dir.clone();
+    let c = Coordinator::start(
+        CoordinatorConfig {
+            policy: BatchPolicy {
+                max_batch: manifest.batch,
+                max_wait: Duration::from_millis(5),
+            },
+            workers: 1,
+                ..Default::default()
+            },
+        Box::new(move || {
+            // Mamba only: cheapest artifact, keeps the test fast.
+            let rt = ssm_rdu::runtime::Runtime::load_subset(&dir2, &[ModelKind::Mamba])?;
+            Ok(Box::new(PjrtExecutor::new(rt)) as Box<dyn Executor>)
+        }),
+    )
+    .unwrap();
+    let rxs: Vec<_> = (0..6)
+        .map(|i| c.submit(ModelKind::Mamba, vec![0.01 * i as f32; elems]).unwrap())
+        .collect();
+    for rx in rxs {
+        let r = rx.recv().expect("pjrt response");
+        assert_eq!(r.output.len(), elems);
+        assert!(r.output.iter().all(|v| v.is_finite()));
+    }
+    c.shutdown();
+}
+
+#[test]
+fn backpressure_sheds_load() {
+    // A slow backend with a tiny in-flight cap: submits beyond the cap
+    // fail fast instead of queueing unboundedly.
+    let c = Coordinator::start(
+        CoordinatorConfig {
+            policy: BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
+            workers: 1,
+            max_inflight: 4,
+        },
+        mock_factory(1, 2, 50),
+    )
+    .unwrap();
+    let mut accepted = Vec::new();
+    let mut rejected = 0;
+    for _ in 0..16 {
+        match c.submit(ModelKind::Mamba, vec![0.0; 2]) {
+            Ok(rx) => accepted.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    assert!(rejected > 0, "cap of 4 with 16 instant submits must reject some");
+    assert!(accepted.len() >= 4, "the cap's worth must be accepted");
+    for rx in accepted {
+        rx.recv().unwrap();
+    }
+    assert_eq!(c.inflight(), 0, "drained");
+    c.shutdown();
+}

@@ -1,0 +1,130 @@
+//! Figure-level integration: every paper table/figure regenerates, the
+//! orderings hold, the headline speedups land in their reproduction bands,
+//! and the ratios are stable across the sweep (as the paper claims).
+//!
+//! Bands are intentionally generous — our substrate is a reimplementation
+//! of DFModel, not the authors' binary; EXPERIMENTS.md records the exact
+//! paper-vs-measured deltas of each run.
+
+use ssm_rdu::figures::{hyena, mamba, overheads, platforms};
+
+// Shorter sweep than the paper's for test time; the benches run the full
+// 256K/512K/1M sweep.
+const LENS: [usize; 2] = [1 << 18, 1 << 20];
+
+#[test]
+fn fig7_reproduces_shape_and_bands() {
+    let f = hyena::fig7_at(&LENS);
+    // Ordering at every length.
+    for &l in &LENS {
+        let d: Vec<f64> = (0..4).map(|i| f.latency(i, l)).collect();
+        assert!(d[0] > d[1] && d[1] > d[2] && d[2] > d[3], "L={l}: {d:?}");
+    }
+    // Bands: D1→D2 paper 217.74× (accept 50–1000×), D2→D3 paper 2.61×
+    // (accept 1.2–6×), D3→D4 paper 1.95× (accept 1.2–6×).
+    let s: Vec<f64> = f.speedups.iter().map(|r| r.measured).collect();
+    assert!(s[0] > 50.0 && s[0] < 1000.0, "D1/D2={}", s[0]);
+    assert!(s[1] > 1.2 && s[1] < 6.0, "D2/D3={}", s[1]);
+    assert!(s[2] > 1.2 && s[2] < 6.0, "D3/D4={}", s[2]);
+}
+
+#[test]
+fn fig7_speedups_stable_across_lengths() {
+    // Paper: "achieves a 1.95× speedup … across different sequence lengths".
+    let a = hyena::fig7_at(&[1 << 18]);
+    let b = hyena::fig7_at(&[1 << 20]);
+    for (ra, rb) in a.speedups.iter().zip(&b.speedups) {
+        if ra.label.contains("design 2 over design 1") {
+            continue; // the attention ratio scales with L by construction
+        }
+        let drift = (ra.measured / rb.measured - 1.0).abs();
+        assert!(drift < 0.10, "{}: {} vs {}", ra.label, ra.measured, rb.measured);
+    }
+}
+
+#[test]
+fn fig8_reproduces_shape_and_bands() {
+    let f = platforms::fig8_at(&LENS);
+    for r in &f.rows {
+        assert!(r.gpu > r.rdu, "{}: GPU must lose", r.variant);
+    }
+    let by_label = |needle: &str| {
+        f.speedups
+            .iter()
+            .find(|s| s.label.contains(needle))
+            .unwrap_or_else(|| panic!("{needle}"))
+            .measured
+    };
+    // Paper: gemm-fft 2×, vector-fft 5.95×, VGA ≈ RDU.
+    let gemm = by_label("gemm-fft: RDU over GPU");
+    let vec = by_label("vector-fft: RDU over GPU");
+    let parity = by_label("VGA over RDU");
+    assert!(gemm > 1.3 && gemm < 6.0, "gemm={gemm}");
+    assert!(vec > 3.0 && vec < 12.0, "vec={vec}");
+    assert!(vec > gemm, "the vector-FFT gap is the bigger one");
+    assert!((parity - 1.0).abs() < 0.35, "parity={parity}");
+}
+
+#[test]
+fn fig11_reproduces_shape_and_bands() {
+    let f = mamba::fig11_at(&LENS);
+    for &l in &LENS {
+        let d: Vec<f64> = (0..5).map(|i| f.latency(i, l)).collect();
+        assert!(d[0] > d[1] && d[1] > d[2] && d[2] > d[3], "L={l}: {d:?}");
+        // HS-mode ≡ B-mode (paper: identical performance).
+        assert!((d[3] - d[4]).abs() / d[3] < 0.01, "L={l}: {d:?}");
+    }
+    let s: Vec<f64> = f.speedups.iter().map(|r| r.measured).collect();
+    // Paper bands: 7.34× (accept 2–40), 562.98× (accept 100–2000),
+    // 1.75× (accept 1.05–4), parity ≈ 1.
+    assert!(s[0] > 2.0 && s[0] < 40.0, "D1/D2={}", s[0]);
+    assert!(s[1] > 100.0 && s[1] < 2000.0, "D2/D3={}", s[1]);
+    assert!(s[2] > 1.05 && s[2] < 4.0, "D3/D4={}", s[2]);
+    assert!((s[3] - 1.0).abs() < 0.01, "D4/D5={}", s[3]);
+}
+
+#[test]
+fn fig12_reproduces_band() {
+    let f = mamba::fig12_at(1 << 20);
+    assert!(f.rdu_latency < f.gpu_latency);
+    // Paper 2.12×; our GPU model includes kernel-by-kernel staging the
+    // paper appears to omit, so accept 1.5–12× (compute-only lands closer).
+    let full = f.speedups[0].measured;
+    let compute_only = f.speedups[1].measured;
+    assert!(full > 1.5 && full < 12.0, "full={full}");
+    assert!(compute_only > 1.2 && compute_only < 6.0, "compute={compute_only}");
+}
+
+#[test]
+fn table4_reproduces_within_tenth_percent() {
+    let rows = overheads::table4_rows();
+    let paper = [(90_899.1, 140.7), (91_572.9, 141.4), (91_383.0, 141.2), (91_275.7, 141.1)];
+    for (row, (pa, pp)) in rows.iter().zip(paper) {
+        assert!((row.area_um2 - pa).abs() / pa < 1e-3, "{:?}: {}", row.mode, row.area_um2);
+        assert!((row.power_mw - pp).abs() / pp < 1e-3, "{:?}: {}", row.mode, row.power_mw);
+        assert!(row.area_ratio() < 1.01 && row.power_ratio() < 1.01);
+    }
+}
+
+#[test]
+fn all_reports_render_nonempty() {
+    let f7 = hyena::fig7_at(&[1 << 18]);
+    let f8 = platforms::fig8_at(&[1 << 18]);
+    let f11 = mamba::fig11_at(&[1 << 18]);
+    let f12 = mamba::fig12_at(1 << 18);
+    for s in [
+        f7.table().render(),
+        f7.speedup_report().render(),
+        f8.table().render(),
+        f8.speedup_report().render(),
+        f11.table().render(),
+        f11.speedup_report().render(),
+        f12.table().render(),
+        f12.speedup_report().render(),
+        overheads::table4().render(),
+        ssm_rdu::figures::table1().render(),
+        platforms::table2().render(),
+    ] {
+        assert!(s.lines().count() > 3, "{s}");
+    }
+}
