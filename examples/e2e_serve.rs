@@ -55,8 +55,8 @@ fn main() {
                 max_wait: Duration::from_millis(8),
             },
             workers,
-                ..Default::default()
-            },
+            ..Default::default()
+        },
         Box::new(move || Ok(Box::new(PjrtExecutor::load(&dir2)?) as Box<dyn Executor>)),
     )
     .expect("coordinator start");

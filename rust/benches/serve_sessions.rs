@@ -1,0 +1,55 @@
+//! Session-serving benchmarks: the continuous-batching scheduler + state
+//! cache driven end-to-end (MockExecutor numerics, DFModel decode-cost
+//! timing) across session counts and cache budgets — the hot path of
+//! `serve --continuous`.
+
+use ssm_rdu::arch::RduConfig;
+use ssm_rdu::bench::Bencher;
+use ssm_rdu::coordinator::MockExecutor;
+use ssm_rdu::session::{simulate, SimConfig};
+
+fn scenario(sessions: usize, decode_steps: usize, budget_frac: f64) -> SimConfig {
+    let mut cfg = SimConfig::demo(sessions, decode_steps);
+    cfg.budget_bytes = (cfg.footprint_bytes() as f64 * budget_frac) as usize;
+    cfg
+}
+
+fn main() {
+    let mut b = Bencher::from_env("serve_sessions");
+    let rdu = RduConfig::hs_scan_mode();
+
+    for &(sessions, frac) in &[(16usize, 1.0f64), (16, 0.25), (64, 1.0), (64, 0.25)] {
+        let cfg = scenario(sessions, 8, frac);
+        let name = format!(
+            "continuous: {sessions} sessions × 8 tokens, budget {:.0}%",
+            frac * 100.0
+        );
+        b.bench(&name, || {
+            let mut exec = MockExecutor::new(1, cfg.mamba_shape.d_model);
+            simulate(&mut exec, &cfg, &rdu).expect("simulation completes")
+        });
+    }
+
+    // Scheduler-only pressure: wide batches over many tiny sessions.
+    let cfg = scenario(256, 4, 0.5);
+    b.bench("continuous: 256 sessions × 4 tokens, budget 50%", || {
+        let mut exec = MockExecutor::new(1, cfg.mamba_shape.d_model);
+        simulate(&mut exec, &cfg, &rdu).expect("simulation completes")
+    });
+
+    // One-line throughput report at the demo scale.
+    let cfg = scenario(64, 16, 0.5);
+    let mut exec = MockExecutor::new(1, cfg.mamba_shape.d_model);
+    let r = simulate(&mut exec, &cfg, &rdu).expect("simulation completes");
+    println!(
+        "64 sessions × 16 tokens @ 50% budget: {} tokens, modeled {:.2e} tok/s, \
+         mean batch {:.1}, evictions {}, hit rate {:.1}%",
+        r.tokens,
+        r.tokens_per_sim_second(),
+        r.mean_batch,
+        r.cache.evictions,
+        r.cache.hit_rate() * 100.0,
+    );
+
+    b.finish();
+}

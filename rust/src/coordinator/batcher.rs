@@ -174,6 +174,43 @@ mod tests {
     }
 
     #[test]
+    fn size_flush_outranks_deadline_flush() {
+        // When one model has a *full* batch and another has an *expired*
+        // partial, the full batch launches first (throughput before
+        // latency), then the expired partial on the next pop.
+        let mut b = DynamicBatcher::new(policy(2, 5));
+        let (tx, _rx) = channel();
+        let mut old = req(1, ModelKind::Mamba);
+        old.submitted = Instant::now() - Duration::from_millis(50); // long expired
+        b.push(old, tx.clone());
+        b.push(req(2, ModelKind::Hyena), tx.clone());
+        b.push(req(3, ModelKind::Hyena), tx);
+        let now = Instant::now();
+        let first = b.pop_ready(now).expect("something is ready");
+        assert_eq!(first.model, ModelKind::Hyena, "full batch wins");
+        assert_eq!(first.requests.len(), 2);
+        let second = b.pop_ready(now).expect("expired partial still flushes");
+        assert_eq!(second.model, ModelKind::Mamba);
+        assert_eq!(second.requests.len(), 1);
+        assert!(b.pop_ready(now).is_none());
+    }
+
+    #[test]
+    fn fresh_partial_waits_while_expired_partial_flushes() {
+        let mut b = DynamicBatcher::new(policy(8, 5));
+        let (tx, _rx) = channel();
+        let mut old = req(1, ModelKind::Mamba);
+        old.submitted = Instant::now() - Duration::from_millis(50);
+        b.push(old, tx.clone());
+        b.push(req(2, ModelKind::Hyena), tx); // fresh, far from deadline
+        let now = Instant::now();
+        let batch = b.pop_ready(now).expect("expired partial is ready");
+        assert_eq!(batch.model, ModelKind::Mamba);
+        assert!(b.pop_ready(now).is_none(), "fresh partial keeps waiting");
+        assert_eq!(b.queued(), 1);
+    }
+
+    #[test]
     fn drain_all_chunks_by_max_batch() {
         let mut b = DynamicBatcher::new(policy(2, 1000));
         let (tx, _rx) = channel();

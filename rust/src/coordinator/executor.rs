@@ -5,6 +5,7 @@
 //! coordinator's routing/batching logic is exercisable without artifacts.
 
 use crate::runtime::{ModelKind, Runtime};
+use crate::session::{SsmState, StateShape};
 use crate::Result;
 use anyhow::anyhow;
 
@@ -23,6 +24,36 @@ pub trait Executor {
     /// Execute a fully packed `(batch_slots × slot_elems)` buffer; returns
     /// the packed outputs of the same shape.
     fn execute(&mut self, model: ModelKind, packed: &[f32]) -> Result<Vec<f32>>;
+
+    /// Open a decode session: prefill `prompt`, build the initial recurrent
+    /// state, and return `(state, first_token)` where the token is a
+    /// `shape.d_model`-wide activation.
+    ///
+    /// Default: unsupported — the AOT artifact set only lowers full-sequence
+    /// forward passes, so [`PjrtExecutor`] cannot step-decode until per-token
+    /// kernels are lowered. [`MockExecutor`] implements it for the
+    /// continuous-batching path.
+    fn begin_session(
+        &mut self,
+        model: ModelKind,
+        prompt: &[f32],
+        shape: &StateShape,
+    ) -> Result<(SsmState, Vec<f32>)> {
+        let _ = (model, prompt, shape);
+        Err(anyhow!("this executor does not support stateful decode (begin_session)"))
+    }
+
+    /// One decode step: consume the previous token activation, advance
+    /// `state` in place, and return the next token activation.
+    fn step_decode(
+        &mut self,
+        model: ModelKind,
+        state: &mut SsmState,
+        token: &[f32],
+    ) -> Result<Vec<f32>> {
+        let _ = (model, state, token);
+        Err(anyhow!("this executor does not support stateful decode (step_decode)"))
+    }
 }
 
 /// The production executor: one compiled PJRT executable per model.
@@ -61,6 +92,14 @@ impl Executor for PjrtExecutor {
 
 /// Deterministic mock: output = input + 1, with a configurable artificial
 /// latency — lets tests assert batching/routing behaviour precisely.
+///
+/// The stateful-decode mock is equally deterministic and *state-dependent*
+/// (so a lost or corrupted cache entry is observable in the outputs):
+/// prefill fills the state with the prompt mean and emits
+/// `mean(prompt) + 1` as the first token; each decode step emits
+/// `token + mean(state) + 1` and then advances every state element by
+/// 0.125. Results depend only on the session's own history — never on
+/// batch composition or eviction order.
 pub struct MockExecutor {
     pub slots: usize,
     pub elems: usize,
@@ -103,6 +142,51 @@ impl Executor for MockExecutor {
         }
         Ok(packed.iter().map(|v| v + 1.0).collect())
     }
+
+    fn begin_session(
+        &mut self,
+        model: ModelKind,
+        prompt: &[f32],
+        shape: &StateShape,
+    ) -> Result<(SsmState, Vec<f32>)> {
+        if prompt.is_empty() {
+            return Err(anyhow!("mock: empty prompt"));
+        }
+        if shape.model != model {
+            return Err(anyhow!("mock: state shape is for {}, request is {model}", shape.model));
+        }
+        if let Some(p) = self.poison {
+            if prompt.contains(&p) {
+                return Err(anyhow!("mock: poisoned prompt"));
+            }
+        }
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        let mean = prompt.iter().sum::<f32>() / prompt.len() as f32;
+        let mut state = SsmState::zeros(shape)?;
+        state.fill(mean);
+        Ok((state, vec![mean + 1.0; shape.d_model]))
+    }
+
+    fn step_decode(
+        &mut self,
+        _model: ModelKind,
+        state: &mut SsmState,
+        token: &[f32],
+    ) -> Result<Vec<f32>> {
+        let d = state.shape().d_model;
+        if token.len() != d {
+            return Err(anyhow!("mock: token has {} elems, state d_model is {d}", token.len()));
+        }
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        let s = state.mean();
+        let out = token.iter().map(|t| t + s + 1.0).collect();
+        state.add_scalar(0.125);
+        Ok(out)
+    }
 }
 
 /// Factory constructing one executor per worker thread (PJRT executables are
@@ -132,5 +216,61 @@ mod tests {
         m.poison = Some(-999.0);
         assert!(m.execute(ModelKind::Mamba, &[1.0, -999.0]).is_err());
         assert!(m.execute(ModelKind::Mamba, &[1.0, 2.0]).is_ok());
+    }
+
+    #[test]
+    fn mock_decode_is_deterministic_and_state_dependent() {
+        let shape = StateShape::mamba(2, 4, 8);
+        let mut m = MockExecutor::new(1, 8);
+        let prompt = vec![0.5; 16];
+        let (mut state, first) = m.begin_session(ModelKind::Mamba, &prompt, &shape).unwrap();
+        assert_eq!(first, vec![1.5; 8]);
+        assert_eq!(state.mean(), 0.5);
+        let t1 = m.step_decode(ModelKind::Mamba, &mut state, &first).unwrap();
+        // 1.5 (token) + 0.5 (state mean) + 1.0 = 3.0
+        assert_eq!(t1, vec![3.0; 8]);
+        assert!((state.mean() - 0.625).abs() < 1e-6, "state advanced");
+        // A replayed session produces the identical stream.
+        let (mut s2, f2) = m.begin_session(ModelKind::Mamba, &prompt, &shape).unwrap();
+        assert_eq!(f2, first);
+        assert_eq!(m.step_decode(ModelKind::Mamba, &mut s2, &f2).unwrap(), t1);
+    }
+
+    #[test]
+    fn mock_decode_validates_shapes() {
+        let shape = StateShape::mamba(1, 2, 4);
+        let mut m = MockExecutor::new(1, 4);
+        assert!(m.begin_session(ModelKind::Mamba, &[], &shape).is_err(), "empty prompt");
+        assert!(
+            m.begin_session(ModelKind::Hyena, &[1.0], &shape).is_err(),
+            "model/shape mismatch"
+        );
+        let (mut state, _) = m.begin_session(ModelKind::Mamba, &[1.0], &shape).unwrap();
+        assert!(m.step_decode(ModelKind::Mamba, &mut state, &[0.0; 3]).is_err(), "bad token width");
+    }
+
+    #[test]
+    fn pjrt_has_no_step_decode() {
+        // Default trait impls refuse stateful decode (artifacts only lower
+        // full-sequence passes). Exercise via a minimal custom executor.
+        struct NoDecode;
+        impl Executor for NoDecode {
+            fn models(&self) -> Vec<ModelKind> {
+                vec![]
+            }
+            fn slot_elems(&self, _m: ModelKind) -> usize {
+                0
+            }
+            fn batch_slots(&self, _m: ModelKind) -> usize {
+                0
+            }
+            fn execute(&mut self, _m: ModelKind, _p: &[f32]) -> Result<Vec<f32>> {
+                Ok(vec![])
+            }
+        }
+        let mut e = NoDecode;
+        assert!(e.begin_session(ModelKind::Mamba, &[1.0], &StateShape::mamba(1, 1, 1)).is_err());
+        let mut st = SsmState::zeros(&StateShape::mamba(1, 1, 1)).unwrap();
+        assert!(e.step_decode(ModelKind::Mamba, &mut st, &[0.0]).is_err());
     }
 }

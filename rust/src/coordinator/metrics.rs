@@ -1,4 +1,6 @@
-//! Serving metrics: throughput counters and a lock-free latency histogram.
+//! Serving metrics: throughput counters and lock-free latency histograms —
+//! one for one-shot request latency, one for per-token decode latency in
+//! continuous mode.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
@@ -16,7 +18,12 @@ pub struct Metrics {
     pub batched_requests: AtomicU64,
     pub exec_nanos: AtomicU64,
     pub queue_nanos: AtomicU64,
+    /// Decoded tokens (continuous mode).
+    pub tokens: AtomicU64,
+    /// Cumulative per-token latency (queue + step execution).
+    pub token_nanos: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
+    token_latency_us: [AtomicU64; BUCKETS],
 }
 
 impl Metrics {
@@ -37,16 +44,23 @@ impl Metrics {
         self.latency_us[Self::bucket(us)].fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Record one dispatched batch of `n` requests.
+    /// Record one decoded token of a live session.
+    pub fn record_token(&self, queue: Duration, exec: Duration) {
+        self.tokens.fetch_add(1, Ordering::Relaxed);
+        let total = queue + exec;
+        self.token_nanos.fetch_add(total.as_nanos() as u64, Ordering::Relaxed);
+        let us = total.as_micros() as u64;
+        self.token_latency_us[Self::bucket(us)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one dispatched batch of `n` requests (or session steps).
     pub fn record_batch(&self, n: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_requests.fetch_add(n as u64, Ordering::Relaxed);
     }
 
-    /// Latency quantile estimate from the histogram (bucket upper bound).
-    pub fn latency_quantile_us(&self, q: f64) -> u64 {
-        let counts: Vec<u64> =
-            self.latency_us.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+    fn quantile_from(hist: &[AtomicU64; BUCKETS], q: f64) -> u64 {
+        let counts: Vec<u64> = hist.iter().map(|c| c.load(Ordering::Relaxed)).collect();
         let total: u64 = counts.iter().sum();
         if total == 0 {
             return 0;
@@ -62,6 +76,25 @@ impl Metrics {
         1u64 << BUCKETS
     }
 
+    /// Request-latency quantile estimate (bucket upper bound).
+    pub fn latency_quantile_us(&self, q: f64) -> u64 {
+        Self::quantile_from(&self.latency_us, q)
+    }
+
+    /// Per-token latency quantile estimate (bucket upper bound).
+    pub fn token_quantile_us(&self, q: f64) -> u64 {
+        Self::quantile_from(&self.token_latency_us, q)
+    }
+
+    /// Mean per-token latency in microseconds (0.0 when no tokens yet).
+    pub fn mean_token_us(&self) -> f64 {
+        let t = self.tokens.load(Ordering::Relaxed);
+        if t == 0 {
+            return 0.0;
+        }
+        self.token_nanos.load(Ordering::Relaxed) as f64 / 1e3 / t as f64
+    }
+
     /// Mean batch occupancy.
     pub fn mean_batch_size(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
@@ -74,14 +107,24 @@ impl Metrics {
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         let resp = self.responses.load(Ordering::Relaxed);
-        format!(
+        let mut s = format!(
             "responses={resp} failures={} batches={} mean_batch={:.2} p50={}µs p95={}µs",
             self.failures.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
             self.latency_quantile_us(0.50),
             self.latency_quantile_us(0.95),
-        )
+        );
+        let tokens = self.tokens.load(Ordering::Relaxed);
+        if tokens > 0 {
+            s.push_str(&format!(
+                " tokens={tokens} tok_mean={:.0}µs tok_p50={}µs tok_p95={}µs",
+                self.mean_token_us(),
+                self.token_quantile_us(0.50),
+                self.token_quantile_us(0.95),
+            ));
+        }
+        s
     }
 }
 
@@ -121,6 +164,23 @@ mod tests {
     fn empty_metrics_are_zero() {
         let m = Metrics::new();
         assert_eq!(m.latency_quantile_us(0.9), 0);
+        assert_eq!(m.token_quantile_us(0.9), 0);
         assert_eq!(m.mean_batch_size(), 0.0);
+        assert_eq!(m.mean_token_us(), 0.0);
+        assert!(!m.summary().contains("tokens="), "token section only when tokens flow");
+    }
+
+    #[test]
+    fn token_latency_tracked_separately() {
+        let m = Metrics::new();
+        for _ in 0..10 {
+            m.record_token(Duration::from_micros(100), Duration::from_micros(100));
+        }
+        assert_eq!(m.tokens.load(Ordering::Relaxed), 10);
+        assert_eq!(m.responses.load(Ordering::Relaxed), 0, "tokens are not responses");
+        assert!(m.token_quantile_us(0.5) >= 200);
+        assert!((m.mean_token_us() - 200.0).abs() < 1.0);
+        assert!(m.summary().contains("tokens=10"));
+        assert_eq!(m.latency_quantile_us(0.5), 0, "request histogram untouched");
     }
 }

@@ -1,21 +1,36 @@
-//! L3 serving coordinator: request router, dynamic batcher, worker pool and
+//! L3 serving coordinator: request router, batcher, worker pool and
 //! metrics — the leader process that owns the event loop while PJRT
 //! executables (built once from JAX/Pallas) do the math.
 //!
 //! Architecture (vLLM-router-shaped, std-thread implementation — tokio is
-//! not vendored in the offline image):
+//! not vendored in the offline image). Two batching modes share the worker
+//! pool:
 //!
 //! ```text
-//!  clients ──submit()──▶ dispatcher thread ──Batch──▶ worker 0 (own PJRT set)
-//!                        │  per-model queues │        worker 1
-//!                        │  size/deadline    │        …
-//!                        ╰── metrics ◀───────┴── responses ──▶ reply channels
+//!  one-shot ──submit()─────────▶ dispatcher ─────WorkItem::Batch────▶ worker 0
+//!                                │ DynamicBatcher: per-model queues,│  worker 1
+//!                                │ flush on size or deadline        │  …
+//!  sessions ──submit_session()─▶ │ SessionScheduler: prefill→decode │  each owns
+//!   (--continuous)               │ iteration batches over the       │  its own
+//!                                │ StateCache (LRU + spill budget)  │  executor
+//!                                │        ▲ WorkItem::Steps          ╲
+//!                                │        ╰── Msg::Feedback ◀── step results
+//!                                ╰── metrics ◀──────┴── responses / tokens ──▶ clients
 //! ```
 //!
-//! * [`request`] — request/response types.
+//! * [`request`] — request/response types (+ session metadata).
 //! * [`batcher`] — the dynamic batching policy (flush on full or deadline).
-//! * [`executor`] — the PJRT backend + a deterministic mock for tests.
-//! * [`metrics`] — throughput counters and latency histogram.
+//! * [`executor`] — the PJRT backend + a deterministic mock for tests; the
+//!   mock also implements the stateful `begin_session`/`step_decode` pair.
+//! * [`metrics`] — throughput counters, request- and token-latency
+//!   histograms.
+//!
+//! Continuous mode (`CoordinatorConfig::continuous`) replaces the
+//! flush-on-deadline batcher with the [`crate::session`] subsystem: the
+//! dispatcher owns a [`SessionScheduler`] and a shared [`StateCache`];
+//! workers execute mixed prefill/decode iteration batches against the
+//! cache and feed completions back so the scheduler can retire sessions
+//! and re-admit the next decode step.
 
 pub mod batcher;
 pub mod executor;
@@ -25,16 +40,47 @@ pub mod request;
 pub use batcher::{Batch, BatchPolicy, DynamicBatcher};
 pub use executor::{Executor, ExecutorFactory, MockExecutor, PjrtExecutor};
 pub use metrics::Metrics;
-pub use request::{Request, Response};
+pub use request::{Request, Response, SessionMeta};
 
+use crate::arch::MemTech;
 use crate::runtime::ModelKind;
+use crate::session::{
+    CacheStats, MemoryBudget, Phase, SchedStats, SchedulerConfig, SessionId, SessionInfo,
+    SessionScheduler, StateCache, StateShape, StepOutcome,
+};
 use crate::Result;
 use anyhow::anyhow;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Continuous-batching (session serving) configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ContinuousConfig {
+    pub sched: SchedulerConfig,
+    /// Resident state budget in bytes (see [`MemoryBudget`]).
+    pub budget_bytes: usize,
+    /// State shape for Mamba sessions.
+    pub mamba_shape: StateShape,
+    /// State shape for Hyena sessions.
+    pub hyena_shape: StateShape,
+}
+
+impl ContinuousConfig {
+    pub fn new(budget_bytes: usize, mamba_shape: StateShape, hyena_shape: StateShape) -> Self {
+        Self { sched: SchedulerConfig::default(), budget_bytes, mamba_shape, hyena_shape }
+    }
+
+    pub fn shape_for(&self, model: ModelKind) -> StateShape {
+        match model {
+            ModelKind::Hyena => self.hyena_shape,
+            _ => self.mamba_shape,
+        }
+    }
+}
 
 /// Coordinator configuration.
 #[derive(Debug, Clone, Copy)]
@@ -43,20 +89,56 @@ pub struct CoordinatorConfig {
     /// Worker threads, each owning its own executor (its own compiled PJRT
     /// executables — they are not shared across threads).
     pub workers: usize,
-    /// Backpressure: maximum requests in flight (queued + executing).
-    /// `submit` fails fast once this is reached, so a slow backend sheds
-    /// load instead of growing an unbounded queue.
+    /// Backpressure: maximum requests (or live sessions) in flight.
+    /// `submit`/`submit_session` fail fast once this is reached, so a slow
+    /// backend sheds load instead of growing an unbounded queue.
     pub max_inflight: usize,
+    /// `Some(_)` switches the dispatcher from the dynamic batcher to the
+    /// continuous-batching session scheduler.
+    pub continuous: Option<ContinuousConfig>,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        Self { policy: BatchPolicy::default(), workers: 1, max_inflight: 4096 }
+        Self { policy: BatchPolicy::default(), workers: 1, max_inflight: 4096, continuous: None }
     }
+}
+
+/// One step of one session, ready for a worker.
+struct StepTask {
+    session: SessionId,
+    model: ModelKind,
+    phase: Phase,
+    /// 0-based token index this step produces.
+    step: usize,
+    shape: StateShape,
+    /// Prompt for prefill, previous token for decode.
+    input: Vec<f32>,
+    reply: Sender<Response>,
+    issued: Instant,
+}
+
+/// An iteration batch of session steps (may mix phases and models).
+struct StepBatch {
+    tasks: Vec<StepTask>,
+}
+
+/// Worker → dispatcher completion report.
+struct StepFeedback {
+    session: SessionId,
+    /// The produced token (feeds the next decode step's input).
+    token: Option<Vec<f32>>,
+    ok: bool,
+}
+
+enum WorkItem {
+    Batch(Batch),
+    Steps(StepBatch),
 }
 
 enum Msg {
     Submit(Request, Sender<Response>),
+    Feedback(StepFeedback),
     Shutdown,
 }
 
@@ -69,6 +151,8 @@ pub struct Coordinator {
     workers: Vec<JoinHandle<()>>,
     running: Arc<AtomicBool>,
     max_inflight: usize,
+    cache: Option<Arc<Mutex<StateCache>>>,
+    scheduler: Option<Arc<Mutex<SessionScheduler>>>,
 }
 
 impl Coordinator {
@@ -81,8 +165,17 @@ impl Coordinator {
         let metrics = Arc::new(Metrics::new());
         let running = Arc::new(AtomicBool::new(true));
         let (tx, rx) = channel::<Msg>();
-        let (batch_tx, batch_rx) = channel::<Batch>();
-        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let (work_tx, work_rx) = channel::<WorkItem>();
+        let work_rx = Arc::new(Mutex::new(work_rx));
+
+        let cache = cfg.continuous.map(|cc| {
+            Arc::new(Mutex::new(StateCache::new(
+                MemoryBudget::new(cc.budget_bytes),
+                MemTech::Hbm3e,
+            )))
+        });
+        let scheduler =
+            cfg.continuous.map(|cc| Arc::new(Mutex::new(SessionScheduler::new(cc.sched))));
 
         // Worker pool. Executors are built *inside* each thread (PJRT
         // executables are thread-affine); a handshake channel surfaces
@@ -91,15 +184,17 @@ impl Coordinator {
         let mut workers = Vec::with_capacity(cfg.workers);
         let (ready_tx, ready_rx) = channel::<Result<()>>();
         for wid in 0..cfg.workers {
-            let rx = Arc::clone(&batch_rx);
+            let rx = Arc::clone(&work_rx);
             let metrics = Arc::clone(&metrics);
             let factory = Arc::clone(&factory);
             let ready = ready_tx.clone();
+            let cache = cache.clone();
+            let feedback = tx.clone();
             workers.push(std::thread::Builder::new().name(format!("ssm-rdu-worker-{wid}")).spawn(
                 move || match factory() {
                     Ok(exec) => {
                         let _ = ready.send(Ok(()));
-                        worker_loop(exec, rx, metrics);
+                        worker_loop(exec, rx, metrics, cache, feedback);
                     }
                     Err(e) => {
                         let _ = ready.send(Err(e));
@@ -114,13 +209,24 @@ impl Coordinator {
                 .map_err(|_| anyhow!("worker died before handshake"))??;
         }
 
-        // Dispatcher.
-        let policy = cfg.policy;
+        // Dispatcher: dynamic batcher or continuous session scheduler.
         let metrics2 = Arc::clone(&metrics);
         let running2 = Arc::clone(&running);
-        let dispatcher = std::thread::Builder::new().name("ssm-rdu-dispatch".into()).spawn(
-            move || dispatcher_loop(policy, rx, batch_tx, metrics2, running2),
-        )?;
+        let dispatcher = match cfg.continuous {
+            None => {
+                let policy = cfg.policy;
+                std::thread::Builder::new().name("ssm-rdu-dispatch".into()).spawn(move || {
+                    dispatcher_loop(policy, rx, work_tx, metrics2, running2)
+                })?
+            }
+            Some(cc) => {
+                let sched = Arc::clone(scheduler.as_ref().expect("continuous scheduler"));
+                let cache2 = Arc::clone(cache.as_ref().expect("continuous cache"));
+                std::thread::Builder::new().name("ssm-rdu-dispatch".into()).spawn(move || {
+                    continuous_loop(cc, rx, work_tx, sched, cache2, metrics2, running2)
+                })?
+            }
+        };
 
         Ok(Self {
             tx,
@@ -130,10 +236,13 @@ impl Coordinator {
             workers,
             running,
             max_inflight: cfg.max_inflight,
+            cache,
+            scheduler,
         })
     }
 
-    /// Requests currently in flight (submitted − completed − failed).
+    /// Requests (or live sessions) currently in flight:
+    /// submitted − completed − failed.
     pub fn inflight(&self) -> u64 {
         let m = &self.metrics;
         m.requests
@@ -142,12 +251,19 @@ impl Coordinator {
             .saturating_sub(m.failures.load(Ordering::Relaxed))
     }
 
-    /// Submit one request; returns the channel its response arrives on.
+    /// Submit one one-shot request; returns the channel its response
+    /// arrives on.
     ///
     /// Fails fast with a backpressure error when `max_inflight` is reached.
+    /// Backpressure audit: a rejected request is refused *before* the
+    /// in-flight counter moves, and a request the dispatcher never received
+    /// rolls its slot back — neither path can leak in-flight accounting.
     pub fn submit(&self, model: ModelKind, input: Vec<f32>) -> Result<Receiver<Response>> {
         if !self.running.load(Ordering::SeqCst) {
             return Err(anyhow!("coordinator is shut down"));
+        }
+        if self.cache.is_some() {
+            return Err(anyhow!("coordinator is in continuous mode; use submit_session"));
         }
         if self.inflight() >= self.max_inflight as u64 {
             return Err(anyhow!(
@@ -159,9 +275,59 @@ impl Coordinator {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = channel();
-        self.tx
-            .send(Msg::Submit(Request::new(id, model, input), rtx))
-            .map_err(|_| anyhow!("dispatcher gone"))?;
+        if self.tx.send(Msg::Submit(Request::new(id, model, input), rtx)).is_err() {
+            // Roll the slot back: the request never entered the system.
+            self.metrics.requests.fetch_sub(1, Ordering::Relaxed);
+            return Err(anyhow!("dispatcher gone"));
+        }
+        Ok(rrx)
+    }
+
+    /// Open a decode session (continuous mode only): the prompt is
+    /// prefilled, then `decode_steps` token [`Response`]s stream over the
+    /// returned channel (the prefill's first token included); the channel
+    /// closes after the last token.
+    pub fn submit_session(
+        &self,
+        model: ModelKind,
+        prompt: Vec<f32>,
+        decode_steps: usize,
+    ) -> Result<Receiver<Response>> {
+        if !self.running.load(Ordering::SeqCst) {
+            return Err(anyhow!("coordinator is shut down"));
+        }
+        if self.cache.is_none() {
+            return Err(anyhow!(
+                "continuous mode is off; set CoordinatorConfig::continuous to serve sessions"
+            ));
+        }
+        if model == ModelKind::Attention {
+            return Err(anyhow!("sessions cache O(1) SSM state; attention is not servable here"));
+        }
+        if decode_steps == 0 {
+            return Err(anyhow!("decode_steps must be ≥ 1"));
+        }
+        if prompt.is_empty() {
+            return Err(anyhow!("empty prompt"));
+        }
+        if self.inflight() >= self.max_inflight as u64 {
+            return Err(anyhow!(
+                "backpressure: {} sessions in flight (max {})",
+                self.inflight(),
+                self.max_inflight
+            ));
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let (rtx, rrx) = channel();
+        if self
+            .tx
+            .send(Msg::Submit(Request::session_open(id, model, prompt, decode_steps), rtx))
+            .is_err()
+        {
+            self.metrics.requests.fetch_sub(1, Ordering::Relaxed);
+            return Err(anyhow!("dispatcher gone"));
+        }
         Ok(rrx)
     }
 
@@ -169,6 +335,21 @@ impl Coordinator {
     pub fn call(&self, model: ModelKind, input: Vec<f32>) -> Result<Response> {
         let rx = self.submit(model, input)?;
         rx.recv().map_err(|_| anyhow!("worker dropped the request"))
+    }
+
+    /// Snapshot of the state-cache counters (continuous mode only).
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.cache.as_ref().map(|c| c.lock().expect("state cache lock").stats.clone())
+    }
+
+    /// Bytes of session state currently resident (continuous mode only).
+    pub fn cache_resident_bytes(&self) -> Option<usize> {
+        self.cache.as_ref().map(|c| c.lock().expect("state cache lock").resident_bytes())
+    }
+
+    /// Snapshot of the scheduler counters (continuous mode only).
+    pub fn scheduler_stats(&self) -> Option<SchedStats> {
+        self.scheduler.as_ref().map(|s| s.lock().expect("scheduler lock").stats.clone())
     }
 
     /// Graceful shutdown: flush queues, join threads.
@@ -198,7 +379,7 @@ impl Drop for Coordinator {
 fn dispatcher_loop(
     policy: BatchPolicy,
     rx: Receiver<Msg>,
-    batch_tx: Sender<Batch>,
+    work_tx: Sender<WorkItem>,
     metrics: Arc<Metrics>,
     running: Arc<AtomicBool>,
 ) {
@@ -207,8 +388,13 @@ fn dispatcher_loop(
         // Launch everything that is ready.
         while let Some(b) = batcher.pop_ready(Instant::now()) {
             metrics.record_batch(b.requests.len());
-            if batch_tx.send(b).is_err() {
-                return; // workers gone
+            if let Err(e) = work_tx.send(WorkItem::Batch(b)) {
+                // Workers gone: the batch is lost; account for it so
+                // in-flight tracking cannot leak.
+                if let WorkItem::Batch(b) = e.0 {
+                    metrics.failures.fetch_add(b.requests.len() as u64, Ordering::Relaxed);
+                }
+                return;
             }
         }
         // Wait for the next event: new request or queue deadline.
@@ -218,6 +404,7 @@ fn dispatcher_loop(
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
             Ok(Msg::Submit(req, reply)) => batcher.push(req, reply),
+            Ok(Msg::Feedback(_)) => {} // continuous-mode only; ignore here
             Ok(Msg::Shutdown) => break,
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
@@ -226,30 +413,251 @@ fn dispatcher_loop(
             break;
         }
     }
-    // Flush remaining work so no caller hangs.
+    // Shutdown: requests may still sit in the channel behind the Shutdown
+    // message — pull them into the batcher so they flush too and no
+    // caller hangs with a leaked in-flight slot.
+    for m in rx.try_iter() {
+        if let Msg::Submit(req, reply) = m {
+            batcher.push(req, reply);
+        }
+    }
     for b in batcher.drain_all() {
         metrics.record_batch(b.requests.len());
-        if batch_tx.send(b).is_err() {
+        if let Err(e) = work_tx.send(WorkItem::Batch(b)) {
+            if let WorkItem::Batch(b) = e.0 {
+                metrics.failures.fetch_add(b.requests.len() as u64, Ordering::Relaxed);
+            }
             break;
         }
     }
 }
 
+/// Dispatcher-side bookkeeping for one live session.
+struct SessionSide {
+    reply: Sender<Response>,
+    /// Taken at prefill dispatch.
+    prompt: Option<Vec<f32>>,
+    /// The most recent token — the next decode step's input.
+    last_token: Vec<f32>,
+}
+
+/// State of the continuous dispatcher's event handling.
+enum Control {
+    Continue,
+    Shutdown,
+}
+
+fn continuous_loop(
+    cc: ContinuousConfig,
+    rx: Receiver<Msg>,
+    work_tx: Sender<WorkItem>,
+    scheduler: Arc<Mutex<SessionScheduler>>,
+    cache: Arc<Mutex<StateCache>>,
+    metrics: Arc<Metrics>,
+    running: Arc<AtomicBool>,
+) {
+    let mut side: BTreeMap<SessionId, SessionSide> = BTreeMap::new();
+    // Steps dispatched to workers whose feedback has not arrived yet. The
+    // next iteration wave is cut only when this reaches zero — the
+    // iteration barrier is what lets batches actually fill (scheduling on
+    // every single feedback would degenerate to 1-wide batches).
+    let mut outstanding: usize = 0;
+
+    let handle = |msg: Msg,
+                      side: &mut BTreeMap<SessionId, SessionSide>,
+                      outstanding: &mut usize|
+     -> Control {
+        match msg {
+            Msg::Submit(req, reply) => {
+                if let Some(meta) = req.session {
+                    scheduler.lock().expect("scheduler lock").admit(
+                        req.id,
+                        SessionInfo {
+                            model: req.model,
+                            shape: cc.shape_for(req.model),
+                            decode_steps: meta.decode_steps,
+                        },
+                        Instant::now(),
+                    );
+                    side.insert(
+                        req.id,
+                        SessionSide { reply, prompt: Some(req.input), last_token: Vec::new() },
+                    );
+                } else {
+                    // One-shot submits are refused at `submit()` in this
+                    // mode; account defensively if one slips through.
+                    metrics.failures.fetch_add(1, Ordering::Relaxed);
+                }
+                Control::Continue
+            }
+            Msg::Feedback(fb) => {
+                *outstanding = outstanding.saturating_sub(1);
+                handle_feedback(fb, &scheduler, &cache, &metrics, side);
+                Control::Continue
+            }
+            Msg::Shutdown => Control::Shutdown,
+        }
+    };
+
+    'event: loop {
+        // Block for one event, then drain everything already queued so the
+        // scheduler sees the full picture before cutting the next wave.
+        match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(msg) => {
+                if let Control::Shutdown = handle(msg, &mut side, &mut outstanding) {
+                    break 'event;
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break 'event,
+        }
+        while let Ok(msg) = rx.try_recv() {
+            if let Control::Shutdown = handle(msg, &mut side, &mut outstanding) {
+                break 'event;
+            }
+        }
+        if !running.load(Ordering::SeqCst) {
+            break;
+        }
+        // Expire sessions idle past the timeout (their reply channels close
+        // so clients unblock; their cached state is dropped).
+        let expired = scheduler.lock().expect("scheduler lock").expire(Instant::now());
+        for id in expired {
+            side.remove(&id);
+            cache.lock().expect("state cache lock").remove(id);
+            metrics.failures.fetch_add(1, Ordering::Relaxed);
+        }
+        // Iteration barrier: cut the next wave of batches only once the
+        // previous wave has fully reported back.
+        if outstanding > 0 {
+            continue;
+        }
+        loop {
+            let steps = scheduler.lock().expect("scheduler lock").next_batch();
+            if steps.is_empty() {
+                break;
+            }
+            let mut tasks = Vec::with_capacity(steps.len());
+            for s in steps {
+                let Some(entry) = side.get_mut(&s.id) else {
+                    // Bookkeeping lost (should not happen): fail the session
+                    // rather than strand it in flight.
+                    scheduler.lock().expect("scheduler lock").fail(s.id);
+                    cache.lock().expect("state cache lock").remove(s.id);
+                    metrics.failures.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                };
+                let input = match s.phase {
+                    Phase::Prefill => entry.prompt.take().unwrap_or_default(),
+                    Phase::Decode => entry.last_token.clone(),
+                };
+                tasks.push(StepTask {
+                    session: s.id,
+                    model: s.model,
+                    phase: s.phase,
+                    step: s.step,
+                    shape: cc.shape_for(s.model),
+                    input,
+                    reply: entry.reply.clone(),
+                    issued: Instant::now(),
+                });
+            }
+            if tasks.is_empty() {
+                continue;
+            }
+            metrics.record_batch(tasks.len());
+            outstanding += tasks.len();
+            if work_tx.send(WorkItem::Steps(StepBatch { tasks })).is_err() {
+                return; // workers gone
+            }
+        }
+    }
+    // Shutdown: let in-flight steps land (their tokens were already paid
+    // for), then fail whatever is still live so in-flight accounting
+    // returns to zero and clients' channels close.
+    let deadline = Instant::now() + Duration::from_millis(500);
+    while outstanding > 0 && Instant::now() < deadline {
+        match rx.recv_timeout(Duration::from_millis(10)) {
+            Ok(Msg::Feedback(fb)) => {
+                outstanding = outstanding.saturating_sub(1);
+                handle_feedback(fb, &scheduler, &cache, &metrics, &mut side);
+            }
+            Ok(Msg::Submit(req, _reply)) => {
+                // A session that raced shutdown: never admitted, so count
+                // it out of the in-flight accounting (the dropped reply
+                // unblocks the client).
+                if req.session.is_some() {
+                    metrics.failures.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Ok(Msg::Shutdown) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    for m in rx.try_iter() {
+        if let Msg::Submit(req, _reply) = m {
+            if req.session.is_some() {
+                metrics.failures.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+    metrics.failures.fetch_add(side.len() as u64, Ordering::Relaxed);
+}
+
+fn handle_feedback(
+    fb: StepFeedback,
+    scheduler: &Arc<Mutex<SessionScheduler>>,
+    cache: &Arc<Mutex<StateCache>>,
+    metrics: &Metrics,
+    side: &mut BTreeMap<SessionId, SessionSide>,
+) {
+    if !fb.ok {
+        // The worker already counted the failure; end the session.
+        scheduler.lock().expect("scheduler lock").fail(fb.session);
+        side.remove(&fb.session);
+        cache.lock().expect("state cache lock").remove(fb.session);
+        return;
+    }
+    if let Some(token) = fb.token {
+        if let Some(entry) = side.get_mut(&fb.session) {
+            entry.last_token = token;
+        }
+    }
+    match scheduler.lock().expect("scheduler lock").on_step_done(fb.session, Instant::now()) {
+        StepOutcome::Retired => {
+            // Dropping the side entry closes the client's channel after its
+            // final token; one session = one completed "request".
+            side.remove(&fb.session);
+            cache.lock().expect("state cache lock").remove(fb.session);
+            metrics.responses.fetch_add(1, Ordering::Relaxed);
+        }
+        StepOutcome::Continue | StepOutcome::Unknown => {}
+    }
+}
+
 fn worker_loop(
     mut exec: Box<dyn Executor>,
-    rx: Arc<Mutex<Receiver<Batch>>>,
+    rx: Arc<Mutex<Receiver<WorkItem>>>,
     metrics: Arc<Metrics>,
+    cache: Option<Arc<Mutex<StateCache>>>,
+    feedback: Sender<Msg>,
 ) {
     loop {
         // Hold the lock only to receive.
-        let batch = {
-            let guard = rx.lock().expect("batch channel lock poisoned");
+        let item = {
+            let guard = rx.lock().expect("work channel lock poisoned");
             match guard.recv() {
-                Ok(b) => b,
+                Ok(it) => it,
                 Err(_) => return, // dispatcher gone and queue drained
             }
         };
-        run_batch(exec.as_mut(), batch, &metrics);
+        match item {
+            WorkItem::Batch(batch) => run_batch(exec.as_mut(), batch, &metrics),
+            WorkItem::Steps(steps) => {
+                run_steps(exec.as_mut(), steps, cache.as_ref(), &metrics, &feedback)
+            }
+        }
     }
 }
 
@@ -293,6 +701,7 @@ pub fn run_batch(exec: &mut dyn Executor, batch: Batch, metrics: &Metrics) {
                     queue_time,
                     exec_time,
                     batch_size: n,
+                    token_index: None,
                 });
             }
         }
@@ -304,12 +713,96 @@ pub fn run_batch(exec: &mut dyn Executor, batch: Batch, metrics: &Metrics) {
     }
 }
 
+/// Execute one iteration batch of session steps against the shared state
+/// cache, streaming each produced token to its client and reporting every
+/// completion back to the dispatcher.
+fn run_steps(
+    exec: &mut dyn Executor,
+    batch: StepBatch,
+    cache: Option<&Arc<Mutex<StateCache>>>,
+    metrics: &Metrics,
+    feedback: &Sender<Msg>,
+) {
+    let Some(cache) = cache else {
+        for t in batch.tasks {
+            metrics.failures.fetch_add(1, Ordering::Relaxed);
+            let fb = StepFeedback { session: t.session, token: None, ok: false };
+            let _ = feedback.send(Msg::Feedback(fb));
+        }
+        return;
+    };
+    let n = batch.tasks.len();
+    for task in batch.tasks {
+        let queue_time = task.issued.elapsed();
+        let t0 = Instant::now();
+        let result: Result<Vec<f32>> = match task.phase {
+            Phase::Prefill => {
+                exec.begin_session(task.model, &task.input, &task.shape).map(|(state, first)| {
+                    cache.lock().expect("state cache lock").insert(task.session, state);
+                    first
+                })
+            }
+            Phase::Decode => {
+                // Checkout holds the lock only for bookkeeping; the decode
+                // step itself runs without the cache locked.
+                let state = cache.lock().expect("state cache lock").checkout(task.session);
+                match state {
+                    None => Err(anyhow!("session {} has no cached state", task.session)),
+                    Some(mut st) => {
+                        let r = exec.step_decode(task.model, &mut st, &task.input);
+                        cache.lock().expect("state cache lock").checkin(task.session, st);
+                        r
+                    }
+                }
+            }
+        };
+        let exec_time = t0.elapsed();
+        match result {
+            Ok(token) => {
+                metrics.record_token(queue_time, exec_time);
+                let _ = task.reply.send(Response {
+                    id: task.session,
+                    model: task.model,
+                    output: token.clone(),
+                    queue_time,
+                    exec_time,
+                    batch_size: n,
+                    token_index: Some(task.step),
+                });
+                let _ = feedback.send(Msg::Feedback(StepFeedback {
+                    session: task.session,
+                    token: Some(token),
+                    ok: true,
+                }));
+            }
+            Err(_) => {
+                metrics.failures.fetch_add(1, Ordering::Relaxed);
+                let _ = feedback.send(Msg::Feedback(StepFeedback {
+                    session: task.session,
+                    token: None,
+                    ok: false,
+                }));
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn mock_factory(slots: usize, elems: usize) -> ExecutorFactory {
         Box::new(move || Ok(Box::new(MockExecutor::new(slots, elems)) as Box<dyn Executor>))
+    }
+
+    fn continuous_cfg(budget_states: usize) -> CoordinatorConfig {
+        let mamba = StateShape::mamba(2, 4, 8); // 256 B per session
+        let hyena = StateShape::hyena(2, 8, 8); // 256 B per session
+        CoordinatorConfig {
+            workers: 2,
+            continuous: Some(ContinuousConfig::new(budget_states * 256, mamba, hyena)),
+            ..Default::default()
+        }
     }
 
     #[test]
@@ -395,5 +888,121 @@ mod tests {
         // halve that at minimum.
         assert!(elapsed < Duration::from_millis(70), "elapsed={elapsed:?}");
         c.shutdown();
+    }
+
+    #[test]
+    fn rejected_submit_does_not_leak_inflight() {
+        let c = Coordinator::start(
+            CoordinatorConfig {
+                policy: BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
+                workers: 1,
+                max_inflight: 1,
+                ..Default::default()
+            },
+            Box::new(move || {
+                let mut m = MockExecutor::new(1, 2);
+                m.delay = Duration::from_millis(20);
+                Ok(Box::new(m) as Box<dyn Executor>)
+            }),
+        )
+        .unwrap();
+        let rx = c.submit(ModelKind::Mamba, vec![0.0; 2]).unwrap();
+        // The worker is busy for 20 ms, so this rejection is deterministic.
+        assert!(c.submit(ModelKind::Mamba, vec![0.0; 2]).is_err(), "backpressure rejects");
+        rx.recv().unwrap();
+        // Rejection must not have consumed an in-flight slot.
+        for _ in 0..100 {
+            if c.inflight() == 0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(c.inflight(), 0, "rejected request leaked an in-flight slot");
+        let rx = c.submit(ModelKind::Mamba, vec![0.0; 2]).expect("slot is free again");
+        rx.recv().unwrap();
+        c.shutdown();
+    }
+
+    #[test]
+    fn continuous_sessions_decode_to_completion() {
+        // 12 live sessions but a budget of only 3 resident states: the
+        // cache must evict and the sessions must still finish.
+        let c = Coordinator::start(continuous_cfg(3), mock_factory(1, 8)).unwrap();
+        let steps = 5usize;
+        let rxs: Vec<_> = (0..12)
+            .map(|i| {
+                let model = if i % 2 == 0 { ModelKind::Mamba } else { ModelKind::Hyena };
+                c.submit_session(model, vec![0.25 * (i as f32 + 1.0); 8], steps).unwrap()
+            })
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let mut got = 0usize;
+            let mut last_index = None;
+            while let Ok(r) = rx.recv() {
+                assert_eq!(r.output.len(), 8, "token width");
+                assert_eq!(r.token_index, Some(got), "tokens stream in order");
+                last_index = r.token_index;
+                got += 1;
+            }
+            assert_eq!(got, steps, "session {i} decoded to completion");
+            assert_eq!(last_index, Some(steps - 1));
+        }
+        assert_eq!(c.metrics.tokens.load(Ordering::Relaxed), 12 * steps as u64);
+        assert_eq!(c.metrics.responses.load(Ordering::Relaxed), 12, "one response per session");
+        assert_eq!(c.inflight(), 0);
+        let cs = c.cache_stats().unwrap();
+        assert!(cs.evictions > 0, "3-state budget under 12 sessions must evict: {cs:?}");
+        assert!(cs.peak_resident_bytes as usize <= 3 * 256, "budget invariant");
+        let ss = c.scheduler_stats().unwrap();
+        assert_eq!(ss.retired, 12);
+        assert_eq!(ss.admitted, 12);
+        assert!(c.metrics.token_quantile_us(0.5) > 0, "per-token latency recorded");
+        c.shutdown();
+    }
+
+    #[test]
+    fn eviction_is_transparent_to_decode_numerics() {
+        let run = |budget_states: usize| -> Vec<Vec<Vec<f32>>> {
+            let c = Coordinator::start(continuous_cfg(budget_states), mock_factory(1, 8)).unwrap();
+            let rxs: Vec<_> = (0..6)
+                .map(|i| {
+                    c.submit_session(ModelKind::Mamba, vec![0.1 * (i as f32 + 1.0); 8], 4).unwrap()
+                })
+                .collect();
+            let streams = rxs
+                .into_iter()
+                .map(|rx| {
+                    let mut s = Vec::new();
+                    while let Ok(r) = rx.recv() {
+                        s.push(r.output);
+                    }
+                    s
+                })
+                .collect();
+            c.shutdown();
+            streams
+        };
+        let roomy = run(64);
+        let tight = run(1);
+        assert_eq!(roomy, tight, "spill/restore must not change decode outputs");
+    }
+
+    #[test]
+    fn one_shot_and_sessions_do_not_mix() {
+        let c = Coordinator::start(continuous_cfg(4), mock_factory(1, 8)).unwrap();
+        assert!(c.submit(ModelKind::Mamba, vec![0.0; 8]).is_err(), "one-shot refused");
+        assert!(
+            c.submit_session(ModelKind::Attention, vec![0.0; 8], 2).is_err(),
+            "attention has no SSM state"
+        );
+        assert!(c.submit_session(ModelKind::Mamba, vec![], 2).is_err(), "empty prompt");
+        assert!(c.submit_session(ModelKind::Mamba, vec![0.0; 8], 0).is_err(), "zero steps");
+        c.shutdown();
+        let c2 = Coordinator::start(CoordinatorConfig::default(), mock_factory(1, 8)).unwrap();
+        assert!(
+            c2.submit_session(ModelKind::Mamba, vec![0.0; 8], 2).is_err(),
+            "sessions need continuous mode"
+        );
+        c2.shutdown();
     }
 }

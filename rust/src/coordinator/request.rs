@@ -3,34 +3,66 @@
 use crate::runtime::ModelKind;
 use std::time::{Duration, Instant};
 
+/// Session metadata carried by a session-opening request in continuous
+/// mode. Phase and token progress are tracked by the scheduler, not here —
+/// every submitted session starts at prefill.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionMeta {
+    /// Total tokens the session will decode.
+    pub decode_steps: usize,
+}
+
 /// A single inference request: one activation tensor for one decoder model.
+///
+/// One-shot requests (`session: None`) run through the dynamic batcher;
+/// session-opening requests carry [`SessionMeta`] and are admitted to the
+/// continuous-batching scheduler, with `input` holding the prompt.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
     pub model: ModelKind,
-    /// Flattened `(seq_len × d_model)` activation.
+    /// Flattened `(seq_len × d_model)` activation (the prompt, for
+    /// session-opening requests).
     pub input: Vec<f32>,
     pub submitted: Instant,
+    pub session: Option<SessionMeta>,
 }
 
 impl Request {
     pub fn new(id: u64, model: ModelKind, input: Vec<f32>) -> Self {
-        Self { id, model, input, submitted: Instant::now() }
+        Self { id, model, input, submitted: Instant::now(), session: None }
+    }
+
+    /// A session-opening request: `prompt` is prefilled, then
+    /// `decode_steps` tokens stream back (the prefill's token included).
+    pub fn session_open(id: u64, model: ModelKind, prompt: Vec<f32>, decode_steps: usize) -> Self {
+        Self {
+            id,
+            model,
+            input: prompt,
+            submitted: Instant::now(),
+            session: Some(SessionMeta { decode_steps }),
+        }
     }
 }
 
-/// The completed result for one request.
+/// The completed result for one request — or, for a live session, one
+/// decoded token (the reply channel then carries `decode_steps` of these,
+/// closing after the last).
 #[derive(Debug, Clone)]
 pub struct Response {
+    /// Request id; for session tokens, the session id.
     pub id: u64,
     pub model: ModelKind,
     pub output: Vec<f32>,
     /// Time spent queued before its batch launched.
     pub queue_time: Duration,
-    /// PJRT execution time of the batch that carried this request.
+    /// Backend execution time of the batch that carried this request.
     pub exec_time: Duration,
-    /// How many requests shared the batch.
+    /// How many requests (or session steps) shared the batch.
     pub batch_size: usize,
+    /// For session tokens: this token's 0-based index in the stream.
+    pub token_index: Option<usize>,
 }
 
 impl Response {
@@ -53,7 +85,16 @@ mod tests {
             queue_time: Duration::from_millis(3),
             exec_time: Duration::from_millis(7),
             batch_size: 2,
+            token_index: None,
         };
         assert_eq!(r.latency(), Duration::from_millis(10));
+    }
+
+    #[test]
+    fn session_open_carries_meta() {
+        let r = Request::session_open(9, ModelKind::Hyena, vec![0.5; 8], 12);
+        let meta = r.session.expect("session meta");
+        assert_eq!(meta.decode_steps, 12);
+        assert!(Request::new(1, ModelKind::Mamba, vec![]).session.is_none());
     }
 }

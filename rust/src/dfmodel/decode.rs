@@ -1,0 +1,129 @@
+//! Decode-step cost hook: modeled cycles/seconds for one token of one
+//! session on an RDU configuration — the number the continuous-batching
+//! scheduler and the session simulation driver use to attach hardware time
+//! to iteration batches without a PJRT backend.
+//!
+//! Decode is the recurrence phase (paper §II-B): per token each layer does
+//! a handful of GEMVs plus the state update, so per-step arithmetic is
+//! O(1) in sequence length — exactly why SSMs win long-sequence serving.
+//! Decoder weights are assumed SRAM-resident (at the paper's D = 32 they
+//! are a rounding error against 780 MB of PMU SRAM), so the memory
+//! component is state + per-token activation traffic; off-chip *spill*
+//! traffic is accounted separately by the session state cache.
+
+use crate::arch::RduConfig;
+use crate::runtime::ModelKind;
+use crate::workloads::DecoderConfig;
+
+/// Effective FLOP utilization of decode-step kernels: GEMV-shaped work
+/// cannot saturate the systolic datapaths the way prefill GEMMs do.
+pub const DECODE_UTIL: f64 = 0.25;
+
+/// Modeled cost of one decode step (one token, one session, all layers).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DecodeCost {
+    /// Arithmetic work of the step.
+    pub flops: f64,
+    /// Recurrent-state bytes touched (read + write), all layers.
+    pub state_bytes: f64,
+    /// Total memory traffic of the step (state + token activations).
+    pub io_bytes: f64,
+    pub compute_seconds: f64,
+    pub memory_seconds: f64,
+    /// Step latency: max(compute, memory) — the streams overlap under
+    /// dataflow execution, same as [`super::perf`].
+    pub seconds: f64,
+    /// Step latency in chip clock cycles.
+    pub cycles: f64,
+}
+
+/// Model one decode step of `layers` decoder layers shaped by `dc` on `cfg`.
+pub fn decode_step(
+    model: ModelKind,
+    dc: &DecoderConfig,
+    layers: usize,
+    cfg: &RduConfig,
+) -> DecodeCost {
+    let d = dc.d_model as f64;
+    let di = dc.d_inner() as f64;
+    let n = dc.state_dim.max(1) as f64;
+    let r = dc.fft_tile as f64;
+    // Two MLP GEMVs (d → mlp·d → d), 2 FLOPs per MAC.
+    let mlp_flops = 4.0 * d * (dc.mlp_mult as f64) * d;
+    let (mix_flops, state_bytes) = match model {
+        // In/out projections (d → 2·d_inner, d_inner → d) + the selective
+        // scan update h = Ā h + B̄ x and readout y = C h over N × d_inner
+        // state; state is read and written once per step (f32).
+        ModelKind::Mamba => (2.0 * (d * 2.0 * di + di * d) + 6.0 * n * di, 2.0 * n * di * 4.0),
+        // Three gating projections + the R-tap filter contribution per
+        // channel; the FFT filter/prefix caches (R × d complex each) are
+        // read and updated once per step.
+        ModelKind::Hyena => (2.0 * 3.0 * d * d + 4.0 * r * d, 2.0 * 2.0 * r * d * 4.0),
+        // QKV + output projections; the KV cache grows with context and is
+        // not O(1) — its traffic is out of scope for the SSM session cache.
+        ModelKind::Attention => (2.0 * 4.0 * d * d, 0.0),
+    };
+    let l = layers.max(1) as f64;
+    let flops = l * (mix_flops + mlp_flops);
+    let state = l * state_bytes;
+    // One token in, one token out per layer boundary.
+    let io_bytes = state + l * 2.0 * d * dc.dtype_bytes;
+    let compute_seconds = flops / (cfg.spec.peak_flops() * DECODE_UTIL);
+    let memory_seconds = io_bytes / cfg.spec.dram_bandwidth();
+    let seconds = compute_seconds.max(memory_seconds);
+    DecodeCost {
+        flops,
+        state_bytes: state,
+        io_bytes,
+        compute_seconds,
+        memory_seconds,
+        seconds,
+        cycles: seconds * cfg.spec.clock_hz,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn costs_are_positive_and_consistent() {
+        let dc = DecoderConfig::paper(1 << 20);
+        let cfg = RduConfig::hs_scan_mode();
+        for model in ModelKind::ALL {
+            let c = decode_step(model, &dc, 8, &cfg);
+            assert!(c.flops > 0.0, "{model}");
+            assert!(c.seconds > 0.0, "{model}");
+            assert!(c.seconds >= c.compute_seconds && c.seconds >= c.memory_seconds);
+            assert!((c.cycles - c.seconds * cfg.spec.clock_hz).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn cost_scales_with_layers() {
+        let dc = DecoderConfig::paper(1 << 20);
+        let cfg = RduConfig::baseline();
+        let one = decode_step(ModelKind::Mamba, &dc, 1, &cfg);
+        let eight = decode_step(ModelKind::Mamba, &dc, 8, &cfg);
+        assert!((eight.flops / one.flops - 8.0).abs() < 1e-9);
+        assert!(eight.seconds >= one.seconds);
+    }
+
+    #[test]
+    fn mamba_state_grows_with_state_dim() {
+        let cfg = RduConfig::baseline();
+        let small = decode_step(ModelKind::Mamba, &DecoderConfig::paper(1 << 20), 4, &cfg);
+        let full = decode_step(ModelKind::Mamba, &DecoderConfig::mamba_full(1 << 20), 4, &cfg);
+        assert!(full.state_bytes > small.state_bytes, "N=16,E=2 touches more state");
+        assert!(full.flops > small.flops);
+    }
+
+    #[test]
+    fn decode_step_is_independent_of_seq_len() {
+        // The whole point of SSM decode: O(1) per-token cost.
+        let cfg = RduConfig::hs_scan_mode();
+        let short = decode_step(ModelKind::Mamba, &DecoderConfig::paper(1 << 10), 8, &cfg);
+        let long = decode_step(ModelKind::Mamba, &DecoderConfig::paper(1 << 20), 8, &cfg);
+        assert_eq!(short, long);
+    }
+}

@@ -11,15 +11,20 @@
 //!   SRAM-capacity sectioning.
 //! * [`perf`] — the latency estimator: per-section pipeline bottleneck,
 //!   overlapped DRAM streaming, per-kernel and per-op-class breakdowns.
+//! * [`decode`] — the decode-step cost hook: O(1)-per-token cycle/latency
+//!   model that drives the [`crate::session`] continuous-batching
+//!   scheduler in simulation, without a PJRT backend.
 //!
 //! The GPU and VGA comparison backends live in [`crate::gpu`] and
 //! [`crate::vga`]; they consume the same [`crate::graph::Graph`] workloads.
 
+pub mod decode;
 pub mod mapping;
 pub mod perf;
 pub mod sweep;
 pub mod throughput;
 
+pub use decode::{decode_step, DecodeCost, DECODE_UTIL};
 pub use mapping::{map_graph, Allocation, MapFailure, Mapping, Section};
 pub use perf::{estimate, Estimate, KernelEstimate};
 pub use sweep::{sweep_bandwidth, sweep_pcu_count, sweep_stages, SweepPoint};

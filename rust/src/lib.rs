@@ -23,6 +23,10 @@
 //! * [`runtime`], [`coordinator`] — the serving stack: PJRT artifact execution
 //!   plus a request router / dynamic batcher, so the decoder layers built in
 //!   JAX/Pallas (L1/L2) actually run end-to-end under the Rust leader (L3).
+//! * [`session`] — per-sequence SSM decode state (Mamba recurrent blocks,
+//!   Hyena FFT caches) under a byte-budgeted LRU cache, plus the
+//!   continuous-batching scheduler that serves multi-turn/streaming decode
+//!   (`serve --continuous`).
 //! * [`util`], [`bench`] — offline-friendly infrastructure (PRNG, mini
 //!   property-test runner, CLI parsing, bench harness).
 //!
@@ -40,6 +44,7 @@ pub mod graph;
 pub mod pcusim;
 pub mod runtime;
 pub mod scan;
+pub mod session;
 pub mod synth;
 pub mod util;
 pub mod vga;

@@ -10,18 +10,36 @@
 //!                                run the cycle-level PCU simulator demo
 //!   dot --model <attention|hyena|mamba> [--seq-len L]
 //!                                dump a workload dataflow graph (graphviz)
-//!   serve [--artifacts DIR --requests N --workers W --max-batch B]
-//!                                serve batched requests through the PJRT
-//!                                runtime (the E2E driver's engine)
+//!   serve [--artifacts DIR --requests N --workers W --max-batch B
+//!          --max-wait-ms MS]
+//!                                serve one-shot batched requests through
+//!                                the PJRT runtime (the E2E driver's engine)
+//!   serve --continuous [--sessions N --decode-steps K --workers W
+//!                       --max-batch B --cache-mb M --layers L --d-state S
+//!                       --state-d-model D --fft-points P
+//!                       --session-timeout-ms MS]
+//!                                continuous-batching session serving over
+//!                                the MockExecutor: N live sessions decode
+//!                                K tokens each through the SessionScheduler
+//!                                + StateCache (LRU, byte budget, spill
+//!                                accounting). Default budget is half the
+//!                                total state footprint so eviction is
+//!                                exercised; override with --cache-mb.
 
 use ssm_rdu::arch::{PcuGeometry, RduConfig};
-use ssm_rdu::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, Executor, PjrtExecutor};
+use ssm_rdu::coordinator::{
+    BatchPolicy, ContinuousConfig, Coordinator, CoordinatorConfig, Executor, MockExecutor,
+    PjrtExecutor,
+};
 use ssm_rdu::figures;
 use ssm_rdu::pcusim::{self, Pcu};
 use ssm_rdu::runtime::{default_artifacts_dir, ModelKind};
+use ssm_rdu::session::{SchedulerConfig, StateShape};
 use ssm_rdu::util::cli::Args;
 use ssm_rdu::util::{fmt_time, C64, XorShift};
-use ssm_rdu::workloads::{attention_decoder, hyena_decoder, mamba_decoder, DecoderConfig, ScanVariant};
+use ssm_rdu::workloads::{
+    attention_decoder, hyena_decoder, mamba_decoder, DecoderConfig, ScanVariant,
+};
 use std::time::Duration;
 
 fn main() {
@@ -150,8 +168,13 @@ fn dot(args: &Args) -> i32 {
     0
 }
 
-/// Serve synthetic batched requests through the PJRT runtime.
+/// Serve synthetic batched requests through the PJRT runtime, or — with
+/// `--continuous` — live decode sessions through the continuous-batching
+/// session subsystem (MockExecutor; per-token kernels are not AOT-lowered).
 fn serve(args: &Args) -> i32 {
+    if args.flag("continuous") {
+        return serve_continuous(args);
+    }
     let dir = args
         .get("artifacts")
         .map(std::path::PathBuf::from)
@@ -178,8 +201,8 @@ fn serve(args: &Args) -> i32 {
         CoordinatorConfig {
             policy: BatchPolicy { max_batch, max_wait: Duration::from_millis(wait_ms as u64) },
             workers,
-                ..Default::default()
-            },
+            ..Default::default()
+        },
         Box::new(move || {
             let exec = PjrtExecutor::load(&dir2)?;
             Ok(Box::new(exec) as Box<dyn Executor>)
@@ -234,4 +257,154 @@ fn serve(args: &Args) -> i32 {
         }
     }
     0
+}
+
+/// `serve --continuous`: N live sessions stream K tokens each through the
+/// session subsystem (scheduler + state cache) over the worker pool.
+fn serve_continuous(args: &Args) -> i32 {
+    let sessions = args.usize_or("sessions", 96);
+    let decode_steps = args.usize_or("decode-steps", 32);
+    let workers = args.usize_or("workers", 2);
+    let max_batch = args.usize_or("max-batch", 16);
+    let layers = args.usize_or("layers", 8);
+    let d_state = args.usize_or("d-state", 16);
+    let d_model = args.usize_or("state-d-model", 64);
+    let fft_points = args.usize_or("fft-points", 256);
+    let timeout_ms = args.usize_or("session-timeout-ms", 30_000);
+
+    let mamba_shape = StateShape::mamba(layers, d_state, d_model);
+    let hyena_shape = StateShape::hyena(layers, d_model, fft_points);
+    let model_of = |i: usize| if i % 2 == 0 { ModelKind::Mamba } else { ModelKind::Hyena };
+    let footprint: usize = (0..sessions)
+        .map(|i| {
+            if model_of(i) == ModelKind::Mamba {
+                mamba_shape.bytes()
+            } else {
+                hyena_shape.bytes()
+            }
+        })
+        .sum();
+    // Default budget: half the footprint, so the demo exercises eviction;
+    // always at least one state so decode can make progress.
+    let budget_bytes = match args.get("cache-mb") {
+        Some(_) => args.usize_or("cache-mb", 8) * (1 << 20),
+        None => (footprint / 2).max(mamba_shape.bytes().max(hyena_shape.bytes())),
+    };
+    println!(
+        "continuous serving: {sessions} sessions × {decode_steps} tokens, {workers} workers, \
+         batch {max_batch}"
+    );
+    println!(
+        "state footprint {:.1} KiB vs cache budget {:.1} KiB ({})",
+        footprint as f64 / 1024.0,
+        budget_bytes as f64 / 1024.0,
+        if budget_bytes < footprint { "expect spills" } else { "fully resident" }
+    );
+
+    let cc = ContinuousConfig {
+        sched: SchedulerConfig {
+            max_batch,
+            session_timeout: Duration::from_millis(timeout_ms as u64),
+        },
+        budget_bytes,
+        mamba_shape,
+        hyena_shape,
+    };
+    let coord = match Coordinator::start(
+        CoordinatorConfig {
+            workers,
+            max_inflight: sessions.max(1) * 2,
+            continuous: Some(cc),
+            ..Default::default()
+        },
+        Box::new(move || Ok(Box::new(MockExecutor::new(1, d_model)) as Box<dyn Executor>)),
+    ) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("failed to start coordinator: {e:#}");
+            return 1;
+        }
+    };
+
+    let mut rng = XorShift::new(11);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..sessions)
+        .map(|i| {
+            let prompt: Vec<f32> =
+                (0..d_model * 4).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+            coord.submit_session(model_of(i), prompt, decode_steps).expect("submit_session")
+        })
+        .collect();
+    let mut tokens = 0u64;
+    let mut complete = 0usize;
+    for rx in rxs {
+        let mut got = 0usize;
+        while rx.recv().is_ok() {
+            got += 1;
+            tokens += 1;
+        }
+        if got == decode_steps {
+            complete += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    println!(
+        "done: {complete}/{sessions} sessions complete, {tokens} tokens in {} ({:.0} tok/s)",
+        fmt_time(wall.as_secs_f64()),
+        tokens as f64 / wall.as_secs_f64()
+    );
+    println!("metrics: {}", coord.metrics.summary());
+    if let Some(cs) = coord.cache_stats() {
+        println!(
+            "cache: hits={} misses={} evictions={} restores={} spilled={:.1} KiB \
+             restored={:.1} KiB peak_resident={:.1} KiB hit_rate={:.1}% spill_time={}",
+            cs.hits,
+            cs.misses,
+            cs.evictions,
+            cs.restores,
+            cs.spilled_bytes as f64 / 1024.0,
+            cs.restored_bytes as f64 / 1024.0,
+            cs.peak_resident_bytes as f64 / 1024.0,
+            cs.hit_rate() * 100.0,
+            fmt_time(cs.spill_seconds),
+        );
+    }
+    if let Some(ss) = coord.scheduler_stats() {
+        println!(
+            "scheduler: admitted={} retired={} expired={} failed={} prefill_steps={} \
+             decode_steps={} batches={}",
+            ss.admitted, ss.retired, ss.expired, ss.failed, ss.prefill_steps, ss.decode_steps,
+            ss.batches,
+        );
+    }
+    // Tie back to the paper's performance model: the modeled per-token
+    // decode-step latency for these shapes on the extended RDU.
+    for (model, shape, cfg) in [
+        (ModelKind::Mamba, &mamba_shape, RduConfig::hs_scan_mode()),
+        (ModelKind::Hyena, &hyena_shape, RduConfig::fft_mode()),
+    ] {
+        let dc = DecoderConfig {
+            seq_len: 1,
+            d_model: shape.d_model,
+            mlp_mult: 4,
+            dtype_bytes: 2.0,
+            fft_tile: 32,
+            state_dim: shape.d_state.max(1),
+            expand: 1,
+        };
+        let cost = ssm_rdu::dfmodel::decode_step(model, &dc, shape.layers, &cfg);
+        println!(
+            "modeled {model} decode step on {}: {} ({:.0} cycles, state {:.1} KiB/step)",
+            cfg.name(),
+            fmt_time(cost.seconds),
+            cost.cycles,
+            cost.state_bytes / 1024.0,
+        );
+    }
+    coord.shutdown();
+    if complete == sessions {
+        0
+    } else {
+        1
+    }
 }

@@ -134,4 +134,42 @@ mod tests {
         let doc = r#"{"seq_len": 1, "d_model": 1, "batch": 1, "models": {}}"#;
         assert!(Manifest::parse(doc).is_err());
     }
+
+    #[test]
+    fn missing_numeric_key_names_the_key() {
+        let doc = DOC.replace("\"seq_len\": 2048,", "");
+        let err = Manifest::parse(&doc).unwrap_err();
+        assert!(format!("{err:#}").contains("seq_len"), "{err:#}");
+        let doc = DOC.replace("\"batch\": 4,", "");
+        assert!(format!("{:#}", Manifest::parse(&doc).unwrap_err()).contains("batch"));
+    }
+
+    #[test]
+    fn rejects_wrong_dim_count_both_directions() {
+        // Too few dims is covered by rejects_bad_shape; too many:
+        let doc = DOC.replace("[4, 2048, 32]", "[4, 2048, 32, 1]");
+        let err = Manifest::parse(&doc).unwrap_err();
+        assert!(format!("{err:#}").contains("3 dims"), "{err:#}");
+    }
+
+    #[test]
+    fn rejects_non_integer_dim() {
+        for bad in ["[4, 2048.5, 32]", "[4, \"x\", 32]", "[4, -2048, 32]"] {
+            let doc = DOC.replace("[4, 2048, 32]", bad);
+            let err = match Manifest::parse(&doc) {
+                Err(e) => e,
+                Ok(_) => panic!("dim {bad} must be rejected"),
+            };
+            assert!(format!("{err:#}").contains("dim"), "{bad}: {err:#}");
+        }
+    }
+
+    #[test]
+    fn rejects_missing_path_and_missing_models() {
+        let doc = DOC.replace("\"path\": \"hyena.hlo.txt\",", "");
+        let err = Manifest::parse(&doc).unwrap_err();
+        assert!(format!("{err:#}").contains("path"), "{err:#}");
+        let doc = r#"{"seq_len": 1, "d_model": 1, "batch": 1}"#;
+        assert!(format!("{:#}", Manifest::parse(doc).unwrap_err()).contains("models"));
+    }
 }

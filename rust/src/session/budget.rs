@@ -1,0 +1,119 @@
+//! Byte-accurate memory budget for resident session state, derived from the
+//! chip's memory capacities in [`crate::arch`].
+//!
+//! The budget models the slice of on-chip SRAM (PMUs, paper Table I) the
+//! serving deployment dedicates to decode state; everything beyond it spills
+//! over the off-chip interface, whose cost is modeled with
+//! [`crate::arch::MemTech::transfer_time`].
+
+use crate::arch::{MemTech, RduSpec};
+
+/// A hard byte budget with exact reserve/release accounting.
+///
+/// Invariant: `used ≤ capacity` at all times — `try_reserve` refuses any
+/// reservation that would exceed the budget, so the caller (the state
+/// cache) must evict first.
+#[derive(Debug, Clone)]
+pub struct MemoryBudget {
+    capacity: usize,
+    used: usize,
+}
+
+impl MemoryBudget {
+    /// A budget of exactly `capacity` bytes.
+    pub fn new(capacity: usize) -> Self {
+        Self { capacity, used: 0 }
+    }
+
+    /// A budget equal to `fraction` of the chip's total SRAM
+    /// (`RduSpec::sram_bytes`, 780 MB for the Table I configuration).
+    pub fn from_sram_fraction(spec: &RduSpec, fraction: f64) -> Self {
+        let f = fraction.clamp(0.0, 1.0);
+        Self::new((spec.sram_bytes() as f64 * f) as usize)
+    }
+
+    /// A budget of `n` PMUs' worth of SRAM (1.5 MB each for Table I).
+    pub fn from_pmus(spec: &RduSpec, n: usize) -> Self {
+        Self::new(n * spec.pmu_bytes)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn used(&self) -> usize {
+        self.used
+    }
+
+    pub fn headroom(&self) -> usize {
+        self.capacity - self.used
+    }
+
+    /// Would a reservation of `bytes` fit right now?
+    pub fn fits(&self, bytes: usize) -> bool {
+        self.used.saturating_add(bytes) <= self.capacity
+    }
+
+    /// Reserve `bytes`; returns false (and reserves nothing) if it would
+    /// exceed the budget.
+    pub fn try_reserve(&mut self, bytes: usize) -> bool {
+        if self.fits(bytes) {
+            self.used += bytes;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Release a previous reservation of `bytes`.
+    pub fn release(&mut self, bytes: usize) {
+        debug_assert!(self.used >= bytes, "releasing {bytes} B with only {} B used", self.used);
+        self.used = self.used.saturating_sub(bytes);
+    }
+}
+
+/// Modeled time to move `bytes` of spilled state across the off-chip
+/// interface (one direction).
+pub fn spill_seconds(bytes: usize, dram: MemTech) -> f64 {
+    dram.transfer_time(bytes as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reserve_release_accounting() {
+        let mut b = MemoryBudget::new(100);
+        assert!(b.try_reserve(60));
+        assert!(!b.try_reserve(50), "would exceed capacity");
+        assert_eq!(b.used(), 60);
+        assert_eq!(b.headroom(), 40);
+        b.release(60);
+        assert_eq!(b.used(), 0);
+        assert!(b.try_reserve(100));
+    }
+
+    #[test]
+    fn zero_budget_fits_nothing_but_zero() {
+        let mut b = MemoryBudget::new(0);
+        assert!(b.fits(0));
+        assert!(!b.try_reserve(1));
+    }
+
+    #[test]
+    fn derived_from_table1_pmus() {
+        let spec = crate::arch::RduSpec::table1();
+        let b = MemoryBudget::from_pmus(&spec, 4);
+        assert_eq!(b.capacity(), 4 * spec.pmu_bytes);
+        let half = MemoryBudget::from_sram_fraction(&spec, 0.5);
+        assert_eq!(half.capacity(), spec.sram_bytes() / 2);
+    }
+
+    #[test]
+    fn spill_time_uses_mem_tech_bandwidth() {
+        // 8 TB at 8 TB/s (HBM3e) = 1 s.
+        let s = spill_seconds(8_000_000_000_000, MemTech::Hbm3e);
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,310 @@
+//! Per-session state cache: LRU-resident SSM decode state under a hard byte
+//! budget, with spill/restore accounting.
+//!
+//! XAMBA (arXiv 2502.06924) shows SSM serving on constrained hardware is
+//! dominated by state-management efficiency; Fine-Grained Fusion (arXiv
+//! 2504.17333) argues on-chip state residency is the area/latency lever.
+//! This cache makes that trade explicit: states the budget can hold stay
+//! *resident* (modeled on-chip); the LRU victim is *spilled* (modeled
+//! off-chip, charged at [`crate::arch::MemTech`] bandwidth) and restored on
+//! the session's next decode step.
+//!
+//! Invariant: resident bytes ≤ budget at all times. Spilled state is kept
+//! bit-exact, so eviction is transparent to decode numerics — only the
+//! modeled transfer time and the hit/evict counters change.
+
+use super::budget::{spill_seconds, MemoryBudget};
+use super::state::SsmState;
+use super::SessionId;
+use crate::arch::MemTech;
+use std::collections::BTreeMap;
+
+/// Cumulative cache counters (exposed through `Coordinator::cache_stats`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CacheStats {
+    /// Checkouts served from resident state.
+    pub hits: u64,
+    /// Checkouts that had to restore spilled state.
+    pub misses: u64,
+    /// Residents pushed out to the spill store (LRU victims + states that
+    /// never fit).
+    pub evictions: u64,
+    /// Spilled states brought back for a decode step.
+    pub restores: u64,
+    /// Cumulative bytes moved out to the spill store.
+    pub spilled_bytes: u64,
+    /// Cumulative bytes restored from the spill store.
+    pub restored_bytes: u64,
+    /// High-water mark of resident bytes.
+    pub peak_resident_bytes: u64,
+    /// Modeled off-chip transfer time of all spills + restores.
+    pub spill_seconds: f64,
+}
+
+impl CacheStats {
+    /// Hit rate over all checkouts (1.0 when nothing ever spilled).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            return 1.0;
+        }
+        self.hits as f64 / total as f64
+    }
+}
+
+#[derive(Debug)]
+struct Resident {
+    state: SsmState,
+    bytes: usize,
+    /// Monotonic LRU stamp; the minimum stamp is the eviction victim.
+    stamp: u64,
+}
+
+/// The session-keyed state cache.
+pub struct StateCache {
+    budget: MemoryBudget,
+    dram: MemTech,
+    resident: BTreeMap<SessionId, Resident>,
+    spilled: BTreeMap<SessionId, SsmState>,
+    tick: u64,
+    pub stats: CacheStats,
+}
+
+impl StateCache {
+    pub fn new(budget: MemoryBudget, dram: MemTech) -> Self {
+        Self {
+            budget,
+            dram,
+            resident: BTreeMap::new(),
+            spilled: BTreeMap::new(),
+            tick: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Convenience: a byte budget with the paper's HBM3e spill path.
+    pub fn with_budget_bytes(bytes: usize) -> Self {
+        Self::new(MemoryBudget::new(bytes), MemTech::Hbm3e)
+    }
+
+    /// Bytes of state currently resident (always ≤ `budget_bytes`).
+    pub fn resident_bytes(&self) -> usize {
+        self.budget.used()
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget.capacity()
+    }
+
+    pub fn resident_len(&self) -> usize {
+        self.resident.len()
+    }
+
+    pub fn spilled_len(&self) -> usize {
+        self.spilled.len()
+    }
+
+    /// Is this session's state anywhere in the cache (resident or spilled)?
+    pub fn contains(&self, id: SessionId) -> bool {
+        self.resident.contains_key(&id) || self.spilled.contains_key(&id)
+    }
+
+    /// Insert (or replace) a session's state, evicting LRU residents as
+    /// needed. A state larger than the entire budget goes straight to the
+    /// spill store — it can never be resident.
+    pub fn insert(&mut self, id: SessionId, state: SsmState) {
+        // Replacing an existing entry must release its accounting first.
+        self.remove(id);
+        let bytes = state.bytes();
+        if bytes > self.budget.capacity() {
+            // Can never be resident: spill directly instead of pointlessly
+            // evicting every resident state first.
+            self.spill_out(id, state);
+            return;
+        }
+        self.make_room(bytes);
+        if self.budget.try_reserve(bytes) {
+            self.tick += 1;
+            self.resident.insert(id, Resident { state, bytes, stamp: self.tick });
+            let used = self.budget.used() as u64;
+            if used > self.stats.peak_resident_bytes {
+                self.stats.peak_resident_bytes = used;
+            }
+        } else {
+            self.spill_out(id, state);
+        }
+    }
+
+    /// Take a session's state out for a decode step. Resident → hit;
+    /// spilled → miss + restore (charged at off-chip bandwidth); unknown →
+    /// `None`. While checked out, the state's bytes are not held against
+    /// the budget — `checkin` re-reserves (evicting others if needed).
+    pub fn checkout(&mut self, id: SessionId) -> Option<SsmState> {
+        if let Some(r) = self.resident.remove(&id) {
+            self.budget.release(r.bytes);
+            self.stats.hits += 1;
+            return Some(r.state);
+        }
+        if let Some(s) = self.spilled.remove(&id) {
+            let bytes = s.bytes();
+            self.stats.misses += 1;
+            self.stats.restores += 1;
+            self.stats.restored_bytes += bytes as u64;
+            self.stats.spill_seconds += spill_seconds(bytes, self.dram);
+            return Some(s);
+        }
+        None
+    }
+
+    /// Return a checked-out state after its decode step.
+    pub fn checkin(&mut self, id: SessionId, state: SsmState) {
+        self.insert(id, state);
+    }
+
+    /// Retire a session, dropping its state entirely (not an eviction).
+    pub fn remove(&mut self, id: SessionId) -> Option<SsmState> {
+        if let Some(r) = self.resident.remove(&id) {
+            self.budget.release(r.bytes);
+            return Some(r.state);
+        }
+        self.spilled.remove(&id)
+    }
+
+    /// Evict LRU residents until `need` bytes fit (or nothing is left).
+    fn make_room(&mut self, need: usize) {
+        while !self.budget.fits(need) {
+            let victim = self.resident.iter().min_by_key(|(_, r)| r.stamp).map(|(&id, _)| id);
+            let Some(id) = victim else { break };
+            let r = self.resident.remove(&id).expect("victim was just found resident");
+            self.budget.release(r.bytes);
+            self.spill_out(id, r.state);
+        }
+    }
+
+    fn spill_out(&mut self, id: SessionId, state: SsmState) {
+        let bytes = state.bytes();
+        self.stats.evictions += 1;
+        self.stats.spilled_bytes += bytes as u64;
+        self.stats.spill_seconds += spill_seconds(bytes, self.dram);
+        self.spilled.insert(id, state);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::state::StateShape;
+    use crate::util::XorShift;
+
+    fn state(tag: f32) -> SsmState {
+        // 2 × 4 × 8 × 4 B = 256 B per state.
+        let mut s = SsmState::zeros(&StateShape::mamba(2, 4, 8)).unwrap();
+        s.fill(tag);
+        s
+    }
+
+    const B: usize = 256;
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut c = StateCache::with_budget_bytes(2 * B);
+        c.insert(1, state(1.0));
+        c.insert(2, state(2.0));
+        assert_eq!(c.resident_len(), 2);
+        // Third insert evicts the least-recently-used (id 1).
+        c.insert(3, state(3.0));
+        assert_eq!(c.stats.evictions, 1);
+        assert_eq!(c.spilled_len(), 1);
+        assert!(c.contains(1), "evicted state is spilled, not lost");
+        // Touch 2 (checkout/checkin refreshes its stamp), then insert 4:
+        // the victim must now be 3, not 2.
+        let s2 = c.checkout(2).unwrap();
+        c.checkin(2, s2);
+        c.insert(4, state(4.0));
+        assert_eq!(c.stats.evictions, 2);
+        let s2 = c.checkout(2).expect("2 still present");
+        assert_eq!(c.stats.hits, 2, "2 stayed resident");
+        assert_eq!(s2.mean(), 2.0);
+    }
+
+    #[test]
+    fn spill_restore_is_bit_exact() {
+        let mut c = StateCache::with_budget_bytes(B);
+        c.insert(1, state(7.5));
+        c.insert(2, state(9.0)); // evicts 1
+        assert_eq!(c.stats.evictions, 1);
+        let s1 = c.checkout(1).expect("restored from spill");
+        assert_eq!(c.stats.misses, 1);
+        assert_eq!(c.stats.restores, 1);
+        assert_eq!(s1.mean(), 7.5, "spill/restore preserves state exactly");
+        assert_eq!(c.stats.restored_bytes, B as u64);
+        assert!(c.stats.spill_seconds > 0.0);
+    }
+
+    #[test]
+    fn oversized_state_never_resident() {
+        let mut c = StateCache::with_budget_bytes(B / 2);
+        c.insert(1, state(1.0));
+        assert_eq!(c.resident_len(), 0);
+        assert_eq!(c.spilled_len(), 1);
+        assert_eq!(c.stats.evictions, 1);
+        assert!(c.checkout(1).is_some());
+    }
+
+    #[test]
+    fn budget_invariant_under_churn() {
+        let mut c = StateCache::with_budget_bytes(3 * B + B / 2);
+        let mut rng = XorShift::new(17);
+        let mut out: Vec<(SessionId, SsmState)> = Vec::new();
+        for step in 0..500u64 {
+            let id = (rng.uniform(0.0, 8.0) as SessionId) % 8;
+            match step % 4 {
+                0 => c.insert(id, state(id as f32)),
+                1 => {
+                    if let Some(s) = c.checkout(id) {
+                        out.push((id, s));
+                    }
+                }
+                2 => {
+                    if let Some((id, s)) = out.pop() {
+                        c.checkin(id, s);
+                    }
+                }
+                _ => {
+                    c.remove(id);
+                }
+            }
+            // The invariant: resident bytes never exceed the budget.
+            assert!(
+                c.resident_bytes() <= c.budget_bytes(),
+                "step {step}: {} > {}",
+                c.resident_bytes(),
+                c.budget_bytes()
+            );
+            assert_eq!(c.resident_bytes(), c.resident_len() * B, "exact accounting");
+        }
+        assert!(c.stats.peak_resident_bytes as usize <= c.budget_bytes());
+    }
+
+    #[test]
+    fn remove_is_not_an_eviction() {
+        let mut c = StateCache::with_budget_bytes(2 * B);
+        c.insert(1, state(1.0));
+        assert!(c.remove(1).is_some());
+        assert_eq!(c.stats.evictions, 0);
+        assert_eq!(c.resident_bytes(), 0);
+        assert!(!c.contains(1));
+        assert!(c.checkout(1).is_none());
+    }
+
+    #[test]
+    fn hit_rate_reflects_spills() {
+        let mut c = StateCache::with_budget_bytes(10 * B);
+        c.insert(1, state(1.0));
+        let s = c.checkout(1).unwrap();
+        c.checkin(1, s);
+        assert_eq!(c.stats.hit_rate(), 1.0);
+        let empty = StateCache::with_budget_bytes(0);
+        assert_eq!(empty.stats.hit_rate(), 1.0, "no traffic yet");
+    }
+}

@@ -1,0 +1,261 @@
+//! Single-threaded simulation driver: runs the continuous-batching
+//! scheduler + state cache against any [`Executor`] (normally the mock),
+//! attaching hardware time to every iteration batch via the
+//! [`crate::dfmodel::decode`] cost hook — the whole serving loop is
+//! exercisable without PJRT artifacts or worker threads.
+//!
+//! Used by `benches/serve_sessions.rs` and `examples/chat_sessions.rs`;
+//! the threaded production path lives in [`crate::coordinator`].
+
+use super::cache::{CacheStats, StateCache};
+use super::scheduler::{
+    Phase, SchedStats, SchedulerConfig, SessionInfo, SessionScheduler, StepOutcome,
+};
+use super::state::StateShape;
+use super::SessionId;
+use crate::arch::RduConfig;
+use crate::coordinator::Executor;
+use crate::dfmodel::decode::decode_step;
+use crate::runtime::ModelKind;
+use crate::session::budget::MemoryBudget;
+use crate::util::XorShift;
+use crate::Result;
+use anyhow::anyhow;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// One simulated serving scenario.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Concurrent sessions (models alternate Mamba/Hyena).
+    pub sessions: usize,
+    /// Tokens each session decodes (prefill's first token included).
+    pub decode_steps: usize,
+    /// Prompt length in tokens (scales the modeled prefill cost).
+    pub prompt_tokens: usize,
+    pub mamba_shape: StateShape,
+    pub hyena_shape: StateShape,
+    pub sched: SchedulerConfig,
+    /// Resident state budget in bytes.
+    pub budget_bytes: usize,
+    /// PRNG seed for prompt synthesis.
+    pub seed: u64,
+}
+
+impl SimConfig {
+    /// A small realistic scenario: 8-layer decoders, Mamba N=16 over D=64,
+    /// Hyena caches matched to the same footprint class.
+    pub fn demo(sessions: usize, decode_steps: usize) -> Self {
+        let mamba_shape = StateShape::mamba(8, 16, 64);
+        let hyena_shape = StateShape::hyena(8, 64, 256);
+        let mut cfg = Self {
+            sessions,
+            decode_steps,
+            prompt_tokens: 16,
+            mamba_shape,
+            hyena_shape,
+            sched: SchedulerConfig::default(),
+            budget_bytes: 0,
+            seed: 5,
+        };
+        cfg.budget_bytes = cfg.footprint_bytes(); // default: everything fits
+        cfg
+    }
+
+    /// Which model session `i` runs (alternating).
+    pub fn model_of(&self, i: usize) -> ModelKind {
+        if i % 2 == 0 {
+            ModelKind::Mamba
+        } else {
+            ModelKind::Hyena
+        }
+    }
+
+    pub fn shape_for(&self, model: ModelKind) -> StateShape {
+        match model {
+            ModelKind::Hyena => self.hyena_shape,
+            _ => self.mamba_shape,
+        }
+    }
+
+    /// Total state footprint if every session were resident at once.
+    pub fn footprint_bytes(&self) -> usize {
+        (0..self.sessions).map(|i| self.shape_for(self.model_of(i)).bytes()).sum()
+    }
+}
+
+/// Result of one simulation run.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Tokens produced (= sessions × decode_steps on success).
+    pub tokens: u64,
+    /// Modeled hardware time: Σ over iteration batches of the slowest step
+    /// in the batch, plus modeled spill/restore transfer time.
+    pub sim_seconds: f64,
+    /// Host wall-clock of the simulation itself.
+    pub wall: Duration,
+    pub cache: CacheStats,
+    pub sched: SchedStats,
+    pub batches: u64,
+    pub mean_batch: f64,
+}
+
+impl SimReport {
+    /// Modeled serving throughput.
+    pub fn tokens_per_sim_second(&self) -> f64 {
+        if self.sim_seconds <= 0.0 {
+            return 0.0;
+        }
+        self.tokens as f64 / self.sim_seconds
+    }
+}
+
+/// Decoder shape fed to the cost hook for a given state shape.
+fn cost_config(shape: &StateShape) -> crate::workloads::DecoderConfig {
+    crate::workloads::DecoderConfig {
+        seq_len: 1, // decode cost is O(1) in sequence length
+        d_model: shape.d_model,
+        mlp_mult: 4,
+        dtype_bytes: 2.0,
+        fft_tile: 32,
+        state_dim: shape.d_state.max(1),
+        expand: 1,
+    }
+}
+
+/// Run `cfg.sessions` sessions to completion through the scheduler + cache
+/// on `exec`, timing iteration batches with the DFModel decode-cost hook
+/// for `rdu`.
+pub fn simulate(exec: &mut dyn Executor, cfg: &SimConfig, rdu: &RduConfig) -> Result<SimReport> {
+    let t0 = Instant::now();
+    let mut cache = StateCache::new(MemoryBudget::new(cfg.budget_bytes), rdu.spec.dram);
+    let mut sched = SessionScheduler::new(cfg.sched);
+    let mut rng = XorShift::new(cfg.seed);
+
+    // Per-model decode-step cost (all sessions of a model share a shape).
+    let step_cost = |model: ModelKind| {
+        let shape = cfg.shape_for(model);
+        decode_step(model, &cost_config(&shape), shape.layers, rdu).seconds
+    };
+    let mamba_cost = step_cost(ModelKind::Mamba);
+    let hyena_cost = step_cost(ModelKind::Hyena);
+    let cost_of = |model: ModelKind| match model {
+        ModelKind::Hyena => hyena_cost,
+        _ => mamba_cost,
+    };
+
+    let mut prompts: BTreeMap<SessionId, Vec<f32>> = BTreeMap::new();
+    let mut last_token: BTreeMap<SessionId, Vec<f32>> = BTreeMap::new();
+    let now = Instant::now();
+    for i in 0..cfg.sessions {
+        let id = (i + 1) as SessionId;
+        let model = cfg.model_of(i);
+        let shape = cfg.shape_for(model);
+        let prompt: Vec<f32> = (0..cfg.prompt_tokens * shape.d_model)
+            .map(|_| rng.uniform(-1.0, 1.0) as f32)
+            .collect();
+        prompts.insert(id, prompt);
+        sched.admit(id, SessionInfo { model, shape, decode_steps: cfg.decode_steps }, now);
+    }
+
+    let mut tokens = 0u64;
+    let mut sim_seconds = 0.0f64;
+    let mut batches = 0u64;
+    let mut batched_steps = 0u64;
+    while !sched.is_idle() {
+        let steps = sched.next_batch();
+        if steps.is_empty() {
+            return Err(anyhow!("scheduler stalled with {} live sessions", sched.live()));
+        }
+        batches += 1;
+        batched_steps += steps.len() as u64;
+        let spill0 = cache.stats.spill_seconds;
+        // Iteration time = slowest step in the batch (steps share the chip
+        // as batched lanes), plus any off-chip spill traffic it triggered.
+        let mut batch_seconds = 0.0f64;
+        for s in steps {
+            let out = match s.phase {
+                Phase::Prefill => {
+                    let prompt = prompts.remove(&s.id).unwrap_or_default();
+                    let shape = cfg.shape_for(s.model);
+                    let (state, first) = exec.begin_session(s.model, &prompt, &shape)?;
+                    cache.insert(s.id, state);
+                    batch_seconds =
+                        batch_seconds.max(cost_of(s.model) * cfg.prompt_tokens.max(1) as f64);
+                    first
+                }
+                Phase::Decode => {
+                    let token = last_token
+                        .get(&s.id)
+                        .cloned()
+                        .ok_or_else(|| anyhow!("session {} has no previous token", s.id))?;
+                    let mut state = cache
+                        .checkout(s.id)
+                        .ok_or_else(|| anyhow!("session {} lost its cached state", s.id))?;
+                    let out = exec.step_decode(s.model, &mut state, &token)?;
+                    cache.checkin(s.id, state);
+                    batch_seconds = batch_seconds.max(cost_of(s.model));
+                    out
+                }
+            };
+            tokens += 1;
+            last_token.insert(s.id, out);
+            if sched.on_step_done(s.id, Instant::now()) == StepOutcome::Retired {
+                cache.remove(s.id);
+                last_token.remove(&s.id);
+            }
+        }
+        sim_seconds += batch_seconds + (cache.stats.spill_seconds - spill0);
+    }
+
+    Ok(SimReport {
+        tokens,
+        sim_seconds,
+        wall: t0.elapsed(),
+        cache: cache.stats.clone(),
+        sched: sched.stats.clone(),
+        batches,
+        mean_batch: if batches == 0 { 0.0 } else { batched_steps as f64 / batches as f64 },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::MockExecutor;
+
+    #[test]
+    fn all_sessions_decode_to_completion() {
+        let cfg = SimConfig::demo(10, 6);
+        let mut exec = MockExecutor::new(1, cfg.mamba_shape.d_model);
+        let r = simulate(&mut exec, &cfg, &RduConfig::hs_scan_mode()).unwrap();
+        assert_eq!(r.tokens, 60);
+        assert_eq!(r.sched.retired, 10);
+        assert_eq!(r.cache.evictions, 0, "full budget: no eviction");
+        assert!(r.sim_seconds > 0.0);
+        assert!(r.mean_batch >= 1.0);
+    }
+
+    #[test]
+    fn tight_budget_spills_but_stays_correct() {
+        let mut cfg = SimConfig::demo(12, 5);
+        let full = {
+            let mut exec = MockExecutor::new(1, cfg.mamba_shape.d_model);
+            simulate(&mut exec, &cfg, &RduConfig::hs_scan_mode()).unwrap()
+        };
+        cfg.budget_bytes = cfg.footprint_bytes() / 4;
+        let tight = {
+            let mut exec = MockExecutor::new(1, cfg.mamba_shape.d_model);
+            simulate(&mut exec, &cfg, &RduConfig::hs_scan_mode()).unwrap()
+        };
+        assert_eq!(tight.tokens, full.tokens, "eviction is transparent to completion");
+        assert!(tight.cache.evictions > 0, "quarter budget must evict: {:?}", tight.cache);
+        assert!(tight.cache.misses > 0);
+        assert!(
+            tight.sim_seconds > full.sim_seconds,
+            "spill traffic costs modeled time: {} vs {}",
+            tight.sim_seconds,
+            full.sim_seconds
+        );
+    }
+}

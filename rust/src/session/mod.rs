@@ -1,0 +1,53 @@
+//! Session subsystem: per-sequence SSM decode state + continuous batching.
+//!
+//! The paper's premise is that SSM decode is a recurrence over O(1) cached
+//! state, so a serving deployment's real resource is *state residency*, not
+//! attention FLOPs. This module gives that state first-class treatment and
+//! schedules multi-turn/streaming decode over it:
+//!
+//! ```text
+//!                 admit                     next_batch (iteration-level)
+//!  clients ──▶ SessionScheduler ───────────────▶ StepBatch {prefill|decode}
+//!               │  prefill_q → decode ring           │
+//!               │  retire / timeout                  ▼ execute
+//!               │                               Executor::begin_session
+//!               │   checkout / checkin          Executor::step_decode
+//!               ╰──────▶ StateCache ◀────────────────╯
+//!                        │  resident (≤ byte budget, LRU)
+//!                        ╰─ spilled  (off-chip, MemTech-priced)
+//! ```
+//!
+//! * [`state`] — [`SsmState`]: Mamba recurrent blocks
+//!   (`layers × d_state × d_model` f32) and Hyena FFT filter/prefix caches,
+//!   with exact byte accounting.
+//! * [`budget`] — [`MemoryBudget`]: hard byte budget derived from the
+//!   chip's SRAM capacities ([`crate::arch::RduSpec`]), plus the
+//!   [`crate::arch::MemTech`]-priced spill model.
+//! * [`cache`] — [`StateCache`]: session-keyed LRU residency under the
+//!   budget; evicted state spills losslessly and restores on demand.
+//! * [`scheduler`] — [`SessionScheduler`]: vLLM-style continuous batching
+//!   (decode-first iteration batches with an admission slot for prefills).
+//! * [`driver`] — [`simulate`]: single-threaded serving loop over any
+//!   [`crate::coordinator::Executor`], timed by the
+//!   [`crate::dfmodel::decode`] cost hook — no PJRT needed.
+//!
+//! The threaded serving integration (worker pool, reply channels, metrics)
+//! lives in [`crate::coordinator`]; `serve --continuous` wires it to the
+//! CLI.
+
+pub mod budget;
+pub mod cache;
+pub mod driver;
+pub mod scheduler;
+pub mod state;
+
+pub use budget::{spill_seconds, MemoryBudget};
+pub use cache::{CacheStats, StateCache};
+pub use driver::{simulate, SimConfig, SimReport};
+pub use scheduler::{
+    Phase, SchedStats, ScheduledStep, SchedulerConfig, SessionInfo, SessionScheduler, StepOutcome,
+};
+pub use state::{SsmState, StateShape};
+
+/// Identifies one live decode session (the coordinator reuses request ids).
+pub type SessionId = u64;

@@ -1,0 +1,382 @@
+//! Continuous-batching session scheduler (vLLM-style iteration-level
+//! batching).
+//!
+//! Requests are split into two phases: **prefill** (ingest the prompt, build
+//! the initial SSM state) and **decode** (one token per step over cached
+//! state). Every call to [`SessionScheduler::next_batch`] assembles one
+//! *iteration batch* of up to `max_batch` steps:
+//!
+//! 1. decode steps of live sessions first (inter-token latency is the SLO —
+//!    a waiting decode step never queues behind new prompts), then
+//! 2. prefills of newly admitted sessions in the remaining slots; one slot
+//!    per batch is reserved for admission whenever prefills wait, so a full
+//!    decode ring cannot starve new sessions forever.
+//!
+//! A session whose step completes re-enters the decode ring at the back, so
+//! decode bandwidth round-robins fairly across live sessions. Sessions
+//! retire when `decode_steps` tokens have been produced, are failed on
+//! executor error, and expire after `session_timeout` without progress.
+//!
+//! The scheduler is deliberately pure — no channels, no state buffers —
+//! so its phase machine is unit-testable; the coordinator owns the I/O.
+
+use super::state::StateShape;
+use super::SessionId;
+use crate::runtime::ModelKind;
+use std::collections::{BTreeMap, VecDeque};
+use std::time::{Duration, Instant};
+
+/// Which serving phase a scheduled step runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Ingest the prompt and build the initial decode state.
+    Prefill,
+    /// Produce one token from cached state.
+    Decode,
+}
+
+/// Scheduler policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedulerConfig {
+    /// Max steps per iteration batch.
+    pub max_batch: usize,
+    /// A session idle (no step completed) this long is expired.
+    pub session_timeout: Duration,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self { max_batch: 16, session_timeout: Duration::from_secs(30) }
+    }
+}
+
+/// Immutable per-session parameters fixed at admission.
+#[derive(Debug, Clone, Copy)]
+pub struct SessionInfo {
+    pub model: ModelKind,
+    pub shape: StateShape,
+    /// Total tokens the session decodes (the prefill's first token counts).
+    pub decode_steps: usize,
+}
+
+/// One step of one session inside an iteration batch.
+#[derive(Debug, Clone, Copy)]
+pub struct ScheduledStep {
+    pub id: SessionId,
+    pub model: ModelKind,
+    pub phase: Phase,
+    /// 0-based token index this step produces.
+    pub step: usize,
+}
+
+/// What `on_step_done` decided about the session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// More tokens to go; the session re-entered the decode ring.
+    Continue,
+    /// The session produced its final token and was retired.
+    Retired,
+    /// No such session (already retired/failed/expired).
+    Unknown,
+}
+
+/// Scheduler lifecycle counters.
+#[derive(Debug, Clone, Default)]
+pub struct SchedStats {
+    pub admitted: u64,
+    pub retired: u64,
+    pub expired: u64,
+    pub failed: u64,
+    pub prefill_steps: u64,
+    pub decode_steps: u64,
+    pub batches: u64,
+}
+
+#[derive(Debug)]
+struct Entry {
+    info: SessionInfo,
+    phase: Phase,
+    /// Tokens produced so far (prefill's first token included).
+    tokens_done: usize,
+    /// A step for this session is currently executing.
+    in_flight: bool,
+    last_activity: Instant,
+}
+
+/// The continuous-batching scheduler.
+pub struct SessionScheduler {
+    cfg: SchedulerConfig,
+    sessions: BTreeMap<SessionId, Entry>,
+    prefill_q: VecDeque<SessionId>,
+    decode_q: VecDeque<SessionId>,
+    pub stats: SchedStats,
+}
+
+impl SessionScheduler {
+    pub fn new(cfg: SchedulerConfig) -> Self {
+        Self {
+            cfg,
+            sessions: BTreeMap::new(),
+            prefill_q: VecDeque::new(),
+            decode_q: VecDeque::new(),
+            stats: SchedStats::default(),
+        }
+    }
+
+    /// Admit a new session; it enters the prefill queue.
+    pub fn admit(&mut self, id: SessionId, info: SessionInfo, now: Instant) {
+        self.sessions.insert(
+            id,
+            Entry {
+                info,
+                phase: Phase::Prefill,
+                tokens_done: 0,
+                in_flight: false,
+                last_activity: now,
+            },
+        );
+        self.prefill_q.push_back(id);
+        self.stats.admitted += 1;
+    }
+
+    /// Assemble the next iteration batch (empty when nothing is ready —
+    /// either no sessions, or every live session is in flight).
+    pub fn next_batch(&mut self) -> Vec<ScheduledStep> {
+        let cap = self.cfg.max_batch.max(1);
+        let mut out = Vec::new();
+        // Decode steps first: inter-token latency beats prompt admission —
+        // but hold one slot back for a waiting prefill (anti-starvation).
+        let reserve = usize::from(!self.prefill_q.is_empty());
+        let decode_cap = cap.saturating_sub(reserve);
+        while out.len() < decode_cap {
+            let Some(id) = self.decode_q.pop_front() else { break };
+            let Some(e) = self.sessions.get_mut(&id) else { continue }; // stale
+            if e.in_flight || e.phase != Phase::Decode {
+                continue; // stale duplicate
+            }
+            e.in_flight = true;
+            out.push(ScheduledStep {
+                id,
+                model: e.info.model,
+                phase: Phase::Decode,
+                step: e.tokens_done,
+            });
+            self.stats.decode_steps += 1;
+        }
+        // Fill remaining slots with prefills of waiting sessions.
+        while out.len() < cap {
+            let Some(id) = self.prefill_q.pop_front() else { break };
+            let Some(e) = self.sessions.get_mut(&id) else { continue };
+            if e.in_flight || e.phase != Phase::Prefill {
+                continue;
+            }
+            e.in_flight = true;
+            out.push(ScheduledStep { id, model: e.info.model, phase: Phase::Prefill, step: 0 });
+            self.stats.prefill_steps += 1;
+        }
+        if !out.is_empty() {
+            self.stats.batches += 1;
+        }
+        out
+    }
+
+    /// Record a completed step. Prefill transitions the session to decode;
+    /// the final decode step retires it.
+    pub fn on_step_done(&mut self, id: SessionId, now: Instant) -> StepOutcome {
+        let Some(e) = self.sessions.get_mut(&id) else { return StepOutcome::Unknown };
+        e.in_flight = false;
+        e.last_activity = now;
+        match e.phase {
+            Phase::Prefill => {
+                e.phase = Phase::Decode;
+                e.tokens_done = 1; // the prefill produced the first token
+            }
+            Phase::Decode => e.tokens_done += 1,
+        }
+        if e.tokens_done >= e.info.decode_steps {
+            self.sessions.remove(&id);
+            self.stats.retired += 1;
+            StepOutcome::Retired
+        } else {
+            self.decode_q.push_back(id);
+            StepOutcome::Continue
+        }
+    }
+
+    /// Drop a session whose step failed (executor error, lost state).
+    pub fn fail(&mut self, id: SessionId) {
+        if self.sessions.remove(&id).is_some() {
+            self.stats.failed += 1;
+        }
+    }
+
+    /// Expire sessions idle past `session_timeout`; returns their ids so
+    /// the caller can evict cached state and drop reply channels. In-flight
+    /// sessions are never expired (their step is still executing).
+    pub fn expire(&mut self, now: Instant) -> Vec<SessionId> {
+        let timeout = self.cfg.session_timeout;
+        let dead: Vec<SessionId> = self
+            .sessions
+            .iter()
+            .filter(|(_, e)| !e.in_flight && now.duration_since(e.last_activity) >= timeout)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in &dead {
+            self.sessions.remove(id);
+            self.stats.expired += 1;
+        }
+        dead
+    }
+
+    /// Live sessions (admitted, not yet retired/failed/expired).
+    pub fn live(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Sessions with a step currently executing.
+    pub fn in_flight(&self) -> usize {
+        self.sessions.values().filter(|e| e.in_flight).count()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.sessions.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn info(steps: usize) -> SessionInfo {
+        SessionInfo {
+            model: ModelKind::Mamba,
+            shape: StateShape::mamba(2, 4, 8),
+            decode_steps: steps,
+        }
+    }
+
+    fn sched(max_batch: usize) -> SessionScheduler {
+        SessionScheduler::new(SchedulerConfig {
+            max_batch,
+            session_timeout: Duration::from_secs(60),
+        })
+    }
+
+    #[test]
+    fn prefill_then_decode_then_retire() {
+        let mut s = sched(4);
+        let t = Instant::now();
+        s.admit(1, info(3), t);
+        let b = s.next_batch();
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].phase, Phase::Prefill);
+        assert!(s.next_batch().is_empty(), "in-flight session is not rescheduled");
+        assert_eq!(s.on_step_done(1, t), StepOutcome::Continue);
+        // Two decode steps remain (prefill produced token 0 of 3).
+        for step in 1..3 {
+            let b = s.next_batch();
+            assert_eq!(b.len(), 1);
+            assert_eq!(b[0].phase, Phase::Decode);
+            assert_eq!(b[0].step, step);
+            let out = s.on_step_done(1, t);
+            if step == 2 {
+                assert_eq!(out, StepOutcome::Retired);
+            } else {
+                assert_eq!(out, StepOutcome::Continue);
+            }
+        }
+        assert!(s.is_idle());
+        assert_eq!(s.stats.retired, 1);
+        assert_eq!(s.on_step_done(1, t), StepOutcome::Unknown);
+    }
+
+    #[test]
+    fn mixed_batches_decode_first_with_admission_slot() {
+        let mut s = sched(2);
+        let t = Instant::now();
+        s.admit(1, info(4), t);
+        s.admit(2, info(4), t);
+        for step in s.next_batch() {
+            s.on_step_done(step.id, t); // both prefills complete
+        }
+        s.admit(3, info(4), t);
+        // Two decode-ready sessions + one waiting prefill, batch width 2:
+        // decode takes the batch minus one reserved admission slot.
+        let b = s.next_batch();
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.iter().filter(|x| x.phase == Phase::Decode).count(), 1, "{b:?}");
+        assert_eq!(b.iter().filter(|x| x.phase == Phase::Prefill).count(), 1, "{b:?}");
+        for step in b {
+            s.on_step_done(step.id, t);
+        }
+        // No prefills waiting any more → decode gets the full batch.
+        let b = s.next_batch();
+        assert_eq!(b.len(), 2);
+        assert!(b.iter().all(|x| x.phase == Phase::Decode), "{b:?}");
+    }
+
+    #[test]
+    fn decode_ring_is_round_robin() {
+        let mut s = sched(1);
+        let t = Instant::now();
+        for id in 1..=3 {
+            s.admit(id, info(10), t);
+        }
+        // Complete all prefills (batch width 1 → one at a time).
+        for _ in 0..3 {
+            let b = s.next_batch();
+            s.on_step_done(b[0].id, t);
+        }
+        // Decode order must rotate 1, 2, 3, 1, 2, 3, …
+        let mut order = Vec::new();
+        for _ in 0..6 {
+            let b = s.next_batch();
+            order.push(b[0].id);
+            s.on_step_done(b[0].id, t);
+        }
+        assert_eq!(order, vec![1, 2, 3, 1, 2, 3]);
+    }
+
+    #[test]
+    fn one_token_session_retires_at_prefill() {
+        let mut s = sched(4);
+        let t = Instant::now();
+        s.admit(7, info(1), t);
+        let b = s.next_batch();
+        assert_eq!(b[0].phase, Phase::Prefill);
+        assert_eq!(s.on_step_done(7, t), StepOutcome::Retired);
+        assert!(s.is_idle());
+    }
+
+    #[test]
+    fn expire_skips_in_flight() {
+        let mut s = SessionScheduler::new(SchedulerConfig {
+            max_batch: 4,
+            session_timeout: Duration::from_millis(10),
+        });
+        let t = Instant::now();
+        s.admit(1, info(4), t);
+        s.admit(2, info(4), t);
+        let b = s.next_batch(); // both prefills in flight
+        assert_eq!(b.len(), 2);
+        s.on_step_done(1, t); // 1 idle again; 2 stays in flight
+        let later = t + Duration::from_millis(50);
+        let dead = s.expire(later);
+        assert_eq!(dead, vec![1]);
+        assert_eq!(s.stats.expired, 1);
+        assert_eq!(s.live(), 1, "in-flight session 2 survives");
+    }
+
+    #[test]
+    fn fail_removes_session() {
+        let mut s = sched(4);
+        let t = Instant::now();
+        s.admit(1, info(4), t);
+        let _ = s.next_batch();
+        s.fail(1);
+        assert!(s.is_idle());
+        assert_eq!(s.stats.failed, 1);
+        // Late feedback for a failed session is harmless.
+        assert_eq!(s.on_step_done(1, t), StepOutcome::Unknown);
+    }
+}

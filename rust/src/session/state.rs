@@ -1,0 +1,203 @@
+//! Per-sequence SSM decode state: the recurrent tensors a live session keeps
+//! between decode steps.
+//!
+//! The whole premise of SSM serving (paper §II-B) is that decode is a
+//! recurrence over *cached state* rather than attention over the full
+//! context, so the state footprint is O(1) in sequence length:
+//!
+//! * **Mamba** — the selective-scan hidden state, one
+//!   `d_state × d_model` f32 block per layer (`h_t = Ā h_{t-1} + B̄ x_t`).
+//! * **Hyena** — the FFT-domain long-convolution caches, per layer one
+//!   complex `filter_fft` (the implicit filter, transformed once) and one
+//!   complex `prefix_fft` (the running transform of the already-decoded
+//!   prefix), both of `fft_points` complex values.
+//!
+//! Byte accounting is exact — [`SsmState::bytes`] is what the
+//! [`crate::session::StateCache`] charges against its memory budget.
+
+use crate::runtime::ModelKind;
+use crate::Result;
+use anyhow::anyhow;
+
+/// Shape of one session's decode state (all layers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StateShape {
+    pub model: ModelKind,
+    /// Decoder layers holding state.
+    pub layers: usize,
+    /// Mamba SSM state dimension N (0 for Hyena).
+    pub d_state: usize,
+    /// Hidden dimension D (also the per-token activation width).
+    pub d_model: usize,
+    /// Hyena: complex FFT points kept resident per layer per cache
+    /// (0 for Mamba).
+    pub fft_points: usize,
+}
+
+impl StateShape {
+    /// Mamba recurrent state: `layers × d_state × d_model` f32.
+    pub fn mamba(layers: usize, d_state: usize, d_model: usize) -> Self {
+        Self { model: ModelKind::Mamba, layers, d_state, d_model, fft_points: 0 }
+    }
+
+    /// Hyena FFT caches: per layer, filter + prefix, `fft_points` complex
+    /// (2×f32) values each.
+    pub fn hyena(layers: usize, d_model: usize, fft_points: usize) -> Self {
+        Self { model: ModelKind::Hyena, layers, d_state: 0, d_model, fft_points }
+    }
+
+    /// Exact resident footprint of a state with this shape, in bytes.
+    pub fn bytes(&self) -> usize {
+        match self.model {
+            ModelKind::Mamba => self.layers * self.d_state * self.d_model * 4,
+            // filter_fft + prefix_fft, complex (re, im) f32 values.
+            ModelKind::Hyena => self.layers * self.fft_points * 2 * 2 * 4,
+            ModelKind::Attention => 0,
+        }
+    }
+}
+
+/// One session's decode state. Variants own their buffers; `bytes()` is
+/// derived from the actual allocation so cache accounting can never drift.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SsmState {
+    Mamba {
+        shape: StateShape,
+        /// `layers × d_state × d_model`, layer-major.
+        h: Vec<f32>,
+    },
+    Hyena {
+        shape: StateShape,
+        /// `layers × fft_points` complex values, interleaved (re, im).
+        filter_fft: Vec<f32>,
+        /// `layers × fft_points` complex values, interleaved (re, im).
+        prefix_fft: Vec<f32>,
+    },
+}
+
+impl SsmState {
+    /// Allocate a zeroed state of the given shape.
+    ///
+    /// Attention has no O(1) recurrent state (its KV cache grows with the
+    /// context), so it is rejected here — the session subsystem serves the
+    /// SSM decoders.
+    pub fn zeros(shape: &StateShape) -> Result<Self> {
+        match shape.model {
+            ModelKind::Mamba => Ok(SsmState::Mamba {
+                shape: *shape,
+                h: vec![0.0; shape.layers * shape.d_state * shape.d_model],
+            }),
+            ModelKind::Hyena => Ok(SsmState::Hyena {
+                shape: *shape,
+                filter_fft: vec![0.0; shape.layers * shape.fft_points * 2],
+                prefix_fft: vec![0.0; shape.layers * shape.fft_points * 2],
+            }),
+            ModelKind::Attention => {
+                Err(anyhow!("attention decode uses a growing KV cache, not O(1) SSM state"))
+            }
+        }
+    }
+
+    pub fn shape(&self) -> &StateShape {
+        match self {
+            SsmState::Mamba { shape, .. } | SsmState::Hyena { shape, .. } => shape,
+        }
+    }
+
+    /// Total f32 elements across all buffers.
+    pub fn elems(&self) -> usize {
+        match self {
+            SsmState::Mamba { h, .. } => h.len(),
+            SsmState::Hyena { filter_fft, prefix_fft, .. } => {
+                filter_fft.len() + prefix_fft.len()
+            }
+        }
+    }
+
+    /// Exact resident footprint in bytes (what the cache budget charges).
+    pub fn bytes(&self) -> usize {
+        self.elems() * std::mem::size_of::<f32>()
+    }
+
+    /// Mean over every element (0.0 for an empty state).
+    pub fn mean(&self) -> f32 {
+        let n = self.elems();
+        if n == 0 {
+            return 0.0;
+        }
+        let sum: f32 = match self {
+            SsmState::Mamba { h, .. } => h.iter().sum(),
+            SsmState::Hyena { filter_fft, prefix_fft, .. } => {
+                filter_fft.iter().sum::<f32>() + prefix_fft.iter().sum::<f32>()
+            }
+        };
+        sum / n as f32
+    }
+
+    /// Set every element to `v`.
+    pub fn fill(&mut self, v: f32) {
+        match self {
+            SsmState::Mamba { h, .. } => h.iter_mut().for_each(|x| *x = v),
+            SsmState::Hyena { filter_fft, prefix_fft, .. } => {
+                filter_fft.iter_mut().for_each(|x| *x = v);
+                prefix_fft.iter_mut().for_each(|x| *x = v);
+            }
+        }
+    }
+
+    /// Add `v` to every element (the mock decode's state-evolution rule).
+    pub fn add_scalar(&mut self, v: f32) {
+        match self {
+            SsmState::Mamba { h, .. } => h.iter_mut().for_each(|x| *x += v),
+            SsmState::Hyena { filter_fft, prefix_fft, .. } => {
+                filter_fft.iter_mut().for_each(|x| *x += v);
+                prefix_fft.iter_mut().for_each(|x| *x += v);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mamba_bytes_are_exact() {
+        let shape = StateShape::mamba(8, 16, 64);
+        assert_eq!(shape.bytes(), 8 * 16 * 64 * 4);
+        let s = SsmState::zeros(&shape).unwrap();
+        assert_eq!(s.bytes(), shape.bytes());
+        assert_eq!(s.elems(), 8 * 16 * 64);
+    }
+
+    #[test]
+    fn hyena_bytes_count_both_caches_complex() {
+        let shape = StateShape::hyena(4, 32, 256);
+        // 4 layers × 256 complex points × 2 caches × (2 × 4 bytes).
+        assert_eq!(shape.bytes(), 4 * 256 * 2 * 2 * 4);
+        let s = SsmState::zeros(&shape).unwrap();
+        assert_eq!(s.bytes(), shape.bytes());
+    }
+
+    #[test]
+    fn attention_has_no_ssm_state() {
+        let shape = StateShape {
+            model: ModelKind::Attention,
+            layers: 1,
+            d_state: 0,
+            d_model: 32,
+            fft_points: 0,
+        };
+        assert!(SsmState::zeros(&shape).is_err());
+    }
+
+    #[test]
+    fn fill_add_mean_roundtrip() {
+        let mut s = SsmState::zeros(&StateShape::mamba(2, 4, 8)).unwrap();
+        assert_eq!(s.mean(), 0.0);
+        s.fill(2.0);
+        assert_eq!(s.mean(), 2.0);
+        s.add_scalar(0.5);
+        assert!((s.mean() - 2.5).abs() < 1e-6);
+    }
+}

@@ -24,8 +24,8 @@ fn responses_match_requests_under_mixed_load() {
         CoordinatorConfig {
             policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
             workers: 2,
-                ..Default::default()
-            },
+            ..Default::default()
+        },
         mock_factory(4, 16, 0),
     )
     .unwrap();
@@ -53,8 +53,8 @@ fn deadline_flush_bounds_latency() {
         CoordinatorConfig {
             policy: BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(10) },
             workers: 1,
-                ..Default::default()
-            },
+            ..Default::default()
+        },
         mock_factory(64, 4, 0),
     )
     .unwrap();
@@ -76,8 +76,8 @@ fn poisoned_batches_fail_without_hanging_others() {
         CoordinatorConfig {
             policy: BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
             workers: 1,
-                ..Default::default()
-            },
+            ..Default::default()
+        },
         factory,
     )
     .unwrap();
@@ -129,8 +129,8 @@ fn metrics_track_batching() {
         CoordinatorConfig {
             policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(20) },
             workers: 1,
-                ..Default::default()
-            },
+            ..Default::default()
+        },
         mock_factory(4, 4, 1),
     )
     .unwrap();
@@ -163,8 +163,8 @@ fn pjrt_serving_end_to_end() {
                 max_wait: Duration::from_millis(5),
             },
             workers: 1,
-                ..Default::default()
-            },
+            ..Default::default()
+        },
         Box::new(move || {
             // Mamba only: cheapest artifact, keeps the test fast.
             let rt = ssm_rdu::runtime::Runtime::load_subset(&dir2, &[ModelKind::Mamba])?;
@@ -192,6 +192,7 @@ fn backpressure_sheds_load() {
             policy: BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
             workers: 1,
             max_inflight: 4,
+            ..Default::default()
         },
         mock_factory(1, 2, 50),
     )
@@ -210,5 +211,78 @@ fn backpressure_sheds_load() {
         rx.recv().unwrap();
     }
     assert_eq!(c.inflight(), 0, "drained");
+    c.shutdown();
+}
+
+#[test]
+fn continuous_serving_64_sessions_under_pressure() {
+    // The acceptance scenario of the session subsystem: ≥ 64 concurrent
+    // sessions decode to completion under a cache budget smaller than the
+    // total state footprint — evictions happen, numerics are unaffected,
+    // per-token latency lands in the metrics.
+    use ssm_rdu::coordinator::ContinuousConfig;
+    use ssm_rdu::session::{SchedulerConfig, StateShape};
+
+    let sessions = 64usize;
+    let steps = 4usize;
+    let mamba = StateShape::mamba(4, 8, 16); // 2 KiB per session
+    let hyena = StateShape::hyena(4, 16, 32); // 2 KiB per session
+    let footprint = (sessions / 2) * (mamba.bytes() + hyena.bytes());
+    let budget = footprint / 4; // far smaller than the footprint
+    let cc = ContinuousConfig {
+        sched: SchedulerConfig { max_batch: 16, session_timeout: Duration::from_secs(10) },
+        budget_bytes: budget,
+        mamba_shape: mamba,
+        hyena_shape: hyena,
+    };
+    let c = Coordinator::start(
+        CoordinatorConfig {
+            workers: 2,
+            max_inflight: sessions * 2,
+            continuous: Some(cc),
+            ..Default::default()
+        },
+        mock_factory(1, 16, 0),
+    )
+    .unwrap();
+
+    let rxs: Vec<_> = (0..sessions)
+        .map(|i| {
+            let model = if i % 2 == 0 { ModelKind::Mamba } else { ModelKind::Hyena };
+            c.submit_session(model, vec![0.01 * (i as f32 + 1.0); 16], steps).unwrap()
+        })
+        .collect();
+    let mut tokens = 0u64;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let mut got = 0usize;
+        while let Ok(r) = rx.recv() {
+            assert_eq!(r.token_index, Some(got), "session {i} streams in order");
+            assert_eq!(r.output.len(), 16);
+            got += 1;
+            tokens += 1;
+        }
+        assert_eq!(got, steps, "session {i} decoded to completion");
+    }
+    assert_eq!(tokens, (sessions * steps) as u64);
+    assert_eq!(c.metrics.tokens.load(Ordering::Relaxed), tokens);
+    assert_eq!(c.metrics.failures.load(Ordering::Relaxed), 0);
+    assert_eq!(c.inflight(), 0, "every session retired");
+
+    let cs = c.cache_stats().expect("continuous mode");
+    assert!(cs.evictions > 0, "budget {budget} < footprint {footprint} must evict: {cs:?}");
+    assert!(cs.restores > 0, "evicted sessions decoded again, so spills restored");
+    assert!(cs.peak_resident_bytes as usize <= budget, "resident bytes bounded by budget");
+    assert!(c.metrics.token_quantile_us(0.95) > 0, "per-token latency recorded");
+
+    let ss = c.scheduler_stats().expect("continuous mode");
+    assert_eq!(ss.admitted, sessions as u64);
+    assert_eq!(ss.retired, sessions as u64);
+    assert_eq!(ss.prefill_steps, sessions as u64);
+    assert_eq!(ss.decode_steps, (sessions * (steps - 1)) as u64);
+    assert!(
+        c.metrics.mean_batch_size() > 1.0,
+        "iteration batches form under 64-way concurrency: mean={}",
+        c.metrics.mean_batch_size()
+    );
     c.shutdown();
 }

@@ -1,0 +1,119 @@
+//! Offline stub of the `xla` crate (PJRT bindings).
+//!
+//! The offline build image does not ship the real `xla` crate (nor its
+//! `xla_extension` native library), so this stub provides the exact API
+//! surface `ssm_rdu::runtime` compiles against and fails *at runtime* with
+//! a clear "PJRT unavailable" error. Everything upstream of artifact
+//! execution — the coordinator, the dynamic batcher, the session
+//! subsystem, every test that uses `MockExecutor` — works unchanged;
+//! artifact-backed tests and examples detect the missing `artifacts/`
+//! directory first and skip gracefully.
+//!
+//! To run against real PJRT, replace the `xla = { path = "vendor/xla" }`
+//! dependency with the real crate; the call sites in
+//! `rust/src/runtime/mod.rs` match its 0.5.x API.
+
+use std::fmt;
+
+/// Error type matching the real crate's `std::error::Error` behaviour.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Self {
+        Error(format!("{what}: PJRT unavailable (offline xla stub; see vendor/xla)"))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// Stub of the PJRT CPU client.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Stub of a parsed HLO module.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Stub of an XLA computation.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stub of a compiled executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Stub of a device buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Stub of a host literal.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_v: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::unavailable("Literal::reshape"))
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(Error::unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn everything_fails_with_clear_message() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("PJRT unavailable"), "{e}");
+        assert!(HloModuleProto::from_text_file("x").is_err());
+        assert!(Literal::vec1(&[1.0]).reshape(&[1]).is_err());
+    }
+}
