@@ -1,0 +1,65 @@
+//! Multi-chip strong-scaling benchmarks: the sharded Mamba scan and sharded
+//! Bailey FFT numerics across chip counts, plus the DFModel strong-scaling
+//! report (speedup over one chip and communication share per chip count)
+//! for both SSM decoders — the numbers behind `simulate --chips`.
+
+use ssm_rdu::arch::{InterchipLink, RduConfig};
+use ssm_rdu::bench::Bencher;
+use ssm_rdu::fft::BaileyVariant;
+use ssm_rdu::runtime::ModelKind;
+use ssm_rdu::shard::{sharded_bailey_fft, sharded_mamba_scan, strong_scaling};
+use ssm_rdu::util::{fmt_time, C64, XorShift};
+use ssm_rdu::workloads::DecoderConfig;
+
+fn main() {
+    let mut b = Bencher::from_env("shard_scaling");
+    let link = InterchipLink::rdu_fabric();
+    let chip_counts = [1usize, 2, 4, 8];
+
+    // Numeric substrate across chip counts (fixed total work: the
+    // functional model is single-threaded, so this tracks the sharding
+    // overhead — carry bookkeeping and the transpose-shaped indexing —
+    // not wall-clock parallelism).
+    let mut rng = XorShift::new(41);
+    let n = 1 << 16;
+    let a: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 0.99)).collect();
+    let bb: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    for &chips in &chip_counts {
+        b.bench(&format!("sharded mamba scan N=64K, {chips} chip(s)"), || {
+            sharded_mamba_scan(&a, &bb, chips)
+        });
+    }
+    let x: Vec<C64> = (0..(1 << 14))
+        .map(|_| C64::new(rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0)))
+        .collect();
+    for &chips in &chip_counts {
+        b.bench(&format!("sharded bailey fft L=16K R=32, {chips} chip(s)"), || {
+            sharded_bailey_fft(&x, 32, chips, BaileyVariant::Vector)
+        });
+    }
+
+    // The strong-scaling report at the paper shape (L = 1M).
+    let dc = DecoderConfig::paper(1 << 20);
+    for (model, cfg) in [
+        (ModelKind::Mamba, RduConfig::hs_scan_mode()),
+        (ModelKind::Hyena, RduConfig::fft_mode()),
+    ] {
+        let pts = b.report(&format!("strong scaling: {model} @ L=1M over {link}"), || {
+            strong_scaling(model, &dc, &chip_counts, &cfg, &link).expect("mappable")
+        });
+        for pt in &pts {
+            println!(
+                "  {model} × {} chip(s): per-chip {} + comm {} = {}  speedup {:.2}x  \
+                 comm share {:.1}%",
+                pt.est.chips,
+                fmt_time(pt.est.per_chip.total_seconds),
+                fmt_time(pt.est.comm_seconds),
+                fmt_time(pt.est.total_seconds),
+                pt.speedup,
+                pt.est.comm_share() * 100.0,
+            );
+        }
+    }
+
+    b.finish();
+}

@@ -1,0 +1,165 @@
+//! Inter-chip interconnect model: the link and collective-cost abstractions
+//! behind multi-chip sequence sharding ([`crate::shard`]).
+//!
+//! The paper maps one decoder onto one RDU; past a single die the sharded
+//! dataflows of [`crate::shard`] add an inter-chip communication term. This
+//! module prices the point-to-point primitive and the three collective
+//! exchange patterns built on it:
+//!
+//! * **point-to-point** — [`InterchipLink::transfer_seconds`]: one message,
+//!   `latency + bytes / bandwidth` (the α–β model).
+//! * **all-to-all** — [`InterchipLink::all_to_all_seconds`]: the distributed
+//!   FFT's row/column transpose; every chip exchanges a personalized slice
+//!   with every peer over `P − 1` rounds.
+//! * **ring all-reduce** — [`InterchipLink::ring_allreduce_seconds`]: the
+//!   tensor-sharded decode step's per-layer activation reduction,
+//!   `2·(P − 1)` steps of `bytes / P` each.
+//! * **prefix (carry) exchange** — [`InterchipLink::prefix_exchange_seconds`]:
+//!   the sharded Blelloch scan's inter-chip exclusive-prefix of per-chip
+//!   carries, an up-sweep plus down-sweep of `⌈log₂P⌉` rounds each.
+//!
+//! Like [`super::mem::MemTech`], this is a *specification*: pure cost
+//! arithmetic consumed by [`crate::dfmodel`] and [`crate::shard::estimate`].
+
+use std::fmt;
+
+/// One inter-chip link: sustained bandwidth plus per-message latency.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InterchipLink {
+    /// Sustained per-link bandwidth in bytes/second.
+    pub bandwidth: f64,
+    /// Per-message overhead in seconds (serialization + switch traversal).
+    pub latency: f64,
+}
+
+impl InterchipLink {
+    /// Accelerator-fabric class link (NVLink/ICI-class): 600 GB/s, 1 µs.
+    pub fn rdu_fabric() -> Self {
+        Self { bandwidth: 600e9, latency: 1e-6 }
+    }
+
+    /// Host-interconnect class link (PCIe 5.0 x16): 64 GB/s, 2 µs.
+    pub fn pcie5() -> Self {
+        Self { bandwidth: 64e9, latency: 2e-6 }
+    }
+
+    /// Custom link parameters.
+    pub fn custom(bandwidth: f64, latency: f64) -> Self {
+        Self { bandwidth, latency }
+    }
+
+    /// One point-to-point message of `bytes` (α–β cost). Zero bytes cost
+    /// nothing — no message is sent.
+    pub fn transfer_seconds(&self, bytes: f64) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        self.latency + bytes / self.bandwidth
+    }
+
+    /// All-to-all personalized exchange among `chips` peers where each chip
+    /// holds `bytes_per_chip` of the redistributed tensor: `P − 1` rounds,
+    /// each moving a `bytes_per_chip / P` slice to one peer.
+    pub fn all_to_all_seconds(&self, chips: usize, bytes_per_chip: f64) -> f64 {
+        if chips <= 1 {
+            return 0.0;
+        }
+        let p = chips as f64;
+        (p - 1.0) * self.transfer_seconds(bytes_per_chip / p)
+    }
+
+    /// Ring all-reduce of a replicated `bytes` tensor: reduce-scatter plus
+    /// all-gather, `2·(P − 1)` steps of `bytes / P` each.
+    pub fn ring_allreduce_seconds(&self, chips: usize, bytes: f64) -> f64 {
+        if chips <= 1 {
+            return 0.0;
+        }
+        let p = chips as f64;
+        2.0 * (p - 1.0) * self.transfer_seconds(bytes / p)
+    }
+
+    /// Inter-chip exclusive-prefix carry exchange (sharded Blelloch scan):
+    /// an up-sweep and a down-sweep of `⌈log₂P⌉` rounds each, every round
+    /// moving one `bytes` carry between chip pairs.
+    pub fn prefix_exchange_seconds(&self, chips: usize, bytes: f64) -> f64 {
+        prefix_exchange_steps(chips) as f64 * self.transfer_seconds(bytes)
+    }
+}
+
+impl fmt::Display for InterchipLink {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{:.0} GB/s link, {:.1} µs latency",
+            self.bandwidth / 1e9,
+            self.latency * 1e6
+        )
+    }
+}
+
+/// Rounds of the inter-chip exclusive-prefix exchange: `2·⌈log₂P⌉`
+/// (Blelloch up-sweep + down-sweep across chips), 0 for a single chip.
+pub fn prefix_exchange_steps(chips: usize) -> usize {
+    if chips <= 1 {
+        return 0;
+    }
+    2 * ceil_log2(chips)
+}
+
+/// `⌈log₂n⌉` for `n ≥ 1`.
+fn ceil_log2(n: usize) -> usize {
+    (usize::BITS - (n - 1).leading_zeros()) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_is_alpha_beta() {
+        let l = InterchipLink::custom(100e9, 1e-6);
+        // 100 GB at 100 GB/s = 1 s + 1 µs latency.
+        assert!((l.transfer_seconds(100e9) - (1.0 + 1e-6)).abs() < 1e-12);
+        assert_eq!(l.transfer_seconds(0.0), 0.0, "no message, no cost");
+    }
+
+    #[test]
+    fn single_chip_collectives_are_free() {
+        let l = InterchipLink::rdu_fabric();
+        assert_eq!(l.all_to_all_seconds(1, 1e9), 0.0);
+        assert_eq!(l.ring_allreduce_seconds(1, 1e9), 0.0);
+        assert_eq!(l.prefix_exchange_seconds(1, 1e9), 0.0);
+        assert_eq!(prefix_exchange_steps(1), 0);
+    }
+
+    #[test]
+    fn prefix_steps_are_two_log2() {
+        assert_eq!(prefix_exchange_steps(2), 2);
+        assert_eq!(prefix_exchange_steps(4), 4);
+        assert_eq!(prefix_exchange_steps(8), 6);
+        // Non-power-of-two chip counts round the tree depth up.
+        assert_eq!(prefix_exchange_steps(5), 6);
+    }
+
+    #[test]
+    fn all_to_all_grows_with_chips_at_fixed_total() {
+        // Strong scaling: total tensor fixed, per-chip share shrinks, but
+        // latency-bound rounds grow — more chips must not get cheaper
+        // once latency dominates.
+        let l = InterchipLink::rdu_fabric();
+        let total = 1e6; // 1 MB tensor
+        let t2 = l.all_to_all_seconds(2, total / 2.0);
+        let t8 = l.all_to_all_seconds(8, total / 8.0);
+        assert!(t2 > 0.0 && t8 > 0.0);
+        // At 8 chips, 7 rounds × 1 µs latency alone exceeds the 2-chip time.
+        assert!(t8 > 7.0 * l.latency * 0.999, "t8={t8}");
+    }
+
+    #[test]
+    fn ring_allreduce_latency_bound_for_small_tensors() {
+        let l = InterchipLink::rdu_fabric();
+        // A tiny activation vector: cost is dominated by 2(P-1) latencies.
+        let t = l.ring_allreduce_seconds(4, 128.0);
+        assert!((t - 6.0 * l.transfer_seconds(32.0)).abs() < 1e-15);
+    }
+}

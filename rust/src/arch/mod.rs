@@ -1,18 +1,22 @@
 //! Architecture descriptions: the RDU chip (paper Table I), its PCU geometry
-//! and execution modes, and the comparison platforms (A100 GPU, VGA ASIC —
-//! Tables II/III) plus memory technologies.
+//! and execution modes, the comparison platforms (A100 GPU, VGA ASIC —
+//! Tables II/III), memory technologies, and the inter-chip interconnect used
+//! by the multi-chip sharding subsystem.
 //!
 //! This module holds *specifications only*; behaviour lives in
 //! [`crate::pcusim`] (cycle-level PCU simulation), [`crate::dfmodel`] (RDU
-//! performance model), [`crate::gpu`] and [`crate::vga`] (comparison models).
+//! performance model), [`crate::gpu`] and [`crate::vga`] (comparison models),
+//! and [`crate::shard`] (multi-chip dataflows over [`interchip`] links).
 
 pub mod gpu;
+pub mod interchip;
 pub mod mem;
 pub mod pcu;
 pub mod rdu;
 pub mod vga;
 
 pub use gpu::GpuSpec;
+pub use interchip::{prefix_exchange_steps, InterchipLink};
 pub use mem::MemTech;
 pub use pcu::{PcuGeometry, PcuMode};
 pub use rdu::{RduConfig, RduSpec};

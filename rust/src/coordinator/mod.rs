@@ -27,10 +27,14 @@
 //!
 //! Continuous mode (`CoordinatorConfig::continuous`) replaces the
 //! flush-on-deadline batcher with the [`crate::session`] subsystem: the
-//! dispatcher owns a [`SessionScheduler`] and a shared [`StateCache`];
-//! workers execute mixed prefill/decode iteration batches against the
-//! cache and feed completions back so the scheduler can retire sessions
-//! and re-admit the next decode step.
+//! dispatcher owns a [`SessionScheduler`] and one [`StateCache`] *per
+//! chip* ([`ContinuousConfig::chips`]); workers execute mixed
+//! prefill/decode iteration batches against their batch's home-chip cache
+//! and feed completions back so the scheduler can retire sessions and
+//! re-admit the next decode step. With `chips > 1` the dispatcher cuts one
+//! step batch per chip per wave (sharded dispatch) and the iteration
+//! barrier doubles as the inter-chip exchange barrier of the sharded
+//! dataflows in [`crate::shard`].
 
 pub mod batcher;
 pub mod executor;
@@ -61,17 +65,31 @@ use std::time::{Duration, Instant};
 #[derive(Debug, Clone, Copy)]
 pub struct ContinuousConfig {
     pub sched: SchedulerConfig,
-    /// Resident state budget in bytes (see [`MemoryBudget`]).
+    /// *Per-chip* resident state budget in bytes (see [`MemoryBudget`]):
+    /// each chip owns its own [`StateCache`] sized to its own SRAM, so a
+    /// deployment's total resident state is `chips × budget_bytes`.
     pub budget_bytes: usize,
     /// State shape for Mamba sessions.
     pub mamba_shape: StateShape,
     /// State shape for Hyena sessions.
     pub hyena_shape: StateShape,
+    /// RDU chips backing the deployment. Sessions are pinned to a home chip
+    /// (`session id mod chips`) whose cache holds their state; each
+    /// iteration wave dispatches one step batch per chip, and the iteration
+    /// barrier doubles as the inter-chip exchange barrier
+    /// (see [`crate::shard`]).
+    pub chips: usize,
 }
 
 impl ContinuousConfig {
     pub fn new(budget_bytes: usize, mamba_shape: StateShape, hyena_shape: StateShape) -> Self {
-        Self { sched: SchedulerConfig::default(), budget_bytes, mamba_shape, hyena_shape }
+        Self { sched: SchedulerConfig::default(), budget_bytes, mamba_shape, hyena_shape, chips: 1 }
+    }
+
+    /// Shard the deployment over `chips` chips (clamped to ≥ 1).
+    pub fn with_chips(mut self, chips: usize) -> Self {
+        self.chips = chips.max(1);
+        self
     }
 
     pub fn shape_for(&self, model: ModelKind) -> StateShape {
@@ -80,6 +98,11 @@ impl ContinuousConfig {
             _ => self.mamba_shape,
         }
     }
+}
+
+/// A session's home chip: sessions are striped across chips by id.
+fn chip_of(id: SessionId, chips: usize) -> usize {
+    (id % chips.max(1) as u64) as usize
 }
 
 /// Coordinator configuration.
@@ -111,6 +134,8 @@ struct StepTask {
     phase: Phase,
     /// 0-based token index this step produces.
     step: usize,
+    /// Home chip whose state cache holds this session.
+    chip: usize,
     shape: StateShape,
     /// Prompt for prefill, previous token for decode.
     input: Vec<f32>,
@@ -151,7 +176,8 @@ pub struct Coordinator {
     workers: Vec<JoinHandle<()>>,
     running: Arc<AtomicBool>,
     max_inflight: usize,
-    cache: Option<Arc<Mutex<StateCache>>>,
+    /// One state cache per chip (continuous mode only).
+    caches: Option<Arc<Vec<Mutex<StateCache>>>>,
     scheduler: Option<Arc<Mutex<SessionScheduler>>>,
 }
 
@@ -168,11 +194,17 @@ impl Coordinator {
         let (work_tx, work_rx) = channel::<WorkItem>();
         let work_rx = Arc::new(Mutex::new(work_rx));
 
-        let cache = cfg.continuous.map(|cc| {
-            Arc::new(Mutex::new(StateCache::new(
-                MemoryBudget::new(cc.budget_bytes),
-                MemTech::Hbm3e,
-            )))
+        let caches = cfg.continuous.map(|cc| {
+            Arc::new(
+                (0..cc.chips.max(1))
+                    .map(|_| {
+                        Mutex::new(StateCache::new(
+                            MemoryBudget::new(cc.budget_bytes),
+                            MemTech::Hbm3e,
+                        ))
+                    })
+                    .collect::<Vec<_>>(),
+            )
         });
         let scheduler =
             cfg.continuous.map(|cc| Arc::new(Mutex::new(SessionScheduler::new(cc.sched))));
@@ -188,13 +220,13 @@ impl Coordinator {
             let metrics = Arc::clone(&metrics);
             let factory = Arc::clone(&factory);
             let ready = ready_tx.clone();
-            let cache = cache.clone();
+            let caches = caches.clone();
             let feedback = tx.clone();
             workers.push(std::thread::Builder::new().name(format!("ssm-rdu-worker-{wid}")).spawn(
                 move || match factory() {
                     Ok(exec) => {
                         let _ = ready.send(Ok(()));
-                        worker_loop(exec, rx, metrics, cache, feedback);
+                        worker_loop(exec, rx, metrics, caches, feedback);
                     }
                     Err(e) => {
                         let _ = ready.send(Err(e));
@@ -221,9 +253,9 @@ impl Coordinator {
             }
             Some(cc) => {
                 let sched = Arc::clone(scheduler.as_ref().expect("continuous scheduler"));
-                let cache2 = Arc::clone(cache.as_ref().expect("continuous cache"));
+                let caches2 = Arc::clone(caches.as_ref().expect("continuous caches"));
                 std::thread::Builder::new().name("ssm-rdu-dispatch".into()).spawn(move || {
-                    continuous_loop(cc, rx, work_tx, sched, cache2, metrics2, running2)
+                    continuous_loop(cc, rx, work_tx, sched, caches2, metrics2, running2)
                 })?
             }
         };
@@ -236,7 +268,7 @@ impl Coordinator {
             workers,
             running,
             max_inflight: cfg.max_inflight,
-            cache,
+            caches,
             scheduler,
         })
     }
@@ -262,7 +294,7 @@ impl Coordinator {
         if !self.running.load(Ordering::SeqCst) {
             return Err(anyhow!("coordinator is shut down"));
         }
-        if self.cache.is_some() {
+        if self.caches.is_some() {
             return Err(anyhow!("coordinator is in continuous mode; use submit_session"));
         }
         if self.inflight() >= self.max_inflight as u64 {
@@ -296,7 +328,7 @@ impl Coordinator {
         if !self.running.load(Ordering::SeqCst) {
             return Err(anyhow!("coordinator is shut down"));
         }
-        if self.cache.is_none() {
+        if self.caches.is_none() {
             return Err(anyhow!(
                 "continuous mode is off; set CoordinatorConfig::continuous to serve sessions"
             ));
@@ -337,14 +369,32 @@ impl Coordinator {
         rx.recv().map_err(|_| anyhow!("worker dropped the request"))
     }
 
-    /// Snapshot of the state-cache counters (continuous mode only).
+    /// Fleet-wide snapshot of the state-cache counters, folded across all
+    /// chips (continuous mode only).
     pub fn cache_stats(&self) -> Option<CacheStats> {
-        self.cache.as_ref().map(|c| c.lock().expect("state cache lock").stats.clone())
+        self.caches.as_ref().map(|cs| {
+            let mut agg = CacheStats::default();
+            for c in cs.iter() {
+                agg.merge(&c.lock().expect("state cache lock").stats);
+            }
+            agg
+        })
     }
 
-    /// Bytes of session state currently resident (continuous mode only).
+    /// Per-chip snapshots of the state-cache counters (continuous mode
+    /// only), indexed by chip.
+    pub fn chip_cache_stats(&self) -> Option<Vec<CacheStats>> {
+        self.caches.as_ref().map(|cs| {
+            cs.iter().map(|c| c.lock().expect("state cache lock").stats.clone()).collect()
+        })
+    }
+
+    /// Bytes of session state currently resident across all chips
+    /// (continuous mode only).
     pub fn cache_resident_bytes(&self) -> Option<usize> {
-        self.cache.as_ref().map(|c| c.lock().expect("state cache lock").resident_bytes())
+        self.caches.as_ref().map(|cs| {
+            cs.iter().map(|c| c.lock().expect("state cache lock").resident_bytes()).sum()
+        })
     }
 
     /// Snapshot of the scheduler counters (continuous mode only).
@@ -452,10 +502,11 @@ fn continuous_loop(
     rx: Receiver<Msg>,
     work_tx: Sender<WorkItem>,
     scheduler: Arc<Mutex<SessionScheduler>>,
-    cache: Arc<Mutex<StateCache>>,
+    caches: Arc<Vec<Mutex<StateCache>>>,
     metrics: Arc<Metrics>,
     running: Arc<AtomicBool>,
 ) {
+    let chips = caches.len().max(1);
     let mut side: BTreeMap<SessionId, SessionSide> = BTreeMap::new();
     // Steps dispatched to workers whose feedback has not arrived yet. The
     // next iteration wave is cut only when this reaches zero — the
@@ -492,7 +543,7 @@ fn continuous_loop(
             }
             Msg::Feedback(fb) => {
                 *outstanding = outstanding.saturating_sub(1);
-                handle_feedback(fb, &scheduler, &cache, &metrics, side);
+                handle_feedback(fb, &scheduler, &caches, &metrics, side);
                 Control::Continue
             }
             Msg::Shutdown => Control::Shutdown,
@@ -524,7 +575,7 @@ fn continuous_loop(
         let expired = scheduler.lock().expect("scheduler lock").expire(Instant::now());
         for id in expired {
             side.remove(&id);
-            cache.lock().expect("state cache lock").remove(id);
+            caches[chip_of(id, chips)].lock().expect("state cache lock").remove(id);
             metrics.failures.fetch_add(1, Ordering::Relaxed);
         }
         // Iteration barrier: cut the next wave of batches only once the
@@ -543,7 +594,7 @@ fn continuous_loop(
                     // Bookkeeping lost (should not happen): fail the session
                     // rather than strand it in flight.
                     scheduler.lock().expect("scheduler lock").fail(s.id);
-                    cache.lock().expect("state cache lock").remove(s.id);
+                    caches[chip_of(s.id, chips)].lock().expect("state cache lock").remove(s.id);
                     metrics.failures.fetch_add(1, Ordering::Relaxed);
                     continue;
                 };
@@ -556,6 +607,7 @@ fn continuous_loop(
                     model: s.model,
                     phase: s.phase,
                     step: s.step,
+                    chip: chip_of(s.id, chips),
                     shape: cc.shape_for(s.model),
                     input,
                     reply: entry.reply.clone(),
@@ -565,10 +617,21 @@ fn continuous_loop(
             if tasks.is_empty() {
                 continue;
             }
-            metrics.record_batch(tasks.len());
-            outstanding += tasks.len();
-            if work_tx.send(WorkItem::Steps(StepBatch { tasks })).is_err() {
-                return; // workers gone
+            // Sharded dispatch: one step batch per home chip, so the
+            // chips' steps run on different workers concurrently. The
+            // iteration barrier above (`outstanding == 0`) is also the
+            // inter-chip exchange barrier: no chip starts the next wave
+            // until every chip's previous wave has reported back.
+            let mut per_chip: BTreeMap<usize, Vec<StepTask>> = BTreeMap::new();
+            for t in tasks {
+                per_chip.entry(t.chip).or_default().push(t);
+            }
+            for (_chip, tasks) in per_chip {
+                metrics.record_batch(tasks.len());
+                outstanding += tasks.len();
+                if work_tx.send(WorkItem::Steps(StepBatch { tasks })).is_err() {
+                    return; // workers gone
+                }
             }
         }
     }
@@ -580,7 +643,7 @@ fn continuous_loop(
         match rx.recv_timeout(Duration::from_millis(10)) {
             Ok(Msg::Feedback(fb)) => {
                 outstanding = outstanding.saturating_sub(1);
-                handle_feedback(fb, &scheduler, &cache, &metrics, &mut side);
+                handle_feedback(fb, &scheduler, &caches, &metrics, &mut side);
             }
             Ok(Msg::Submit(req, _reply)) => {
                 // A session that raced shutdown: never admitted, so count
@@ -608,10 +671,11 @@ fn continuous_loop(
 fn handle_feedback(
     fb: StepFeedback,
     scheduler: &Arc<Mutex<SessionScheduler>>,
-    cache: &Arc<Mutex<StateCache>>,
+    caches: &Arc<Vec<Mutex<StateCache>>>,
     metrics: &Metrics,
     side: &mut BTreeMap<SessionId, SessionSide>,
 ) {
+    let cache = &caches[chip_of(fb.session, caches.len())];
     if !fb.ok {
         // The worker already counted the failure; end the session.
         scheduler.lock().expect("scheduler lock").fail(fb.session);
@@ -640,7 +704,7 @@ fn worker_loop(
     mut exec: Box<dyn Executor>,
     rx: Arc<Mutex<Receiver<WorkItem>>>,
     metrics: Arc<Metrics>,
-    cache: Option<Arc<Mutex<StateCache>>>,
+    caches: Option<Arc<Vec<Mutex<StateCache>>>>,
     feedback: Sender<Msg>,
 ) {
     loop {
@@ -655,7 +719,7 @@ fn worker_loop(
         match item {
             WorkItem::Batch(batch) => run_batch(exec.as_mut(), batch, &metrics),
             WorkItem::Steps(steps) => {
-                run_steps(exec.as_mut(), steps, cache.as_ref(), &metrics, &feedback)
+                run_steps(exec.as_mut(), steps, caches.as_ref(), &metrics, &feedback)
             }
         }
     }
@@ -719,11 +783,11 @@ pub fn run_batch(exec: &mut dyn Executor, batch: Batch, metrics: &Metrics) {
 fn run_steps(
     exec: &mut dyn Executor,
     batch: StepBatch,
-    cache: Option<&Arc<Mutex<StateCache>>>,
+    caches: Option<&Arc<Vec<Mutex<StateCache>>>>,
     metrics: &Metrics,
     feedback: &Sender<Msg>,
 ) {
-    let Some(cache) = cache else {
+    let Some(caches) = caches else {
         for t in batch.tasks {
             metrics.failures.fetch_add(1, Ordering::Relaxed);
             let fb = StepFeedback { session: t.session, token: None, ok: false };
@@ -733,6 +797,10 @@ fn run_steps(
     };
     let n = batch.tasks.len();
     for task in batch.tasks {
+        // The session's home chip owns its state; a batch holds one chip's
+        // steps, so a worker acts as that chip for the duration. A chip id
+        // out of range is a dispatcher bug — index loudly.
+        let cache = &caches[task.chip];
         let queue_time = task.issued.elapsed();
         let t0 = Instant::now();
         let result: Result<Vec<f32>> = match task.phase {
@@ -985,6 +1053,61 @@ mod tests {
         let roomy = run(64);
         let tight = run(1);
         assert_eq!(roomy, tight, "spill/restore must not change decode outputs");
+    }
+
+    #[test]
+    fn sharded_chips_serve_sessions_to_completion() {
+        // Sessions striped over 4 per-chip caches must decode to the same
+        // outputs as the single-chip run (sharding is transparent to
+        // numerics), and every chip must see cache traffic.
+        let run = |chips: usize| {
+            let mamba = StateShape::mamba(2, 4, 8);
+            let hyena = StateShape::hyena(2, 8, 8);
+            let c = Coordinator::start(
+                CoordinatorConfig {
+                    workers: 4,
+                    continuous: Some(
+                        ContinuousConfig::new(2 * 256, mamba, hyena).with_chips(chips),
+                    ),
+                    ..Default::default()
+                },
+                mock_factory(1, 8),
+            )
+            .unwrap();
+            let rxs: Vec<_> = (0..12)
+                .map(|i| {
+                    let model = if i % 2 == 0 { ModelKind::Mamba } else { ModelKind::Hyena };
+                    c.submit_session(model, vec![0.5 * (i as f32 + 1.0); 8], 4).unwrap()
+                })
+                .collect();
+            let streams: Vec<Vec<Vec<f32>>> = rxs
+                .into_iter()
+                .map(|rx| {
+                    let mut s = Vec::new();
+                    while let Ok(r) = rx.recv() {
+                        s.push(r.output);
+                    }
+                    s
+                })
+                .collect();
+            let per_chip = c.chip_cache_stats().unwrap();
+            let agg = c.cache_stats().unwrap();
+            c.shutdown();
+            (streams, per_chip, agg)
+        };
+        let (one, chips1, _) = run(1);
+        let (four, chips4, agg4) = run(4);
+        assert_eq!(one, four, "sharding must not change decode outputs");
+        assert!(four.iter().all(|s| s.len() == 4), "all sessions complete");
+        assert_eq!(chips1.len(), 1);
+        assert_eq!(chips4.len(), 4);
+        for (chip, cs) in chips4.iter().enumerate() {
+            assert!(cs.hits + cs.misses > 0, "chip {chip} saw no decode traffic: {cs:?}");
+            // Per-chip budget invariant: 2 states of 256 B each.
+            assert!(cs.peak_resident_bytes <= 2 * 256, "chip {chip}: {cs:?}");
+        }
+        let folded: u64 = chips4.iter().map(|c| c.hits + c.misses).sum();
+        assert_eq!(agg4.hits + agg4.misses, folded, "aggregate folds per-chip counters");
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! component is state + per-token activation traffic; off-chip *spill*
 //! traffic is accounted separately by the session state cache.
 
-use crate::arch::RduConfig;
+use crate::arch::{InterchipLink, RduConfig};
 use crate::runtime::ModelKind;
 use crate::workloads::DecoderConfig;
 
@@ -68,18 +68,60 @@ pub fn decode_step(
     let state = l * state_bytes;
     // One token in, one token out per layer boundary.
     let io_bytes = state + l * 2.0 * d * dc.dtype_bytes;
+    cost_from(flops, state, io_bytes, cfg)
+}
+
+/// Derive the overlapped step cost from raw flop/byte demands — the single
+/// place the decode cost rules (utilization, overlap, cycles) live, shared
+/// by the full and chips-partitioned steps.
+fn cost_from(flops: f64, state_bytes: f64, io_bytes: f64, cfg: &RduConfig) -> DecodeCost {
     let compute_seconds = flops / (cfg.spec.peak_flops() * DECODE_UTIL);
     let memory_seconds = io_bytes / cfg.spec.dram_bandwidth();
     let seconds = compute_seconds.max(memory_seconds);
     DecodeCost {
         flops,
-        state_bytes: state,
+        state_bytes,
         io_bytes,
         compute_seconds,
         memory_seconds,
         seconds,
         cycles: seconds * cfg.spec.clock_hz,
     }
+}
+
+/// Modeled cost of one decode step sharded over `chips` chips.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShardedDecodeCost {
+    /// One chip's share of the step (flops / state / io divided by `chips`).
+    pub per_chip: DecodeCost,
+    /// Per-step inter-chip exchange: one ring all-reduce of the `d_model`
+    /// token activation per layer.
+    pub comm_seconds: f64,
+    /// Step latency: per-chip step + exchange (the all-reduce is a barrier
+    /// between layers, so it does not overlap the chip-local work).
+    pub seconds: f64,
+    pub chips: usize,
+}
+
+/// Model one decode step with the per-token state and arithmetic
+/// partitioned across `chips` chips (tensor-style channel split: each chip
+/// owns `1/chips` of the recurrent state, and the `d_model` activation is
+/// ring-allreduced once per layer over `link`).
+pub fn decode_step_sharded(
+    model: ModelKind,
+    dc: &DecoderConfig,
+    layers: usize,
+    cfg: &RduConfig,
+    chips: usize,
+    link: &InterchipLink,
+) -> ShardedDecodeCost {
+    let chips = chips.max(1);
+    let full = decode_step(model, dc, layers, cfg);
+    let p = chips as f64;
+    let per_chip = cost_from(full.flops / p, full.state_bytes / p, full.io_bytes / p, cfg);
+    let comm_seconds = layers.max(1) as f64
+        * link.ring_allreduce_seconds(chips, dc.d_model as f64 * dc.dtype_bytes);
+    ShardedDecodeCost { per_chip, comm_seconds, seconds: per_chip.seconds + comm_seconds, chips }
 }
 
 #[cfg(test)]
@@ -125,5 +167,33 @@ mod tests {
         let short = decode_step(ModelKind::Mamba, &DecoderConfig::paper(1 << 10), 8, &cfg);
         let long = decode_step(ModelKind::Mamba, &DecoderConfig::paper(1 << 20), 8, &cfg);
         assert_eq!(short, long);
+    }
+
+    #[test]
+    fn sharded_single_chip_is_the_plain_step() {
+        let dc = DecoderConfig::paper(1 << 20);
+        let cfg = RduConfig::hs_scan_mode();
+        let link = InterchipLink::rdu_fabric();
+        let s = decode_step_sharded(ModelKind::Mamba, &dc, 8, &cfg, 1, &link);
+        assert_eq!(s.per_chip, decode_step(ModelKind::Mamba, &dc, 8, &cfg));
+        assert_eq!(s.comm_seconds, 0.0);
+        assert_eq!(s.seconds, s.per_chip.seconds);
+    }
+
+    #[test]
+    fn sharded_decode_splits_state_and_pays_allreduce() {
+        let dc = DecoderConfig::mamba_full(1 << 20);
+        let cfg = RduConfig::hs_scan_mode();
+        let link = InterchipLink::rdu_fabric();
+        let full = decode_step(ModelKind::Mamba, &dc, 8, &cfg);
+        let s = decode_step_sharded(ModelKind::Mamba, &dc, 8, &cfg, 4, &link);
+        assert!((s.per_chip.flops - full.flops / 4.0).abs() < 1e-9);
+        assert!((s.per_chip.state_bytes - full.state_bytes / 4.0).abs() < 1e-9);
+        assert!(s.comm_seconds > 0.0, "per-layer all-reduce is on the wire");
+        assert!(s.seconds >= s.per_chip.seconds + s.comm_seconds * 0.999);
+        // Per-token decode moves tiny activations: the latency-bound
+        // all-reduce dominates, so sharding decode is a *capacity* play
+        // (state per chip), not a latency play — the model must show that.
+        assert!(s.seconds > full.seconds * 0.999, "chips={} {:?}", s.chips, s);
     }
 }

@@ -13,10 +13,14 @@
 //!   overlapped DRAM streaming, per-kernel and per-op-class breakdowns.
 //! * [`decode`] — the decode-step cost hook: O(1)-per-token cycle/latency
 //!   model that drives the [`crate::session`] continuous-batching
-//!   scheduler in simulation, without a PJRT backend.
+//!   scheduler in simulation, without a PJRT backend; `decode_step_sharded`
+//!   adds the per-layer all-reduce of a chips-partitioned step.
 //!
 //! The GPU and VGA comparison backends live in [`crate::gpu`] and
 //! [`crate::vga`]; they consume the same [`crate::graph::Graph`] workloads.
+//! Multi-chip deployments are priced by [`crate::shard::estimate`], which
+//! composes [`estimate`] at `L / chips` with the
+//! [`crate::arch::InterchipLink`] communication term.
 
 pub mod decode;
 pub mod mapping;
@@ -24,7 +28,7 @@ pub mod perf;
 pub mod sweep;
 pub mod throughput;
 
-pub use decode::{decode_step, DecodeCost, DECODE_UTIL};
+pub use decode::{decode_step, decode_step_sharded, DecodeCost, ShardedDecodeCost, DECODE_UTIL};
 pub use mapping::{map_graph, Allocation, MapFailure, Mapping, Section};
 pub use perf::{estimate, Estimate, KernelEstimate};
 pub use sweep::{sweep_bandwidth, sweep_pcu_count, sweep_stages, SweepPoint};

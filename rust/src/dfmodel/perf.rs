@@ -82,6 +82,24 @@ impl Estimate {
 }
 
 /// Estimate dataflow-execution latency of `g` on `cfg`.
+///
+/// The mapper allocates PCUs/PMUs across the graph's kernels (sectioning
+/// when resident state exceeds SRAM), then the estimate is the pipelined
+/// `max(compute, memory)` per section:
+///
+/// ```
+/// use ssm_rdu::arch::RduConfig;
+/// use ssm_rdu::dfmodel::estimate;
+/// use ssm_rdu::fft::BaileyVariant;
+/// use ssm_rdu::workloads::{hyena_decoder, DecoderConfig};
+///
+/// let g = hyena_decoder(&DecoderConfig::paper(1 << 16), BaileyVariant::Vector);
+/// let baseline = estimate(&g, &RduConfig::baseline()).unwrap();
+/// let extended = estimate(&g, &RduConfig::fft_mode()).unwrap();
+/// // The FFT-mode interconnect extension makes the same workload faster.
+/// assert!(extended.total_seconds < baseline.total_seconds);
+/// assert!(baseline.bottleneck().contains("fft"));
+/// ```
 pub fn estimate(g: &Graph, cfg: &RduConfig) -> Result<Estimate, MapFailure> {
     let mapping = map_graph(g, cfg)?;
     Ok(estimate_with_mapping(g, cfg, &mapping))

@@ -19,6 +19,18 @@
 //! FLOP accounting follows the paper's convention (§III-A): a Vector-FFT of
 //! length L costs `5·L·log₂L`, a GEMM-FFT costs `5·L·R·log_R L` — i.e. the
 //! GEMM variant is exactly `R/log₂R`× more work (6.4× at R=32).
+//!
+//! **When the mapper picks which variant.** The Hyena workload builder
+//! (`crate::workloads::hyena_decoder`) takes the [`BaileyVariant`] as the
+//! design point: `Vector` kernels run spatially only on an RDU with the
+//! FFT-mode butterfly interconnect (`crate::arch::RduConfig::fft_mode`) and
+//! fall back to serialized stage-0 execution on a baseline chip, while
+//! `Gemm` kernels map onto the baseline systolic mode everywhere at
+//! `R/log₂R`× the FLOPs — exactly the Fig. 7 design space (Design 2 vs 3
+//! vs 4). The DFModel mapper then allocates PCUs to whichever kernels the
+//! chosen variant emits; it never switches variants itself. Past one chip,
+//! [`crate::shard::sharded_bailey_fft`] distributes the 4-step
+//! decomposition row/column-wise with one all-to-all transpose.
 
 pub mod bailey;
 pub mod conv;

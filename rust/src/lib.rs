@@ -27,6 +27,10 @@
 //!   Hyena FFT caches) under a byte-budgeted LRU cache, plus the
 //!   continuous-batching scheduler that serves multi-turn/streaming decode
 //!   (`serve --continuous`).
+//! * [`shard`] — multi-chip sequence sharding: exact sharded Mamba scan
+//!   (inter-chip carry exchange) and sharded Bailey FFT (all-to-all
+//!   transpose), priced end-to-end through [`arch::interchip`] and the
+//!   sharded DFModel estimates (`--chips`, the `shard_scaling` bench).
 //! * [`util`], [`bench`] — offline-friendly infrastructure (PRNG, mini
 //!   property-test runner, CLI parsing, bench harness).
 //!
@@ -45,6 +49,7 @@ pub mod pcusim;
 pub mod runtime;
 pub mod scan;
 pub mod session;
+pub mod shard;
 pub mod synth;
 pub mod util;
 pub mod vga;

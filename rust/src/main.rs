@@ -1,32 +1,47 @@
 //! `ssm-rdu` — leader entrypoint and CLI.
 //!
+//! Usage: `ssm-rdu <subcommand> [--options]`. The full CLI reference with
+//! examples lives in `README.md`; this block is the canonical summary and
+//! must stay in sync with the README and the `other =>` usage error below.
+//!
 //! Subcommands:
 //!   spec                         print Table I (RDU architectural spec)
 //!   table2                       print Table II (platform specs)
 //!   table4                       print Table IV (area/power overheads)
-//!   fig7 | fig8 | fig11 | fig12  regenerate a paper figure (DFModel)
+//!   fig7 | fig8 | fig11 | fig12  regenerate a paper figure (DFModel);
+//!                                --seq-lens L1,L2,… overrides the sweep
 //!   all                          every table and figure in order
-//!   simulate [--lanes N --stages M]
-//!                                run the cycle-level PCU simulator demo
+//!   simulate [--lanes N --stages M] [--chips P --seq-len L]
+//!                                run the cycle-level PCU simulator demo;
+//!                                with --chips > 1 also verify the sharded
+//!                                scan/FFT dataflows numerically and print
+//!                                the strong-scaling sweep (speedup and
+//!                                communication share per chip count, for
+//!                                Hyena and Mamba)
 //!   dot --model <attention|hyena|mamba> [--seq-len L]
 //!                                dump a workload dataflow graph (graphviz)
 //!   serve [--artifacts DIR --requests N --workers W --max-batch B
-//!          --max-wait-ms MS]
+//!          --max-wait-ms MS --chips P]
 //!                                serve one-shot batched requests through
-//!                                the PJRT runtime (the E2E driver's engine)
+//!                                the PJRT runtime (the E2E driver's
+//!                                engine); with --chips > 1 the closing
+//!                                model report also prices the
+//!                                sequence-sharded multi-chip deployment
 //!   serve --continuous [--sessions N --decode-steps K --workers W
 //!                       --max-batch B --cache-mb M --layers L --d-state S
-//!                       --state-d-model D --fft-points P
+//!                       --state-d-model D --fft-points P --chips P
 //!                       --session-timeout-ms MS]
 //!                                continuous-batching session serving over
 //!                                the MockExecutor: N live sessions decode
 //!                                K tokens each through the SessionScheduler
 //!                                + StateCache (LRU, byte budget, spill
-//!                                accounting). Default budget is half the
-//!                                total state footprint so eviction is
-//!                                exercised; override with --cache-mb.
+//!                                accounting). Sessions are striped across
+//!                                P chips, each chip owning its own state
+//!                                cache sized to its share of --cache-mb.
+//!                                Default budget is half the total state
+//!                                footprint so eviction is exercised.
 
-use ssm_rdu::arch::{PcuGeometry, RduConfig};
+use ssm_rdu::arch::{InterchipLink, PcuGeometry, RduConfig};
 use ssm_rdu::coordinator::{
     BatchPolicy, ContinuousConfig, Coordinator, CoordinatorConfig, Executor, MockExecutor,
     PjrtExecutor,
@@ -35,8 +50,9 @@ use ssm_rdu::figures;
 use ssm_rdu::pcusim::{self, Pcu};
 use ssm_rdu::runtime::{default_artifacts_dir, ModelKind};
 use ssm_rdu::session::{SchedulerConfig, StateShape};
+use ssm_rdu::shard;
 use ssm_rdu::util::cli::Args;
-use ssm_rdu::util::{fmt_time, C64, XorShift};
+use ssm_rdu::util::{fmt_time, max_abs_diff, C64, XorShift};
 use ssm_rdu::workloads::{
     attention_decoder, hyena_decoder, mamba_decoder, DecoderConfig, ScanVariant,
 };
@@ -104,7 +120,11 @@ fn main() {
         "dot" => dot(&args),
         "serve" => serve(&args),
         other => {
-            eprintln!("unknown subcommand `{other}`; see `rust/src/main.rs` docs for usage");
+            eprintln!(
+                "unknown subcommand `{other}`; usage: ssm-rdu \
+                 <spec|table2|table4|fig7|fig8|fig11|fig12|all|simulate|dot|serve> [--options] \
+                 — see README.md (or the rust/src/main.rs doc block) for the full reference"
+            );
             2
         }
     };
@@ -147,7 +167,86 @@ fn simulate(args: &Args) -> i32 {
             stats.utilization() * 100.0
         );
     }
+    let chips = args.usize_or("chips", 1).max(1);
+    if chips > 1 {
+        shard_report(chips, args.usize_or("seq-len", 1 << 20));
+    }
     0
+}
+
+/// `simulate --chips P`: check the sharded dataflows against their
+/// single-chip references, then print the strong-scaling sweep for both
+/// SSM decoders (speedup over one chip and communication share).
+fn shard_report(chips: usize, seq_len: usize) {
+    let link = InterchipLink::rdu_fabric();
+    // Sweep powers of two up to the requested chip count; a count must
+    // divide L (the sharded estimate partitions the sequence evenly), so
+    // report and drop any that does not rather than panicking mid-sweep.
+    let mut counts = vec![1usize];
+    while counts.last().unwrap() * 2 <= chips {
+        counts.push(counts.last().unwrap() * 2);
+    }
+    let (counts, dropped): (Vec<usize>, Vec<usize>) =
+        counts.into_iter().partition(|&p| seq_len % p == 0);
+    if !dropped.is_empty() {
+        eprintln!(
+            "note: skipping chip counts {dropped:?} — they do not divide --seq-len {seq_len}"
+        );
+    }
+    let p = *counts.last().unwrap();
+
+    // Numerics first: sharding must not change the math.
+    let mut rng = XorShift::new(9);
+    let n = 1000;
+    let a: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 0.99)).collect();
+    let b: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let d_scan = max_abs_diff(
+        &shard::sharded_mamba_scan(&a, &b, p),
+        &ssm_rdu::scan::mamba_scan_serial(&a, &b),
+    );
+    let x: Vec<C64> = (0..4096)
+        .map(|_| C64::new(rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0)))
+        .collect();
+    let fp = p.min(32);
+    let d_fft = ssm_rdu::util::complex::max_abs_diff_c(
+        &shard::sharded_bailey_fft(&x, 32, fp, ssm_rdu::fft::BaileyVariant::Vector),
+        &ssm_rdu::fft::fft(&x),
+    );
+    println!(
+        "\nsharded dataflow numerics: {p}-chip Mamba scan vs serial |d|={d_scan:.2e}, \
+         {fp}-chip Bailey FFT vs Cooley-Tukey |d|={d_fft:.2e}"
+    );
+
+    // Strong scaling at the paper decoder shape over `link`.
+    println!("strong scaling at L={seq_len}, {link}:");
+    let dc = DecoderConfig::paper(seq_len);
+    for (model, cfg) in [
+        (ModelKind::Mamba, RduConfig::hs_scan_mode()),
+        (ModelKind::Hyena, RduConfig::fft_mode()),
+    ] {
+        let pts = match shard::strong_scaling(model, &dc, &counts, &cfg, &link) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("  {model}: unmappable ({e})");
+                continue;
+            }
+        };
+        let mut t = ssm_rdu::util::table::Table::new(
+            &format!("{model} strong scaling on {}", cfg.name()),
+            &["Chips", "Per-chip", "Comm", "Total", "Speedup", "Comm share"],
+        );
+        for pt in &pts {
+            t.row(&[
+                format!("{}", pt.est.chips),
+                fmt_time(pt.est.per_chip.total_seconds),
+                fmt_time(pt.est.comm_seconds),
+                fmt_time(pt.est.total_seconds),
+                format!("{:.2}x", pt.speedup),
+                format!("{:.1}%", pt.est.comm_share() * 100.0),
+            ]);
+        }
+        t.print();
+    }
 }
 
 /// Dump a workload graph as graphviz dot.
@@ -241,7 +340,9 @@ fn serve(args: &Args) -> i32 {
     coord.shutdown();
 
     // Tie the serving stack back to the paper's performance model: print the
-    // modeled-RDU latency for the same decoder shapes.
+    // modeled-RDU latency for the same decoder shapes, and — with --chips —
+    // the sequence-sharded multi-chip deployment.
+    let chips = args.usize_or("chips", 1).max(1);
     let dc = DecoderConfig::paper(manifest.seq_len);
     for (name, g, cfg) in [
         ("hyena", hyena_decoder(&dc, ssm_rdu::fft::BaileyVariant::Vector), RduConfig::fft_mode()),
@@ -256,6 +357,32 @@ fn serve(args: &Args) -> i32 {
             );
         }
     }
+    if chips > 1 && manifest.seq_len % chips != 0 {
+        eprintln!(
+            "note: skipping the {chips}-chip sharded report — {chips} does not divide the \
+             artifact seq_len {}",
+            manifest.seq_len
+        );
+    }
+    if chips > 1 && manifest.seq_len % chips == 0 {
+        let link = InterchipLink::rdu_fabric();
+        for (model, cfg) in [
+            (ModelKind::Hyena, RduConfig::fft_mode()),
+            (ModelKind::Mamba, RduConfig::hs_scan_mode()),
+        ] {
+            if let Ok(s) = shard::sharded_estimate(model, &dc, chips, &cfg, &link) {
+                println!(
+                    "modeled {chips}-chip {model} @ L={}: {} per chip + {} exchange = {} \
+                     ({:.1}% comm)",
+                    manifest.seq_len,
+                    fmt_time(s.per_chip.total_seconds),
+                    fmt_time(s.comm_seconds),
+                    fmt_time(s.total_seconds),
+                    s.comm_share() * 100.0,
+                );
+            }
+        }
+    }
     0
 }
 
@@ -264,7 +391,8 @@ fn serve(args: &Args) -> i32 {
 fn serve_continuous(args: &Args) -> i32 {
     let sessions = args.usize_or("sessions", 96);
     let decode_steps = args.usize_or("decode-steps", 32);
-    let workers = args.usize_or("workers", 2);
+    let chips = args.usize_or("chips", 1).max(1);
+    let workers = args.usize_or("workers", chips.max(2));
     let max_batch = args.usize_or("max-batch", 16);
     let layers = args.usize_or("layers", 8);
     let d_state = args.usize_or("d-state", 16);
@@ -284,21 +412,25 @@ fn serve_continuous(args: &Args) -> i32 {
             }
         })
         .sum();
-    // Default budget: half the footprint, so the demo exercises eviction;
-    // always at least one state so decode can make progress.
-    let budget_bytes = match args.get("cache-mb") {
+    // Default fleet budget: half the footprint, so the demo exercises
+    // eviction. --cache-mb sets the fleet-wide budget; each chip owns an
+    // equal share, floored at one state so decode can make progress.
+    let fleet_budget = match args.get("cache-mb") {
         Some(_) => args.usize_or("cache-mb", 8) * (1 << 20),
-        None => (footprint / 2).max(mamba_shape.bytes().max(hyena_shape.bytes())),
+        None => footprint / 2,
     };
+    let budget_bytes =
+        (fleet_budget / chips).max(mamba_shape.bytes().max(hyena_shape.bytes()));
     println!(
         "continuous serving: {sessions} sessions × {decode_steps} tokens, {workers} workers, \
-         batch {max_batch}"
+         batch {max_batch}, {chips} chip(s)"
     );
     println!(
-        "state footprint {:.1} KiB vs cache budget {:.1} KiB ({})",
+        "state footprint {:.1} KiB vs cache budget {:.1} KiB ({chips} × {:.1} KiB/chip — {})",
         footprint as f64 / 1024.0,
+        (budget_bytes * chips) as f64 / 1024.0,
         budget_bytes as f64 / 1024.0,
-        if budget_bytes < footprint { "expect spills" } else { "fully resident" }
+        if budget_bytes * chips < footprint { "expect spills" } else { "fully resident" }
     );
 
     let cc = ContinuousConfig {
@@ -309,6 +441,7 @@ fn serve_continuous(args: &Args) -> i32 {
         budget_bytes,
         mamba_shape,
         hyena_shape,
+        chips,
     };
     let coord = match Coordinator::start(
         CoordinatorConfig {
@@ -369,6 +502,19 @@ fn serve_continuous(args: &Args) -> i32 {
             fmt_time(cs.spill_seconds),
         );
     }
+    if chips > 1 {
+        if let Some(per_chip) = coord.chip_cache_stats() {
+            for (chip, cs) in per_chip.iter().enumerate() {
+                println!(
+                    "  chip {chip}: hits={} misses={} evictions={} peak_resident={:.1} KiB",
+                    cs.hits,
+                    cs.misses,
+                    cs.evictions,
+                    cs.peak_resident_bytes as f64 / 1024.0,
+                );
+            }
+        }
+    }
     if let Some(ss) = coord.scheduler_stats() {
         println!(
             "scheduler: admitted={} retired={} expired={} failed={} prefill_steps={} \
@@ -400,6 +546,24 @@ fn serve_continuous(args: &Args) -> i32 {
             cost.cycles,
             cost.state_bytes / 1024.0,
         );
+        if chips > 1 {
+            let s = ssm_rdu::dfmodel::decode_step_sharded(
+                model,
+                &dc,
+                shape.layers,
+                &cfg,
+                chips,
+                &InterchipLink::rdu_fabric(),
+            );
+            println!(
+                "  sharded over {chips} chips: {} per chip + {} all-reduce = {} \
+                 (state {:.1} KiB/chip)",
+                fmt_time(s.per_chip.seconds),
+                fmt_time(s.comm_seconds),
+                fmt_time(s.seconds),
+                s.per_chip.state_bytes / 1024.0,
+            );
+        }
     }
     coord.shutdown();
     if complete == sessions {

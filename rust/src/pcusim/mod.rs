@@ -16,6 +16,17 @@
 //! * [`utilization`] — the measured steady-state factors DFModel consumes.
 //! * [`noc`] — chip-grid placement, hop counts, fill latency and link
 //!   bandwidth audit of mapped sections.
+//!
+//! **Spatial vs serialized, and what DFModel does with it.** A program maps
+//! *spatially* (one pipeline stage per FU level, initiation interval → 1)
+//! only when the PCU's interconnect fabric carries every inter-stage route
+//! it needs: FFT butterflies need the FFT-mode fabric, HS-/B-scan exchanges
+//! need the scan-mode fabric (paper Figs. 5/10). On a baseline PCU the same
+//! program *serializes* through the first stage, paying the 1/stages
+//! throughput penalty of §III-B — this measured spatial/serialized gap is
+//! the per-kernel utilization factor [`crate::dfmodel`] builds every figure
+//! from, so the simulator is the ground truth under the performance model,
+//! which in turn prices the multi-chip dataflows of [`crate::shard`].
 
 pub mod engine;
 pub mod noc;

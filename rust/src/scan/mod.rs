@@ -16,6 +16,22 @@
 //!   scanned recursively, offsets added back.
 //! * [`recurrence`] — generic associative-operator scans and the Mamba
 //!   `h[t] = a[t]·h[t-1] + b[t]` recurrence with its associative lift.
+//!
+//! **When the mapper picks which variant.** The workload builders expose
+//! the choice as `ScanVariant` (see `crate::workloads::mamba_decoder`):
+//! `CScan` emits one inherently serial kernel that the DFModel mapper pins
+//! to a single PCU (1 element/cycle — the paper's Design 2), while
+//! `Parallel` emits the lifted scan, which runs spatially *only* on an RDU
+//! whose PCUs carry the HS-/B-scan interconnect extension
+//! (`crate::arch::RduConfig::hs_scan_mode` / `b_scan_mode`); on a baseline
+//! RDU it executes serialized through stage 0 and loses the 1/stages
+//! factor. HS-scan spends `N·log₂N` work for `log₂N` steps; B-scan spends
+//! `2N` work for `2·log₂N` steps — same steady-state throughput on the
+//! extended PCU, which is why Fig. 11's HS-mode and B-mode curves overlap.
+//! For sequences longer than one PCU's lanes the tiled driver
+//! ([`tiled`], `mamba_scan_tiled`) splits the scan into R-element tiles,
+//! and past one chip [`crate::shard::sharded_mamba_scan`] splits it across
+//! chips with an inter-chip carry exchange.
 
 pub mod blelloch;
 pub mod hillis_steele;

@@ -50,6 +50,22 @@ impl CacheStats {
         }
         self.hits as f64 / total as f64
     }
+
+    /// Fold another cache's counters into this one — fleet aggregation
+    /// across per-chip caches. `peak_resident_bytes` sums because the chips
+    /// hold disjoint states in separate SRAMs, so the fleet peak is the sum
+    /// of per-chip peaks (an upper bound: the chips may peak at different
+    /// times).
+    pub fn merge(&mut self, other: &CacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
+        self.restores += other.restores;
+        self.spilled_bytes += other.spilled_bytes;
+        self.restored_bytes += other.restored_bytes;
+        self.peak_resident_bytes += other.peak_resident_bytes;
+        self.spill_seconds += other.spill_seconds;
+    }
 }
 
 #[derive(Debug)]
@@ -295,6 +311,27 @@ mod tests {
         assert_eq!(c.resident_bytes(), 0);
         assert!(!c.contains(1));
         assert!(c.checkout(1).is_none());
+    }
+
+    #[test]
+    fn merge_folds_all_counters() {
+        let mut a =
+            CacheStats { hits: 2, misses: 1, peak_resident_bytes: 512, ..Default::default() };
+        let b = CacheStats {
+            hits: 3,
+            misses: 1,
+            evictions: 4,
+            peak_resident_bytes: 256,
+            spill_seconds: 0.5,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.hits, 5);
+        assert_eq!(a.misses, 2);
+        assert_eq!(a.evictions, 4);
+        assert_eq!(a.peak_resident_bytes, 768);
+        assert!((a.spill_seconds - 0.5).abs() < 1e-12);
+        assert!((a.hit_rate() - 5.0 / 7.0).abs() < 1e-12);
     }
 
     #[test]

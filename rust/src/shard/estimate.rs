@@ -1,0 +1,271 @@
+//! Sharded DFModel estimates: price a sequence-sharded decoder on `P` chips
+//! as *per-chip compute* (the single-chip mapper at `L / P`) plus the
+//! *inter-chip communication term* of the sharded dataflow.
+//!
+//! Communication per model follows the exchanges in [`super::scan`] and
+//! [`super::fft`]:
+//!
+//! * **Mamba** — one carry exchange per forward pass: a composed `(A, B)`
+//!   pair per scan channel moves through the `2·⌈log₂P⌉`-round inter-chip
+//!   exclusive prefix ([`InterchipLink::prefix_exchange_seconds`]).
+//! * **Hyena** — one all-to-all transpose per FFT transform (6 per decoder
+//!   layer: two convolutions × two forward + one inverse), each moving
+//!   `(P−1)/P` of the padded `fft_len × D` complex tensor
+//!   ([`InterchipLink::all_to_all_seconds`]).
+//!
+//! [`strong_scaling`] sweeps chip counts and reports speedup over one chip
+//! and the communication share — the numbers the `shard_scaling` bench and
+//! `simulate --chips` print.
+
+use super::fft::transpose_bytes;
+use super::scan::carry_exchange_bytes;
+use crate::arch::{prefix_exchange_steps, InterchipLink, RduConfig};
+use crate::dfmodel::{estimate, Estimate, MapFailure};
+use crate::fft::BaileyVariant;
+use crate::graph::OpClass;
+use crate::runtime::ModelKind;
+use crate::workloads::{hyena_decoder, mamba_decoder, DecoderConfig, ScanVariant};
+
+/// FFT transforms per Hyena decoder layer (two convs × three transforms).
+const HYENA_TRANSFORMS: f64 = 6.0;
+
+/// A sequence-sharded performance estimate: one chip's DFModel mapping plus
+/// the interconnect term.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardedEstimate {
+    pub model: ModelKind,
+    pub chips: usize,
+    /// DFModel estimate of one chip's `L / P` sub-sequence.
+    pub per_chip: Estimate,
+    /// Inter-chip exchange time (carry exchange / all-to-all transposes).
+    pub comm_seconds: f64,
+    /// Total bytes crossing the inter-chip fabric per forward pass.
+    pub comm_bytes: f64,
+    /// End-to-end latency: per-chip compute + exchange (the exchange is a
+    /// barrier between the sharded phases, so it does not overlap).
+    pub total_seconds: f64,
+}
+
+impl ShardedEstimate {
+    /// Fraction of the total latency spent on the interconnect.
+    pub fn comm_share(&self) -> f64 {
+        if self.total_seconds <= 0.0 {
+            return 0.0;
+        }
+        self.comm_seconds / self.total_seconds
+    }
+}
+
+/// One row of a strong-scaling sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScalingPoint {
+    pub est: ShardedEstimate,
+    /// Speedup over the single-chip latency at the same total `L`.
+    pub speedup: f64,
+}
+
+/// Estimate `model` at full sequence length `dc.seq_len` sharded over
+/// `chips` chips of configuration `cfg`, exchanging over `link`.
+///
+/// `chips` must divide `dc.seq_len` (the figure sweeps use powers of two).
+/// Attention is rejected: its quadratic token mixing has no sequence-local
+/// phase to shard this way.
+pub fn sharded_estimate(
+    model: ModelKind,
+    dc: &DecoderConfig,
+    chips: usize,
+    cfg: &RduConfig,
+    link: &InterchipLink,
+) -> Result<ShardedEstimate, MapFailure> {
+    assert!(chips >= 1, "sharded_estimate: need at least one chip");
+    assert!(
+        dc.seq_len % chips == 0,
+        "sharded_estimate: {chips} chips must divide L={}",
+        dc.seq_len
+    );
+    let local = DecoderConfig { seq_len: dc.seq_len / chips, ..*dc };
+    let (graph, comm_bytes, comm_seconds) = match model {
+        ModelKind::Mamba => {
+            let g = mamba_decoder(&local, ScanVariant::Parallel);
+            let carry = carry_exchange_bytes(dc.state_dim.max(1) * dc.d_inner(), dc.dtype_bytes);
+            let bytes = prefix_exchange_steps(chips) as f64 * carry;
+            (g, bytes, link.prefix_exchange_seconds(chips, carry))
+        }
+        ModelKind::Hyena => {
+            let mut g = hyena_decoder(&local, BaileyVariant::Vector);
+            // The distributed 4-step runs *global* 2L-point transforms with
+            // the work split evenly, so a chip's FFT work is
+            // 5·(n/P)·log₂(n) — not the 5·(n/P)·log₂(n/P) the local-length
+            // graph prices. Scale the FFT kernels up by log₂n / log₂(n/P)
+            // so per-chip compute and the transpose describe one dataflow.
+            let ratio =
+                (dc.fft_len() as f64).log2() / (local.fft_len() as f64).log2().max(1.0);
+            for k in &mut g.kernels {
+                if matches!(k.op, OpClass::VectorFft | OpClass::GemmFft) {
+                    k.flops *= ratio;
+                }
+            }
+            // Each transform transposes the global padded tensor; the
+            // matrix is distributed, so each chip holds 1/P of it.
+            let elem_bytes = 2.0 * dc.dtype_bytes; // complex
+            let tensor = dc.fft_len() as f64 * dc.d_model as f64 * elem_bytes;
+            let bytes = HYENA_TRANSFORMS * transpose_bytes(dc.fft_len(), chips, elem_bytes)
+                * dc.d_model as f64;
+            let secs = HYENA_TRANSFORMS * link.all_to_all_seconds(chips, tensor / chips as f64);
+            (g, bytes, secs)
+        }
+        ModelKind::Attention => {
+            panic!("sharded_estimate: sequence sharding covers the SSM decoders, not attention")
+        }
+    };
+    let per_chip = estimate(&graph, cfg)?;
+    Ok(ShardedEstimate {
+        model,
+        chips,
+        comm_seconds,
+        comm_bytes,
+        total_seconds: per_chip.total_seconds + comm_seconds,
+        per_chip,
+    })
+}
+
+/// Strong-scaling sweep: the same total sequence `dc.seq_len` over each
+/// chip count, with speedup measured against a single-chip estimate of the
+/// same total `L` (reused from the sweep when it contains chip count 1,
+/// computed once otherwise).
+pub fn strong_scaling(
+    model: ModelKind,
+    dc: &DecoderConfig,
+    chip_counts: &[usize],
+    cfg: &RduConfig,
+    link: &InterchipLink,
+) -> Result<Vec<ScalingPoint>, MapFailure> {
+    let mut ests = Vec::with_capacity(chip_counts.len());
+    for &p in chip_counts {
+        ests.push(sharded_estimate(model, dc, p, cfg, link)?);
+    }
+    let single = match ests.iter().find(|e| e.chips == 1) {
+        Some(e) => e.total_seconds,
+        None => sharded_estimate(model, dc, 1, cfg, link)?.total_seconds,
+    };
+    Ok(ests
+        .into_iter()
+        .map(|est| {
+            let speedup = single / est.total_seconds;
+            ScalingPoint { est, speedup }
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dc() -> DecoderConfig {
+        DecoderConfig::paper(1 << 20)
+    }
+
+    #[test]
+    fn single_chip_matches_dfmodel_exactly() {
+        let link = InterchipLink::rdu_fabric();
+        for (model, cfg) in [
+            (ModelKind::Mamba, RduConfig::hs_scan_mode()),
+            (ModelKind::Hyena, RduConfig::fft_mode()),
+        ] {
+            let s = sharded_estimate(model, &dc(), 1, &cfg, &link).unwrap();
+            assert_eq!(s.comm_seconds, 0.0);
+            assert_eq!(s.comm_bytes, 0.0);
+            assert_eq!(s.total_seconds, s.per_chip.total_seconds);
+        }
+    }
+
+    #[test]
+    fn mamba_scales_strongly() {
+        // The carry exchange moves O(1) bytes, so Mamba's speedup must
+        // clearly beat one chip and grow (to a small tolerance — the last
+        // doubling's compute saving can approach the added exchange rounds).
+        let link = InterchipLink::rdu_fabric();
+        let cfg = RduConfig::hs_scan_mode();
+        let pts = strong_scaling(ModelKind::Mamba, &dc(), &[1, 2, 4, 8], &cfg, &link).unwrap();
+        assert!((pts[0].speedup - 1.0).abs() < 1e-12);
+        for w in pts.windows(2) {
+            assert!(
+                w[1].speedup > w[0].speedup * 0.95,
+                "{} chips {} → {} chips {}",
+                w[0].est.chips,
+                w[0].speedup,
+                w[1].est.chips,
+                w[1].speedup
+            );
+        }
+        let last = pts.last().unwrap();
+        assert!(last.speedup > 1.5, "8-chip speedup {}", last.speedup);
+        assert!(last.est.comm_share() < 0.9);
+    }
+
+    #[test]
+    fn hyena_sweep_reports_comm_share() {
+        // Hyena's all-to-all moves the whole padded tensor, so its scaling
+        // may be interconnect-bound — the sweep must still report finite
+        // latency and a meaningful communication share at every chip count.
+        let link = InterchipLink::rdu_fabric();
+        let pts =
+            strong_scaling(ModelKind::Hyena, &dc(), &[1, 2, 4, 8], &RduConfig::fft_mode(), &link)
+                .unwrap();
+        assert!((pts[0].speedup - 1.0).abs() < 1e-12);
+        assert_eq!(pts[0].est.comm_share(), 0.0);
+        for p in &pts[1..] {
+            assert!(p.est.total_seconds.is_finite() && p.est.total_seconds > 0.0);
+            assert!(p.est.comm_share() > 0.0 && p.est.comm_share() < 1.0);
+            assert!(p.speedup > 0.0);
+        }
+        // Per-chip traffic shrinks with P, so the exchange itself gets
+        // cheaper as the fleet grows (bandwidth-dominated regime at 1M).
+        for w in pts.windows(2).skip(1) {
+            assert!(
+                w[1].est.comm_seconds < w[0].est.comm_seconds * 1.001,
+                "{} chips {} vs {} chips {}",
+                w[0].est.chips,
+                w[0].est.comm_seconds,
+                w[1].est.chips,
+                w[1].est.comm_seconds
+            );
+        }
+    }
+
+    #[test]
+    fn hyena_pays_more_interconnect_than_mamba() {
+        // The all-to-all moves O(L) tensor; the carry exchange moves O(1)
+        // carries — the sharded-dataflow asymmetry in one assert.
+        let link = InterchipLink::rdu_fabric();
+        let hy =
+            sharded_estimate(ModelKind::Hyena, &dc(), 8, &RduConfig::fft_mode(), &link).unwrap();
+        let ma = sharded_estimate(ModelKind::Mamba, &dc(), 8, &RduConfig::hs_scan_mode(), &link)
+            .unwrap();
+        assert!(hy.comm_bytes > ma.comm_bytes * 100.0, "hy={} ma={}", hy.comm_bytes, ma.comm_bytes);
+        assert!(hy.comm_seconds > ma.comm_seconds);
+    }
+
+    #[test]
+    fn slower_links_raise_comm_share() {
+        let fast = InterchipLink::rdu_fabric();
+        let slow = InterchipLink::pcie5();
+        let cfg = RduConfig::fft_mode();
+        let a = sharded_estimate(ModelKind::Hyena, &dc(), 4, &cfg, &fast).unwrap();
+        let b = sharded_estimate(ModelKind::Hyena, &dc(), 4, &cfg, &slow).unwrap();
+        assert!(b.comm_share() > a.comm_share());
+        assert_eq!(a.comm_bytes, b.comm_bytes, "traffic is link-independent");
+    }
+
+    #[test]
+    #[should_panic(expected = "not attention")]
+    fn attention_is_rejected() {
+        let _ = sharded_estimate(
+            ModelKind::Attention,
+            &dc(),
+            2,
+            &RduConfig::baseline(),
+            &InterchipLink::rdu_fabric(),
+        );
+    }
+}

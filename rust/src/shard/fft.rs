@@ -1,0 +1,159 @@
+//! Sharded Bailey FFT: the 4-step `R × C` decomposition distributed over
+//! chips with one **all-to-all transpose** between the column and row
+//! phases.
+//!
+//! Bailey's algorithm ([`crate::fft::bailey`]) already factors an L-point
+//! FFT into independent length-R column transforms, a twiddle scaling, and
+//! independent length-C row transforms — exactly the two-phase structure a
+//! multi-chip mapping wants. With `P` chips:
+//!
+//! ```text
+//! phase 1 (parallel)   chip p: FFT + twiddle its C/P owned columns
+//! phase 2 (exchange)   all-to-all transpose: chip p gathers rows
+//!                      [p·R/P, (p+1)·R/P) — every chip sends (P−1)/P of
+//!                      its matrix slice to peers
+//! phase 3 (parallel)   chip p: FFT its R/P rows (length C, recursing
+//!                      through the single-chip Bailey tiling)
+//! ```
+//!
+//! The arithmetic is identical to the single-chip decomposition — only
+//! *ownership* moves — so the result is exact against [`crate::fft::dft()`]
+//! to floating-point rounding. Wire cost is priced by
+//! [`crate::arch::InterchipLink::all_to_all_seconds`].
+
+use crate::fft::{bailey_fft, is_pow2, BaileyVariant};
+use crate::util::C64;
+use std::f64::consts::PI;
+
+/// Bailey 4-step FFT of `x` with tile size `r`, sharded over `chips` chips.
+///
+/// Requirements: `x.len()` and `r` powers of two with `r ≥ 2` (as
+/// [`crate::fft::bailey_fft`]); when `chips > 1` and the input spans more
+/// than one tile, `chips` must divide both the row count `r` and the column
+/// count `x.len() / r` so each phase partitions evenly. Inputs of at most
+/// one tile, or `chips == 1`, fall back to the single-chip transform.
+pub fn sharded_bailey_fft(x: &[C64], r: usize, chips: usize, variant: BaileyVariant) -> Vec<C64> {
+    let l = x.len();
+    assert!(chips >= 1, "sharded_bailey_fft: need at least one chip");
+    if chips == 1 || l <= r {
+        // One chip, or a single tile: nothing to shard.
+        return bailey_fft(x, r, variant);
+    }
+    assert!(is_pow2(l), "sharded_bailey_fft: L={l} not a power of two");
+    assert!(is_pow2(r) && r >= 2, "sharded_bailey_fft: R={r} not a power of two >= 2");
+    let c = l / r;
+    assert!(
+        r % chips == 0 && c % chips == 0,
+        "sharded_bailey_fft: {chips} chips must divide both R={r} rows and C={c} columns"
+    );
+
+    // Phase 1 — chip p owns columns [p·C/P, (p+1)·C/P): length-R column
+    // FFTs (x[n1·C + n2], the 4-step decimation) plus the twiddle scaling
+    // T[n2, k1] *= e^{-2πi·n2·k1/L}, all chip-local.
+    let cols_per_chip = c / chips;
+    let mut cols: Vec<Vec<C64>> = vec![Vec::new(); c];
+    for p in 0..chips {
+        for n2 in p * cols_per_chip..(p + 1) * cols_per_chip {
+            let col: Vec<C64> = (0..r).map(|n1| x[n1 * c + n2]).collect();
+            let mut col = bailey_fft(&col, r, variant);
+            for (k1, v) in col.iter_mut().enumerate() {
+                let ang = -2.0 * PI * ((n2 * k1) % l) as f64 / l as f64;
+                *v = *v * C64::cis(ang);
+            }
+            cols[n2] = col;
+        }
+    }
+
+    // Phase 2 — the all-to-all transpose: chip p needs row k1 ∈
+    // [p·R/P, (p+1)·R/P) of a matrix whose columns live across all chips.
+    // (In this functional model the gather is just indexing; the
+    // interconnect model prices the (P−1)/P of the matrix that crosses
+    // chip boundaries.)
+    // Phase 3 — chip p: length-C row FFTs through the single-chip Bailey
+    // tiling, scattered to the standard 4-step output order X[k1 + R·k2].
+    let rows_per_chip = r / chips;
+    let mut out = vec![C64::ZERO; l];
+    for p in 0..chips {
+        for k1 in p * rows_per_chip..(p + 1) * rows_per_chip {
+            let row: Vec<C64> = (0..c).map(|n2| cols[n2][k1]).collect();
+            let row_f = bailey_fft(&row, r, variant);
+            for (k2, v) in row_f.into_iter().enumerate() {
+                out[k1 + r * k2] = v;
+            }
+        }
+    }
+    out
+}
+
+/// Total bytes that cross chip boundaries in the transpose of an L-point
+/// matrix distributed over `chips` chips: each chip keeps its `1/P`
+/// diagonal block and sends the rest, so `(P−1)/P` of the whole tensor
+/// moves (`bytes_per_elem` = complex element size).
+pub fn transpose_bytes(l: usize, chips: usize, bytes_per_elem: f64) -> f64 {
+    if chips <= 1 {
+        return 0.0;
+    }
+    l as f64 * bytes_per_elem * (chips as f64 - 1.0) / chips as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::{dft::dft, fft};
+    use crate::util::complex::max_abs_diff_c;
+    use crate::util::XorShift;
+
+    fn rand_complex(rng: &mut XorShift, n: usize) -> Vec<C64> {
+        (0..n).map(|_| C64::new(rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0))).collect()
+    }
+
+    #[test]
+    fn matches_dft_across_chip_counts() {
+        let mut rng = XorShift::new(71);
+        for &(l, r) in &[(256usize, 32usize), (512, 16), (1024, 32)] {
+            let x = rand_complex(&mut rng, l);
+            let want = dft(&x);
+            for chips in [1usize, 2, 4, 8] {
+                for variant in [BaileyVariant::Vector, BaileyVariant::Gemm] {
+                    let got = sharded_bailey_fft(&x, r, chips, variant);
+                    let d = max_abs_diff_c(&got, &want);
+                    assert!(d < 1e-7, "L={l} R={r} chips={chips} {variant:?}: diff={d}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matches_single_chip_bailey_exactly_in_structure() {
+        // Same arithmetic, different ownership: sharded output must agree
+        // with the single-chip CT pipeline to tight tolerance.
+        let mut rng = XorShift::new(72);
+        let x = rand_complex(&mut rng, 2048);
+        let got = sharded_bailey_fft(&x, 32, 4, BaileyVariant::Vector);
+        assert!(max_abs_diff_c(&got, &fft(&x)) < 1e-8);
+    }
+
+    #[test]
+    fn single_tile_and_single_chip_fall_back() {
+        let mut rng = XorShift::new(73);
+        let x = rand_complex(&mut rng, 16);
+        // L ≤ R: the input is one tile; any chip count degenerates cleanly.
+        let got = sharded_bailey_fft(&x, 32, 8, BaileyVariant::Vector);
+        assert!(max_abs_diff_c(&got, &fft(&x)) < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide")]
+    fn indivisible_partition_rejected() {
+        let x = vec![C64::ZERO; 128];
+        // C = 128/32 = 4 columns cannot split over 8 chips.
+        sharded_bailey_fft(&x, 32, 8, BaileyVariant::Vector);
+    }
+
+    #[test]
+    fn transpose_traffic_fraction() {
+        // 4 chips: 3/4 of the tensor crosses the fabric.
+        assert_eq!(transpose_bytes(1024, 4, 16.0), 1024.0 * 16.0 * 0.75);
+        assert_eq!(transpose_bytes(1024, 1, 16.0), 0.0);
+    }
+}

@@ -1,0 +1,82 @@
+//! Multi-chip sequence sharding: partition one long sequence across `P` RDU
+//! chips so the paper's spatial dataflows scale past a single die.
+//!
+//! The paper maps FFT-based (Hyena) and scan-based (Mamba) decoders onto
+//! *one* RDU. The roadmap's production target needs more sequence than one
+//! chip's SRAM and more throughput than one chip's PCUs, so this module adds
+//! the two exact sharded dataflows plus the model that prices them:
+//!
+//! * [`scan`] — sharded Mamba selective scan: each chip runs the lifted
+//!   Blelloch/HS scan over its contiguous sub-sequence, chips exchange
+//!   *carries* (composed `(a, b)` pairs) in an inter-chip exclusive prefix,
+//!   then apply the carry-in locally. Exact against
+//!   [`crate::scan::mamba_scan_serial`] for any length and chip count.
+//! * [`fft`] — sharded Bailey FFT: the 4-step `R × C` decomposition with
+//!   columns block-owned by chips, one all-to-all **transpose** between the
+//!   column-FFT and row-FFT phases. Exact against [`crate::fft::dft()`].
+//! * [`estimate`] — sharded DFModel [`crate::dfmodel::Estimate`]s: per-chip
+//!   compute from the single-chip mapper at `L / P` plus the
+//!   [`crate::arch::InterchipLink`] communication term, and the
+//!   strong-scaling sweep behind the `shard_scaling` bench.
+//!
+//! The serving integration (per-chip state caches, sharded dispatch,
+//! `--chips` on `serve`/`simulate`) lives in [`crate::coordinator`] and the
+//! CLI; see `docs/ARCHITECTURE.md` for the exchange diagrams.
+
+pub mod estimate;
+pub mod fft;
+pub mod scan;
+
+pub use estimate::{sharded_estimate, strong_scaling, ScalingPoint, ShardedEstimate};
+pub use fft::{sharded_bailey_fft, transpose_bytes};
+pub use scan::{carry_exchange_bytes, sharded_mamba_scan};
+
+use std::ops::Range;
+
+/// Contiguous partition of `n` elements over `chips` shards: the first
+/// `n % chips` shards take one extra element, so any remainder (including a
+/// non-power-of-two one) is spread without padding. Shards past `n` are
+/// empty ranges.
+pub fn shard_ranges(n: usize, chips: usize) -> Vec<Range<usize>> {
+    assert!(chips >= 1, "shard_ranges: need at least one chip");
+    let base = n / chips;
+    let extra = n % chips;
+    let mut out = Vec::with_capacity(chips);
+    let mut lo = 0;
+    for p in 0..chips {
+        let len = base + usize::from(p < extra);
+        out.push(lo..lo + len);
+        lo += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_cover_exactly_once() {
+        for &(n, chips) in &[(0usize, 1usize), (7, 1), (8, 4), (10, 4), (3, 8), (1000, 8)] {
+            let rs = shard_ranges(n, chips);
+            assert_eq!(rs.len(), chips);
+            let mut next = 0;
+            for r in &rs {
+                assert_eq!(r.start, next, "contiguous n={n} chips={chips}");
+                next = r.end;
+            }
+            assert_eq!(next, n, "covers all of n={n}");
+            // Balanced: lengths differ by at most one.
+            let lens: Vec<usize> = rs.iter().map(|r| r.len()).collect();
+            let (min, max) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(max - min <= 1, "balanced {lens:?}");
+        }
+    }
+
+    #[test]
+    fn more_chips_than_elements_leaves_empty_shards() {
+        let rs = shard_ranges(3, 8);
+        assert_eq!(rs.iter().filter(|r| !r.is_empty()).count(), 3);
+        assert_eq!(rs.iter().map(|r| r.len()).sum::<usize>(), 3);
+    }
+}

@@ -1,0 +1,131 @@
+//! Sharded Mamba selective scan: per-chip Blelloch-style local scans with an
+//! inter-chip exclusive-prefix **carry exchange**.
+//!
+//! A first-order linear recurrence `h[t] = a[t]·h[t-1] + b[t]` shards over
+//! chips because its lifted form is associative
+//! ([`crate::scan::recurrence::combine`]): composing a chip's whole
+//! sub-sequence yields one `(A, B)` carry that summarizes it, and an
+//! exclusive prefix of the per-chip carries gives every chip the state its
+//! sub-sequence starts from. Three phases:
+//!
+//! ```text
+//! phase 1 (parallel)   chip p: local inclusive scan of lifted (a,b) steps
+//! phase 2 (exchange)   exclusive prefix of per-chip carries (Blelloch
+//!                      up-sweep + down-sweep, 2·⌈log₂P⌉ rounds on the wire)
+//! phase 3 (parallel)   chip p: h[t] = S_p[t].a · h_in(p) + S_p[t].b
+//! ```
+//!
+//! where `S_p[t]` is chip p's locally scanned composition up to `t` and
+//! `h_in(p)` is the carry-in state. The result is exact against
+//! [`crate::scan::mamba_scan_serial`] — the associative regrouping changes
+//! only floating-point rounding, not the math — for *any* sequence length
+//! (non-power-of-two remainders land in [`super::shard_ranges`]'s balanced
+//! partition) and any chip count. Wire cost is priced by
+//! [`crate::arch::InterchipLink::prefix_exchange_seconds`].
+
+use super::shard_ranges;
+use crate::scan::recurrence::{combine, LinStep};
+
+/// The identity of the lifted recurrence: `h → 1·h + 0`.
+const IDENTITY: LinStep = LinStep { a: 1.0, b: 0.0 };
+
+/// Evaluate the Mamba recurrence `h[t] = a[t]·h[t-1] + b[t]` from `h0 = 0`
+/// sharded over `chips` chips. Exact vs [`crate::scan::mamba_scan_serial`]
+/// up to floating-point regrouping; see the module docs for the dataflow.
+pub fn sharded_mamba_scan(a: &[f64], b: &[f64], chips: usize) -> Vec<f64> {
+    assert_eq!(a.len(), b.len(), "sharded_mamba_scan: a/b length mismatch");
+    assert!(chips >= 1, "sharded_mamba_scan: need at least one chip");
+    let ranges = shard_ranges(a.len(), chips);
+
+    // Phase 1 — per chip, in parallel on hardware: inclusive scan of the
+    // lifted steps. On the RDU each chip runs this as its tiled B-scan
+    // (crate::scan::tiled); here the composition order is identical.
+    let locals: Vec<Vec<LinStep>> = ranges
+        .iter()
+        .map(|r| {
+            let mut acc = IDENTITY;
+            a[r.clone()]
+                .iter()
+                .zip(&b[r.clone()])
+                .map(|(&ai, &bi)| {
+                    acc = combine(acc, LinStep { a: ai, b: bi });
+                    acc
+                })
+                .collect()
+        })
+        .collect();
+
+    // Phase 2 — the carry exchange: exclusive prefix of per-chip totals.
+    // (Numerically order-equivalent to the 2·⌈log₂P⌉-round Blelloch
+    // up/down-sweep the interconnect model prices; P is small.)
+    let mut carry = IDENTITY;
+    let carry_in: Vec<LinStep> = locals
+        .iter()
+        .map(|l| {
+            let c = carry;
+            if let Some(total) = l.last() {
+                carry = combine(carry, *total);
+            }
+            c
+        })
+        .collect();
+
+    // Phase 3 — per chip, in parallel: apply the carry-in state. From
+    // h0 = 0 the carry-in state is just `carry.b`.
+    let mut out = Vec::with_capacity(a.len());
+    for (l, c) in locals.iter().zip(&carry_in) {
+        let h_in = c.b;
+        out.extend(l.iter().map(|s| s.a * h_in + s.b));
+    }
+    out
+}
+
+/// Bytes one carry occupies on the wire: a composed `(A, B)` pair per scan
+/// channel (`channels = N × d_inner` for the selective SSM), `dtype_bytes`
+/// per scalar.
+pub fn carry_exchange_bytes(channels: usize, dtype_bytes: f64) -> f64 {
+    channels as f64 * 2.0 * dtype_bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::mamba_scan_serial;
+    use crate::util::{max_abs_diff, XorShift};
+
+    #[test]
+    fn matches_serial_across_chip_counts() {
+        let mut rng = XorShift::new(61);
+        for &n in &[1usize, 2, 7, 64, 100, 1000] {
+            let a: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 0.99)).collect();
+            let b = rng.vec(n, -1.0, 1.0);
+            let want = mamba_scan_serial(&a, &b);
+            for chips in [1usize, 2, 3, 4, 8] {
+                let got = sharded_mamba_scan(&a, &b, chips);
+                let d = max_abs_diff(&got, &want);
+                assert!(d < 1e-10, "n={n} chips={chips} diff={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_chip_is_the_local_scan() {
+        let a = [0.5, 0.9, 0.2, 0.7];
+        let b = [1.0, -1.0, 0.5, 2.0];
+        let d = max_abs_diff(&sharded_mamba_scan(&a, &b, 1), &mamba_scan_serial(&a, &b));
+        assert!(d < 1e-12);
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        assert!(sharded_mamba_scan(&[], &[], 4).is_empty());
+        let got = sharded_mamba_scan(&[0.5], &[2.0], 8);
+        assert_eq!(got, vec![2.0], "more chips than elements");
+    }
+
+    #[test]
+    fn carry_bytes_scale_with_channels() {
+        // 16 states × 64 channels, fp16: (N·d_inner) pairs of 2 bytes.
+        assert_eq!(carry_exchange_bytes(16 * 64, 2.0), 16.0 * 64.0 * 4.0);
+    }
+}

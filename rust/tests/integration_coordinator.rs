@@ -234,6 +234,7 @@ fn continuous_serving_64_sessions_under_pressure() {
         budget_bytes: budget,
         mamba_shape: mamba,
         hyena_shape: hyena,
+        chips: 1,
     };
     let c = Coordinator::start(
         CoordinatorConfig {
