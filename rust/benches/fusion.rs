@@ -1,0 +1,62 @@
+//! Fusion bench + perf-regression gate: fused vs kernel-by-kernel DFModel
+//! latency for the Hyena and Mamba decoders, serialized to
+//! `BENCH_fusion.json` (run with `--json`; CI archives it as an artifact).
+//!
+//! This target doubles as the gate: it **exits non-zero if the fused
+//! mapping is not strictly faster than the unfused one** at any swept
+//! point, so a regression in the fusion pass fails CI rather than silently
+//! eroding the headline win.
+//!
+//!     cargo bench --bench fusion -- --quick --json
+
+use ssm_rdu::bench::Bencher;
+use ssm_rdu::dfmodel;
+use ssm_rdu::figures;
+
+fn main() {
+    let mut b = Bencher::from_env("fusion");
+
+    // The model-level trajectory: fused vs unfused latency at the ISSUE-3
+    // acceptance point (L = 4K) and two production lengths.
+    let lens = [1usize << 12, 1 << 16, 1 << 20];
+    let points = b.report("fusion_at {4K,64K,1M}", || figures::fusion_at(&lens));
+    figures::fusion_table(&points).print();
+    let mut regressions = Vec::new();
+    for p in &points {
+        let l = p.seq_len;
+        b.metric(&format!("{}_unfused_s_L{l}", p.model), p.unfused_seconds);
+        b.metric(&format!("{}_fused_s_L{l}", p.model), p.fused_seconds);
+        b.metric(&format!("{}_fusion_gain_L{l}", p.model), p.gain());
+        b.metric(&format!("{}_launches_L{l}", p.model), p.launches as f64);
+        b.metric(&format!("{}_staged_fused_bytes_L{l}", p.model), p.staged_fused);
+        let strictly_faster = p.fused_seconds.is_finite() && p.fused_seconds < p.unfused_seconds;
+        if !strictly_faster {
+            regressions.push(format!(
+                "{} @ L={l}: fused {} !< unfused {}",
+                p.model, p.fused_seconds, p.unfused_seconds
+            ));
+        }
+    }
+
+    // Wall-time of the pass itself: fusing + pricing must stay cheap enough
+    // to run per mapping query.
+    {
+        use ssm_rdu::arch::RduConfig;
+        use ssm_rdu::fft::BaileyVariant;
+        use ssm_rdu::workloads::{hyena_decoder, DecoderConfig};
+        let g = hyena_decoder(&DecoderConfig::paper(1 << 20), BaileyVariant::Vector);
+        let cfg = RduConfig::fft_mode();
+        b.bench("fuse_graph hyena (L=1M)", || dfmodel::fuse_graph(&g, &cfg));
+        b.bench("estimate_fused hyena (L=1M)", || dfmodel::estimate_fused(&g, &cfg).unwrap());
+    }
+
+    b.finish();
+
+    if !regressions.is_empty() {
+        eprintln!("FUSION PERF REGRESSION:");
+        for r in &regressions {
+            eprintln!("  {r}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -13,7 +13,18 @@
 //! Each benchmark is warmed up, then timed over enough iterations to cover a
 //! target measurement window; mean / stddev / min are reported. `--quick`
 //! (or env `SSM_RDU_BENCH_QUICK=1`) shrinks the window for CI runs.
+//!
+//! ## Machine-readable output
+//!
+//! [`Bencher::finish`] also emits the run as JSON when asked: pass `--json`
+//! (default path `BENCH_<group>.json` in the working directory) or
+//! `--json=PATH`, or set `SSM_RDU_BENCH_JSON` (`1` → default path,
+//! anything else → that path). Besides the wall-time stats, benches can
+//! attach *model-derived* scalars with [`Bencher::metric`] — the `fusion`
+//! bench records fused/unfused DFModel latencies this way, seeding the
+//! repo's `BENCH_*.json` perf trajectory that CI archives and gates on.
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 /// One benchmark's statistics, in seconds.
@@ -50,6 +61,8 @@ pub struct Bencher {
     warmup: Duration,
     measure: Duration,
     results: Vec<Stats>,
+    /// Named model-derived scalars for the JSON report, in insertion order.
+    metrics: Vec<(String, f64)>,
 }
 
 impl Bencher {
@@ -61,6 +74,7 @@ impl Bencher {
             warmup,
             measure,
             results: Vec::new(),
+            metrics: Vec::new(),
         }
     }
 
@@ -147,13 +161,109 @@ impl Bencher {
         &self.results
     }
 
-    /// Print the closing summary.
+    /// Record a named model-derived scalar (a latency from DFModel, a
+    /// speedup, a byte count) for the JSON report. Names should be unique
+    /// within a group.
+    pub fn metric(&mut self, name: &str, value: f64) {
+        self.metrics.push((name.to_string(), value));
+    }
+
+    /// Serialize the run — group, per-bench wall-time stats, recorded
+    /// metrics — as a self-describing JSON document.
+    pub fn to_json(&self) -> String {
+        fn esc(s: &str) -> String {
+            let mut out = String::with_capacity(s.len());
+            for c in s.chars() {
+                match c {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    '\n' => out.push_str("\\n"),
+                    '\t' => out.push_str("\\t"),
+                    '\r' => out.push_str("\\r"),
+                    c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                    c => out.push(c),
+                }
+            }
+            out
+        }
+        fn num(v: f64) -> String {
+            if v.is_finite() {
+                format!("{v}")
+            } else {
+                "null".to_string()
+            }
+        }
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"ssm-rdu-bench-v1\",\n");
+        s.push_str(&format!("  \"group\": \"{}\",\n", esc(&self.group)));
+        s.push_str("  \"benches\": [\n");
+        for (i, r) in self.results.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"iters\": {}, \"mean_s\": {}, \"stddev_s\": {}, \
+                 \"min_s\": {}}}{}\n",
+                esc(&r.name),
+                r.iters,
+                num(r.mean),
+                num(r.stddev),
+                num(r.min),
+                if i + 1 < self.results.len() { "," } else { "" },
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"metrics\": {\n");
+        for (i, (name, v)) in self.metrics.iter().enumerate() {
+            s.push_str(&format!(
+                "    \"{}\": {}{}\n",
+                esc(name),
+                num(*v),
+                if i + 1 < self.metrics.len() { "," } else { "" },
+            ));
+        }
+        s.push_str("  }\n}\n");
+        s
+    }
+
+    /// Write the JSON report to `path`.
+    pub fn write_json(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+
+    /// Where the JSON report should go, if requested: `--json[=PATH]` in
+    /// argv, or the `SSM_RDU_BENCH_JSON` env var (`1`/`true` → the default
+    /// `BENCH_<group>.json` in the working directory, anything else → the
+    /// given path).
+    fn json_destination(&self) -> Option<PathBuf> {
+        let default = || PathBuf::from(format!("BENCH_{}.json", self.group));
+        for a in std::env::args() {
+            if a == "--json" {
+                return Some(default());
+            }
+            if let Some(p) = a.strip_prefix("--json=") {
+                return Some(PathBuf::from(p));
+            }
+        }
+        match std::env::var("SSM_RDU_BENCH_JSON") {
+            Ok(v) if v == "1" || v.eq_ignore_ascii_case("true") => Some(default()),
+            Ok(v) if !v.is_empty() => Some(PathBuf::from(v)),
+            _ => None,
+        }
+    }
+
+    /// Print the closing summary (and write the JSON report if requested —
+    /// see the module docs).
     pub fn finish(self) {
         println!(
             "\n### {}: {} benchmark(s) complete\n",
             self.group,
             self.results.len()
         );
+        if let Some(path) = self.json_destination() {
+            match self.write_json(&path) {
+                Ok(()) => println!("wrote {}", path.display()),
+                Err(e) => eprintln!("failed to write {}: {e}", path.display()),
+            }
+        }
     }
 }
 
@@ -179,6 +289,40 @@ mod tests {
         assert!(s.min <= s.mean * 1.5 + 1e-9);
         assert!(s.iters >= 5);
         b.finish();
+    }
+
+    #[test]
+    fn json_round_trips_through_the_vendored_parser() {
+        use crate::util::json::Json;
+        let mut b = Bencher::new(
+            "json-test",
+            Duration::from_millis(1),
+            Duration::from_millis(2),
+        );
+        b.bench("tiny \"quoted\"", || 2 + 2);
+        b.metric("fused_s", 1.5e-4);
+        b.metric("unfused_s", 4.5e-4);
+        b.metric("bad", f64::NAN);
+        let doc = b.to_json();
+        let j = Json::parse(&doc).expect("bench JSON must parse");
+        assert_eq!(j.get("group").unwrap().as_str(), Some("json-test"));
+        assert_eq!(j.get("schema").unwrap().as_str(), Some("ssm-rdu-bench-v1"));
+        let benches = j.get("benches").unwrap().as_arr().unwrap();
+        assert_eq!(benches.len(), 1);
+        assert_eq!(benches[0].get("name").unwrap().as_str(), Some("tiny \"quoted\""));
+        assert!(benches[0].get("mean_s").unwrap().as_f64().unwrap() >= 0.0);
+        let metrics = j.get("metrics").unwrap();
+        assert_eq!(metrics.get("unfused_s").unwrap().as_f64(), Some(4.5e-4));
+        assert_eq!(metrics.get("bad"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn empty_group_json_is_valid() {
+        use crate::util::json::Json;
+        let b = Bencher::new("empty", Duration::from_millis(1), Duration::from_millis(1));
+        let j = Json::parse(&b.to_json()).unwrap();
+        assert_eq!(j.get("benches").unwrap().as_arr().unwrap().len(), 0);
+        assert!(j.get("metrics").unwrap().as_obj().unwrap().is_empty());
     }
 
     #[test]

@@ -89,6 +89,40 @@ fn cost_from(flops: f64, state_bytes: f64, io_bytes: f64, cfg: &RduConfig) -> De
     }
 }
 
+/// Spatial-program launches of one decoder layer's per-token graph under
+/// kernel-by-kernel execution — the launches a *fused*, fabric-resident
+/// decode pipeline amortizes away entirely (the configuration stays loaded
+/// between tokens, so [`decode_step`] pays none of them).
+pub const DECODE_KERNELS_PER_LAYER: f64 = 10.0;
+
+/// Modeled cost of one decode step executed kernel-by-kernel (unfused):
+/// each of the layer's ~[`DECODE_KERNELS_PER_LAYER`] kernels launches
+/// separately, paying a fabric reconfiguration, and the inter-kernel
+/// activation vectors round-trip DRAM instead of streaming PCU→PCU.
+///
+/// [`decode_step`] is the fused counterpart (and the default everywhere the
+/// session scheduler attaches hardware time): the per-token pipeline stays
+/// resident on the fabric, so only state + token I/O touch memory.
+pub fn decode_step_unfused(
+    model: ModelKind,
+    dc: &DecoderConfig,
+    layers: usize,
+    cfg: &RduConfig,
+) -> DecodeCost {
+    let fused = decode_step(model, dc, layers, cfg);
+    let l = layers.max(1) as f64;
+    let widest = dc.d_model.max(dc.d_inner()) as f64;
+    // Each inter-kernel boundary stages one activation vector of the
+    // layer's widest width: one DRAM write + one read.
+    let staged = l * (DECODE_KERNELS_PER_LAYER - 1.0) * 2.0 * widest * dc.dtype_bytes;
+    let launches = l * DECODE_KERNELS_PER_LAYER;
+    let mut c = cost_from(fused.flops, fused.state_bytes, fused.io_bytes + staged, cfg);
+    c.compute_seconds += launches * super::throughput::reconfig_seconds(cfg);
+    c.seconds = c.compute_seconds.max(c.memory_seconds);
+    c.cycles = c.seconds * cfg.spec.clock_hz;
+    c
+}
+
 /// Modeled cost of one decode step sharded over `chips` chips.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ShardedDecodeCost {
@@ -167,6 +201,28 @@ mod tests {
         let short = decode_step(ModelKind::Mamba, &DecoderConfig::paper(1 << 10), 8, &cfg);
         let long = decode_step(ModelKind::Mamba, &DecoderConfig::paper(1 << 20), 8, &cfg);
         assert_eq!(short, long);
+    }
+
+    #[test]
+    fn unfused_decode_strictly_slower() {
+        // The fused (fabric-resident) decode pipeline must beat
+        // kernel-by-kernel launches for every model on every config.
+        for cfg in [RduConfig::baseline(), RduConfig::hs_scan_mode(), RduConfig::fft_mode()] {
+            for model in ModelKind::ALL {
+                let dc = DecoderConfig::mamba_full(1 << 16);
+                let fused = decode_step(model, &dc, 8, &cfg);
+                let unfused = decode_step_unfused(model, &dc, 8, &cfg);
+                assert!(
+                    unfused.seconds > fused.seconds,
+                    "{model} on {}: unfused {} !> fused {}",
+                    cfg.name(),
+                    unfused.seconds,
+                    fused.seconds
+                );
+                assert!(unfused.io_bytes > fused.io_bytes);
+                assert_eq!(unfused.flops, fused.flops, "fusion changes no arithmetic");
+            }
+        }
     }
 
     #[test]

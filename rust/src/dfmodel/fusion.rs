@@ -1,0 +1,420 @@
+//! Fusion pass for the dataflow mapper: cluster producer→consumer *stream*
+//! chains (FFT → elementwise → iFFT, scan → gate → proj, the MLP spine)
+//! into single spatially-mapped sections whose intermediate tensors stay in
+//! PCU/PMU SRAM instead of round-tripping DRAM between kernel launches.
+//!
+//! The pass is a scheduling transform, not a numerics transform: a fused
+//! cluster executes exactly the kernels of its members, in the same
+//! dataflow order, as one pipelined spatial program (validated bit-exactly
+//! by the fused PCU programs in [`crate::pcusim::programs`]). What changes
+//! is the *launch granularity* the performance model prices:
+//!
+//! * **unfused** ([`FusionPlan::unfused`]) — every kernel is its own
+//!   section: one fabric configuration per kernel, every intermediate
+//!   tensor written to and re-read from DRAM (paper Fig. 1C,
+//!   kernel-by-kernel execution);
+//! * **fused** ([`fuse_graph`]) — clusters grown greedily along stream
+//!   edges, so a section's off-chip traffic drops to its streamed chain's
+//!   first input plus last output and its member kernels overlap as
+//!   pipeline stages. Buffered side operands (gating branches, residual
+//!   skips) still round-trip DRAM even inside a cluster — the capacity
+//!   model charges only per-kernel tiles, so claiming SRAM residency for
+//!   whole held tensors would be unpaid-for (see [`FusionPlan::edge_fused`]).
+//!
+//! Cluster growth obeys three legality rules, checked per candidate merge:
+//!
+//! 1. **streamability** — a kernel only joins the cluster(s) of its
+//!    stream-edge producers ([`crate::graph::Edge::stream`]);
+//! 2. **capacity** — the merged cluster's resident bytes (weights +
+//!    corner-turn buffers + stream tiles, [`super::mapping::resident_bytes`])
+//!    fit in chip SRAM, and its kernel count fits the PCU budget;
+//! 3. **convexity** — the merge must keep the cluster quotient graph
+//!    acyclic, otherwise the fused sections could not be scheduled
+//!    back-to-back.
+//!
+//! [`super::perf::estimate_fused`] / [`super::perf::estimate_unfused`]
+//! price the resulting plans; `simulate --fuse`, the `fusion` bench and
+//! `figures::fusion` report the end-to-end win.
+
+use super::mapping::resident_bytes;
+use crate::arch::RduConfig;
+use crate::graph::{Graph, KernelId};
+
+/// A partition of a graph's kernels into fusion clusters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FusionPlan {
+    /// Kernel clusters in a valid topological order; each becomes one
+    /// section (one spatial program) of the mapping.
+    pub clusters: Vec<Vec<KernelId>>,
+    /// For every kernel, the index of its cluster in `clusters`.
+    pub cluster_of: Vec<usize>,
+}
+
+impl FusionPlan {
+    /// The kernel-by-kernel plan: every kernel its own cluster, in
+    /// topological order — the unfused baseline the fusion win is measured
+    /// against.
+    pub fn unfused(g: &Graph) -> Self {
+        let order = g.topo_order();
+        let mut cluster_of = vec![0usize; g.kernels.len()];
+        for (c, &k) in order.iter().enumerate() {
+            cluster_of[k] = c;
+        }
+        Self { clusters: order.into_iter().map(|k| vec![k]).collect(), cluster_of }
+    }
+
+    /// Is edge `e` fused — i.e. a *stream* edge whose endpoints share a
+    /// cluster, so its tensor flows producer→consumer through SRAM tiles
+    /// and never touches DRAM?
+    ///
+    /// Deliberately restricted to stream edges: a buffered intra-cluster
+    /// edge (a gating second operand, a residual skip) must hold its whole
+    /// tensor while the pipeline drains, and the capacity model only
+    /// charges per-kernel tiles — so those edges keep paying the DRAM
+    /// round-trip rather than claiming SRAM residency the capacity check
+    /// never accounted for.
+    pub fn edge_fused(&self, g: &Graph, e: usize) -> bool {
+        let edge = &g.edges[e];
+        match (edge.src, edge.dst) {
+            (Some(s), Some(d)) => edge.stream && self.cluster_of[s] == self.cluster_of[d],
+            _ => false,
+        }
+    }
+
+    /// Bytes of intermediate tensors kept on-chip by this plan.
+    pub fn fused_intermediate_bytes(&self, g: &Graph) -> f64 {
+        (0..g.edges.len())
+            .filter(|&e| self.edge_fused(g, e))
+            .map(|e| g.edges[e].bytes)
+            .sum()
+    }
+
+    /// Bytes of intermediate tensors staged through DRAM by this plan —
+    /// every internal edge that crosses a cluster boundary.
+    pub fn staged_intermediate_bytes(&self, g: &Graph) -> f64 {
+        g.intermediate_bytes() - self.fused_intermediate_bytes(g)
+    }
+
+    /// Number of fabric configurations (spatial-program launches) the plan
+    /// requires per forward pass.
+    pub fn launches(&self) -> usize {
+        self.clusters.len()
+    }
+}
+
+/// Would assigning kernel `k` to cluster `target` — after merging every
+/// cluster in `merge` into `target` — keep the cluster quotient graph
+/// acyclic? `assign[i]` holds the current cluster of kernel `i`
+/// (`usize::MAX` = unassigned; unassigned kernels other than `k` are
+/// ignored, which is safe because clusters only ever contain kernels that
+/// precede `k` in topological order).
+fn merge_keeps_acyclic(
+    g: &Graph,
+    assign: &[usize],
+    merge: &[usize],
+    target: usize,
+    k: KernelId,
+    n_clusters: usize,
+) -> bool {
+    let resolve = |kernel: KernelId| -> Option<usize> {
+        if kernel == k {
+            return Some(target);
+        }
+        match assign[kernel] {
+            usize::MAX => None,
+            c if merge.contains(&c) => Some(target),
+            c => Some(c),
+        }
+    };
+    // Kahn's algorithm over the quotient graph.
+    let mut indeg = vec![0usize; n_clusters];
+    let mut succ: Vec<Vec<usize>> = vec![Vec::new(); n_clusters];
+    for e in &g.edges {
+        if let (Some(s), Some(d)) = (e.src, e.dst) {
+            if let (Some(cs), Some(cd)) = (resolve(s), resolve(d)) {
+                if cs != cd {
+                    succ[cs].push(cd);
+                    indeg[cd] += 1;
+                }
+            }
+        }
+    }
+    let mut ready: Vec<usize> = (0..n_clusters).filter(|&c| indeg[c] == 0).collect();
+    let mut seen = 0usize;
+    while let Some(c) = ready.pop() {
+        seen += 1;
+        for &d in &succ[c] {
+            indeg[d] -= 1;
+            if indeg[d] == 0 {
+                ready.push(d);
+            }
+        }
+    }
+    seen == n_clusters
+}
+
+/// Greedily cluster `g`'s fusable stream chains for `cfg`.
+///
+/// Kernels are visited in topological order; each kernel tries to join the
+/// merged cluster of *all* its stream-edge producers (so a two-input
+/// elementwise stage like Hyena's frequency-domain multiply pulls both
+/// forward-FFT clusters together). A merge that would breach SRAM, exceed
+/// the chip's PCU count, or create a cycle between clusters is declined and
+/// the kernel starts its own cluster — at long sequence lengths this is
+/// what splits the Hyena conv pipeline when six corner-turn buffers no
+/// longer co-reside.
+pub fn fuse_graph(g: &Graph, cfg: &RduConfig) -> FusionPlan {
+    let n = g.kernels.len();
+    let sram = cfg.spec.sram_bytes() as f64;
+    let res: Vec<f64> = (0..n).map(|i| resident_bytes(g, i, cfg)).collect();
+
+    // Growing state: cluster member lists (never reordered — members are
+    // appended in topological order) plus per-cluster byte totals.
+    let mut members: Vec<Vec<KernelId>> = Vec::new();
+    let mut bytes: Vec<f64> = Vec::new();
+    let mut assign = vec![usize::MAX; n];
+
+    for &k in &g.topo_order() {
+        let mut cands: Vec<usize> =
+            g.stream_predecessors(k).iter().map(|&p| assign[p]).collect();
+        cands.sort_unstable();
+        cands.dedup();
+
+        let joined = if cands.is_empty() {
+            false
+        } else {
+            let target = cands[0];
+            let merged_bytes: f64 = res[k] + cands.iter().map(|&c| bytes[c]).sum::<f64>();
+            let merged_len: usize = 1 + cands.iter().map(|&c| members[c].len()).sum::<usize>();
+            merged_bytes <= sram
+                && merged_len <= cfg.spec.n_pcu
+                && merge_keeps_acyclic(g, &assign, &cands[1..], target, k, members.len())
+        };
+
+        if joined {
+            let target = cands[0];
+            // Fold the other candidate clusters into `target`, preserving
+            // each member list's topological order (later clusters hold
+            // later kernels is *not* guaranteed across merged chains, but
+            // within-section order is irrelevant to the pipelined model).
+            for &c in &cands[1..] {
+                let moved = std::mem::take(&mut members[c]);
+                for &m in &moved {
+                    assign[m] = target;
+                }
+                members[target].extend(moved);
+                bytes[target] += std::mem::replace(&mut bytes[c], 0.0);
+            }
+            members[target].push(k);
+            bytes[target] += res[k];
+            assign[k] = target;
+        } else {
+            assign[k] = members.len();
+            members.push(vec![k]);
+            bytes.push(res[k]);
+        }
+    }
+
+    // Drop emptied clusters and order the survivors topologically so the
+    // mapper can schedule the sections back-to-back.
+    let live: Vec<usize> = (0..members.len()).filter(|&c| !members[c].is_empty()).collect();
+    let index_of = |c: usize| live.iter().position(|&x| x == c).expect("live cluster");
+    let m = live.len();
+    let mut indeg = vec![0usize; m];
+    let mut succ: Vec<Vec<usize>> = vec![Vec::new(); m];
+    for e in &g.edges {
+        if let (Some(s), Some(d)) = (e.src, e.dst) {
+            let (cs, cd) = (index_of(assign[s]), index_of(assign[d]));
+            if cs != cd {
+                succ[cs].push(cd);
+                indeg[cd] += 1;
+            }
+        }
+    }
+    let mut ready: Vec<usize> = (0..m).filter(|&c| indeg[c] == 0).collect();
+    let mut topo = Vec::with_capacity(m);
+    while let Some(c) = ready.pop() {
+        topo.push(c);
+        for &d in &succ[c] {
+            indeg[d] -= 1;
+            if indeg[d] == 0 {
+                ready.push(d);
+            }
+        }
+    }
+    assert_eq!(topo.len(), m, "fusion produced a cyclic cluster graph");
+
+    let mut clusters = Vec::with_capacity(m);
+    let mut cluster_of = vec![0usize; n];
+    for (pos, &c) in topo.iter().enumerate() {
+        let ids = std::mem::take(&mut members[live[c]]);
+        for &k in &ids {
+            cluster_of[k] = pos;
+        }
+        clusters.push(ids);
+    }
+    FusionPlan { clusters, cluster_of }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::BaileyVariant;
+    use crate::graph::{Kernel, OpClass};
+    use crate::workloads::{hyena_decoder, mamba_decoder, DecoderConfig, ScanVariant};
+
+    fn cfg() -> RduConfig {
+        RduConfig::fft_mode()
+    }
+
+    #[test]
+    fn unfused_plan_is_kernel_by_kernel() {
+        let g = hyena_decoder(&DecoderConfig::paper(1 << 12), BaileyVariant::Vector);
+        let p = FusionPlan::unfused(&g);
+        assert_eq!(p.launches(), g.kernels.len());
+        assert_eq!(p.fused_intermediate_bytes(&g), 0.0);
+        assert!((p.staged_intermediate_bytes(&g) - g.intermediate_bytes()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fusion_covers_all_kernels_exactly_once() {
+        for g in [
+            hyena_decoder(&DecoderConfig::paper(1 << 12), BaileyVariant::Vector),
+            mamba_decoder(&DecoderConfig::paper(1 << 12), ScanVariant::Parallel),
+        ] {
+            let p = fuse_graph(&g, &cfg());
+            let mut seen = vec![false; g.kernels.len()];
+            for (ci, c) in p.clusters.iter().enumerate() {
+                assert!(!c.is_empty());
+                for &k in c {
+                    assert!(!seen[k], "kernel {k} in two clusters");
+                    seen[k] = true;
+                    assert_eq!(p.cluster_of[k], ci);
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "{}", g.name);
+        }
+    }
+
+    #[test]
+    fn clusters_are_topologically_ordered_and_acyclic() {
+        let g = hyena_decoder(&DecoderConfig::paper(1 << 14), BaileyVariant::Vector);
+        let p = fuse_graph(&g, &cfg());
+        for e in &g.edges {
+            if let (Some(s), Some(d)) = (e.src, e.dst) {
+                assert!(
+                    p.cluster_of[s] <= p.cluster_of[d],
+                    "edge {s}->{d} goes backwards across clusters"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hyena_fft_conv_chains_fuse() {
+        // The issue's headline chain: FFT → freq-multiply → iFFT must land
+        // in one cluster (the freqmul stage pulls both forward FFTs in).
+        let g = hyena_decoder(&DecoderConfig::paper(1 << 12), BaileyVariant::Vector);
+        let p = fuse_graph(&g, &cfg());
+        let id = |name: &str| g.kernels.iter().position(|k| k.name == name).unwrap();
+        for tag in ["conv1", "conv2"] {
+            let c = p.cluster_of[id(&format!("{tag}.fft_x"))];
+            assert_eq!(c, p.cluster_of[id(&format!("{tag}.fft_k"))], "{tag}");
+            assert_eq!(c, p.cluster_of[id(&format!("{tag}.freqmul"))], "{tag}");
+            assert_eq!(c, p.cluster_of[id(&format!("{tag}.ifft"))], "{tag}");
+        }
+        assert!(p.launches() < g.kernels.len() / 2, "{} launches", p.launches());
+    }
+
+    #[test]
+    fn mamba_scan_gate_proj_chain_fuses() {
+        let g = mamba_decoder(&DecoderConfig::paper(1 << 12), ScanVariant::Parallel);
+        let p = fuse_graph(&g, &cfg());
+        let id = |name: &str| g.kernels.iter().position(|k| k.name == name).unwrap();
+        let c = p.cluster_of[id("selective_scan")];
+        assert_eq!(c, p.cluster_of[id("c_contract")]);
+        assert_eq!(c, p.cluster_of[id("gate.z")]);
+        assert_eq!(c, p.cluster_of[id("out_proj")]);
+    }
+
+    #[test]
+    fn fused_plus_staged_equals_intermediates() {
+        let g = mamba_decoder(&DecoderConfig::paper(1 << 14), ScanVariant::CScan);
+        let p = fuse_graph(&g, &cfg());
+        let total = p.fused_intermediate_bytes(&g) + p.staged_intermediate_bytes(&g);
+        assert!((total - g.intermediate_bytes()).abs() / total < 1e-12);
+        assert!(p.fused_intermediate_bytes(&g) > 0.0, "something must fuse");
+    }
+
+    #[test]
+    fn capacity_limits_split_clusters_at_long_l() {
+        // At 1M tokens the six FFT corner-turn buffers cannot co-reside in
+        // 780 MB of SRAM, so the conv pipeline must split — but every
+        // cluster must still fit.
+        let g = hyena_decoder(&DecoderConfig::paper(1 << 20), BaileyVariant::Vector);
+        let c = cfg();
+        let p = fuse_graph(&g, &c);
+        let sram = c.spec.sram_bytes() as f64;
+        for cl in &p.clusters {
+            let b: f64 = cl.iter().map(|&k| super::resident_bytes(&g, k, &c)).sum();
+            assert!(b <= sram, "cluster over SRAM: {b}");
+        }
+        let small_graph = hyena_decoder(&DecoderConfig::paper(1 << 12), BaileyVariant::Vector);
+        let small = fuse_graph(&small_graph, &c);
+        assert!(p.launches() > small.launches(), "long L must section more");
+    }
+
+    #[test]
+    fn no_stream_edges_means_no_fusion() {
+        let mut g = Graph::new("plain");
+        let a = g.add(Kernel::new("a", OpClass::Gemm, 10.0, 1.0, 1.0));
+        let b = g.add(Kernel::new("b", OpClass::Gemm, 10.0, 1.0, 1.0));
+        g.input(a, 1.0);
+        g.connect(a, b, 1.0); // non-stream
+        g.output(b, 1.0);
+        let p = fuse_graph(&g, &cfg());
+        assert_eq!(p.launches(), 2);
+        assert_eq!(p.fused_intermediate_bytes(&g), 0.0);
+    }
+
+    #[test]
+    fn stream_chain_fuses_into_one_cluster() {
+        let mut g = Graph::new("chain");
+        let a = g.add(Kernel::new("a", OpClass::Gemm, 10.0, 1.0, 1.0));
+        let b = g.add(Kernel::new("b", OpClass::Elementwise, 10.0, 1.0, 1.0));
+        let c = g.add(Kernel::new("c", OpClass::Gemm, 10.0, 1.0, 1.0));
+        g.input(a, 1.0);
+        g.connect_stream(a, b, 1.0);
+        g.connect_stream(b, c, 1.0);
+        g.output(c, 1.0);
+        let p = fuse_graph(&g, &cfg());
+        assert_eq!(p.launches(), 1);
+        assert_eq!(p.clusters[0], vec![a, b, c]);
+        assert_eq!(p.staged_intermediate_bytes(&g), 0.0);
+    }
+
+    #[test]
+    fn diamond_with_side_path_stays_acyclic() {
+        // a →(stream) b → (stream) d, a →(plain) c →(stream) d: merging d
+        // with {a,b} and {c} must not create a cycle; the pass may merge
+        // them all (c's only in-edge is from a's cluster, which is fine) —
+        // whatever it picks, the quotient graph must stay a DAG.
+        let mut g = Graph::new("diamond");
+        let a = g.add(Kernel::new("a", OpClass::Gemm, 1.0, 1.0, 1.0));
+        let b = g.add(Kernel::new("b", OpClass::Elementwise, 1.0, 1.0, 1.0));
+        let c = g.add(Kernel::new("c", OpClass::Elementwise, 1.0, 1.0, 1.0));
+        let d = g.add(Kernel::new("d", OpClass::Gemm, 1.0, 1.0, 1.0));
+        g.input(a, 1.0);
+        g.connect_stream(a, b, 1.0);
+        g.connect(a, c, 1.0);
+        g.connect_stream(b, d, 1.0);
+        g.connect_stream(c, d, 1.0);
+        g.output(d, 1.0);
+        let p = fuse_graph(&g, &cfg());
+        for e in &g.edges {
+            if let (Some(s), Some(dd)) = (e.src, e.dst) {
+                assert!(p.cluster_of[s] <= p.cluster_of[dd]);
+            }
+        }
+    }
+}

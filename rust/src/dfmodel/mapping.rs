@@ -49,7 +49,7 @@ pub struct Mapping {
 #[derive(Debug, Clone, PartialEq)]
 pub enum MapFailure {
     /// A single kernel's resident state exceeds total SRAM.
-    KernelTooLarge { kernel: KernelId, bytes: f64, sram: f64 },
+    KernelTooLarge { kernel: KernelId, name: String, bytes: f64, sram: f64 },
     /// Empty graph.
     EmptyGraph,
 }
@@ -57,8 +57,12 @@ pub enum MapFailure {
 impl std::fmt::Display for MapFailure {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            MapFailure::KernelTooLarge { kernel, bytes, sram } => {
-                write!(f, "kernel {kernel} needs {bytes:.3e} B resident > {sram:.3e} B SRAM")
+            MapFailure::KernelTooLarge { kernel, name, bytes, sram } => {
+                write!(
+                    f,
+                    "kernel `{name}` (id {kernel}) needs {bytes:.3e} B resident > \
+                     {sram:.3e} B chip SRAM"
+                )
             }
             MapFailure::EmptyGraph => write!(f, "empty graph"),
         }
@@ -134,6 +138,22 @@ fn proportional(total: usize, weights: &[f64], fixed: &[bool]) -> Vec<usize> {
     alloc
 }
 
+/// SRAM-capacity check shared by the sectioning passes: error out — naming
+/// the offending kernel — when a single kernel cannot fit on the chip.
+fn check_kernel_fits(g: &Graph, id: KernelId, cfg: &RduConfig) -> Result<f64, MapFailure> {
+    let sram = cfg.spec.sram_bytes() as f64;
+    let rb = resident_bytes(g, id, cfg);
+    if rb > sram {
+        return Err(MapFailure::KernelTooLarge {
+            kernel: id,
+            name: g.kernels[id].name.clone(),
+            bytes: rb,
+            sram,
+        });
+    }
+    Ok(rb)
+}
+
 /// Map `g` onto `cfg`, sectioning if the resident state exceeds SRAM.
 pub fn map_graph(g: &Graph, cfg: &RduConfig) -> Result<Mapping, MapFailure> {
     if g.kernels.is_empty() {
@@ -147,10 +167,7 @@ pub fn map_graph(g: &Graph, cfg: &RduConfig) -> Result<Mapping, MapFailure> {
     let mut cur: Vec<KernelId> = Vec::new();
     let mut cur_bytes = 0.0;
     for &id in &order {
-        let rb = resident_bytes(g, id, cfg);
-        if rb > sram {
-            return Err(MapFailure::KernelTooLarge { kernel: id, bytes: rb, sram });
-        }
+        let rb = check_kernel_fits(g, id, cfg)?;
         let too_full = cur_bytes + rb > sram || cur.len() + 1 > cfg.spec.n_pcu;
         if too_full && !cur.is_empty() {
             sections_ids.push(std::mem::take(&mut cur));
@@ -163,7 +180,35 @@ pub fn map_graph(g: &Graph, cfg: &RduConfig) -> Result<Mapping, MapFailure> {
         sections_ids.push(cur);
     }
 
-    // Pass 2: balanced PCU/PMU allocation per section.
+    Ok(allocate(g, cfg, sections_ids))
+}
+
+/// Map `g` onto `cfg` with the section partition chosen by a fusion plan:
+/// every cluster becomes one section that is configured onto the fabric as
+/// a single spatial program. Unlike [`map_graph`]'s greedy packing, the
+/// partition is caller-defined — [`super::fusion::fuse_graph`] guarantees
+/// each cluster respects the SRAM and PCU-count capacity; this function
+/// re-checks the per-kernel bound so pathological graphs still fail with a
+/// named kernel instead of a nonsensical mapping.
+pub fn map_graph_plan(
+    g: &Graph,
+    cfg: &RduConfig,
+    clusters: &[Vec<KernelId>],
+) -> Result<Mapping, MapFailure> {
+    if g.kernels.is_empty() || clusters.iter().all(|c| c.is_empty()) {
+        return Err(MapFailure::EmptyGraph);
+    }
+    for &id in clusters.iter().flatten() {
+        check_kernel_fits(g, id, cfg)?;
+    }
+    let sections: Vec<Vec<KernelId>> =
+        clusters.iter().filter(|c| !c.is_empty()).cloned().collect();
+    Ok(allocate(g, cfg, sections))
+}
+
+/// Pass 2: balanced PCU/PMU allocation per section — each section gets the
+/// whole chip while it is configured.
+fn allocate(g: &Graph, cfg: &RduConfig, sections_ids: Vec<Vec<KernelId>>) -> Mapping {
     let mut sections = Vec::with_capacity(sections_ids.len());
     for ids in sections_ids {
         let demands: Vec<f64> = ids.iter().map(|&i| pcu_seconds(&g.kernels[i], cfg)).collect();
@@ -195,7 +240,7 @@ pub fn map_graph(g: &Graph, cfg: &RduConfig) -> Result<Mapping, MapFailure> {
         });
     }
 
-    Ok(Mapping { sections, cfg_name: cfg.name() })
+    Mapping { sections, cfg_name: cfg.name() }
 }
 
 impl Mapping {
@@ -297,5 +342,63 @@ mod tests {
     fn empty_graph_rejected() {
         let g = Graph::new("empty");
         assert_eq!(map_graph(&g, &RduConfig::baseline()), Err(MapFailure::EmptyGraph));
+        assert_eq!(map_graph_plan(&g, &RduConfig::baseline(), &[]), Err(MapFailure::EmptyGraph));
+    }
+
+    #[test]
+    fn oversized_kernel_rejected_by_name() {
+        use crate::graph::{Kernel, OpClass};
+        let cfg = RduConfig::baseline();
+        let sram = cfg.spec.sram_bytes() as f64;
+        let mut g = Graph::new("huge");
+        // A kernel whose resident weights alone exceed total chip SRAM.
+        let k = g.add(
+            Kernel::new("giant_embedding", OpClass::Gemm, 1.0, 1.0, 1.0).with_weights(2.0 * sram),
+        );
+        g.input(k, 1.0);
+        g.output(k, 1.0);
+        let err = map_graph(&g, &cfg).unwrap_err();
+        match &err {
+            MapFailure::KernelTooLarge { kernel, name, bytes, sram: s } => {
+                assert_eq!(*kernel, k);
+                assert_eq!(name, "giant_embedding");
+                assert!(*bytes > *s);
+            }
+            other => panic!("expected KernelTooLarge, got {other:?}"),
+        }
+        // The failure message names the offending kernel.
+        let msg = err.to_string();
+        assert!(msg.contains("giant_embedding"), "{msg}");
+        // The plan-driven mapper fails identically.
+        let err2 = map_graph_plan(&g, &cfg, &[vec![k]]).unwrap_err();
+        assert_eq!(err, err2);
+    }
+
+    #[test]
+    fn plan_mapping_sections_follow_clusters() {
+        let cfg = RduConfig::fft_mode();
+        let g = hyena_decoder(&DecoderConfig::paper(1 << 14), BaileyVariant::Vector);
+        let n = g.kernels.len();
+        // Kernel-by-kernel plan: one section per kernel, whole chip each.
+        let singles: Vec<Vec<usize>> = g.topo_order().into_iter().map(|i| vec![i]).collect();
+        let m = map_graph_plan(&g, &cfg, &singles).unwrap();
+        assert_eq!(m.sections.len(), n);
+        for s in &m.sections {
+            assert_eq!(s.kernels.len(), 1);
+            let a = &s.allocs[0];
+            // A lone divisible kernel gets every PCU on the chip.
+            if !is_serial(&g.kernels[a.kernel]) {
+                assert_eq!(a.pcus, cfg.spec.n_pcu);
+            } else {
+                assert_eq!(a.pcus, 1);
+            }
+        }
+        // A two-cluster plan yields two sections in the given order.
+        let order = g.topo_order();
+        let (left, right) = order.split_at(order.len() / 2);
+        let m2 = map_graph_plan(&g, &cfg, &[left.to_vec(), right.to_vec()]).unwrap();
+        assert_eq!(m2.sections.len(), 2);
+        assert_eq!(m2.sections[0].kernels, left);
+        assert_eq!(m2.sections[1].kernels, right);
     }
 }

@@ -9,8 +9,14 @@
 //!   [`crate::pcusim::utilization`].
 //! * [`mapping`] — the mapping optimizer: balanced PCU/PMU allocation and
 //!   SRAM-capacity sectioning.
+//! * [`fusion`] — the fusion pass: clusters producer→consumer stream chains
+//!   (FFT→eltwise→iFFT, scan→gate→proj) into single spatially-mapped
+//!   sections whose intermediates stay in PCU/PMU SRAM.
 //! * [`perf`] — the latency estimator: per-section pipeline bottleneck,
-//!   overlapped DRAM streaming, per-kernel and per-op-class breakdowns.
+//!   overlapped DRAM streaming, per-kernel and per-op-class breakdowns;
+//!   [`estimate_fused`]/[`estimate_unfused`] price fusion-plan launches
+//!   (fabric reconfigurations + DRAM-staged cut tensors) so the fusion win
+//!   is a modeled, testable number.
 //! * [`decode`] — the decode-step cost hook: O(1)-per-token cycle/latency
 //!   model that drives the [`crate::session`] continuous-batching
 //!   scheduler in simulation, without a PJRT backend; `decode_step_sharded`
@@ -23,13 +29,20 @@
 //! [`crate::arch::InterchipLink`] communication term.
 
 pub mod decode;
+pub mod fusion;
 pub mod mapping;
 pub mod perf;
 pub mod sweep;
 pub mod throughput;
 
-pub use decode::{decode_step, decode_step_sharded, DecodeCost, ShardedDecodeCost, DECODE_UTIL};
-pub use mapping::{map_graph, Allocation, MapFailure, Mapping, Section};
-pub use perf::{estimate, Estimate, KernelEstimate};
-pub use sweep::{sweep_bandwidth, sweep_pcu_count, sweep_stages, SweepPoint};
-pub use throughput::{kernel_rate, pcu_seconds, Rate};
+pub use decode::{
+    decode_step, decode_step_sharded, decode_step_unfused, DecodeCost, ShardedDecodeCost,
+    DECODE_KERNELS_PER_LAYER, DECODE_UTIL,
+};
+pub use fusion::{fuse_graph, FusionPlan};
+pub use mapping::{map_graph, map_graph_plan, Allocation, MapFailure, Mapping, Section};
+pub use perf::{
+    estimate, estimate_fused, estimate_plan, estimate_unfused, Estimate, KernelEstimate,
+};
+pub use sweep::{fusion_gain_at, sweep_bandwidth, sweep_pcu_count, sweep_stages, SweepPoint};
+pub use throughput::{kernel_rate, pcu_seconds, reconfig_seconds, Rate, RECONFIG_CYCLES};

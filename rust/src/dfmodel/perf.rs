@@ -9,7 +9,9 @@
 //! intermediates never leave the chip. Compute and memory streams overlap;
 //! the section takes `max(compute, memory)`.
 
-use super::mapping::{map_graph, MapFailure, Mapping};
+use super::fusion::{fuse_graph, FusionPlan};
+use super::mapping::{map_graph, map_graph_plan, MapFailure, Mapping};
+use super::throughput::reconfig_seconds;
 use crate::arch::RduConfig;
 use crate::graph::{Graph, OpClass};
 use std::collections::BTreeMap;
@@ -151,6 +153,78 @@ pub fn estimate_with_mapping(g: &Graph, cfg: &RduConfig, mapping: &Mapping) -> E
     }
 }
 
+/// Launch-granularity estimate of a fusion plan: each cluster is one
+/// spatial-program launch (one fabric reconfiguration + a pipelined section
+/// whose steady-state interval is its bottleneck stage), and every
+/// intermediate tensor that crosses a cluster boundary is staged through
+/// DRAM (written by the producer's section, re-read by the consumer's).
+///
+/// This sits between the two classical models: with the
+/// [`FusionPlan::unfused`] plan it prices kernel-by-kernel execution
+/// (paper Fig. 1C — every intermediate round-trips DRAM, one launch per
+/// kernel), and as clusters grow it approaches the idealized whole-graph
+/// dataflow bound of [`estimate`] (Fig. 1B) plus one reconfiguration.
+pub fn estimate_plan(
+    g: &Graph,
+    cfg: &RduConfig,
+    plan: &FusionPlan,
+) -> Result<Estimate, MapFailure> {
+    let mapping = map_graph_plan(g, cfg, &plan.clusters)?;
+    let bw = cfg.spec.dram_bandwidth();
+
+    // Memory: external I/O + weights, plus a DRAM write + read for every
+    // intermediate tensor the plan does not keep on-chip.
+    let staged = plan.staged_intermediate_bytes(g);
+    let io_bytes = g.external_input_bytes()
+        + g.external_output_bytes()
+        + g.total_weight_bytes()
+        + 2.0 * staged;
+    let memory_seconds = io_bytes / bw;
+
+    // Compute: the sections run back-to-back, each paying one fabric
+    // reconfiguration plus its pipeline interval.
+    let compute_seconds =
+        mapping.compute_seconds() + plan.launches() as f64 * reconfig_seconds(cfg);
+    let total_seconds = compute_seconds.max(memory_seconds);
+
+    let mut kernels = Vec::with_capacity(g.kernels.len());
+    for s in &mapping.sections {
+        for a in &s.allocs {
+            let k = &g.kernels[a.kernel];
+            kernels.push(KernelEstimate {
+                name: k.name.clone(),
+                op: k.op,
+                flops: k.flops,
+                pcus: a.pcus,
+                seconds: a.time,
+            });
+        }
+    }
+
+    Ok(Estimate {
+        graph_name: g.name.clone(),
+        cfg_name: cfg.name(),
+        total_seconds,
+        compute_seconds,
+        memory_seconds,
+        sections: mapping.sections.len(),
+        kernels,
+    })
+}
+
+/// Launch-granularity estimate under the fusion pass: stream chains fused
+/// into single sections (intermediates SRAM-resident), cut tensors staged.
+pub fn estimate_fused(g: &Graph, cfg: &RduConfig) -> Result<Estimate, MapFailure> {
+    estimate_plan(g, cfg, &fuse_graph(g, cfg))
+}
+
+/// Launch-granularity estimate of kernel-by-kernel execution: one launch
+/// per kernel, every intermediate through DRAM — the unfused baseline the
+/// fusion speedup is measured against.
+pub fn estimate_unfused(g: &Graph, cfg: &RduConfig) -> Result<Estimate, MapFailure> {
+    estimate_plan(g, cfg, &FusionPlan::unfused(g))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -258,5 +332,69 @@ mod tests {
         let cfg = paper_1m();
         let e = estimate(&hyena_decoder(&cfg, BaileyVariant::Vector), &RduConfig::baseline()).unwrap();
         assert!(e.bottleneck().contains("fft"), "bottleneck={}", e.bottleneck());
+    }
+
+    #[test]
+    fn fused_strictly_beats_unfused_across_lengths() {
+        // The ISSUE-3 acceptance shape: fusion must be a strict win for both
+        // SSM decoders at L = 4K, and keep winning as L grows.
+        for l in [1 << 12, 1 << 16, 1 << 20] {
+            let dc = DecoderConfig::paper(l);
+            let hy = hyena_decoder(&dc, BaileyVariant::Vector);
+            let ma = mamba_decoder(&dc, ScanVariant::Parallel);
+            for (g, cfg) in [(&hy, RduConfig::fft_mode()), (&ma, RduConfig::hs_scan_mode())] {
+                let f = estimate_fused(g, &cfg).unwrap();
+                let u = estimate_unfused(g, &cfg).unwrap();
+                assert!(
+                    f.total_seconds < u.total_seconds,
+                    "L={l} {}: fused {} !< unfused {}",
+                    g.name,
+                    f.total_seconds,
+                    u.total_seconds
+                );
+                assert!(f.sections < u.sections, "fusion must reduce launches");
+                assert!(f.memory_seconds <= u.memory_seconds);
+            }
+        }
+    }
+
+    #[test]
+    fn fused_approaches_idealized_dataflow_bound() {
+        // The idealized estimate (whole graph as one resident pipeline,
+        // intermediates free) lower-bounds the launch-granularity model up
+        // to reconfiguration; fused must land between it and unfused.
+        let dc = DecoderConfig::paper(1 << 16);
+        let g = mamba_decoder(&dc, ScanVariant::Parallel);
+        let cfg = RduConfig::hs_scan_mode();
+        let ideal = estimate(&g, &cfg).unwrap().total_seconds;
+        let fused = estimate_fused(&g, &cfg).unwrap().total_seconds;
+        let unfused = estimate_unfused(&g, &cfg).unwrap().total_seconds;
+        assert!(ideal <= fused * 1.0000001, "ideal {ideal} > fused {fused}");
+        assert!(fused < unfused);
+    }
+
+    #[test]
+    fn unfused_charges_every_intermediate_to_dram() {
+        let dc = DecoderConfig::paper(1 << 14);
+        let g = hyena_decoder(&dc, BaileyVariant::Vector);
+        let cfg = RduConfig::fft_mode();
+        let u = estimate_unfused(&g, &cfg).unwrap();
+        let expect = (g.external_input_bytes()
+            + g.external_output_bytes()
+            + g.total_weight_bytes()
+            + 2.0 * g.intermediate_bytes())
+            / cfg.spec.dram_bandwidth();
+        assert!((u.memory_seconds - expect).abs() / expect < 1e-12);
+    }
+
+    #[test]
+    fn estimate_plan_breakdown_still_covers_all_kernels() {
+        let dc = DecoderConfig::paper(1 << 14);
+        let g = mamba_decoder(&dc, ScanVariant::CScan);
+        let cfg = RduConfig::b_scan_mode();
+        let f = estimate_fused(&g, &cfg).unwrap();
+        assert_eq!(f.kernels.len(), g.kernels.len());
+        let sum: f64 = f.breakdown_by_op().values().sum();
+        assert!((sum - f.total_seconds).abs() / f.total_seconds < 1e-9);
     }
 }

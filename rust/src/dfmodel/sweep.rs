@@ -77,6 +77,23 @@ pub fn sweep_stages(dc: &DecoderConfig, stages: &[usize]) -> Vec<SweepPoint> {
         .collect()
 }
 
+/// Fusion ablation at one design point: launch-granularity latency of the
+/// fused vs kernel-by-kernel mapping on the extended configs, as
+/// `(hyena_gain, mamba_gain)` where gain = unfused / fused. The `sweep
+/// --fuse` CLI path prints this next to each swept point.
+pub fn fusion_gain_at(dc: &DecoderConfig) -> (f64, f64) {
+    use super::perf::{estimate_fused, estimate_unfused};
+    let hy = hyena_decoder(dc, BaileyVariant::Vector);
+    let ma = mamba_decoder(dc, ScanVariant::Parallel);
+    let fftm = RduConfig::fft_mode();
+    let scanm = RduConfig::hs_scan_mode();
+    let hy_gain = estimate_unfused(&hy, &fftm).expect("mappable").total_seconds
+        / estimate_fused(&hy, &fftm).expect("mappable").total_seconds;
+    let ma_gain = estimate_unfused(&ma, &scanm).expect("mappable").total_seconds
+        / estimate_fused(&ma, &scanm).expect("mappable").total_seconds;
+    (hy_gain, ma_gain)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -125,5 +142,12 @@ mod tests {
         for p in sweep_pcu_count(&dc(), &[64, 520]) {
             assert!(p.hyena_gain >= 1.0 && p.mamba_gain >= 1.0, "{p:?}");
         }
+    }
+
+    #[test]
+    fn fusion_gains_exceed_one() {
+        let (hy, ma) = fusion_gain_at(&DecoderConfig::paper(1 << 14));
+        assert!(hy > 1.0, "hyena fusion gain {hy}");
+        assert!(ma > 1.0, "mamba fusion gain {ma}");
     }
 }

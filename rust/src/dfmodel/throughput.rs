@@ -87,6 +87,22 @@ pub fn kernel_rate(kernel: &Kernel, cfg: &RduConfig) -> Rate {
     }
 }
 
+/// Cycles to reconfigure the fabric between spatial-program launches: the
+/// per-section cost of loading PCU configurations, retargeting PMU address
+/// generators and refilling the pipelines. RDU-class machines switch
+/// configurations in microseconds, not milliseconds — 10k cycles is 6.25 µs
+/// at the Table I clock. The launch-granularity estimates
+/// ([`super::perf::estimate_fused`] / [`super::perf::estimate_unfused`])
+/// charge this once per section, which is precisely what fusion amortizes:
+/// a fused FFT→eltwise→iFFT chain is one launch where kernel-by-kernel
+/// execution pays four.
+pub const RECONFIG_CYCLES: f64 = 10_000.0;
+
+/// Seconds per fabric reconfiguration on `cfg` (see [`RECONFIG_CYCLES`]).
+pub fn reconfig_seconds(cfg: &RduConfig) -> f64 {
+    RECONFIG_CYCLES / cfg.spec.clock_hz
+}
+
 /// Time for one PCU to retire the kernel (the mapper's demand metric).
 pub fn pcu_seconds(kernel: &Kernel, cfg: &RduConfig) -> f64 {
     match kernel_rate(kernel, cfg) {
@@ -167,6 +183,13 @@ mod tests {
             _ => panic!("c-scan must be serial"),
         }
         assert!(is_serial(&kern));
+    }
+
+    #[test]
+    fn reconfig_is_microseconds_at_table1_clock() {
+        let t = reconfig_seconds(&RduConfig::baseline());
+        assert!((t - 10_000.0 / 1.6e9).abs() < 1e-15);
+        assert!(t > 1e-6 && t < 1e-4, "reconfig should be µs-scale, got {t}");
     }
 
     #[test]

@@ -1,0 +1,108 @@
+//! Fusion overhead table: fused vs kernel-by-kernel (unfused) modeled
+//! latency for the Hyena and Mamba decoders on their extended RDU configs,
+//! with the launch counts and DRAM-staged intermediate traffic behind the
+//! gap. This is the table `simulate --fuse` and `sweep --fuse` print and
+//! the `fusion` bench serializes into `BENCH_fusion.json`.
+
+use crate::arch::RduConfig;
+use crate::dfmodel::{estimate_fused, estimate_unfused, fuse_graph, FusionPlan};
+use crate::fft::BaileyVariant;
+use crate::util::table::Table;
+use crate::util::{eng, fmt_time};
+use crate::workloads::{hyena_decoder, mamba_decoder, DecoderConfig, ScanVariant};
+
+/// Fused-vs-unfused comparison for one decoder at one sequence length.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FusionPoint {
+    pub model: &'static str,
+    pub seq_len: usize,
+    /// Kernel count of the decoder graph (= unfused launches).
+    pub kernels: usize,
+    /// Spatial-program launches under the fusion plan.
+    pub launches: usize,
+    /// Kernel-by-kernel modeled latency.
+    pub unfused_seconds: f64,
+    /// Fusion-plan modeled latency.
+    pub fused_seconds: f64,
+    /// Intermediate bytes staged through DRAM without fusion.
+    pub staged_unfused: f64,
+    /// Intermediate bytes still staged with fusion (cut edges only).
+    pub staged_fused: f64,
+}
+
+impl FusionPoint {
+    /// unfused / fused latency ratio.
+    pub fn gain(&self) -> f64 {
+        self.unfused_seconds / self.fused_seconds
+    }
+}
+
+/// Compute the fusion comparison for both SSM decoders over `seq_lens`.
+pub fn fusion_at(seq_lens: &[usize]) -> Vec<FusionPoint> {
+    let mut points = Vec::new();
+    for &l in seq_lens {
+        let dc = DecoderConfig::paper(l);
+        let cases = [
+            ("hyena", hyena_decoder(&dc, BaileyVariant::Vector), RduConfig::fft_mode()),
+            ("mamba", mamba_decoder(&dc, ScanVariant::Parallel), RduConfig::hs_scan_mode()),
+        ];
+        for (model, g, cfg) in cases {
+            let plan = fuse_graph(&g, &cfg);
+            let fused = estimate_fused(&g, &cfg).expect("mappable");
+            let unfused = estimate_unfused(&g, &cfg).expect("mappable");
+            points.push(FusionPoint {
+                model,
+                seq_len: l,
+                kernels: g.kernels.len(),
+                launches: plan.launches(),
+                unfused_seconds: unfused.total_seconds,
+                fused_seconds: fused.total_seconds,
+                staged_unfused: FusionPlan::unfused(&g).staged_intermediate_bytes(&g),
+                staged_fused: plan.staged_intermediate_bytes(&g),
+            });
+        }
+    }
+    points
+}
+
+/// Render the fusion comparison table.
+pub fn fusion_table(points: &[FusionPoint]) -> Table {
+    let mut t = Table::new(
+        "Fused vs unfused dataflow mappings (launch-granularity DFModel)",
+        &["Model", "L", "Launches", "Staged DRAM B", "Unfused", "Fused", "Speedup"],
+    );
+    for p in points {
+        t.row(&[
+            p.model.to_string(),
+            super::seq_label(p.seq_len),
+            format!("{} -> {}", p.kernels, p.launches),
+            format!("{} -> {}", eng(p.staged_unfused), eng(p.staged_fused)),
+            fmt_time(p.unfused_seconds),
+            fmt_time(p.fused_seconds),
+            format!("{:.2}x", p.gain()),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fusion_wins_at_all_swept_lengths() {
+        for p in fusion_at(&[1 << 12, 1 << 16]) {
+            assert!(p.gain() > 1.0, "{p:?}");
+            assert!(p.launches < p.kernels, "{p:?}");
+            assert!(p.staged_fused < p.staged_unfused, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn table_renders() {
+        let pts = fusion_at(&[1 << 12]);
+        let s = fusion_table(&pts).render();
+        assert!(s.contains("hyena") && s.contains("mamba"), "{s}");
+        assert!(s.contains("x"), "{s}");
+    }
+}

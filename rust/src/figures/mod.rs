@@ -5,11 +5,13 @@
 //! Each function returns a data struct plus a rendered table carrying
 //! paper-vs-measured columns; EXPERIMENTS.md records the runs.
 
+pub mod fusion;
 pub mod hyena;
 pub mod mamba;
 pub mod overheads;
 pub mod platforms;
 
+pub use fusion::{fusion_at, fusion_table, FusionPoint};
 pub use hyena::{fig7, Fig7};
 pub use mamba::{fig11, fig12, Fig11, Fig12};
 pub use overheads::table4;

@@ -24,6 +24,13 @@ pub struct Edge {
     pub dst: Option<KernelId>,
     /// Tensor size in bytes.
     pub bytes: f64,
+    /// Producer→consumer *stream* edge: the producer emits the tensor in the
+    /// element order the consumer ingests it (possibly through a corner-turn
+    /// PMU buffer), so a fused mapping may forward it entirely through
+    /// on-chip SRAM instead of staging it in DRAM. Workload builders mark
+    /// these with [`Graph::connect_stream`]; [`crate::dfmodel`]'s fusion
+    /// pass grows clusters along them.
+    pub stream: bool,
 }
 
 /// A workload dataflow graph.
@@ -48,19 +55,63 @@ impl Graph {
     /// Add an internal tensor edge.
     pub fn connect(&mut self, src: KernelId, dst: KernelId, bytes: f64) {
         assert!(src < self.kernels.len() && dst < self.kernels.len());
-        self.edges.push(Edge { src: Some(src), dst: Some(dst), bytes });
+        self.edges.push(Edge { src: Some(src), dst: Some(dst), bytes, stream: false });
+    }
+
+    /// Add an internal tensor edge the consumer can ingest as a stream (see
+    /// [`Edge::stream`]) — a fusion candidate for the dataflow mapper.
+    pub fn connect_stream(&mut self, src: KernelId, dst: KernelId, bytes: f64) {
+        assert!(src < self.kernels.len() && dst < self.kernels.len());
+        self.edges.push(Edge { src: Some(src), dst: Some(dst), bytes, stream: true });
     }
 
     /// Mark a kernel as reading a graph input of `bytes` from DRAM.
     pub fn input(&mut self, dst: KernelId, bytes: f64) {
         assert!(dst < self.kernels.len());
-        self.edges.push(Edge { src: None, dst: Some(dst), bytes });
+        self.edges.push(Edge { src: None, dst: Some(dst), bytes, stream: false });
     }
 
     /// Mark a kernel as writing a graph output of `bytes` to DRAM.
     pub fn output(&mut self, src: KernelId, bytes: f64) {
         assert!(src < self.kernels.len());
-        self.edges.push(Edge { src: Some(src), dst: None, bytes });
+        self.edges.push(Edge { src: Some(src), dst: None, bytes, stream: false });
+    }
+
+    /// Kernels feeding `id` through any internal edge (deduplicated).
+    pub fn predecessors(&self, id: KernelId) -> Vec<KernelId> {
+        let mut p: Vec<KernelId> = self
+            .edges
+            .iter()
+            .filter(|e| e.dst == Some(id))
+            .filter_map(|e| e.src)
+            .collect();
+        p.sort_unstable();
+        p.dedup();
+        p
+    }
+
+    /// Kernels feeding `id` through *stream* edges (deduplicated) — the
+    /// producers the fusion pass may cluster `id` with.
+    pub fn stream_predecessors(&self, id: KernelId) -> Vec<KernelId> {
+        let mut p: Vec<KernelId> = self
+            .edges
+            .iter()
+            .filter(|e| e.stream && e.dst == Some(id))
+            .filter_map(|e| e.src)
+            .collect();
+        p.sort_unstable();
+        p.dedup();
+        p
+    }
+
+    /// Bytes of intermediate tensors carried by stream edges — the traffic a
+    /// fully fused mapping keeps on-chip.
+    pub fn stream_bytes(&self) -> f64 {
+        self.edges
+            .iter()
+            .filter(|e| e.stream && e.src.is_some() && e.dst.is_some())
+            .map(|e| e.bytes)
+            .sum()
     }
 
     /// Total FLOPs over all kernels.
@@ -206,7 +257,12 @@ impl Graph {
                     format!("out{j}")
                 }
             };
-            let _ = writeln!(s, "  {src} -> {dst} [label=\"{}B\"];", crate::util::eng(e.bytes));
+            let style = if e.stream { ",style=bold" } else { "" };
+            let _ = writeln!(
+                s,
+                "  {src} -> {dst} [label=\"{}B\"{style}];",
+                crate::util::eng(e.bytes)
+            );
         }
         s.push_str("}\n");
         s
@@ -281,10 +337,32 @@ mod tests {
     #[test]
     fn bad_edges_rejected() {
         let mut g = chain();
-        g.edges.push(Edge { src: None, dst: None, bytes: 1.0 });
+        g.edges.push(Edge { src: None, dst: None, bytes: 1.0, stream: false });
         assert!(g.validate().is_err());
         let mut g2 = chain();
-        g2.edges.push(Edge { src: Some(0), dst: Some(1), bytes: f64::NAN });
+        g2.edges.push(Edge { src: Some(0), dst: Some(1), bytes: f64::NAN, stream: false });
         assert!(g2.validate().is_err());
+    }
+
+    #[test]
+    fn stream_edges_and_neighbors() {
+        let mut g = Graph::new("s");
+        let a = g.add(Kernel::new("a", OpClass::Gemm, 1.0, 1.0, 1.0));
+        let b = g.add(Kernel::new("b", OpClass::Elementwise, 1.0, 1.0, 1.0));
+        let c = g.add(Kernel::new("c", OpClass::Gemm, 1.0, 1.0, 1.0));
+        g.input(a, 1.0);
+        g.input(c, 1.0);
+        g.connect_stream(a, b, 8.0);
+        g.connect(c, b, 4.0);
+        g.output(b, 1.0);
+        assert!(g.validate().is_ok());
+        assert_eq!(g.predecessors(b), vec![a, c]);
+        assert_eq!(g.stream_predecessors(b), vec![a]);
+        assert!(g.stream_predecessors(a).is_empty());
+        assert_eq!(g.stream_bytes(), 8.0);
+        assert_eq!(g.intermediate_bytes(), 12.0, "stream edges are intermediates too");
+        // Dot rendering styles the stream edge.
+        let d = g.to_dot();
+        assert!(d.contains("style=bold"), "{d}");
     }
 }

@@ -17,7 +17,10 @@
 //! * [`graph`], [`workloads`] — dataflow-graph IR and the attention / Hyena /
 //!   Mamba decoder builders (paper Fig. 3).
 //! * [`dfmodel`] — reproduction of the DFModel mapping optimizer + performance
-//!   estimator used for every figure in the paper.
+//!   estimator used for every figure in the paper, plus the fusion pass
+//!   (`dfmodel::fusion`) that clusters streamed kernel chains into single
+//!   spatially-mapped sections and the launch-granularity estimates that
+//!   price the fused-vs-unfused gap (`simulate --fuse`, the `fusion` bench).
 //! * [`gpu`], [`vga`] — the A100 and VGA comparison platforms (Tables II/III).
 //! * [`synth`] — 45 nm area/power model reproducing Table IV.
 //! * [`runtime`], [`coordinator`] — the serving stack: PJRT artifact execution

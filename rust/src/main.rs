@@ -11,17 +11,26 @@
 //!   fig7 | fig8 | fig11 | fig12  regenerate a paper figure (DFModel);
 //!                                --seq-lens L1,L2,… overrides the sweep
 //!   all                          every table and figure in order
-//!   simulate [--lanes N --stages M] [--chips P --seq-len L]
+//!   simulate [--lanes N --stages M] [--chips P --seq-len L] [--fuse]
 //!                                run the cycle-level PCU simulator demo;
-//!                                with --chips > 1 also verify the sharded
+//!                                with --fuse also run the fused
+//!                                FFT→filter→iFFT conv pipeline and the
+//!                                fused scan→gate (bit-identical to their
+//!                                unfused launches) and print the fused-vs-
+//!                                unfused DFModel latency table; with
+//!                                --chips > 1 also verify the sharded
 //!                                scan/FFT dataflows numerically and print
 //!                                the strong-scaling sweep (speedup and
 //!                                communication share per chip count, for
 //!                                Hyena and Mamba)
+//!   sweep [--seq-len L] [--pcus N1,N2,…] [--stages S1,S2,…] [--fuse]
+//!                                design-space ablations (PCU count, DRAM
+//!                                technology, pipeline depth); with --fuse
+//!                                also print the fusion-gain table
 //!   dot --model <attention|hyena|mamba> [--seq-len L]
 //!                                dump a workload dataflow graph (graphviz)
 //!   serve [--artifacts DIR --requests N --workers W --max-batch B
-//!          --max-wait-ms MS --chips P]
+//!          --max-wait-ms MS --chips P --fuse]
 //!                                serve one-shot batched requests through
 //!                                the PJRT runtime (the E2E driver's
 //!                                engine); with --chips > 1 the closing
@@ -30,7 +39,7 @@
 //!   serve --continuous [--sessions N --decode-steps K --workers W
 //!                       --max-batch B --cache-mb M --layers L --d-state S
 //!                       --state-d-model D --fft-points P --chips P
-//!                       --session-timeout-ms MS]
+//!                       --session-timeout-ms MS --fuse]
 //!                                continuous-batching session serving over
 //!                                the MockExecutor: N live sessions decode
 //!                                K tokens each through the SessionScheduler
@@ -117,13 +126,15 @@ fn main() {
             0
         }
         "simulate" => simulate(&args),
+        "sweep" => sweep(&args),
         "dot" => dot(&args),
         "serve" => serve(&args),
         other => {
             eprintln!(
                 "unknown subcommand `{other}`; usage: ssm-rdu \
-                 <spec|table2|table4|fig7|fig8|fig11|fig12|all|simulate|dot|serve> [--options] \
-                 — see README.md (or the rust/src/main.rs doc block) for the full reference"
+                 <spec|table2|table4|fig7|fig8|fig11|fig12|all|simulate|sweep|dot|serve> \
+                 [--options] — see README.md (or the rust/src/main.rs doc block) for the full \
+                 reference"
             );
             2
         }
@@ -168,8 +179,136 @@ fn simulate(args: &Args) -> i32 {
         );
     }
     let chips = args.usize_or("chips", 1).max(1);
+    if args.flag("fuse") {
+        fuse_report(args, chips);
+    }
     if chips > 1 {
         shard_report(chips, args.usize_or("seq-len", 1 << 20));
+    }
+    0
+}
+
+/// `simulate --fuse`: prove the fused pipelines bit-identical to their
+/// unfused launch sequences on the cycle-level simulator, then print the
+/// fused-vs-unfused DFModel latency table (and, with `--chips > 1`, the
+/// sharded composition).
+fn fuse_report(args: &Args, chips: usize) {
+    use ssm_rdu::pcusim::{fused_conv_program, unfused_conv_programs};
+
+    // 1) Cycle-level numerics: the fused FFT→filter→iFFT conv program vs
+    //    the same three stages as separate launches — must be bit-identical.
+    let lanes = 32;
+    let geom = PcuGeometry::table1();
+    let pcu = Pcu::fft_mode(geom);
+    let mut rng = XorShift::new(17);
+    let h: Vec<C64> =
+        (0..lanes).map(|_| C64::new(rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0))).collect();
+    let fused_prog = fused_conv_program(lanes, &h);
+    let [p1, p2, p3] = unfused_conv_programs(lanes, &h);
+    let mut conv_diff = 0.0f64;
+    for _ in 0..64 {
+        let x: Vec<C64> = (0..lanes)
+            .map(|_| C64::new(rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0)))
+            .collect();
+        let staged = pcu.eval(&p3, &pcu.eval(&p2, &pcu.eval(&p1, &x)));
+        let fused = pcu.eval(&fused_prog, &x);
+        conv_diff = conv_diff.max(ssm_rdu::util::complex::max_abs_diff_c(&staged, &fused));
+    }
+    let (_, stats) = pcu.run(&fused_prog, &[vec![C64::real(1.0); lanes]]);
+    println!(
+        "\nfused conv{lanes} ({} levels, {} regime on fft-mode): fused vs unfused |d|={conv_diff:.1e}",
+        fused_prog.levels.len(),
+        if stats.spatial { "spatial" } else { "serialized" },
+    );
+
+    // 2) Fused scan→gate vs staged scan-then-gate, ragged length, and the
+    //    sharded variant when --chips > 1 — also bit-identical.
+    let n = 1000;
+    let a: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 0.99)).collect();
+    let b: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let z: Vec<f64> = (0..n).map(|_| rng.uniform(-3.0, 3.0)).collect();
+    let staged_gate = ssm_rdu::scan::scan_gate_unfused(&a, &b, &z);
+    let d_gate = max_abs_diff(&ssm_rdu::scan::scan_gate_fused(&a, &b, &z), &staged_gate);
+    let staged_shard: Vec<f64> = shard::sharded_mamba_scan(&a, &b, chips)
+        .iter()
+        .zip(&z)
+        .map(|(&hh, &zi)| hh * ssm_rdu::scan::silu(zi))
+        .collect();
+    let d_shard =
+        max_abs_diff(&shard::sharded_scan_gate_fused(&a, &b, &z, chips), &staged_shard);
+    println!(
+        "fused scan+gate (n={n}): vs unfused |d|={d_gate:.1e}, {chips}-chip sharded |d|={d_shard:.1e}"
+    );
+
+    // 3) The modeled end-to-end win: fused vs kernel-by-kernel DFModel
+    //    latency for both decoders.
+    let lens = match args.get("seq-len") {
+        Some(_) => vec![args.usize_or("seq-len", 1 << 20)],
+        None => vec![1 << 12, 1 << 16, 1 << 20],
+    };
+    figures::fusion_table(&figures::fusion_at(&lens)).print();
+
+    if chips > 1 {
+        let link = InterchipLink::rdu_fabric();
+        let l = args.usize_or("seq-len", 1 << 20);
+        if l % chips == 0 {
+            let dc = DecoderConfig::paper(l);
+            for (model, cfg) in [
+                (ModelKind::Hyena, RduConfig::fft_mode()),
+                (ModelKind::Mamba, RduConfig::hs_scan_mode()),
+            ] {
+                let f = shard::sharded_estimate_fused(model, &dc, chips, &cfg, &link, true);
+                let u = shard::sharded_estimate_fused(model, &dc, chips, &cfg, &link, false);
+                if let (Ok(f), Ok(u)) = (f, u) {
+                    println!(
+                        "{chips}-chip {model} @ L={l}: unfused {} -> fused {} ({:.2}x)",
+                        fmt_time(u.total_seconds),
+                        fmt_time(f.total_seconds),
+                        u.total_seconds / f.total_seconds,
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// `sweep`: design-space ablations over chip parameters; `--fuse` adds the
+/// fusion-gain view.
+fn sweep(args: &Args) -> i32 {
+    use ssm_rdu::arch::MemTech;
+    use ssm_rdu::dfmodel::{sweep_bandwidth, sweep_pcu_count, sweep_stages};
+
+    let l = args.usize_or("seq-len", 1 << 18);
+    let dc = DecoderConfig::paper(l);
+    let pcus = args.usize_list_or("pcus", &[128, 256, 520]);
+    let stages = args.usize_list_or("stages", &[6, 12, 24]);
+
+    let sweeps: [(&str, Vec<ssm_rdu::dfmodel::SweepPoint>); 3] = [
+        ("PCU count", sweep_pcu_count(&dc, &pcus)),
+        ("DRAM technology", sweep_bandwidth(&dc, &[MemTech::Ddr5, MemTech::Hbm2e, MemTech::Hbm3e])),
+        ("pipeline depth", sweep_stages(&dc, &stages)),
+    ];
+    for (what, pts) in sweeps {
+        let mut t = ssm_rdu::util::table::Table::new(
+            &format!("Design sweep over {what} at L={l}"),
+            &["Point", "Hyena", "Mamba", "Hyena gain", "Mamba gain"],
+        );
+        for p in &pts {
+            t.row(&[
+                p.label.clone(),
+                fmt_time(p.hyena_seconds),
+                fmt_time(p.mamba_seconds),
+                format!("{:.2}x", p.hyena_gain),
+                format!("{:.2}x", p.mamba_gain),
+            ]);
+        }
+        t.print();
+    }
+
+    if args.flag("fuse") {
+        let (hy, ma) = ssm_rdu::dfmodel::fusion_gain_at(&dc);
+        println!("fusion gain at L={l}: hyena {hy:.2}x, mamba {ma:.2}x (unfused/fused)");
+        figures::fusion_table(&figures::fusion_at(&[l])).print();
     }
     0
 }
@@ -355,6 +494,21 @@ fn serve(args: &Args) -> i32 {
                 manifest.seq_len,
                 fmt_time(est.total_seconds)
             );
+        }
+        if args.flag("fuse") {
+            if let (Ok(f), Ok(u)) = (
+                ssm_rdu::dfmodel::estimate_fused(&g, &cfg),
+                ssm_rdu::dfmodel::estimate_unfused(&g, &cfg),
+            ) {
+                println!(
+                    "  launch-granularity: unfused {} -> fused {} ({:.2}x, {} -> {} launches)",
+                    fmt_time(u.total_seconds),
+                    fmt_time(f.total_seconds),
+                    u.total_seconds / f.total_seconds,
+                    u.sections,
+                    f.sections,
+                );
+            }
         }
     }
     if chips > 1 && manifest.seq_len % chips != 0 {
@@ -546,6 +700,16 @@ fn serve_continuous(args: &Args) -> i32 {
             cost.cycles,
             cost.state_bytes / 1024.0,
         );
+        if args.flag("fuse") {
+            let unf = ssm_rdu::dfmodel::decode_step_unfused(model, &dc, shape.layers, &cfg);
+            println!(
+                "  kernel-by-kernel decode would cost {} ({:.1}x) — the resident fused \
+                 pipeline amortizes {} launches/step",
+                fmt_time(unf.seconds),
+                unf.seconds / cost.seconds,
+                (shape.layers as f64 * ssm_rdu::dfmodel::DECODE_KERNELS_PER_LAYER) as usize,
+            );
+        }
         if chips > 1 {
             let s = ssm_rdu::dfmodel::decode_step_sharded(
                 model,

@@ -107,6 +107,7 @@ impl Pcu {
                     Op::MulConst(c) => a * c,
                     Op::Mac { src, c } => a + c * prev[src],
                     Op::MacSelf { src, c } => c * a + prev[src],
+                    Op::TwiddleSub { src, c } => c * (prev[src] - a),
                     Op::Take { src } => prev[src],
                 }
             })

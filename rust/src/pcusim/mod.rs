@@ -10,7 +10,10 @@
 //!   and the added-route counts behind Table IV.
 //! * [`program`] — FU-level program IR + spatial-mapping validation.
 //! * [`programs`] — canonical FFT / HS-scan / B-scan / reduction programs,
-//!   verified against the [`crate::fft`] and [`crate::scan`] substrates.
+//!   verified against the [`crate::fft`] and [`crate::scan`] substrates,
+//!   plus the fused DIF→filter→DIT convolution pipeline
+//!   ([`programs::fused_conv_program`]) that grounds the mapper's fusion
+//!   pass: bit-identical to its three-launch unfused counterpart.
 //! * [`engine`] — spatial vs serialized ("first stage only", §III-B)
 //!   execution with cycle and FU-utilization accounting.
 //! * [`utilization`] — the measured steady-state factors DFModel consumes.
@@ -37,5 +40,8 @@ pub mod utilization;
 
 pub use engine::{ExecStats, Pcu};
 pub use program::{Level, MapError, Op, Program};
-pub use programs::{b_scan_program, bit_reverse, fft_program, hs_scan_program};
+pub use programs::{
+    b_scan_program, bit_reverse, dif_fft_program, fft_program, freq_filter_program,
+    fused_conv_program, hs_scan_program, idit_fft_program, unfused_conv_programs,
+};
 pub use utilization::Measurement;

@@ -38,6 +38,13 @@ pub enum Op {
     /// mul/add units operate "between any two of the four input sources"
     /// (paper Fig. 2), so both MAC orientations are single-FU operations.
     MacSelf { src: usize, c: C64 },
+    /// `out = c·(b − a)` — the decimation-in-frequency butterfly's
+    /// lower-lane op: subtract-then-twiddle. Like the MACs this is one
+    /// subtract plus one multiply on two of the FU's four input sources
+    /// (paper Fig. 2), just wired difference-first instead of
+    /// product-first; the fused DIF→filter→DIT convolution pipeline needs
+    /// it because DIF emits `(a − b)·w`, not `a − w·b`.
+    TwiddleSub { src: usize, c: C64 },
     /// `out = b` — take the cross-lane value (down-sweep swap).
     Take { src: usize },
 }
@@ -50,6 +57,7 @@ impl Op {
             | Op::Sub { src }
             | Op::Mac { src, .. }
             | Op::MacSelf { src, .. }
+            | Op::TwiddleSub { src, .. }
             | Op::Take { src } => Some(src),
             _ => None,
         }
@@ -68,7 +76,7 @@ impl Op {
         match self {
             Op::Pass | Op::Const(_) | Op::Take { .. } => 0.0,
             Op::Add { .. } | Op::Sub { .. } | Op::MulConst(_) => 1.0,
-            Op::Mac { .. } | Op::MacSelf { .. } => 2.0,
+            Op::Mac { .. } | Op::MacSelf { .. } | Op::TwiddleSub { .. } => 2.0,
         }
     }
 }

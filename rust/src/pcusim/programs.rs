@@ -31,13 +31,11 @@ pub fn bit_reverse(x: &[C64]) -> Vec<C64> {
         .collect()
 }
 
-/// Radix-2 decimation-in-time FFT over `lanes` complex points, expecting
-/// bit-reversed input (see [`bit_reverse`]). Level *b* performs the
-/// stride-`2^b` butterflies: the pair-leader lane computes `a + w·b` (MAC)
-/// and the partner lane computes `a_partner − w·b_self` via the mirrored MAC
-/// — exactly the dataflow Fig. 5 unrolls across the pipeline.
+/// Decimation-in-time butterfly levels over `lanes` points with twiddles
+/// `e^{sign·2πi·j/len}`: `sign = −1` is the forward FFT, `sign = +1` the
+/// (unnormalized) inverse. Bit-reversed input → natural-order output.
 #[allow(clippy::needless_range_loop)] // lanes indexed by butterfly position math
-pub fn fft_program(lanes: usize) -> Program {
+fn dit_levels(lanes: usize, sign: f64) -> Vec<Level> {
     assert!(lanes.is_power_of_two() && lanes >= 2);
     let levels_n = lanes.trailing_zeros() as usize;
     let mut levels = Vec::with_capacity(levels_n);
@@ -49,17 +47,107 @@ pub fn fft_program(lanes: usize) -> Program {
             let j = i % len;
             if j < half {
                 // x[i] ← x[i] + w_j · x[i+half]
-                let w = C64::cis(-2.0 * PI * j as f64 / len as f64);
+                let w = C64::cis(sign * 2.0 * PI * j as f64 / len as f64);
                 ops[i] = Op::Mac { src: i + half, c: w };
             } else {
                 // x[i] ← x[i−half] − w_{j−half} · x[i]  =  (−w)·a + b
-                let w = C64::cis(-2.0 * PI * (j - half) as f64 / len as f64);
+                let w = C64::cis(sign * 2.0 * PI * (j - half) as f64 / len as f64);
                 ops[i] = Op::MacSelf { src: i - half, c: C64::real(-1.0) * w };
             }
         }
         levels.push(Level::new(ops));
     }
-    Program::new(&format!("fft{lanes}"), PcuMode::Fft, levels)
+    levels
+}
+
+/// Radix-2 decimation-in-time FFT over `lanes` complex points, expecting
+/// bit-reversed input (see [`bit_reverse`]). Level *b* performs the
+/// stride-`2^b` butterflies: the pair-leader lane computes `a + w·b` (MAC)
+/// and the partner lane computes `a_partner − w·b_self` via the mirrored MAC
+/// — exactly the dataflow Fig. 5 unrolls across the pipeline.
+pub fn fft_program(lanes: usize) -> Program {
+    Program::new(&format!("fft{lanes}"), PcuMode::Fft, dit_levels(lanes, -1.0))
+}
+
+/// Unnormalized inverse DIT FFT: bit-reversed input → natural-order output,
+/// conjugate twiddles, **no** 1/N scaling (the fused convolution folds the
+/// 1/N into the frequency-domain filter constants — see
+/// [`freq_filter_program`]).
+pub fn idit_fft_program(lanes: usize) -> Program {
+    Program::new(&format!("idit-fft{lanes}"), PcuMode::Fft, dit_levels(lanes, 1.0))
+}
+
+/// Radix-2 decimation-in-frequency forward FFT: natural-order input →
+/// bit-reversed output. Level *s* runs the stride-`lanes/2^{s+1}`
+/// butterflies: the upper lane computes `a + b` (Add) and the lower lane
+/// `w·(a − b)` via [`Op::TwiddleSub`]. Paired with [`idit_fft_program`]
+/// this gives a transform→inverse chain with *no* reordering in between —
+/// DIF emits exactly the bit-reversed order DIT ingests — which is what
+/// makes the fused convolution a single straight-line spatial program.
+#[allow(clippy::needless_range_loop)] // lanes indexed by butterfly position math
+pub fn dif_fft_program(lanes: usize) -> Program {
+    assert!(lanes.is_power_of_two() && lanes >= 2);
+    let levels_n = lanes.trailing_zeros() as usize;
+    let mut levels = Vec::with_capacity(levels_n);
+    for step in 0..levels_n {
+        let half = lanes >> (step + 1);
+        let len = half << 1;
+        let mut ops = vec![Op::Pass; lanes];
+        for i in 0..lanes {
+            let j = i % len;
+            if j < half {
+                // Upper lane: u ← u + v.
+                ops[i] = Op::Add { src: i + half };
+            } else {
+                // Lower lane: v ← w_{j−half} · (u − v).
+                let w = C64::cis(-2.0 * PI * (j - half) as f64 / len as f64);
+                ops[i] = Op::TwiddleSub { src: i - half, c: w };
+            }
+        }
+        levels.push(Level::new(ops));
+    }
+    Program::new(&format!("dif-fft{lanes}"), PcuMode::Fft, levels)
+}
+
+/// Frequency-domain filter multiply for the fused convolution: one
+/// element-wise level whose per-lane constants are `FFT(h)` permuted to
+/// bit-reversed order (matching the DIF output the level consumes) and
+/// pre-scaled by `1/N` (folding the inverse transform's normalization into
+/// the resident filter — zero extra levels).
+pub fn freq_filter_program(h: &[C64]) -> Program {
+    let n = h.len();
+    assert!(n.is_power_of_two() && n >= 2);
+    let hf = crate::fft::fft(h);
+    let ops = bit_reverse(&hf).iter().map(|z| Op::MulConst(z.scale(1.0 / n as f64))).collect();
+    Program::new(&format!("freq-filter{n}"), PcuMode::ElementWise, vec![Level::new(ops)])
+}
+
+/// The **fused** FFT→filter→iFFT circular-convolution pipeline, the
+/// pcusim-level ground truth for the mapper's fusion pass: DIF forward
+/// levels, one filter-multiply level, DIT inverse levels — `2·log₂(N)+1`
+/// stages, natural-order input *and* output, intermediates never leaving
+/// the pipeline registers. On the Table I PCU (32×12) it occupies 11 of 12
+/// stages of a single FFT-mode PCU; on a baseline PCU it serializes.
+///
+/// [`unfused_conv_programs`] exposes the identical arithmetic as three
+/// separate program launches; the integration tests assert the two are
+/// bit-identical (fusion is a scheduling transform, not a numerics one).
+pub fn fused_conv_program(lanes: usize, h: &[C64]) -> Program {
+    assert_eq!(h.len(), lanes, "filter length must match lane count");
+    let mut levels = dif_fft_program(lanes).levels;
+    levels.extend(freq_filter_program(h).levels);
+    levels.extend(dit_levels(lanes, 1.0));
+    Program::new(&format!("fused-conv{lanes}"), PcuMode::Fft, levels)
+}
+
+/// The unfused counterpart of [`fused_conv_program`]: the same three stages
+/// as separate program launches (forward DIF, filter multiply, inverse
+/// DIT), each intermediate staged through a PMU/DRAM buffer between
+/// launches. Same levels, same constants, same order — running them
+/// back-to-back is bit-identical to the fused pipeline.
+pub fn unfused_conv_programs(lanes: usize, h: &[C64]) -> [Program; 3] {
+    assert_eq!(h.len(), lanes, "filter length must match lane count");
+    [dif_fft_program(lanes), freq_filter_program(h), idit_fft_program(lanes)]
 }
 
 /// Inclusive Hillis–Steele scan over `lanes` elements: level *b* has lane
@@ -262,6 +350,92 @@ mod tests {
         for (yi, f) in y.iter().zip(&factors) {
             assert!((*yi - *f).abs() < 1e-15);
         }
+    }
+
+    #[test]
+    fn dif_program_matches_cooley_tukey() {
+        // DIF: natural input, bit-reversed output.
+        let mut rng = XorShift::new(21);
+        for lanes in [8usize, 32] {
+            let geom = if lanes == 8 { PcuGeometry::synthesis() } else { PcuGeometry::table1() };
+            let pcu = Pcu::fft_mode(geom);
+            let prog = dif_fft_program(lanes);
+            let x = rand_c(&mut rng, lanes);
+            let got = bit_reverse(&pcu.eval(&prog, &x));
+            let want = cooley_tukey::fft(&x);
+            assert!(max_abs_diff_c(&got, &want) < 1e-11, "lanes={lanes}");
+        }
+    }
+
+    #[test]
+    fn idit_program_is_unnormalized_inverse() {
+        let mut rng = XorShift::new(22);
+        let pcu = Pcu::fft_mode(PcuGeometry::table1());
+        let prog = idit_fft_program(32);
+        let spectrum = rand_c(&mut rng, 32);
+        let got: Vec<C64> =
+            pcu.eval(&prog, &bit_reverse(&spectrum)).iter().map(|z| z.scale(1.0 / 32.0)).collect();
+        let want = cooley_tukey::ifft(&spectrum);
+        assert!(max_abs_diff_c(&got, &want) < 1e-11);
+    }
+
+    #[test]
+    fn fused_conv_matches_fft_reference() {
+        // y = iFFT(FFT(x) ⊙ FFT(h)), natural order in and out, no external
+        // permutes: DIF hands DIT exactly the order it wants.
+        let mut rng = XorShift::new(23);
+        let lanes = 32;
+        let pcu = Pcu::fft_mode(PcuGeometry::table1());
+        let h = rand_c(&mut rng, lanes);
+        let prog = fused_conv_program(lanes, &h);
+        for _ in 0..5 {
+            let x = rand_c(&mut rng, lanes);
+            let got = pcu.eval(&prog, &x);
+            let fx = cooley_tukey::fft(&x);
+            let fh = cooley_tukey::fft(&h);
+            let prod: Vec<C64> = fx.iter().zip(&fh).map(|(&a, &b)| a * b).collect();
+            let want = cooley_tukey::ifft(&prod);
+            assert!(max_abs_diff_c(&got, &want) < 1e-10);
+        }
+    }
+
+    #[test]
+    fn fused_conv_bit_identical_to_unfused_chain() {
+        // Fusion is a scheduling transform: the fused pipeline runs the
+        // *same ops in the same order* as the three separate launches, so
+        // the outputs are bit-identical, not merely close.
+        let mut rng = XorShift::new(24);
+        let lanes = 32;
+        let pcu = Pcu::fft_mode(PcuGeometry::table1());
+        let h = rand_c(&mut rng, lanes);
+        let fused = fused_conv_program(lanes, &h);
+        let [p1, p2, p3] = unfused_conv_programs(lanes, &h);
+        for _ in 0..10 {
+            let x = rand_c(&mut rng, lanes);
+            let staged = pcu.eval(&p3, &pcu.eval(&p2, &pcu.eval(&p1, &x)));
+            let direct = pcu.eval(&fused, &x);
+            assert_eq!(staged, direct, "fused and unfused pipelines must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn fused_conv_spatial_on_fft_mode_serialized_on_baseline() {
+        let mut rng = XorShift::new(25);
+        let lanes = 32;
+        let h = rand_c(&mut rng, lanes);
+        let prog = fused_conv_program(lanes, &h);
+        // 2·log₂32 + 1 = 11 levels fit the 12-stage Table I PCU spatially.
+        assert_eq!(prog.levels.len(), 11);
+        let fft_pcu = Pcu::fft_mode(PcuGeometry::table1());
+        assert!(fft_pcu.mappable(&prog).is_ok(), "{:?}", fft_pcu.mappable(&prog));
+        let base = Pcu::baseline(PcuGeometry::table1());
+        assert!(base.mappable(&prog).is_err());
+        // Serialized execution is slower but functionally identical.
+        let x = rand_c(&mut rng, lanes);
+        let (outs_b, stats_b) = base.run(&prog, &[x.clone()]);
+        let (outs_f, stats_f) = fft_pcu.run(&prog, &[x]);
+        assert!(!stats_b.spatial && stats_f.spatial);
+        assert_eq!(outs_b, outs_f);
     }
 
     #[test]

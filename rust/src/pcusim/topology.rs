@@ -11,8 +11,14 @@
 //!   streamed MAC, not by boundary edges);
 //! * reduction — a binary reduction tree: at boundary `b < log₂(lanes)`,
 //!   lane `i` (with `i ≡ 0 mod 2^{b+1}`) also reads lane `i + 2^b`;
-//! * **fft** (extension) — full butterfly pairing: at boundary
-//!   `b < log₂(lanes)`, every lane `i` also reads lane `i ⊕ 2^b`;
+//! * **fft** (extension) — full butterfly pairing: every lane `i` may read
+//!   its partner `i ⊕ 2^k` for any stride `2^k < lanes`. The canonical
+//!   schedule (and the [`cross_lane_edges`] enumeration the mux count is
+//!   built from) drives stride `2^b` at boundary `b`, but the routes are
+//!   per lane *pair* and time-multiplexed, so [`allows`] accepts any
+//!   butterfly stride at any boundary — which is what lets fused
+//!   DIF→filter→DIT convolution pipelines schedule descending and
+//!   ascending stride ladders back-to-back on one PCU;
 //! * **hs-scan** (extension) — Hillis–Steele shifts: at boundary
 //!   `b < log₂(lanes)`, lane `i ≥ 2^b` also reads lane `i − 2^b`;
 //! * **b-scan** (extension) — Blelloch tree: up-sweep boundaries
@@ -103,13 +109,78 @@ pub fn cross_lane_edges(mode: PcuMode, geom: PcuGeometry) -> Vec<Edge> {
 }
 
 /// Does `mode` permit reading `(src, stage b−1)` from `(dest, stage b)`?
+///
+/// Evaluated in O(1) per query (the spatial validator calls this once per
+/// lane per level; wide fused programs made the edge-list scan the old
+/// implementation did prohibitively slow).
+///
+/// The scan/reduction fabrics pin each stride to the boundary of its
+/// schedule, exactly as [`cross_lane_edges`] enumerates. The **FFT fabric
+/// is boundary-agnostic**: the physical resource is one route + 2:1 mux per
+/// butterfly lane pair `(i, i ⊕ 2^k)` (see [`added_mux_count`]), and the
+/// configuration schedules which boundary drives each route — so any
+/// butterfly stride may appear at any boundary. That is what lets a fused
+/// DIF-FFT → filter → DIT-iFFT convolution occupy `2·log₂(lanes)+1`
+/// consecutive stages of one FFT-mode PCU, with the forward transform's
+/// strides descending while the inverse's ascend.
+///
+/// Modeling assumption, stated rather than hidden: routing one lane-pair
+/// link to a *configurable* boundary needs boundary-select muxing beyond
+/// the per-pair 2:1 input mux that [`added_mux_count`] (and therefore the
+/// Table IV area/power reproduction) counts. The paper's Table IV prices
+/// exactly its fixed-schedule fabrics, so we keep those counts faithful
+/// and leave the boundary-select overhead of the fused-conv schedule
+/// uncounted; a synth-model extension is the honest follow-up if fused
+/// pipelines become a headline area claim.
 pub fn allows(mode: PcuMode, geom: PcuGeometry, boundary: usize, dest: usize, src: usize) -> bool {
     if dest == src {
         return true; // straight edge, always present
     }
-    cross_lane_edges(mode, geom)
-        .iter()
-        .any(|e| e.boundary == boundary && e.dest == dest && e.src == src)
+    if boundary >= geom.stages || dest >= geom.lanes || src >= geom.lanes {
+        return false;
+    }
+    let levels = geom.levels();
+    match mode {
+        PcuMode::ElementWise | PcuMode::Systolic => false,
+        PcuMode::Reduction => {
+            if boundary >= levels {
+                return false;
+            }
+            let stride = 1 << boundary;
+            let group = stride << 1;
+            dest % group == 0 && src == dest + stride
+        }
+        PcuMode::Fft => {
+            // Any butterfly route, any boundary (time-multiplexed fabric).
+            let d = dest ^ src;
+            d.is_power_of_two() && d < geom.lanes
+        }
+        PcuMode::HsScan => {
+            if boundary >= levels {
+                return false;
+            }
+            let stride = 1 << boundary;
+            dest >= stride && src == dest - stride
+        }
+        PcuMode::BScan => {
+            if boundary < levels {
+                // Up-sweep: tree parent reads its left sibling.
+                let stride = 1 << boundary;
+                let group = stride << 1;
+                dest % group == group - 1 && src == dest - stride
+            } else if boundary < 2 * levels {
+                // Down-sweep: the tree pair exchanges in both directions.
+                let step = boundary - levels;
+                let stride = 1 << (levels - 1 - step);
+                let group = stride << 1;
+                let hi = dest.max(src);
+                let lo = dest.min(src);
+                hi % group == group - 1 && hi - lo == stride
+            } else {
+                false
+            }
+        }
+    }
 }
 
 /// Number of 2:1 input muxes an extension mode adds to the PCU — one per
@@ -233,6 +304,46 @@ mod tests {
                 assert!(e.dest < 32 && e.src < 32 && e.boundary < 12, "{m} {e:?}");
             }
         }
+    }
+
+    #[test]
+    fn allows_matches_edge_enumeration() {
+        // The O(1) `allows` must agree with the edge enumeration: exactly
+        // for the boundary-scheduled modes, as a superset for the
+        // time-multiplexed FFT fabric.
+        let g = synth();
+        for m in [PcuMode::Reduction, PcuMode::HsScan, PcuMode::BScan, PcuMode::Fft] {
+            let edges: HashSet<Edge> = cross_lane_edges(m, g).into_iter().collect();
+            for boundary in 0..g.stages {
+                for dest in 0..g.lanes {
+                    for src in 0..g.lanes {
+                        if src == dest {
+                            continue;
+                        }
+                        let listed = edges.contains(&Edge { boundary, dest, src });
+                        let allowed = allows(m, g, boundary, dest, src);
+                        if m == PcuMode::Fft {
+                            assert!(!listed || allowed, "{m} {boundary} {dest} {src}");
+                        } else {
+                            assert_eq!(listed, allowed, "{m} {boundary} {dest} {src}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fft_routes_are_boundary_agnostic_but_stride_limited() {
+        let g = synth(); // 8 lanes
+        // Stride-4 butterfly allowed even at boundary 0 and at late stages.
+        assert!(allows(PcuMode::Fft, g, 0, 0, 4));
+        assert!(allows(PcuMode::Fft, g, 5, 3, 7));
+        // Non-butterfly routes still rejected (3 ⊕ 5 = 6, not a stride).
+        assert!(!allows(PcuMode::Fft, g, 0, 3, 5));
+        // Out-of-range boundary/lanes rejected.
+        assert!(!allows(PcuMode::Fft, g, 6, 0, 1));
+        assert!(!allows(PcuMode::Fft, g, 0, 0, 8));
     }
 
     #[test]

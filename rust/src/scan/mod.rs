@@ -41,7 +41,9 @@ pub mod tiled;
 
 pub use blelloch::blelloch_exclusive;
 pub use hillis_steele::hillis_steele_inclusive;
-pub use recurrence::{mamba_scan_parallel, mamba_scan_serial};
+pub use recurrence::{
+    mamba_scan_parallel, mamba_scan_serial, scan_gate_fused, scan_gate_unfused, silu,
+};
 pub use serial::{c_scan_exclusive, c_scan_inclusive};
 pub use tiled::tiled_exclusive;
 

@@ -87,6 +87,38 @@ pub fn mamba_scan_tiled(a: &[f64], b: &[f64], r: usize) -> Vec<f64> {
     out
 }
 
+/// SiLU (swish) activation — the Mamba z-branch gate nonlinearity.
+pub fn silu(x: f64) -> f64 {
+    x / (1.0 + (-x).exp())
+}
+
+/// **Fused** scan → gate: evaluate the recurrence and apply the SiLU gate
+/// `y[t] = h[t] · silu(z[t])` in one pass, never materializing the `h`
+/// buffer — the software mirror of the mapper's scan→gate fusion cluster.
+/// Bit-identical to gating [`mamba_scan_serial`]'s output after the fact
+/// (fusion changes staging, not arithmetic); the integration tests assert
+/// exact equality for ragged lengths.
+pub fn scan_gate_fused(a: &[f64], b: &[f64], z: &[f64]) -> Vec<f64> {
+    assert_eq!(a.len(), b.len(), "scan_gate: a/b length mismatch");
+    assert_eq!(a.len(), z.len(), "scan_gate: z length mismatch");
+    let mut h = 0.0;
+    a.iter()
+        .zip(b)
+        .zip(z)
+        .map(|((&ai, &bi), &zi)| {
+            h = ai * h + bi;
+            h * silu(zi)
+        })
+        .collect()
+}
+
+/// Unfused scan → gate: scan to a staged `h` buffer, then gate it — the
+/// kernel-by-kernel baseline [`scan_gate_fused`] is checked against.
+pub fn scan_gate_unfused(a: &[f64], b: &[f64], z: &[f64]) -> Vec<f64> {
+    assert_eq!(a.len(), z.len(), "scan_gate: z length mismatch");
+    mamba_scan_serial(a, b).iter().zip(z).map(|(&h, &zi)| h * silu(zi)).collect()
+}
+
 /// FLOPs of a Mamba selective scan over `n` steps with the paper's
 /// accounting: each lifted combine is 3 flops (1 mul for `a`, 1 mul + 1 add
 /// for `b`), HS-scan does `n·log₂n` combines, B-scan does `2n`.
@@ -133,6 +165,28 @@ mod tests {
         let b = rng.vec(n, -1.0, 1.0);
         let d = max_abs_diff(&mamba_scan_tiled(&a, &b, 32), &mamba_scan_serial(&a, &b));
         assert!(d < 1e-10, "diff={d}");
+    }
+
+    #[test]
+    fn fused_and_unfused_scan_gate_bit_identical() {
+        let mut rng = XorShift::new(54);
+        for n in [1usize, 7, 100, 1000, 1023] {
+            let a: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 0.99)).collect();
+            let b = rng.vec(n, -1.0, 1.0);
+            let z = rng.vec(n, -3.0, 3.0);
+            assert_eq!(
+                scan_gate_fused(&a, &b, &z),
+                scan_gate_unfused(&a, &b, &z),
+                "n={n}: fusion must not change a single bit"
+            );
+        }
+    }
+
+    #[test]
+    fn silu_shape() {
+        assert_eq!(silu(0.0), 0.0);
+        assert!(silu(10.0) > 9.99 && silu(10.0) < 10.0);
+        assert!(silu(-10.0) > -1e-3 && silu(-10.0) < 0.0);
     }
 
     #[test]

@@ -77,6 +77,54 @@ pub fn sharded_estimate(
     cfg: &RduConfig,
     link: &InterchipLink,
 ) -> Result<ShardedEstimate, MapFailure> {
+    let (graph, comm_bytes, comm_seconds) = sharded_graph_and_comm(model, dc, chips, link);
+    let per_chip = estimate(&graph, cfg)?;
+    Ok(ShardedEstimate {
+        model,
+        chips,
+        comm_seconds,
+        comm_bytes,
+        total_seconds: per_chip.total_seconds + comm_seconds,
+        per_chip,
+    })
+}
+
+/// Sharded estimate at *launch granularity*: the per-chip term uses the
+/// fusion-plan pricing ([`crate::dfmodel::estimate_fused`] when `fused`,
+/// [`crate::dfmodel::estimate_unfused`] otherwise) instead of the idealized
+/// dataflow bound, so the fusion win composes with the `--chips` deployment
+/// the CLI reports.
+pub fn sharded_estimate_fused(
+    model: ModelKind,
+    dc: &DecoderConfig,
+    chips: usize,
+    cfg: &RduConfig,
+    link: &InterchipLink,
+    fused: bool,
+) -> Result<ShardedEstimate, MapFailure> {
+    use crate::dfmodel::{estimate_fused, estimate_unfused};
+    let (graph, comm_bytes, comm_seconds) = sharded_graph_and_comm(model, dc, chips, link);
+    let per_chip =
+        if fused { estimate_fused(&graph, cfg)? } else { estimate_unfused(&graph, cfg)? };
+    Ok(ShardedEstimate {
+        model,
+        chips,
+        comm_seconds,
+        comm_bytes,
+        total_seconds: per_chip.total_seconds + comm_seconds,
+        per_chip,
+    })
+}
+
+/// One chip's workload graph plus the inter-chip communication term of the
+/// sharded dataflow — the part shared by the idealized and fusion-aware
+/// sharded estimates.
+fn sharded_graph_and_comm(
+    model: ModelKind,
+    dc: &DecoderConfig,
+    chips: usize,
+    link: &InterchipLink,
+) -> (crate::graph::Graph, f64, f64) {
     assert!(chips >= 1, "sharded_estimate: need at least one chip");
     assert!(
         dc.seq_len % chips == 0,
@@ -118,15 +166,7 @@ pub fn sharded_estimate(
             panic!("sharded_estimate: sequence sharding covers the SSM decoders, not attention")
         }
     };
-    let per_chip = estimate(&graph, cfg)?;
-    Ok(ShardedEstimate {
-        model,
-        chips,
-        comm_seconds,
-        comm_bytes,
-        total_seconds: per_chip.total_seconds + comm_seconds,
-        per_chip,
-    })
+    (graph, comm_bytes, comm_seconds)
 }
 
 /// Strong-scaling sweep: the same total sequence `dc.seq_len` over each
@@ -255,6 +295,32 @@ mod tests {
         let b = sharded_estimate(ModelKind::Hyena, &dc(), 4, &cfg, &slow).unwrap();
         assert!(b.comm_share() > a.comm_share());
         assert_eq!(a.comm_bytes, b.comm_bytes, "traffic is link-independent");
+    }
+
+    #[test]
+    fn fused_sharded_beats_unfused_sharded() {
+        // The fusion win composes with sharding: at any chip count the
+        // communication term is identical, so the per-chip launch savings
+        // carry straight through to the total.
+        let link = InterchipLink::rdu_fabric();
+        let dc = DecoderConfig::paper(1 << 12); // the ISSUE-3 L = 4K point
+        for (model, cfg) in [
+            (ModelKind::Mamba, RduConfig::hs_scan_mode()),
+            (ModelKind::Hyena, RduConfig::fft_mode()),
+        ] {
+            for chips in [1usize, 2] {
+                let f = sharded_estimate_fused(model, &dc, chips, &cfg, &link, true).unwrap();
+                let u = sharded_estimate_fused(model, &dc, chips, &cfg, &link, false).unwrap();
+                assert_eq!(f.comm_seconds, u.comm_seconds);
+                assert_eq!(f.comm_bytes, u.comm_bytes);
+                assert!(
+                    f.total_seconds < u.total_seconds,
+                    "{model} chips={chips}: fused {} !< unfused {}",
+                    f.total_seconds,
+                    u.total_seconds
+                );
+            }
+        }
     }
 
     #[test]

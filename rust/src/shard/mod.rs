@@ -27,9 +27,11 @@ pub mod estimate;
 pub mod fft;
 pub mod scan;
 
-pub use estimate::{sharded_estimate, strong_scaling, ScalingPoint, ShardedEstimate};
+pub use estimate::{
+    sharded_estimate, sharded_estimate_fused, strong_scaling, ScalingPoint, ShardedEstimate,
+};
 pub use fft::{sharded_bailey_fft, transpose_bytes};
-pub use scan::{carry_exchange_bytes, sharded_mamba_scan};
+pub use scan::{carry_exchange_bytes, sharded_mamba_scan, sharded_scan_gate_fused};
 
 use std::ops::Range;
 

@@ -29,10 +29,10 @@ use crate::scan::recurrence::{combine, LinStep};
 /// The identity of the lifted recurrence: `h → 1·h + 0`.
 const IDENTITY: LinStep = LinStep { a: 1.0, b: 0.0 };
 
-/// Evaluate the Mamba recurrence `h[t] = a[t]·h[t-1] + b[t]` from `h0 = 0`
-/// sharded over `chips` chips. Exact vs [`crate::scan::mamba_scan_serial`]
-/// up to floating-point regrouping; see the module docs for the dataflow.
-pub fn sharded_mamba_scan(a: &[f64], b: &[f64], chips: usize) -> Vec<f64> {
+/// Phases 1 and 2 of the sharded scan, shared by the plain and gate-fused
+/// drivers: per-chip local inclusive scans of the lifted steps plus the
+/// exclusive prefix of per-chip carries.
+fn locals_and_carries(a: &[f64], b: &[f64], chips: usize) -> (Vec<Vec<LinStep>>, Vec<LinStep>) {
     assert_eq!(a.len(), b.len(), "sharded_mamba_scan: a/b length mismatch");
     assert!(chips >= 1, "sharded_mamba_scan: need at least one chip");
     let ranges = shard_ranges(a.len(), chips);
@@ -69,6 +69,14 @@ pub fn sharded_mamba_scan(a: &[f64], b: &[f64], chips: usize) -> Vec<f64> {
             c
         })
         .collect();
+    (locals, carry_in)
+}
+
+/// Evaluate the Mamba recurrence `h[t] = a[t]·h[t-1] + b[t]` from `h0 = 0`
+/// sharded over `chips` chips. Exact vs [`crate::scan::mamba_scan_serial`]
+/// up to floating-point regrouping; see the module docs for the dataflow.
+pub fn sharded_mamba_scan(a: &[f64], b: &[f64], chips: usize) -> Vec<f64> {
+    let (locals, carry_in) = locals_and_carries(a, b, chips);
 
     // Phase 3 — per chip, in parallel: apply the carry-in state. From
     // h0 = 0 the carry-in state is just `carry.b`.
@@ -76,6 +84,27 @@ pub fn sharded_mamba_scan(a: &[f64], b: &[f64], chips: usize) -> Vec<f64> {
     for (l, c) in locals.iter().zip(&carry_in) {
         let h_in = c.b;
         out.extend(l.iter().map(|s| s.a * h_in + s.b));
+    }
+    out
+}
+
+/// Sharded scan with the SiLU gate **fused into phase 3**: each chip's
+/// carry-application pass emits `h[t] · silu(z[t])` directly instead of
+/// staging the full `h` buffer and gating it in a second kernel — the
+/// multi-chip mirror of the mapper's scan→gate fusion cluster. Because
+/// the gate multiplies the very value phase 3 produces, the result is
+/// bit-identical to gating [`sharded_mamba_scan`]'s output after the fact
+/// (the integration tests assert exact equality, ragged lengths included).
+pub fn sharded_scan_gate_fused(a: &[f64], b: &[f64], z: &[f64], chips: usize) -> Vec<f64> {
+    assert_eq!(a.len(), z.len(), "sharded_scan_gate_fused: z length mismatch");
+    let (locals, carry_in) = locals_and_carries(a, b, chips);
+    let mut out = Vec::with_capacity(a.len());
+    for (l, c) in locals.iter().zip(&carry_in) {
+        let h_in = c.b;
+        for s in l {
+            let zi = z[out.len()];
+            out.push((s.a * h_in + s.b) * crate::scan::silu(zi));
+        }
     }
     out
 }
@@ -121,6 +150,28 @@ mod tests {
         assert!(sharded_mamba_scan(&[], &[], 4).is_empty());
         let got = sharded_mamba_scan(&[0.5], &[2.0], 8);
         assert_eq!(got, vec![2.0], "more chips than elements");
+    }
+
+    #[test]
+    fn gate_fused_bit_identical_to_staged_gate() {
+        let mut rng = XorShift::new(62);
+        for &n in &[1usize, 9, 100, 1000, 1023] {
+            let a: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 0.99)).collect();
+            let b = rng.vec(n, -1.0, 1.0);
+            let z = rng.vec(n, -3.0, 3.0);
+            for chips in [1usize, 2, 3, 8] {
+                let staged: Vec<f64> = sharded_mamba_scan(&a, &b, chips)
+                    .iter()
+                    .zip(&z)
+                    .map(|(&h, &zi)| h * crate::scan::silu(zi))
+                    .collect();
+                assert_eq!(
+                    sharded_scan_gate_fused(&a, &b, &z, chips),
+                    staged,
+                    "n={n} chips={chips}"
+                );
+            }
+        }
     }
 
     #[test]

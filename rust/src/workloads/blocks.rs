@@ -70,22 +70,22 @@ pub fn mlp_block(g: &mut Graph, cfg: &DecoderConfig, after: KernelId) -> KernelI
     let act = cfg.act_bytes();
 
     let res1 = eltwise(g, cfg, "residual1", (l * d) as f64, 1.0, 2.0);
-    g.connect(after, res1, act);
+    g.connect_stream(after, res1, act);
 
     let ln2 = layer_norm(g, cfg, "ln2", d);
-    g.connect(res1, ln2, act);
+    g.connect_stream(res1, ln2, act);
 
     let fc1 = gemm(g, cfg, "mlp.fc1", l, h, d);
-    g.connect(ln2, fc1, act);
+    g.connect_stream(ln2, fc1, act);
 
     let gelu = eltwise(g, cfg, "mlp.gelu", (l * h) as f64, 8.0, 1.0);
-    g.connect(fc1, gelu, l as f64 * h as f64 * b);
+    g.connect_stream(fc1, gelu, l as f64 * h as f64 * b);
 
     let fc2 = gemm(g, cfg, "mlp.fc2", l, d, h);
-    g.connect(gelu, fc2, l as f64 * h as f64 * b);
+    g.connect_stream(gelu, fc2, l as f64 * h as f64 * b);
 
     let res2 = eltwise(g, cfg, "residual2", (l * d) as f64, 1.0, 2.0);
-    g.connect(fc2, res2, act);
+    g.connect_stream(fc2, res2, act);
     g.connect(res1, res2, act);
     res2
 }

@@ -29,6 +29,11 @@ fn fft_op(variant: BaileyVariant) -> OpClass {
 /// Add one FFT-convolution module: FFT(x), FFT(filter), frequency-domain
 /// complex product, iFFT. All transforms are length `fft_len` (= 2L padded)
 /// over `D` independent channels.
+///
+/// Every edge of the conv chain is a *stream* edge (the FFT ingests its
+/// producer through its corner-turn PMU buffer; the frequency product and
+/// inverse transform consume in emission order), so the fusion pass can
+/// cluster the whole FFT → eltwise → iFFT dataflow into one section.
 fn fft_conv(
     g: &mut Graph,
     cfg: &DecoderConfig,
@@ -50,13 +55,13 @@ fn fft_conv(
         Kernel::new(&format!("{tag}.fft_x"), op, per_fft, real_bytes, cplx_bytes)
             .with_stream(n as f64, d),
     );
-    g.connect(x, fft_x, cfg.act_bytes());
+    g.connect_stream(x, fft_x, cfg.act_bytes());
 
     let fft_k = g.add(
         Kernel::new(&format!("{tag}.fft_k"), op, per_fft, real_bytes, cplx_bytes)
             .with_stream(n as f64, d),
     );
-    g.connect(filt, fft_k, cfg.act_bytes());
+    g.connect_stream(filt, fft_k, cfg.act_bytes());
 
     // Frequency-domain pointwise complex multiply: 6 FLOP per complex pair.
     let mul = g.add(
@@ -69,14 +74,14 @@ fn fft_conv(
         )
         .with_stream(n as f64, d),
     );
-    g.connect(fft_x, mul, cplx_bytes);
-    g.connect(fft_k, mul, cplx_bytes);
+    g.connect_stream(fft_x, mul, cplx_bytes);
+    g.connect_stream(fft_k, mul, cplx_bytes);
 
     let ifft = g.add(
         Kernel::new(&format!("{tag}.ifft"), op, per_fft, cplx_bytes, real_bytes)
             .with_stream(n as f64, d),
     );
-    g.connect(mul, ifft, cplx_bytes);
+    g.connect_stream(mul, ifft, cplx_bytes);
     ifft
 }
 
@@ -117,18 +122,18 @@ pub fn hyena_decoder(cfg: &DecoderConfig, variant: BaileyVariant) -> Graph {
 
     // Gate with k (Hyena's element-wise multiplicative gating).
     let gate1 = eltwise(&mut g, cfg, "gate1", (l * d) as f64, 1.0, 2.0);
-    g.connect(conv1, gate1, act);
+    g.connect_stream(conv1, gate1, act);
     g.connect(k, gate1, act);
 
     // Second conv replaces A·V.
     let conv2 = fft_conv(&mut g, cfg, "conv2", variant, gate1, filt2);
 
     let gate2 = eltwise(&mut g, cfg, "gate2", (l * d) as f64, 1.0, 2.0);
-    g.connect(conv2, gate2, act);
+    g.connect_stream(conv2, gate2, act);
     g.connect(v, gate2, act);
 
     let out = gemm(&mut g, cfg, "proj.out", l, d, d);
-    g.connect(gate2, out, act);
+    g.connect_stream(gate2, out, act);
 
     let last = blocks::mlp_block(&mut g, cfg, out);
     g.output(last, act);
@@ -198,5 +203,25 @@ mod tests {
         let g = hyena_decoder(&DecoderConfig::paper(1 << 14), BaileyVariant::Vector);
         let n = g.kernels.iter().filter(|k| k.op == OpClass::VectorFft).count();
         assert_eq!(n, 6);
+    }
+
+    #[test]
+    fn conv_chains_are_stream_edges() {
+        // Each conv contributes 4 stream edges (x→fft, filt→fft, 2×fft→mul,
+        // mul→ifft = 5) plus conv→gate; the fusion pass depends on them.
+        let g = hyena_decoder(&DecoderConfig::paper(1 << 12), BaileyVariant::Vector);
+        assert!(g.stream_bytes() > 0.0);
+        let id = |name: &str| g.kernels.iter().position(|k| k.name == name).unwrap();
+        for tag in ["conv1", "conv2"] {
+            let mul = id(&format!("{tag}.freqmul"));
+            assert_eq!(g.stream_predecessors(mul).len(), 2, "{tag}: both FFTs stream in");
+            let ifft = id(&format!("{tag}.ifft"));
+            assert_eq!(g.stream_predecessors(ifft), vec![mul]);
+        }
+        // Gating second operands are deliberately *not* streams (they must
+        // be buffered until the conv drains).
+        let gate1 = id("gate1");
+        assert_eq!(g.stream_predecessors(gate1), vec![id("conv1.ifft")]);
+        assert_eq!(g.predecessors(gate1).len(), 2);
     }
 }

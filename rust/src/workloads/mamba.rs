@@ -62,19 +62,19 @@ pub fn mamba_decoder(cfg: &DecoderConfig, variant: ScanVariant) -> Graph {
 
     // Input projection produces both the x branch and the z gate branch.
     let in_proj = gemm(&mut g, cfg, "in_proj", l, 2 * di, d);
-    g.connect(ln1, in_proj, act);
+    g.connect_stream(ln1, in_proj, act);
 
     // Short depthwise causal conv (kernel width 4) + SiLU on the x branch.
     let conv1d = eltwise(&mut g, cfg, "conv1d", (l * di) as f64, 8.0, 1.0);
-    g.connect(in_proj, conv1d, act_inner);
+    g.connect_stream(in_proj, conv1d, act_inner);
     let silu = eltwise(&mut g, cfg, "silu.x", (l * di) as f64, 4.0, 1.0);
-    g.connect(conv1d, silu, act_inner);
+    g.connect_stream(conv1d, silu, act_inner);
 
     // Data-dependent SSM parameters: B, C, Δ (the "selective" part).
     let x_proj = gemm(&mut g, cfg, "x_proj", l, dt_rank + 2 * n, di);
-    g.connect(silu, x_proj, act_inner);
+    g.connect_stream(silu, x_proj, act_inner);
     let dt_proj = gemm(&mut g, cfg, "dt_proj", l, di, dt_rank);
-    g.connect(x_proj, dt_proj, l as f64 * dt_rank as f64 * b);
+    g.connect_stream(x_proj, dt_proj, l as f64 * dt_rank as f64 * b);
 
     // Discretization: ā = exp(Δ·A), b̄ = Δ·B·x per (position, channel,
     // state) ≈ 4 FLOP each.
@@ -88,7 +88,7 @@ pub fn mamba_decoder(cfg: &DecoderConfig, variant: ScanVariant) -> Graph {
         )
         .with_stream(l as f64, (di * n) as f64),
     );
-    g.connect(dt_proj, disc, act_inner);
+    g.connect_stream(dt_proj, disc, act_inner);
     g.connect(x_proj, disc, l as f64 * (2 * n) as f64 * b);
 
     // The selective scan: h[t] = ā[t]·h[t−1] + b̄[t] over L positions for
@@ -102,7 +102,7 @@ pub fn mamba_decoder(cfg: &DecoderConfig, variant: ScanVariant) -> Graph {
         Kernel::new("selective_scan", scan_op, scan_flops(cfg, variant), scan_bytes, scan_bytes / 2.0)
             .with_stream(l as f64, (di * n) as f64),
     );
-    g.connect(disc, scan, scan_bytes);
+    g.connect_stream(disc, scan, scan_bytes);
 
     // Output contraction y[t,c] = Σ_n C[t,n]·h[t,c,n].
     let contract = g.add(
@@ -115,16 +115,16 @@ pub fn mamba_decoder(cfg: &DecoderConfig, variant: ScanVariant) -> Graph {
         )
         .with_stream(l as f64, di as f64),
     );
-    g.connect(scan, contract, scan_bytes / 2.0);
+    g.connect_stream(scan, contract, scan_bytes / 2.0);
     g.connect(x_proj, contract, l as f64 * n as f64 * b);
 
     // Gate with the z branch (SiLU(z) ⊙ y).
     let gate = eltwise(&mut g, cfg, "gate.z", (l * di) as f64, 5.0, 2.0);
-    g.connect(contract, gate, act_inner);
+    g.connect_stream(contract, gate, act_inner);
     g.connect(in_proj, gate, act_inner);
 
     let out_proj = gemm(&mut g, cfg, "out_proj", l, d, di);
-    g.connect(gate, out_proj, act_inner);
+    g.connect_stream(gate, out_proj, act_inner);
 
     let last = blocks::mlp_block(&mut g, cfg, out_proj);
     g.output(last, act);
@@ -170,6 +170,19 @@ mod tests {
         let ma = mamba_decoder(&cfg, ScanVariant::Parallel).total_flops();
         let at = super::super::attention::attention_decoder(&cfg).total_flops();
         assert!(at / ma > 500.0, "at/ma = {}", at / ma);
+    }
+
+    #[test]
+    fn scan_gate_proj_spine_is_streamed() {
+        // The scan → gate → proj chain the fusion pass clusters: every hop
+        // is a stream edge; the z-gate's second operand is buffered.
+        let g = mamba_decoder(&DecoderConfig::paper(1 << 12), ScanVariant::Parallel);
+        let id = |name: &str| g.kernels.iter().position(|k| k.name == name).unwrap();
+        assert_eq!(g.stream_predecessors(id("selective_scan")), vec![id("discretize")]);
+        assert_eq!(g.stream_predecessors(id("c_contract")), vec![id("selective_scan")]);
+        assert_eq!(g.stream_predecessors(id("gate.z")), vec![id("c_contract")]);
+        assert_eq!(g.stream_predecessors(id("out_proj")), vec![id("gate.z")]);
+        assert_eq!(g.predecessors(id("gate.z")).len(), 2, "z branch is buffered, not streamed");
     }
 
     #[test]
