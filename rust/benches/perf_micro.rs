@@ -1,32 +1,177 @@
-//! Perf microbenchmarks: the hot paths of each Rust layer — algorithm
-//! substrates, PCU simulator, DFModel pipeline, coordinator batching —
-//! tracked across the optimization pass (EXPERIMENTS.md §Perf).
+//! Hot-path microbenchmarks + the compute-engine perf gate.
+//!
+//! Measures the three engine wins of the hot-path pass on L ∈ {1k, 4k, 16k}
+//! and the pre-existing layer hot paths, then writes the machine-readable
+//! trajectory to `BENCH_hotpath.json` at the repo root (run with `--json`):
+//!
+//! * **planned vs naive** — [`FftPlan`]'s cached twiddle/bit-reversal
+//!   tables vs the per-call-trig Cooley–Tukey transform;
+//! * **real vs complex** — the rfft packing-trick convolution vs the
+//!   planned full-complex pipeline (isolating the rfft win from the
+//!   planning win);
+//! * **pooled vs serial** — per-channel Hyena convolutions, per-chip
+//!   sharded Mamba scan / Bailey FFT, and the pooled continuous-batching
+//!   session sim over the `std::thread::scope` worker pool.
+//!
+//! This target doubles as the CI gate: it **exits non-zero if the planned
+//! real-input convolution is not ≥1.5× faster than the pre-plan naive
+//! complex path at L = 4k** — the acceptance floor of the engine pass.
+//!
+//!     cargo bench --bench perf_micro -- --quick --json
 
 use ssm_rdu::arch::{PcuGeometry, RduConfig};
 use ssm_rdu::bench::{black_box, Bencher};
-use ssm_rdu::coordinator::{run_batch, Batch, Executor, Metrics, MockExecutor, Request};
+use ssm_rdu::coordinator::{
+    run_batch, Batch, Executor, ExecutorFactory, Metrics, MockExecutor, Request,
+};
 use ssm_rdu::dfmodel;
-use ssm_rdu::fft::{bailey_fft, fft, to_complex, BaileyVariant};
+use ssm_rdu::fft::{
+    bailey_fft, fft, fft_conv_circular_naive, fft_conv_linear, fft_conv_linear_channels,
+    to_complex, BaileyVariant, ConvPlan, CplxConvPlan, FftPlan,
+};
 use ssm_rdu::pcusim::{self, Pcu};
-use ssm_rdu::runtime::ModelKind;
+use ssm_rdu::runtime::{ModelKind, WorkerPool};
 use ssm_rdu::scan::{blelloch_exclusive, c_scan_exclusive, hillis_steele_inclusive, tiled_exclusive};
+use ssm_rdu::session::driver::{simulate, simulate_pooled, SimConfig};
+use ssm_rdu::shard::{
+    sharded_bailey_fft, sharded_bailey_fft_pooled, sharded_mamba_scan, sharded_mamba_scan_pooled,
+};
 use ssm_rdu::util::{C64, XorShift};
 use ssm_rdu::workloads::{hyena_decoder, DecoderConfig};
 use std::sync::mpsc::channel;
 
-fn main() {
-    let mut b = Bencher::from_env("perf_micro");
-    let mut rng = XorShift::new(99);
+/// The acceptance floor: planned real-FFT conv vs naive complex at L=4k.
+const GATE_L: usize = 1 << 12;
+const GATE_MIN_SPEEDUP: f64 = 1.5;
 
-    // --- FFT substrate ----------------------------------------------------
+fn main() {
+    let mut b = Bencher::from_env("hotpath");
+    let mut rng = XorShift::new(99);
+    let pool = WorkerPool::from_env();
+    b.metric("pool_threads", pool.threads() as f64);
+
+    // --- FFT substrate: planned vs naive transform ------------------------
     let x16k = to_complex(&rng.vec(1 << 14, -1.0, 1.0));
-    b.bench("fft substrate: cooley-tukey 16K", || fft(&x16k));
+    b.bench("fft substrate: naive cooley-tukey 16K", || fft(&x16k));
+    let plan16k = FftPlan::new(1 << 14);
+    let mut fbuf = x16k.clone();
+    b.bench("fft substrate: planned in-place 16K", || {
+        fbuf.copy_from_slice(&x16k);
+        plan16k.fft_in_place(&mut fbuf);
+        fbuf[0]
+    });
     b.bench("fft substrate: bailey-vector 16K (R=32)", || {
         bailey_fft(&x16k, 32, BaileyVariant::Vector)
     });
     b.bench("fft substrate: bailey-gemm 16K (R=32)", || {
         bailey_fft(&x16k, 32, BaileyVariant::Gemm)
     });
+
+    // --- Convolution engine: naive vs planned-complex vs planned-real ----
+    let mut gate_speedup = 0.0f64;
+    for l in [1usize << 10, 1 << 12, 1 << 14] {
+        let u = rng.vec(l, -1.0, 1.0);
+        let k = rng.vec(l, -1.0, 1.0);
+        let naive =
+            b.bench(&format!("conv: naive complex L={l}"), || fft_conv_circular_naive(&u, &k)).min;
+        let mut cplx = CplxConvPlan::new(l);
+        let planned_cplx =
+            b.bench(&format!("conv: planned complex L={l}"), || cplx.circular(&u, &k)).min;
+        let mut real = ConvPlan::new(l);
+        let mut out = vec![0.0; l];
+        let planned_real = b
+            .bench(&format!("conv: planned real L={l}"), || {
+                real.circular_into(&u, &k, &mut out);
+                out[0]
+            })
+            .min;
+        b.metric(&format!("conv_naive_complex_s_L{l}"), naive);
+        b.metric(&format!("conv_planned_complex_s_L{l}"), planned_cplx);
+        b.metric(&format!("conv_planned_real_s_L{l}"), planned_real);
+        b.metric(&format!("conv_speedup_planned_vs_naive_L{l}"), naive / planned_cplx);
+        b.metric(&format!("conv_speedup_real_vs_complex_L{l}"), planned_cplx / planned_real);
+        b.metric(&format!("conv_speedup_planned_real_vs_naive_L{l}"), naive / planned_real);
+        if l == GATE_L {
+            gate_speedup = naive / planned_real;
+        }
+    }
+
+    // --- Pooled vs serial: per-channel Hyena convolutions -----------------
+    for l in [1usize << 10, 1 << 12] {
+        let d = 32;
+        let us: Vec<Vec<f64>> = (0..d).map(|_| rng.vec(l, -1.0, 1.0)).collect();
+        let ks: Vec<Vec<f64>> = (0..d).map(|_| rng.vec(l, -1.0, 1.0)).collect();
+        let serial = b
+            .bench(&format!("hyena channels: serial D=32 L={l}"), || {
+                us.iter().zip(&ks).map(|(u, k)| fft_conv_linear(u, k)).collect::<Vec<_>>()
+            })
+            .min;
+        let pooled = b
+            .bench(&format!("hyena channels: pooled D=32 L={l}"), || {
+                fft_conv_linear_channels(&us, &ks, &pool)
+            })
+            .min;
+        b.metric(&format!("hyena_channels_serial_s_L{l}"), serial);
+        b.metric(&format!("hyena_channels_pooled_s_L{l}"), pooled);
+        b.metric(&format!("hyena_channels_pool_speedup_L{l}"), serial / pooled);
+    }
+
+    // --- Pooled vs serial: sharded dataflows -------------------------------
+    let n = 1 << 18;
+    let sa: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 0.99)).collect();
+    let sb = rng.vec(n, -1.0, 1.0);
+    let chips = 4;
+    let scan_serial = b
+        .bench("sharded scan: serial 4 chips 256K", || sharded_mamba_scan(&sa, &sb, chips))
+        .min;
+    let scan_pooled = b
+        .bench("sharded scan: pooled 4 chips 256K", || {
+            sharded_mamba_scan_pooled(&sa, &sb, chips, &pool)
+        })
+        .min;
+    b.metric("sharded_scan_serial_s", scan_serial);
+    b.metric("sharded_scan_pooled_s", scan_pooled);
+    b.metric("sharded_scan_pool_speedup", scan_serial / scan_pooled);
+
+    let xf: Vec<C64> = (0..1 << 14)
+        .map(|_| C64::new(rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0)))
+        .collect();
+    let fft_serial = b
+        .bench("sharded fft: serial 4 chips 16K", || {
+            sharded_bailey_fft(&xf, 32, chips, BaileyVariant::Vector)
+        })
+        .min;
+    let fft_pooled = b
+        .bench("sharded fft: pooled 4 chips 16K", || {
+            sharded_bailey_fft_pooled(&xf, 32, chips, BaileyVariant::Vector, &pool)
+        })
+        .min;
+    b.metric("sharded_fft_serial_s", fft_serial);
+    b.metric("sharded_fft_pooled_s", fft_pooled);
+    b.metric("sharded_fft_pool_speedup", fft_serial / fft_pooled);
+
+    // --- Pooled vs serial: continuous-batching session sim -----------------
+    {
+        let cfg = SimConfig::demo(32, 8);
+        let d_model = cfg.mamba_shape.d_model;
+        let rdu = RduConfig::hs_scan_mode();
+        let sim_serial = b
+            .bench("session sim: serial 32x8", || {
+                let mut exec = MockExecutor::new(1, d_model);
+                simulate(&mut exec, &cfg, &rdu).unwrap().tokens
+            })
+            .min;
+        let factory: ExecutorFactory =
+            Box::new(move || Ok(Box::new(MockExecutor::new(1, d_model)) as Box<dyn Executor>));
+        let threads = pool.threads().min(4);
+        let sim_pooled = b
+            .bench("session sim: pooled 32x8", || {
+                simulate_pooled(&factory, &cfg, &rdu, threads).unwrap().tokens
+            })
+            .min;
+        b.metric("session_sim_serial_s", sim_serial);
+        b.metric("session_sim_pooled_s", sim_pooled);
+    }
 
     // --- Scan substrate ---------------------------------------------------
     let v64k = rng.vec(1 << 16, -1.0, 1.0);
@@ -65,5 +210,22 @@ fn main() {
         black_box(rx.try_iter().count())
     });
 
+    b.metric("conv_gate_speedup_L4096", gate_speedup);
+    b.metric("conv_gate_min_speedup", GATE_MIN_SPEEDUP);
     b.finish();
+
+    // The perf gate (CI fails on regression rather than silently eroding
+    // the engine win): planned real conv must beat the pre-plan naive
+    // complex path by the acceptance floor at L = 4k.
+    if gate_speedup < GATE_MIN_SPEEDUP {
+        eprintln!(
+            "HOT-PATH PERF REGRESSION: planned real conv is only {gate_speedup:.2}x the naive \
+             complex path at L={GATE_L} (gate: >= {GATE_MIN_SPEEDUP}x)"
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "hot-path gate OK: planned real conv {gate_speedup:.2}x naive complex at L={GATE_L} \
+         (gate: >= {GATE_MIN_SPEEDUP}x)"
+    );
 }

@@ -17,12 +17,17 @@
 //! ## Machine-readable output
 //!
 //! [`Bencher::finish`] also emits the run as JSON when asked: pass `--json`
-//! (default path `BENCH_<group>.json` in the working directory) or
+//! (default path `BENCH_<group>.json` in the **workspace root**) or
 //! `--json=PATH`, or set `SSM_RDU_BENCH_JSON` (`1` → default path,
-//! anything else → that path). Besides the wall-time stats, benches can
-//! attach *model-derived* scalars with [`Bencher::metric`] — the `fusion`
-//! bench records fused/unfused DFModel latencies this way, seeding the
-//! repo's `BENCH_*.json` perf trajectory that CI archives and gates on.
+//! anything else → that path). Relative paths resolve against the
+//! workspace root, not the invoking cwd — `cargo bench` happens to run
+//! benches from the workspace root, but direct `target/release/deps/...`
+//! invocations and IDE runners don't, and the perf-trajectory tooling
+//! globs `BENCH_*.json` at the repo root. Besides the wall-time stats,
+//! benches can attach *model-derived* scalars with [`Bencher::metric`] —
+//! the `fusion` and `perf_micro` benches record DFModel latencies and
+//! planned-vs-naive speedups this way, seeding the repo's `BENCH_*.json`
+//! perf trajectory that CI archives and gates on.
 
 use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
@@ -231,21 +236,22 @@ impl Bencher {
 
     /// Where the JSON report should go, if requested: `--json[=PATH]` in
     /// argv, or the `SSM_RDU_BENCH_JSON` env var (`1`/`true` → the default
-    /// `BENCH_<group>.json` in the working directory, anything else → the
-    /// given path).
+    /// `BENCH_<group>.json` in the workspace root, anything else → that
+    /// path, resolved against the workspace root when relative).
     fn json_destination(&self) -> Option<PathBuf> {
-        let default = || PathBuf::from(format!("BENCH_{}.json", self.group));
         for a in std::env::args() {
             if a == "--json" {
-                return Some(default());
+                return Some(default_json_path(&self.group));
             }
             if let Some(p) = a.strip_prefix("--json=") {
-                return Some(PathBuf::from(p));
+                return Some(resolve_json_path(PathBuf::from(p)));
             }
         }
         match std::env::var("SSM_RDU_BENCH_JSON") {
-            Ok(v) if v == "1" || v.eq_ignore_ascii_case("true") => Some(default()),
-            Ok(v) if !v.is_empty() => Some(PathBuf::from(v)),
+            Ok(v) if v == "1" || v.eq_ignore_ascii_case("true") => {
+                Some(default_json_path(&self.group))
+            }
+            Ok(v) if !v.is_empty() => Some(resolve_json_path(PathBuf::from(v))),
             _ => None,
         }
     }
@@ -264,6 +270,28 @@ impl Bencher {
                 Err(e) => eprintln!("failed to write {}: {e}", path.display()),
             }
         }
+    }
+}
+
+/// The workspace root (baked in at compile time): where every
+/// `BENCH_*.json` lands so the perf-trajectory tooling and CI artifact
+/// globs always find them, regardless of the invoking cwd.
+pub fn workspace_root() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Default JSON report path for a bench group: `<workspace>/BENCH_<group>.json`.
+pub fn default_json_path(group: &str) -> PathBuf {
+    workspace_root().join(format!("BENCH_{group}.json"))
+}
+
+/// Resolve an explicitly requested report path: absolute paths pass
+/// through, relative ones anchor at the workspace root (not the cwd).
+fn resolve_json_path(p: PathBuf) -> PathBuf {
+    if p.is_absolute() {
+        p
+    } else {
+        workspace_root().join(p)
     }
 }
 
@@ -323,6 +351,20 @@ mod tests {
         let j = Json::parse(&b.to_json()).unwrap();
         assert_eq!(j.get("benches").unwrap().as_arr().unwrap().len(), 0);
         assert!(j.get("metrics").unwrap().as_obj().unwrap().is_empty());
+    }
+
+    #[test]
+    fn json_paths_anchor_at_the_workspace_root() {
+        let root = workspace_root();
+        assert!(root.join("Cargo.toml").exists(), "manifest dir is the workspace root");
+        assert_eq!(default_json_path("hotpath"), root.join("BENCH_hotpath.json"));
+        assert_eq!(
+            resolve_json_path(PathBuf::from("sub/out.json")),
+            root.join("sub/out.json"),
+            "relative paths resolve against the workspace, not the cwd"
+        );
+        let abs = root.join("abs.json");
+        assert_eq!(resolve_json_path(abs.clone()), abs);
     }
 
     #[test]

@@ -735,15 +735,25 @@ pub fn run_batch(exec: &mut dyn Executor, batch: Batch, metrics: &Metrics) {
     debug_assert!(n <= slots, "batcher must respect artifact slots");
 
     // Pack into the artifact's fixed batch shape, zero-padding empty slots.
+    // Large batches fan the per-slot copies across the worker pool (the
+    // pack is pure disjoint memcpy, so pooling is bit-identical); small
+    // ones stay serial — thread spawn would dominate.
+    const PAR_PACK_MIN_ELEMS: usize = 1 << 20;
     let launched = Instant::now();
     let mut packed = vec![0f32; slots * elems];
-    let mut ok = true;
-    for (i, (req, _)) in batch.requests.iter().enumerate() {
-        if req.input.len() != elems {
-            ok = false;
-            break;
+    let ok = batch.requests.iter().all(|(req, _)| req.input.len() == elems);
+    if ok {
+        if n > 1 && n * elems >= PAR_PACK_MIN_ELEMS {
+            let pool = crate::runtime::WorkerPool::from_env();
+            let mut slices: Vec<&mut [f32]> = packed[..n * elems].chunks_mut(elems).collect();
+            pool.for_each_mut(&mut slices, |i, slot| {
+                slot.copy_from_slice(&batch.requests[i].0.input);
+            });
+        } else {
+            for (i, (req, _)) in batch.requests.iter().enumerate() {
+                packed[i * elems..(i + 1) * elems].copy_from_slice(&req.input);
+            }
         }
-        packed[i * elems..(i + 1) * elems].copy_from_slice(&req.input);
     }
 
     let result = if ok {

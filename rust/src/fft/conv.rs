@@ -1,17 +1,81 @@
 //! FFT-based convolution — the Hyena decoder's core operator (paper Fig. 3B).
 //!
-//! Each Hyena "attention-replacement" computes `y = iFFT(FFT(u) ⊙ FFT(k))`:
-//! two forward transforms, an elementwise (gating) multiply in frequency
-//! domain, and one inverse transform. These functions are the golden model
-//! for the Pallas `fftconv` kernel and for the PCU-simulator FFT programs.
+//! Each Hyena "attention-replacement" computes `y = iFFT(FFT(u) ⊙ FFT(k))`.
+//! These functions are the golden model for the Pallas `fftconv` kernel and
+//! for the PCU-simulator FFT programs.
+//!
+//! Since the hot-path engine pass, [`fft_conv_circular`] and
+//! [`fft_conv_linear`] route through the **planned real-input** pipeline
+//! ([`super::plan`]): two half-size transforms over cached twiddle/
+//! bit-reversal tables and plan-held scratch, instead of three full-size
+//! complex transforms with per-call trig and allocation. The pre-plan
+//! implementations are kept verbatim as [`fft_conv_circular_naive`] /
+//! [`fft_conv_linear_naive`] — they are the baseline the `perf_micro`
+//! bench gates against (planned real must stay ≥1.5× faster at L=4k) and
+//! an independent numerical oracle for the planned path.
+//!
+//! [`fft_conv_linear_channels`] fans the per-channel convolutions of one
+//! Hyena conv module across a [`crate::runtime::WorkerPool`]; channels are
+//! independent and the result is bit-identical to the serial per-channel
+//! loop. Plan reuse under pooling: pool workers are scoped (fresh threads
+//! per call), so each worker builds one plan and reuses it across **its
+//! chunk of channels within the call**; only the calling thread's cache
+//! persists across calls. Amortized over `D/threads` channels this is
+//! cheap, but a persistent worker team would save the rebuild — see
+//! ARCHITECTURE.md §6.
 
+use super::plan::with_conv_plan;
 use super::{cooley_tukey::{fft, ifft}, is_pow2, to_complex, to_real};
+use crate::runtime::WorkerPool;
 use crate::util::C64;
 
-/// Circular convolution of two equal-length real signals via FFT.
+/// Circular convolution of two equal-length real signals via the planned
+/// real-input FFT pipeline.
 ///
 /// `y[n] = Σ_m u[m]·k[(n-m) mod N]`; N must be a power of two.
 pub fn fft_conv_circular(u: &[f64], k: &[f64]) -> Vec<f64> {
+    assert_eq!(u.len(), k.len(), "fft_conv_circular: length mismatch");
+    assert!(is_pow2(u.len()), "fft_conv_circular: length must be 2^k");
+    if u.len() == 1 {
+        return vec![u[0] * k[0]];
+    }
+    with_conv_plan(u.len(), |p| p.circular(u, k))
+}
+
+/// Causal/linear convolution of a length-L signal with a length-L filter,
+/// truncated to the first L outputs (Hyena's long-convolution semantics:
+/// the transform is zero-padded to 2L to avoid wrap-around), via the
+/// planned real-input pipeline.
+pub fn fft_conv_linear(u: &[f64], k: &[f64]) -> Vec<f64> {
+    assert_eq!(u.len(), k.len(), "fft_conv_linear: length mismatch");
+    let l = u.len();
+    if l == 0 {
+        return Vec::new();
+    }
+    let n = (2 * l).next_power_of_two();
+    with_conv_plan(n, |p| p.linear(u, k))
+}
+
+/// Per-channel linear convolutions fanned out over the worker pool — the
+/// golden model for one Hyena conv module across its D channels. Channel
+/// `i` convolves `us[i]` with `ks[i]`; work is chunked contiguously over
+/// the pool's threads (each worker building one plan and reusing it for
+/// its whole chunk — see the module docs for the reuse scope), so the
+/// output is **bit-identical** to the serial per-channel loop.
+pub fn fft_conv_linear_channels(
+    us: &[Vec<f64>],
+    ks: &[Vec<f64>],
+    pool: &WorkerPool,
+) -> Vec<Vec<f64>> {
+    assert_eq!(us.len(), ks.len(), "fft_conv_linear_channels: channel count mismatch");
+    pool.map(us.len(), |i| fft_conv_linear(&us[i], &ks[i]))
+}
+
+/// The pre-plan circular convolution: three full-size complex transforms
+/// with per-call twiddle trig and fresh allocations. Kept as the perf
+/// baseline (`perf_micro` gates planned-real ≥1.5× faster at L=4k) and as
+/// an independent oracle for the planned path.
+pub fn fft_conv_circular_naive(u: &[f64], k: &[f64]) -> Vec<f64> {
     assert_eq!(u.len(), k.len(), "fft_conv_circular: length mismatch");
     assert!(is_pow2(u.len()), "fft_conv_circular: length must be 2^k");
     let fu = fft(&to_complex(u));
@@ -20,10 +84,9 @@ pub fn fft_conv_circular(u: &[f64], k: &[f64]) -> Vec<f64> {
     to_real(&ifft(&prod))
 }
 
-/// Causal/linear convolution of a length-L signal with a length-L filter,
-/// truncated to the first L outputs (Hyena's long-convolution semantics:
-/// the FFT is zero-padded to 2L to avoid wrap-around).
-pub fn fft_conv_linear(u: &[f64], k: &[f64]) -> Vec<f64> {
+/// The pre-plan linear convolution (zero-pad to 2L, naive complex circular
+/// conv, truncate). See [`fft_conv_circular_naive`].
+pub fn fft_conv_linear_naive(u: &[f64], k: &[f64]) -> Vec<f64> {
     assert_eq!(u.len(), k.len(), "fft_conv_linear: length mismatch");
     let l = u.len();
     let n = (2 * l).next_power_of_two();
@@ -31,7 +94,7 @@ pub fn fft_conv_linear(u: &[f64], k: &[f64]) -> Vec<f64> {
     let mut kp = vec![0.0; n];
     up[..l].copy_from_slice(u);
     kp[..l].copy_from_slice(k);
-    let out = fft_conv_circular(&up, &kp);
+    let out = fft_conv_circular_naive(&up, &kp);
     out[..l].to_vec()
 }
 
@@ -65,9 +128,13 @@ pub fn direct_conv_linear(u: &[f64], k: &[f64]) -> Vec<f64> {
     y
 }
 
-/// FLOPs of a Hyena FFT-convolution over L points (paper convention):
-/// three L'-point transforms (two forward + one inverse, L' = 2L padded)
-/// plus the elementwise complex product.
+/// FLOPs of a Hyena FFT-convolution over L points (**paper convention**,
+/// §III-A): three L'-point transforms (two forward + one inverse, L' = 2L
+/// padded) plus the elementwise complex product. This is what
+/// `figures::hyena` and the workload graphs charge — it deliberately does
+/// *not* assume the real-input packing trick, because the paper's design
+/// points don't. The engine's own rfft accounting is
+/// [`fftconv_flops_rfft`].
 pub fn fftconv_flops(l: usize, variant: super::BaileyVariant, r: usize) -> f64 {
     let n = (2 * l).next_power_of_two();
     let fft_cost = match variant {
@@ -75,6 +142,20 @@ pub fn fftconv_flops(l: usize, variant: super::BaileyVariant, r: usize) -> f64 {
         super::BaileyVariant::Gemm => super::gemm_fft_flops(n, r),
     };
     3.0 * fft_cost + 6.0 * n as f64
+}
+
+/// FLOPs of the **planned real-input** convolution over L points — the
+/// engine's own accounting, *not* the paper convention (see
+/// [`fftconv_flops`]): three (N/2)-point complex transforms (two forward,
+/// one inverse — each a real transform via the packing trick), pack/unpack
+/// butterflies (~8 flops per bin at each real boundary), and the
+/// half-spectrum product — roughly half of [`fftconv_flops`].
+pub fn fftconv_flops_rfft(l: usize) -> f64 {
+    let n = (2 * l).next_power_of_two();
+    let half = n / 2;
+    // 3 half-size transforms (2 forward + 1 inverse), O(N) pack/unpack at
+    // each real boundary, 6-flop complex products over N/2+1 bins.
+    3.0 * super::vector_fft_flops(half) + 24.0 * half as f64 + 6.0 * (half + 1) as f64
 }
 
 #[cfg(test)]
@@ -89,6 +170,20 @@ mod tests {
         let k = rng.vec(64, -1.0, 1.0);
         let d = max_abs_diff(&fft_conv_circular(&u, &k), &direct_conv_circular(&u, &k));
         assert!(d < 1e-10, "diff={d}");
+    }
+
+    #[test]
+    fn planned_matches_naive_within_fft_rounding() {
+        // The planned real path and the pre-plan complex path are different
+        // factorizations of the same transform: equal to ~1e-11, far inside
+        // the 1e-9 acceptance budget.
+        let mut rng = XorShift::new(44);
+        for n in [2usize, 8, 64, 1024, 4096] {
+            let u = rng.vec(n, -1.0, 1.0);
+            let k = rng.vec(n, -1.0, 1.0);
+            let d = max_abs_diff(&fft_conv_circular(&u, &k), &fft_conv_circular_naive(&u, &k));
+            assert!(d < 1e-9, "n={n}: diff={d}");
+        }
     }
 
     #[test]
@@ -123,12 +218,38 @@ mod tests {
     }
 
     #[test]
+    fn pooled_channels_bit_identical_to_serial() {
+        let mut rng = XorShift::new(45);
+        let d = 8;
+        for l in [100usize, 1024] {
+            let us: Vec<Vec<f64>> = (0..d).map(|_| rng.vec(l, -1.0, 1.0)).collect();
+            let ks: Vec<Vec<f64>> = (0..d).map(|_| rng.vec(l, -1.0, 1.0)).collect();
+            let serial: Vec<Vec<f64>> =
+                us.iter().zip(&ks).map(|(u, k)| fft_conv_linear(u, k)).collect();
+            let pooled = fft_conv_linear_channels(&us, &ks, &WorkerPool::new(3));
+            assert_eq!(pooled, serial, "L={l}: pooling must not change a single bit");
+        }
+    }
+
+    #[test]
     fn fftconv_flop_counts_scale() {
         // Vector variant ~ 15 N log2 N; GEMM variant = R/log2R times more FFT work.
         let l = 1 << 16;
         let v = fftconv_flops(l, crate::fft::BaileyVariant::Vector, 32);
         let g = fftconv_flops(l, crate::fft::BaileyVariant::Gemm, 32);
         assert!(g / v > 6.0 && g / v < 6.5, "ratio={}", g / v);
+    }
+
+    #[test]
+    fn rfft_flops_are_roughly_half_the_paper_convention() {
+        // Half-size transforms: ~(log N − 1)/(2 log N) of the complex-path
+        // transform flops, so the ratio sits a bit under 0.5 and approaches
+        // it as L grows.
+        for l in [1usize << 12, 1 << 16, 1 << 20] {
+            let ratio =
+                fftconv_flops_rfft(l) / fftconv_flops(l, crate::fft::BaileyVariant::Vector, 32);
+            assert!(ratio > 0.35 && ratio < 0.55, "L={l}: ratio={ratio}");
+        }
     }
 
     #[test]

@@ -15,10 +15,19 @@
 //!   O(N·R·log_R N) FLOPs, maps onto systolic/tensor-core hardware).
 //! * [`conv`] — FFT-based (circular and linear) convolution, the Hyena
 //!   decoder's core operator.
+//! * [`plan`] — the hot-path engine: [`FftPlan`] (cached bit-reversal +
+//!   twiddle tables, zero trig and zero allocation in steady state),
+//!   [`RealFftPlan`] (real-input transforms via the N/2-point packing
+//!   trick, ~half the flops on real signals), and [`ConvPlan`] (the
+//!   allocation-free convolution engine behind [`fft_conv_circular`] /
+//!   [`fft_conv_linear`]).
 //!
 //! FLOP accounting follows the paper's convention (§III-A): a Vector-FFT of
 //! length L costs `5·L·log₂L`, a GEMM-FFT costs `5·L·R·log_R L` — i.e. the
-//! GEMM variant is exactly `R/log₂R`× more work (6.4× at R=32).
+//! GEMM variant is exactly `R/log₂R`× more work (6.4× at R=32). These
+//! constants feed `figures::hyena` and must not change with engine
+//! optimizations; the planned real-input engine's own accounting is
+//! [`conv::fftconv_flops_rfft`].
 //!
 //! **When the mapper picks which variant.** The Hyena workload builder
 //! (`crate::workloads::hyena_decoder`) takes the [`BaileyVariant`] as the
@@ -36,11 +45,16 @@ pub mod bailey;
 pub mod conv;
 pub mod cooley_tukey;
 pub mod dft;
+pub mod plan;
 
 pub use bailey::{bailey_fft, BaileyVariant};
-pub use conv::{fft_conv_circular, fft_conv_linear};
+pub use conv::{
+    fft_conv_circular, fft_conv_circular_naive, fft_conv_linear, fft_conv_linear_channels,
+    fft_conv_linear_naive, fftconv_flops_rfft,
+};
 pub use cooley_tukey::{fft, ifft};
 pub use dft::dft;
+pub use plan::{with_conv_plan, ConvPlan, CplxConvPlan, FftPlan, RealFftPlan};
 
 use crate::util::C64;
 

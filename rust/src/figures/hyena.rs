@@ -5,6 +5,14 @@
 //! Hyena on baseline, (3) GEMM-FFT Hyena on baseline, (4) Vector-FFT Hyena
 //! on the FFT-mode RDU. Paper speedups: D1→D2 217.74×, D2→D3 2.61×,
 //! D3→D4 1.95×.
+//!
+//! **FLOP convention.** This figure charges the paper's full-complex
+//! transform counts (`fft::conv::fftconv_flops` / `fft::vector_fft_flops`
+//! through the workload graphs) so the design ratios above reproduce
+//! exactly. The functional engine's planned real-input path does ~half
+//! that work (`fft::fftconv_flops_rfft`) — an *implementation* win the
+//! paper's design-space comparison deliberately does not assume; do not
+//! "fix" these figures to the rfft counts.
 
 use super::{seq_label, speedup_table, SpeedupRow, PAPER_SEQ_LENS};
 use crate::arch::RduConfig;

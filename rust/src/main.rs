@@ -334,27 +334,36 @@ fn shard_report(chips: usize, seq_len: usize) {
     }
     let p = *counts.last().unwrap();
 
-    // Numerics first: sharding must not change the math.
+    // Numerics first: sharding must not change the math, and the pooled
+    // per-chip execution must not change a single bit vs serial.
+    let pool = ssm_rdu::runtime::WorkerPool::from_env();
     let mut rng = XorShift::new(9);
     let n = 1000;
     let a: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 0.99)).collect();
     let b: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
-    let d_scan = max_abs_diff(
-        &shard::sharded_mamba_scan(&a, &b, p),
-        &ssm_rdu::scan::mamba_scan_serial(&a, &b),
-    );
+    let scan_serial = shard::sharded_mamba_scan(&a, &b, p);
+    let d_scan = max_abs_diff(&scan_serial, &ssm_rdu::scan::mamba_scan_serial(&a, &b));
+    let scan_pooled_ok = shard::sharded_mamba_scan_pooled(&a, &b, p, &pool) == scan_serial;
     let x: Vec<C64> = (0..4096)
         .map(|_| C64::new(rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0)))
         .collect();
     let fp = p.min(32);
-    let d_fft = ssm_rdu::util::complex::max_abs_diff_c(
-        &shard::sharded_bailey_fft(&x, 32, fp, ssm_rdu::fft::BaileyVariant::Vector),
-        &ssm_rdu::fft::fft(&x),
-    );
+    let variant = ssm_rdu::fft::BaileyVariant::Vector;
+    let fft_serial = shard::sharded_bailey_fft(&x, 32, fp, variant);
+    let d_fft =
+        ssm_rdu::util::complex::max_abs_diff_c(&fft_serial, &ssm_rdu::fft::fft(&x));
+    let fft_pooled_ok =
+        shard::sharded_bailey_fft_pooled(&x, 32, fp, variant, &pool) == fft_serial;
     println!(
         "\nsharded dataflow numerics: {p}-chip Mamba scan vs serial |d|={d_scan:.2e}, \
          {fp}-chip Bailey FFT vs Cooley-Tukey |d|={d_fft:.2e}"
     );
+    println!(
+        "pooled execution ({} threads): scan bit-identical: {scan_pooled_ok}, \
+         fft bit-identical: {fft_pooled_ok}",
+        pool.threads()
+    );
+    assert!(scan_pooled_ok && fft_pooled_ok, "pooling must not change the numerics");
 
     // Strong scaling at the paper decoder shape over `link`.
     println!("strong scaling at L={seq_len}, {link}:");

@@ -6,9 +6,17 @@
 //! rejected by the image's xla_extension 0.5.1. One compiled executable per
 //! model variant; Python is never on the request path.
 
+//!
+//! [`pool`] also lives here: the dependency-free [`WorkerPool`] that fans
+//! hot-path golden-model work (per-channel convolutions, per-chip shards,
+//! per-session decode steps, batch packing) across `std::thread::scope`
+//! workers.
+
 pub mod manifest;
+pub mod pool;
 
 pub use manifest::{Manifest, ModelMeta};
+pub use pool::WorkerPool;
 
 use crate::Result;
 use anyhow::{anyhow, Context};

@@ -1,0 +1,225 @@
+//! Dependency-free worker pool over `std::thread::scope` — the fan-out
+//! substrate for every embarrassingly parallel axis in the golden models:
+//! per-channel Hyena convolutions (`crate::fft::conv`), per-chip sharded
+//! scan/FFT execution (`crate::shard`), per-session decode steps
+//! (`crate::session::driver::simulate_pooled`), and large batch packing in
+//! the coordinator. No crates are added: the build stays offline-vendorable.
+//!
+//! ## Design
+//!
+//! * **Scoped, not resident.** Each call spawns its workers inside
+//!   [`std::thread::scope`] and joins them before returning, so closures
+//!   may borrow locals and no thread ever outlives its work. Per-worker
+//!   *state* that must persist across batches (thread-affine executors,
+//!   plan caches) belongs to long-lived loops built directly on
+//!   `thread::scope` (see `simulate_pooled`) or to thread-locals
+//!   (`fft::with_conv_plan`), not to this struct.
+//! * **Deterministic chunking.** Jobs `0..n` are split into at most
+//!   `threads` *contiguous* balanced chunks; outputs are reassembled in
+//!   index order. Combined with per-job independence this makes every
+//!   pooled path **bit-identical** to its serial loop — asserted by the
+//!   integration tests, because the benches' pooled-vs-serial comparison
+//!   is only meaningful if pooling is purely a scheduling transform.
+//! * **Panic = panic.** A panicking worker panics the calling thread with
+//!   the same message; no work is silently dropped.
+
+use std::ops::Range;
+use std::sync::OnceLock;
+
+/// A fixed-width fan-out helper; see the module docs.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerPool {
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// A pool that fans out over `threads` workers (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Self {
+        Self { threads: threads.max(1) }
+    }
+
+    /// A pool that runs everything on the calling thread.
+    pub fn serial() -> Self {
+        Self::new(1)
+    }
+
+    /// Width from the environment: `SSM_RDU_THREADS` if set (0 or unset →
+    /// the machine's available parallelism). Cached after the first read.
+    pub fn from_env() -> Self {
+        static THREADS: OnceLock<usize> = OnceLock::new();
+        let t = *THREADS.get_or_init(|| {
+            std::env::var("SSM_RDU_THREADS")
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .filter(|&v| v > 0)
+                .unwrap_or_else(|| {
+                    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+                })
+        });
+        Self::new(t)
+    }
+
+    /// Worker width of this pool.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run jobs `0..jobs` and collect their outputs in index order. Jobs
+    /// are chunked contiguously over the workers; with one thread (or ≤ 1
+    /// job) this is exactly the serial loop.
+    pub fn map<T, F>(&self, jobs: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if self.threads == 1 || jobs <= 1 {
+            return (0..jobs).map(f).collect();
+        }
+        let ranges = chunk_ranges(jobs, self.threads);
+        let mut chunks: Vec<Vec<T>> = Vec::with_capacity(ranges.len());
+        std::thread::scope(|s| {
+            let handles: Vec<_> = ranges
+                .iter()
+                .map(|r| {
+                    let f = &f;
+                    let r = r.clone();
+                    s.spawn(move || r.map(f).collect::<Vec<T>>())
+                })
+                .collect();
+            for h in handles {
+                chunks.push(h.join().expect("WorkerPool: a worker panicked"));
+            }
+        });
+        chunks.into_iter().flatten().collect()
+    }
+
+    /// Mutate each item in place, `f(index, item)`, chunked contiguously
+    /// over the workers. The disjoint `split_at_mut` chunks make this safe
+    /// without locks; order of observation per item is the serial order
+    /// because each item is touched exactly once.
+    pub fn for_each_mut<T, F>(&self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        let n = items.len();
+        if self.threads == 1 || n <= 1 {
+            for (i, it) in items.iter_mut().enumerate() {
+                f(i, it);
+            }
+            return;
+        }
+        let sizes: Vec<usize> =
+            chunk_ranges(n, self.threads).iter().map(|r| r.len()).collect();
+        std::thread::scope(|s| {
+            let mut rest = items;
+            let mut base = 0usize;
+            for len in sizes {
+                let (head, tail) = rest.split_at_mut(len);
+                rest = tail;
+                let f = &f;
+                s.spawn(move || {
+                    for (j, it) in head.iter_mut().enumerate() {
+                        f(base + j, it);
+                    }
+                });
+                base += len;
+            }
+        });
+    }
+}
+
+/// Balanced contiguous partition of `0..n` into at most `parts` non-empty
+/// ranges (the first `n % parts` ranges take one extra element).
+pub fn chunk_ranges(n: usize, parts: usize) -> Vec<Range<usize>> {
+    let parts = parts.clamp(1, n.max(1));
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < extra);
+        out.push(lo..lo + len);
+        lo += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn map_preserves_index_order() {
+        for threads in [1usize, 2, 3, 8, 33] {
+            let pool = WorkerPool::new(threads);
+            let got = pool.map(100, |i| i * i);
+            let want: Vec<usize> = (0..100).map(|i| i * i).collect();
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn map_handles_degenerate_sizes() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.map(0, |i| i), Vec::<usize>::new());
+        assert_eq!(pool.map(1, |i| i + 7), vec![7]);
+        assert_eq!(pool.map(3, |i| i), vec![0, 1, 2], "more threads than jobs");
+    }
+
+    #[test]
+    fn map_actually_fans_out() {
+        let pool = WorkerPool::new(4);
+        let main_id = std::thread::current().id();
+        let ids = pool.map(64, |_| std::thread::current().id());
+        assert!(ids.iter().any(|&id| id != main_id), "work must leave the main thread");
+        let distinct: std::collections::HashSet<_> = ids.iter().collect();
+        assert!(distinct.len() > 1, "expected multiple worker threads");
+    }
+
+    #[test]
+    fn for_each_mut_touches_every_item_once() {
+        let pool = WorkerPool::new(3);
+        let mut xs = vec![0usize; 97];
+        let calls = AtomicUsize::new(0);
+        pool.for_each_mut(&mut xs, |i, x| {
+            *x = i + 1;
+            calls.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 97);
+        assert!(xs.iter().enumerate().all(|(i, &x)| x == i + 1));
+    }
+
+    #[test]
+    fn chunks_are_balanced_and_cover() {
+        for &(n, parts) in &[(0usize, 4usize), (1, 4), (10, 3), (100, 7), (5, 9)] {
+            let rs = chunk_ranges(n, parts);
+            let mut next = 0;
+            for r in &rs {
+                assert_eq!(r.start, next);
+                next = r.end;
+            }
+            assert_eq!(next, n, "n={n} parts={parts}");
+            if n > 0 {
+                let lens: Vec<usize> = rs.iter().map(|r| r.len()).collect();
+                let (min, max) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+                assert!(max - min <= 1, "balanced: {lens:?}");
+                assert!(*min >= 1, "no empty chunks when n>0: {lens:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let pool = WorkerPool::serial();
+        let main_id = std::thread::current().id();
+        let ids = pool.map(8, |_| std::thread::current().id());
+        assert!(ids.iter().all(|&id| id == main_id));
+    }
+
+    #[test]
+    fn zero_width_requests_clamp_to_one() {
+        assert_eq!(WorkerPool::new(0).threads(), 1);
+    }
+}

@@ -1,8 +1,17 @@
-//! Single-threaded simulation driver: runs the continuous-batching
-//! scheduler + state cache against any [`Executor`] (normally the mock),
-//! attaching hardware time to every iteration batch via the
-//! [`crate::dfmodel::decode`] cost hook — the whole serving loop is
-//! exercisable without PJRT artifacts or worker threads.
+//! Simulation driver: runs the continuous-batching scheduler + state cache
+//! against any [`Executor`] (normally the mock), attaching hardware time to
+//! every iteration batch via the [`crate::dfmodel::decode`] cost hook — the
+//! whole serving loop is exercisable without PJRT artifacts.
+//!
+//! Two drivers share the scheduling/caching/timing logic: the
+//! single-threaded [`simulate`], and [`simulate_pooled`], which fans each
+//! iteration batch's *independent session steps* across a team of scoped
+//! worker threads. Executors are thread-affine (deliberately not `Send` —
+//! see [`crate::coordinator::Executor`]), so each worker constructs its own
+//! executor from the [`ExecutorFactory`] once and keeps it for the whole
+//! simulation; states and tokens travel to the workers instead. Tokens are
+//! bit-identical between the two drivers because each step depends only on
+//! its session's own state.
 //!
 //! Used by `benches/serve_sessions.rs` and `examples/chat_sessions.rs`;
 //! the threaded production path lives in [`crate::coordinator`].
@@ -11,17 +20,19 @@ use super::cache::{CacheStats, StateCache};
 use super::scheduler::{
     Phase, SchedStats, SchedulerConfig, SessionInfo, SessionScheduler, StepOutcome,
 };
-use super::state::StateShape;
+use super::state::{SsmState, StateShape};
 use super::SessionId;
 use crate::arch::RduConfig;
-use crate::coordinator::Executor;
+use crate::coordinator::{Executor, ExecutorFactory};
 use crate::dfmodel::decode::decode_step;
+use crate::runtime::pool::chunk_ranges;
 use crate::runtime::ModelKind;
 use crate::session::budget::MemoryBudget;
 use crate::util::XorShift;
 use crate::Result;
 use anyhow::anyhow;
 use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::{Duration, Instant};
 
 /// One simulated serving scenario.
@@ -123,29 +134,31 @@ fn cost_config(shape: &StateShape) -> crate::workloads::DecoderConfig {
     }
 }
 
-/// Run `cfg.sessions` sessions to completion through the scheduler + cache
-/// on `exec`, timing iteration batches with the DFModel decode-cost hook
-/// for `rdu`.
-pub fn simulate(exec: &mut dyn Executor, cfg: &SimConfig, rdu: &RduConfig) -> Result<SimReport> {
-    let t0 = Instant::now();
-    let mut cache = StateCache::new(MemoryBudget::new(cfg.budget_bytes), rdu.spec.dram);
-    let mut sched = SessionScheduler::new(cfg.sched);
-    let mut rng = XorShift::new(cfg.seed);
-
-    // Per-model decode-step cost (all sessions of a model share a shape).
-    let step_cost = |model: ModelKind| {
+/// Per-model decode-step cost table for one scenario (all sessions of a
+/// model share a shape), shared by the serial and pooled drivers so their
+/// modeled times agree exactly.
+fn step_cost_fn(cfg: &SimConfig, rdu: &RduConfig) -> impl Fn(ModelKind) -> f64 {
+    let per = |model: ModelKind| {
         let shape = cfg.shape_for(model);
         decode_step(model, &cost_config(&shape), shape.layers, rdu).seconds
     };
-    let mamba_cost = step_cost(ModelKind::Mamba);
-    let hyena_cost = step_cost(ModelKind::Hyena);
-    let cost_of = |model: ModelKind| match model {
-        ModelKind::Hyena => hyena_cost,
-        _ => mamba_cost,
-    };
+    let mamba = per(ModelKind::Mamba);
+    let hyena = per(ModelKind::Hyena);
+    move |model| match model {
+        ModelKind::Hyena => hyena,
+        _ => mamba,
+    }
+}
 
-    let mut prompts: BTreeMap<SessionId, Vec<f32>> = BTreeMap::new();
-    let mut last_token: BTreeMap<SessionId, Vec<f32>> = BTreeMap::new();
+/// Admit every configured session: synthesize its prompt (deterministic
+/// from `cfg.seed` via `rng`) and enqueue its prefill. Shared by both
+/// drivers so their session populations are identical.
+fn admit_sessions(
+    cfg: &SimConfig,
+    sched: &mut SessionScheduler,
+    rng: &mut XorShift,
+) -> BTreeMap<SessionId, Vec<f32>> {
+    let mut prompts = BTreeMap::new();
     let now = Instant::now();
     for i in 0..cfg.sessions {
         let id = (i + 1) as SessionId;
@@ -157,6 +170,41 @@ pub fn simulate(exec: &mut dyn Executor, cfg: &SimConfig, rdu: &RduConfig) -> Re
         prompts.insert(id, prompt);
         sched.admit(id, SessionInfo { model, shape, decode_steps: cfg.decode_steps }, now);
     }
+    prompts
+}
+
+/// Assemble the closing [`SimReport`] (shared by both drivers).
+fn build_report(
+    t0: Instant,
+    tokens: u64,
+    sim_seconds: f64,
+    cache: &StateCache,
+    sched: &SessionScheduler,
+    batches: u64,
+    batched_steps: u64,
+) -> SimReport {
+    SimReport {
+        tokens,
+        sim_seconds,
+        wall: t0.elapsed(),
+        cache: cache.stats.clone(),
+        sched: sched.stats.clone(),
+        batches,
+        mean_batch: if batches == 0 { 0.0 } else { batched_steps as f64 / batches as f64 },
+    }
+}
+
+/// Run `cfg.sessions` sessions to completion through the scheduler + cache
+/// on `exec`, timing iteration batches with the DFModel decode-cost hook
+/// for `rdu`.
+pub fn simulate(exec: &mut dyn Executor, cfg: &SimConfig, rdu: &RduConfig) -> Result<SimReport> {
+    let t0 = Instant::now();
+    let mut cache = StateCache::new(MemoryBudget::new(cfg.budget_bytes), rdu.spec.dram);
+    let mut sched = SessionScheduler::new(cfg.sched);
+    let mut rng = XorShift::new(cfg.seed);
+    let cost_of = step_cost_fn(cfg, rdu);
+    let mut prompts = admit_sessions(cfg, &mut sched, &mut rng);
+    let mut last_token: BTreeMap<SessionId, Vec<f32>> = BTreeMap::new();
 
     let mut tokens = 0u64;
     let mut sim_seconds = 0.0f64;
@@ -208,14 +256,197 @@ pub fn simulate(exec: &mut dyn Executor, cfg: &SimConfig, rdu: &RduConfig) -> Re
         sim_seconds += batch_seconds + (cache.stats.spill_seconds - spill0);
     }
 
-    Ok(SimReport {
-        tokens,
-        sim_seconds,
-        wall: t0.elapsed(),
-        cache: cache.stats.clone(),
-        sched: sched.stats.clone(),
-        batches,
-        mean_batch: if batches == 0 { 0.0 } else { batched_steps as f64 / batches as f64 },
+    Ok(build_report(t0, tokens, sim_seconds, &cache, &sched, batches, batched_steps))
+}
+
+/// One session step shipped to a pooled worker: the scheduler-order index,
+/// the executor inputs, and (for decode) the session's checked-out state.
+struct StepJob {
+    idx: usize,
+    model: ModelKind,
+    phase: Phase,
+    shape: StateShape,
+    state: Option<SsmState>,
+    input: Vec<f32>,
+}
+
+/// A pooled worker's answer: the (possibly new) state travels back with
+/// the produced token so the main thread can check it into the cache.
+struct StepDone {
+    idx: usize,
+    state: Option<SsmState>,
+    result: Result<Vec<f32>>,
+}
+
+/// Worker body: build one executor from the factory, then serve step
+/// chunks until the job channel closes. A factory failure is reported
+/// through each job's result rather than by panicking, so the main loop
+/// surfaces it as a clean `Err`.
+fn pooled_worker(factory: &ExecutorFactory, rx: Receiver<Vec<StepJob>>, tx: Sender<StepDone>) {
+    let mut exec: Result<Box<dyn Executor>> = factory();
+    while let Ok(jobs) = rx.recv() {
+        for mut job in jobs {
+            let done = match &mut exec {
+                Err(e) => StepDone {
+                    idx: job.idx,
+                    state: job.state.take(),
+                    result: Err(anyhow!("pooled worker failed to build its executor: {e:#}")),
+                },
+                Ok(exec) => match job.phase {
+                    Phase::Prefill => match exec.begin_session(job.model, &job.input, &job.shape) {
+                        Ok((state, first)) => {
+                            StepDone { idx: job.idx, state: Some(state), result: Ok(first) }
+                        }
+                        Err(e) => StepDone { idx: job.idx, state: None, result: Err(e) },
+                    },
+                    Phase::Decode => {
+                        let mut st = job.state.take().expect("decode job carries its state");
+                        let r = exec.step_decode(job.model, &mut st, &job.input);
+                        StepDone { idx: job.idx, state: Some(st), result: r }
+                    }
+                },
+            };
+            if tx.send(done).is_err() {
+                return; // main loop gone (error path); nothing to report to
+            }
+        }
+    }
+}
+
+/// [`simulate`] with each iteration batch's session steps fanned across
+/// `threads` scoped workers — the pooled mirror of the continuous-batching
+/// executor loop. Each worker owns one executor built from `factory` (the
+/// same per-worker-executor pattern as [`crate::coordinator::Coordinator`],
+/// because executors are thread-affine); the main thread keeps sole
+/// ownership of the scheduler and state cache, checking states out before
+/// dispatch and back in — in scheduler order — after the batch returns, so
+/// cache behaviour stays deterministic regardless of worker interleaving.
+///
+/// Token streams are bit-identical to [`simulate`]'s (each step depends
+/// only on its own session's state); with a budget that holds every state
+/// resident, the modeled time is identical too. Under a tight budget the
+/// modeled spill *ordering* within a batch may differ, since the pooled
+/// driver checks all of a batch's states out before any come back.
+pub fn simulate_pooled(
+    factory: &ExecutorFactory,
+    cfg: &SimConfig,
+    rdu: &RduConfig,
+    threads: usize,
+) -> Result<SimReport> {
+    let threads = threads.max(1);
+    let t0 = Instant::now();
+    let mut cache = StateCache::new(MemoryBudget::new(cfg.budget_bytes), rdu.spec.dram);
+    let mut sched = SessionScheduler::new(cfg.sched);
+    let mut rng = XorShift::new(cfg.seed);
+    let cost_of = step_cost_fn(cfg, rdu);
+    let mut prompts = admit_sessions(cfg, &mut sched, &mut rng);
+    let mut last_token: BTreeMap<SessionId, Vec<f32>> = BTreeMap::new();
+
+    std::thread::scope(|scope| -> Result<SimReport> {
+        // Spawn the worker team; each builds its own executor and lives for
+        // the whole simulation so plan caches and executors warm up once.
+        let (res_tx, res_rx) = channel::<StepDone>();
+        let mut job_txs: Vec<Sender<Vec<StepJob>>> = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let (tx, rx) = channel::<Vec<StepJob>>();
+            job_txs.push(tx);
+            let res_tx = res_tx.clone();
+            scope.spawn(move || pooled_worker(factory, rx, res_tx));
+        }
+        drop(res_tx);
+
+        let mut tokens = 0u64;
+        let mut sim_seconds = 0.0f64;
+        let mut batches = 0u64;
+        let mut batched_steps = 0u64;
+        while !sched.is_idle() {
+            let steps = sched.next_batch();
+            if steps.is_empty() {
+                return Err(anyhow!("scheduler stalled with {} live sessions", sched.live()));
+            }
+            batches += 1;
+            batched_steps += steps.len() as u64;
+            let spill0 = cache.stats.spill_seconds;
+
+            // Stage the batch in scheduler order: prompts move out, decode
+            // states check out of the cache deterministically.
+            let mut jobs: Vec<StepJob> = Vec::with_capacity(steps.len());
+            for (idx, s) in steps.iter().enumerate() {
+                let job = match s.phase {
+                    Phase::Prefill => StepJob {
+                        idx,
+                        model: s.model,
+                        phase: s.phase,
+                        shape: cfg.shape_for(s.model),
+                        state: None,
+                        input: prompts.remove(&s.id).unwrap_or_default(),
+                    },
+                    Phase::Decode => StepJob {
+                        idx,
+                        model: s.model,
+                        phase: s.phase,
+                        shape: cfg.shape_for(s.model),
+                        state: Some(
+                            cache
+                                .checkout(s.id)
+                                .ok_or_else(|| anyhow!("session {} lost its cached state", s.id))?,
+                        ),
+                        input: last_token
+                            .get(&s.id)
+                            .cloned()
+                            .ok_or_else(|| anyhow!("session {} has no previous token", s.id))?,
+                    },
+                };
+                jobs.push(job);
+            }
+
+            // Fan out contiguous chunks, one per worker.
+            let n = jobs.len();
+            for (w, r) in chunk_ranges(n, threads).into_iter().enumerate().rev() {
+                let chunk = jobs.split_off(r.start);
+                if !chunk.is_empty() && job_txs[w].send(chunk).is_err() {
+                    return Err(anyhow!("pooled sim worker {w} died"));
+                }
+            }
+
+            // Gather, then merge in scheduler order.
+            let mut outs: Vec<Option<StepDone>> = (0..n).map(|_| None).collect();
+            for _ in 0..n {
+                let done =
+                    res_rx.recv().map_err(|_| anyhow!("pooled sim workers disconnected"))?;
+                let slot = done.idx;
+                outs[slot] = Some(done);
+            }
+            let mut batch_seconds = 0.0f64;
+            for (idx, s) in steps.iter().enumerate() {
+                let done = outs[idx].take().expect("one result per step");
+                let out = match s.phase {
+                    Phase::Prefill => {
+                        let first = done.result?;
+                        cache.insert(s.id, done.state.expect("prefill produces a state"));
+                        batch_seconds =
+                            batch_seconds.max(cost_of(s.model) * cfg.prompt_tokens.max(1) as f64);
+                        first
+                    }
+                    Phase::Decode => {
+                        let token = done.result?;
+                        cache.checkin(s.id, done.state.expect("decode returns its state"));
+                        batch_seconds = batch_seconds.max(cost_of(s.model));
+                        token
+                    }
+                };
+                tokens += 1;
+                last_token.insert(s.id, out);
+                if sched.on_step_done(s.id, Instant::now()) == StepOutcome::Retired {
+                    cache.remove(s.id);
+                    last_token.remove(&s.id);
+                }
+            }
+            sim_seconds += batch_seconds + (cache.stats.spill_seconds - spill0);
+        }
+        drop(job_txs); // release the workers before the scope joins them
+
+        Ok(build_report(t0, tokens, sim_seconds, &cache, &sched, batches, batched_steps))
     })
 }
 
@@ -234,6 +465,42 @@ mod tests {
         assert_eq!(r.cache.evictions, 0, "full budget: no eviction");
         assert!(r.sim_seconds > 0.0);
         assert!(r.mean_batch >= 1.0);
+    }
+
+    #[test]
+    fn pooled_sim_matches_serial() {
+        let cfg = SimConfig::demo(10, 6);
+        let d_model = cfg.mamba_shape.d_model;
+        let serial = {
+            let mut exec = MockExecutor::new(1, d_model);
+            simulate(&mut exec, &cfg, &RduConfig::hs_scan_mode()).unwrap()
+        };
+        let factory: ExecutorFactory =
+            Box::new(move || Ok(Box::new(MockExecutor::new(1, d_model)) as Box<dyn Executor>));
+        for threads in [1usize, 2, 4] {
+            let pooled =
+                simulate_pooled(&factory, &cfg, &RduConfig::hs_scan_mode(), threads).unwrap();
+            assert_eq!(pooled.tokens, serial.tokens, "threads={threads}");
+            assert_eq!(pooled.sched.retired, serial.sched.retired);
+            assert_eq!(pooled.batches, serial.batches);
+            // Full budget: no spills, so modeled time is bit-identical.
+            assert_eq!(pooled.cache.evictions, 0);
+            assert!(
+                (pooled.sim_seconds - serial.sim_seconds).abs() == 0.0,
+                "threads={threads}: {} vs {}",
+                pooled.sim_seconds,
+                serial.sim_seconds
+            );
+        }
+    }
+
+    #[test]
+    fn pooled_sim_surfaces_factory_failure() {
+        let cfg = SimConfig::demo(2, 2);
+        let factory: ExecutorFactory = Box::new(|| Err(anyhow!("no executor for you")));
+        let err = simulate_pooled(&factory, &cfg, &RduConfig::hs_scan_mode(), 2)
+            .expect_err("factory failure must surface");
+        assert!(format!("{err:#}").contains("executor"), "{err:#}");
     }
 
     #[test]

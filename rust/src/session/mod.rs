@@ -43,7 +43,7 @@ pub mod state;
 
 pub use budget::{spill_seconds, MemoryBudget};
 pub use cache::{CacheStats, StateCache};
-pub use driver::{simulate, SimConfig, SimReport};
+pub use driver::{simulate, simulate_pooled, SimConfig, SimReport};
 pub use scheduler::{
     Phase, SchedStats, ScheduledStep, SchedulerConfig, SessionInfo, SessionScheduler, StepOutcome,
 };

@@ -22,8 +22,48 @@
 //! [`crate::arch::InterchipLink::all_to_all_seconds`].
 
 use crate::fft::{bailey_fft, is_pow2, BaileyVariant};
+use crate::runtime::WorkerPool;
 use crate::util::C64;
 use std::f64::consts::PI;
+use std::ops::Range;
+
+/// Phase 1 for one chip: FFT + twiddle the columns it owns. Shared by the
+/// serial and pooled drivers so they are bit-identical by construction.
+fn chip_columns(
+    x: &[C64],
+    r: usize,
+    c: usize,
+    cols: Range<usize>,
+    variant: BaileyVariant,
+) -> Vec<Vec<C64>> {
+    let l = x.len();
+    cols.map(|n2| {
+        let col: Vec<C64> = (0..r).map(|n1| x[n1 * c + n2]).collect();
+        let mut col = bailey_fft(&col, r, variant);
+        for (k1, v) in col.iter_mut().enumerate() {
+            let ang = -2.0 * PI * ((n2 * k1) % l) as f64 / l as f64;
+            *v = *v * C64::cis(ang);
+        }
+        col
+    })
+    .collect()
+}
+
+/// Phase 3 for one chip: FFT the rows it owns (post-transpose), returning
+/// `(k1, row_spectrum)` pairs for the caller to scatter into 4-step order.
+fn chip_rows(
+    cols: &[Vec<C64>],
+    r: usize,
+    c: usize,
+    rows: Range<usize>,
+    variant: BaileyVariant,
+) -> Vec<(usize, Vec<C64>)> {
+    rows.map(|k1| {
+        let row: Vec<C64> = (0..c).map(|n2| cols[n2][k1]).collect();
+        (k1, bailey_fft(&row, r, variant))
+    })
+    .collect()
+}
 
 /// Bailey 4-step FFT of `x` with tile size `r`, sharded over `chips` chips.
 ///
@@ -33,6 +73,21 @@ use std::f64::consts::PI;
 /// count `x.len() / r` so each phase partitions evenly. Inputs of at most
 /// one tile, or `chips == 1`, fall back to the single-chip transform.
 pub fn sharded_bailey_fft(x: &[C64], r: usize, chips: usize, variant: BaileyVariant) -> Vec<C64> {
+    sharded_bailey_fft_pooled(x, r, chips, variant, &WorkerPool::serial())
+}
+
+/// [`sharded_bailey_fft`] with the two per-chip parallel phases (column
+/// FFTs + twiddles, row FFTs) fanned across `pool`'s worker threads —
+/// the host-compute mirror of the multi-chip execution. Per-chip
+/// arithmetic is shared with the serial driver, so the output is
+/// **bit-identical** to it (asserted by the integration tests).
+pub fn sharded_bailey_fft_pooled(
+    x: &[C64],
+    r: usize,
+    chips: usize,
+    variant: BaileyVariant,
+    pool: &WorkerPool,
+) -> Vec<C64> {
     let l = x.len();
     assert!(chips >= 1, "sharded_bailey_fft: need at least one chip");
     if chips == 1 || l <= r {
@@ -46,23 +101,29 @@ pub fn sharded_bailey_fft(x: &[C64], r: usize, chips: usize, variant: BaileyVari
         r % chips == 0 && c % chips == 0,
         "sharded_bailey_fft: {chips} chips must divide both R={r} rows and C={c} columns"
     );
+    run_sharded(x, r, chips, variant, pool)
+}
+
+/// The three-phase sharded dataflow; `pool` fans the per-chip phases.
+fn run_sharded(
+    x: &[C64],
+    r: usize,
+    chips: usize,
+    variant: BaileyVariant,
+    pool: &WorkerPool,
+) -> Vec<C64> {
+    let l = x.len();
+    let c = l / r;
 
     // Phase 1 — chip p owns columns [p·C/P, (p+1)·C/P): length-R column
     // FFTs (x[n1·C + n2], the 4-step decimation) plus the twiddle scaling
     // T[n2, k1] *= e^{-2πi·n2·k1/L}, all chip-local.
     let cols_per_chip = c / chips;
-    let mut cols: Vec<Vec<C64>> = vec![Vec::new(); c];
-    for p in 0..chips {
-        for n2 in p * cols_per_chip..(p + 1) * cols_per_chip {
-            let col: Vec<C64> = (0..r).map(|n1| x[n1 * c + n2]).collect();
-            let mut col = bailey_fft(&col, r, variant);
-            for (k1, v) in col.iter_mut().enumerate() {
-                let ang = -2.0 * PI * ((n2 * k1) % l) as f64 / l as f64;
-                *v = *v * C64::cis(ang);
-            }
-            cols[n2] = col;
-        }
-    }
+    let cols: Vec<Vec<C64>> = pool
+        .map(chips, |p| {
+            chip_columns(x, r, c, p * cols_per_chip..(p + 1) * cols_per_chip, variant)
+        })
+        .concat();
 
     // Phase 2 — the all-to-all transpose: chip p needs row k1 ∈
     // [p·R/P, (p+1)·R/P) of a matrix whose columns live across all chips.
@@ -72,14 +133,13 @@ pub fn sharded_bailey_fft(x: &[C64], r: usize, chips: usize, variant: BaileyVari
     // Phase 3 — chip p: length-C row FFTs through the single-chip Bailey
     // tiling, scattered to the standard 4-step output order X[k1 + R·k2].
     let rows_per_chip = r / chips;
+    let rows: Vec<Vec<(usize, Vec<C64>)>> = pool.map(chips, |p| {
+        chip_rows(&cols, r, c, p * rows_per_chip..(p + 1) * rows_per_chip, variant)
+    });
     let mut out = vec![C64::ZERO; l];
-    for p in 0..chips {
-        for k1 in p * rows_per_chip..(p + 1) * rows_per_chip {
-            let row: Vec<C64> = (0..c).map(|n2| cols[n2][k1]).collect();
-            let row_f = bailey_fft(&row, r, variant);
-            for (k2, v) in row_f.into_iter().enumerate() {
-                out[k1 + r * k2] = v;
-            }
+    for (k1, row_f) in rows.into_iter().flatten() {
+        for (k2, v) in row_f.into_iter().enumerate() {
+            out[k1 + r * k2] = v;
         }
     }
     out
@@ -148,6 +208,24 @@ mod tests {
         let x = vec![C64::ZERO; 128];
         // C = 128/32 = 4 columns cannot split over 8 chips.
         sharded_bailey_fft(&x, 32, 8, BaileyVariant::Vector);
+    }
+
+    #[test]
+    fn pooled_fft_bit_identical_to_serial() {
+        let mut rng = XorShift::new(74);
+        let pool = WorkerPool::new(3);
+        for &(l, r) in &[(256usize, 32usize), (2048, 32)] {
+            let x = rand_complex(&mut rng, l);
+            for chips in [1usize, 2, 4] {
+                for variant in [BaileyVariant::Vector, BaileyVariant::Gemm] {
+                    assert_eq!(
+                        sharded_bailey_fft_pooled(&x, r, chips, variant, &pool),
+                        sharded_bailey_fft(&x, r, chips, variant),
+                        "L={l} R={r} chips={chips} {variant:?}: pooling must be bit-exact"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

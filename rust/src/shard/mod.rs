@@ -22,6 +22,12 @@
 //! The serving integration (per-chip state caches, sharded dispatch,
 //! `--chips` on `serve`/`simulate`) lives in [`crate::coordinator`] and the
 //! CLI; see `docs/ARCHITECTURE.md` for the exchange diagrams.
+//!
+//! Both dataflows also come in `_pooled` variants
+//! ([`sharded_mamba_scan_pooled`], [`sharded_bailey_fft_pooled`]) that fan
+//! the per-chip parallel phases across a [`crate::runtime::WorkerPool`] —
+//! host compute mirroring the chip-level parallelism, bit-identical to the
+//! serial drivers.
 
 pub mod estimate;
 pub mod fft;
@@ -30,8 +36,10 @@ pub mod scan;
 pub use estimate::{
     sharded_estimate, sharded_estimate_fused, strong_scaling, ScalingPoint, ShardedEstimate,
 };
-pub use fft::{sharded_bailey_fft, transpose_bytes};
-pub use scan::{carry_exchange_bytes, sharded_mamba_scan, sharded_scan_gate_fused};
+pub use fft::{sharded_bailey_fft, sharded_bailey_fft_pooled, transpose_bytes};
+pub use scan::{
+    carry_exchange_bytes, sharded_mamba_scan, sharded_mamba_scan_pooled, sharded_scan_gate_fused,
+};
 
 use std::ops::Range;
 

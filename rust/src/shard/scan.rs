@@ -24,42 +24,35 @@
 //! [`crate::arch::InterchipLink::prefix_exchange_seconds`].
 
 use super::shard_ranges;
+use crate::runtime::WorkerPool;
 use crate::scan::recurrence::{combine, LinStep};
+use std::ops::Range;
 
 /// The identity of the lifted recurrence: `h → 1·h + 0`.
 const IDENTITY: LinStep = LinStep { a: 1.0, b: 0.0 };
 
-/// Phases 1 and 2 of the sharded scan, shared by the plain and gate-fused
-/// drivers: per-chip local inclusive scans of the lifted steps plus the
-/// exclusive prefix of per-chip carries.
-fn locals_and_carries(a: &[f64], b: &[f64], chips: usize) -> (Vec<Vec<LinStep>>, Vec<LinStep>) {
-    assert_eq!(a.len(), b.len(), "sharded_mamba_scan: a/b length mismatch");
-    assert!(chips >= 1, "sharded_mamba_scan: need at least one chip");
-    let ranges = shard_ranges(a.len(), chips);
-
-    // Phase 1 — per chip, in parallel on hardware: inclusive scan of the
-    // lifted steps. On the RDU each chip runs this as its tiled B-scan
-    // (crate::scan::tiled); here the composition order is identical.
-    let locals: Vec<Vec<LinStep>> = ranges
+/// Phase 1 for one chip: the local inclusive scan of its lifted steps. On
+/// the RDU each chip runs this as its tiled B-scan (crate::scan::tiled);
+/// here the composition order is identical. Shared by the serial and
+/// pooled drivers so they are bit-identical by construction.
+fn local_scan(a: &[f64], b: &[f64], r: &Range<usize>) -> Vec<LinStep> {
+    let mut acc = IDENTITY;
+    a[r.clone()]
         .iter()
-        .map(|r| {
-            let mut acc = IDENTITY;
-            a[r.clone()]
-                .iter()
-                .zip(&b[r.clone()])
-                .map(|(&ai, &bi)| {
-                    acc = combine(acc, LinStep { a: ai, b: bi });
-                    acc
-                })
-                .collect()
+        .zip(&b[r.clone()])
+        .map(|(&ai, &bi)| {
+            acc = combine(acc, LinStep { a: ai, b: bi });
+            acc
         })
-        .collect();
+        .collect()
+}
 
-    // Phase 2 — the carry exchange: exclusive prefix of per-chip totals.
-    // (Numerically order-equivalent to the 2·⌈log₂P⌉-round Blelloch
-    // up/down-sweep the interconnect model prices; P is small.)
+/// Phase 2: the carry exchange — exclusive prefix of per-chip totals.
+/// (Numerically order-equivalent to the 2·⌈log₂P⌉-round Blelloch
+/// up/down-sweep the interconnect model prices; P is small.)
+fn exclusive_carries(locals: &[Vec<LinStep>]) -> Vec<LinStep> {
     let mut carry = IDENTITY;
-    let carry_in: Vec<LinStep> = locals
+    locals
         .iter()
         .map(|l| {
             let c = carry;
@@ -68,7 +61,24 @@ fn locals_and_carries(a: &[f64], b: &[f64], chips: usize) -> (Vec<Vec<LinStep>>,
             }
             c
         })
-        .collect();
+        .collect()
+}
+
+/// Phases 1 and 2 of the sharded scan, shared by the plain and gate-fused
+/// drivers: per-chip local inclusive scans of the lifted steps plus the
+/// exclusive prefix of per-chip carries. `pool` fans phase 1 — the
+/// embarrassingly parallel per-chip axis — across worker threads.
+fn locals_and_carries(
+    a: &[f64],
+    b: &[f64],
+    chips: usize,
+    pool: &WorkerPool,
+) -> (Vec<Vec<LinStep>>, Vec<LinStep>) {
+    assert_eq!(a.len(), b.len(), "sharded_mamba_scan: a/b length mismatch");
+    assert!(chips >= 1, "sharded_mamba_scan: need at least one chip");
+    let ranges = shard_ranges(a.len(), chips);
+    let locals: Vec<Vec<LinStep>> = pool.map(chips, |p| local_scan(a, b, &ranges[p]));
+    let carry_in = exclusive_carries(&locals);
     (locals, carry_in)
 }
 
@@ -76,7 +86,7 @@ fn locals_and_carries(a: &[f64], b: &[f64], chips: usize) -> (Vec<Vec<LinStep>>,
 /// sharded over `chips` chips. Exact vs [`crate::scan::mamba_scan_serial`]
 /// up to floating-point regrouping; see the module docs for the dataflow.
 pub fn sharded_mamba_scan(a: &[f64], b: &[f64], chips: usize) -> Vec<f64> {
-    let (locals, carry_in) = locals_and_carries(a, b, chips);
+    let (locals, carry_in) = locals_and_carries(a, b, chips, &WorkerPool::serial());
 
     // Phase 3 — per chip, in parallel: apply the carry-in state. From
     // h0 = 0 the carry-in state is just `carry.b`.
@@ -88,6 +98,26 @@ pub fn sharded_mamba_scan(a: &[f64], b: &[f64], chips: usize) -> Vec<f64> {
     out
 }
 
+/// [`sharded_mamba_scan`] with phases 1 and 3 — the per-chip parallel
+/// phases — fanned across `pool`'s worker threads, mirroring in host
+/// compute exactly the axis the hardware parallelizes across chips. The
+/// per-chip arithmetic and the phase-2 carry composition are shared with
+/// the serial driver, so the output is **bit-identical** to it for any
+/// length and chip count (asserted by the integration tests).
+pub fn sharded_mamba_scan_pooled(
+    a: &[f64],
+    b: &[f64],
+    chips: usize,
+    pool: &WorkerPool,
+) -> Vec<f64> {
+    let (locals, carry_in) = locals_and_carries(a, b, chips, pool);
+    let outs: Vec<Vec<f64>> = pool.map(locals.len(), |p| {
+        let h_in = carry_in[p].b;
+        locals[p].iter().map(|s| s.a * h_in + s.b).collect()
+    });
+    outs.concat()
+}
+
 /// Sharded scan with the SiLU gate **fused into phase 3**: each chip's
 /// carry-application pass emits `h[t] · silu(z[t])` directly instead of
 /// staging the full `h` buffer and gating it in a second kernel — the
@@ -97,7 +127,7 @@ pub fn sharded_mamba_scan(a: &[f64], b: &[f64], chips: usize) -> Vec<f64> {
 /// (the integration tests assert exact equality, ragged lengths included).
 pub fn sharded_scan_gate_fused(a: &[f64], b: &[f64], z: &[f64], chips: usize) -> Vec<f64> {
     assert_eq!(a.len(), z.len(), "sharded_scan_gate_fused: z length mismatch");
-    let (locals, carry_in) = locals_and_carries(a, b, chips);
+    let (locals, carry_in) = locals_and_carries(a, b, chips, &WorkerPool::serial());
     let mut out = Vec::with_capacity(a.len());
     for (l, c) in locals.iter().zip(&carry_in) {
         let h_in = c.b;
@@ -169,6 +199,23 @@ mod tests {
                     sharded_scan_gate_fused(&a, &b, &z, chips),
                     staged,
                     "n={n} chips={chips}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_scan_bit_identical_to_serial() {
+        let mut rng = XorShift::new(63);
+        let pool = WorkerPool::new(3);
+        for &n in &[1usize, 7, 100, 1000, 1023] {
+            let a: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 0.99)).collect();
+            let b = rng.vec(n, -1.0, 1.0);
+            for chips in [1usize, 2, 4, 8] {
+                assert_eq!(
+                    sharded_mamba_scan_pooled(&a, &b, chips, &pool),
+                    sharded_mamba_scan(&a, &b, chips),
+                    "n={n} chips={chips}: pooling must not change a single bit"
                 );
             }
         }

@@ -144,8 +144,28 @@ pub fn hyena_decoder(cfg: &DecoderConfig, variant: BaileyVariant) -> Graph {
 
 /// Total FFT-transform FLOPs in the decoder (6 transforms × D channels) —
 /// the Fig. 7 breakdown's FFT component.
+///
+/// **Accounting convention:** this (and every kernel this module builds)
+/// charges the paper's full-complex-transform counts so Fig. 7's design
+/// ratios stay exactly reproducible; the functional engine actually
+/// evaluates these convolutions through the planned real-input path, whose
+/// own (≈2× cheaper) accounting is [`crate::fft::fftconv_flops_rfft`].
 pub fn fft_core_flops(cfg: &DecoderConfig, variant: BaileyVariant) -> f64 {
     6.0 * cfg.d_model as f64 * fft_flops(cfg.fft_len(), variant, cfg.fft_tile)
+}
+
+/// Numeric golden model for one Hyena conv module across its D channels:
+/// channel `i` is the planned real-input linear convolution of `us[i]`
+/// with `ks[i]`, fanned over `pool`'s worker threads (each worker reuses
+/// one `fft::ConvPlan` across its chunk of channels). Bit-identical to
+/// the serial per-channel loop — pooling is a scheduling transform, not a
+/// numerics one.
+pub fn hyena_conv_channels(
+    us: &[Vec<f64>],
+    ks: &[Vec<f64>],
+    pool: &crate::runtime::WorkerPool,
+) -> Vec<Vec<f64>> {
+    crate::fft::fft_conv_linear_channels(us, ks, pool)
 }
 
 #[cfg(test)]

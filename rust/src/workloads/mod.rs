@@ -19,7 +19,7 @@ pub mod mamba;
 
 pub use attention::attention_decoder;
 pub use config::DecoderConfig;
-pub use hyena::hyena_decoder;
+pub use hyena::{hyena_conv_channels, hyena_decoder};
 pub use mamba::{mamba_decoder, ScanVariant};
 
 #[cfg(test)]

@@ -1,0 +1,145 @@
+//! Hot-path compute-engine integration suite: the planned real-input FFT
+//! convolution against the direct oracles (non-pow2 lengths included),
+//! clean plan-mismatch panics, and bit-identity of every pooled execution
+//! path against its serial counterpart — pooling and planning are
+//! performance transforms and must never change the numerics.
+
+use ssm_rdu::arch::RduConfig;
+use ssm_rdu::coordinator::{Executor, ExecutorFactory, MockExecutor};
+use ssm_rdu::fft::conv::{direct_conv_circular, direct_conv_linear};
+use ssm_rdu::fft::{
+    fft_conv_circular, fft_conv_circular_naive, fft_conv_linear, fft_conv_linear_channels,
+    fft_conv_linear_naive, BaileyVariant, FftPlan, RealFftPlan,
+};
+use ssm_rdu::runtime::WorkerPool;
+use ssm_rdu::session::driver::{simulate, simulate_pooled, SimConfig};
+use ssm_rdu::shard::{
+    sharded_bailey_fft, sharded_bailey_fft_pooled, sharded_mamba_scan, sharded_mamba_scan_pooled,
+};
+use ssm_rdu::util::{max_abs_diff, C64, XorShift};
+use ssm_rdu::workloads::hyena_conv_channels;
+
+#[test]
+fn planned_conv_matches_direct_oracles_at_non_pow2_lengths() {
+    // The acceptance bound: every fast-path output within 1e-9 of the
+    // O(N²) direct oracles, across awkward (non-power-of-two) lengths.
+    let mut rng = XorShift::new(301);
+    for n in [1usize, 2, 3, 7, 100, 129, 1000, 1023, 4097] {
+        let u = rng.vec(n, -1.0, 1.0);
+        let k = rng.vec(n, -1.0, 1.0);
+        let d = max_abs_diff(&fft_conv_linear(&u, &k), &direct_conv_linear(&u, &k));
+        assert!(d < 1e-9, "linear n={n}: diff={d}");
+        if n.is_power_of_two() {
+            let d = max_abs_diff(&fft_conv_circular(&u, &k), &direct_conv_circular(&u, &k));
+            assert!(d < 1e-9, "circular n={n}: diff={d}");
+        }
+    }
+}
+
+#[test]
+fn planned_conv_matches_the_pre_plan_naive_path() {
+    let mut rng = XorShift::new(302);
+    for l in [1usize << 10, 1 << 12] {
+        let u = rng.vec(l, -1.0, 1.0);
+        let k = rng.vec(l, -1.0, 1.0);
+        let d = max_abs_diff(&fft_conv_circular(&u, &k), &fft_conv_circular_naive(&u, &k));
+        assert!(d < 1e-9, "circular L={l}: diff={d}");
+        let d = max_abs_diff(&fft_conv_linear(&u, &k), &fft_conv_linear_naive(&u, &k));
+        assert!(d < 1e-9, "linear L={l}: diff={d}");
+    }
+}
+
+#[test]
+#[should_panic(expected = "FftPlan for N=4096")]
+fn fft_plan_reuse_across_mismatched_lengths_panics_cleanly() {
+    let plan = FftPlan::new(4096);
+    let mut wrong = vec![C64::ZERO; 1024];
+    plan.fft_in_place(&mut wrong); // 1k buffer into a 4k plan: loud, named panic
+}
+
+#[test]
+#[should_panic(expected = "RealFftPlan for N=2048")]
+fn real_plan_reuse_across_mismatched_lengths_panics_cleanly() {
+    let mut plan = RealFftPlan::new(2048);
+    let mut spec = vec![C64::ZERO; plan.spectrum_len()];
+    plan.rfft_into(&[0.0; 4096], &mut spec);
+}
+
+#[test]
+fn pooled_hyena_channels_bit_identical_to_serial() {
+    // The satellite contract: pooled Hyena conv for L ∈ {1k, 4k} is
+    // bit-identical to the serial per-channel loop, at several pool widths.
+    let mut rng = XorShift::new(303);
+    let d = 16;
+    for l in [1usize << 10, 1 << 12] {
+        let us: Vec<Vec<f64>> = (0..d).map(|_| rng.vec(l, -1.0, 1.0)).collect();
+        let ks: Vec<Vec<f64>> = (0..d).map(|_| rng.vec(l, -1.0, 1.0)).collect();
+        let serial: Vec<Vec<f64>> =
+            us.iter().zip(&ks).map(|(u, k)| fft_conv_linear(u, k)).collect();
+        for threads in [1usize, 2, 5, 16] {
+            let pool = WorkerPool::new(threads);
+            let pooled = fft_conv_linear_channels(&us, &ks, &pool);
+            assert_eq!(pooled, serial, "L={l} threads={threads}");
+            assert_eq!(hyena_conv_channels(&us, &ks, &pool), serial, "workloads wrapper");
+        }
+        // And the channels themselves are oracle-exact.
+        for (u, k) in us.iter().zip(&ks).take(2) {
+            let d = max_abs_diff(&fft_conv_linear(u, k), &direct_conv_linear(u, k));
+            assert!(d < 1e-9, "L={l}: diff={d}");
+        }
+    }
+}
+
+#[test]
+fn pooled_sharded_mamba_scan_two_chips_bit_identical() {
+    let mut rng = XorShift::new(304);
+    for n in [100usize, 1000, 1 << 12] {
+        let a: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 0.99)).collect();
+        let b = rng.vec(n, -1.0, 1.0);
+        let serial = sharded_mamba_scan(&a, &b, 2);
+        for threads in [1usize, 2, 4] {
+            let pool = WorkerPool::new(threads);
+            assert_eq!(
+                sharded_mamba_scan_pooled(&a, &b, 2, &pool),
+                serial,
+                "n={n} threads={threads}: --chips 2 pooled must be bit-exact"
+            );
+        }
+    }
+}
+
+#[test]
+fn pooled_sharded_bailey_fft_bit_identical() {
+    let mut rng = XorShift::new(305);
+    let x: Vec<C64> = (0..4096)
+        .map(|_| C64::new(rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0)))
+        .collect();
+    let pool = WorkerPool::new(3);
+    for chips in [2usize, 4] {
+        for variant in [BaileyVariant::Vector, BaileyVariant::Gemm] {
+            assert_eq!(
+                sharded_bailey_fft_pooled(&x, 32, chips, variant, &pool),
+                sharded_bailey_fft(&x, 32, chips, variant),
+                "chips={chips} {variant:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pooled_session_sim_matches_serial_end_to_end() {
+    let cfg = SimConfig::demo(12, 5);
+    let d_model = cfg.mamba_shape.d_model;
+    let rdu = RduConfig::hs_scan_mode();
+    let serial = {
+        let mut exec = MockExecutor::new(1, d_model);
+        simulate(&mut exec, &cfg, &rdu).unwrap()
+    };
+    let factory: ExecutorFactory =
+        Box::new(move || Ok(Box::new(MockExecutor::new(1, d_model)) as Box<dyn Executor>));
+    let pooled = simulate_pooled(&factory, &cfg, &rdu, 3).unwrap();
+    assert_eq!(pooled.tokens, serial.tokens);
+    assert_eq!(pooled.sched.retired, serial.sched.retired);
+    assert_eq!(pooled.batches, serial.batches);
+    assert_eq!(pooled.sim_seconds, serial.sim_seconds, "full budget: modeled time identical");
+}
