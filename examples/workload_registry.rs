@@ -1,0 +1,93 @@
+//! Workload registry tour: resolve every registered SSM decoder by name
+//! and drive the whole modeling stack from the trait object — graph build,
+//! fused/unfused pricing, sharded deployment and the numeric golden check.
+//!
+//!     cargo run --release --example workload_registry
+//!
+//! This is the "add your own SSM" payoff from docs/WORKLOADS.md: nothing
+//! below mentions a concrete workload; a newly registered variant shows up
+//! in every section automatically.
+
+use ssm_rdu::arch::InterchipLink;
+use ssm_rdu::dfmodel;
+use ssm_rdu::shard;
+use ssm_rdu::util::{fmt_time, table::Table};
+use ssm_rdu::workloads::{ssm_workloads, DecoderConfig};
+
+fn main() {
+    let dc = DecoderConfig::paper(1 << 16); // 64K tokens
+    let link = InterchipLink::rdu_fabric();
+
+    println!("registered SSM workloads at L={}:", dc.seq_len);
+    for w in ssm_workloads() {
+        println!("  {:6} — {}", w.name(), w.describe());
+    }
+
+    // 1) Golden models: each workload's functional path vs its reference.
+    println!("\ngolden checks (seed 7):");
+    for w in ssm_workloads() {
+        let gc = w.golden_check(7).expect("SSM workloads self-check");
+        println!(
+            "  {:6} vs {:28} |d| = {:.2e}{}",
+            w.name(),
+            gc.reference,
+            gc.max_abs_diff,
+            if gc.bit_identical { "  (bit-identical)" } else { "" }
+        );
+    }
+
+    // 2) The modeling stack, uniformly: idealized dataflow bound, fused and
+    //    kernel-by-kernel launch pricing on each workload's design point.
+    let mut t = Table::new(
+        "DFModel pricing per workload (own extended config)",
+        &["Workload", "Config", "Ideal", "Fused", "Unfused", "Fusion gain"],
+    );
+    for w in ssm_workloads() {
+        let g = w.build_graph(&dc);
+        let cfg = w.extended_config();
+        let ideal = dfmodel::estimate(&g, &cfg).expect("mappable");
+        let fused = dfmodel::estimate_fused(&g, &cfg).expect("mappable");
+        let unfused = dfmodel::estimate_unfused(&g, &cfg).expect("mappable");
+        t.row(&[
+            w.name().to_string(),
+            cfg.name(),
+            fmt_time(ideal.total_seconds),
+            fmt_time(fused.total_seconds),
+            fmt_time(unfused.total_seconds),
+            format!("{:.2}x", unfused.total_seconds / fused.total_seconds),
+        ]);
+    }
+    t.print();
+
+    // 3) Sharded deployment: the workload declares its exchange pattern,
+    //    the shard layer prices it.
+    let mut t = Table::new(
+        "4-chip sequence-sharded deployment",
+        &["Workload", "Per-chip", "Exchange", "Total", "Comm share"],
+    );
+    for w in ssm_workloads() {
+        let s = shard::sharded_estimate_workload(w, &dc, 4, &w.extended_config(), &link)
+            .expect("mappable");
+        t.row(&[
+            w.name().to_string(),
+            fmt_time(s.per_chip.total_seconds),
+            fmt_time(s.comm_seconds),
+            fmt_time(s.total_seconds),
+            format!("{:.1}%", s.comm_share() * 100.0),
+        ]);
+    }
+    t.print();
+
+    // 4) Decode: the per-token cost hook the session scheduler uses.
+    println!("decode-step latency (8 layers, per token):");
+    for w in ssm_workloads() {
+        let cost = dfmodel::decode_step_workload(w, &dc, 8, &w.extended_config());
+        println!(
+            "  {:6} {}  ({:.0} cycles, state {:.1} KiB/step)",
+            w.name(),
+            fmt_time(cost.seconds),
+            cost.cycles,
+            cost.state_bytes / 1024.0
+        );
+    }
+}

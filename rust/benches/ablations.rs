@@ -15,44 +15,36 @@ use ssm_rdu::fft::{gemm_fft_flops, vector_fft_flops, BaileyVariant};
 use ssm_rdu::synth::energy;
 use ssm_rdu::util::fmt_time;
 use ssm_rdu::util::table::Table;
-use ssm_rdu::workloads::{hyena_decoder, mamba_decoder, DecoderConfig, ScanVariant};
-
-fn sweep_table(title: &str, pts: &[sweep::SweepPoint]) -> Table {
-    let mut t = Table::new(title, &["design point", "hyena", "mamba", "fft-mode gain", "scan-mode gain"]);
-    for p in pts {
-        t.row(&[
-            p.label.clone(),
-            fmt_time(p.hyena_seconds),
-            fmt_time(p.mamba_seconds),
-            format!("{:.2}x", p.hyena_gain),
-            format!("{:.2}x", p.mamba_gain),
-        ]);
-    }
-    t
-}
+use ssm_rdu::workloads::{hyena_decoder, mamba_decoder, ssm_workloads, DecoderConfig, ScanVariant};
 
 fn main() {
     let mut b = Bencher::from_env("ablations");
     let dc = DecoderConfig::paper(1 << 20);
+    // All registered SSM workloads (hyena, mamba, ssd, s4) ride every sweep.
+    let wls = ssm_workloads();
 
     b.report("ablation: chip scale (PCU count)", || {
-        sweep_table(
+        sweep::sweep_table(
             "chip scale @ L=1M",
-            &sweep::sweep_pcu_count(&dc, &[65, 130, 260, 520, 1040]),
+            &sweep::sweep_pcu_count(&dc, &[65, 130, 260, 520, 1040], &wls),
         )
         .print()
     });
 
     b.report("ablation: memory technology", || {
-        sweep_table(
+        sweep::sweep_table(
             "off-chip bandwidth @ L=1M",
-            &sweep::sweep_bandwidth(&dc, &[MemTech::Ddr5, MemTech::Hbm2e, MemTech::Hbm3e]),
+            &sweep::sweep_bandwidth(&dc, &[MemTech::Ddr5, MemTech::Hbm2e, MemTech::Hbm3e], &wls),
         )
         .print()
     });
 
     b.report("ablation: pipeline depth (stages)", || {
-        sweep_table("pipeline depth @ L=1M", &sweep::sweep_stages(&dc, &[6, 8, 12, 16, 24])).print()
+        sweep::sweep_table(
+            "pipeline depth @ L=1M",
+            &sweep::sweep_stages(&dc, &[6, 8, 12, 16, 24], &wls),
+        )
+        .print()
     });
 
     b.report("ablation: Bailey tile size R (transform FLOPs)", || {

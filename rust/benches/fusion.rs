@@ -1,5 +1,6 @@
 //! Fusion bench + perf-regression gate: fused vs kernel-by-kernel DFModel
-//! latency for the Hyena and Mamba decoders, serialized to
+//! latency for every registered SSM decoder (hyena, mamba, ssd, s4 — the
+//! table follows the workload registry), serialized to
 //! `BENCH_fusion.json` (run with `--json`; CI archives it as an artifact).
 //!
 //! This target doubles as the gate: it **exits non-zero if the fused

@@ -13,7 +13,7 @@
 
 use crate::arch::{InterchipLink, RduConfig};
 use crate::runtime::ModelKind;
-use crate::workloads::DecoderConfig;
+use crate::workloads::{family_workload, DecoderConfig, Workload};
 
 /// Effective FLOP utilization of decode-step kernels: GEMV-shaped work
 /// cannot saturate the systolic datapaths the way prefill GEMMs do.
@@ -37,35 +37,36 @@ pub struct DecodeCost {
     pub cycles: f64,
 }
 
-/// Model one decode step of `layers` decoder layers shaped by `dc` on `cfg`.
+/// Model one decode step of `layers` decoder layers shaped by `dc` on `cfg`
+/// for a serving-stack family — resolves the family's canonical workload in
+/// the registry and defers to [`decode_step_workload`]. The per-model
+/// demand formulas live with the workloads
+/// ([`crate::workloads::Workload::decode_demand`]), not here.
 pub fn decode_step(
     model: ModelKind,
     dc: &DecoderConfig,
     layers: usize,
     cfg: &RduConfig,
 ) -> DecodeCost {
+    decode_step_workload(family_workload(model), dc, layers, cfg)
+}
+
+/// Model one decode step for any registered workload: the workload supplies
+/// its token-mixer demand, this hook adds the template-shared MLP GEMVs and
+/// per-token I/O and prices the overlapped step.
+pub fn decode_step_workload(
+    w: &dyn Workload,
+    dc: &DecoderConfig,
+    layers: usize,
+    cfg: &RduConfig,
+) -> DecodeCost {
     let d = dc.d_model as f64;
-    let di = dc.d_inner() as f64;
-    let n = dc.state_dim.max(1) as f64;
-    let r = dc.fft_tile as f64;
     // Two MLP GEMVs (d → mlp·d → d), 2 FLOPs per MAC.
     let mlp_flops = 4.0 * d * (dc.mlp_mult as f64) * d;
-    let (mix_flops, state_bytes) = match model {
-        // In/out projections (d → 2·d_inner, d_inner → d) + the selective
-        // scan update h = Ā h + B̄ x and readout y = C h over N × d_inner
-        // state; state is read and written once per step (f32).
-        ModelKind::Mamba => (2.0 * (d * 2.0 * di + di * d) + 6.0 * n * di, 2.0 * n * di * 4.0),
-        // Three gating projections + the R-tap filter contribution per
-        // channel; the FFT filter/prefix caches (R × d complex each) are
-        // read and updated once per step.
-        ModelKind::Hyena => (2.0 * 3.0 * d * d + 4.0 * r * d, 2.0 * 2.0 * r * d * 4.0),
-        // QKV + output projections; the KV cache grows with context and is
-        // not O(1) — its traffic is out of scope for the SSM session cache.
-        ModelKind::Attention => (2.0 * 4.0 * d * d, 0.0),
-    };
+    let demand = w.decode_demand(dc);
     let l = layers.max(1) as f64;
-    let flops = l * (mix_flops + mlp_flops);
-    let state = l * state_bytes;
+    let flops = l * (demand.mix_flops + mlp_flops);
+    let state = l * demand.state_bytes;
     // One token in, one token out per layer boundary.
     let io_bytes = state + l * 2.0 * d * dc.dtype_bytes;
     cost_from(flops, state, io_bytes, cfg)
@@ -223,6 +224,28 @@ mod tests {
                 assert_eq!(unfused.flops, fused.flops, "fusion changes no arithmetic");
             }
         }
+    }
+
+    #[test]
+    fn workload_hook_agrees_with_the_family_wrapper() {
+        // The ModelKind wrapper and the registry path are the same model.
+        let dc = DecoderConfig::mamba_full(1 << 16);
+        let cfg = RduConfig::hs_scan_mode();
+        let pairs = [
+            ("mamba", ModelKind::Mamba),
+            ("hyena", ModelKind::Hyena),
+            ("attention", ModelKind::Attention),
+        ];
+        for (name, model) in pairs {
+            let w = crate::workloads::lookup(name).unwrap();
+            assert_eq!(decode_step_workload(w, &dc, 8, &cfg), decode_step(model, &dc, 8, &cfg));
+        }
+        // SSD decodes exactly like the selective scan; S4 carries its own
+        // diagonal state and differs from Hyena's filter caches.
+        let ssd = decode_step_workload(crate::workloads::lookup("ssd").unwrap(), &dc, 8, &cfg);
+        assert_eq!(ssd, decode_step(ModelKind::Mamba, &dc, 8, &cfg));
+        let s4 = decode_step_workload(crate::workloads::lookup("s4").unwrap(), &dc, 8, &cfg);
+        assert!(s4.flops > 0.0 && s4.state_bytes > 0.0);
     }
 
     #[test]

@@ -22,6 +22,12 @@
 //!   scheduler in simulation, without a PJRT backend; `decode_step_sharded`
 //!   adds the per-layer all-reduce of a chips-partitioned step.
 //!
+//! Every entry point consumes workloads through the
+//! [`mod@crate::workloads::registry`]: `sweep`'s design tables, the fusion
+//! gains and the decode hook all take (or resolve) a
+//! [`crate::workloads::Workload`] trait object, so a newly registered SSM
+//! variant is swept, fused and priced with no changes in this module.
+//!
 //! The GPU and VGA comparison backends live in [`crate::gpu`] and
 //! [`crate::vga`]; they consume the same [`crate::graph::Graph`] workloads.
 //! Multi-chip deployments are priced by [`crate::shard::estimate`], which
@@ -36,13 +42,16 @@ pub mod sweep;
 pub mod throughput;
 
 pub use decode::{
-    decode_step, decode_step_sharded, decode_step_unfused, DecodeCost, ShardedDecodeCost,
-    DECODE_KERNELS_PER_LAYER, DECODE_UTIL,
+    decode_step, decode_step_sharded, decode_step_unfused, decode_step_workload, DecodeCost,
+    ShardedDecodeCost, DECODE_KERNELS_PER_LAYER, DECODE_UTIL,
 };
 pub use fusion::{fuse_graph, FusionPlan};
 pub use mapping::{map_graph, map_graph_plan, Allocation, MapFailure, Mapping, Section};
 pub use perf::{
     estimate, estimate_fused, estimate_plan, estimate_unfused, Estimate, KernelEstimate,
 };
-pub use sweep::{fusion_gain_at, sweep_bandwidth, sweep_pcu_count, sweep_stages, SweepPoint};
+pub use sweep::{
+    fusion_gains, sweep_bandwidth, sweep_pcu_count, sweep_stages, sweep_table, SweepPoint,
+    WorkloadPoint,
+};
 pub use throughput::{kernel_rate, pcu_seconds, reconfig_seconds, Rate, RECONFIG_CYCLES};

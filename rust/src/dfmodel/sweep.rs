@@ -2,120 +2,190 @@
 //! memory bandwidth, Bailey tile size) and report how the paper's headline
 //! results move — the ablation study DFModel (paper Fig. 4: "multi-level
 //! optimization … design space optimization") was built for.
+//!
+//! Since the workload registry, every sweep is generic over
+//! [`crate::workloads::Workload`]s: the CLI's `sweep --workload …` picks
+//! any subset of the registered decoders, each priced on its own
+//! [`Workload::extended_config`] design point with the gain measured
+//! against the baseline chip under the same spec edit.
 
 use super::perf::estimate;
 use crate::arch::{MemTech, RduConfig};
-use crate::fft::BaileyVariant;
-use crate::workloads::{hyena_decoder, mamba_decoder, DecoderConfig, ScanVariant};
+use crate::util::fmt_time;
+use crate::util::table::Table;
+use crate::workloads::{DecoderConfig, Workload};
 
-/// One swept design point.
+/// One workload's numbers at one swept design point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadPoint {
+    /// Registry name of the workload.
+    pub workload: &'static str,
+    /// Latency on the workload's extended configuration at this point.
+    pub seconds: f64,
+    /// Speedup of the extended configuration over the baseline configuration
+    /// at this design point (1.0 when the workload needs no extension).
+    pub gain: f64,
+}
+
+/// One swept design point: a label plus a row per swept workload.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SweepPoint {
     pub label: String,
-    /// Hyena (Vector-FFT) latency on the extended config.
-    pub hyena_seconds: f64,
-    /// Mamba (parallel-scan) latency on the extended config.
-    pub mamba_seconds: f64,
-    /// Speedup of the extended config over the baseline config at this
-    /// design point (Hyena / Mamba).
-    pub hyena_gain: f64,
-    pub mamba_gain: f64,
+    pub rows: Vec<WorkloadPoint>,
 }
 
-fn point(label: String, spec_edit: impl Fn(&mut RduConfig), dc: &DecoderConfig) -> SweepPoint {
-    let mut base = RduConfig::baseline();
-    spec_edit(&mut base);
-    let mut fftm = RduConfig::fft_mode();
-    spec_edit(&mut fftm);
-    let mut scanm = RduConfig::hs_scan_mode();
-    spec_edit(&mut scanm);
-
-    let hy = hyena_decoder(dc, BaileyVariant::Vector);
-    let ma = mamba_decoder(dc, ScanVariant::Parallel);
-    let hy_base = estimate(&hy, &base).expect("mappable").total_seconds;
-    let hy_ext = estimate(&hy, &fftm).expect("mappable").total_seconds;
-    let ma_base = estimate(&ma, &base).expect("mappable").total_seconds;
-    let ma_ext = estimate(&ma, &scanm).expect("mappable").total_seconds;
-    SweepPoint {
-        label,
-        hyena_seconds: hy_ext,
-        mamba_seconds: ma_ext,
-        hyena_gain: hy_base / hy_ext,
-        mamba_gain: ma_base / ma_ext,
+impl SweepPoint {
+    /// This point's row for a workload, by registry name.
+    pub fn row(&self, workload: &str) -> Option<&WorkloadPoint> {
+        self.rows.iter().find(|r| r.workload == workload)
     }
+}
+
+fn point(
+    label: String,
+    spec_edit: impl Fn(&mut RduConfig),
+    dc: &DecoderConfig,
+    workloads: &[&'static dyn Workload],
+) -> SweepPoint {
+    let rows = workloads
+        .iter()
+        .map(|w| {
+            let mut base = RduConfig::baseline();
+            spec_edit(&mut base);
+            let mut ext = w.extended_config();
+            spec_edit(&mut ext);
+            let g = w.build_graph(dc);
+            let base_s = estimate(&g, &base).expect("mappable").total_seconds;
+            let ext_s = estimate(&g, &ext).expect("mappable").total_seconds;
+            WorkloadPoint { workload: w.name(), seconds: ext_s, gain: base_s / ext_s }
+        })
+        .collect();
+    SweepPoint { label, rows }
 }
 
 /// Sweep the PCU count (chip scale) at fixed geometry. SRAM (PMU count) is
 /// held at the Table I capacity so the sweep isolates *compute* scale —
 /// shrinking SRAM too would conflate it with the sectioning threshold.
-pub fn sweep_pcu_count(dc: &DecoderConfig, counts: &[usize]) -> Vec<SweepPoint> {
+pub fn sweep_pcu_count(
+    dc: &DecoderConfig,
+    counts: &[usize],
+    workloads: &[&'static dyn Workload],
+) -> Vec<SweepPoint> {
     counts
         .iter()
-        .map(|&n| point(format!("{n} PCUs"), |cfg| cfg.spec.n_pcu = n, dc))
+        .map(|&n| point(format!("{n} PCUs"), |cfg| cfg.spec.n_pcu = n, dc, workloads))
         .collect()
 }
 
 /// Sweep off-chip bandwidth (memory technology).
-pub fn sweep_bandwidth(dc: &DecoderConfig, techs: &[MemTech]) -> Vec<SweepPoint> {
+pub fn sweep_bandwidth(
+    dc: &DecoderConfig,
+    techs: &[MemTech],
+    workloads: &[&'static dyn Workload],
+) -> Vec<SweepPoint> {
     techs
         .iter()
-        .map(|&t| point(format!("{t}"), |cfg| cfg.spec.dram = t, dc))
+        .map(|&t| point(format!("{t}"), |cfg| cfg.spec.dram = t, dc, workloads))
         .collect()
 }
 
 /// Sweep pipeline depth (stages) at fixed lane width — moves the
 /// serialized-execution penalty (1/stages) and the spatial factor
 /// (levels/stages) in opposite directions.
-pub fn sweep_stages(dc: &DecoderConfig, stages: &[usize]) -> Vec<SweepPoint> {
+pub fn sweep_stages(
+    dc: &DecoderConfig,
+    stages: &[usize],
+    workloads: &[&'static dyn Workload],
+) -> Vec<SweepPoint> {
     stages
         .iter()
         .map(|&s| {
-            point(format!("{} stages", s), |cfg| {
-                cfg.spec.pcu = crate::arch::PcuGeometry::new(cfg.spec.pcu.lanes, s);
-            }, dc)
+            point(
+                format!("{s} stages"),
+                |cfg| {
+                    cfg.spec.pcu = crate::arch::PcuGeometry::new(cfg.spec.pcu.lanes, s);
+                },
+                dc,
+                workloads,
+            )
         })
         .collect()
 }
 
 /// Fusion ablation at one design point: launch-granularity latency of the
-/// fused vs kernel-by-kernel mapping on the extended configs, as
-/// `(hyena_gain, mamba_gain)` where gain = unfused / fused. The `sweep
-/// --fuse` CLI path prints this next to each swept point.
-pub fn fusion_gain_at(dc: &DecoderConfig) -> (f64, f64) {
+/// fused vs kernel-by-kernel mapping on each workload's extended config, as
+/// `(name, unfused/fused)` rows. The `sweep --fuse` CLI path prints this
+/// next to each swept point.
+pub fn fusion_gains(
+    dc: &DecoderConfig,
+    workloads: &[&'static dyn Workload],
+) -> Vec<(&'static str, f64)> {
     use super::perf::{estimate_fused, estimate_unfused};
-    let hy = hyena_decoder(dc, BaileyVariant::Vector);
-    let ma = mamba_decoder(dc, ScanVariant::Parallel);
-    let fftm = RduConfig::fft_mode();
-    let scanm = RduConfig::hs_scan_mode();
-    let hy_gain = estimate_unfused(&hy, &fftm).expect("mappable").total_seconds
-        / estimate_fused(&hy, &fftm).expect("mappable").total_seconds;
-    let ma_gain = estimate_unfused(&ma, &scanm).expect("mappable").total_seconds
-        / estimate_fused(&ma, &scanm).expect("mappable").total_seconds;
-    (hy_gain, ma_gain)
+    workloads
+        .iter()
+        .map(|w| {
+            let g = w.build_graph(dc);
+            let cfg = w.extended_config();
+            let gain = estimate_unfused(&g, &cfg).expect("mappable").total_seconds
+                / estimate_fused(&g, &cfg).expect("mappable").total_seconds;
+            (w.name(), gain)
+        })
+        .collect()
+}
+
+/// Render a sweep as a table: one latency and one gain column per workload.
+/// Shared by the `sweep` CLI subcommand and the `ablations` bench.
+pub fn sweep_table(title: &str, pts: &[SweepPoint]) -> Table {
+    let mut header: Vec<String> = vec!["Point".to_string()];
+    if let Some(first) = pts.first() {
+        for r in &first.rows {
+            header.push(r.workload.to_string());
+            header.push(format!("{} gain", r.workload));
+        }
+    }
+    let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut t = Table::new(title, &header_refs);
+    for p in pts {
+        let mut cells = vec![p.label.clone()];
+        for r in &p.rows {
+            cells.push(fmt_time(r.seconds));
+            cells.push(format!("{:.2}x", r.gain));
+        }
+        t.row(&cells);
+    }
+    t
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workloads::{lookup, ssm_workloads};
 
     fn dc() -> DecoderConfig {
         DecoderConfig::paper(1 << 18)
     }
 
+    fn pair() -> Vec<&'static dyn Workload> {
+        vec![lookup("hyena").unwrap(), lookup("mamba").unwrap()]
+    }
+
     #[test]
     fn more_pcus_never_slower() {
-        let pts = sweep_pcu_count(&dc(), &[128, 256, 520]);
+        let pts = sweep_pcu_count(&dc(), &[128, 256, 520], &ssm_workloads());
         for w in pts.windows(2) {
-            assert!(w[1].hyena_seconds <= w[0].hyena_seconds * 1.001, "{w:?}");
-            assert!(w[1].mamba_seconds <= w[0].mamba_seconds * 1.001, "{w:?}");
+            for (a, b) in w[0].rows.iter().zip(&w[1].rows) {
+                assert!(b.seconds <= a.seconds * 1.001, "{}: {a:?} -> {b:?}", a.workload);
+            }
         }
     }
 
     #[test]
     fn more_bandwidth_never_slower() {
-        let pts = sweep_bandwidth(&dc(), &[MemTech::Ddr5, MemTech::Hbm2e, MemTech::Hbm3e]);
+        let pts =
+            sweep_bandwidth(&dc(), &[MemTech::Ddr5, MemTech::Hbm2e, MemTech::Hbm3e], &pair());
         for w in pts.windows(2) {
-            assert!(w[1].hyena_seconds <= w[0].hyena_seconds * 1.001, "{w:?}");
+            let (a, b) = (w[0].row("hyena").unwrap(), w[1].row("hyena").unwrap());
+            assert!(b.seconds <= a.seconds * 1.001, "{w:?}");
         }
     }
 
@@ -124,30 +194,47 @@ mod tests {
         // The serialized penalty is 1/stages, so the FFT-mode gain grows
         // with pipeline depth — the paper's architectural argument in
         // ablation form.
-        let pts = sweep_stages(&dc(), &[6, 12, 24]);
+        let pts = sweep_stages(&dc(), &[6, 12, 24], &pair());
         for w in pts.windows(2) {
-            assert!(
-                w[1].hyena_gain >= w[0].hyena_gain * 0.999,
-                "{} {} vs {} {}",
-                w[0].label,
-                w[0].hyena_gain,
-                w[1].label,
-                w[1].hyena_gain
-            );
+            let (a, b) = (w[0].row("hyena").unwrap(), w[1].row("hyena").unwrap());
+            let msg = format!("{} {} vs {} {}", w[0].label, a.gain, w[1].label, b.gain);
+            assert!(b.gain >= a.gain * 0.999, "{msg}");
         }
     }
 
     #[test]
     fn gains_always_at_least_one() {
-        for p in sweep_pcu_count(&dc(), &[64, 520]) {
-            assert!(p.hyena_gain >= 1.0 && p.mamba_gain >= 1.0, "{p:?}");
+        for p in sweep_pcu_count(&dc(), &[64, 520], &ssm_workloads()) {
+            for r in &p.rows {
+                assert!(r.gain >= 1.0 - 1e-9, "{r:?}");
+            }
         }
     }
 
     #[test]
-    fn fusion_gains_exceed_one() {
-        let (hy, ma) = fusion_gain_at(&DecoderConfig::paper(1 << 14));
-        assert!(hy > 1.0, "hyena fusion gain {hy}");
-        assert!(ma > 1.0, "mamba fusion gain {ma}");
+    fn ssd_needs_no_extension() {
+        // SSD's extended config *is* the baseline: the chunked matmuls run
+        // systolic everywhere, so its sweep gain is identically 1.
+        for p in sweep_pcu_count(&dc(), &[260, 520], &[lookup("ssd").unwrap()]) {
+            let r = p.row("ssd").unwrap();
+            assert!((r.gain - 1.0).abs() < 1e-12, "{r:?}");
+            assert!(r.seconds.is_finite() && r.seconds > 0.0);
+        }
+    }
+
+    #[test]
+    fn fusion_gains_exceed_one_for_every_ssm() {
+        for (name, gain) in fusion_gains(&DecoderConfig::paper(1 << 14), &ssm_workloads()) {
+            assert!(gain > 1.0, "{name} fusion gain {gain}");
+        }
+    }
+
+    #[test]
+    fn sweep_table_renders_all_workloads() {
+        let pts = sweep_pcu_count(&DecoderConfig::paper(1 << 14), &[520], &ssm_workloads());
+        let s = sweep_table("t", &pts).render();
+        for name in ["hyena", "mamba", "ssd", "s4"] {
+            assert!(s.contains(name), "{s}");
+        }
     }
 }

@@ -22,7 +22,7 @@
 //! chunk of channels within the call**; only the calling thread's cache
 //! persists across calls. Amortized over `D/threads` channels this is
 //! cheap, but a persistent worker team would save the rebuild — see
-//! ARCHITECTURE.md §6.
+//! ARCHITECTURE.md §7.
 
 use super::plan::with_conv_plan;
 use super::{cooley_tukey::{fft, ifft}, is_pow2, to_complex, to_real};

@@ -1,15 +1,15 @@
 //! Fusion overhead table: fused vs kernel-by-kernel (unfused) modeled
-//! latency for the Hyena and Mamba decoders on their extended RDU configs,
+//! latency for every registered SSM decoder on its extended RDU config,
 //! with the launch counts and DRAM-staged intermediate traffic behind the
 //! gap. This is the table `simulate --fuse` and `sweep --fuse` print and
-//! the `fusion` bench serializes into `BENCH_fusion.json`.
+//! the `fusion` bench serializes into `BENCH_fusion.json` (the bench gate
+//! requires fused < unfused for **every** registered SSM workload, so a
+//! newly registered variant is covered automatically).
 
-use crate::arch::RduConfig;
 use crate::dfmodel::{estimate_fused, estimate_unfused, fuse_graph, FusionPlan};
-use crate::fft::BaileyVariant;
 use crate::util::table::Table;
 use crate::util::{eng, fmt_time};
-use crate::workloads::{hyena_decoder, mamba_decoder, DecoderConfig, ScanVariant};
+use crate::workloads::{ssm_workloads, DecoderConfig, Workload};
 
 /// Fused-vs-unfused comparison for one decoder at one sequence length.
 #[derive(Debug, Clone, PartialEq)]
@@ -37,16 +37,23 @@ impl FusionPoint {
     }
 }
 
-/// Compute the fusion comparison for both SSM decoders over `seq_lens`.
+/// Compute the fusion comparison for every registered SSM decoder over
+/// `seq_lens`, each on its own extended configuration.
 pub fn fusion_at(seq_lens: &[usize]) -> Vec<FusionPoint> {
+    fusion_at_workloads(seq_lens, &ssm_workloads())
+}
+
+/// [`fusion_at`] restricted to `workloads` — the `--workload`-filtered CLI
+/// paths call this so unselected decoders are never mapped or priced.
+pub fn fusion_at_workloads(
+    seq_lens: &[usize],
+    workloads: &[&'static dyn Workload],
+) -> Vec<FusionPoint> {
     let mut points = Vec::new();
     for &l in seq_lens {
         let dc = DecoderConfig::paper(l);
-        let cases = [
-            ("hyena", hyena_decoder(&dc, BaileyVariant::Vector), RduConfig::fft_mode()),
-            ("mamba", mamba_decoder(&dc, ScanVariant::Parallel), RduConfig::hs_scan_mode()),
-        ];
-        for (model, g, cfg) in cases {
+        for w in workloads {
+            let (model, g, cfg) = (w.name(), w.build_graph(&dc), w.extended_config());
             let plan = fuse_graph(&g, &cfg);
             let fused = estimate_fused(&g, &cfg).expect("mappable");
             let unfused = estimate_unfused(&g, &cfg).expect("mappable");
@@ -99,10 +106,12 @@ mod tests {
     }
 
     #[test]
-    fn table_renders() {
+    fn table_renders_every_registered_ssm() {
         let pts = fusion_at(&[1 << 12]);
         let s = fusion_table(&pts).render();
-        assert!(s.contains("hyena") && s.contains("mamba"), "{s}");
+        for name in ["hyena", "mamba", "ssd", "s4"] {
+            assert!(s.contains(name), "missing {name} in:\n{s}");
+        }
         assert!(s.contains("x"), "{s}");
     }
 }

@@ -11,7 +11,7 @@ pub mod mamba;
 pub mod overheads;
 pub mod platforms;
 
-pub use fusion::{fusion_at, fusion_table, FusionPoint};
+pub use fusion::{fusion_at, fusion_at_workloads, fusion_table, FusionPoint};
 pub use hyena::{fig7, Fig7};
 pub use mamba::{fig11, fig12, Fig11, Fig12};
 pub use overheads::table4;

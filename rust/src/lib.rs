@@ -14,8 +14,13 @@
 //!   checked against the algorithm substrates, utilization feeds the perf model.
 //! * [`fft`], [`scan`] — the algorithm substrates (Cooley–Tukey, Bailey 4-step
 //!   Vector/GEMM variants, C-scan, Hillis–Steele, Blelloch, tiled scan).
-//! * [`graph`], [`workloads`] — dataflow-graph IR and the attention / Hyena /
-//!   Mamba decoder builders (paper Fig. 3).
+//! * [`graph`], [`workloads`] — dataflow-graph IR, the decoder builders
+//!   (attention / Hyena / Mamba, paper Fig. 3, plus Mamba-2 SSD and S4
+//!   long-conv) and the **workload registry**
+//!   ([`mod@workloads::registry`]): one trait per SSM variant — graph, decode
+//!   demand, shard pattern, golden model — that `simulate`/`serve`/
+//!   `sweep`/`bench` resolve by name (`--workload`); adding a variant is
+//!   one module + one registry line (`docs/WORKLOADS.md`).
 //! * [`dfmodel`] — reproduction of the DFModel mapping optimizer + performance
 //!   estimator used for every figure in the paper, plus the fusion pass
 //!   (`dfmodel::fusion`) that clusters streamed kernel chains into single

@@ -12,8 +12,10 @@
 //!                                --seq-lens L1,L2,… overrides the sweep
 //!   all                          every table and figure in order
 //!   simulate [--lanes N --stages M] [--chips P --seq-len L] [--fuse]
-//!                                run the cycle-level PCU simulator demo;
-//!                                with --fuse also run the fused
+//!            [--workload W1,W2,…]
+//!                                run the cycle-level PCU simulator demo and
+//!                                print each selected workload's golden-model
+//!                                self-check; with --fuse also run the fused
 //!                                FFT→filter→iFFT conv pipeline and the
 //!                                fused scan→gate (bit-identical to their
 //!                                unfused launches) and print the fused-vs-
@@ -21,21 +23,28 @@
 //!                                --chips > 1 also verify the sharded
 //!                                scan/FFT dataflows numerically and print
 //!                                the strong-scaling sweep (speedup and
-//!                                communication share per chip count, for
-//!                                Hyena and Mamba)
+//!                                communication share per chip count) for
+//!                                the selected workloads
 //!   sweep [--seq-len L] [--pcus N1,N2,…] [--stages S1,S2,…] [--fuse]
+//!         [--workload W1,W2,…]
 //!                                design-space ablations (PCU count, DRAM
-//!                                technology, pipeline depth); with --fuse
-//!                                also print the fusion-gain table
-//!   dot --model <attention|hyena|mamba> [--seq-len L]
-//!                                dump a workload dataflow graph (graphviz)
+//!                                technology, pipeline depth) over the
+//!                                selected workloads (default: every
+//!                                registered SSM — hyena, mamba, ssd, s4);
+//!                                with --fuse also print the fusion-gain
+//!                                table
+//!   dot --model <name> [--seq-len L]
+//!                                dump a workload dataflow graph (graphviz);
+//!                                any registered workload name is valid
+//!                                (attention, hyena, mamba, ssd, s4)
 //!   serve [--artifacts DIR --requests N --workers W --max-batch B
-//!          --max-wait-ms MS --chips P --fuse]
+//!          --max-wait-ms MS --chips P --fuse --workload W1,W2,…]
 //!                                serve one-shot batched requests through
 //!                                the PJRT runtime (the E2E driver's
-//!                                engine); with --chips > 1 the closing
-//!                                model report also prices the
-//!                                sequence-sharded multi-chip deployment
+//!                                engine); the closing model report prices
+//!                                the selected workloads, and with
+//!                                --chips > 1 also the sequence-sharded
+//!                                multi-chip deployment
 //!   serve --continuous [--sessions N --decode-steps K --workers W
 //!                       --max-batch B --cache-mb M --layers L --d-state S
 //!                       --state-d-model D --fft-points P --chips P
@@ -62,10 +71,30 @@ use ssm_rdu::session::{SchedulerConfig, StateShape};
 use ssm_rdu::shard;
 use ssm_rdu::util::cli::Args;
 use ssm_rdu::util::{fmt_time, max_abs_diff, C64, XorShift};
-use ssm_rdu::workloads::{
-    attention_decoder, hyena_decoder, mamba_decoder, DecoderConfig, ScanVariant,
-};
+use ssm_rdu::workloads::{lookup, registry_names, ssm_workloads, DecoderConfig, Workload};
 use std::time::Duration;
+
+/// Resolve `--workload name1,name2,…` against the registry (default: every
+/// registered SSM workload). Unknown names exit with the valid list — the
+/// usage error the registry exists to keep honest.
+fn selected_workloads(args: &Args) -> Result<Vec<&'static dyn Workload>, i32> {
+    match args.get("workload") {
+        None => Ok(ssm_workloads()),
+        Some(list) => list
+            .split(',')
+            .map(|raw| {
+                let name = raw.trim();
+                lookup(name).ok_or_else(|| {
+                    eprintln!(
+                        "unknown workload `{name}`; registered workloads: {}",
+                        registry_names().join(", ")
+                    );
+                    2
+                })
+            })
+            .collect(),
+    }
+}
 
 fn main() {
     let args = Args::from_env();
@@ -133,8 +162,10 @@ fn main() {
             eprintln!(
                 "unknown subcommand `{other}`; usage: ssm-rdu \
                  <spec|table2|table4|fig7|fig8|fig11|fig12|all|simulate|sweep|dot|serve> \
-                 [--options] — see README.md (or the rust/src/main.rs doc block) for the full \
-                 reference"
+                 [--options] — `simulate`/`sweep`/`serve`/`dot` take --workload/--model with \
+                 any registered workload ({}); see README.md (or the rust/src/main.rs doc \
+                 block) for the full reference",
+                registry_names().join(", ")
             );
             2
         }
@@ -178,21 +209,41 @@ fn simulate(args: &Args) -> i32 {
             stats.utilization() * 100.0
         );
     }
+    // Every selected workload's numeric golden model vs its reference path
+    // (the registry's per-workload contract; see docs/WORKLOADS.md).
+    let wls = match selected_workloads(args) {
+        Ok(w) => w,
+        Err(code) => return code,
+    };
+    println!("\nworkload golden models (seed 42):");
+    for w in &wls {
+        match w.golden_check(42) {
+            Some(gc) => println!(
+                "  {:9} vs {}: |d|={:.1e}{}",
+                w.name(),
+                gc.reference,
+                gc.max_abs_diff,
+                if gc.bit_identical { " (bit-identical)" } else { "" }
+            ),
+            None => println!("  {:9} (baseline; no golden model)", w.name()),
+        }
+    }
+
     let chips = args.usize_or("chips", 1).max(1);
     if args.flag("fuse") {
-        fuse_report(args, chips);
+        fuse_report(args, chips, &wls);
     }
     if chips > 1 {
-        shard_report(chips, args.usize_or("seq-len", 1 << 20));
+        shard_report(chips, args.usize_or("seq-len", 1 << 20), &wls);
     }
     0
 }
 
 /// `simulate --fuse`: prove the fused pipelines bit-identical to their
 /// unfused launch sequences on the cycle-level simulator, then print the
-/// fused-vs-unfused DFModel latency table (and, with `--chips > 1`, the
-/// sharded composition).
-fn fuse_report(args: &Args, chips: usize) {
+/// fused-vs-unfused DFModel latency table for the selected workloads (and,
+/// with `--chips > 1`, the sharded composition).
+fn fuse_report(args: &Args, chips: usize, wls: &[&'static dyn Workload]) {
     use ssm_rdu::pcusim::{fused_conv_program, unfused_conv_programs};
 
     // 1) Cycle-level numerics: the fused FFT→filter→iFFT conv program vs
@@ -241,27 +292,29 @@ fn fuse_report(args: &Args, chips: usize) {
     );
 
     // 3) The modeled end-to-end win: fused vs kernel-by-kernel DFModel
-    //    latency for both decoders.
+    //    latency for the selected workloads.
     let lens = match args.get("seq-len") {
         Some(_) => vec![args.usize_or("seq-len", 1 << 20)],
         None => vec![1 << 12, 1 << 16, 1 << 20],
     };
-    figures::fusion_table(&figures::fusion_at(&lens)).print();
+    figures::fusion_table(&figures::fusion_at_workloads(&lens, wls)).print();
 
     if chips > 1 {
         let link = InterchipLink::rdu_fabric();
         let l = args.usize_or("seq-len", 1 << 20);
         if l % chips == 0 {
             let dc = DecoderConfig::paper(l);
-            for (model, cfg) in [
-                (ModelKind::Hyena, RduConfig::fft_mode()),
-                (ModelKind::Mamba, RduConfig::hs_scan_mode()),
-            ] {
-                let f = shard::sharded_estimate_fused(model, &dc, chips, &cfg, &link, true);
-                let u = shard::sharded_estimate_fused(model, &dc, chips, &cfg, &link, false);
+            for w in wls {
+                if w.shard_comm(&dc) == ssm_rdu::workloads::ShardComm::Unsupported {
+                    continue;
+                }
+                let cfg = w.extended_config();
+                let f = shard::sharded_estimate_fused_workload(w, &dc, chips, &cfg, &link, true);
+                let u = shard::sharded_estimate_fused_workload(w, &dc, chips, &cfg, &link, false);
                 if let (Ok(f), Ok(u)) = (f, u) {
                     println!(
-                        "{chips}-chip {model} @ L={l}: unfused {} -> fused {} ({:.2}x)",
+                        "{chips}-chip {} @ L={l}: unfused {} -> fused {} ({:.2}x)",
+                        w.name(),
                         fmt_time(u.total_seconds),
                         fmt_time(f.total_seconds),
                         u.total_seconds / f.total_seconds,
@@ -272,51 +325,47 @@ fn fuse_report(args: &Args, chips: usize) {
     }
 }
 
-/// `sweep`: design-space ablations over chip parameters; `--fuse` adds the
-/// fusion-gain view.
+/// `sweep`: design-space ablations over chip parameters for the selected
+/// workloads (`--workload`, default every registered SSM); `--fuse` adds
+/// the fusion-gain view.
 fn sweep(args: &Args) -> i32 {
     use ssm_rdu::arch::MemTech;
-    use ssm_rdu::dfmodel::{sweep_bandwidth, sweep_pcu_count, sweep_stages};
+    use ssm_rdu::dfmodel::{sweep_bandwidth, sweep_pcu_count, sweep_stages, sweep_table};
 
+    let wls = match selected_workloads(args) {
+        Ok(w) => w,
+        Err(code) => return code,
+    };
     let l = args.usize_or("seq-len", 1 << 18);
     let dc = DecoderConfig::paper(l);
     let pcus = args.usize_list_or("pcus", &[128, 256, 520]);
     let stages = args.usize_list_or("stages", &[6, 12, 24]);
 
     let sweeps: [(&str, Vec<ssm_rdu::dfmodel::SweepPoint>); 3] = [
-        ("PCU count", sweep_pcu_count(&dc, &pcus)),
-        ("DRAM technology", sweep_bandwidth(&dc, &[MemTech::Ddr5, MemTech::Hbm2e, MemTech::Hbm3e])),
-        ("pipeline depth", sweep_stages(&dc, &stages)),
+        ("PCU count", sweep_pcu_count(&dc, &pcus, &wls)),
+        (
+            "DRAM technology",
+            sweep_bandwidth(&dc, &[MemTech::Ddr5, MemTech::Hbm2e, MemTech::Hbm3e], &wls),
+        ),
+        ("pipeline depth", sweep_stages(&dc, &stages, &wls)),
     ];
     for (what, pts) in sweeps {
-        let mut t = ssm_rdu::util::table::Table::new(
-            &format!("Design sweep over {what} at L={l}"),
-            &["Point", "Hyena", "Mamba", "Hyena gain", "Mamba gain"],
-        );
-        for p in &pts {
-            t.row(&[
-                p.label.clone(),
-                fmt_time(p.hyena_seconds),
-                fmt_time(p.mamba_seconds),
-                format!("{:.2}x", p.hyena_gain),
-                format!("{:.2}x", p.mamba_gain),
-            ]);
-        }
-        t.print();
+        sweep_table(&format!("Design sweep over {what} at L={l}"), &pts).print();
     }
 
     if args.flag("fuse") {
-        let (hy, ma) = ssm_rdu::dfmodel::fusion_gain_at(&dc);
-        println!("fusion gain at L={l}: hyena {hy:.2}x, mamba {ma:.2}x (unfused/fused)");
-        figures::fusion_table(&figures::fusion_at(&[l])).print();
+        for (name, gain) in ssm_rdu::dfmodel::fusion_gains(&dc, &wls) {
+            println!("fusion gain at L={l}: {name} {gain:.2}x (unfused/fused)");
+        }
+        figures::fusion_table(&figures::fusion_at_workloads(&[l], &wls)).print();
     }
     0
 }
 
 /// `simulate --chips P`: check the sharded dataflows against their
-/// single-chip references, then print the strong-scaling sweep for both
-/// SSM decoders (speedup over one chip and communication share).
-fn shard_report(chips: usize, seq_len: usize) {
+/// single-chip references, then print the strong-scaling sweep for the
+/// selected SSM decoders (speedup over one chip and communication share).
+fn shard_report(chips: usize, seq_len: usize, wls: &[&'static dyn Workload]) {
     let link = InterchipLink::rdu_fabric();
     // Sweep powers of two up to the requested chip count; a count must
     // divide L (the sharded estimate partitions the sequence evenly), so
@@ -365,22 +414,31 @@ fn shard_report(chips: usize, seq_len: usize) {
     );
     assert!(scan_pooled_ok && fft_pooled_ok, "pooling must not change the numerics");
 
-    // Strong scaling at the paper decoder shape over `link`.
+    // SSD's sharded chunked scan is also exact — and, carry-chained through
+    // the same exchange, bit-identical to the serial recurrence.
+    let ssd_ok =
+        shard::sharded_ssd_scan(&a, &b, p, 256) == ssm_rdu::scan::mamba_scan_serial(&a, &b);
+    println!("sharded SSD chunked scan ({p} chips, Q=256) bit-identical to serial: {ssd_ok}");
+    assert!(ssd_ok, "the SSD carry chain must preserve serial numerics exactly");
+
+    // Strong scaling at the paper decoder shape over `link` for every
+    // selected (shardable) workload, each on its own extended config.
     println!("strong scaling at L={seq_len}, {link}:");
     let dc = DecoderConfig::paper(seq_len);
-    for (model, cfg) in [
-        (ModelKind::Mamba, RduConfig::hs_scan_mode()),
-        (ModelKind::Hyena, RduConfig::fft_mode()),
-    ] {
-        let pts = match shard::strong_scaling(model, &dc, &counts, &cfg, &link) {
+    for w in wls {
+        if w.shard_comm(&dc) == ssm_rdu::workloads::ShardComm::Unsupported {
+            continue;
+        }
+        let cfg = w.extended_config();
+        let pts = match shard::strong_scaling_workload(*w, &dc, &counts, &cfg, &link) {
             Ok(p) => p,
             Err(e) => {
-                eprintln!("  {model}: unmappable ({e})");
+                eprintln!("  {}: unmappable ({e})", w.name());
                 continue;
             }
         };
         let mut t = ssm_rdu::util::table::Table::new(
-            &format!("{model} strong scaling on {}", cfg.name()),
+            &format!("{} strong scaling on {}", w.name(), cfg.name()),
             &["Chips", "Per-chip", "Comm", "Total", "Speedup", "Comm share"],
         );
         for pt in &pts {
@@ -397,17 +455,20 @@ fn shard_report(chips: usize, seq_len: usize) {
     }
 }
 
-/// Dump a workload graph as graphviz dot.
+/// Dump a workload graph as graphviz dot. Any registered workload name is
+/// valid (`--model` and `--workload` are synonyms here); the error path
+/// lists the registry instead of a hardcoded set.
 fn dot(args: &Args) -> i32 {
     let l = args.usize_or("seq-len", 1 << 20);
     let dc = DecoderConfig::paper(l);
-    let model = args.get_or("model", "hyena");
-    let g = match model.as_str() {
-        "attention" => attention_decoder(&dc),
-        "hyena" => hyena_decoder(&dc, ssm_rdu::fft::BaileyVariant::Vector),
-        "mamba" => mamba_decoder(&dc, ScanVariant::Parallel),
-        other => {
-            eprintln!("unknown model `{other}`");
+    let model = args.get("model").or_else(|| args.get("workload")).unwrap_or("hyena").to_string();
+    let g = match lookup(&model) {
+        Some(w) => w.build_graph(&dc),
+        None => {
+            eprintln!(
+                "unknown model `{model}`; registered workloads: {}",
+                registry_names().join(", ")
+            );
             return 2;
         }
     };
@@ -488,14 +549,17 @@ fn serve(args: &Args) -> i32 {
     coord.shutdown();
 
     // Tie the serving stack back to the paper's performance model: print the
-    // modeled-RDU latency for the same decoder shapes, and — with --chips —
-    // the sequence-sharded multi-chip deployment.
+    // modeled-RDU latency for the selected workloads (`--workload`, default
+    // every registered SSM) at the artifact shape, and — with --chips — the
+    // sequence-sharded multi-chip deployment.
+    let wls = match selected_workloads(args) {
+        Ok(w) => w,
+        Err(code) => return code,
+    };
     let chips = args.usize_or("chips", 1).max(1);
     let dc = DecoderConfig::paper(manifest.seq_len);
-    for (name, g, cfg) in [
-        ("hyena", hyena_decoder(&dc, ssm_rdu::fft::BaileyVariant::Vector), RduConfig::fft_mode()),
-        ("mamba", mamba_decoder(&dc, ScanVariant::Parallel), RduConfig::hs_scan_mode()),
-    ] {
+    for w in &wls {
+        let (name, g, cfg) = (w.name(), w.build_graph(&dc), w.extended_config());
         if let Ok(est) = ssm_rdu::dfmodel::estimate(&g, &cfg) {
             println!(
                 "modeled {} latency for {name} @ L={}: {}",
@@ -529,14 +593,16 @@ fn serve(args: &Args) -> i32 {
     }
     if chips > 1 && manifest.seq_len % chips == 0 {
         let link = InterchipLink::rdu_fabric();
-        for (model, cfg) in [
-            (ModelKind::Hyena, RduConfig::fft_mode()),
-            (ModelKind::Mamba, RduConfig::hs_scan_mode()),
-        ] {
-            if let Ok(s) = shard::sharded_estimate(model, &dc, chips, &cfg, &link) {
+        for w in &wls {
+            if w.shard_comm(&dc) == ssm_rdu::workloads::ShardComm::Unsupported {
+                continue;
+            }
+            let cfg = w.extended_config();
+            if let Ok(s) = shard::sharded_estimate_workload(*w, &dc, chips, &cfg, &link) {
                 println!(
-                    "modeled {chips}-chip {model} @ L={}: {} per chip + {} exchange = {} \
+                    "modeled {chips}-chip {} @ L={}: {} per chip + {} exchange = {} \
                      ({:.1}% comm)",
+                    w.name(),
                     manifest.seq_len,
                     fmt_time(s.per_chip.total_seconds),
                     fmt_time(s.comm_seconds),
@@ -700,6 +766,7 @@ fn serve_continuous(args: &Args) -> i32 {
             fft_tile: 32,
             state_dim: shape.d_state.max(1),
             expand: 1,
+            ssd_chunk: 256,
         };
         let cost = ssm_rdu::dfmodel::decode_step(model, &dc, shape.layers, &cfg);
         println!(

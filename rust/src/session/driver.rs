@@ -24,7 +24,7 @@ use super::state::{SsmState, StateShape};
 use super::SessionId;
 use crate::arch::RduConfig;
 use crate::coordinator::{Executor, ExecutorFactory};
-use crate::dfmodel::decode::decode_step;
+use crate::dfmodel::decode::decode_step_workload;
 use crate::runtime::pool::chunk_ranges;
 use crate::runtime::ModelKind;
 use crate::session::budget::MemoryBudget;
@@ -131,16 +131,20 @@ fn cost_config(shape: &StateShape) -> crate::workloads::DecoderConfig {
         fft_tile: 32,
         state_dim: shape.d_state.max(1),
         expand: 1,
+        ssd_chunk: 256,
     }
 }
 
 /// Per-model decode-step cost table for one scenario (all sessions of a
 /// model share a shape), shared by the serial and pooled drivers so their
-/// modeled times agree exactly.
+/// modeled times agree exactly. Costs come from the workload registry: each
+/// serving family's canonical [`crate::workloads::Workload`] supplies the
+/// decode demand the [`crate::dfmodel::decode`] hook prices.
 fn step_cost_fn(cfg: &SimConfig, rdu: &RduConfig) -> impl Fn(ModelKind) -> f64 {
     let per = |model: ModelKind| {
         let shape = cfg.shape_for(model);
-        decode_step(model, &cost_config(&shape), shape.layers, rdu).seconds
+        let w = crate::workloads::family_workload(model);
+        decode_step_workload(w, &cost_config(&shape), shape.layers, rdu).seconds
     };
     let mamba = per(ModelKind::Mamba);
     let hyena = per(ModelKind::Hyena);

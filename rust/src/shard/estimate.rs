@@ -17,23 +17,18 @@
 //! and the communication share — the numbers the `shard_scaling` bench and
 //! `simulate --chips` print.
 
-use super::fft::transpose_bytes;
-use super::scan::carry_exchange_bytes;
 use crate::arch::{prefix_exchange_steps, InterchipLink, RduConfig};
 use crate::dfmodel::{estimate, Estimate, MapFailure};
-use crate::fft::BaileyVariant;
-use crate::graph::OpClass;
 use crate::runtime::ModelKind;
-use crate::workloads::{hyena_decoder, mamba_decoder, DecoderConfig, ScanVariant};
-
-/// FFT transforms per Hyena decoder layer (two convs × three transforms).
-const HYENA_TRANSFORMS: f64 = 6.0;
+use crate::workloads::{family_workload, DecoderConfig, ShardComm, Workload};
 
 /// A sequence-sharded performance estimate: one chip's DFModel mapping plus
 /// the interconnect term.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ShardedEstimate {
     pub model: ModelKind,
+    /// Registry name of the sharded workload.
+    pub workload: &'static str,
     pub chips: usize,
     /// DFModel estimate of one chip's `L / P` sub-sequence.
     pub per_chip: Estimate,
@@ -64,12 +59,9 @@ pub struct ScalingPoint {
     pub speedup: f64,
 }
 
-/// Estimate `model` at full sequence length `dc.seq_len` sharded over
-/// `chips` chips of configuration `cfg`, exchanging over `link`.
-///
-/// `chips` must divide `dc.seq_len` (the figure sweeps use powers of two).
-/// Attention is rejected: its quadratic token mixing has no sequence-local
-/// phase to shard this way.
+/// Estimate `model`'s canonical registry workload at full sequence length
+/// `dc.seq_len` sharded over `chips` chips — the ModelKind-keyed wrapper
+/// the serving stack calls; see [`sharded_estimate_workload`].
 pub fn sharded_estimate(
     model: ModelKind,
     dc: &DecoderConfig,
@@ -77,10 +69,30 @@ pub fn sharded_estimate(
     cfg: &RduConfig,
     link: &InterchipLink,
 ) -> Result<ShardedEstimate, MapFailure> {
-    let (graph, comm_bytes, comm_seconds) = sharded_graph_and_comm(model, dc, chips, link);
+    sharded_estimate_workload(family_workload(model), dc, chips, cfg, link)
+}
+
+/// Estimate any registered workload at full sequence length `dc.seq_len`
+/// sharded over `chips` chips of configuration `cfg`, exchanging over
+/// `link`. The workload supplies its local graph
+/// ([`Workload::shard_local_graph`]) and exchange pattern
+/// ([`Workload::shard_comm`]); this function prices them.
+///
+/// `chips` must divide `dc.seq_len` (the figure sweeps use powers of two).
+/// Workloads with [`ShardComm::Unsupported`] (attention) are rejected:
+/// quadratic token mixing has no sequence-local phase to shard this way.
+pub fn sharded_estimate_workload(
+    w: &dyn Workload,
+    dc: &DecoderConfig,
+    chips: usize,
+    cfg: &RduConfig,
+    link: &InterchipLink,
+) -> Result<ShardedEstimate, MapFailure> {
+    let (graph, comm_bytes, comm_seconds) = sharded_graph_and_comm(w, dc, chips, link);
     let per_chip = estimate(&graph, cfg)?;
     Ok(ShardedEstimate {
-        model,
+        model: w.family(),
+        workload: w.name(),
         chips,
         comm_seconds,
         comm_bytes,
@@ -102,12 +114,25 @@ pub fn sharded_estimate_fused(
     link: &InterchipLink,
     fused: bool,
 ) -> Result<ShardedEstimate, MapFailure> {
+    sharded_estimate_fused_workload(family_workload(model), dc, chips, cfg, link, fused)
+}
+
+/// [`sharded_estimate_fused`] for any registered workload.
+pub fn sharded_estimate_fused_workload(
+    w: &dyn Workload,
+    dc: &DecoderConfig,
+    chips: usize,
+    cfg: &RduConfig,
+    link: &InterchipLink,
+    fused: bool,
+) -> Result<ShardedEstimate, MapFailure> {
     use crate::dfmodel::{estimate_fused, estimate_unfused};
-    let (graph, comm_bytes, comm_seconds) = sharded_graph_and_comm(model, dc, chips, link);
+    let (graph, comm_bytes, comm_seconds) = sharded_graph_and_comm(w, dc, chips, link);
     let per_chip =
         if fused { estimate_fused(&graph, cfg)? } else { estimate_unfused(&graph, cfg)? };
     Ok(ShardedEstimate {
-        model,
+        model: w.family(),
+        workload: w.name(),
         chips,
         comm_seconds,
         comm_bytes,
@@ -118,9 +143,17 @@ pub fn sharded_estimate_fused(
 
 /// One chip's workload graph plus the inter-chip communication term of the
 /// sharded dataflow — the part shared by the idealized and fusion-aware
-/// sharded estimates.
+/// sharded estimates. The graph comes straight from the workload trait;
+/// the [`ShardComm`] pattern is priced here over `link`:
+///
+/// * [`ShardComm::CarryExchange`] — one composed `(A, B)` pair per scan
+///   channel through the `2·⌈log₂P⌉`-round inter-chip exclusive prefix
+///   ([`InterchipLink::prefix_exchange_seconds`]).
+/// * [`ShardComm::AllToAllTranspose`] — per transform, an all-to-all of
+///   the distributed padded `fft_len × D` complex tensor, each chip holding
+///   `1/P` of it ([`InterchipLink::all_to_all_seconds`]).
 fn sharded_graph_and_comm(
-    model: ModelKind,
+    w: &dyn Workload,
     dc: &DecoderConfig,
     chips: usize,
     link: &InterchipLink,
@@ -131,48 +164,32 @@ fn sharded_graph_and_comm(
         "sharded_estimate: {chips} chips must divide L={}",
         dc.seq_len
     );
-    let local = DecoderConfig { seq_len: dc.seq_len / chips, ..*dc };
-    let (graph, comm_bytes, comm_seconds) = match model {
-        ModelKind::Mamba => {
-            let g = mamba_decoder(&local, ScanVariant::Parallel);
-            let carry = carry_exchange_bytes(dc.state_dim.max(1) * dc.d_inner(), dc.dtype_bytes);
+    let graph = w.shard_local_graph(dc, chips);
+    let (comm_bytes, comm_seconds) = match w.shard_comm(dc) {
+        ShardComm::CarryExchange { channels } => {
+            let carry = super::scan::carry_exchange_bytes(channels, dc.dtype_bytes);
             let bytes = prefix_exchange_steps(chips) as f64 * carry;
-            (g, bytes, link.prefix_exchange_seconds(chips, carry))
+            (bytes, link.prefix_exchange_seconds(chips, carry))
         }
-        ModelKind::Hyena => {
-            let mut g = hyena_decoder(&local, BaileyVariant::Vector);
-            // The distributed 4-step runs *global* 2L-point transforms with
-            // the work split evenly, so a chip's FFT work is
-            // 5·(n/P)·log₂(n) — not the 5·(n/P)·log₂(n/P) the local-length
-            // graph prices. Scale the FFT kernels up by log₂n / log₂(n/P)
-            // so per-chip compute and the transpose describe one dataflow.
-            let ratio =
-                (dc.fft_len() as f64).log2() / (local.fft_len() as f64).log2().max(1.0);
-            for k in &mut g.kernels {
-                if matches!(k.op, OpClass::VectorFft | OpClass::GemmFft) {
-                    k.flops *= ratio;
-                }
-            }
-            // Each transform transposes the global padded tensor; the
-            // matrix is distributed, so each chip holds 1/P of it.
+        ShardComm::AllToAllTranspose { transforms } => {
             let elem_bytes = 2.0 * dc.dtype_bytes; // complex
             let tensor = dc.fft_len() as f64 * dc.d_model as f64 * elem_bytes;
-            let bytes = HYENA_TRANSFORMS * transpose_bytes(dc.fft_len(), chips, elem_bytes)
+            let bytes = transforms
+                * super::fft::transpose_bytes(dc.fft_len(), chips, elem_bytes)
                 * dc.d_model as f64;
-            let secs = HYENA_TRANSFORMS * link.all_to_all_seconds(chips, tensor / chips as f64);
-            (g, bytes, secs)
+            let secs = transforms * link.all_to_all_seconds(chips, tensor / chips as f64);
+            (bytes, secs)
         }
-        ModelKind::Attention => {
-            panic!("sharded_estimate: sequence sharding covers the SSM decoders, not attention")
-        }
+        ShardComm::Unsupported => panic!(
+            "sharded_estimate: sequence sharding covers the SSM decoders, not {}",
+            w.name()
+        ),
     };
     (graph, comm_bytes, comm_seconds)
 }
 
-/// Strong-scaling sweep: the same total sequence `dc.seq_len` over each
-/// chip count, with speedup measured against a single-chip estimate of the
-/// same total `L` (reused from the sweep when it contains chip count 1,
-/// computed once otherwise).
+/// Strong-scaling sweep for a serving family's canonical workload — the
+/// ModelKind-keyed wrapper over [`strong_scaling_workload`].
 pub fn strong_scaling(
     model: ModelKind,
     dc: &DecoderConfig,
@@ -180,13 +197,27 @@ pub fn strong_scaling(
     cfg: &RduConfig,
     link: &InterchipLink,
 ) -> Result<Vec<ScalingPoint>, MapFailure> {
+    strong_scaling_workload(family_workload(model), dc, chip_counts, cfg, link)
+}
+
+/// Strong-scaling sweep: the same total sequence `dc.seq_len` over each
+/// chip count, with speedup measured against a single-chip estimate of the
+/// same total `L` (reused from the sweep when it contains chip count 1,
+/// computed once otherwise).
+pub fn strong_scaling_workload(
+    w: &dyn Workload,
+    dc: &DecoderConfig,
+    chip_counts: &[usize],
+    cfg: &RduConfig,
+    link: &InterchipLink,
+) -> Result<Vec<ScalingPoint>, MapFailure> {
     let mut ests = Vec::with_capacity(chip_counts.len());
     for &p in chip_counts {
-        ests.push(sharded_estimate(model, dc, p, cfg, link)?);
+        ests.push(sharded_estimate_workload(w, dc, p, cfg, link)?);
     }
     let single = match ests.iter().find(|e| e.chips == 1) {
         Some(e) => e.total_seconds,
-        None => sharded_estimate(model, dc, 1, cfg, link)?.total_seconds,
+        None => sharded_estimate_workload(w, dc, 1, cfg, link)?.total_seconds,
     };
     Ok(ests
         .into_iter()
@@ -333,5 +364,61 @@ mod tests {
             &RduConfig::baseline(),
             &InterchipLink::rdu_fabric(),
         );
+    }
+
+    #[test]
+    fn every_ssm_workload_shards_through_the_registry() {
+        let link = InterchipLink::rdu_fabric();
+        for w in crate::workloads::ssm_workloads() {
+            let cfg = w.extended_config();
+            let s = sharded_estimate_workload(w, &dc(), 4, &cfg, &link).unwrap();
+            assert_eq!(s.workload, w.name());
+            assert!(s.total_seconds.is_finite() && s.total_seconds > 0.0, "{}", w.name());
+            assert!(s.comm_seconds > 0.0, "{}: 4 chips must exchange", w.name());
+            assert_eq!(s.total_seconds, s.per_chip.total_seconds + s.comm_seconds);
+        }
+    }
+
+    #[test]
+    fn s4_exchanges_half_of_hyenas_transposes() {
+        // Three transforms per layer vs six: identical per-transform
+        // traffic, so S4's exchange bytes are exactly half.
+        let link = InterchipLink::rdu_fabric();
+        let hy = sharded_estimate_workload(
+            crate::workloads::lookup("hyena").unwrap(),
+            &dc(),
+            8,
+            &RduConfig::fft_mode(),
+            &link,
+        )
+        .unwrap();
+        let s4 = sharded_estimate_workload(
+            crate::workloads::lookup("s4").unwrap(),
+            &dc(),
+            8,
+            &RduConfig::fft_mode(),
+            &link,
+        )
+        .unwrap();
+        assert!((s4.comm_bytes - hy.comm_bytes / 2.0).abs() / hy.comm_bytes < 1e-12);
+    }
+
+    #[test]
+    fn ssd_rides_the_mamba_carry_exchange() {
+        // Same sharding pattern, same wire bytes as the selective scan.
+        let link = InterchipLink::rdu_fabric();
+        let ma = sharded_estimate(ModelKind::Mamba, &dc(), 8, &RduConfig::hs_scan_mode(), &link)
+            .unwrap();
+        let ssd = sharded_estimate_workload(
+            crate::workloads::lookup("ssd").unwrap(),
+            &dc(),
+            8,
+            &RduConfig::baseline(),
+            &link,
+        )
+        .unwrap();
+        assert_eq!(ssd.comm_bytes, ma.comm_bytes);
+        assert_eq!(ssd.comm_seconds, ma.comm_seconds);
+        assert_eq!(ssd.model, ModelKind::Mamba, "SSD serves through the Mamba family");
     }
 }

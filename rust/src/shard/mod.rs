@@ -17,7 +17,12 @@
 //! * [`estimate`] — sharded DFModel [`crate::dfmodel::Estimate`]s: per-chip
 //!   compute from the single-chip mapper at `L / P` plus the
 //!   [`crate::arch::InterchipLink`] communication term, and the
-//!   strong-scaling sweep behind the `shard_scaling` bench.
+//!   strong-scaling sweep behind the `shard_scaling` bench. Since the
+//!   workload registry these resolve any [`crate::workloads::Workload`] —
+//!   the workload supplies its local graph and [`crate::workloads::ShardComm`]
+//!   pattern (Mamba/SSD: carry exchange; Hyena/S4: all-to-all transposes),
+//!   this module prices it. [`sharded_ssd_scan`] is the SSD numeric driver,
+//!   bit-identical to the serial recurrence.
 //!
 //! The serving integration (per-chip state caches, sharded dispatch,
 //! `--chips` on `serve`/`simulate`) lives in [`crate::coordinator`] and the
@@ -34,11 +39,14 @@ pub mod fft;
 pub mod scan;
 
 pub use estimate::{
-    sharded_estimate, sharded_estimate_fused, strong_scaling, ScalingPoint, ShardedEstimate,
+    sharded_estimate, sharded_estimate_fused, sharded_estimate_fused_workload,
+    sharded_estimate_workload, strong_scaling, strong_scaling_workload, ScalingPoint,
+    ShardedEstimate,
 };
 pub use fft::{sharded_bailey_fft, sharded_bailey_fft_pooled, transpose_bytes};
 pub use scan::{
     carry_exchange_bytes, sharded_mamba_scan, sharded_mamba_scan_pooled, sharded_scan_gate_fused,
+    sharded_ssd_scan,
 };
 
 use std::ops::Range;

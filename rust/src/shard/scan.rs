@@ -146,6 +146,35 @@ pub fn carry_exchange_bytes(channels: usize, dtype_bytes: f64) -> f64 {
     channels as f64 * 2.0 * dtype_bytes
 }
 
+/// Sharded Mamba-2 **SSD** chunked scan: each chip runs the golden chunked
+/// evaluator ([`crate::workloads::ssd_scan_with_carry`]) over its
+/// contiguous sub-sequence with `q`-element chunks, and the chip-boundary
+/// state rides the same carry exchange as [`sharded_mamba_scan`] — here
+/// chained in ring order, which keeps every chip's carry-in the *exact*
+/// serial state at its boundary. Combined with the bit-exact per-chip
+/// evaluator this makes the whole sharded scan **bit-identical** to
+/// [`crate::scan::mamba_scan_serial`] for any length, chunk size and chip
+/// count (the integration tests assert exact equality at `--chips 2` and
+/// beyond). Wire cost is priced by the same
+/// [`crate::arch::InterchipLink::prefix_exchange_seconds`] term the
+/// sharded estimates charge.
+pub fn sharded_ssd_scan(a: &[f64], b: &[f64], chips: usize, q: usize) -> Vec<f64> {
+    assert_eq!(a.len(), b.len(), "sharded_ssd_scan: a/b length mismatch");
+    assert!(chips >= 1, "sharded_ssd_scan: need at least one chip");
+    let mut out = Vec::with_capacity(a.len());
+    let mut carry = 0.0;
+    for r in shard_ranges(a.len(), chips) {
+        if r.is_empty() {
+            continue;
+        }
+        let seg =
+            crate::workloads::ssd_scan_with_carry(&a[r.clone()], &b[r], q, carry);
+        carry = *seg.last().expect("non-empty shard");
+        out.extend(seg);
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -217,6 +246,25 @@ mod tests {
                     sharded_mamba_scan(&a, &b, chips),
                     "n={n} chips={chips}: pooling must not change a single bit"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_ssd_scan_bit_identical_to_serial() {
+        let mut rng = XorShift::new(64);
+        for &n in &[1usize, 9, 100, 1000, 1023] {
+            let a: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 0.99)).collect();
+            let b = rng.vec(n, -1.0, 1.0);
+            let want = mamba_scan_serial(&a, &b);
+            for chips in [1usize, 2, 3, 8] {
+                for q in [1usize, 64, 256] {
+                    assert_eq!(
+                        sharded_ssd_scan(&a, &b, chips, q),
+                        want,
+                        "n={n} chips={chips} q={q}: must not differ by a bit"
+                    );
+                }
             }
         }
     }

@@ -3,7 +3,10 @@
 
 use super::blocks::{self, gemm, gemm_flops, layer_norm};
 use super::config::DecoderConfig;
+use super::registry::{DecodeDemand, GoldenCheck, ShardComm, Workload};
+use crate::arch::RduConfig;
 use crate::graph::{Graph, Kernel, OpClass};
+use crate::runtime::ModelKind;
 
 /// Build the attention decoder layer: LN → QKV projections →
 /// `Q·Kᵀ` (GEMM, 2·L²·D) → softmax → `A·V` (GEMM, 2·L²·D) → output
@@ -66,6 +69,55 @@ pub fn attention_core_flops(cfg: &DecoderConfig) -> f64 {
     let l = cfg.seq_len as f64;
     let d = cfg.d_model as f64;
     4.0 * l * l * d + 5.0 * l * l
+}
+
+/// The registered attention baseline (see [`mod@crate::workloads::registry`]):
+/// not an SSM — present so every comparison figure resolves through the
+/// same registry path as the SSM decoders.
+pub struct AttentionWorkload;
+
+impl Workload for AttentionWorkload {
+    fn name(&self) -> &'static str {
+        "attention"
+    }
+
+    fn describe(&self) -> &'static str {
+        "quadratic self-attention baseline (Fig. 3A)"
+    }
+
+    fn family(&self) -> ModelKind {
+        ModelKind::Attention
+    }
+
+    fn is_ssm(&self) -> bool {
+        false
+    }
+
+    fn build_graph(&self, dc: &DecoderConfig) -> Graph {
+        attention_decoder(dc)
+    }
+
+    /// No PCU extension helps the quadratic GEMMs — they already run in
+    /// systolic mode on the baseline chip.
+    fn extended_config(&self) -> RduConfig {
+        RduConfig::baseline()
+    }
+
+    /// QKV + output projections; the KV cache grows with context and is
+    /// not O(1) — its traffic is out of scope for the SSM session cache.
+    fn decode_demand(&self, dc: &DecoderConfig) -> DecodeDemand {
+        let d = dc.d_model as f64;
+        DecodeDemand { mix_flops: 2.0 * 4.0 * d * d, state_bytes: 0.0 }
+    }
+
+    /// Quadratic token mixing has no sequence-local phase to shard.
+    fn shard_comm(&self, _dc: &DecoderConfig) -> ShardComm {
+        ShardComm::Unsupported
+    }
+
+    fn golden_check(&self, _seed: u64) -> Option<GoldenCheck> {
+        None
+    }
 }
 
 #[cfg(test)]

@@ -1,7 +1,9 @@
-//! Shared decoder building blocks: GEMMs, norms, element-wise maps and the
-//! MLP — the parts of the template common to all three decoders (Fig. 3).
+//! Shared decoder building blocks: GEMMs, norms, element-wise maps, the
+//! MLP and the FFT-convolution chain — the parts of the template common to
+//! the registered decoders (Fig. 3; see [`super::registry`]).
 
 use super::config::DecoderConfig;
+use crate::fft::{gemm_fft_flops, vector_fft_flops, BaileyVariant};
 use crate::graph::{Graph, Kernel, KernelId, OpClass};
 
 /// FLOPs of a `m × n × k` GEMM: `2·m·n·k`.
@@ -88,6 +90,84 @@ pub fn mlp_block(g: &mut Graph, cfg: &DecoderConfig, after: KernelId) -> KernelI
     g.connect_stream(fc2, res2, act);
     g.connect(res1, res2, act);
     res2
+}
+
+/// FLOPs of one N-point FFT under the chosen Bailey variant, per channel.
+pub(crate) fn fft_flops(n: usize, variant: BaileyVariant, r: usize) -> f64 {
+    match variant {
+        BaileyVariant::Vector => vector_fft_flops(n),
+        BaileyVariant::Gemm => gemm_fft_flops(n, r),
+    }
+}
+
+/// The op class FFT kernels carry under each variant: Vector-FFT runs
+/// butterflies (CUDA-core / FFT-mode path), GEMM-FFT runs dense R-point
+/// DFT matmuls (tensor-core / systolic path).
+pub(crate) fn fft_op(variant: BaileyVariant) -> OpClass {
+    match variant {
+        BaileyVariant::Vector => OpClass::VectorFft,
+        BaileyVariant::Gemm => OpClass::GemmFft,
+    }
+}
+
+/// Add one FFT-convolution module: FFT(x), FFT(filter), frequency-domain
+/// complex product, iFFT. All transforms are length `fft_len` (= 2L padded)
+/// over `D` independent channels. Shared by the Hyena decoder (two convs,
+/// data-dependent filters) and the S4 decoder (one conv, LTI kernel).
+///
+/// Every edge of the conv chain is a *stream* edge (the FFT ingests its
+/// producer through its corner-turn PMU buffer; the frequency product and
+/// inverse transform consume in emission order), so the fusion pass can
+/// cluster the whole FFT → eltwise → iFFT dataflow into one section.
+pub(crate) fn fft_conv(
+    g: &mut Graph,
+    cfg: &DecoderConfig,
+    tag: &str,
+    variant: BaileyVariant,
+    x: KernelId,
+    filt: KernelId,
+) -> KernelId {
+    let n = cfg.fft_len();
+    let d = cfg.d_model as f64;
+    let b = cfg.dtype_bytes;
+    let op = fft_op(variant);
+    let per_fft = fft_flops(n, variant, cfg.fft_tile) * d;
+    // Real input of N elements → N complex outputs (2 values each).
+    let real_bytes = n as f64 * d * b;
+    let cplx_bytes = 2.0 * real_bytes;
+
+    let fft_x = g.add(
+        Kernel::new(&format!("{tag}.fft_x"), op, per_fft, real_bytes, cplx_bytes)
+            .with_stream(n as f64, d),
+    );
+    g.connect_stream(x, fft_x, cfg.act_bytes());
+
+    let fft_k = g.add(
+        Kernel::new(&format!("{tag}.fft_k"), op, per_fft, real_bytes, cplx_bytes)
+            .with_stream(n as f64, d),
+    );
+    g.connect_stream(filt, fft_k, cfg.act_bytes());
+
+    // Frequency-domain pointwise complex multiply: 6 FLOP per complex pair.
+    let mul = g.add(
+        Kernel::new(
+            &format!("{tag}.freqmul"),
+            OpClass::Elementwise,
+            6.0 * n as f64 * d,
+            2.0 * cplx_bytes,
+            cplx_bytes,
+        )
+        .with_stream(n as f64, d),
+    );
+    g.connect_stream(fft_x, mul, cplx_bytes);
+    g.connect_stream(fft_k, mul, cplx_bytes);
+
+    let ifft = g.add(
+        Kernel::new(&format!("{tag}.ifft"), op, per_fft, cplx_bytes, real_bytes)
+            .with_stream(n as f64, d),
+    );
+    g.connect_stream(mul, ifft, cplx_bytes);
+    ifft
 }
 
 #[cfg(test)]

@@ -19,6 +19,9 @@ pub struct DecoderConfig {
     pub state_dim: usize,
     /// Mamba channel expansion factor E (d_inner = E·D).
     pub expand: usize,
+    /// Mamba-2 SSD chunk length Q (intra-chunk matmul tile; Mamba-2's
+    /// default block size). Only the `ssd` workload reads it.
+    pub ssd_chunk: usize,
 }
 
 impl DecoderConfig {
@@ -40,6 +43,7 @@ impl DecoderConfig {
             fft_tile: 32,
             state_dim: 1,
             expand: 1,
+            ssd_chunk: 256,
         }
     }
 
@@ -88,6 +92,7 @@ mod tests {
         let full = DecoderConfig::mamba_full(1 << 20);
         assert_eq!(full.d_inner(), 64);
         assert_eq!(full.state_dim, 16);
+        assert_eq!(c.ssd_chunk, 256, "Mamba-2's default chunk length");
     }
 
     #[test]

@@ -3,87 +3,13 @@
 //! FFT-based convolution kernel… each GEMM is replaced by three FFT
 //! operations: two forward FFTs … and one inverse FFT".
 
-use super::blocks::{self, eltwise, gemm, layer_norm};
+use super::blocks::{self, eltwise, fft_conv, fft_flops, gemm, layer_norm};
 use super::config::DecoderConfig;
-use crate::fft::{gemm_fft_flops, vector_fft_flops, BaileyVariant};
-use crate::graph::{Graph, Kernel, KernelId, OpClass};
-
-/// FLOPs of one N-point FFT under the chosen Bailey variant, per channel.
-fn fft_flops(n: usize, variant: BaileyVariant, r: usize) -> f64 {
-    match variant {
-        BaileyVariant::Vector => vector_fft_flops(n),
-        BaileyVariant::Gemm => gemm_fft_flops(n, r),
-    }
-}
-
-/// The op class FFT kernels carry under each variant: Vector-FFT runs
-/// butterflies (CUDA-core / FFT-mode path), GEMM-FFT runs dense R-point
-/// DFT matmuls (tensor-core / systolic path).
-fn fft_op(variant: BaileyVariant) -> OpClass {
-    match variant {
-        BaileyVariant::Vector => OpClass::VectorFft,
-        BaileyVariant::Gemm => OpClass::GemmFft,
-    }
-}
-
-/// Add one FFT-convolution module: FFT(x), FFT(filter), frequency-domain
-/// complex product, iFFT. All transforms are length `fft_len` (= 2L padded)
-/// over `D` independent channels.
-///
-/// Every edge of the conv chain is a *stream* edge (the FFT ingests its
-/// producer through its corner-turn PMU buffer; the frequency product and
-/// inverse transform consume in emission order), so the fusion pass can
-/// cluster the whole FFT → eltwise → iFFT dataflow into one section.
-fn fft_conv(
-    g: &mut Graph,
-    cfg: &DecoderConfig,
-    tag: &str,
-    variant: BaileyVariant,
-    x: KernelId,
-    filt: KernelId,
-) -> KernelId {
-    let n = cfg.fft_len();
-    let d = cfg.d_model as f64;
-    let b = cfg.dtype_bytes;
-    let op = fft_op(variant);
-    let per_fft = fft_flops(n, variant, cfg.fft_tile) * d;
-    // Real input of N elements → N complex outputs (2 values each).
-    let real_bytes = n as f64 * d * b;
-    let cplx_bytes = 2.0 * real_bytes;
-
-    let fft_x = g.add(
-        Kernel::new(&format!("{tag}.fft_x"), op, per_fft, real_bytes, cplx_bytes)
-            .with_stream(n as f64, d),
-    );
-    g.connect_stream(x, fft_x, cfg.act_bytes());
-
-    let fft_k = g.add(
-        Kernel::new(&format!("{tag}.fft_k"), op, per_fft, real_bytes, cplx_bytes)
-            .with_stream(n as f64, d),
-    );
-    g.connect_stream(filt, fft_k, cfg.act_bytes());
-
-    // Frequency-domain pointwise complex multiply: 6 FLOP per complex pair.
-    let mul = g.add(
-        Kernel::new(
-            &format!("{tag}.freqmul"),
-            OpClass::Elementwise,
-            6.0 * n as f64 * d,
-            2.0 * cplx_bytes,
-            cplx_bytes,
-        )
-        .with_stream(n as f64, d),
-    );
-    g.connect_stream(fft_x, mul, cplx_bytes);
-    g.connect_stream(fft_k, mul, cplx_bytes);
-
-    let ifft = g.add(
-        Kernel::new(&format!("{tag}.ifft"), op, per_fft, cplx_bytes, real_bytes)
-            .with_stream(n as f64, d),
-    );
-    g.connect_stream(mul, ifft, cplx_bytes);
-    ifft
-}
+use super::registry::{DecodeDemand, GoldenCheck, ShardComm, Workload};
+use crate::arch::RduConfig;
+use crate::fft::BaileyVariant;
+use crate::graph::Graph;
+use crate::runtime::ModelKind;
 
 /// Build the Hyena decoder layer under the chosen FFT variant.
 ///
@@ -168,9 +94,77 @@ pub fn hyena_conv_channels(
     crate::fft::fft_conv_linear_channels(us, ks, pool)
 }
 
+/// The registered Hyena workload (see [`mod@crate::workloads::registry`]):
+/// the Vector-FFT design point — the paper's best Hyena mapping.
+pub struct HyenaWorkload;
+
+impl Workload for HyenaWorkload {
+    fn name(&self) -> &'static str {
+        "hyena"
+    }
+
+    fn describe(&self) -> &'static str {
+        "Hyena: FFT-based long convolutions with data-dependent filters"
+    }
+
+    fn family(&self) -> ModelKind {
+        ModelKind::Hyena
+    }
+
+    fn build_graph(&self, dc: &DecoderConfig) -> Graph {
+        hyena_decoder(dc, BaileyVariant::Vector)
+    }
+
+    fn extended_config(&self) -> RduConfig {
+        RduConfig::fft_mode()
+    }
+
+    /// Three gating projections + the R-tap filter contribution per
+    /// channel; the FFT filter/prefix caches (R × d complex each) are read
+    /// and updated once per step.
+    fn decode_demand(&self, dc: &DecoderConfig) -> DecodeDemand {
+        let d = dc.d_model as f64;
+        let r = dc.fft_tile as f64;
+        DecodeDemand {
+            mix_flops: 2.0 * 3.0 * d * d + 4.0 * r * d,
+            state_bytes: 2.0 * 2.0 * r * d * 4.0,
+        }
+    }
+
+    /// One all-to-all transpose per transform: two convolutions × (two
+    /// forward + one inverse) = six per decoder layer.
+    fn shard_comm(&self, _dc: &DecoderConfig) -> ShardComm {
+        ShardComm::AllToAllTranspose { transforms: 6.0 }
+    }
+
+    fn shard_local_graph(&self, dc: &DecoderConfig, chips: usize) -> Graph {
+        let local = DecoderConfig { seq_len: dc.seq_len / chips, ..*dc };
+        let mut g = hyena_decoder(&local, BaileyVariant::Vector);
+        super::registry::scale_distributed_fft_flops(&mut g, dc, &local);
+        g
+    }
+
+    /// Planned real-input conv engine vs the pre-plan complex transform
+    /// path on a deliberately non-power-of-two length.
+    fn golden_check(&self, seed: u64) -> Option<GoldenCheck> {
+        let mut rng = crate::util::XorShift::new(seed);
+        let l = 1000;
+        let u = rng.vec(l, -1.0, 1.0);
+        let k = rng.vec(l, -1.0, 1.0);
+        let got = crate::fft::fft_conv_linear(&u, &k);
+        let want = crate::fft::fft_conv_linear_naive(&u, &k);
+        Some(GoldenCheck {
+            reference: "fft::fft_conv_linear_naive",
+            max_abs_diff: crate::util::max_abs_diff(&got, &want),
+            bit_identical: false,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::OpClass;
 
     #[test]
     fn graphs_are_valid() {

@@ -4,7 +4,10 @@
 
 use super::blocks::{self, eltwise, gemm, layer_norm};
 use super::config::DecoderConfig;
+use super::registry::{DecodeDemand, GoldenCheck, ShardComm, Workload};
+use crate::arch::RduConfig;
 use crate::graph::{Graph, Kernel, OpClass};
+use crate::runtime::ModelKind;
 
 /// Which scan algorithm the decoder's core uses (paper Fig. 11 designs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -131,6 +134,66 @@ pub fn mamba_decoder(cfg: &DecoderConfig, variant: ScanVariant) -> Graph {
 
     debug_assert!(g.validate().is_ok());
     g
+}
+
+/// The registered Mamba (selective-scan) workload (see
+/// [`mod@crate::workloads::registry`]): the parallel-scan design point — the
+/// paper's best Mamba mapping.
+pub struct MambaWorkload;
+
+impl Workload for MambaWorkload {
+    fn name(&self) -> &'static str {
+        "mamba"
+    }
+
+    fn describe(&self) -> &'static str {
+        "Mamba: selective scan (lifted first-order linear recurrence)"
+    }
+
+    fn family(&self) -> ModelKind {
+        ModelKind::Mamba
+    }
+
+    fn build_graph(&self, dc: &DecoderConfig) -> Graph {
+        mamba_decoder(dc, ScanVariant::Parallel)
+    }
+
+    fn extended_config(&self) -> RduConfig {
+        RduConfig::hs_scan_mode()
+    }
+
+    /// In/out projections (d → 2·d_inner, d_inner → d) + the selective
+    /// scan update `h = Ā h + B̄ x` and readout `y = C h` over `N × d_inner`
+    /// state; state is read and written once per step (f32).
+    fn decode_demand(&self, dc: &DecoderConfig) -> DecodeDemand {
+        let d = dc.d_model as f64;
+        let di = dc.d_inner() as f64;
+        let n = dc.state_dim.max(1) as f64;
+        DecodeDemand {
+            mix_flops: 2.0 * (d * 2.0 * di + di * d) + 6.0 * n * di,
+            state_bytes: 2.0 * n * di * 4.0,
+        }
+    }
+
+    fn shard_comm(&self, dc: &DecoderConfig) -> ShardComm {
+        ShardComm::CarryExchange { channels: dc.state_dim.max(1) * dc.d_inner() }
+    }
+
+    /// Sharded/tiled scan drivers vs the serial recurrence on a ragged
+    /// length (associative regrouping: ~1e-12, budget 1e-9).
+    fn golden_check(&self, seed: u64) -> Option<GoldenCheck> {
+        let mut rng = crate::util::XorShift::new(seed);
+        let n = 1000;
+        let a: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 0.99)).collect();
+        let b: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let want = crate::scan::mamba_scan_serial(&a, &b);
+        let tiled = crate::scan::recurrence::mamba_scan_tiled(&a, &b, 32);
+        Some(GoldenCheck {
+            reference: "scan::mamba_scan_serial",
+            max_abs_diff: crate::util::max_abs_diff(&tiled, &want),
+            bit_identical: false,
+        })
+    }
 }
 
 #[cfg(test)]

@@ -1,26 +1,65 @@
-//! Decoder workload builders (paper Fig. 3): the attention baseline, the
-//! FFT-based Hyena decoder, and the scan-based Mamba decoder, each emitted
-//! as a [`crate::graph::Graph`] with the paper's FLOP accounting.
+//! Decoder workloads: the builders for every registered SSM variant (and
+//! the attention baseline), each emitted as a [`crate::graph::Graph`] with
+//! paper-convention FLOP accounting — plus the **workload registry**
+//! ([`mod@registry`]) that `simulate`/`serve`/`sweep`/`bench` resolve by name
+//! and every downstream layer consumes uniformly.
 //!
-//! * [`config::DecoderConfig`] — the paper's shapes (D = 32, L ∈ {256K,
-//!   512K, 1M}, FP16, R = 32).
+//! ## Modules
+//!
+//! * [`config::DecoderConfig`] — the shared shape knobs (the paper's
+//!   D = 32, L ∈ {256K, 512K, 1M}, FP16, R = 32, plus the SSD chunk Q).
+//! * [`mod@registry`] — the [`Workload`] trait (graph builder with stream
+//!   edges, golden-model check, decode-step demand, shard strategy) and
+//!   the name → workload table.
 //! * [`attention::attention_decoder`] — Fig. 3A, quadratic `Q·Kᵀ`/`A·V`.
 //! * [`hyena::hyena_decoder`] — Fig. 3B, each big GEMM replaced by two
 //!   forward FFTs + pointwise product + one inverse FFT, in either the
 //!   Vector-FFT or GEMM-FFT Bailey variant (§III-A).
 //! * [`mamba::mamba_decoder`] — Fig. 3C, selective scan core in either
 //!   C-scan or parallel-scan form (§IV-A).
+//! * [`ssd::ssd_decoder`] — Mamba-2 SSD: the chunked scan as intra-chunk
+//!   semiseparable matmul + inter-chunk recurrence; the golden chunked
+//!   evaluator [`ssd::ssd_scan`] is bit-identical to
+//!   [`crate::scan::mamba_scan_serial`].
+//! * [`s4::s4_decoder`] — S4/long-conv: diagonal-SSM kernel
+//!   materialization + one length-L FFT convolution through the planned
+//!   real-input engine.
+//! * [`blocks`] — the template pieces (GEMM/norm/eltwise/MLP/FFT-conv)
+//!   the builders share.
+//!
+//! ## Resolving a workload by name
+//!
+//! ```
+//! use ssm_rdu::workloads::{lookup, DecoderConfig};
+//!
+//! let dc = DecoderConfig::paper(1 << 12);
+//! for name in ["hyena", "mamba", "ssd", "s4"] {
+//!     let w = lookup(name).expect("registered");
+//!     assert!(w.build_graph(&dc).validate().is_ok(), "{name}");
+//! }
+//! ```
+//!
+//! `docs/WORKLOADS.md` walks through adding a new workload end to end.
 
 pub mod attention;
 pub mod blocks;
 pub mod config;
 pub mod hyena;
 pub mod mamba;
+pub mod registry;
+pub mod s4;
+pub mod ssd;
 
 pub use attention::attention_decoder;
 pub use config::DecoderConfig;
 pub use hyena::{hyena_conv_channels, hyena_decoder};
 pub use mamba::{mamba_decoder, ScanVariant};
+pub use registry::{
+    family_workload, lookup, registry, registry_names, ssm_workloads, DecodeDemand, GoldenCheck,
+    ShardComm, Workload,
+};
+pub use s4::{s4_conv, s4_conv_channels, s4_decoder, s4_kernel};
+pub use ssd::{ssd_decoder, ssd_scan, ssd_scan_semiseparable, ssd_scan_with_carry};
 
 #[cfg(test)]
 mod tests {
@@ -35,6 +74,10 @@ mod tests {
             assert!(hyena_decoder(&cfg, BaileyVariant::Gemm).validate().is_ok());
             assert!(mamba_decoder(&cfg, ScanVariant::CScan).validate().is_ok());
             assert!(mamba_decoder(&cfg, ScanVariant::Parallel).validate().is_ok());
+            // The registry resolves the same sweep uniformly.
+            for w in registry() {
+                assert!(w.build_graph(&cfg).validate().is_ok(), "{}", w.name());
+            }
         }
     }
 

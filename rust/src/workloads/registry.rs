@@ -1,0 +1,326 @@
+//! The workload registry: one trait every SSM decoder variant implements,
+//! and one table every downstream layer resolves by name.
+//!
+//! Before the registry, adding an SSM variant was cross-cutting surgery:
+//! the mapper, fusion pass, sharded estimates, decode-cost hook, figures
+//! and CLI each matched on a hand-wired pair of enum arms. Now a workload
+//! is **one module plus one registry line**:
+//!
+//! * [`Workload::build_graph`] — the decoder-layer dataflow graph, stream
+//!   edges marked, that [`crate::dfmodel`] maps, fuses and prices;
+//! * [`Workload::extended_config`] — which PCU interconnect extension (if
+//!   any) the workload's core kernels want, for the design-point tables;
+//! * [`Workload::decode_demand`] — per-layer decode-step flop/state demand
+//!   the [`crate::dfmodel::decode`] cost hook turns into per-token latency
+//!   for the [`crate::session`] continuous-batching scheduler;
+//! * [`Workload::shard_comm`] / [`Workload::shard_local_graph`] — the
+//!   sequence-sharding pattern [`crate::shard::estimate`] prices over the
+//!   inter-chip link;
+//! * [`Workload::golden_check`] — the workload's numeric self-check against
+//!   its reference path (`simulate` prints these, the integration tests
+//!   assert them).
+//!
+//! Registered workloads: `attention` (the quadratic baseline), `hyena`
+//! (FFT long convolution), `mamba` (selective scan), `ssd` (Mamba-2
+//! chunked state-space dual, [`super::ssd`]) and `s4` (diagonal-SSM
+//! long convolution, [`super::s4`]).
+//!
+//! Look a workload up by name and drive the whole modeling stack from the
+//! trait object:
+//!
+//! ```
+//! use ssm_rdu::workloads::{lookup, registry_names, DecoderConfig};
+//!
+//! let ssd = lookup("ssd").expect("ssd is registered");
+//! let g = ssd.build_graph(&DecoderConfig::paper(1 << 12));
+//! assert!(g.validate().is_ok());
+//! let est = ssm_rdu::dfmodel::estimate(&g, &ssd.extended_config()).unwrap();
+//! assert!(est.total_seconds > 0.0);
+//! assert!(registry_names().contains(&"s4"));
+//! assert!(lookup("gpt2").is_none());
+//! ```
+//!
+//! `docs/WORKLOADS.md` is the author guide: paper equations → trait
+//! methods → modules, with SSD as the worked example.
+
+use super::config::DecoderConfig;
+use crate::arch::RduConfig;
+use crate::graph::Graph;
+use crate::runtime::ModelKind;
+
+/// Per-layer decode-step demand of a workload's token mixer (the MLP is
+/// added by the cost hook, which is template-shared across decoders).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DecodeDemand {
+    /// Arithmetic of one token's mixer pass (projections + state update).
+    pub mix_flops: f64,
+    /// Recurrent-state bytes touched per step (read + write, f32 states).
+    pub state_bytes: f64,
+}
+
+/// How a workload's forward pass shards across chips — plain data that
+/// [`crate::shard::estimate`] prices over an [`crate::arch::InterchipLink`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ShardComm {
+    /// Sequence split with an inter-chip exclusive-prefix **carry
+    /// exchange**: one composed lifted pair per scan channel on the wire
+    /// (the scan family — Mamba, SSD).
+    CarryExchange {
+        /// Scan channels whose carries travel (`N × d_inner`).
+        channels: usize,
+    },
+    /// Sequence split with `transforms` all-to-all **transposes** of the
+    /// padded frequency-domain tensor per layer (the FFT family — Hyena's
+    /// six transforms, S4's three).
+    AllToAllTranspose { transforms: f64 },
+    /// No sequence-local phase to shard (attention).
+    Unsupported,
+}
+
+/// Result of a workload's numeric golden-model self-check.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GoldenCheck {
+    /// The reference path the functional model was checked against.
+    pub reference: &'static str,
+    /// Max absolute element difference observed.
+    pub max_abs_diff: f64,
+    /// Whether the check demands (and observed) exact equality.
+    pub bit_identical: bool,
+}
+
+/// One SSM decoder variant, end to end: graph builder, design point,
+/// decode hook, shard strategy and golden model. See the module docs for
+/// how each method is consumed; `docs/WORKLOADS.md` for how to write one.
+pub trait Workload: Sync {
+    /// Registry key (`--workload <name>` on the CLI).
+    fn name(&self) -> &'static str;
+
+    /// One-line description for tables and usage errors.
+    fn describe(&self) -> &'static str;
+
+    /// Serving-stack family: which [`ModelKind`] artifact/state shapes the
+    /// session layer uses for this workload (SSD rides Mamba's recurrent
+    /// states, S4 rides Hyena's FFT caches).
+    fn family(&self) -> ModelKind;
+
+    /// Is this an SSM decoder (swept, fused, sharded by default), or a
+    /// baseline included only for comparison figures?
+    fn is_ssm(&self) -> bool {
+        true
+    }
+
+    /// Build the decoder-layer dataflow graph at shape `dc`, with
+    /// producer→consumer stream edges marked for the fusion pass.
+    fn build_graph(&self, dc: &DecoderConfig) -> Graph;
+
+    /// The RDU configuration whose PCU extension serves this workload's
+    /// core kernels (baseline when no extension helps — SSD's point is
+    /// precisely that its chunked matmuls need none).
+    fn extended_config(&self) -> RduConfig;
+
+    /// Per-layer decode-step demand (see [`DecodeDemand`]).
+    fn decode_demand(&self, dc: &DecoderConfig) -> DecodeDemand;
+
+    /// Sequence-sharding communication pattern (see [`ShardComm`]).
+    fn shard_comm(&self, dc: &DecoderConfig) -> ShardComm;
+
+    /// One chip's local graph for a `chips`-way sequence shard. The default
+    /// builds the graph at `L / chips`; FFT-family workloads override it to
+    /// rescale transform flops to the *global* transform length the
+    /// distributed 4-step actually runs.
+    fn shard_local_graph(&self, dc: &DecoderConfig, chips: usize) -> Graph {
+        self.build_graph(&DecoderConfig { seq_len: dc.seq_len / chips, ..*dc })
+    }
+
+    /// Run the workload's numeric golden model against its reference path
+    /// (`None` for baselines without one).
+    fn golden_check(&self, seed: u64) -> Option<GoldenCheck>;
+}
+
+/// Every registered workload, in presentation order. The first entry whose
+/// [`Workload::family`] matches a [`ModelKind`] is that family's canonical
+/// workload (used by the ModelKind-keyed serving wrappers), so the classic
+/// decoders precede their variants.
+pub fn registry() -> &'static [&'static dyn Workload] {
+    static REGISTRY: [&dyn Workload; 5] = [
+        &super::attention::AttentionWorkload,
+        &super::hyena::HyenaWorkload,
+        &super::mamba::MambaWorkload,
+        &super::ssd::SsdWorkload,
+        &super::s4::S4Workload,
+    ];
+    &REGISTRY
+}
+
+/// Look a workload up by its registry name.
+pub fn lookup(name: &str) -> Option<&'static dyn Workload> {
+    registry().iter().copied().find(|w| w.name() == name)
+}
+
+/// All registered workload names (CLI usage errors print these).
+pub fn registry_names() -> Vec<&'static str> {
+    registry().iter().map(|w| w.name()).collect()
+}
+
+/// The registered SSM workloads (everything but the attention baseline).
+pub fn ssm_workloads() -> Vec<&'static dyn Workload> {
+    registry().iter().copied().filter(|w| w.is_ssm()).collect()
+}
+
+/// The canonical workload of a serving-stack family — the bridge from the
+/// ModelKind-keyed serving APIs (coordinator, session cache) into the
+/// registry.
+pub fn family_workload(kind: ModelKind) -> &'static dyn Workload {
+    registry()
+        .iter()
+        .copied()
+        .find(|w| w.family() == kind)
+        .expect("every ModelKind has a registered workload")
+}
+
+/// Scale the FFT kernels of a chips-distributed local graph: the
+/// distributed Bailey 4-step runs *global* `fft_len(global)`-point
+/// transforms with the butterfly work split evenly across chips, so a
+/// chip's FFT flops are `5·(n/P)·log₂ n`, not the `5·(n/P)·log₂(n/P)` the
+/// local-length graph priced. Shared by the Hyena and S4
+/// [`Workload::shard_local_graph`] overrides.
+pub(crate) fn scale_distributed_fft_flops(
+    g: &mut Graph,
+    global: &DecoderConfig,
+    local: &DecoderConfig,
+) {
+    use crate::graph::OpClass;
+    let ratio = (global.fft_len() as f64).log2() / (local.fft_len() as f64).log2().max(1.0);
+    for k in &mut g.kernels {
+        if matches!(k.op, OpClass::VectorFft | OpClass::GemmFft) {
+            k.flops *= ratio;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_unique_and_stable() {
+        let names = registry_names();
+        assert_eq!(names, vec!["attention", "hyena", "mamba", "ssd", "s4"]);
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), names.len(), "duplicate registry names");
+    }
+
+    #[test]
+    fn lookup_roundtrips_every_name() {
+        for w in registry() {
+            let found = lookup(w.name()).expect("registered name resolves");
+            assert_eq!(found.name(), w.name());
+        }
+        assert!(lookup("transformer-xl").is_none());
+    }
+
+    #[test]
+    fn ssm_workloads_excludes_the_baseline() {
+        let ssm: Vec<&str> = ssm_workloads().iter().map(|w| w.name()).collect();
+        assert_eq!(ssm, vec!["hyena", "mamba", "ssd", "s4"]);
+    }
+
+    #[test]
+    fn family_lookup_prefers_the_classic_decoders() {
+        assert_eq!(family_workload(ModelKind::Mamba).name(), "mamba");
+        assert_eq!(family_workload(ModelKind::Hyena).name(), "hyena");
+        assert_eq!(family_workload(ModelKind::Attention).name(), "attention");
+    }
+
+    #[test]
+    fn every_workload_builds_a_valid_graph() {
+        let dc = DecoderConfig::paper(1 << 12);
+        for w in registry() {
+            let g = w.build_graph(&dc);
+            assert!(g.validate().is_ok(), "{}: {:?}", w.name(), g.validate());
+            assert!(g.total_flops() > 0.0, "{}", w.name());
+        }
+    }
+
+    #[test]
+    fn ssm_graphs_carry_stream_edges_for_fusion() {
+        let dc = DecoderConfig::paper(1 << 12);
+        for w in ssm_workloads() {
+            let g = w.build_graph(&dc);
+            assert!(g.stream_bytes() > 0.0, "{}: fusion needs stream edges", w.name());
+        }
+    }
+
+    #[test]
+    fn golden_checks_pass_for_every_ssm_workload() {
+        for w in ssm_workloads() {
+            let gc = w.golden_check(17).expect("SSM workloads self-check");
+            assert!(
+                gc.max_abs_diff < 1e-9,
+                "{} vs {}: |d|={}",
+                w.name(),
+                gc.reference,
+                gc.max_abs_diff
+            );
+            if gc.bit_identical {
+                assert_eq!(gc.max_abs_diff, 0.0, "{}", w.name());
+            }
+        }
+        assert!(family_workload(ModelKind::Attention).golden_check(17).is_none());
+    }
+
+    #[test]
+    fn shard_strategies_match_the_families() {
+        let dc = DecoderConfig::paper(1 << 16);
+        assert!(matches!(
+            lookup("mamba").unwrap().shard_comm(&dc),
+            ShardComm::CarryExchange { .. }
+        ));
+        assert!(matches!(
+            lookup("ssd").unwrap().shard_comm(&dc),
+            ShardComm::CarryExchange { .. }
+        ));
+        match lookup("hyena").unwrap().shard_comm(&dc) {
+            ShardComm::AllToAllTranspose { transforms } => assert_eq!(transforms, 6.0),
+            other => panic!("hyena: {other:?}"),
+        }
+        match lookup("s4").unwrap().shard_comm(&dc) {
+            ShardComm::AllToAllTranspose { transforms } => assert_eq!(transforms, 3.0),
+            other => panic!("s4: {other:?}"),
+        }
+        assert_eq!(lookup("attention").unwrap().shard_comm(&dc), ShardComm::Unsupported);
+    }
+
+    #[test]
+    fn decode_demands_are_positive_for_ssms() {
+        let dc = DecoderConfig::mamba_full(1 << 16);
+        for w in ssm_workloads() {
+            let d = w.decode_demand(&dc);
+            assert!(d.mix_flops > 0.0, "{}", w.name());
+            assert!(d.state_bytes > 0.0, "{}: SSM decode carries state", w.name());
+        }
+    }
+
+    #[test]
+    fn distributed_fft_rescale_raises_only_fft_flops() {
+        let global = DecoderConfig::paper(1 << 16);
+        let local = DecoderConfig { seq_len: global.seq_len / 4, ..global };
+        let w = lookup("hyena").unwrap();
+        let mut g = w.build_graph(&local);
+        let before = g.total_flops();
+        let fft_before: f64 = g
+            .kernels
+            .iter()
+            .filter(|k| {
+                matches!(k.op, crate::graph::OpClass::VectorFft | crate::graph::OpClass::GemmFft)
+            })
+            .map(|k| k.flops)
+            .sum();
+        scale_distributed_fft_flops(&mut g, &global, &local);
+        let ratio = (global.fft_len() as f64).log2() / (local.fft_len() as f64).log2();
+        let expect = before + fft_before * (ratio - 1.0);
+        assert!((g.total_flops() - expect).abs() / expect < 1e-12);
+    }
+}

@@ -1,0 +1,309 @@
+//! **S4 / long-conv** decoder workload: a *linear time-invariant* diagonal
+//! state-space layer (S4D lineage) whose token mixer is one length-L FFT
+//! convolution against a kernel **materialized from the SSM parameters**.
+//!
+//! Where Hyena generates its filters from the input (data-dependent), S4's
+//! kernel is fixed per layer: the impulse response of a diagonal SSM,
+//!
+//! ```text
+//! k[t] = Σ_n  c[n] · λ[n]^t          t = 0 … L−1   (per channel)
+//! y    = causal_conv(u, k)           via FFT, zero-padded to 2L
+//! ```
+//!
+//! so the graph reads the kernel parameters straight from DRAM (a graph
+//! input, not a projection of the activations) and spends one FFT-conv —
+//! three transforms per layer against Hyena's six. The convolution reuses
+//! the planned real-input engine ([`crate::fft::plan::RealFftPlan`] via
+//! [`crate::fft::fft_conv_linear`]) and fans independent channels over the
+//! [`crate::runtime::pool::WorkerPool`] ([`s4_conv_channels`]), so the hot
+//! path is shared with Hyena bit for bit.
+//!
+//! Golden contract: [`s4_conv`] (planned rfft path) matches the pre-plan
+//! naive complex path [`crate::fft::fft_conv_linear_naive`] and the direct
+//! O(L²) convolution ≤ 1e-9 on non-power-of-two lengths (observed ~1e-12;
+//! asserted by the integration tests and [`Workload::golden_check`]).
+
+use super::blocks::{self, eltwise, fft_conv, gemm, layer_norm};
+use super::config::DecoderConfig;
+use super::registry::{DecodeDemand, GoldenCheck, ShardComm, Workload};
+use crate::arch::RduConfig;
+use crate::fft::BaileyVariant;
+use crate::graph::{Graph, Kernel, OpClass};
+use crate::runtime::{ModelKind, WorkerPool};
+use crate::util::XorShift;
+
+/// Materialize one channel's length-`l` S4D kernel from its `N` diagonal
+/// modes: `k[t] = Σ_n c[n]·λ[n]^t`, powers built by one cumulative product
+/// per mode (no `powi` re-derivation — the same no-recomputation discipline
+/// as the FFT plan tables).
+pub fn s4_kernel(lambda: &[f64], c: &[f64], l: usize) -> Vec<f64> {
+    assert_eq!(lambda.len(), c.len(), "s4_kernel: lambda/c length mismatch");
+    let mut k = vec![0.0; l];
+    for (&cn, &ln) in c.iter().zip(lambda) {
+        let mut p = 1.0;
+        for kt in k.iter_mut() {
+            *kt += cn * p;
+            p *= ln;
+        }
+    }
+    k
+}
+
+/// One channel's S4 token mixer: materialize the kernel, then the causal
+/// FFT convolution through the planned real-input engine.
+pub fn s4_conv(u: &[f64], lambda: &[f64], c: &[f64]) -> Vec<f64> {
+    let k = s4_kernel(lambda, c, u.len());
+    crate::fft::fft_conv_linear(u, &k)
+}
+
+/// [`s4_conv`] through the pre-plan naive complex transform path — the
+/// independent oracle the golden contract checks against.
+pub fn s4_conv_naive(u: &[f64], lambda: &[f64], c: &[f64]) -> Vec<f64> {
+    let k = s4_kernel(lambda, c, u.len());
+    crate::fft::fft_conv_linear_naive(u, &k)
+}
+
+/// Per-channel S4 convolutions fanned over the worker pool: channel `i`
+/// convolves `us[i]` with the kernel of `(lambdas[i], cs[i])`. Kernel
+/// materialization and convolution both run inside the worker, so each
+/// worker's cached [`crate::fft::ConvPlan`] serves its whole chunk;
+/// **bit-identical** to the serial per-channel loop (contiguous
+/// deterministic chunks, per-channel independence).
+pub fn s4_conv_channels(
+    us: &[Vec<f64>],
+    lambdas: &[Vec<f64>],
+    cs: &[Vec<f64>],
+    pool: &WorkerPool,
+) -> Vec<Vec<f64>> {
+    assert_eq!(us.len(), lambdas.len(), "s4_conv_channels: channel count mismatch");
+    assert_eq!(us.len(), cs.len(), "s4_conv_channels: channel count mismatch");
+    pool.map(us.len(), |i| s4_conv(&us[i], &lambdas[i], &cs[i]))
+}
+
+/// FLOPs of materializing all `D` channel kernels: one MAC plus one power
+/// update per (mode, position, channel) → `3·N·L·D`.
+pub fn s4_kernel_flops(cfg: &DecoderConfig) -> f64 {
+    3.0 * cfg.state_dim.max(1) as f64 * cfg.seq_len as f64 * cfg.d_model as f64
+}
+
+/// Build the S4 long-conv decoder layer.
+///
+/// Template: LN → u/v projections → kernel materialization (from DRAM-
+/// resident SSM parameters — LTI, so *not* fed by the activations) →
+/// FFT-conv (replacing the token mixer) → gate with v → output projection
+/// → residual/LN/MLP/residual. One conv per layer: three transforms where
+/// Hyena pays six.
+pub fn s4_decoder(cfg: &DecoderConfig) -> Graph {
+    let l = cfg.seq_len;
+    let d = cfg.d_model;
+    let n = cfg.state_dim.max(1);
+    let b = cfg.dtype_bytes;
+    let act = cfg.act_bytes();
+    let mut g = Graph::new(&format!("s4-decoder[N={n}] L={l} D={d}"));
+
+    let ln1 = layer_norm(&mut g, cfg, "ln1", d);
+    g.input(ln1, act);
+
+    let u = gemm(&mut g, cfg, "proj.u", l, d, d);
+    let v = gemm(&mut g, cfg, "proj.v", l, d, d);
+    g.connect(ln1, u, act);
+    g.connect(ln1, v, act);
+
+    // Kernel materialization: k[t] = Σ_n c[n]·λ[n]^t per channel. The
+    // (λ, c) parameter pairs are layer weights read from DRAM — the LTI
+    // signature that distinguishes S4 from Hyena's input-generated filters.
+    let kgen = g.add(
+        Kernel::new(
+            "s4_kernel",
+            OpClass::Elementwise,
+            s4_kernel_flops(cfg),
+            2.0 * n as f64 * d as f64 * b,
+            l as f64 * d as f64 * b,
+        )
+        .with_weights(2.0 * n as f64 * d as f64 * b)
+        .with_stream(l as f64, d as f64),
+    );
+    g.input(kgen, 2.0 * n as f64 * d as f64 * b);
+
+    // The long convolution (the single token mixer).
+    let conv = fft_conv(&mut g, cfg, "conv", BaileyVariant::Vector, u, kgen);
+
+    // Gate with the v branch (GLU-style multiplicative gating).
+    let gate = eltwise(&mut g, cfg, "gate", (l * d) as f64, 1.0, 2.0);
+    g.connect_stream(conv, gate, act);
+    g.connect(v, gate, act);
+
+    let out = gemm(&mut g, cfg, "proj.out", l, d, d);
+    g.connect_stream(gate, out, act);
+
+    let last = blocks::mlp_block(&mut g, cfg, out);
+    g.output(last, act);
+
+    debug_assert!(g.validate().is_ok());
+    g
+}
+
+/// The registered S4 long-conv workload (see [`mod@crate::workloads::registry`]).
+pub struct S4Workload;
+
+impl Workload for S4Workload {
+    fn name(&self) -> &'static str {
+        "s4"
+    }
+
+    fn describe(&self) -> &'static str {
+        "S4: diagonal-SSM kernel materialization + length-L FFT convolution"
+    }
+
+    /// S4 rides the Hyena serving family: the same per-session FFT-cache
+    /// state shapes and artifacts.
+    fn family(&self) -> ModelKind {
+        ModelKind::Hyena
+    }
+
+    fn build_graph(&self, dc: &DecoderConfig) -> Graph {
+        s4_decoder(dc)
+    }
+
+    fn extended_config(&self) -> RduConfig {
+        RduConfig::fft_mode()
+    }
+
+    /// Two gating projections + output projection, plus the diagonal state
+    /// update `x = λ x + b·u` and readout `y = Σ c·x` over N modes per
+    /// channel; N × d states read and written once per step (f32).
+    fn decode_demand(&self, dc: &DecoderConfig) -> DecodeDemand {
+        let d = dc.d_model as f64;
+        let n = dc.state_dim.max(1) as f64;
+        DecodeDemand {
+            mix_flops: 2.0 * 3.0 * d * d + 6.0 * n * d,
+            state_bytes: 2.0 * n * d * 4.0,
+        }
+    }
+
+    /// One conv per layer: two forward + one inverse transform, each with
+    /// its all-to-all transpose — half of Hyena's exchange traffic.
+    fn shard_comm(&self, _dc: &DecoderConfig) -> ShardComm {
+        ShardComm::AllToAllTranspose { transforms: 3.0 }
+    }
+
+    fn shard_local_graph(&self, dc: &DecoderConfig, chips: usize) -> Graph {
+        let local = DecoderConfig { seq_len: dc.seq_len / chips, ..*dc };
+        let mut g = s4_decoder(&local);
+        super::registry::scale_distributed_fft_flops(&mut g, dc, &local);
+        g
+    }
+
+    /// Planned-rfft S4 conv vs the naive complex path on a non-pow2 length.
+    fn golden_check(&self, seed: u64) -> Option<GoldenCheck> {
+        let mut rng = XorShift::new(seed);
+        let l = 1000;
+        let n_modes = 4;
+        let u = rng.vec(l, -1.0, 1.0);
+        let lambda: Vec<f64> = (0..n_modes).map(|_| rng.uniform(0.5, 0.99)).collect();
+        let c = rng.vec(n_modes, -1.0, 1.0);
+        let got = s4_conv(&u, &lambda, &c);
+        let want = s4_conv_naive(&u, &lambda, &c);
+        Some(GoldenCheck {
+            reference: "fft::fft_conv_linear_naive",
+            max_abs_diff: crate::util::max_abs_diff(&got, &want),
+            bit_identical: false,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::conv::direct_conv_linear;
+    use crate::util::max_abs_diff;
+
+    #[test]
+    fn kernel_is_the_mode_sum_of_powers() {
+        let k = s4_kernel(&[0.5, 0.25], &[1.0, 2.0], 4);
+        // t=0: 1+2; t=1: 0.5+0.5; t=2: 0.25+0.125; t=3: 0.125+0.03125.
+        assert_eq!(k, vec![3.0, 1.0, 0.375, 0.15625]);
+    }
+
+    #[test]
+    fn conv_matches_direct_oracle_non_pow2() {
+        let mut rng = XorShift::new(91);
+        for l in [100usize, 777, 1000] {
+            let u = rng.vec(l, -1.0, 1.0);
+            let lambda: Vec<f64> = (0..4).map(|_| rng.uniform(0.5, 0.99)).collect();
+            let c = rng.vec(4, -1.0, 1.0);
+            let k = s4_kernel(&lambda, &c, l);
+            let d = max_abs_diff(&s4_conv(&u, &lambda, &c), &direct_conv_linear(&u, &k));
+            assert!(d < 1e-9, "L={l}: |d|={d}");
+        }
+    }
+
+    #[test]
+    fn planned_matches_naive_path() {
+        let mut rng = XorShift::new(92);
+        let l = 1000; // non-pow2: pads to 2048 internally
+        let u = rng.vec(l, -1.0, 1.0);
+        let lambda: Vec<f64> = (0..8).map(|_| rng.uniform(0.5, 0.99)).collect();
+        let c = rng.vec(8, -1.0, 1.0);
+        let d = max_abs_diff(&s4_conv(&u, &lambda, &c), &s4_conv_naive(&u, &lambda, &c));
+        assert!(d < 1e-9, "|d|={d}");
+    }
+
+    #[test]
+    fn pooled_channels_bit_identical_to_serial() {
+        let mut rng = XorShift::new(93);
+        let ch = 8;
+        let l = 500;
+        let us: Vec<Vec<f64>> = (0..ch).map(|_| rng.vec(l, -1.0, 1.0)).collect();
+        let lambdas: Vec<Vec<f64>> =
+            (0..ch).map(|_| (0..4).map(|_| rng.uniform(0.5, 0.99)).collect()).collect();
+        let cs: Vec<Vec<f64>> = (0..ch).map(|_| rng.vec(4, -1.0, 1.0)).collect();
+        let serial: Vec<Vec<f64>> = (0..ch).map(|i| s4_conv(&us[i], &lambdas[i], &cs[i])).collect();
+        let pooled = s4_conv_channels(&us, &lambdas, &cs, &WorkerPool::new(3));
+        assert_eq!(pooled, serial, "pooling must not change a single bit");
+    }
+
+    #[test]
+    fn graph_is_valid_with_three_transforms() {
+        let g = s4_decoder(&DecoderConfig::paper(1 << 14));
+        assert!(g.validate().is_ok(), "{}", g.name);
+        let n = g.kernels.iter().filter(|k| k.op == OpClass::VectorFft).count();
+        assert_eq!(n, 3, "one conv = two forward FFTs + one inverse");
+    }
+
+    #[test]
+    fn kernel_generator_is_a_graph_input_not_a_projection() {
+        // LTI: the kernel comes from DRAM-resident parameters, so s4_kernel
+        // must have an external input edge and no activation predecessors.
+        let g = s4_decoder(&DecoderConfig::paper(1 << 12));
+        let kgen = g.kernels.iter().position(|k| k.name == "s4_kernel").unwrap();
+        assert!(g.predecessors(kgen).is_empty(), "kernel gen is input-independent");
+        assert!(g.edges.iter().any(|e| e.src.is_none() && e.dst == Some(kgen)));
+    }
+
+    #[test]
+    fn conv_chain_is_streamed_for_fusion() {
+        let g = s4_decoder(&DecoderConfig::paper(1 << 12));
+        let id = |name: &str| g.kernels.iter().position(|k| k.name == name).unwrap();
+        assert_eq!(g.stream_predecessors(id("conv.freqmul")).len(), 2);
+        assert_eq!(g.stream_predecessors(id("conv.ifft")), vec![id("conv.freqmul")]);
+        assert_eq!(g.stream_predecessors(id("gate")), vec![id("conv.ifft")]);
+    }
+
+    #[test]
+    fn s4_is_cheaper_than_hyena_per_layer() {
+        // One conv vs two: the transform share halves.
+        let dc = DecoderConfig::paper(1 << 18);
+        let s4 = s4_decoder(&dc).total_flops();
+        let hy = super::super::hyena::hyena_decoder(&dc, BaileyVariant::Vector).total_flops();
+        assert!(s4 < hy, "s4={s4} hyena={hy}");
+    }
+
+    #[test]
+    fn log_linear_scaling() {
+        let f1 = s4_decoder(&DecoderConfig::paper(1 << 18)).total_flops();
+        let f2 = s4_decoder(&DecoderConfig::paper(1 << 20)).total_flops();
+        let ratio = f2 / f1;
+        assert!(ratio > 4.0 && ratio < 4.6, "ratio={ratio}");
+    }
+}

@@ -1,0 +1,463 @@
+//! Mamba-2 **SSD** (state-space dual) decoder workload: the chunked
+//! reformulation of the selective scan (Dao & Gu, 2024; surveyed in the
+//! S4→Mamba line of work) that turns most scan arithmetic into dense
+//! matmuls.
+//!
+//! The recurrence is the same first-order linear one as Mamba's
+//! (`h[t] = a[t]·h[t-1] + b[t]`, [`crate::scan::recurrence`]), but SSD
+//! evaluates it in `Q`-element **chunks**:
+//!
+//! ```text
+//! intra-chunk   y_local = L ⊙ b        L[t][s] = ∏_{s<r≤t} a[r]
+//!               (a lower-triangular semiseparable matmul — systolic work)
+//! inter-chunk   carry[k+1] = A_k·carry[k] + B_k   over K = ⌈L/Q⌉ chunk
+//!               totals (a short serial recurrence: K elements, not L)
+//! combine       h[t] = seg[t]·carry_in + y_local[t]
+//! ```
+//!
+//! The architectural point: the O(L·Q) intra-chunk work runs in **systolic
+//! mode at full MAC rate on a baseline RDU** — no scan interconnect
+//! extension needed — while the inherently serial part shrinks from `L`
+//! elements (C-scan) to `L/Q` chunk totals. [`Workload::extended_config`]
+//! is therefore the *baseline* chip: SSD trades ~`Q/6`× more FLOPs than the
+//! lifted parallel scan for extension-free spatial execution.
+//!
+//! **Numerics.** [`ssd_scan`] is the golden chunked evaluator: it carries
+//! the inter-chunk recurrence through the chunk boundary by *injecting* the
+//! carry into the chunk's first step (`b'[0] = b[0] + a[0]·carry`, the same
+//! mul-then-add the serial update performs) and evaluates each chunk's
+//! semiseparable matvec in Horner (row-recurrence) order — which makes it
+//! **bit-identical** to [`crate::scan::mamba_scan_serial`] for every length
+//! and chunk size, ragged tails included (the integration tests assert
+//! exact equality, as does the `--chips 2` sharded driver
+//! [`crate::shard::sharded_ssd_scan`]). [`ssd_scan_semiseparable`] is the
+//! explicit matmul-order evaluation the dataflow graph prices (cumulative-
+//! product matrix, row sums); floating-point regrouping puts it within
+//! ~1e-12 of serial, checked at the usual 1e-9 budget.
+
+use super::blocks::{self, eltwise, gemm, layer_norm};
+use super::config::DecoderConfig;
+use super::registry::{DecodeDemand, GoldenCheck, ShardComm, Workload};
+use crate::arch::RduConfig;
+use crate::graph::{Graph, Kernel, OpClass};
+use crate::runtime::ModelKind;
+use crate::util::XorShift;
+
+/// Golden chunked SSD scan seeded by `carry` (the state entering the first
+/// chunk): inter-chunk recurrence via carry injection, intra-chunk Horner
+/// evaluation. Bit-identical to running [`crate::scan::mamba_scan_serial`]
+/// from the same state — see the module docs for why. The sharded driver
+/// chains per-chip segments through this entry point.
+pub fn ssd_scan_with_carry(a: &[f64], b: &[f64], q: usize, carry: f64) -> Vec<f64> {
+    assert_eq!(a.len(), b.len(), "ssd_scan: a/b length mismatch");
+    assert!(q >= 1, "ssd_scan: chunk size must be >= 1");
+    let n = a.len();
+    let mut out = Vec::with_capacity(n);
+    let mut carry = carry;
+    for lo in (0..n).step_by(q) {
+        let hi = (lo + q).min(n);
+        // Inject the carry into the chunk's first step exactly as the
+        // serial update would consume it: a·h then + b (addition commutes
+        // bit-exactly; multiplication order is the serial one).
+        let mut h = 0.0;
+        for t in lo..hi {
+            let bt = if t == lo { b[t] + a[t] * carry } else { b[t] };
+            h = a[t] * h + bt;
+            out.push(h);
+        }
+        carry = h;
+    }
+    out
+}
+
+/// Golden chunked SSD scan from `h0 = 0` over `q`-element chunks.
+pub fn ssd_scan(a: &[f64], b: &[f64], q: usize) -> Vec<f64> {
+    ssd_scan_with_carry(a, b, q, 0.0)
+}
+
+/// The explicit **semiseparable-matmul** evaluation of the chunked scan —
+/// the arithmetic the dataflow graph prices on the systolic arrays: per
+/// chunk, materialize the cumulative-decay products and evaluate each
+/// output as a row sum `Σ_s (∏_{s<r≤t} a[r])·b[s]`, then apply the
+/// inter-chunk carry as `seg[t]·h_in + local[t]`. Same math as
+/// [`ssd_scan`] under a different regrouping; agreement is ~1e-12
+/// (checked ≤ 1e-9 against [`crate::scan::mamba_scan_serial`]).
+pub fn ssd_scan_semiseparable(a: &[f64], b: &[f64], q: usize) -> Vec<f64> {
+    assert_eq!(a.len(), b.len(), "ssd_scan: a/b length mismatch");
+    assert!(q >= 1, "ssd_scan: chunk size must be >= 1");
+    let n = a.len();
+    let mut out = Vec::with_capacity(n);
+    let mut h_in = 0.0;
+    for lo in (0..n).step_by(q) {
+        let hi = (lo + q).min(n);
+        let len = hi - lo;
+        // decay[i] = ∏_{lo..=lo+i} a — one cumulative-product pass; the
+        // L-matrix entry ∏_{s<r≤t} is decay[t]/... recomputed as a running
+        // product per row to stay division-free like the hardware would.
+        let mut local = vec![0.0; len];
+        let mut seg = vec![0.0; len];
+        for t in 0..len {
+            // Row t of the lower-triangular matvec, evaluated left to
+            // right: products ∏_{s<r≤t} a[lo+r] built by suffix scaling.
+            let mut row = 0.0;
+            let mut prod = 1.0;
+            for s in (0..=t).rev() {
+                row += prod * b[lo + s];
+                prod *= a[lo + s];
+            }
+            local[t] = row;
+            seg[t] = prod; // ∏_{lo..=lo+t} a
+        }
+        for t in 0..len {
+            out.push(seg[t] * h_in + local[t]);
+        }
+        h_in = *out.last().unwrap();
+    }
+    out
+}
+
+/// FLOPs of the SSD core over `L` positions, `C = N·d_inner` channels,
+/// chunk `Q`:
+///
+/// * intra-chunk semiseparable matvecs — `Q²/2` MACs per chunk-channel
+///   → `L·Q·C` FLOPs total (the systolic share);
+/// * inter-chunk recurrence — one lifted combine (3 FLOP) per chunk total
+///   → `3·⌈L/Q⌉·C`;
+/// * carry combine — 2 FLOP per element → `2·L·C`.
+pub fn ssd_core_flops(cfg: &DecoderConfig) -> f64 {
+    let l = cfg.seq_len as f64;
+    let q = cfg.ssd_chunk.max(1) as f64;
+    let c = (cfg.d_inner() * cfg.state_dim.max(1)) as f64;
+    let chunks = (l / q).ceil();
+    l * q * c + 3.0 * chunks * c + 2.0 * l * c
+}
+
+/// Build the Mamba-2 SSD decoder layer.
+///
+/// Template: identical to [`super::mamba::mamba_decoder`] up to the
+/// discretized `(ā, b̄)` streams, then the chunked core replaces the
+/// monolithic selective scan:
+///
+/// `discretize → chunk_decay (cumprods) → intra_chunk_gemm (semiseparable
+/// matmul, `OpClass::Gemm`) → inter_chunk_scan (serial over L/Q totals)
+/// → chunk_combine → c_contract → gate → out_proj → MLP`,
+///
+/// every hop a stream edge so the fusion pass clusters the whole spine.
+pub fn ssd_decoder(cfg: &DecoderConfig) -> Graph {
+    let l = cfg.seq_len;
+    let d = cfg.d_model;
+    let di = cfg.d_inner();
+    let n = cfg.state_dim.max(1);
+    let q = cfg.ssd_chunk.max(1);
+    let b = cfg.dtype_bytes;
+    let act = cfg.act_bytes();
+    let act_inner = l as f64 * di as f64 * b;
+    let c = (di * n) as f64; // scan channels
+    let chunks = (l as f64 / q as f64).ceil();
+    let dt_rank = (d / 16).max(1);
+
+    let mut g = Graph::new(&format!("ssd-decoder[Q={q}] L={l} D={d}"));
+
+    let ln1 = layer_norm(&mut g, cfg, "ln1", d);
+    g.input(ln1, act);
+
+    let in_proj = gemm(&mut g, cfg, "in_proj", l, 2 * di, d);
+    g.connect_stream(ln1, in_proj, act);
+
+    let conv1d = eltwise(&mut g, cfg, "conv1d", (l * di) as f64, 8.0, 1.0);
+    g.connect_stream(in_proj, conv1d, act_inner);
+    let silu = eltwise(&mut g, cfg, "silu.x", (l * di) as f64, 4.0, 1.0);
+    g.connect_stream(conv1d, silu, act_inner);
+
+    let x_proj = gemm(&mut g, cfg, "x_proj", l, dt_rank + 2 * n, di);
+    g.connect_stream(silu, x_proj, act_inner);
+    let dt_proj = gemm(&mut g, cfg, "dt_proj", l, di, dt_rank);
+    g.connect_stream(x_proj, dt_proj, l as f64 * dt_rank as f64 * b);
+
+    // Discretization: ā = exp(Δ·A), b̄ = Δ·B·x — same stage as Mamba-1.
+    let scan_bytes = 2.0 * l as f64 * c * b;
+    let disc = g.add(
+        Kernel::new(
+            "discretize",
+            OpClass::Elementwise,
+            4.0 * l as f64 * c,
+            act_inner + l as f64 * (2 * n) as f64 * b,
+            scan_bytes,
+        )
+        .with_stream(l as f64, c),
+    );
+    g.connect_stream(dt_proj, disc, act_inner);
+    g.connect(x_proj, disc, l as f64 * (2 * n) as f64 * b);
+
+    // Within-chunk cumulative decay products — the generator of the
+    // lower-triangular L matrix (and the seg[t] broadcast factors).
+    let decay = g.add(
+        Kernel::new(
+            "chunk_decay",
+            OpClass::Elementwise,
+            l as f64 * c,
+            scan_bytes / 2.0,
+            l as f64 * c * b,
+        )
+        .with_stream(l as f64, c),
+    );
+    g.connect_stream(disc, decay, scan_bytes / 2.0);
+
+    // The SSD headline: per chunk-channel a Q×Q lower-triangular matvec
+    // against the b̄ stream — dense systolic work (OpClass::Gemm), L·Q·C
+    // FLOPs. Both the decay matrix and the b̄ values stream in.
+    let intra = g.add(
+        Kernel::new(
+            "intra_chunk_gemm",
+            OpClass::Gemm,
+            l as f64 * q as f64 * c,
+            l as f64 * c * b + scan_bytes / 2.0,
+            l as f64 * c * b,
+        )
+        .with_stream(l as f64, c),
+    );
+    g.connect_stream(decay, intra, l as f64 * c * b);
+    g.connect_stream(disc, intra, scan_bytes / 2.0);
+
+    // The inherently serial remainder: the recurrence over ⌈L/Q⌉ chunk
+    // totals (3 FLOP per lifted combine) — L/Q elements, not L.
+    let inter = g.add(
+        Kernel::new(
+            "inter_chunk_scan",
+            OpClass::ScanSerial,
+            3.0 * chunks * c,
+            2.0 * chunks * c * b,
+            chunks * c * b,
+        )
+        .with_stream(chunks, c),
+    );
+    g.connect_stream(intra, inter, 2.0 * chunks * c * b);
+
+    // Broadcast-combine: h[t] = seg[t]·carry_in(chunk) + local[t].
+    let combine = g.add(
+        Kernel::new(
+            "chunk_combine",
+            OpClass::Elementwise,
+            2.0 * l as f64 * c,
+            l as f64 * c * b + chunks * c * b,
+            l as f64 * c * b,
+        )
+        .with_stream(l as f64, c),
+    );
+    g.connect_stream(intra, combine, l as f64 * c * b);
+    g.connect_stream(inter, combine, chunks * c * b);
+
+    // Output contraction, gate and projection — the shared Mamba tail.
+    let contract = g.add(
+        Kernel::new(
+            "c_contract",
+            OpClass::Elementwise,
+            2.0 * l as f64 * c,
+            l as f64 * c * b + l as f64 * n as f64 * b,
+            act_inner,
+        )
+        .with_stream(l as f64, di as f64),
+    );
+    g.connect_stream(combine, contract, l as f64 * c * b);
+    g.connect(x_proj, contract, l as f64 * n as f64 * b);
+
+    let gate = eltwise(&mut g, cfg, "gate.z", (l * di) as f64, 5.0, 2.0);
+    g.connect_stream(contract, gate, act_inner);
+    g.connect(in_proj, gate, act_inner);
+
+    let out_proj = gemm(&mut g, cfg, "out_proj", l, d, di);
+    g.connect_stream(gate, out_proj, act_inner);
+
+    let last = blocks::mlp_block(&mut g, cfg, out_proj);
+    g.output(last, act);
+
+    debug_assert!(g.validate().is_ok());
+    g
+}
+
+/// The registered Mamba-2 SSD workload (see [`mod@crate::workloads::registry`]).
+pub struct SsdWorkload;
+
+impl Workload for SsdWorkload {
+    fn name(&self) -> &'static str {
+        "ssd"
+    }
+
+    fn describe(&self) -> &'static str {
+        "Mamba-2 SSD: chunked scan as intra-chunk matmul + inter-chunk recurrence"
+    }
+
+    fn family(&self) -> ModelKind {
+        ModelKind::Mamba
+    }
+
+    fn build_graph(&self, dc: &DecoderConfig) -> Graph {
+        ssd_decoder(dc)
+    }
+
+    /// SSD's core is systolic: the baseline RDU already runs it spatially,
+    /// which is the design point the workload exists to demonstrate.
+    fn extended_config(&self) -> RduConfig {
+        RduConfig::baseline()
+    }
+
+    /// Per token SSD decodes exactly like the selective scan (chunking is
+    /// a prefill-time reformulation): same projections, same `N × d_inner`
+    /// recurrent state.
+    fn decode_demand(&self, dc: &DecoderConfig) -> DecodeDemand {
+        super::mamba::MambaWorkload.decode_demand(dc)
+    }
+
+    /// Same wire pattern and carry channels as the selective scan — the
+    /// `ssd_rides_the_mamba_carry_exchange` invariant, kept by delegation
+    /// like [`Workload::decode_demand`] above.
+    fn shard_comm(&self, dc: &DecoderConfig) -> ShardComm {
+        super::mamba::MambaWorkload.shard_comm(dc)
+    }
+
+    fn golden_check(&self, seed: u64) -> Option<GoldenCheck> {
+        let mut rng = XorShift::new(seed);
+        let n = 1000; // deliberately ragged vs Q
+        let a: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 0.99)).collect();
+        let b: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let want = crate::scan::mamba_scan_serial(&a, &b);
+        let mut max_d = 0.0f64;
+        let mut bit_identical = true;
+        for q in [1usize, 64, 256] {
+            let got = ssd_scan(&a, &b, q);
+            bit_identical &= got == want;
+            max_d = max_d.max(crate::util::max_abs_diff(&got, &want));
+        }
+        Some(GoldenCheck {
+            reference: "scan::mamba_scan_serial",
+            max_abs_diff: max_d,
+            bit_identical,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::mamba_scan_serial;
+    use crate::util::max_abs_diff;
+
+    #[test]
+    fn chunked_scan_bit_identical_to_serial() {
+        let mut rng = XorShift::new(71);
+        for n in [1usize, 7, 100, 255, 256, 257, 1000, 1023] {
+            let a: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 0.99)).collect();
+            let b = rng.vec(n, -1.0, 1.0);
+            let want = mamba_scan_serial(&a, &b);
+            for q in [1usize, 2, 4, 64, 256, 4096] {
+                assert_eq!(ssd_scan(&a, &b, q), want, "n={n} q={q}: must not differ by a bit");
+            }
+        }
+    }
+
+    #[test]
+    fn semiseparable_matches_serial_within_budget() {
+        let mut rng = XorShift::new(72);
+        for n in [1usize, 7, 100, 513] {
+            let a: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 0.99)).collect();
+            let b = rng.vec(n, -1.0, 1.0);
+            let want = mamba_scan_serial(&a, &b);
+            for q in [4usize, 16, 64] {
+                let d = max_abs_diff(&ssd_scan_semiseparable(&a, &b, q), &want);
+                assert!(d < 1e-9, "n={n} q={q}: |d|={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn carry_seeding_matches_a_longer_serial_run() {
+        // Seeding with chunk k's final state reproduces the serial tail —
+        // the property the sharded driver chains chips with.
+        let mut rng = XorShift::new(73);
+        let n = 300;
+        let a: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 0.99)).collect();
+        let b = rng.vec(n, -1.0, 1.0);
+        let want = mamba_scan_serial(&a, &b);
+        let cut = 113;
+        let head = ssd_scan(&a[..cut], &b[..cut], 32);
+        let tail = ssd_scan_with_carry(&a[cut..], &b[cut..], 32, *head.last().unwrap());
+        let got: Vec<f64> = head.into_iter().chain(tail).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn graph_is_valid_and_core_kernels_present() {
+        let cfg = DecoderConfig::paper(1 << 14);
+        let g = ssd_decoder(&cfg);
+        assert!(g.validate().is_ok(), "{}", g.name);
+        let find = |name: &str| g.kernels.iter().find(|k| k.name == name).unwrap();
+        assert_eq!(find("intra_chunk_gemm").op, OpClass::Gemm, "chunk matmuls are systolic work");
+        let inter = find("inter_chunk_scan");
+        assert_eq!(inter.op, OpClass::ScanSerial);
+        assert_eq!(
+            inter.elements,
+            (cfg.seq_len as f64 / cfg.ssd_chunk as f64).ceil(),
+            "serial part shrinks to L/Q chunk totals"
+        );
+    }
+
+    #[test]
+    fn core_flops_match_the_formula() {
+        let cfg = DecoderConfig::paper(1 << 14);
+        let g = ssd_decoder(&cfg);
+        let core: f64 = g
+            .kernels
+            .iter()
+            .filter(|k| {
+                ["intra_chunk_gemm", "inter_chunk_scan", "chunk_combine"].contains(&k.name.as_str())
+            })
+            .map(|k| k.flops)
+            .sum();
+        assert!((core - ssd_core_flops(&cfg)).abs() / core < 1e-12);
+    }
+
+    #[test]
+    fn ssd_spine_is_streamed_for_fusion() {
+        let g = ssd_decoder(&DecoderConfig::paper(1 << 12));
+        let id = |name: &str| g.kernels.iter().position(|k| k.name == name).unwrap();
+        assert_eq!(
+            g.stream_predecessors(id("intra_chunk_gemm")),
+            vec![id("discretize"), id("chunk_decay")]
+        );
+        assert_eq!(g.stream_predecessors(id("inter_chunk_scan")), vec![id("intra_chunk_gemm")]);
+        assert_eq!(
+            g.stream_predecessors(id("chunk_combine")),
+            vec![id("intra_chunk_gemm"), id("inter_chunk_scan")]
+        );
+        assert_eq!(g.stream_predecessors(id("c_contract")), vec![id("chunk_combine")]);
+        assert_eq!(g.predecessors(id("gate.z")).len(), 2, "z branch buffered, not streamed");
+    }
+
+    #[test]
+    fn linear_flop_scaling_in_l() {
+        let f1 = ssd_decoder(&DecoderConfig::paper(1 << 18)).total_flops();
+        let f2 = ssd_decoder(&DecoderConfig::paper(1 << 20)).total_flops();
+        let ratio = f2 / f1;
+        assert!((ratio - 4.0).abs() < 0.05, "ratio={ratio}"); // 4× length → 4× work
+    }
+
+    #[test]
+    fn ssd_trades_flops_for_systolic_execution() {
+        // More raw FLOPs than the lifted parallel scan (≈ Q/6×) on the
+        // core, but the heavy share is Gemm class.
+        let cfg = DecoderConfig::paper(1 << 16);
+        let par = super::super::mamba::scan_flops(&cfg, super::super::ScanVariant::Parallel);
+        assert!(ssd_core_flops(&cfg) > par, "SSD spends more arithmetic");
+        let g = ssd_decoder(&cfg);
+        let scan_share: f64 = g
+            .kernels
+            .iter()
+            .filter(|k| k.op == OpClass::ScanSerial)
+            .map(|k| k.elements * k.channels)
+            .sum();
+        assert!(
+            scan_share < cfg.seq_len as f64,
+            "serial updates must shrink below L (got {scan_share})"
+        );
+    }
+}

@@ -1,0 +1,137 @@
+//! Markdown link checker for the docs suite: every relative link in
+//! `README.md` and `docs/*.md` must resolve to a file that exists in the
+//! repository, so the workload-author guide and architecture docs cannot
+//! rot silently. Runs in plain `cargo test` and as its own CI step.
+//!
+//! External (`http`/`https`/`mailto`) links and intra-page `#anchors` are
+//! skipped — this is an offline repo-consistency check, not a crawler.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Repository root: the directory holding Cargo.toml.
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+/// The markdown files the docs suite comprises.
+fn doc_files() -> Vec<PathBuf> {
+    let root = repo_root();
+    let mut files = vec![root.join("README.md")];
+    let docs = root.join("docs");
+    let entries = fs::read_dir(&docs).unwrap_or_else(|e| panic!("read {docs:?}: {e}"));
+    for entry in entries {
+        let path = entry.expect("dir entry").path();
+        if path.extension().is_some_and(|e| e == "md") {
+            files.push(path);
+        }
+    }
+    files.sort();
+    files
+}
+
+/// Extract `](target)` markdown link targets from one file's text.
+/// Fenced code blocks are skipped — command examples like
+/// `[--options]` in usage text are not links.
+fn link_targets(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut in_fence = false;
+    for line in text.lines() {
+        if line.trim_start().starts_with("```") {
+            in_fence = !in_fence;
+            continue;
+        }
+        if in_fence {
+            continue;
+        }
+        let mut rest = line;
+        while let Some(i) = rest.find("](") {
+            let tail = &rest[i + 2..];
+            match tail.find(')') {
+                Some(j) => {
+                    out.push(tail[..j].trim().to_string());
+                    rest = &tail[j + 1..];
+                }
+                None => break,
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn all_relative_markdown_links_resolve() {
+    let mut broken: Vec<String> = Vec::new();
+    let mut checked = 0usize;
+    for file in doc_files() {
+        let text = fs::read_to_string(&file).unwrap_or_else(|e| panic!("read {file:?}: {e}"));
+        let base = file.parent().expect("doc files live in a directory");
+        for target in link_targets(&text) {
+            // Skip external links, bare anchors and templated examples.
+            if target.starts_with("http://")
+                || target.starts_with("https://")
+                || target.starts_with("mailto:")
+                || target.starts_with('#')
+                || target.is_empty()
+            {
+                continue;
+            }
+            // Strip an in-file anchor (`path#section`) before resolving.
+            let path_part = target.split('#').next().unwrap_or(&target);
+            let resolved = base.join(path_part);
+            checked += 1;
+            if !resolved.exists() {
+                broken.push(format!("{}: `{target}` -> {resolved:?}", file.display()));
+            }
+        }
+    }
+    assert!(checked > 0, "the docs suite must contain relative links to check");
+    assert!(broken.is_empty(), "broken markdown links:\n  {}", broken.join("\n  "));
+}
+
+#[test]
+fn docs_suite_files_exist() {
+    let root = repo_root();
+    for required in ["README.md", "docs/ARCHITECTURE.md", "docs/WORKLOADS.md"] {
+        assert!(root.join(required).exists(), "missing {required}");
+    }
+}
+
+#[test]
+fn workloads_guide_walkthrough_commands_use_real_workload_names() {
+    // The WORKLOADS.md walkthrough must only reference registered workload
+    // names in its `--workload` examples, so the commands run as written.
+    let text = fs::read_to_string(repo_root().join("docs/WORKLOADS.md")).expect("WORKLOADS.md");
+    let names = ssm_rdu::workloads::registry_names();
+    let mut found = 0usize;
+    for chunk in text.split("--workload").skip(1) {
+        let arg = chunk
+            .trim_start()
+            .split(|c: char| c.is_whitespace() || c == '`')
+            .next()
+            .unwrap_or("")
+            .to_string();
+        for name in arg.split(',') {
+            // Placeholder tokens like <name> document the flag itself.
+            if name.is_empty() || name.starts_with('<') || name.starts_with('{') {
+                continue;
+            }
+            assert!(
+                names.contains(&name),
+                "WORKLOADS.md references unregistered workload `{name}` (valid: {names:?})"
+            );
+            found += 1;
+        }
+    }
+    assert!(found > 0, "the guide must show at least one --workload command");
+}
+
+#[test]
+fn path_resolution_helper_is_honest() {
+    // Guard the checker itself: a link to a file that exists resolves, a
+    // fabricated one does not.
+    let root = repo_root();
+    assert!(root.join("Cargo.toml").exists());
+    assert!(!root.join("docs/NO_SUCH_FILE.md").exists());
+    assert!(Path::new(&root).is_absolute());
+}

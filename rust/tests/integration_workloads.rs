@@ -1,0 +1,225 @@
+//! Workload-registry integration suite (ISSUE 5 acceptance):
+//!
+//! * SSD chunked scan **bit-identical** to the naive `scan::recurrence`
+//!   path, for ragged lengths and through the 2-chip sharded driver;
+//! * S4 conv matches the naive complex-FFT path ≤ 1e-9 on non-pow2 lengths;
+//! * registry round-trip: every registered workload builds, maps, fuses and
+//!   estimates without panicking, and the sweep/shard/decode layers resolve
+//!   it uniformly.
+
+use ssm_rdu::arch::{InterchipLink, RduConfig};
+use ssm_rdu::dfmodel;
+use ssm_rdu::runtime::WorkerPool;
+use ssm_rdu::scan::mamba_scan_serial;
+use ssm_rdu::shard::{self, sharded_ssd_scan};
+use ssm_rdu::util::{max_abs_diff, XorShift};
+use ssm_rdu::workloads::{
+    lookup, registry, registry_names, s4_conv, s4_conv_channels, s4_kernel, ssd_scan,
+    ssd_scan_semiseparable, ssm_workloads, DecoderConfig, ShardComm,
+};
+
+// ---------------------------------------------------------------- SSD
+
+#[test]
+fn ssd_chunked_scan_bit_identical_for_ragged_lengths() {
+    let mut rng = XorShift::new(501);
+    for n in [1usize, 13, 100, 255, 256, 257, 1000, 1023, 4096] {
+        let a: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 0.99)).collect();
+        let b = rng.vec(n, -1.0, 1.0);
+        let want = mamba_scan_serial(&a, &b);
+        for q in [1usize, 32, 256, 1 << 14] {
+            assert_eq!(ssd_scan(&a, &b, q), want, "n={n} q={q}: SSD must not change a bit");
+        }
+    }
+}
+
+#[test]
+fn ssd_chunked_scan_bit_identical_at_two_chips() {
+    // The acceptance point: ragged L, --chips 2, exact equality — the
+    // per-chip chunked scans chained through the carry exchange reproduce
+    // the serial recurrence bitwise.
+    let mut rng = XorShift::new(502);
+    for n in [2usize, 101, 1000, 1023] {
+        let a: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 0.99)).collect();
+        let b = rng.vec(n, -1.0, 1.0);
+        let want = mamba_scan_serial(&a, &b);
+        assert_eq!(sharded_ssd_scan(&a, &b, 2, 256), want, "n={n} chips=2");
+        for chips in [3usize, 5, 8] {
+            assert_eq!(sharded_ssd_scan(&a, &b, chips, 64), want, "n={n} chips={chips}");
+        }
+    }
+}
+
+#[test]
+fn ssd_semiseparable_evaluation_within_budget() {
+    // The matmul-order evaluation (what the graph prices on the systolic
+    // arrays) regroups floating point; it must stay inside the 1e-9 budget.
+    let mut rng = XorShift::new(503);
+    let n = 777;
+    let a: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 0.99)).collect();
+    let b = rng.vec(n, -1.0, 1.0);
+    let want = mamba_scan_serial(&a, &b);
+    for q in [8usize, 64, 256] {
+        let d = max_abs_diff(&ssd_scan_semiseparable(&a, &b, q), &want);
+        assert!(d < 1e-9, "q={q}: |d|={d}");
+    }
+}
+
+// ---------------------------------------------------------------- S4
+
+#[test]
+fn s4_conv_matches_naive_fft_path_on_non_pow2_lengths() {
+    let mut rng = XorShift::new(504);
+    for l in [100usize, 777, 1000, 3000] {
+        let u = rng.vec(l, -1.0, 1.0);
+        let lambda: Vec<f64> = (0..4).map(|_| rng.uniform(0.5, 0.99)).collect();
+        let c = rng.vec(4, -1.0, 1.0);
+        let k = s4_kernel(&lambda, &c, l);
+        let planned = s4_conv(&u, &lambda, &c);
+        let naive = ssm_rdu::fft::fft_conv_linear_naive(&u, &k);
+        let d = max_abs_diff(&planned, &naive);
+        assert!(d < 1e-9, "L={l}: planned vs naive |d|={d}");
+        // And against the O(L²) oracle on the smaller lengths.
+        if l <= 1000 {
+            let direct = ssm_rdu::fft::conv::direct_conv_linear(&u, &k);
+            let d2 = max_abs_diff(&planned, &direct);
+            assert!(d2 < 1e-9, "L={l}: planned vs direct |d|={d2}");
+        }
+    }
+}
+
+#[test]
+fn s4_pooled_channels_bit_identical_to_serial() {
+    let mut rng = XorShift::new(505);
+    let ch = 6;
+    let l = 1000;
+    let us: Vec<Vec<f64>> = (0..ch).map(|_| rng.vec(l, -1.0, 1.0)).collect();
+    let lambdas: Vec<Vec<f64>> =
+        (0..ch).map(|_| (0..4).map(|_| rng.uniform(0.5, 0.99)).collect()).collect();
+    let cs: Vec<Vec<f64>> = (0..ch).map(|_| rng.vec(4, -1.0, 1.0)).collect();
+    let serial: Vec<Vec<f64>> = (0..ch).map(|i| s4_conv(&us[i], &lambdas[i], &cs[i])).collect();
+    for threads in [1usize, 2, 4] {
+        assert_eq!(
+            s4_conv_channels(&us, &lambdas, &cs, &WorkerPool::new(threads)),
+            serial,
+            "threads={threads}"
+        );
+    }
+}
+
+// ------------------------------------------------------------ registry
+
+#[test]
+fn registry_roundtrip_builds_maps_fuses_estimates() {
+    // Every registered workload, resolved by name, must flow through the
+    // whole modeling stack without panicking.
+    let dc = DecoderConfig::paper(1 << 14);
+    for name in registry_names() {
+        let w = lookup(name).unwrap_or_else(|| panic!("{name} must resolve"));
+        let g = w.build_graph(&dc);
+        assert!(g.validate().is_ok(), "{name}: {:?}", g.validate());
+
+        let cfg = w.extended_config();
+        let mapping = dfmodel::map_graph(&g, &cfg).unwrap_or_else(|e| panic!("{name}: map {e}"));
+        assert!(mapping.max_pcus_used() <= cfg.spec.n_pcu, "{name}");
+
+        let plan = dfmodel::fuse_graph(&g, &cfg);
+        let mut seen = vec![false; g.kernels.len()];
+        for cluster in &plan.clusters {
+            for &k in cluster {
+                assert!(!seen[k], "{name}: kernel {k} fused twice");
+                seen[k] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "{name}: fusion must cover every kernel");
+
+        let ideal = dfmodel::estimate(&g, &cfg).unwrap();
+        let fused = dfmodel::estimate_fused(&g, &cfg).unwrap();
+        let unfused = dfmodel::estimate_unfused(&g, &cfg).unwrap();
+        assert!(ideal.total_seconds > 0.0 && ideal.total_seconds.is_finite(), "{name}");
+        assert!(fused.total_seconds <= unfused.total_seconds, "{name}: fusion never loses");
+        assert!(fused.sections <= unfused.sections, "{name}");
+
+        let cost = dfmodel::decode_step_workload(w, &dc, 8, &cfg);
+        assert!(cost.seconds > 0.0 && cost.flops > 0.0, "{name}");
+    }
+}
+
+#[test]
+fn fused_strictly_beats_unfused_for_the_new_workloads() {
+    // The existing gate covers hyena/mamba; pin the same strict win for SSD
+    // and S4 at the L = 4K acceptance point and a production length.
+    for l in [1usize << 12, 1 << 16] {
+        let dc = DecoderConfig::paper(l);
+        for name in ["ssd", "s4"] {
+            let w = lookup(name).unwrap();
+            let g = w.build_graph(&dc);
+            let cfg = w.extended_config();
+            let f = dfmodel::estimate_fused(&g, &cfg).unwrap();
+            let u = dfmodel::estimate_unfused(&g, &cfg).unwrap();
+            assert!(
+                f.total_seconds < u.total_seconds,
+                "{name} @ L={l}: fused {} !< unfused {}",
+                f.total_seconds,
+                u.total_seconds
+            );
+            assert!(f.sections < u.sections, "{name} @ L={l}: fusion must reduce launches");
+        }
+    }
+}
+
+#[test]
+fn every_ssm_workload_sweeps_and_shards() {
+    let dc = DecoderConfig::paper(1 << 16);
+    let wls = ssm_workloads();
+    // One sweep point over all SSM workloads: rows present and finite.
+    let pts = dfmodel::sweep_pcu_count(&dc, &[520], &wls);
+    assert_eq!(pts.len(), 1);
+    assert_eq!(pts[0].rows.len(), wls.len());
+    for r in &pts[0].rows {
+        assert!(r.seconds.is_finite() && r.seconds > 0.0, "{r:?}");
+        assert!(r.gain >= 1.0 - 1e-9, "{r:?}");
+    }
+    // Sharded estimates resolve for every shardable workload at 2 chips.
+    let link = InterchipLink::rdu_fabric();
+    for w in &wls {
+        assert_ne!(w.shard_comm(&dc), ShardComm::Unsupported, "{} is shardable", w.name());
+        let s = shard::sharded_estimate_workload(*w, &dc, 2, &w.extended_config(), &link)
+            .unwrap_or_else(|e| panic!("{}: {e}", w.name()));
+        assert_eq!(s.workload, w.name());
+        assert!(s.comm_seconds > 0.0, "{}", w.name());
+    }
+}
+
+#[test]
+fn golden_checks_hold_through_the_registry() {
+    for w in ssm_workloads() {
+        let gc = w.golden_check(99).expect("SSM workloads carry a golden model");
+        let label = format!("{} vs {}", w.name(), gc.reference);
+        assert!(gc.max_abs_diff < 1e-9, "{label}: |d|={}", gc.max_abs_diff);
+        if gc.bit_identical {
+            assert_eq!(gc.max_abs_diff, 0.0, "{}", w.name());
+        }
+    }
+}
+
+#[test]
+fn ssd_design_point_needs_no_extension() {
+    // The SSD architectural claim, end to end: its estimate on the baseline
+    // RDU equals its estimate on the scan-extended RDU (no ScanParallel
+    // kernels to accelerate), and both beat the C-scan Mamba design.
+    let dc = DecoderConfig::paper(1 << 18);
+    let ssd = lookup("ssd").unwrap().build_graph(&dc);
+    let on_base = dfmodel::estimate(&ssd, &RduConfig::baseline()).unwrap().total_seconds;
+    let on_scan = dfmodel::estimate(&ssd, &RduConfig::hs_scan_mode()).unwrap().total_seconds;
+    assert!((on_base - on_scan).abs() / on_base < 1e-9, "base={on_base} scan={on_scan}");
+    let cscan = ssm_rdu::workloads::mamba_decoder(&dc, ssm_rdu::workloads::ScanVariant::CScan);
+    let cscan_s = dfmodel::estimate(&cscan, &RduConfig::baseline()).unwrap().total_seconds;
+    assert!(on_base < cscan_s, "chunking must beat the serial C-scan: {on_base} vs {cscan_s}");
+}
+
+#[test]
+fn registry_covers_exactly_the_documented_names() {
+    assert_eq!(registry().len(), 5);
+    assert_eq!(registry_names(), vec!["attention", "hyena", "mamba", "ssd", "s4"]);
+}
