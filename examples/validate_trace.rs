@@ -1,0 +1,79 @@
+//! Validate a `--trace` output file as Chrome trace-event JSON.
+//!
+//! ```bash
+//! cargo run --release -- simulate --workload hyena --chips 2 --trace trace.json
+//! cargo run --release --example validate_trace -- trace.json
+//! ```
+//!
+//! CI runs exactly this pair to guarantee every shipped trace loads in
+//! Perfetto: the document must parse with `util::json`, carry a
+//! `traceEvents` array, and every event must be a well-formed `X`
+//! (complete span), `i` (instant) or `M` (metadata) record. Exits non-zero
+//! with a pointed message on the first violation.
+
+use ssm_rdu::util::json::Json;
+
+fn fail(msg: &str) -> ! {
+    eprintln!("validate_trace: {msg}");
+    std::process::exit(1);
+}
+
+fn main() {
+    let path = std::env::args().nth(1).unwrap_or_else(|| "trace.json".to_string());
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) => fail(&format!("cannot read {path}: {e}")),
+    };
+    let doc = match Json::parse(&text) {
+        Ok(d) => d,
+        Err(e) => fail(&format!("{path} is not valid JSON: {e}")),
+    };
+    let Some(events) = doc.get("traceEvents").and_then(Json::as_arr) else {
+        fail(&format!("{path}: missing `traceEvents` array"));
+    };
+
+    let mut spans = 0usize;
+    let mut instants = 0usize;
+    let mut meta = 0usize;
+    for (i, e) in events.iter().enumerate() {
+        let ph = e
+            .get("ph")
+            .and_then(Json::as_str)
+            .unwrap_or_else(|| fail(&format!("{path}: event {i} has no `ph`")));
+        if e.get("name").and_then(Json::as_str).is_none() {
+            fail(&format!("{path}: event {i} has no `name`"));
+        }
+        if e.get("pid").and_then(Json::as_f64).is_none()
+            || e.get("tid").and_then(Json::as_f64).is_none()
+        {
+            fail(&format!("{path}: event {i} lacks pid/tid"));
+        }
+        match ph {
+            "M" => meta += 1,
+            "X" => {
+                let ts = e.get("ts").and_then(Json::as_f64);
+                let dur = e.get("dur").and_then(Json::as_f64);
+                match (ts, dur) {
+                    (Some(_), Some(d)) if d >= 0.0 => spans += 1,
+                    _ => fail(&format!(
+                        "{path}: span event {i} needs numeric ts and non-negative dur"
+                    )),
+                }
+            }
+            "i" => {
+                if e.get("ts").and_then(Json::as_f64).is_none() {
+                    fail(&format!("{path}: instant event {i} has no ts"));
+                }
+                instants += 1;
+            }
+            other => fail(&format!("{path}: event {i} has unexpected ph `{other}`")),
+        }
+    }
+    if spans == 0 {
+        fail(&format!("{path}: no complete (`X`) spans — nothing would render in Perfetto"));
+    }
+    println!(
+        "{path}: {} trace events OK ({spans} spans, {instants} instants, {meta} metadata)",
+        events.len()
+    );
+}

@@ -1,0 +1,156 @@
+//! Observability overhead gate (`BENCH_observe.json`): tracing **off** must
+//! cost ≤1% on the instrumented hot paths — the paper's "<1% overhead"
+//! discipline, enforced in CI next to the fusion and hotpath gates.
+//!
+//! Method: a disabled span/instant site is one relaxed atomic load and a
+//! branch. We measure that per-site cost directly, count how many sites one
+//! hot-path call actually crosses (by enabling tracing once and counting
+//! the recorded events), and bound the relative overhead as
+//!
+//! ```text
+//! overhead_share = sites_per_call × disabled_site_cost / call_latency
+//! ```
+//!
+//! which over-counts (instants and counter bumps are cheaper than the span
+//! bound) — a conservative gate. The tracing-*on* cost is also reported,
+//! informationally: it is allowed to cost more; only the default-off mode
+//! is gated.
+
+use ssm_rdu::bench::{black_box, Bencher};
+use ssm_rdu::fft::{fft_conv_linear, BaileyVariant};
+use ssm_rdu::runtime::WorkerPool;
+use ssm_rdu::shard::{sharded_bailey_fft_pooled, sharded_mamba_scan_pooled};
+use ssm_rdu::telemetry;
+use ssm_rdu::util::{C64, XorShift};
+
+/// CI gate: disabled-mode telemetry overhead on any hot-path group.
+const GATE_MAX_OVERHEAD: f64 = 0.01;
+
+fn main() {
+    let mut b = Bencher::from_env("observe");
+
+    // -- 1. The per-site disabled cost: open-and-drop SPAN_BATCH inert
+    //       spans (plus an instant each) per iteration.
+    const SPAN_BATCH: usize = 1000;
+    assert!(!telemetry::enabled(), "bench must start with tracing off");
+    let span_batch_s = b
+        .bench("disabled_span_x1000", || {
+            for _ in 0..SPAN_BATCH {
+                let _t = telemetry::span("bench", "noop").arg("x", 1.0);
+                telemetry::instant_arg("bench", "noop", "x", 1.0);
+                black_box(());
+            }
+        })
+        .min;
+    // Per site: each loop pass crosses one span site and one instant site.
+    let site_ns_off = span_batch_s * 1e9 / (SPAN_BATCH * 2) as f64;
+    b.metric("disabled_site_ns", site_ns_off);
+
+    // -- 2. Hot-path latencies with tracing off (the shipped default).
+    let pool = WorkerPool::new(4);
+    let mut rng = XorShift::new(5);
+    let n = 1 << 14;
+    let a: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 0.99)).collect();
+    let bb: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let scan_off = b
+        .bench("sharded_scan_8chip_off", || {
+            black_box(sharded_mamba_scan_pooled(&a, &bb, 8, &pool));
+        })
+        .min;
+
+    let x: Vec<C64> = (0..4096)
+        .map(|_| C64::new(rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0)))
+        .collect();
+    let fft_off = b
+        .bench("sharded_fft_4chip_off", || {
+            black_box(sharded_bailey_fft_pooled(&x, 32, 4, BaileyVariant::Vector, &pool));
+        })
+        .min;
+
+    let u = vec![1.0f64; 4096];
+    let k = vec![0.5f64; 4096];
+    let conv_off = b
+        .bench("fft_conv_linear_off", || {
+            black_box(fft_conv_linear(&u, &k));
+        })
+        .min;
+
+    // -- 3. Count the telemetry sites each call crosses: run once with
+    //       tracing on and count what lands in the sink. Counter bumps
+    //       (always on) are charged at the same per-site bound.
+    let events_of = |f: &dyn Fn()| -> usize {
+        telemetry::drain();
+        telemetry::enable();
+        f();
+        telemetry::disable();
+        telemetry::drain().len()
+    };
+    let scan_sites = events_of(&|| {
+        black_box(sharded_mamba_scan_pooled(&a, &bb, 8, &pool));
+    });
+    let fft_sites = events_of(&|| {
+        black_box(sharded_bailey_fft_pooled(&x, 32, 4, BaileyVariant::Vector, &pool));
+    });
+    // Conv records no events but bumps the plan-cache hit/miss counter once
+    // per call; charge it one site.
+    let conv_sites = 1usize;
+
+    // -- 4. The gate: bounded share of each hot-path latency.
+    let share = |sites: usize, off_s: f64| sites as f64 * site_ns_off / (off_s * 1e9);
+    let shares = [
+        ("scan", scan_sites, share(scan_sites, scan_off)),
+        ("fft", fft_sites, share(fft_sites, fft_off)),
+        ("conv", conv_sites, share(conv_sites, conv_off)),
+    ];
+    for (name, sites, sh) in &shares {
+        b.metric(&format!("{name}_sites_per_call"), *sites as f64);
+        b.metric(&format!("{name}_overhead_share_off"), *sh);
+    }
+    b.metric("gate_max_overhead", GATE_MAX_OVERHEAD);
+
+    // -- 5. Informational: the same scan with tracing ON (not gated).
+    telemetry::enable();
+    let scan_on = b
+        .bench("sharded_scan_8chip_on", || {
+            black_box(sharded_mamba_scan_pooled(&a, &bb, 8, &pool));
+        })
+        .min;
+    let on_ratio = scan_on / scan_off;
+    telemetry::disable();
+    telemetry::drain();
+    b.metric("scan_on_over_off_ratio", on_ratio);
+
+    // Write BENCH_observe.json before any gate verdict so a failure still
+    // leaves the numbers on disk for the perf-trajectory artifact.
+    b.finish();
+
+    let worst = shares.iter().copied().fold(("", 0usize, 0.0f64), |acc, s| {
+        if s.2 > acc.2 {
+            s
+        } else {
+            acc
+        }
+    });
+    if worst.2 > GATE_MAX_OVERHEAD {
+        eprintln!(
+            "OBSERVABILITY OVERHEAD REGRESSION: disabled-mode telemetry costs {:.3}% of the \
+             `{}` hot path ({} sites × {:.1} ns/site) — gate is {:.0}%",
+            worst.2 * 100.0,
+            worst.0,
+            worst.1,
+            site_ns_off,
+            GATE_MAX_OVERHEAD * 100.0
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "observe gate OK: worst disabled-mode share {:.4}% on `{}` ({} sites, {:.1} ns/site, \
+         gate {:.0}%); tracing-on scan ratio {:.2}x (informational)",
+        worst.2 * 100.0,
+        worst.0,
+        worst.1,
+        site_ns_off,
+        GATE_MAX_OVERHEAD * 100.0,
+        on_ratio
+    );
+}

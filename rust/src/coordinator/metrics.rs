@@ -59,31 +59,61 @@ impl Metrics {
         self.batched_requests.fetch_add(n as u64, Ordering::Relaxed);
     }
 
+    /// Histogram quantile with sub-bucket linear interpolation: the target
+    /// rank is located in its log2 bucket [2^i, 2^{i+1}) and positioned
+    /// linearly within it, so tail quantiles move smoothly with load
+    /// instead of snapping to power-of-two bucket upper bounds.
     fn quantile_from(hist: &[AtomicU64; BUCKETS], q: f64) -> u64 {
         let counts: Vec<u64> = hist.iter().map(|c| c.load(Ordering::Relaxed)).collect();
         let total: u64 = counts.iter().sum();
         if total == 0 {
             return 0;
         }
-        let target = (q * total as f64).ceil() as u64;
-        let mut seen = 0;
-        for (i, c) in counts.iter().enumerate() {
-            seen += c;
-            if seen >= target {
-                return 1u64 << (i + 1);
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
             }
+            if seen + c >= target {
+                let lo = (1u64 << i) as f64;
+                let hi = (1u64 << (i + 1)) as f64;
+                let frac = (target - seen) as f64 / c as f64;
+                return (lo + frac * (hi - lo)).round() as u64;
+            }
+            seen += c;
         }
         1u64 << BUCKETS
     }
 
-    /// Request-latency quantile estimate (bucket upper bound).
+    /// Request-latency quantile estimate (interpolated within its bucket).
     pub fn latency_quantile_us(&self, q: f64) -> u64 {
         Self::quantile_from(&self.latency_us, q)
     }
 
-    /// Per-token latency quantile estimate (bucket upper bound).
+    /// Per-token latency quantile estimate (interpolated within its bucket).
     pub fn token_quantile_us(&self, q: f64) -> u64 {
         Self::quantile_from(&self.token_latency_us, q)
+    }
+
+    /// Request-latency p99 in microseconds.
+    pub fn latency_p99_us(&self) -> u64 {
+        self.latency_quantile_us(0.99)
+    }
+
+    /// Request-latency p999 in microseconds.
+    pub fn latency_p999_us(&self) -> u64 {
+        self.latency_quantile_us(0.999)
+    }
+
+    /// Per-token p99 in microseconds (continuous mode).
+    pub fn token_p99_us(&self) -> u64 {
+        self.token_quantile_us(0.99)
+    }
+
+    /// Per-token p999 in microseconds (continuous mode).
+    pub fn token_p999_us(&self) -> u64 {
+        self.token_quantile_us(0.999)
     }
 
     /// Mean per-token latency in microseconds (0.0 when no tokens yet).
@@ -108,20 +138,26 @@ impl Metrics {
     pub fn summary(&self) -> String {
         let resp = self.responses.load(Ordering::Relaxed);
         let mut s = format!(
-            "responses={resp} failures={} batches={} mean_batch={:.2} p50={}µs p95={}µs",
+            "responses={resp} failures={} batches={} mean_batch={:.2} \
+             p50={}µs p95={}µs p99={}µs p999={}µs",
             self.failures.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
             self.latency_quantile_us(0.50),
             self.latency_quantile_us(0.95),
+            self.latency_p99_us(),
+            self.latency_p999_us(),
         );
         let tokens = self.tokens.load(Ordering::Relaxed);
         if tokens > 0 {
             s.push_str(&format!(
-                " tokens={tokens} tok_mean={:.0}µs tok_p50={}µs tok_p95={}µs",
+                " tokens={tokens} tok_mean={:.0}µs tok_p50={}µs tok_p95={}µs \
+                 tok_p99={}µs tok_p999={}µs",
                 self.mean_token_us(),
                 self.token_quantile_us(0.50),
                 self.token_quantile_us(0.95),
+                self.token_p99_us(),
+                self.token_p999_us(),
             ));
         }
         s
@@ -153,6 +189,39 @@ mod tests {
     }
 
     #[test]
+    fn quantiles_interpolate_within_buckets() {
+        let m = Metrics::new();
+        // 100 samples spread across bucket 9 ([512, 1024) µs): the old
+        // upper-bound estimate pinned every quantile here to 1024.
+        for i in 0..100u64 {
+            m.record_response(Duration::ZERO, Duration::from_micros(512 + 5 * i));
+        }
+        let p25 = m.latency_quantile_us(0.25);
+        let p50 = m.latency_quantile_us(0.50);
+        let p99 = m.latency_p99_us();
+        assert!(
+            p25 < p50 && p50 < p99,
+            "interpolation must separate in-bucket quantiles: {p25} {p50} {p99}"
+        );
+        // Rank 50 of 100 sits exactly halfway into [512, 1024) → 768.
+        assert_eq!(p50, 768);
+        assert!(p99 < 1024);
+        assert_eq!(m.latency_p999_us(), m.latency_quantile_us(0.999));
+    }
+
+    #[test]
+    fn summary_reports_tail_quantiles() {
+        let m = Metrics::new();
+        m.record_response(Duration::ZERO, Duration::from_micros(100));
+        let s = m.summary();
+        assert!(s.contains("p99="), "summary must carry p99: {s}");
+        assert!(s.contains("p999="), "summary must carry p999: {s}");
+        m.record_token(Duration::ZERO, Duration::from_micros(10));
+        let s = m.summary();
+        assert!(s.contains("tok_p99=") && s.contains("tok_p999="), "{s}");
+    }
+
+    #[test]
     fn batch_occupancy() {
         let m = Metrics::new();
         m.record_batch(4);
@@ -178,7 +247,9 @@ mod tests {
         }
         assert_eq!(m.tokens.load(Ordering::Relaxed), 10);
         assert_eq!(m.responses.load(Ordering::Relaxed), 0, "tokens are not responses");
-        assert!(m.token_quantile_us(0.5) >= 200);
+        let p50 = m.token_quantile_us(0.5);
+        assert!((128..=256).contains(&p50), "p50={p50} must land in the samples' bucket");
+        assert!(m.token_p999_us() >= p50);
         assert!((m.mean_token_us() - 200.0).abs() < 1.0);
         assert!(m.summary().contains("tokens=10"));
         assert_eq!(m.latency_quantile_us(0.5), 0, "request histogram untouched");

@@ -197,11 +197,24 @@ impl Coordinator {
         let caches = cfg.continuous.map(|cc| {
             Arc::new(
                 (0..cc.chips.max(1))
-                    .map(|_| {
-                        Mutex::new(StateCache::new(
+                    .map(|chip| {
+                        let mut cache = StateCache::new(
                             MemoryBudget::new(cc.budget_bytes),
                             MemTech::Hbm3e,
-                        ))
+                        );
+                        // Route this cache's spill/restore instants onto a
+                        // per-chip trace track, regardless of which worker
+                        // thread happens to service the chip.
+                        let track = crate::telemetry::chip_track(chip);
+                        cache.set_track(track);
+                        if crate::telemetry::enabled() {
+                            crate::telemetry::name_track(
+                                crate::telemetry::PID_HOST,
+                                track,
+                                format!("chip {chip}"),
+                            );
+                        }
+                        Mutex::new(cache)
                     })
                     .collect::<Vec<_>>(),
             )
@@ -438,6 +451,12 @@ fn dispatcher_loop(
         // Launch everything that is ready.
         while let Some(b) = batcher.pop_ready(Instant::now()) {
             metrics.record_batch(b.requests.len());
+            crate::telemetry::instant_arg(
+                "coordinator",
+                "batch.cut",
+                "size",
+                b.requests.len() as f64,
+            );
             if let Err(e) = work_tx.send(WorkItem::Batch(b)) {
                 // Workers gone: the batch is lost; account for it so
                 // in-flight tracking cannot leak.
@@ -574,6 +593,7 @@ fn continuous_loop(
         // so clients unblock; their cached state is dropped).
         let expired = scheduler.lock().expect("scheduler lock").expire(Instant::now());
         for id in expired {
+            crate::telemetry::instant_arg("coordinator", "session.expire", "id", id as f64);
             side.remove(&id);
             caches[chip_of(id, chips)].lock().expect("state cache lock").remove(id);
             metrics.failures.fetch_add(1, Ordering::Relaxed);
@@ -588,6 +608,10 @@ fn continuous_loop(
             if steps.is_empty() {
                 break;
             }
+            // One span per scheduler wave on the dispatcher track; the
+            // per-chip cuts below show how the wave sharded.
+            let _wave =
+                crate::telemetry::span("coordinator", "sched.wave").arg("steps", steps.len() as f64);
             let mut tasks = Vec::with_capacity(steps.len());
             for s in steps {
                 let Some(entry) = side.get_mut(&s.id) else {
@@ -626,8 +650,14 @@ fn continuous_loop(
             for t in tasks {
                 per_chip.entry(t.chip).or_default().push(t);
             }
-            for (_chip, tasks) in per_chip {
+            for (chip, tasks) in per_chip {
                 metrics.record_batch(tasks.len());
+                crate::telemetry::instant_arg(
+                    "coordinator",
+                    "batch.cut",
+                    "chip",
+                    chip as f64,
+                );
                 outstanding += tasks.len();
                 if work_tx.send(WorkItem::Steps(StepBatch { tasks })).is_err() {
                     return; // workers gone
@@ -739,10 +769,13 @@ pub fn run_batch(exec: &mut dyn Executor, batch: Batch, metrics: &Metrics) {
     // pack is pure disjoint memcpy, so pooling is bit-identical); small
     // ones stay serial — thread spawn would dominate.
     const PAR_PACK_MIN_ELEMS: usize = 1 << 20;
+    let _batch_span = crate::telemetry::span("coordinator", "batch.run").arg("batch", n as f64);
     let launched = Instant::now();
     let mut packed = vec![0f32; slots * elems];
     let ok = batch.requests.iter().all(|(req, _)| req.input.len() == elems);
     if ok {
+        let _pack = crate::telemetry::span("coordinator", "batch.pack")
+            .arg("elems", (n * elems) as f64);
         if n > 1 && n * elems >= PAR_PACK_MIN_ELEMS {
             let pool = crate::runtime::WorkerPool::from_env();
             let mut slices: Vec<&mut [f32]> = packed[..n * elems].chunks_mut(elems).collect();
@@ -757,6 +790,7 @@ pub fn run_batch(exec: &mut dyn Executor, batch: Batch, metrics: &Metrics) {
     }
 
     let result = if ok {
+        let _exec = crate::telemetry::span("coordinator", "batch.execute").arg("batch", n as f64);
         exec.execute(model, &packed)
     } else {
         Err(anyhow!("request activation size != artifact slot size {elems}"))
@@ -812,6 +846,18 @@ fn run_steps(
         // out of range is a dispatcher bug — index loudly.
         let cache = &caches[task.chip];
         let queue_time = task.issued.elapsed();
+        // The exec span lives on the worker's own track (per-chip tracks
+        // carry only instants: concurrent same-chip work on two workers
+        // would break span nesting) and names the chip via an argument.
+        let _step = crate::telemetry::span(
+            "coordinator",
+            match task.phase {
+                Phase::Prefill => "step.prefill",
+                Phase::Decode => "step.decode",
+            },
+        )
+        .arg("chip", task.chip as f64)
+        .arg("queue_us", queue_time.as_secs_f64() * 1e6);
         let t0 = Instant::now();
         let result: Result<Vec<f32>> = match task.phase {
             Phase::Prefill => {

@@ -48,7 +48,8 @@ pub use decode::{
 pub use fusion::{fuse_graph, FusionPlan};
 pub use mapping::{map_graph, map_graph_plan, Allocation, MapFailure, Mapping, Section};
 pub use perf::{
-    estimate, estimate_fused, estimate_plan, estimate_unfused, Estimate, KernelEstimate,
+    estimate, estimate_fused, estimate_plan, estimate_unfused, Attribution, Estimate,
+    KernelEstimate,
 };
 pub use sweep::{
     fusion_gains, sweep_bandwidth, sweep_pcu_count, sweep_stages, sweep_table, SweepPoint,

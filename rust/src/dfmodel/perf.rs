@@ -38,8 +38,51 @@ pub struct Estimate {
     pub compute_seconds: f64,
     /// Memory component (graph I/O + weights at DRAM bandwidth).
     pub memory_seconds: f64,
+    /// Fabric-reconfiguration share of `compute_seconds` (launch-granularity
+    /// estimates only; 0 for the idealized whole-graph dataflow bound).
+    pub reconfig_seconds: f64,
     pub sections: usize,
     pub kernels: Vec<KernelEstimate>,
+}
+
+/// Where an estimate's modeled time goes — the cycle-attribution view the
+/// paper's Fig. 7/11 speedup claims rest on. Components are overlapping
+/// demand streams (dataflow execution takes their max, not their sum), so
+/// shares are reported against total demand.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Attribution {
+    /// Pipeline compute, excluding reconfiguration.
+    pub compute_seconds: f64,
+    /// Fabric reconfiguration between launches.
+    pub reconfig_seconds: f64,
+    /// DRAM round-trips: external I/O, weights, staged intermediates.
+    pub dram_seconds: f64,
+    /// Inter-chip exchange (0 for single-chip estimates; filled by
+    /// [`crate::shard::ShardedEstimate::attribution`]).
+    pub interchip_seconds: f64,
+}
+
+impl Attribution {
+    /// Total demand across all four streams.
+    pub fn demand_seconds(&self) -> f64 {
+        self.compute_seconds + self.reconfig_seconds + self.dram_seconds + self.interchip_seconds
+    }
+
+    /// One-line `compute/reconfig/dram/interchip` percentage breakdown.
+    pub fn summary(&self) -> String {
+        let d = self.demand_seconds();
+        if d <= 0.0 {
+            return "no demand".to_string();
+        }
+        format!(
+            "compute {:.1}% + reconfig {:.1}% + dram {:.1}% + interchip {:.1}% of {} demand",
+            100.0 * self.compute_seconds / d,
+            100.0 * self.reconfig_seconds / d,
+            100.0 * self.dram_seconds / d,
+            100.0 * self.interchip_seconds / d,
+            crate::util::fmt_time(d),
+        )
+    }
 }
 
 impl Estimate {
@@ -65,6 +108,18 @@ impl Estimate {
                 self.total_seconds * (k.seconds * k.pcus as f64) / total_demand;
         }
         m
+    }
+
+    /// Cycle attribution of this estimate: compute vs reconfiguration vs
+    /// DRAM round-trips (interchip stays 0 here — the sharded estimates
+    /// fill it in).
+    pub fn attribution(&self) -> Attribution {
+        Attribution {
+            compute_seconds: (self.compute_seconds - self.reconfig_seconds).max(0.0),
+            reconfig_seconds: self.reconfig_seconds,
+            dram_seconds: self.memory_seconds,
+            interchip_seconds: 0.0,
+        }
     }
 
     /// Latency attributed to a kernel-name predicate (e.g. the FFT share).
@@ -103,8 +158,17 @@ impl Estimate {
 /// assert!(baseline.bottleneck().contains("fft"));
 /// ```
 pub fn estimate(g: &Graph, cfg: &RduConfig) -> Result<Estimate, MapFailure> {
+    let _t = crate::telemetry::span("dfmodel", "dfmodel.estimate");
+    estimates_counter().fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     let mapping = map_graph(g, cfg)?;
     Ok(estimate_with_mapping(g, cfg, &mapping))
+}
+
+/// The `dfmodel.estimates` counter, resolved once.
+fn estimates_counter() -> &'static std::sync::atomic::AtomicU64 {
+    static CELL: std::sync::OnceLock<&'static std::sync::atomic::AtomicU64> =
+        std::sync::OnceLock::new();
+    CELL.get_or_init(|| crate::telemetry::counter("dfmodel.estimates"))
 }
 
 /// Estimate with a precomputed mapping (lets callers inspect the mapping).
@@ -148,6 +212,7 @@ pub fn estimate_with_mapping(g: &Graph, cfg: &RduConfig, mapping: &Mapping) -> E
         total_seconds,
         compute_seconds,
         memory_seconds,
+        reconfig_seconds: 0.0,
         sections: mapping.sections.len(),
         kernels,
     }
@@ -169,6 +234,8 @@ pub fn estimate_plan(
     cfg: &RduConfig,
     plan: &FusionPlan,
 ) -> Result<Estimate, MapFailure> {
+    let _t = crate::telemetry::span("dfmodel", "dfmodel.estimate_plan");
+    estimates_counter().fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     let mapping = map_graph_plan(g, cfg, &plan.clusters)?;
     let bw = cfg.spec.dram_bandwidth();
 
@@ -183,8 +250,8 @@ pub fn estimate_plan(
 
     // Compute: the sections run back-to-back, each paying one fabric
     // reconfiguration plus its pipeline interval.
-    let compute_seconds =
-        mapping.compute_seconds() + plan.launches() as f64 * reconfig_seconds(cfg);
+    let reconfig = plan.launches() as f64 * reconfig_seconds(cfg);
+    let compute_seconds = mapping.compute_seconds() + reconfig;
     let total_seconds = compute_seconds.max(memory_seconds);
 
     let mut kernels = Vec::with_capacity(g.kernels.len());
@@ -207,6 +274,7 @@ pub fn estimate_plan(
         total_seconds,
         compute_seconds,
         memory_seconds,
+        reconfig_seconds: reconfig,
         sections: mapping.sections.len(),
         kernels,
     })
@@ -385,6 +453,37 @@ mod tests {
             + 2.0 * g.intermediate_bytes())
             / cfg.spec.dram_bandwidth();
         assert!((u.memory_seconds - expect).abs() / expect < 1e-12);
+    }
+
+    #[test]
+    fn attribution_partitions_compute_and_charges_reconfig_only_on_launches() {
+        let dc = DecoderConfig::paper(1 << 14);
+        let g = hyena_decoder(&dc, BaileyVariant::Vector);
+        let cfg = RduConfig::fft_mode();
+
+        // Idealized estimate: no launches, so no reconfiguration share.
+        let ideal = estimate(&g, &cfg).unwrap();
+        let a = ideal.attribution();
+        assert_eq!(a.reconfig_seconds, 0.0);
+        assert_eq!(a.interchip_seconds, 0.0);
+        assert!((a.compute_seconds - ideal.compute_seconds).abs() < 1e-15);
+        assert!((a.dram_seconds - ideal.memory_seconds).abs() < 1e-15);
+
+        // Launch-granularity estimate: reconfiguration is a strict, separable
+        // component of the compute stream.
+        let unfused = estimate_unfused(&g, &cfg).unwrap();
+        let u = unfused.attribution();
+        assert!(u.reconfig_seconds > 0.0);
+        assert!(
+            (u.compute_seconds + u.reconfig_seconds - unfused.compute_seconds).abs()
+                / unfused.compute_seconds
+                < 1e-12
+        );
+        // Fusing reduces launches, so it must shrink the reconfig share.
+        let fused = estimate_fused(&g, &cfg).unwrap().attribution();
+        assert!(fused.reconfig_seconds < u.reconfig_seconds);
+        let line = u.summary();
+        assert!(line.contains("reconfig") && line.contains('%'), "{line}");
     }
 
     #[test]

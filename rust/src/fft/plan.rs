@@ -39,6 +39,8 @@ use crate::util::C64;
 use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::f64::consts::PI;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
 
 /// A reusable plan for N-point complex FFTs: bit-reversal table + twiddle
 /// table, both precomputed once. Methods take `&self`, so one plan can be
@@ -367,14 +369,38 @@ thread_local! {
         const { RefCell::new(BTreeMap::new()) };
 }
 
+/// The plan-cache hit/miss counters, resolved once so the steady-state
+/// cost on the conv hot path is a single relaxed `fetch_add`.
+fn plan_cache_counters() -> (&'static AtomicU64, &'static AtomicU64) {
+    static HITS: OnceLock<&'static AtomicU64> = OnceLock::new();
+    static MISSES: OnceLock<&'static AtomicU64> = OnceLock::new();
+    (
+        HITS.get_or_init(|| crate::telemetry::counter("fft.plan_cache.hits")),
+        MISSES.get_or_init(|| crate::telemetry::counter("fft.plan_cache.misses")),
+    )
+}
+
 /// Run `f` against this thread's cached [`ConvPlan`] for length `n`,
 /// building (and keeping) the plan on first use. This is what makes the
 /// drop-in wrappers `fft_conv_circular`/`fft_conv_linear` allocation-free
-/// in steady state without changing their signatures.
+/// in steady state without changing their signatures. Cache traffic shows
+/// up in the `fft.plan_cache.hits`/`fft.plan_cache.misses` counters
+/// (`--metrics`); note the cache is per-thread, so a fresh worker's first
+/// conv of each length is a miss.
 pub fn with_conv_plan<T>(n: usize, f: impl FnOnce(&mut ConvPlan) -> T) -> T {
     CONV_PLANS.with(|cell| {
         let mut plans = cell.borrow_mut();
-        let plan = plans.entry(n).or_insert_with(|| ConvPlan::new(n));
+        let (hits, misses) = plan_cache_counters();
+        let plan = match plans.entry(n) {
+            std::collections::btree_map::Entry::Occupied(e) => {
+                hits.fetch_add(1, Ordering::Relaxed);
+                e.into_mut()
+            }
+            std::collections::btree_map::Entry::Vacant(v) => {
+                misses.fetch_add(1, Ordering::Relaxed);
+                v.insert(ConvPlan::new(n))
+            }
+        };
         f(plan)
     })
 }

@@ -39,6 +39,10 @@
 //!   (inter-chip carry exchange) and sharded Bailey FFT (all-to-all
 //!   transpose), priced end-to-end through [`arch::interchip`] and the
 //!   sharded DFModel estimates (`--chips`, the `shard_scaling` bench).
+//! * [`telemetry`] — cycle-attribution observability: a zero-overhead-when-
+//!   disabled span recorder emitting Perfetto-loadable Chrome trace JSON
+//!   (per-thread and per-chip tracks), plus a counter registry with
+//!   text/JSON snapshots (`--trace`/`--metrics`, the `observe` bench gate).
 //! * [`util`], [`bench`] — offline-friendly infrastructure (PRNG, mini
 //!   property-test runner, CLI parsing, bench harness).
 //!
@@ -59,6 +63,7 @@ pub mod scan;
 pub mod session;
 pub mod shard;
 pub mod synth;
+pub mod telemetry;
 pub mod util;
 pub mod vga;
 pub mod workloads;

@@ -12,7 +12,7 @@
 //!                                --seq-lens L1,L2,… overrides the sweep
 //!   all                          every table and figure in order
 //!   simulate [--lanes N --stages M] [--chips P --seq-len L] [--fuse]
-//!            [--workload W1,W2,…]
+//!            [--workload W1,W2,…] [--trace FILE --metrics FILE]
 //!                                run the cycle-level PCU simulator demo and
 //!                                print each selected workload's golden-model
 //!                                self-check; with --fuse also run the fused
@@ -39,6 +39,7 @@
 //!                                (attention, hyena, mamba, ssd, s4)
 //!   serve [--artifacts DIR --requests N --workers W --max-batch B
 //!          --max-wait-ms MS --chips P --fuse --workload W1,W2,…]
+//!         [--trace FILE --metrics FILE]
 //!                                serve one-shot batched requests through
 //!                                the PJRT runtime (the E2E driver's
 //!                                engine); the closing model report prices
@@ -49,6 +50,7 @@
 //!                       --max-batch B --cache-mb M --layers L --d-state S
 //!                       --state-d-model D --fft-points P --chips P
 //!                       --session-timeout-ms MS --fuse]
+//!                      [--trace FILE --metrics FILE]
 //!                                continuous-batching session serving over
 //!                                the MockExecutor: N live sessions decode
 //!                                K tokens each through the SessionScheduler
@@ -58,6 +60,15 @@
 //!                                cache sized to its share of --cache-mb.
 //!                                Default budget is half the total state
 //!                                footprint so eviction is exercised.
+//!
+//! Observability (`simulate` and both `serve` forms): `--trace FILE` records
+//! the run as Chrome trace-event JSON — load it at <https://ui.perfetto.dev>
+//! for the host flame view (coordinator, scheduler waves, worker pool,
+//! per-chip spill/restore and exchange tracks) plus, under `simulate`, the
+//! pcusim per-cycle stage-occupancy timeline. `--metrics FILE` writes the
+//! structured counter registry and tail-latency quantiles as JSON. Tracing
+//! is off unless `--trace` is passed and costs ~one atomic load per site
+//! when off (CI gates this at ≤1%; see `rust/benches/observe.rs`).
 
 use ssm_rdu::arch::{InterchipLink, PcuGeometry, RduConfig};
 use ssm_rdu::coordinator::{
@@ -94,6 +105,66 @@ fn selected_workloads(args: &Args) -> Result<Vec<&'static dyn Workload>, i32> {
             })
             .collect(),
     }
+}
+
+/// Turn the trace recorder on when `--trace FILE` was passed. Must run
+/// before the instrumented work; off (the default) every span/instant site
+/// is a single relaxed atomic load.
+fn observability_begin(args: &Args) {
+    if args.get("trace").is_some() {
+        ssm_rdu::telemetry::enable();
+    }
+}
+
+/// Flush `--trace`/`--metrics` outputs if requested: stop recording, drain
+/// the thread-local buffers, append `extra_events` (e.g. the pcusim
+/// timeline), and write the Chrome trace JSON and the counter/quantile
+/// snapshot. Returns 1 if an output file could not be written, else 0.
+fn write_observability(
+    args: &Args,
+    extra_events: Vec<ssm_rdu::telemetry::TraceEvent>,
+    extra_metrics: &[(String, f64)],
+) -> i32 {
+    let mut code = 0;
+    if let Some(path) = args.get("trace") {
+        ssm_rdu::telemetry::disable();
+        let mut events = ssm_rdu::telemetry::drain();
+        events.extend(extra_events);
+        match ssm_rdu::telemetry::write_trace(std::path::Path::new(path), &events) {
+            Ok(()) => println!(
+                "wrote {} trace events to {path} (load in Perfetto: https://ui.perfetto.dev)",
+                events.len()
+            ),
+            Err(e) => {
+                eprintln!("cannot write trace file {path}: {e}");
+                code = 1;
+            }
+        }
+    }
+    if let Some(path) = args.get("metrics") {
+        match std::fs::write(path, ssm_rdu::telemetry::metrics_json(extra_metrics)) {
+            Ok(()) => println!("wrote metrics snapshot to {path}"),
+            Err(e) => {
+                eprintln!("cannot write metrics file {path}: {e}");
+                code = 1;
+            }
+        }
+    }
+    code
+}
+
+/// Tail-latency quantiles and batch shape for the `--metrics` snapshot.
+fn metrics_kv(m: &ssm_rdu::coordinator::Metrics) -> Vec<(String, f64)> {
+    vec![
+        ("latency_p50_us".into(), m.latency_quantile_us(0.5) as f64),
+        ("latency_p95_us".into(), m.latency_quantile_us(0.95) as f64),
+        ("latency_p99_us".into(), m.latency_p99_us() as f64),
+        ("latency_p999_us".into(), m.latency_p999_us() as f64),
+        ("token_p50_us".into(), m.token_quantile_us(0.5) as f64),
+        ("token_p99_us".into(), m.token_p99_us() as f64),
+        ("token_p999_us".into(), m.token_p999_us() as f64),
+        ("mean_batch".into(), m.mean_batch_size()),
+    ]
 }
 
 fn main() {
@@ -180,6 +251,7 @@ fn seq_lens(args: &Args) -> Vec<usize> {
 /// Demonstrate the PCU simulator: FFT and scan programs on baseline vs
 /// extended PCUs, printing regime, throughput and utilization.
 fn simulate(args: &Args) -> i32 {
+    observability_begin(args);
     let lanes = args.usize_or("lanes", 32);
     let stages = args.usize_or("stages", 12);
     let geom = PcuGeometry::new(lanes, stages);
@@ -236,7 +308,28 @@ fn simulate(args: &Args) -> i32 {
     if chips > 1 {
         shard_report(chips, args.usize_or("seq-len", 1 << 20), &wls);
     }
-    0
+
+    // With --trace: lay the pcusim per-cycle stage-occupancy timelines on
+    // the trace's pcusim process (1 trace µs = 1 modeled cycle) — the same
+    // programs the demo just ran, spatial vs serialized side by side.
+    let mut timeline = Vec::new();
+    if ssm_rdu::telemetry::enabled() {
+        let mut t = 0u64;
+        let mut lay = |pcu: &Pcu, prog: &pcusim::Program, vectors: usize| {
+            let evs = pcusim::stage_timeline(pcu, prog, vectors, t);
+            t = pcusim::timeline_cycles(&evs) + 16;
+            timeline.extend(evs);
+        };
+        lay(&Pcu::fft_mode(geom), &prog, 64);
+        lay(&Pcu::baseline(geom), &prog, 8);
+        lay(&Pcu::hs_scan_mode(geom), &scan, 64);
+        if args.flag("fuse") {
+            let h: Vec<C64> = (0..lanes).map(|i| C64::real(1.0 / (i + 1) as f64)).collect();
+            let fused = pcusim::fused_conv_program(lanes, &h);
+            lay(&Pcu::fft_mode(geom), &fused, 64);
+        }
+    }
+    write_observability(args, timeline, &[])
 }
 
 /// `simulate --fuse`: prove the fused pipelines bit-identical to their
@@ -483,6 +576,7 @@ fn serve(args: &Args) -> i32 {
     if args.flag("continuous") {
         return serve_continuous(args);
     }
+    observability_begin(args);
     let dir = args
         .get("artifacts")
         .map(std::path::PathBuf::from)
@@ -546,6 +640,7 @@ fn serve(args: &Args) -> i32 {
         ok as f64 / wall.as_secs_f64(),
         coord.metrics.summary()
     );
+    let kv = metrics_kv(&coord.metrics);
     coord.shutdown();
 
     // Tie the serving stack back to the paper's performance model: print the
@@ -567,6 +662,7 @@ fn serve(args: &Args) -> i32 {
                 manifest.seq_len,
                 fmt_time(est.total_seconds)
             );
+            println!("  cycle attribution: {}", est.attribution().summary());
         }
         if args.flag("fuse") {
             if let (Ok(f), Ok(u)) = (
@@ -609,15 +705,17 @@ fn serve(args: &Args) -> i32 {
                     fmt_time(s.total_seconds),
                     s.comm_share() * 100.0,
                 );
+                println!("  cycle attribution: {}", s.attribution().summary());
             }
         }
     }
-    0
+    write_observability(args, Vec::new(), &kv)
 }
 
 /// `serve --continuous`: N live sessions stream K tokens each through the
 /// session subsystem (scheduler + state cache) over the worker pool.
 fn serve_continuous(args: &Args) -> i32 {
+    observability_begin(args);
     let sessions = args.usize_or("sessions", 96);
     let decode_steps = args.usize_or("decode-steps", 32);
     let chips = args.usize_or("chips", 1).max(1);
@@ -735,10 +833,14 @@ fn serve_continuous(args: &Args) -> i32 {
         if let Some(per_chip) = coord.chip_cache_stats() {
             for (chip, cs) in per_chip.iter().enumerate() {
                 println!(
-                    "  chip {chip}: hits={} misses={} evictions={} peak_resident={:.1} KiB",
+                    "  chip {chip}: hits={} misses={} evictions={} restores={} \
+                     spilled={:.1} KiB restored={:.1} KiB peak_resident={:.1} KiB",
                     cs.hits,
                     cs.misses,
                     cs.evictions,
+                    cs.restores,
+                    cs.spilled_bytes as f64 / 1024.0,
+                    cs.restored_bytes as f64 / 1024.0,
                     cs.peak_resident_bytes as f64 / 1024.0,
                 );
             }
@@ -805,9 +907,11 @@ fn serve_continuous(args: &Args) -> i32 {
             );
         }
     }
+    let kv = metrics_kv(&coord.metrics);
     coord.shutdown();
+    let obs = write_observability(args, Vec::new(), &kv);
     if complete == sessions {
-        0
+        obs
     } else {
         1
     }

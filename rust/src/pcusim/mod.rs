@@ -19,6 +19,8 @@
 //! * [`utilization`] — the measured steady-state factors DFModel consumes.
 //! * [`noc`] — chip-grid placement, hop counts, fill latency and link
 //!   bandwidth audit of mapped sections.
+//! * [`timeline`] — per-cycle stage-occupancy export as trace events
+//!   (`simulate --trace`): the pipeline flame view of a fused PCU program.
 //!
 //! **Spatial vs serialized, and what DFModel does with it.** A program maps
 //! *spatially* (one pipeline stage per FU level, initiation interval → 1)
@@ -35,6 +37,7 @@ pub mod engine;
 pub mod noc;
 pub mod program;
 pub mod programs;
+pub mod timeline;
 pub mod topology;
 pub mod utilization;
 
@@ -44,4 +47,5 @@ pub use programs::{
     b_scan_program, bit_reverse, dif_fft_program, fft_program, freq_filter_program,
     fused_conv_program, hs_scan_program, idit_fft_program, unfused_conv_programs,
 };
+pub use timeline::{stage_timeline, timeline_cycles};
 pub use utilization::Measurement;

@@ -1,0 +1,151 @@
+//! Per-cycle stage-occupancy timeline of a PCU program — the modeled-cycle
+//! flame view of the pipeline.
+//!
+//! [`stage_timeline`] renders how a program occupies a PCU's pipeline
+//! stages over modeled cycles, as trace events on the [`PID_PCUSIM`]
+//! process where **one trace microsecond is one modeled cycle**:
+//!
+//! * **Spatial** (the program's mode is carried by the fabric): stage `s`
+//!   processes vector `v` at cycle `s + v`, so each stage renders one span
+//!   starting at cycle `s` and busy for `vectors` cycles — the classic
+//!   skewed-pipeline parallelogram. Unused trailing stages forward data as
+//!   `pass` spans; a fused program fills them with useful work, which is
+//!   exactly what the flame view is for.
+//! * **Serialized** (baseline fabric, §III-B): every level re-executes on
+//!   stage 0, one level per cycle per vector — the timeline shows the
+//!   1/stages throughput collapse as a single saturated track.
+//!
+//! Exported by `simulate --trace`; the cycle math mirrors
+//! [`Pcu::run_spatial`] / [`Pcu::run_serialized`] and is pinned to their
+//! `ExecStats.cycles` by the unit tests.
+
+use super::engine::Pcu;
+use super::program::Program;
+use crate::telemetry::{name_track, EventKind, TraceEvent, PID_PCUSIM};
+use std::borrow::Cow;
+
+/// Nanoseconds per modeled cycle: 1 cycle renders as 1 µs in the trace.
+const CYCLE_NS: u64 = 1_000;
+
+/// Cap on serialized (vector × level) event counts, so a huge batch cannot
+/// balloon the trace file; spatial timelines are one event per stage and
+/// never truncate. Callers wanting the full picture pass fewer vectors.
+const MAX_SERIALIZED_EVENTS: usize = 4096;
+
+/// Render `prog` executing `vectors` input vectors on `pcu` as trace
+/// events, starting at modeled cycle `t0_cycles` (use an offset to lay
+/// several program timelines side by side on the pcusim process).
+pub fn stage_timeline(pcu: &Pcu, prog: &Program, vectors: usize, t0_cycles: u64) -> Vec<TraceEvent> {
+    let v = vectors.max(1) as u64;
+    let levels = prog.levels.len().max(1);
+    let mut out = Vec::new();
+    let ev = |name: String, tid: u64, ts_cycles: u64, dur_cycles: u64, ops: f64| TraceEvent {
+        name: Cow::Owned(name),
+        cat: "pcusim",
+        kind: EventKind::Span,
+        pid: PID_PCUSIM,
+        tid,
+        ts_ns: ts_cycles * CYCLE_NS,
+        dur_ns: dur_cycles * CYCLE_NS,
+        args: [Some(("useful_ops", ops)), None],
+    };
+    if pcu.mappable(prog).is_ok() {
+        // Spatial: stage s starts at cycle s, busy for `vectors` cycles.
+        for (s, level) in prog.levels.iter().enumerate() {
+            name_track(PID_PCUSIM, s as u64, format!("stage {s}"));
+            out.push(ev(
+                format!("{}: L{s}", prog.name),
+                s as u64,
+                t0_cycles + s as u64,
+                v,
+                level.useful_ops() as f64,
+            ));
+        }
+        // Trailing stages forward data until the pipeline drains.
+        for s in prog.levels.len()..pcu.geom.stages {
+            name_track(PID_PCUSIM, s as u64, format!("stage {s}"));
+            out.push(ev(format!("{}: pass", prog.name), s as u64, t0_cycles + s as u64, v, 0.0));
+        }
+    } else {
+        // Serialized: every level re-executes on stage 0, one cycle each.
+        name_track(PID_PCUSIM, 0, "stage 0".to_string());
+        let max_vectors = (MAX_SERIALIZED_EVENTS / levels).max(1) as u64;
+        for vec_i in 0..v.min(max_vectors) {
+            for (li, level) in prog.levels.iter().enumerate() {
+                out.push(ev(
+                    format!("{}: v{vec_i} L{li}", prog.name),
+                    0,
+                    t0_cycles + vec_i * levels as u64 + li as u64,
+                    1,
+                    level.useful_ops() as f64,
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Modeled cycles the timeline spans (the offset for the next program laid
+/// on the same tracks): matches `ExecStats.cycles` of the corresponding
+/// `run_*` driver when nothing was truncated.
+pub fn timeline_cycles(events: &[TraceEvent]) -> u64 {
+    events.iter().map(|e| (e.ts_ns + e.dur_ns) / CYCLE_NS).max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::PcuGeometry;
+    use crate::pcusim::programs::fft_program;
+    use crate::util::C64;
+
+    #[test]
+    fn spatial_timeline_is_one_span_per_stage_and_matches_exec_cycles() {
+        let geom = PcuGeometry::new(8, 8);
+        let prog = fft_program(8);
+        let pcu = Pcu::fft_mode(geom);
+        assert!(pcu.mappable(&prog).is_ok(), "fft program must map on fft-mode");
+        let vectors = 16usize;
+        let evs = stage_timeline(&pcu, &prog, vectors, 0);
+        assert_eq!(evs.len(), geom.stages, "one span per pipeline stage");
+        for (s, e) in evs.iter().take(prog.levels.len()).enumerate() {
+            assert_eq!(e.tid, s as u64);
+            assert_eq!(e.ts_ns, s as u64 * 1_000, "stage {s} starts at cycle {s}");
+            assert_eq!(e.dur_ns, vectors as u64 * 1_000, "busy for one cycle per vector");
+        }
+        // Total modeled cycles match the execution engine's count.
+        let inputs: Vec<Vec<C64>> = vec![vec![C64::real(1.0); 8]; vectors];
+        let (_, stats) = pcu.run(&prog, &inputs);
+        assert!(stats.spatial);
+        assert_eq!(timeline_cycles(&evs), stats.cycles);
+    }
+
+    #[test]
+    fn serialized_timeline_saturates_stage_zero() {
+        let geom = PcuGeometry::new(8, 8);
+        let prog = fft_program(8);
+        let pcu = Pcu::baseline(geom);
+        assert!(pcu.mappable(&prog).is_err(), "fft program serializes on baseline");
+        let vectors = 4usize;
+        let evs = stage_timeline(&pcu, &prog, vectors, 0);
+        assert_eq!(evs.len(), vectors * prog.levels.len(), "one event per vector × level");
+        assert!(evs.iter().all(|e| e.tid == 0), "everything on stage 0");
+        assert!(evs.iter().all(|e| e.dur_ns == 1_000), "one cycle each");
+        // Back-to-back: cycle k hosts exactly one event.
+        let mut starts: Vec<u64> = evs.iter().map(|e| e.ts_ns / 1_000).collect();
+        starts.sort_unstable();
+        let want: Vec<u64> = (0..(vectors * prog.levels.len()) as u64).collect();
+        assert_eq!(starts, want);
+    }
+
+    #[test]
+    fn offset_shifts_and_truncation_caps_events() {
+        let geom = PcuGeometry::new(8, 8);
+        let prog = fft_program(8);
+        let pcu = Pcu::baseline(geom);
+        let evs = stage_timeline(&pcu, &prog, 2, 100);
+        assert!(evs.iter().all(|e| e.ts_ns >= 100 * 1_000));
+        let huge = stage_timeline(&pcu, &prog, 1 << 20, 0);
+        assert!(huge.len() <= MAX_SERIALIZED_EVENTS, "serialized export must stay bounded");
+    }
+}

@@ -72,6 +72,8 @@ impl WorkerPool {
         T: Send,
         F: Fn(usize) -> T + Sync,
     {
+        let _t = crate::telemetry::span("pool", "pool.map").arg("jobs", jobs as f64);
+        pool_maps_counter().fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         if self.threads == 1 || jobs <= 1 {
             return (0..jobs).map(f).collect();
         }
@@ -83,7 +85,11 @@ impl WorkerPool {
                 .map(|r| {
                     let f = &f;
                     let r = r.clone();
-                    s.spawn(move || r.map(f).collect::<Vec<T>>())
+                    s.spawn(move || {
+                        let _c =
+                            crate::telemetry::span("pool", "pool.chunk").arg("len", r.len() as f64);
+                        r.map(f).collect::<Vec<T>>()
+                    })
                 })
                 .collect();
             for h in handles {
@@ -103,6 +109,8 @@ impl WorkerPool {
         F: Fn(usize, &mut T) + Sync,
     {
         let n = items.len();
+        let _t = crate::telemetry::span("pool", "pool.for_each_mut").arg("items", n as f64);
+        pool_maps_counter().fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         if self.threads == 1 || n <= 1 {
             for (i, it) in items.iter_mut().enumerate() {
                 f(i, it);
@@ -119,6 +127,7 @@ impl WorkerPool {
                 rest = tail;
                 let f = &f;
                 s.spawn(move || {
+                    let _c = crate::telemetry::span("pool", "pool.chunk").arg("len", len as f64);
                     for (j, it) in head.iter_mut().enumerate() {
                         f(base + j, it);
                     }
@@ -127,6 +136,13 @@ impl WorkerPool {
             }
         });
     }
+}
+
+/// The `pool.dispatches` counter (map + for_each_mut calls), resolved once
+/// so the hot path pays only the relaxed add.
+fn pool_maps_counter() -> &'static std::sync::atomic::AtomicU64 {
+    static CELL: OnceLock<&'static std::sync::atomic::AtomicU64> = OnceLock::new();
+    CELL.get_or_init(|| crate::telemetry::counter("pool.dispatches"))
 }
 
 /// Balanced contiguous partition of `0..n` into at most `parts` non-empty

@@ -83,6 +83,9 @@ pub struct StateCache {
     resident: BTreeMap<SessionId, Resident>,
     spilled: BTreeMap<SessionId, SsmState>,
     tick: u64,
+    /// Trace track spill/restore instants land on (a per-chip track for the
+    /// coordinator's sharded caches; `None` → the calling thread's track).
+    track: Option<u64>,
     pub stats: CacheStats,
 }
 
@@ -94,8 +97,17 @@ impl StateCache {
             resident: BTreeMap::new(),
             spilled: BTreeMap::new(),
             tick: 0,
+            track: None,
             stats: CacheStats::default(),
         }
+    }
+
+    /// Route this cache's trace instants to an explicit track — the
+    /// coordinator points chip `c`'s cache at
+    /// [`crate::telemetry::chip_track`]`(c)` so spill/restore traffic is
+    /// attributable per chip in the timeline.
+    pub fn set_track(&mut self, track: u64) {
+        self.track = Some(track);
     }
 
     /// Convenience: a byte budget with the paper's HBM3e spill path.
@@ -167,6 +179,7 @@ impl StateCache {
             self.stats.restores += 1;
             self.stats.restored_bytes += bytes as u64;
             self.stats.spill_seconds += spill_seconds(bytes, self.dram);
+            self.mark("cache.restore", bytes);
             return Some(s);
         }
         None
@@ -202,7 +215,20 @@ impl StateCache {
         self.stats.evictions += 1;
         self.stats.spilled_bytes += bytes as u64;
         self.stats.spill_seconds += spill_seconds(bytes, self.dram);
+        self.mark("cache.spill", bytes);
         self.spilled.insert(id, state);
+    }
+
+    /// Emit a spill/restore instant on this cache's track (no-op when
+    /// tracing is disabled).
+    fn mark(&self, name: &'static str, bytes: usize) {
+        if !crate::telemetry::enabled() {
+            return;
+        }
+        match self.track {
+            Some(tid) => crate::telemetry::instant_on("session", name, tid, "bytes", bytes as f64),
+            None => crate::telemetry::instant_arg("session", name, "bytes", bytes as f64),
+        }
     }
 }
 

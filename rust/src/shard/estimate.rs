@@ -49,6 +49,14 @@ impl ShardedEstimate {
         }
         self.comm_seconds / self.total_seconds
     }
+
+    /// Cycle attribution of the sharded estimate: the per-chip breakdown
+    /// (compute / reconfig / DRAM) with the inter-chip exchange filled in.
+    pub fn attribution(&self) -> crate::dfmodel::Attribution {
+        let mut a = self.per_chip.attribution();
+        a.interchip_seconds = self.comm_seconds;
+        a
+    }
 }
 
 /// One row of a strong-scaling sweep.
@@ -352,6 +360,20 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn attribution_carries_the_interchip_term() {
+        let link = InterchipLink::rdu_fabric();
+        let s = sharded_estimate(ModelKind::Hyena, &dc(), 8, &RduConfig::fft_mode(), &link)
+            .unwrap();
+        let a = s.attribution();
+        assert_eq!(a.interchip_seconds, s.comm_seconds);
+        assert!(a.interchip_seconds > 0.0);
+        let per_chip = s.per_chip.attribution();
+        assert_eq!(a.compute_seconds, per_chip.compute_seconds);
+        assert_eq!(a.dram_seconds, per_chip.dram_seconds);
+        assert!(a.summary().contains("interchip"));
     }
 
     #[test]

@@ -119,19 +119,44 @@ fn run_sharded(
     // FFTs (x[n1·C + n2], the 4-step decimation) plus the twiddle scaling
     // T[n2, k1] *= e^{-2πi·n2·k1/L}, all chip-local.
     let cols_per_chip = c / chips;
-    let cols: Vec<Vec<C64>> = pool
-        .map(chips, |p| {
+    let cols: Vec<Vec<C64>> = {
+        let _t = crate::telemetry::span("shard", "fft.columns").arg("chips", chips as f64);
+        pool.map(chips, |p| {
             chip_columns(x, r, c, p * cols_per_chip..(p + 1) * cols_per_chip, variant)
         })
-        .concat();
+        .concat()
+    };
 
     // Phase 2 — the all-to-all transpose: chip p needs row k1 ∈
     // [p·R/P, (p+1)·R/P) of a matrix whose columns live across all chips.
     // (In this functional model the gather is just indexing; the
     // interconnect model prices the (P−1)/P of the matrix that crosses
     // chip boundaries.)
+    {
+        let wire = transpose_bytes(l, chips, 16.0);
+        let _t = crate::telemetry::span("shard", "fft.transpose").arg("bytes", wire);
+        if crate::telemetry::enabled() {
+            for p in 0..chips {
+                let track = crate::telemetry::chip_track(p);
+                crate::telemetry::name_track(
+                    crate::telemetry::PID_HOST,
+                    track,
+                    format!("chip {p}"),
+                );
+                crate::telemetry::instant_on(
+                    "shard",
+                    "fft.transpose",
+                    track,
+                    "bytes",
+                    wire / chips as f64,
+                );
+            }
+        }
+    }
+
     // Phase 3 — chip p: length-C row FFTs through the single-chip Bailey
     // tiling, scattered to the standard 4-step output order X[k1 + R·k2].
+    let _t = crate::telemetry::span("shard", "fft.rows").arg("chips", chips as f64);
     let rows_per_chip = r / chips;
     let rows: Vec<Vec<(usize, Vec<C64>)>> = pool.map(chips, |p| {
         chip_rows(&cols, r, c, p * rows_per_chip..(p + 1) * rows_per_chip, variant)

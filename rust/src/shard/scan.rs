@@ -77,8 +77,22 @@ fn locals_and_carries(
     assert_eq!(a.len(), b.len(), "sharded_mamba_scan: a/b length mismatch");
     assert!(chips >= 1, "sharded_mamba_scan: need at least one chip");
     let ranges = shard_ranges(a.len(), chips);
-    let locals: Vec<Vec<LinStep>> = pool.map(chips, |p| local_scan(a, b, &ranges[p]));
-    let carry_in = exclusive_carries(&locals);
+    let locals: Vec<Vec<LinStep>> = {
+        let _t = crate::telemetry::span("shard", "scan.local").arg("chips", chips as f64);
+        pool.map(chips, |p| local_scan(a, b, &ranges[p]))
+    };
+    let carry_in = {
+        let _t = crate::telemetry::span("shard", "scan.carry_exchange").arg("chips", chips as f64);
+        exclusive_carries(&locals)
+    };
+    // Per-chip attribution: mark each chip's carry-in arrival on its track.
+    if crate::telemetry::enabled() {
+        for (p, c) in carry_in.iter().enumerate() {
+            let track = crate::telemetry::chip_track(p);
+            crate::telemetry::name_track(crate::telemetry::PID_HOST, track, format!("chip {p}"));
+            crate::telemetry::instant_on("shard", "scan.carry_in", track, "carry_b", c.b);
+        }
+    }
     (locals, carry_in)
 }
 
@@ -111,6 +125,7 @@ pub fn sharded_mamba_scan_pooled(
     pool: &WorkerPool,
 ) -> Vec<f64> {
     let (locals, carry_in) = locals_and_carries(a, b, chips, pool);
+    let _t = crate::telemetry::span("shard", "scan.apply").arg("chips", chips as f64);
     let outs: Vec<Vec<f64>> = pool.map(locals.len(), |p| {
         let h_in = carry_in[p].b;
         locals[p].iter().map(|s| s.a * h_in + s.b).collect()
@@ -161,6 +176,7 @@ pub fn carry_exchange_bytes(channels: usize, dtype_bytes: f64) -> f64 {
 pub fn sharded_ssd_scan(a: &[f64], b: &[f64], chips: usize, q: usize) -> Vec<f64> {
     assert_eq!(a.len(), b.len(), "sharded_ssd_scan: a/b length mismatch");
     assert!(chips >= 1, "sharded_ssd_scan: need at least one chip");
+    let _t = crate::telemetry::span("shard", "scan.ssd").arg("chips", chips as f64);
     let mut out = Vec::with_capacity(a.len());
     let mut carry = 0.0;
     for r in shard_ranges(a.len(), chips) {

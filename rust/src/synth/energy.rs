@@ -103,6 +103,7 @@ mod tests {
             total_seconds: 0.0,
             compute_seconds: 0.0,
             memory_seconds: 0.0,
+            reconfig_seconds: 0.0,
             sections: 1,
             kernels: vec![],
         };

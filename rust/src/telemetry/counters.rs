@@ -1,0 +1,121 @@
+//! Process-wide named monotonic counters with snapshot exporters.
+//!
+//! Counters are always on: an increment is one relaxed `fetch_add`, cheap
+//! enough to leave enabled everywhere. Registration goes through a locked
+//! registry, so hot call sites resolve their counter once (cache the
+//! `&'static AtomicU64` in a `OnceLock`) and pay only the atomic add in
+//! steady state — see [`crate::fft::plan::with_conv_plan`] for the idiom.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+fn registry() -> &'static Mutex<BTreeMap<&'static str, &'static AtomicU64>> {
+    static REG: OnceLock<Mutex<BTreeMap<&'static str, &'static AtomicU64>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Look up (registering on first use) the counter named `name`. The
+/// returned reference is `'static`: resolve once, increment forever.
+pub fn counter(name: &'static str) -> &'static AtomicU64 {
+    let mut reg = registry().lock().expect("counter registry lock");
+    reg.entry(name).or_insert_with(|| Box::leak(Box::new(AtomicU64::new(0))))
+}
+
+/// Current value of every registered counter, sorted by name.
+pub fn snapshot() -> Vec<(&'static str, u64)> {
+    let reg = registry().lock().expect("counter registry lock");
+    reg.iter().map(|(name, c)| (*name, c.load(Ordering::Relaxed))).collect()
+}
+
+/// Plain-text export: one `name value` line per counter.
+pub fn snapshot_text() -> String {
+    let mut out = String::new();
+    for (name, value) in snapshot() {
+        out.push_str(&format!("{name} {value}\n"));
+    }
+    out
+}
+
+/// JSON metrics document: every registered counter under `"counters"`,
+/// plus caller-supplied scalar gauges (quantiles, cache totals, ...)
+/// under `"metrics"`. Backs the CLI's `--metrics <file>` flag; parses
+/// with [`crate::util::json::Json`].
+pub fn metrics_json(extra: &[(String, f64)]) -> String {
+    let mut out = String::from("{\n  \"schema\": \"ssm-rdu-metrics-v1\",\n  \"counters\": {");
+    let counters = snapshot();
+    for (i, (name, value)) in counters.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("\n    \"{name}\": {value}"));
+    }
+    if !counters.is_empty() {
+        out.push_str("\n  ");
+    }
+    out.push_str("},\n  \"metrics\": {");
+    for (i, (name, value)) in extra.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if value.is_finite() {
+            out.push_str(&format!("\n    \"{name}\": {value}"));
+        } else {
+            out.push_str(&format!("\n    \"{name}\": null"));
+        }
+    }
+    if !extra.is_empty() {
+        out.push_str("\n  ");
+    }
+    out.push_str("}\n}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn counters_register_and_accumulate() {
+        let c = counter("test.counters.alpha");
+        let before = c.load(Ordering::Relaxed);
+        c.fetch_add(3, Ordering::Relaxed);
+        assert_eq!(counter("test.counters.alpha").load(Ordering::Relaxed), before + 3);
+        // Same name, same cell.
+        assert!(std::ptr::eq(c, counter("test.counters.alpha")));
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_text_lists_every_counter() {
+        counter("test.counters.a").fetch_add(1, Ordering::Relaxed);
+        counter("test.counters.b").fetch_add(2, Ordering::Relaxed);
+        let snap = snapshot();
+        let names: Vec<&str> = snap.iter().map(|(n, _)| *n).collect();
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        assert_eq!(names, sorted);
+        let text = snapshot_text();
+        assert!(text.lines().any(|l| l.starts_with("test.counters.a ")));
+    }
+
+    #[test]
+    fn metrics_json_parses_and_carries_extras() {
+        counter("test.counters.json").fetch_add(7, Ordering::Relaxed);
+        let doc = metrics_json(&[("latency_p99_us".to_string(), 123.5), ("bad".to_string(), f64::NAN)]);
+        let j = Json::parse(&doc).expect("metrics JSON must parse");
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some("ssm-rdu-metrics-v1"));
+        let counters = j.get("counters").expect("counters object");
+        assert!(counters.get("test.counters.json").and_then(Json::as_f64).unwrap_or(0.0) >= 7.0);
+        let metrics = j.get("metrics").expect("metrics object");
+        assert_eq!(metrics.get("latency_p99_us").and_then(Json::as_f64), Some(123.5));
+        assert_eq!(metrics.get("bad"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn empty_registry_sections_are_valid_json() {
+        // Even with no extras the document must parse.
+        let j = Json::parse(&metrics_json(&[])).expect("parse");
+        assert!(j.get("metrics").is_some());
+    }
+}

@@ -1,0 +1,42 @@
+//! Cycle-attribution telemetry: tracing spans, counters, and Perfetto
+//! timelines.
+//!
+//! The paper's headline numbers are *attribution* claims — they come from
+//! knowing exactly where cycles go (FFT stages vs scan recurrence vs
+//! reconfiguration vs DRAM round-trips). This module is the measurement
+//! half of that discipline for the host stack:
+//!
+//! * [`trace`] — a lock-cheap span/event recorder. Call sites pay one
+//!   relaxed atomic load when tracing is disabled (no clock read, no
+//!   allocation); when enabled, events accumulate in thread-local buffers
+//!   and flush to a global sink in batches. [`trace::drain`] returns the
+//!   recorded events and [`trace::trace_json`] serializes them as Chrome
+//!   trace-event JSON, loadable directly in Perfetto (`ui.perfetto.dev`).
+//! * [`counters`] — a process-wide registry of named monotonic counters
+//!   (always on; one relaxed `fetch_add` per increment) with text and JSON
+//!   snapshot exporters backing the CLI's `--metrics` flag.
+//!
+//! **Overhead contract.** Instrumentation must stay under 1% of hot-path
+//! time with tracing disabled — the paper's own "<1% profiling overhead"
+//! bar. `benches/observe.rs` measures the disabled-mode cost per call site
+//! against the PR-4 hot-path kernels and fails CI (`BENCH_observe.json`
+//! gate) if the bound is exceeded.
+//!
+//! **Track layout.** Host spans land on the recording thread's own track
+//! (`pid` [`PID_HOST`], one `tid` per OS thread, named after the thread).
+//! Per-chip state — cache spills/restores, carry and transpose exchange
+//! markers — is emitted as *instant* events on dedicated chip tracks
+//! ([`chip_track`]), because several batches for one chip can execute
+//! concurrently on different workers and duration spans on a shared chip
+//! track would overlap non-nestedly. Modeled PCU pipeline timelines
+//! ([`crate::pcusim::stage_timeline`]) use their own process
+//! ([`PID_PCUSIM`]) where one trace microsecond renders one modeled cycle.
+
+pub mod counters;
+pub mod trace;
+
+pub use counters::{counter, metrics_json, snapshot, snapshot_text};
+pub use trace::{
+    chip_track, disable, drain, enable, enabled, instant, instant_arg, instant_on, name_track,
+    span, trace_json, write_trace, EventKind, SpanGuard, TraceEvent, PID_HOST, PID_PCUSIM,
+};

@@ -1,0 +1,535 @@
+//! Lock-cheap span/event recorder emitting Chrome trace-event JSON.
+//!
+//! Design (see the module docs in [`crate::telemetry`] for the track
+//! layout and overhead contract):
+//!
+//! * A single process-global `AtomicBool` gates everything. Disabled call
+//!   sites pay one relaxed load and a branch — no clock read, no
+//!   allocation, no lock.
+//! * Timestamps are nanoseconds from a lazily-pinned monotonic epoch
+//!   (`Instant`), so traces from all threads share one clock.
+//! * Events buffer in a thread-local `Vec` and flush to the global sink
+//!   when the buffer fills, when the thread exits (via the buffer's `Drop`
+//!   — scoped worker threads flush before `thread::scope` returns), or on
+//!   [`drain`].
+//! * Span names are `&'static str` in the hot recorder (zero allocation);
+//!   only offline exports like [`crate::pcusim::stage_timeline`] build
+//!   owned names, which `Cow` carries without taxing the hot path.
+
+use std::borrow::Cow;
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Process id of host (wall-time) tracks in the emitted trace.
+pub const PID_HOST: u32 = 0;
+/// Process id of modeled-cycle tracks (pcusim timelines: 1 µs = 1 cycle).
+pub const PID_PCUSIM: u32 = 1;
+
+/// Chip tracks live far above any plausible thread id so the two ranges
+/// can never collide.
+const CHIP_TRACK_BASE: u64 = 1 << 32;
+
+/// The per-chip track id for instant events (cache spill/restore, carry
+/// and transpose exchange markers) attributed to `chip`.
+pub fn chip_track(chip: usize) -> u64 {
+    CHIP_TRACK_BASE + chip as u64
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is tracing currently enabled? One relaxed load — this is the whole
+/// disabled-mode cost of every instrumentation point.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn the recorder on. Pins the trace epoch on first call so all
+/// subsequent timestamps are relative to it.
+pub fn enable() {
+    epoch();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn the recorder off. Already-buffered events stay until [`drain`].
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+#[inline]
+fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// How an event renders in the trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A duration span (`ph:"X"`): has a start and a length.
+    Span,
+    /// A point-in-time marker (`ph:"i"`, thread-scoped).
+    Instant,
+}
+
+/// One recorded event. `ts_ns`/`dur_ns` are nanoseconds from the trace
+/// epoch; the JSON writer converts to the microseconds Perfetto expects.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub name: Cow<'static, str>,
+    pub cat: &'static str,
+    pub kind: EventKind,
+    pub pid: u32,
+    pub tid: u64,
+    pub ts_ns: u64,
+    pub dur_ns: u64,
+    /// Up to two numeric arguments, rendered under `args` in the JSON.
+    pub args: [Option<(&'static str, f64)>; 2],
+}
+
+// ---------------------------------------------------------------------------
+// Sink: thread-local buffers draining into one global Vec.
+// ---------------------------------------------------------------------------
+
+const FLUSH_AT: usize = 1024;
+
+fn sink() -> &'static Mutex<Vec<TraceEvent>> {
+    static SINK: OnceLock<Mutex<Vec<TraceEvent>>> = OnceLock::new();
+    SINK.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn next_tid() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+struct LocalBuf {
+    tid: u64,
+    events: Vec<TraceEvent>,
+}
+
+impl LocalBuf {
+    fn new() -> Self {
+        let tid = next_tid();
+        let name = std::thread::current()
+            .name()
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("thread-{tid}"));
+        name_track(PID_HOST, tid, name);
+        Self { tid, events: Vec::with_capacity(FLUSH_AT) }
+    }
+
+    fn flush(&mut self) {
+        if self.events.is_empty() {
+            return;
+        }
+        let mut sink = sink().lock().expect("trace sink lock");
+        sink.append(&mut self.events);
+    }
+}
+
+impl Drop for LocalBuf {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+thread_local! {
+    static LOCAL: RefCell<LocalBuf> = RefCell::new(LocalBuf::new());
+}
+
+fn record(tid: Option<u64>, mut ev: TraceEvent) {
+    LOCAL.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        ev.tid = tid.unwrap_or(buf.tid);
+        buf.events.push(ev);
+        if buf.events.len() >= FLUSH_AT {
+            buf.flush();
+        }
+    });
+}
+
+/// Flush the calling thread's buffered events into the global sink.
+pub fn flush_thread() {
+    LOCAL.with(|cell| cell.borrow_mut().flush());
+}
+
+/// Take every recorded event (flushing the calling thread first). Worker
+/// threads flush when they exit, so draining after a pooled region joins
+/// sees the workers' events too.
+pub fn drain() -> Vec<TraceEvent> {
+    flush_thread();
+    let mut sink = sink().lock().expect("trace sink lock");
+    std::mem::take(&mut *sink)
+}
+
+// ---------------------------------------------------------------------------
+// Track names.
+// ---------------------------------------------------------------------------
+
+fn tracks() -> &'static Mutex<BTreeMap<(u32, u64), String>> {
+    static TRACKS: OnceLock<Mutex<BTreeMap<(u32, u64), String>>> = OnceLock::new();
+    TRACKS.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Register a display name for a `(pid, tid)` track. First registration
+/// wins; later calls for the same track are no-ops, so every site that
+/// *might* own a track can name it without coordination.
+pub fn name_track(pid: u32, tid: u64, name: impl Into<String>) {
+    let mut map = tracks().lock().expect("track registry lock");
+    map.entry((pid, tid)).or_insert_with(|| name.into());
+}
+
+// ---------------------------------------------------------------------------
+// Recording API.
+// ---------------------------------------------------------------------------
+
+/// A RAII span: records one `X` event covering its own lifetime on the
+/// current thread's track when it drops. When tracing is disabled the
+/// guard is inert and construction costs one atomic load.
+#[must_use = "a span measures its guard's lifetime; bind it with `let _t = ...`"]
+pub struct SpanGuard {
+    name: &'static str,
+    cat: &'static str,
+    start_ns: u64,
+    tid: Option<u64>,
+    args: [Option<(&'static str, f64)>; 2],
+    active: bool,
+}
+
+/// Open a span named `name` in category `cat`.
+#[inline]
+pub fn span(cat: &'static str, name: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { name, cat, start_ns: 0, tid: None, args: [None, None], active: false };
+    }
+    SpanGuard { name, cat, start_ns: now_ns(), tid: None, args: [None, None], active: true }
+}
+
+impl SpanGuard {
+    /// Attach a numeric argument (at most two per span; extras are
+    /// silently dropped).
+    pub fn arg(mut self, key: &'static str, value: f64) -> Self {
+        if self.active {
+            if let Some(slot) = self.args.iter_mut().find(|s| s.is_none()) {
+                *slot = Some((key, value));
+            }
+        }
+        self
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        let end = now_ns();
+        record(
+            self.tid,
+            TraceEvent {
+                name: Cow::Borrowed(self.name),
+                cat: self.cat,
+                kind: EventKind::Span,
+                pid: PID_HOST,
+                tid: 0, // resolved by `record`
+                ts_ns: self.start_ns,
+                dur_ns: end.saturating_sub(self.start_ns),
+                args: self.args,
+            },
+        );
+    }
+}
+
+/// Record a point-in-time marker on the current thread's track.
+#[inline]
+pub fn instant(cat: &'static str, name: &'static str) {
+    if enabled() {
+        record_instant(None, cat, name, None);
+    }
+}
+
+/// [`instant`] with one numeric argument.
+#[inline]
+pub fn instant_arg(cat: &'static str, name: &'static str, key: &'static str, value: f64) {
+    if enabled() {
+        record_instant(None, cat, name, Some((key, value)));
+    }
+}
+
+/// [`instant_arg`] on an explicit track — used for per-chip attribution
+/// (cache spills, exchange markers) where the owning chip, not the
+/// executing thread, is the interesting axis.
+#[inline]
+pub fn instant_on(cat: &'static str, name: &'static str, tid: u64, key: &'static str, value: f64) {
+    if enabled() {
+        record_instant(Some(tid), cat, name, Some((key, value)));
+    }
+}
+
+fn record_instant(
+    tid: Option<u64>,
+    cat: &'static str,
+    name: &'static str,
+    arg: Option<(&'static str, f64)>,
+) {
+    let ts = now_ns();
+    record(
+        tid,
+        TraceEvent {
+            name: Cow::Borrowed(name),
+            cat,
+            kind: EventKind::Instant,
+            pid: PID_HOST,
+            tid: 0, // resolved by `record`
+            ts_ns: ts,
+            dur_ns: 0,
+            args: [arg, None],
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event JSON writer.
+// ---------------------------------------------------------------------------
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn push_num(out: &mut String, v: f64) {
+    if v.is_finite() {
+        out.push_str(&format!("{v}"));
+    } else {
+        out.push_str("null");
+    }
+}
+
+fn push_args(out: &mut String, args: &[Option<(&'static str, f64)>; 2]) {
+    if args[0].is_none() && args[1].is_none() {
+        return;
+    }
+    out.push_str(",\"args\":{");
+    let mut first = true;
+    for (key, value) in args.iter().flatten() {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push('"');
+        out.push_str(&esc(key));
+        out.push_str("\":");
+        push_num(out, *value);
+    }
+    out.push('}');
+}
+
+/// Serialize events as a Chrome trace-event document:
+/// `{"displayTimeUnit":"ms","traceEvents":[...]}` with metadata events
+/// naming every registered process and thread track first. Timestamps are
+/// emitted in microseconds (fractional, from the nanosecond record), the
+/// unit Perfetto expects. The output round-trips through
+/// [`crate::util::json::Json::parse`].
+pub fn trace_json(events: &[TraceEvent]) -> String {
+    let mut out = String::with_capacity(128 + events.len() * 96);
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    let mut first = true;
+    let mut meta = |out: &mut String, name: &str, pid: u32, tid: u64, value: &str| {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&format!(
+            "{{\"name\":\"{name}\",\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            esc(value)
+        ));
+    };
+    let pids: std::collections::BTreeSet<u32> = events
+        .iter()
+        .map(|e| e.pid)
+        .chain(tracks().lock().expect("track registry lock").keys().map(|(p, _)| *p))
+        .collect();
+    for pid in pids {
+        let pname = match pid {
+            PID_HOST => "ssm-rdu host",
+            PID_PCUSIM => "pcusim (1 trace µs = 1 modeled cycle)",
+            _ => "ssm-rdu",
+        };
+        meta(&mut out, "process_name", pid, 0, pname);
+    }
+    {
+        let map = tracks().lock().expect("track registry lock");
+        for ((pid, tid), name) in map.iter() {
+            meta(&mut out, "thread_name", *pid, *tid, name);
+        }
+    }
+    for e in events {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"{}\",\"pid\":{},\"tid\":{},\"ts\":{}",
+            esc(&e.name),
+            esc(e.cat),
+            match e.kind {
+                EventKind::Span => "X",
+                EventKind::Instant => "i",
+            },
+            e.pid,
+            e.tid,
+            e.ts_ns as f64 / 1000.0,
+        ));
+        match e.kind {
+            EventKind::Span => out.push_str(&format!(",\"dur\":{}", e.dur_ns as f64 / 1000.0)),
+            EventKind::Instant => out.push_str(",\"s\":\"t\""),
+        }
+        push_args(&mut out, &e.args);
+        out.push('}');
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Write `events` to `path` as a Perfetto-loadable trace file.
+pub fn write_trace(path: &Path, events: &[TraceEvent]) -> std::io::Result<()> {
+    std::fs::write(path, trace_json(events))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    /// Recorder state is process-global; unit tests serialize on this and
+    /// drain at entry so the parallel test runner cannot interleave them.
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+        LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _g = lock();
+        drain();
+        assert!(!enabled());
+        {
+            let _t = span("test", "noop").arg("x", 1.0);
+        }
+        instant_arg("test", "noop", "x", 2.0);
+        assert!(drain().is_empty());
+    }
+
+    #[test]
+    fn spans_measure_and_nest() {
+        let _g = lock();
+        drain();
+        enable();
+        {
+            let _outer = span("test", "outer").arg("k", 3.0);
+            let _inner = span("test", "inner");
+            std::hint::black_box(0u64);
+        }
+        disable();
+        let evs = drain();
+        assert_eq!(evs.len(), 2);
+        // Spans flush at guard drop, so the inner span lands first.
+        assert_eq!(evs[0].name, "inner");
+        assert_eq!(evs[1].name, "outer");
+        let (inner, outer) = (&evs[0], &evs[1]);
+        assert_eq!(inner.tid, outer.tid);
+        assert!(outer.ts_ns <= inner.ts_ns);
+        assert!(inner.ts_ns + inner.dur_ns <= outer.ts_ns + outer.dur_ns);
+        assert_eq!(outer.args[0], Some(("k", 3.0)));
+    }
+
+    #[test]
+    fn instants_route_to_explicit_tracks() {
+        let _g = lock();
+        drain();
+        enable();
+        instant_on("test", "cache.spill", chip_track(3), "bytes", 4096.0);
+        disable();
+        let evs = drain();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].tid, chip_track(3));
+        assert_eq!(evs[0].kind, EventKind::Instant);
+        assert_eq!(evs[0].args[0], Some(("bytes", 4096.0)));
+    }
+
+    #[test]
+    fn trace_json_round_trips_through_util_json() {
+        let _g = lock();
+        drain();
+        enable();
+        name_track(PID_HOST, chip_track(0), "chip 0");
+        {
+            let _t = span("test", "span \"quoted\"").arg("a", 1.5).arg("b", 2.0);
+        }
+        instant_on("test", "marker", chip_track(0), "bytes", 12.0);
+        disable();
+        let evs = drain();
+        let doc = Json::parse(&trace_json(&evs)).expect("trace JSON must parse");
+        assert_eq!(doc.get("displayTimeUnit").and_then(Json::as_str), Some("ms"));
+        let te = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+        // Metadata events precede the recorded ones.
+        assert!(te.len() >= evs.len() + 1);
+        let span_ev = te
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("span \"quoted\""))
+            .expect("span event present");
+        assert_eq!(span_ev.get("ph").and_then(Json::as_str), Some("X"));
+        assert!(span_ev.get("dur").and_then(Json::as_f64).is_some());
+        let args = span_ev.get("args").expect("args object");
+        assert_eq!(args.get("a").and_then(Json::as_f64), Some(1.5));
+        assert_eq!(args.get("b").and_then(Json::as_f64), Some(2.0));
+        let inst = te
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("marker"))
+            .expect("instant event present");
+        assert_eq!(inst.get("ph").and_then(Json::as_str), Some("i"));
+        assert_eq!(inst.get("s").and_then(Json::as_str), Some("t"));
+    }
+
+    #[test]
+    fn worker_thread_events_flush_on_exit() {
+        let _g = lock();
+        drain();
+        enable();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let _t = span("test", "worker-span");
+            });
+        });
+        disable();
+        let evs = drain();
+        assert_eq!(evs.len(), 1, "scoped worker must flush before join");
+        assert_eq!(evs[0].name, "worker-span");
+    }
+
+    #[test]
+    fn chip_tracks_cannot_collide_with_thread_tracks() {
+        assert!(chip_track(0) > u32::MAX as u64);
+        assert_eq!(chip_track(5) - chip_track(0), 5);
+    }
+}

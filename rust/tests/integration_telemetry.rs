@@ -1,0 +1,189 @@
+//! Trace-output invariants for the telemetry recorder (ISSUE 6 satellite):
+//! spans are well-nested per thread, timestamps are monotone per track, the
+//! recorded span *set* is deterministic across thread interleavings, and
+//! the emitted Chrome trace JSON round-trips through `util::json`.
+//!
+//! The recorder is process-global, so every test here serializes on one
+//! lock and drains the sink at entry — same discipline as the unit tests.
+
+use ssm_rdu::fft::{fft_conv_linear, BaileyVariant};
+use ssm_rdu::runtime::WorkerPool;
+use ssm_rdu::shard::{sharded_bailey_fft_pooled, sharded_mamba_scan_pooled};
+use ssm_rdu::telemetry::{
+    self, chip_track, counter, drain, trace_json, EventKind, TraceEvent,
+};
+use ssm_rdu::util::json::Json;
+use ssm_rdu::util::{C64, XorShift};
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+fn lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Run the instrumented sharded hot paths (Mamba carry-exchange scan +
+/// Bailey FFT transpose) over a `threads`-wide pool with tracing on, and
+/// return everything recorded. Pool workers are scoped threads, so their
+/// buffers flush before each call returns.
+fn record_pooled_run(threads: usize) -> Vec<TraceEvent> {
+    drain();
+    telemetry::enable();
+    let pool = WorkerPool::new(threads);
+    let mut rng = XorShift::new(99);
+    let n = 4096;
+    let a: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 0.99)).collect();
+    let b: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let _ = sharded_mamba_scan_pooled(&a, &b, 4, &pool);
+    let x: Vec<C64> = (0..2048)
+        .map(|_| C64::new(rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0)))
+        .collect();
+    let _ = sharded_bailey_fft_pooled(&x, 32, 4, BaileyVariant::Vector, &pool);
+    telemetry::disable();
+    drain()
+}
+
+#[test]
+fn span_end_times_are_monotone_per_track() {
+    let _g = lock();
+    let evs = record_pooled_run(3);
+    assert!(!evs.is_empty());
+    // A thread appends to its buffer in completion order and buffers flush
+    // to the sink in order, so each own-thread track's end times must be
+    // non-decreasing in drained order. (Chip tracks are excluded: several
+    // threads may post instants to the same chip concurrently.)
+    let mut last_end: BTreeMap<u64, u64> = BTreeMap::new();
+    for e in evs.iter().filter(|e| e.tid < chip_track(0)) {
+        let end = e.ts_ns + e.dur_ns;
+        if let Some(&prev) = last_end.get(&e.tid) {
+            assert!(
+                end >= prev,
+                "track {} went backwards: {} after {} ({})",
+                e.tid,
+                end,
+                prev,
+                e.name
+            );
+        }
+        last_end.insert(e.tid, end);
+    }
+}
+
+#[test]
+fn spans_are_well_nested_per_track() {
+    let _g = lock();
+    let evs = record_pooled_run(3);
+    let mut by_tid: BTreeMap<u64, Vec<&TraceEvent>> = BTreeMap::new();
+    for e in evs.iter().filter(|e| e.kind == EventKind::Span) {
+        by_tid.entry(e.tid).or_default().push(e);
+    }
+    assert!(!by_tid.is_empty());
+    for (tid, mut spans) in by_tid {
+        // Earliest first; at equal start the longer span is the parent.
+        spans.sort_by(|x, y| x.ts_ns.cmp(&y.ts_ns).then(y.dur_ns.cmp(&x.dur_ns)));
+        let mut stack: Vec<(u64, u64)> = Vec::new(); // (start, end)
+        for s in spans {
+            let (start, end) = (s.ts_ns, s.ts_ns + s.dur_ns);
+            while let Some(&(_, top_end)) = stack.last() {
+                if start >= top_end {
+                    stack.pop(); // sibling: the previous span closed first
+                } else {
+                    assert!(
+                        end <= top_end,
+                        "track {tid}: span `{}` [{start},{end}) straddles its parent's \
+                         end {top_end} — not well nested",
+                        s.name
+                    );
+                    break;
+                }
+            }
+            stack.push((start, end));
+        }
+    }
+}
+
+#[test]
+fn span_set_is_deterministic_across_interleavings() {
+    let _g = lock();
+    let count = |evs: &[TraceEvent]| -> BTreeMap<String, usize> {
+        let mut m = BTreeMap::new();
+        for e in evs {
+            *m.entry(e.name.to_string()).or_insert(0) += 1;
+        }
+        m
+    };
+    let first = count(&record_pooled_run(3));
+    let second = count(&record_pooled_run(3));
+    assert_eq!(first, second, "same work must record the same span multiset");
+    // The phases the ISSUE names must all be visible.
+    for name in ["scan.local", "scan.carry_exchange", "scan.carry_in", "scan.apply",
+                 "fft.columns", "fft.transpose", "fft.rows", "pool.map"] {
+        assert!(first.contains_key(name), "missing expected span/instant `{name}`");
+    }
+    // Per-chip attribution: 4 chips get one carry-in marker each.
+    assert_eq!(first["scan.carry_in"], 4);
+}
+
+#[test]
+fn trace_json_round_trips_and_writes_to_disk() {
+    let _g = lock();
+    let evs = record_pooled_run(2);
+    let json = trace_json(&evs);
+    let doc = Json::parse(&json).expect("emitted trace must be valid JSON");
+    let te = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    let spans = te
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+        .count();
+    let instants = te
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("i"))
+        .count();
+    assert_eq!(spans, evs.iter().filter(|e| e.kind == EventKind::Span).count());
+    assert_eq!(instants, evs.iter().filter(|e| e.kind == EventKind::Instant).count());
+    // Chip tracks carry the carry-exchange markers on the host process.
+    let chip0 = chip_track(0) as f64;
+    assert!(
+        te.iter().any(|e| e.get("tid").and_then(Json::as_f64) == Some(chip0)),
+        "chip 0 track must appear in the export"
+    );
+    // And the file path works end to end.
+    let path = std::env::temp_dir().join(format!("ssm_rdu_trace_{}.json", std::process::id()));
+    telemetry::write_trace(&path, &evs).expect("write trace file");
+    let read_back = std::fs::read_to_string(&path).expect("read trace file");
+    Json::parse(&read_back).expect("trace file must parse");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn disabled_runs_record_nothing() {
+    let _g = lock();
+    drain();
+    assert!(!telemetry::enabled());
+    let pool = WorkerPool::new(3);
+    let a = vec![0.5; 1024];
+    let b = vec![0.25; 1024];
+    let _ = sharded_mamba_scan_pooled(&a, &b, 4, &pool);
+    assert!(drain().is_empty(), "disabled tracing must record zero events");
+}
+
+#[test]
+fn plan_cache_counters_track_hits_and_misses() {
+    let _g = lock();
+    let hits = counter("fft.plan_cache.hits");
+    let misses = counter("fft.plan_cache.misses");
+    let (h0, m0) = (hits.load(Ordering::Relaxed), misses.load(Ordering::Relaxed));
+    let u = vec![1.0f64; 300];
+    let k = vec![0.5f64; 300];
+    // The conv plan cache is thread-local and this test owns its thread:
+    // the first conv at this size is a miss, the second a hit.
+    let _ = fft_conv_linear(&u, &k);
+    assert!(misses.load(Ordering::Relaxed) > m0, "first conv must miss the plan cache");
+    let after_first = hits.load(Ordering::Relaxed);
+    let _ = fft_conv_linear(&u, &k);
+    assert!(
+        hits.load(Ordering::Relaxed) > after_first.max(h0),
+        "repeat conv must hit the plan cache"
+    );
+}
