@@ -240,6 +240,49 @@ mod tests {
     }
 
     #[test]
+    fn quantile_edge_cases_empty_single_bucket_and_extremes() {
+        // Empty histogram: every quantile is 0, including the extremes.
+        let m = Metrics::new();
+        for q in [0.0, 0.5, 1.0] {
+            assert_eq!(m.latency_quantile_us(q), 0, "empty histogram must report 0 at q={q}");
+        }
+        // Single-bucket histogram: all mass in bucket 0 ([1, 2) µs).
+        // Interpolation may not escape the bucket, and q=0 must clamp the
+        // target rank up to 1 rather than underflow.
+        for _ in 0..7 {
+            m.record_response(Duration::ZERO, Duration::from_micros(1));
+        }
+        for q in [0.0, 0.5, 0.999, 1.0] {
+            let v = m.latency_quantile_us(q);
+            assert!((1..=2).contains(&v), "q={q} escaped the only bucket: {v}");
+        }
+        assert!(m.latency_quantile_us(0.0) <= m.latency_quantile_us(1.0));
+    }
+
+    #[test]
+    fn quantile_saturating_top_bucket() {
+        // Durations beyond 2^31 µs all saturate into the top bucket; the
+        // interpolated estimate must stay inside [2^31, 2^32] and never
+        // overflow or return the old `1 << BUCKETS` sentinel.
+        let m = Metrics::new();
+        for _ in 0..4 {
+            m.record_response(Duration::ZERO, Duration::from_micros(u64::MAX / 2));
+        }
+        let lo = 1u64 << (BUCKETS - 1);
+        let hi = 1u64 << BUCKETS;
+        for q in [0.5, 0.99, 0.999, 1.0] {
+            let v = m.latency_quantile_us(q);
+            assert!(
+                (lo..=hi).contains(&v),
+                "q={q} must interpolate within the saturating top bucket: {v}"
+            );
+        }
+        // Ranks 2 of 4 and 4 of 4 land at frac 0.5 and 1.0 of the bucket.
+        assert_eq!(m.latency_quantile_us(0.5), lo + (hi - lo) / 2);
+        assert_eq!(m.latency_quantile_us(1.0), hi);
+    }
+
+    #[test]
     fn token_latency_tracked_separately() {
         let m = Metrics::new();
         for _ in 0..10 {

@@ -7,15 +7,17 @@
 //! pool:
 //!
 //! ```text
-//!  one-shot ──submit()─────────▶ dispatcher ─────WorkItem::Batch────▶ worker 0
-//!                                │ DynamicBatcher: per-model queues,│  worker 1
-//!                                │ flush on size or deadline        │  …
-//!  sessions ──submit_session()─▶ │ SessionScheduler: prefill→decode │  each owns
-//!   (--continuous)               │ iteration batches over the       │  its own
-//!                                │ StateCache (LRU + spill budget)  │  executor
-//!                                │        ▲ WorkItem::Steps          ╲
+//!  one-shot ──submit()─────────▶ dispatcher ──────Batch channel─────▶ worker 0..W
+//!                                │ DynamicBatcher: per-model queues,│  each owns
+//!                                │ flush on size or deadline        │  its own
+//!  sessions ──submit_session()─▶ │ SessionScheduler: prefill→decode │  executor
+//!   (--continuous)               │ steps pushed as they become ready│
+//!                                │            │ per-chip deques     ▼
+//!                                │   StealBoard[chip0 | chip1 | …] ─▶ home-chip pop
+//!                                │        ▲        (idle workers steal the busiest
+//!                                │        │         chip's youngest step)
 //!                                │        ╰── Msg::Feedback ◀── step results
-//!                                ╰── metrics ◀──────┴── responses / tokens ──▶ clients
+//!                                ╰── metrics ◀─────┴── responses / tokens ──▶ clients
 //! ```
 //!
 //! * [`request`] — request/response types (+ session metadata).
@@ -28,13 +30,19 @@
 //! Continuous mode (`CoordinatorConfig::continuous`) replaces the
 //! flush-on-deadline batcher with the [`crate::session`] subsystem: the
 //! dispatcher owns a [`SessionScheduler`] and one [`StateCache`] *per
-//! chip* ([`ContinuousConfig::chips`]); workers execute mixed
-//! prefill/decode iteration batches against their batch's home-chip cache
-//! and feed completions back so the scheduler can retire sessions and
-//! re-admit the next decode step. With `chips > 1` the dispatcher cuts one
-//! step batch per chip per wave (sharded dispatch) and the iteration
-//! barrier doubles as the inter-chip exchange barrier of the sharded
-//! dataflows in [`crate::shard`].
+//! chip* ([`ContinuousConfig::chips`]); ready steps are pushed onto their
+//! home chip's deque in a [`crate::runtime::StealBoard`] **as they become
+//! ready** — there is no iteration barrier. Workers drain their home
+//! chip's deque FIFO and, when idle, steal the youngest step from the
+//! busiest other chip, so one slow chip (or one slow spill/restore) no
+//! longer stalls the fleet: decode steps of other sessions overlap a
+//! session's `StateCache` spill/restore because the cache lock is held
+//! only for checkout/checkin bookkeeping while the step executes
+//! unlocked. Completions feed back so the scheduler retires sessions and
+//! re-admits the next decode step; per-session step ordering is preserved
+//! because the scheduler keeps at most one step per session in flight.
+//! Steal traffic is counted in `coordinator.steals` and marked with
+//! `steal.task` instants on the trace (ARCHITECTURE.md §5.4).
 
 pub mod batcher;
 pub mod executor;
@@ -47,7 +55,7 @@ pub use metrics::Metrics;
 pub use request::{Request, Response, SessionMeta};
 
 use crate::arch::MemTech;
-use crate::runtime::ModelKind;
+use crate::runtime::{ModelKind, StealBoard};
 use crate::session::{
     CacheStats, MemoryBudget, Phase, SchedStats, SchedulerConfig, SessionId, SessionInfo,
     SessionScheduler, StateCache, StateShape, StepOutcome,
@@ -74,10 +82,11 @@ pub struct ContinuousConfig {
     /// State shape for Hyena sessions.
     pub hyena_shape: StateShape,
     /// RDU chips backing the deployment. Sessions are pinned to a home chip
-    /// (`session id mod chips`) whose cache holds their state; each
-    /// iteration wave dispatches one step batch per chip, and the iteration
-    /// barrier doubles as the inter-chip exchange barrier
-    /// (see [`crate::shard`]).
+    /// (`session id mod chips`) whose cache holds their state; ready steps
+    /// land on the home chip's deque of the [`StealBoard`], and idle
+    /// workers steal across chips. The scheduler's one-step-per-session
+    /// in-flight rule provides the ordering the inter-chip exchange
+    /// requires (see [`crate::shard`]).
     pub chips: usize,
 }
 
@@ -143,22 +152,12 @@ struct StepTask {
     issued: Instant,
 }
 
-/// An iteration batch of session steps (may mix phases and models).
-struct StepBatch {
-    tasks: Vec<StepTask>,
-}
-
 /// Worker → dispatcher completion report.
 struct StepFeedback {
     session: SessionId,
     /// The produced token (feeds the next decode step's input).
     token: Option<Vec<f32>>,
     ok: bool,
-}
-
-enum WorkItem {
-    Batch(Batch),
-    Steps(StepBatch),
 }
 
 enum Msg {
@@ -179,6 +178,10 @@ pub struct Coordinator {
     /// One state cache per chip (continuous mode only).
     caches: Option<Arc<Vec<Mutex<StateCache>>>>,
     scheduler: Option<Arc<Mutex<SessionScheduler>>>,
+    /// Per-chip work-stealing deques (continuous mode only). The
+    /// dispatcher closes the board on exit; shutdown closes it again
+    /// defensively so workers can never hang on join.
+    board: Option<Arc<StealBoard<StepTask>>>,
 }
 
 impl Coordinator {
@@ -191,8 +194,12 @@ impl Coordinator {
         let metrics = Arc::new(Metrics::new());
         let running = Arc::new(AtomicBool::new(true));
         let (tx, rx) = channel::<Msg>();
-        let (work_tx, work_rx) = channel::<WorkItem>();
+        let (work_tx, work_rx) = channel::<Batch>();
         let work_rx = Arc::new(Mutex::new(work_rx));
+        // Continuous mode dispatches through per-chip stealing deques
+        // instead of the shared batch channel.
+        let board =
+            cfg.continuous.map(|cc| Arc::new(StealBoard::<StepTask>::new(cc.chips.max(1))));
 
         let caches = cfg.continuous.map(|cc| {
             Arc::new(
@@ -224,34 +231,60 @@ impl Coordinator {
 
         // Worker pool. Executors are built *inside* each thread (PJRT
         // executables are thread-affine); a handshake channel surfaces
-        // construction failures to the caller.
+        // construction failures to the caller. Continuous-mode workers are
+        // homed on chip `wid % chips` and claim steps from the steal board;
+        // batch-mode workers share the batch channel.
         let factory = Arc::new(factory);
         let mut workers = Vec::with_capacity(cfg.workers);
         let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let chips = cfg.continuous.map(|cc| cc.chips.max(1)).unwrap_or(1);
         for wid in 0..cfg.workers {
-            let rx = Arc::clone(&work_rx);
             let metrics = Arc::clone(&metrics);
             let factory = Arc::clone(&factory);
             let ready = ready_tx.clone();
-            let caches = caches.clone();
             let feedback = tx.clone();
-            workers.push(std::thread::Builder::new().name(format!("ssm-rdu-worker-{wid}")).spawn(
-                move || match factory() {
-                    Ok(exec) => {
-                        let _ = ready.send(Ok(()));
-                        worker_loop(exec, rx, metrics, caches, feedback);
-                    }
-                    Err(e) => {
-                        let _ = ready.send(Err(e));
-                    }
-                },
-            )?);
+            let spawn = std::thread::Builder::new().name(format!("ssm-rdu-worker-{wid}"));
+            workers.push(match &board {
+                Some(b) => {
+                    let board = Arc::clone(b);
+                    let caches =
+                        Arc::clone(caches.as_ref().expect("continuous mode builds caches"));
+                    let home = wid % chips;
+                    spawn.spawn(move || match factory() {
+                        Ok(exec) => {
+                            let _ = ready.send(Ok(()));
+                            steal_worker_loop(exec, home, board, caches, metrics, feedback);
+                        }
+                        Err(e) => {
+                            let _ = ready.send(Err(e));
+                        }
+                    })?
+                }
+                None => {
+                    let rx = Arc::clone(&work_rx);
+                    spawn.spawn(move || match factory() {
+                        Ok(exec) => {
+                            let _ = ready.send(Ok(()));
+                            worker_loop(exec, rx, metrics);
+                        }
+                        Err(e) => {
+                            let _ = ready.send(Err(e));
+                        }
+                    })?
+                }
+            });
         }
         drop(ready_tx);
         for _ in 0..cfg.workers {
-            ready_rx
-                .recv()
-                .map_err(|_| anyhow!("worker died before handshake"))??;
+            let up = ready_rx.recv().map_err(|_| anyhow!("worker died before handshake"));
+            if let Err(e) = up.and_then(|r| r) {
+                // Unblock the already-spawned steal workers before erroring
+                // (batch workers exit on their own when work_tx drops).
+                if let Some(b) = &board {
+                    b.close();
+                }
+                return Err(e);
+            }
         }
 
         // Dispatcher: dynamic batcher or continuous session scheduler.
@@ -267,8 +300,9 @@ impl Coordinator {
             Some(cc) => {
                 let sched = Arc::clone(scheduler.as_ref().expect("continuous scheduler"));
                 let caches2 = Arc::clone(caches.as_ref().expect("continuous caches"));
+                let board2 = Arc::clone(board.as_ref().expect("continuous board"));
                 std::thread::Builder::new().name("ssm-rdu-dispatch".into()).spawn(move || {
-                    continuous_loop(cc, rx, work_tx, sched, caches2, metrics2, running2)
+                    continuous_loop(cc, rx, board2, sched, caches2, metrics2, running2)
                 })?
             }
         };
@@ -283,6 +317,7 @@ impl Coordinator {
             max_inflight: cfg.max_inflight,
             caches,
             scheduler,
+            board,
         })
     }
 
@@ -426,6 +461,12 @@ impl Coordinator {
             if let Some(d) = self.dispatcher.take() {
                 let _ = d.join();
             }
+            // The dispatcher closes the board on every exit path; close it
+            // again defensively (idempotent) so a panicked dispatcher can
+            // never leave workers waiting forever.
+            if let Some(b) = &self.board {
+                b.close();
+            }
             for w in self.workers.drain(..) {
                 let _ = w.join();
             }
@@ -442,7 +483,7 @@ impl Drop for Coordinator {
 fn dispatcher_loop(
     policy: BatchPolicy,
     rx: Receiver<Msg>,
-    work_tx: Sender<WorkItem>,
+    work_tx: Sender<Batch>,
     metrics: Arc<Metrics>,
     running: Arc<AtomicBool>,
 ) {
@@ -457,12 +498,10 @@ fn dispatcher_loop(
                 "size",
                 b.requests.len() as f64,
             );
-            if let Err(e) = work_tx.send(WorkItem::Batch(b)) {
+            if let Err(e) = work_tx.send(b) {
                 // Workers gone: the batch is lost; account for it so
                 // in-flight tracking cannot leak.
-                if let WorkItem::Batch(b) = e.0 {
-                    metrics.failures.fetch_add(b.requests.len() as u64, Ordering::Relaxed);
-                }
+                metrics.failures.fetch_add(e.0.requests.len() as u64, Ordering::Relaxed);
                 return;
             }
         }
@@ -492,10 +531,8 @@ fn dispatcher_loop(
     }
     for b in batcher.drain_all() {
         metrics.record_batch(b.requests.len());
-        if let Err(e) = work_tx.send(WorkItem::Batch(b)) {
-            if let WorkItem::Batch(b) = e.0 {
-                metrics.failures.fetch_add(b.requests.len() as u64, Ordering::Relaxed);
-            }
+        if let Err(e) = work_tx.send(b) {
+            metrics.failures.fetch_add(e.0.requests.len() as u64, Ordering::Relaxed);
             break;
         }
     }
@@ -519,7 +556,7 @@ enum Control {
 fn continuous_loop(
     cc: ContinuousConfig,
     rx: Receiver<Msg>,
-    work_tx: Sender<WorkItem>,
+    board: Arc<StealBoard<StepTask>>,
     scheduler: Arc<Mutex<SessionScheduler>>,
     caches: Arc<Vec<Mutex<StateCache>>>,
     metrics: Arc<Metrics>,
@@ -527,10 +564,13 @@ fn continuous_loop(
 ) {
     let chips = caches.len().max(1);
     let mut side: BTreeMap<SessionId, SessionSide> = BTreeMap::new();
-    // Steps dispatched to workers whose feedback has not arrived yet. The
-    // next iteration wave is cut only when this reaches zero — the
-    // iteration barrier is what lets batches actually fill (scheduling on
-    // every single feedback would degenerate to 1-wide batches).
+    // Steps dispatched to workers whose feedback has not arrived yet —
+    // pure accounting for the shutdown drain. There is deliberately **no
+    // iteration barrier** on it: ready steps are pushed to the per-chip
+    // deques the moment the scheduler admits them, and the scheduler's
+    // one-step-per-session in-flight rule is what keeps per-session
+    // ordering (a session's next step cannot be issued until its previous
+    // step's feedback updated `last_token` right here in this thread).
     let mut outstanding: usize = 0;
 
     let handle = |msg: Msg,
@@ -598,11 +638,10 @@ fn continuous_loop(
             caches[chip_of(id, chips)].lock().expect("state cache lock").remove(id);
             metrics.failures.fetch_add(1, Ordering::Relaxed);
         }
-        // Iteration barrier: cut the next wave of batches only once the
-        // previous wave has fully reported back.
-        if outstanding > 0 {
-            continue;
-        }
+        // Push every ready step onto its home chip's deque immediately —
+        // no waiting for the previous wave to drain. `next_batch` marks
+        // issued sessions in flight, so the loop terminates once every
+        // live session has a step queued or executing.
         loop {
             let steps = scheduler.lock().expect("scheduler lock").next_batch();
             if steps.is_empty() {
@@ -610,8 +649,8 @@ fn continuous_loop(
             }
             // One span per scheduler wave on the dispatcher track; the
             // per-chip cuts below show how the wave sharded.
-            let _wave =
-                crate::telemetry::span("coordinator", "sched.wave").arg("steps", steps.len() as f64);
+            let _wave = crate::telemetry::span("coordinator", "sched.wave")
+                .arg("steps", steps.len() as f64);
             let mut tasks = Vec::with_capacity(steps.len());
             for s in steps {
                 let Some(entry) = side.get_mut(&s.id) else {
@@ -641,11 +680,10 @@ fn continuous_loop(
             if tasks.is_empty() {
                 continue;
             }
-            // Sharded dispatch: one step batch per home chip, so the
-            // chips' steps run on different workers concurrently. The
-            // iteration barrier above (`outstanding == 0`) is also the
-            // inter-chip exchange barrier: no chip starts the next wave
-            // until every chip's previous wave has reported back.
+            // Sharded dispatch: each step lands on its home chip's deque.
+            // Workers homed elsewhere steal from the busiest deque when
+            // idle, so chips with deep queues shed load instead of
+            // stalling the wave.
             let mut per_chip: BTreeMap<usize, Vec<StepTask>> = BTreeMap::new();
             for t in tasks {
                 per_chip.entry(t.chip).or_default().push(t);
@@ -659,9 +697,7 @@ fn continuous_loop(
                     chip as f64,
                 );
                 outstanding += tasks.len();
-                if work_tx.send(WorkItem::Steps(StepBatch { tasks })).is_err() {
-                    return; // workers gone
-                }
+                board.push_many(chip, tasks);
             }
         }
     }
@@ -696,6 +732,10 @@ fn continuous_loop(
         }
     }
     metrics.failures.fetch_add(side.len() as u64, Ordering::Relaxed);
+    // Retire the steal board: workers drain whatever is still queued and
+    // then exit on `None` (close is idempotent with `shutdown_inner`'s
+    // defensive close).
+    board.close();
 }
 
 fn handle_feedback(
@@ -732,26 +772,54 @@ fn handle_feedback(
 
 fn worker_loop(
     mut exec: Box<dyn Executor>,
-    rx: Arc<Mutex<Receiver<WorkItem>>>,
+    rx: Arc<Mutex<Receiver<Batch>>>,
     metrics: Arc<Metrics>,
-    caches: Option<Arc<Vec<Mutex<StateCache>>>>,
-    feedback: Sender<Msg>,
 ) {
     loop {
         // Hold the lock only to receive.
-        let item = {
+        let batch = {
             let guard = rx.lock().expect("work channel lock poisoned");
             match guard.recv() {
-                Ok(it) => it,
+                Ok(b) => b,
                 Err(_) => return, // dispatcher gone and queue drained
             }
         };
-        match item {
-            WorkItem::Batch(batch) => run_batch(exec.as_mut(), batch, &metrics),
-            WorkItem::Steps(steps) => {
-                run_steps(exec.as_mut(), steps, caches.as_ref(), &metrics, &feedback)
-            }
+        run_batch(exec.as_mut(), batch, &metrics);
+    }
+}
+
+/// Process-wide count of session steps a worker executed for a chip other
+/// than its home (i.e. steals). Cross-referenced with the `steal.task`
+/// instants on the Perfetto timeline.
+fn steals_counter() -> &'static std::sync::atomic::AtomicU64 {
+    static C: std::sync::OnceLock<&'static std::sync::atomic::AtomicU64> =
+        std::sync::OnceLock::new();
+    C.get_or_init(|| crate::telemetry::counter("coordinator.steals"))
+}
+
+/// Continuous-mode worker body: claim session steps from the steal board
+/// (home chip first, then the busiest other chip's youngest step) until the
+/// dispatcher closes the board.
+fn steal_worker_loop(
+    mut exec: Box<dyn Executor>,
+    home: usize,
+    board: Arc<StealBoard<StepTask>>,
+    caches: Arc<Vec<Mutex<StateCache>>>,
+    metrics: Arc<Metrics>,
+    feedback: Sender<Msg>,
+) {
+    while let Some(claim) = board.next(home) {
+        if claim.stolen {
+            steals_counter().fetch_add(1, Ordering::Relaxed);
+            crate::telemetry::instant_arg(
+                "coordinator",
+                "steal.task",
+                "from_chip",
+                claim.origin as f64,
+            );
         }
+        run_step(exec.as_mut(), claim.item, &caches, &metrics, &feedback);
+        board.complete(claim.origin);
     }
 }
 
@@ -821,92 +889,84 @@ pub fn run_batch(exec: &mut dyn Executor, batch: Batch, metrics: &Metrics) {
     }
 }
 
-/// Execute one iteration batch of session steps against the shared state
-/// cache, streaming each produced token to its client and reporting every
-/// completion back to the dispatcher.
-fn run_steps(
+/// Execute one session step against the shared state cache, streaming the
+/// produced token to its client and reporting completion back to the
+/// dispatcher. Steal granularity is exactly one step, so the cache lock is
+/// held only for this step's checkout/checkin bookkeeping — decode compute
+/// for one session overlaps another session's spill/restore on the same
+/// chip.
+fn run_step(
     exec: &mut dyn Executor,
-    batch: StepBatch,
-    caches: Option<&Arc<Vec<Mutex<StateCache>>>>,
+    task: StepTask,
+    caches: &Arc<Vec<Mutex<StateCache>>>,
     metrics: &Metrics,
     feedback: &Sender<Msg>,
 ) {
-    let Some(caches) = caches else {
-        for t in batch.tasks {
-            metrics.failures.fetch_add(1, Ordering::Relaxed);
-            let fb = StepFeedback { session: t.session, token: None, ok: false };
-            let _ = feedback.send(Msg::Feedback(fb));
+    // The session's home chip owns its state; a stolen step still locks the
+    // *origin* chip's cache. A chip id out of range is a dispatcher bug —
+    // index loudly.
+    let cache = &caches[task.chip];
+    let queue_time = task.issued.elapsed();
+    // The exec span lives on the worker's own track (per-chip tracks
+    // carry only instants: concurrent same-chip work on two workers
+    // would break span nesting) and names the chip via an argument.
+    let _step = crate::telemetry::span(
+        "coordinator",
+        match task.phase {
+            Phase::Prefill => "step.prefill",
+            Phase::Decode => "step.decode",
+        },
+    )
+    .arg("chip", task.chip as f64)
+    .arg("queue_us", queue_time.as_secs_f64() * 1e6);
+    let t0 = Instant::now();
+    let result: Result<Vec<f32>> = match task.phase {
+        Phase::Prefill => {
+            exec.begin_session(task.model, &task.input, &task.shape).map(|(state, first)| {
+                cache.lock().expect("state cache lock").insert(task.session, state);
+                first
+            })
         }
-        return;
-    };
-    let n = batch.tasks.len();
-    for task in batch.tasks {
-        // The session's home chip owns its state; a batch holds one chip's
-        // steps, so a worker acts as that chip for the duration. A chip id
-        // out of range is a dispatcher bug — index loudly.
-        let cache = &caches[task.chip];
-        let queue_time = task.issued.elapsed();
-        // The exec span lives on the worker's own track (per-chip tracks
-        // carry only instants: concurrent same-chip work on two workers
-        // would break span nesting) and names the chip via an argument.
-        let _step = crate::telemetry::span(
-            "coordinator",
-            match task.phase {
-                Phase::Prefill => "step.prefill",
-                Phase::Decode => "step.decode",
-            },
-        )
-        .arg("chip", task.chip as f64)
-        .arg("queue_us", queue_time.as_secs_f64() * 1e6);
-        let t0 = Instant::now();
-        let result: Result<Vec<f32>> = match task.phase {
-            Phase::Prefill => {
-                exec.begin_session(task.model, &task.input, &task.shape).map(|(state, first)| {
-                    cache.lock().expect("state cache lock").insert(task.session, state);
-                    first
-                })
-            }
-            Phase::Decode => {
-                // Checkout holds the lock only for bookkeeping; the decode
-                // step itself runs without the cache locked.
-                let state = cache.lock().expect("state cache lock").checkout(task.session);
-                match state {
-                    None => Err(anyhow!("session {} has no cached state", task.session)),
-                    Some(mut st) => {
-                        let r = exec.step_decode(task.model, &mut st, &task.input);
-                        cache.lock().expect("state cache lock").checkin(task.session, st);
-                        r
-                    }
+        Phase::Decode => {
+            // Checkout holds the lock only for bookkeeping; the decode
+            // step itself runs without the cache locked.
+            let state = cache.lock().expect("state cache lock").checkout(task.session);
+            match state {
+                None => Err(anyhow!("session {} has no cached state", task.session)),
+                Some(mut st) => {
+                    let r = exec.step_decode(task.model, &mut st, &task.input);
+                    cache.lock().expect("state cache lock").checkin(task.session, st);
+                    r
                 }
             }
-        };
-        let exec_time = t0.elapsed();
-        match result {
-            Ok(token) => {
-                metrics.record_token(queue_time, exec_time);
-                let _ = task.reply.send(Response {
-                    id: task.session,
-                    model: task.model,
-                    output: token.clone(),
-                    queue_time,
-                    exec_time,
-                    batch_size: n,
-                    token_index: Some(task.step),
-                });
-                let _ = feedback.send(Msg::Feedback(StepFeedback {
-                    session: task.session,
-                    token: Some(token),
-                    ok: true,
-                }));
-            }
-            Err(_) => {
-                metrics.failures.fetch_add(1, Ordering::Relaxed);
-                let _ = feedback.send(Msg::Feedback(StepFeedback {
-                    session: task.session,
-                    token: None,
-                    ok: false,
-                }));
-            }
+        }
+    };
+    let exec_time = t0.elapsed();
+    match result {
+        Ok(token) => {
+            metrics.record_token(queue_time, exec_time);
+            let _ = task.reply.send(Response {
+                id: task.session,
+                model: task.model,
+                output: token.clone(),
+                queue_time,
+                exec_time,
+                batch_size: 1,
+                token_index: Some(task.step),
+            });
+            let _ = feedback.send(Msg::Feedback(StepFeedback {
+                session: task.session,
+                token: Some(token),
+                ok: true,
+            }));
+        }
+        Err(_) => {
+            metrics.failures.fetch_add(1, Ordering::Relaxed);
+            let _ = feedback.send(Msg::Feedback(StepFeedback {
+                session: task.session,
+                token: None,
+                ok: false,
+            }));
         }
     }
 }

@@ -15,14 +15,14 @@
 //! an independent numerical oracle for the planned path.
 //!
 //! [`fft_conv_linear_channels`] fans the per-channel convolutions of one
-//! Hyena conv module across a [`crate::runtime::WorkerPool`]; channels are
-//! independent and the result is bit-identical to the serial per-channel
-//! loop. Plan reuse under pooling: pool workers are scoped (fresh threads
-//! per call), so each worker builds one plan and reuses it across **its
-//! chunk of channels within the call**; only the calling thread's cache
-//! persists across calls. Amortized over `D/threads` channels this is
-//! cheap, but a persistent worker team would save the rebuild — see
-//! ARCHITECTURE.md §7.
+//! Hyena conv module across a [`crate::runtime::WorkerPool`] with
+//! self-scheduling claim order (`map_stealing`); channels are independent
+//! and the result is bit-identical to the serial per-channel loop. Plan
+//! reuse under pooling: pool workers are scoped (fresh threads per call),
+//! but a fresh worker's first conv at a length **clones** the plan out of
+//! the process-wide master cache (a memcpy — see
+//! [`super::plan::with_conv_plan`]) instead of rebuilding its trig tables,
+//! so pooled speedups no longer sink into per-call plan construction.
 
 use super::plan::with_conv_plan;
 use super::{cooley_tukey::{fft, ifft}, is_pow2, to_complex, to_real};
@@ -58,17 +58,18 @@ pub fn fft_conv_linear(u: &[f64], k: &[f64]) -> Vec<f64> {
 
 /// Per-channel linear convolutions fanned out over the worker pool — the
 /// golden model for one Hyena conv module across its D channels. Channel
-/// `i` convolves `us[i]` with `ks[i]`; work is chunked contiguously over
-/// the pool's threads (each worker building one plan and reusing it for
-/// its whole chunk — see the module docs for the reuse scope), so the
-/// output is **bit-identical** to the serial per-channel loop.
+/// `i` convolves `us[i]` with `ks[i]`; workers self-schedule channels via
+/// [`WorkerPool::map_stealing`] (each worker clones one plan out of the
+/// master cache and reuses it for every channel it claims), so no worker
+/// holds a long contiguous tail while others idle and the output stays
+/// **bit-identical** to the serial per-channel loop.
 pub fn fft_conv_linear_channels(
     us: &[Vec<f64>],
     ks: &[Vec<f64>],
     pool: &WorkerPool,
 ) -> Vec<Vec<f64>> {
     assert_eq!(us.len(), ks.len(), "fft_conv_linear_channels: channel count mismatch");
-    pool.map(us.len(), |i| fft_conv_linear(&us[i], &ks[i]))
+    pool.map_stealing(us.len(), |i| fft_conv_linear(&us[i], &ks[i]))
 }
 
 /// The pre-plan circular convolution: three full-size complex transforms

@@ -16,11 +16,17 @@
 //! * [`conv`] — FFT-based (circular and linear) convolution, the Hyena
 //!   decoder's core operator.
 //! * [`plan`] — the hot-path engine: [`FftPlan`] (cached bit-reversal +
-//!   twiddle tables, zero trig and zero allocation in steady state),
-//!   [`RealFftPlan`] (real-input transforms via the N/2-point packing
-//!   trick, ~half the flops on real signals), and [`ConvPlan`] (the
-//!   allocation-free convolution engine behind [`fft_conv_circular`] /
-//!   [`fft_conv_linear`]).
+//!   twiddle tables, zero trig and zero allocation in steady state,
+//!   cache-blocked butterfly traversal above [`plan::FFT_BLOCK_POINTS`]),
+//!   [`SplitRadixFftPlan`] (conjugate-pair split-radix, ~25% fewer
+//!   butterfly flops, auto-selected for inner transforms at
+//!   [`plan::SPLIT_RADIX_MIN_POINTS`] and above), [`RealFftPlan`]
+//!   (real-input transforms via the N/2-point packing trick, ~half the
+//!   flops on real signals, engine-routed per [`FftEngine`]), and
+//!   [`ConvPlan`] (the allocation-free convolution engine behind
+//!   [`fft_conv_circular`] / [`fft_conv_linear`], served from a bounded
+//!   per-thread [`plan::PlanCache`] backed by a process-wide master
+//!   cache).
 //!
 //! FLOP accounting follows the paper's convention (§III-A): a Vector-FFT of
 //! length L costs `5·L·log₂L`, a GEMM-FFT costs `5·L·R·log_R L` — i.e. the
@@ -54,7 +60,10 @@ pub use conv::{
 };
 pub use cooley_tukey::{fft, ifft};
 pub use dft::dft;
-pub use plan::{with_conv_plan, ConvPlan, CplxConvPlan, FftPlan, RealFftPlan};
+pub use plan::{
+    with_conv_plan, ConvPlan, CplxConvPlan, FftEngine, FftPlan, PlanCache, RealFftPlan,
+    SplitRadixFftPlan,
+};
 
 use crate::util::C64;
 

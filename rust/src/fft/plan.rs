@@ -12,27 +12,46 @@
 //!   half-length twiddle table `tw[j] = e^{-2πi·j/N}` at construction;
 //!   stage `len` indexes it at stride `N/len`, so steady-state transforms
 //!   do **no trig and no allocation**, and every twiddle is a direct table
-//!   value rather than the tail of a multiplicative recurrence.
+//!   value rather than the tail of a multiplicative recurrence. Above
+//!   [`FFT_BLOCK_POINTS`] the butterfly stages run **cache-blocked**: a
+//!   depth-first recursion finishes all early stages of each half before
+//!   combining, so long transforms stop sweeping the whole array once per
+//!   stage. The traversal is *bit-identical* to the breadth-first loop
+//!   (same butterflies on the same values in dependency order — only the
+//!   order across independent blocks changes), and the breadth-first loop
+//!   is kept verbatim as the [`FftPlan::fft_in_place_flat`] oracle.
+//! * [`SplitRadixFftPlan`] — conjugate-pair split-radix DIT recursion:
+//!   ~25% fewer butterfly flops than radix-2 at the same length. A
+//!   different factorization of the same DFT, so outputs differ from the
+//!   radix-2 oracle only by reassociation round-off (≤1e-9, documented —
+//!   the property harness enforces the budget differentially).
 //! * [`RealFftPlan`] — real-input forward/inverse transforms via the
 //!   N/2-point complex-packing trick: pack `z[j] = x[2j] + i·x[2j+1]`, run
 //!   one half-size complex FFT, and unpack the half-spectrum `X[0..=N/2]`
 //!   with an O(N) butterfly. Roughly halves the flops and memory traffic
-//!   of every transform over real data.
+//!   of every transform over real data. The inner complex engine is
+//!   selected per length ([`FftEngine`]): radix-2 below
+//!   [`SPLIT_RADIX_MIN_POINTS`] inner points, split-radix at and above it
+//!   (linear convolutions of L ≥ 16k land there), with
+//!   [`RealFftPlan::with_engine`] pinning either engine for differential
+//!   tests.
 //! * [`ConvPlan`] — a circular/linear convolution engine over two cached
 //!   half-spectrum scratch buffers: two real forward transforms, one
 //!   half-spectrum product, one real inverse — allocation-free after the
 //!   first call at a given length.
-//! * [`with_conv_plan`] — a per-thread plan cache keyed by transform
-//!   length, so the drop-in wrappers ([`super::fft_conv_circular`] /
-//!   [`super::fft_conv_linear`]) reuse plans without locking. Scope note:
-//!   the cache lives as long as its thread — long-lived callers (the main
-//!   thread, the pooled sim's worker team) amortize plans across calls,
-//!   while scoped pool workers amortize only across the channels of one
-//!   call's chunk and rebuild on the next call.
+//! * [`PlanCache`] + [`with_conv_plan`] — a **bounded LRU** of plans per
+//!   thread, keyed by transform length, so the drop-in wrappers
+//!   ([`super::fft_conv_circular`] / [`super::fft_conv_linear`]) reuse
+//!   plans without locking. Misses clone from a process-wide **master
+//!   cache**: the tables are built (O(N log N) trig) once per length per
+//!   process and every later thread-local miss is a memcpy — so scoped
+//!   pool workers with cold thread-local caches no longer pay the trig
+//!   rebuild that used to flatten pooled speedups.
 //!
 //! All planned paths are oracle-checked against [`super::dft::dft`] and
 //! the direct convolution in `super::conv`; the acceptance tolerance is
-//! 1e-9 (they land around 1e-11).
+//! 1e-9 (they land around 1e-11). The blocked traversal is additionally
+//! asserted *bit-identical* to the flat oracle in `tests/prop.rs`.
 
 use super::is_pow2;
 use crate::util::C64;
@@ -40,7 +59,20 @@ use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::f64::consts::PI;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Mutex, OnceLock};
+
+/// Recursion base of the cache-blocked butterfly traversal, in complex
+/// points: 4096 points × 16 B = 64 KiB per block, sized so a block's
+/// working set lives in L1/L2 while the early stages run. Transforms at or
+/// below this length use the breadth-first loop unchanged.
+pub const FFT_BLOCK_POINTS: usize = 4096;
+
+/// Inner-transform length (in complex points) at and above which
+/// [`RealFftPlan::new`] routes through the split-radix engine. A linear
+/// convolution of length L pads to N = 2·L and packs to N/2 inner points,
+/// so L = 16384 → N = 32768 → m = 16384 is the first split-radix length —
+/// exactly the L ≥ 16k regime where the radix-2 path was decaying.
+pub const SPLIT_RADIX_MIN_POINTS: usize = 1 << 14;
 
 /// A reusable plan for N-point complex FFTs: bit-reversal table + twiddle
 /// table, both precomputed once. Methods take `&self`, so one plan can be
@@ -80,7 +112,8 @@ impl FftPlan {
         );
     }
 
-    /// Forward FFT in place.
+    /// Forward FFT in place. Transforms longer than [`FFT_BLOCK_POINTS`]
+    /// take the cache-blocked traversal (bit-identical to the flat loop).
     pub fn fft_in_place(&self, x: &mut [C64]) {
         self.transform(x, false);
     }
@@ -100,25 +133,80 @@ impl FftPlan {
         self.transform(x, true);
     }
 
+    /// Forward FFT in place through the original breadth-first stage-major
+    /// loop, kept verbatim as the differential oracle for the cache-blocked
+    /// traversal — the property harness asserts the two are bit-identical.
+    pub fn fft_in_place_flat(&self, x: &mut [C64]) {
+        self.check(x.len());
+        if self.n == 1 {
+            return;
+        }
+        self.permute(x);
+        self.stages_flat(x, false);
+    }
+
+    /// Inverse counterpart of [`Self::fft_in_place_flat`] (1/N included).
+    pub fn ifft_in_place_flat(&self, x: &mut [C64]) {
+        self.check(x.len());
+        if self.n > 1 {
+            self.permute(x);
+            self.stages_flat(x, true);
+        }
+        let s = 1.0 / self.n as f64;
+        for v in x.iter_mut() {
+            *v = v.scale(s);
+        }
+    }
+
+    /// Forward FFT in place with an explicit cache-block recursion base.
+    /// The production entry points use [`FFT_BLOCK_POINTS`]; the property
+    /// harness passes tiny bases so the blocked recursion is exercised at
+    /// test-sized transforms. `base` must be a power of two ≥ 2.
+    pub fn fft_in_place_blocked(&self, x: &mut [C64], base: usize) {
+        assert!(
+            is_pow2(base) && base >= 2,
+            "FftPlan: block base {base} must be a power of two >= 2"
+        );
+        self.check(x.len());
+        if self.n == 1 {
+            return;
+        }
+        self.permute(x);
+        self.stages_blocked(x, base, false);
+    }
+
     /// Radix-2 DIT butterflies over the precomputed tables. The `inverse`
     /// transform conjugates each table entry instead of rebuilding it.
     fn transform(&self, x: &mut [C64], inverse: bool) {
         self.check(x.len());
-        let n = self.n;
-        if n == 1 {
+        if self.n == 1 {
             return;
         }
-        for i in 0..n {
+        self.permute(x);
+        self.stages_blocked(x, FFT_BLOCK_POINTS, inverse);
+    }
+
+    /// Apply the bit-reversal permutation in place.
+    fn permute(&self, x: &mut [C64]) {
+        for i in 0..self.n {
             let j = self.rev[i] as usize;
             if j > i {
                 x.swap(i, j);
             }
         }
+    }
+
+    /// Breadth-first butterfly stages `len = 2 ..= x.len()` over one
+    /// aligned block. The block length must divide the plan length; stage
+    /// `len` reads the *global* table at stride `n/len`, so a butterfly
+    /// sees the same twiddle whether it runs flat or inside a block.
+    fn stages_flat(&self, x: &mut [C64], inverse: bool) {
+        let m = x.len();
         let mut len = 2;
-        while len <= n {
+        while len <= m {
             let half = len / 2;
-            let stride = n / len;
-            for start in (0..n).step_by(len) {
+            let stride = self.n / len;
+            for start in (0..m).step_by(len) {
                 for k in 0..half {
                     let mut w = self.tw[k * stride];
                     if inverse {
@@ -133,6 +221,168 @@ impl FftPlan {
             len <<= 1;
         }
     }
+
+    /// The single combining stage at `len = x.len()` — the last stage of a
+    /// blocked recursion level.
+    fn stage_last(&self, x: &mut [C64], inverse: bool) {
+        let m = x.len();
+        let half = m / 2;
+        let stride = self.n / m;
+        for k in 0..half {
+            let mut w = self.tw[k * stride];
+            if inverse {
+                w = w.conj();
+            }
+            let a = x[k];
+            let b = x[k + half] * w;
+            x[k] = a + b;
+            x[k + half] = a - b;
+        }
+    }
+
+    /// Depth-first cache-blocked traversal: finish *all* stages of each
+    /// half while its working set is still cache-resident, then run the one
+    /// combining stage at this level. Every butterfly computes the same
+    /// values as the flat loop (dependency order is preserved; only the
+    /// order across independent blocks changes), so the result is
+    /// bit-identical — asserted against [`Self::fft_in_place_flat`] by the
+    /// property harness.
+    fn stages_blocked(&self, x: &mut [C64], base: usize, inverse: bool) {
+        let m = x.len();
+        if m <= base {
+            self.stages_flat(x, inverse);
+            return;
+        }
+        let (lo, hi) = x.split_at_mut(m / 2);
+        self.stages_blocked(lo, base, inverse);
+        self.stages_blocked(hi, base, inverse);
+        self.stage_last(x, inverse);
+    }
+}
+
+/// A split-radix (conjugate-pair DIT) FFT plan: the size-N transform
+/// decomposes into one size-N/2 transform over the even samples and two
+/// size-N/4 transforms over the `4k+1` / `4k+3` odd samples, saving ~25%
+/// of the butterfly flops vs radix-2. Out-of-place (`fft_into`), no
+/// bit-reversal pass; the full-circle twiddle table `tw[j] = e^{-2πi·j/N}`
+/// serves every recursion level at stride `N/m`.
+///
+/// This is a different *factorization* of the same DFT, so its outputs are
+/// not bit-identical to the radix-2 plan — they agree to the documented
+/// ≤1e-9 reassociation budget (observed ~1e-12 at N = 32768), which the
+/// property harness enforces differentially against [`FftPlan`].
+#[derive(Debug, Clone)]
+pub struct SplitRadixFftPlan {
+    n: usize,
+    /// Full-circle table `tw[j] = e^{-2πi·j/N}` for `j < N`: the combine at
+    /// size m reads `w¹ = tw[k·(N/m)]` and `w³ = tw[3k·(N/m) mod N]`.
+    tw: Vec<C64>,
+}
+
+impl SplitRadixFftPlan {
+    /// Build a plan for N-point transforms. N must be a power of two.
+    pub fn new(n: usize) -> Self {
+        assert!(is_pow2(n), "SplitRadixFftPlan: length {n} is not a power of two");
+        let tw = (0..n).map(|j| C64::cis(-2.0 * PI * j as f64 / n as f64)).collect();
+        Self { n, tw }
+    }
+
+    /// Transform length this plan was built for.
+    pub fn points(&self) -> usize {
+        self.n
+    }
+
+    fn check(&self, xl: usize, ol: usize) {
+        assert!(
+            xl == self.n && ol == self.n,
+            "SplitRadixFftPlan for N={} used on length-{xl}/{ol} buffers",
+            self.n
+        );
+    }
+
+    /// Forward FFT: `out = FFT(x)`.
+    pub fn fft_into(&self, x: &[C64], out: &mut [C64]) {
+        self.check(x.len(), out.len());
+        self.rec(x, 0, 1, out, false);
+    }
+
+    /// Inverse FFT including the 1/N normalization.
+    pub fn ifft_into(&self, x: &[C64], out: &mut [C64]) {
+        self.inverse_unnormalized_into(x, out);
+        let s = 1.0 / self.n as f64;
+        for v in out.iter_mut() {
+            *v = v.scale(s);
+        }
+    }
+
+    /// Inverse FFT **without** the 1/N normalization — for callers that
+    /// fold the scaling into an adjacent pass (see [`RealFftPlan`]).
+    pub fn inverse_unnormalized_into(&self, x: &[C64], out: &mut [C64]) {
+        self.check(x.len(), out.len());
+        self.rec(x, 0, 1, out, true);
+    }
+
+    /// The recursion: `out` (length m) receives the transform of the
+    /// strided samples `x[off], x[off+stride], …`. Sub-results land at
+    /// U → `out[..m/2]`, Z → `out[m/2..3m/4]`, Z' → `out[3m/4..]`, then the
+    /// combine rewrites the four slots `{k, k+q, h+k, 3q+k}` in place per k
+    /// (all distinct for k < q = m/4, h = m/2).
+    fn rec(&self, x: &[C64], off: usize, stride: usize, out: &mut [C64], inverse: bool) {
+        let m = out.len();
+        if m == 1 {
+            out[0] = x[off];
+            return;
+        }
+        if m == 2 {
+            let a = x[off];
+            let b = x[off + stride];
+            out[0] = a + b;
+            out[1] = a - b;
+            return;
+        }
+        let q = m / 4;
+        let h = m / 2;
+        {
+            let (u, zz) = out.split_at_mut(h);
+            let (z1, z3) = zz.split_at_mut(q);
+            self.rec(x, off, 2 * stride, u, inverse);
+            self.rec(x, off + stride, 4 * stride, z1, inverse);
+            self.rec(x, off + 3 * stride, 4 * stride, z3, inverse);
+        }
+        let step = self.n / m;
+        for k in 0..q {
+            let mut w1 = self.tw[k * step];
+            let mut w3 = self.tw[(3 * k * step) % self.n];
+            if inverse {
+                w1 = w1.conj();
+                w3 = w3.conj();
+            }
+            let uk = out[k];
+            let uq = out[k + q];
+            let t1 = w1 * out[h + k];
+            let t3 = w3 * out[3 * q + k];
+            let s = t1 + t3;
+            let d = t1 - t3;
+            // d rotated by −i (forward) / +i (inverse).
+            let rot = if inverse { C64::new(-d.im, d.re) } else { C64::new(d.im, -d.re) };
+            out[k] = uk + s;
+            out[h + k] = uk - s;
+            out[k + q] = uq + rot;
+            out[3 * q + k] = uq - rot;
+        }
+    }
+}
+
+/// Which complex engine a [`RealFftPlan`] runs its inner transform on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FftEngine {
+    /// Iterative radix-2 DIT over [`FftPlan`] (cache-blocked above
+    /// [`FFT_BLOCK_POINTS`], bit-identical to the flat oracle).
+    Radix2,
+    /// Conjugate-pair split-radix recursion ([`SplitRadixFftPlan`]):
+    /// ~25% fewer butterfly flops; agrees with radix-2 to the documented
+    /// ≤1e-9 reassociation budget.
+    SplitRadix,
 }
 
 /// A reusable plan for N-point **real-input** transforms via the N/2-point
@@ -143,7 +393,11 @@ impl FftPlan {
 pub struct RealFftPlan {
     n: usize,
     m: usize,
+    engine: FftEngine,
     inner: FftPlan,
+    /// Split-radix engine + its out-of-place result buffer, only built when
+    /// `engine == SplitRadix` (m ≥ [`SPLIT_RADIX_MIN_POINTS`] by default).
+    sr: Option<(SplitRadixFftPlan, Vec<C64>)>,
     /// `w[k] = e^{-2πi·k/N}` for `k < N/2` — the pack/unpack twiddles.
     w: Vec<C64>,
     /// Packing scratch, length N/2.
@@ -152,17 +406,37 @@ pub struct RealFftPlan {
 
 impl RealFftPlan {
     /// Build a plan for N-point real transforms. N must be a power of two
-    /// with N ≥ 2 (the packing trick needs an even length).
+    /// with N ≥ 2 (the packing trick needs an even length). The inner
+    /// engine is split-radix when the packed length N/2 reaches
+    /// [`SPLIT_RADIX_MIN_POINTS`], radix-2 below.
     pub fn new(n: usize) -> Self {
+        let m = n / 2;
+        let engine = if m >= SPLIT_RADIX_MIN_POINTS {
+            FftEngine::SplitRadix
+        } else {
+            FftEngine::Radix2
+        };
+        Self::with_engine(n, engine)
+    }
+
+    /// Build a plan with the inner engine pinned — the differential tests
+    /// use this to run both engines at the same (small) length.
+    pub fn with_engine(n: usize, engine: FftEngine) -> Self {
         assert!(
             is_pow2(n) && n >= 2,
             "RealFftPlan: length {n} must be a power of two >= 2"
         );
         let m = n / 2;
+        let sr = match engine {
+            FftEngine::Radix2 => None,
+            FftEngine::SplitRadix => Some((SplitRadixFftPlan::new(m), vec![C64::ZERO; m])),
+        };
         Self {
             n,
             m,
+            engine,
             inner: FftPlan::new(m),
+            sr,
             w: (0..m).map(|k| C64::cis(-2.0 * PI * k as f64 / n as f64)).collect(),
             pack: vec![C64::ZERO; m],
         }
@@ -171,6 +445,36 @@ impl RealFftPlan {
     /// Signal length this plan was built for.
     pub fn points(&self) -> usize {
         self.n
+    }
+
+    /// Which complex engine the inner transform runs on.
+    pub fn engine(&self) -> FftEngine {
+        self.engine
+    }
+
+    /// Run the inner forward transform on `self.pack` via the selected
+    /// engine. Split-radix is out-of-place, so its result buffer is swapped
+    /// back into `pack` — still allocation-free.
+    fn forward_packed(&mut self) {
+        match &mut self.sr {
+            None => self.inner.fft_in_place(&mut self.pack),
+            Some((sr, buf)) => {
+                sr.fft_into(&self.pack, buf);
+                std::mem::swap(&mut self.pack, buf);
+            }
+        }
+    }
+
+    /// Inner unnormalized inverse transform on `self.pack` (the 1/m scale
+    /// is folded into the unpack pass by the caller).
+    fn inverse_packed(&mut self) {
+        match &mut self.sr {
+            None => self.inner.inverse_unnormalized_in_place(&mut self.pack),
+            Some((sr, buf)) => {
+                sr.inverse_unnormalized_into(&self.pack, buf);
+                std::mem::swap(&mut self.pack, buf);
+            }
+        }
     }
 
     /// Half-spectrum length: `N/2 + 1` bins (bins 0 and N/2 are real).
@@ -194,7 +498,7 @@ impl RealFftPlan {
         for j in 0..m {
             self.pack[j] = C64::new(x[2 * j], x[2 * j + 1]);
         }
-        self.inner.fft_in_place(&mut self.pack);
+        self.forward_packed();
         // Unpack: Xe[k] = (Z[k] + conj(Z[m−k]))/2 (even samples' spectrum),
         //         Xo[k] = −i·(Z[k] − conj(Z[m−k]))/2 (odd samples'),
         //         X[k]  = Xe[k] + w^k·Xo[k].
@@ -231,7 +535,7 @@ impl RealFftPlan {
             let yo = (a - b).scale(0.5) * self.w[k].conj();
             self.pack[k] = C64::new(ye.re - yo.im, ye.im + yo.re);
         }
-        self.inner.inverse_unnormalized_in_place(&mut self.pack);
+        self.inverse_packed();
         let s = 1.0 / m as f64;
         for j in 0..m {
             out[2 * j] = self.pack[j].re * s;
@@ -273,6 +577,11 @@ impl ConvPlan {
     /// Transform length of the plan.
     pub fn points(&self) -> usize {
         self.rp.points()
+    }
+
+    /// Which complex engine the plan's real transforms run on.
+    pub fn engine(&self) -> FftEngine {
+        self.rp.engine()
     }
 
     /// Circular convolution of two length-N real signals into `out`:
@@ -361,47 +670,144 @@ impl CplxConvPlan {
     }
 }
 
-thread_local! {
-    /// Per-thread convolution plans keyed by transform length. Thread-local
-    /// so worker-pool threads never contend on a lock, at the cost of one
-    /// plan per (thread, length) pair — a few KiB each at serving lengths.
-    static CONV_PLANS: RefCell<BTreeMap<usize, ConvPlan>> =
-        const { RefCell::new(BTreeMap::new()) };
+/// Capacity of each thread's [`PlanCache`]: plans for more than this many
+/// distinct transform lengths evict the least-recently-used entry (counted
+/// in `fft.plan_cache.evictions`). Re-planning an evicted length is a
+/// master-cache clone, not a trig rebuild, so the cap trades bounded
+/// memory for a memcpy on churn.
+pub const PLAN_CACHE_CAP: usize = 24;
+
+/// A bounded LRU of [`ConvPlan`]s keyed by transform length — the
+/// structure behind [`with_conv_plan`], kept standalone so eviction and
+/// reuse behaviour is deterministic to unit-test. Instance counters
+/// (`hits`/`misses`/`evictions`) are plain `u64`s; [`with_conv_plan`]
+/// forwards their deltas to the process-wide telemetry counters.
+#[derive(Debug)]
+pub struct PlanCache {
+    /// length → (last-use stamp, plan).
+    plans: BTreeMap<usize, (u64, ConvPlan)>,
+    clock: u64,
+    cap: usize,
+    /// Lookups that found a resident plan.
+    pub hits: u64,
+    /// Lookups that had to build (or clone) a plan.
+    pub misses: u64,
+    /// Resident plans dropped to stay within capacity.
+    pub evictions: u64,
 }
 
-/// The plan-cache hit/miss counters, resolved once so the steady-state
-/// cost on the conv hot path is a single relaxed `fetch_add`.
-fn plan_cache_counters() -> (&'static AtomicU64, &'static AtomicU64) {
+impl PlanCache {
+    /// An empty cache holding at most `cap` plans (`cap` ≥ 1).
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "PlanCache: capacity must be at least 1");
+        Self { plans: BTreeMap::new(), clock: 0, cap, hits: 0, misses: 0, evictions: 0 }
+    }
+
+    /// Number of resident plans.
+    pub fn len(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// True when no plans are resident.
+    pub fn is_empty(&self) -> bool {
+        self.plans.is_empty()
+    }
+
+    /// True when a plan for length `n` is resident (does not touch LRU
+    /// order or counters).
+    pub fn contains(&self, n: usize) -> bool {
+        self.plans.contains_key(&n)
+    }
+
+    /// Make the plan for length `n` resident, building via `build` on a
+    /// miss and evicting the least-recently-used plan when over capacity.
+    /// Updates LRU order and the instance counters.
+    pub fn ensure(&mut self, n: usize, build: impl FnOnce(usize) -> ConvPlan) {
+        self.clock += 1;
+        let stamp = self.clock;
+        if let Some((t, _)) = self.plans.get_mut(&n) {
+            *t = stamp;
+            self.hits += 1;
+            return;
+        }
+        self.misses += 1;
+        if self.plans.len() >= self.cap {
+            let lru = self.plans.iter().min_by_key(|(_, (t, _))| *t).map(|(&k, _)| k);
+            if let Some(k) = lru {
+                self.plans.remove(&k);
+                self.evictions += 1;
+            }
+        }
+        self.plans.insert(n, (stamp, build(n)));
+    }
+
+    /// Borrow the resident plan for length `n` (no counter or LRU effect);
+    /// `None` if not resident — call [`Self::ensure`] first.
+    pub fn get_mut(&mut self, n: usize) -> Option<&mut ConvPlan> {
+        self.plans.get_mut(&n).map(|(_, p)| p)
+    }
+}
+
+thread_local! {
+    /// Per-thread convolution plans keyed by transform length. Thread-local
+    /// so worker-pool threads never contend on a lock in steady state;
+    /// bounded ([`PLAN_CACHE_CAP`]) so long-lived threads sweeping many
+    /// lengths don't hoard plan memory.
+    static CONV_PLANS: RefCell<Option<PlanCache>> = const { RefCell::new(None) };
+}
+
+/// The plan-cache telemetry counters, resolved once so the steady-state
+/// cost on the conv hot path is a few relaxed `fetch_add`s.
+fn plan_cache_counters() -> (&'static AtomicU64, &'static AtomicU64, &'static AtomicU64) {
     static HITS: OnceLock<&'static AtomicU64> = OnceLock::new();
     static MISSES: OnceLock<&'static AtomicU64> = OnceLock::new();
+    static EVICTIONS: OnceLock<&'static AtomicU64> = OnceLock::new();
     (
         HITS.get_or_init(|| crate::telemetry::counter("fft.plan_cache.hits")),
         MISSES.get_or_init(|| crate::telemetry::counter("fft.plan_cache.misses")),
+        EVICTIONS.get_or_init(|| crate::telemetry::counter("fft.plan_cache.evictions")),
     )
 }
 
+/// Fetch a [`ConvPlan`] for length `n` from the process-wide master cache,
+/// building it (O(N log N) trig) at most once per length per process and
+/// **cloning** it — a memcpy of the tables and scratch, no trig — for the
+/// caller. This is what keeps scoped-pool workers fast: a fresh thread's
+/// first conv at a length costs a table copy instead of a plan rebuild.
+fn master_plan(n: usize) -> ConvPlan {
+    static MASTER: OnceLock<Mutex<BTreeMap<usize, ConvPlan>>> = OnceLock::new();
+    let master = MASTER.get_or_init(|| Mutex::new(BTreeMap::new()));
+    {
+        let cache = master.lock().expect("fft master plan cache poisoned");
+        if let Some(p) = cache.get(&n) {
+            return p.clone();
+        }
+    }
+    // Build outside the lock: construction is the expensive part, and two
+    // threads racing the same length just means one redundant build.
+    let built = ConvPlan::new(n);
+    let mut cache = master.lock().expect("fft master plan cache poisoned");
+    cache.entry(n).or_insert(built).clone()
+}
+
 /// Run `f` against this thread's cached [`ConvPlan`] for length `n`,
-/// building (and keeping) the plan on first use. This is what makes the
-/// drop-in wrappers `fft_conv_circular`/`fft_conv_linear` allocation-free
-/// in steady state without changing their signatures. Cache traffic shows
-/// up in the `fft.plan_cache.hits`/`fft.plan_cache.misses` counters
-/// (`--metrics`); note the cache is per-thread, so a fresh worker's first
-/// conv of each length is a miss.
+/// cloning the plan out of the process-wide master cache on first use (so
+/// only the first use of a length *in the whole process* pays trig). This
+/// is what makes the drop-in wrappers `fft_conv_circular`/`fft_conv_linear`
+/// allocation-free in steady state without changing their signatures.
+/// Cache traffic shows up in the `fft.plan_cache.hits`/`.misses`/
+/// `.evictions` counters (`--metrics`).
 pub fn with_conv_plan<T>(n: usize, f: impl FnOnce(&mut ConvPlan) -> T) -> T {
     CONV_PLANS.with(|cell| {
-        let mut plans = cell.borrow_mut();
-        let (hits, misses) = plan_cache_counters();
-        let plan = match plans.entry(n) {
-            std::collections::btree_map::Entry::Occupied(e) => {
-                hits.fetch_add(1, Ordering::Relaxed);
-                e.into_mut()
-            }
-            std::collections::btree_map::Entry::Vacant(v) => {
-                misses.fetch_add(1, Ordering::Relaxed);
-                v.insert(ConvPlan::new(n))
-            }
-        };
-        f(plan)
+        let mut slot = cell.borrow_mut();
+        let cache = slot.get_or_insert_with(|| PlanCache::new(PLAN_CACHE_CAP));
+        let before = (cache.hits, cache.misses, cache.evictions);
+        cache.ensure(n, master_plan);
+        let (hits, misses, evictions) = plan_cache_counters();
+        hits.fetch_add(cache.hits - before.0, Ordering::Relaxed);
+        misses.fetch_add(cache.misses - before.1, Ordering::Relaxed);
+        evictions.fetch_add(cache.evictions - before.2, Ordering::Relaxed);
+        f(cache.get_mut(n).expect("plan resident after ensure"))
     })
 }
 
@@ -551,6 +957,159 @@ mod tests {
         assert_eq!(ptr1, ptr2, "same length must hit the same cached plan");
         let ptr3 = with_conv_plan(1024, |p| p as *const ConvPlan as usize);
         assert_ne!(ptr1, ptr3, "different lengths get different plans");
+    }
+
+    #[test]
+    fn blocked_traversal_is_bit_identical_to_flat() {
+        // The cache-blocked recursion must equal the breadth-first oracle
+        // exactly — not approximately — at every size and base.
+        let mut rng = XorShift::new(90);
+        for logn in 0..=12 {
+            let n = 1 << logn;
+            let x: Vec<C64> = (0..n)
+                .map(|_| C64::new(rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0)))
+                .collect();
+            let plan = FftPlan::new(n);
+            let mut flat = x.clone();
+            plan.fft_in_place_flat(&mut flat);
+            for base in [2usize, 8, 64, 1024] {
+                let mut blocked = x.clone();
+                plan.fft_in_place_blocked(&mut blocked, base);
+                assert_eq!(blocked, flat, "n={n} base={base}: blocked != flat");
+            }
+            // The production entry point must also be exact (it routes
+            // through the same recursion with base = FFT_BLOCK_POINTS).
+            let mut prod = x.clone();
+            plan.fft_in_place(&mut prod);
+            assert_eq!(prod, flat, "n={n}: fft_in_place != flat oracle");
+            let mut inv_flat = flat.clone();
+            let mut inv_prod = flat.clone();
+            plan.ifft_in_place_flat(&mut inv_flat);
+            plan.ifft_in_place(&mut inv_prod);
+            assert_eq!(inv_prod, inv_flat, "n={n}: inverse blocked != flat");
+        }
+    }
+
+    #[test]
+    fn split_radix_matches_radix2_within_budget() {
+        let mut rng = XorShift::new(91);
+        for logn in 0..=13 {
+            let n = 1 << logn;
+            let x: Vec<C64> = (0..n)
+                .map(|_| C64::new(rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0)))
+                .collect();
+            let mut want = x.clone();
+            FftPlan::new(n).fft_in_place(&mut want);
+            let sr = SplitRadixFftPlan::new(n);
+            let mut got = vec![C64::ZERO; n];
+            sr.fft_into(&x, &mut got);
+            let d = max_abs_diff_c(&got, &want);
+            assert!(d < 1e-9, "n={n}: split-radix vs radix-2 diff={d}");
+            let mut back = vec![C64::ZERO; n];
+            sr.ifft_into(&got, &mut back);
+            let rt = max_abs_diff_c(&back, &x);
+            assert!(rt < 1e-10, "n={n}: split-radix roundtrip diff={rt}");
+        }
+    }
+
+    #[test]
+    fn real_plan_engines_agree_and_auto_route() {
+        let mut rng = XorShift::new(92);
+        let n = 1 << 10;
+        let x = rng.vec(n, -1.0, 1.0);
+        let mut r2 = RealFftPlan::with_engine(n, FftEngine::Radix2);
+        let mut sr = RealFftPlan::with_engine(n, FftEngine::SplitRadix);
+        assert_eq!(r2.engine(), FftEngine::Radix2);
+        assert_eq!(sr.engine(), FftEngine::SplitRadix);
+        let mut spec_a = vec![C64::ZERO; r2.spectrum_len()];
+        let mut spec_b = vec![C64::ZERO; sr.spectrum_len()];
+        r2.rfft_into(&x, &mut spec_a);
+        sr.rfft_into(&x, &mut spec_b);
+        let d = max_abs_diff_c(&spec_a, &spec_b);
+        assert!(d < 1e-9, "engine spectra diverge: {d}");
+        let mut back = vec![0.0; n];
+        sr.irfft_into(&spec_b, &mut back);
+        assert!(max_abs_diff(&back, &x) < 1e-10, "split-radix real roundtrip");
+        // Auto-routing: small plans stay radix-2; plans whose packed length
+        // reaches SPLIT_RADIX_MIN_POINTS flip to split-radix.
+        assert_eq!(RealFftPlan::new(1 << 10).engine(), FftEngine::Radix2);
+        assert_eq!(
+            RealFftPlan::new(2 * SPLIT_RADIX_MIN_POINTS).engine(),
+            FftEngine::SplitRadix
+        );
+        assert_eq!(ConvPlan::new(2 * SPLIT_RADIX_MIN_POINTS).engine(), FftEngine::SplitRadix);
+    }
+
+    #[test]
+    fn split_radix_conv_matches_complex_pipeline() {
+        // End-to-end at the first auto-split-radix length: the planned real
+        // conv (now on the split-radix engine) must agree with the planned
+        // complex pipeline, which runs the independent radix-2 engine.
+        let mut rng = XorShift::new(93);
+        let n = 2 * SPLIT_RADIX_MIN_POINTS;
+        let u = rng.vec(n, -1.0, 1.0);
+        let k = rng.vec(n, -1.0, 1.0);
+        let mut plan = ConvPlan::new(n);
+        assert_eq!(plan.engine(), FftEngine::SplitRadix);
+        let got = plan.circular(&u, &k);
+        let want = CplxConvPlan::new(n).circular(&u, &k);
+        let d = max_abs_diff(&got, &want);
+        assert!(d < 1e-6, "n={n}: diff={d}");
+    }
+
+    #[test]
+    fn plan_cache_evicts_lru_and_counts() {
+        let mut cache = PlanCache::new(2);
+        cache.ensure(8, ConvPlan::new);
+        cache.ensure(16, ConvPlan::new);
+        assert_eq!((cache.hits, cache.misses, cache.evictions), (0, 2, 0));
+        cache.ensure(8, ConvPlan::new); // touch 8 → 16 becomes LRU
+        assert_eq!(cache.hits, 1);
+        cache.ensure(32, ConvPlan::new); // evicts 16, not the re-touched 8
+        assert_eq!((cache.misses, cache.evictions), (3, 1));
+        assert!(cache.contains(8) && cache.contains(32) && !cache.contains(16));
+        assert_eq!(cache.len(), 2);
+        // Re-requesting the evicted length is a fresh miss + eviction.
+        cache.ensure(16, ConvPlan::new);
+        assert_eq!((cache.misses, cache.evictions), (4, 2));
+        // The rebuilt plan still works.
+        let mut rng = XorShift::new(94);
+        let u = rng.vec(16, -1.0, 1.0);
+        let k = rng.vec(16, -1.0, 1.0);
+        let got = cache.get_mut(16).unwrap().circular(&u, &k);
+        let want = crate::fft::conv::direct_conv_circular(&u, &k);
+        assert!(max_abs_diff(&got, &want) < 1e-9);
+    }
+
+    #[test]
+    fn plan_cache_eviction_survives_split_radix_lengths() {
+        // Evicting and re-ensuring a split-radix-engined plan must round
+        // trip through the master cache without losing the engine choice.
+        let n = 2 * SPLIT_RADIX_MIN_POINTS;
+        let mut cache = PlanCache::new(1);
+        cache.ensure(n, super::master_plan);
+        assert_eq!(cache.get_mut(n).unwrap().engine(), FftEngine::SplitRadix);
+        cache.ensure(8, super::master_plan); // evicts the big plan
+        assert_eq!(cache.evictions, 1);
+        assert!(!cache.contains(n));
+        cache.ensure(n, super::master_plan); // master clone, no trig rebuild
+        assert_eq!(cache.get_mut(n).unwrap().engine(), FftEngine::SplitRadix);
+        assert_eq!(cache.get_mut(n).unwrap().points(), n);
+    }
+
+    #[test]
+    fn master_plan_clones_are_independent_and_correct() {
+        let mut a = super::master_plan(64);
+        let mut b = super::master_plan(64);
+        let mut rng = XorShift::new(95);
+        let u = rng.vec(64, -1.0, 1.0);
+        let k = rng.vec(64, -1.0, 1.0);
+        let ra = a.circular(&u, &k);
+        let _ = b.circular(&k, &u); // dirty b's scratch independently
+        let rb = b.circular(&u, &k);
+        assert_eq!(ra, rb, "clones must compute identically");
+        let want = crate::fft::conv::direct_conv_circular(&u, &k);
+        assert!(max_abs_diff(&ra, &want) < 1e-9);
     }
 
     #[test]

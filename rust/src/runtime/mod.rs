@@ -10,13 +10,17 @@
 //! [`pool`] also lives here: the dependency-free [`WorkerPool`] that fans
 //! hot-path golden-model work (per-channel convolutions, per-chip shards,
 //! per-session decode steps, batch packing) across `std::thread::scope`
-//! workers.
+//! workers. [`steal`] holds the sharded work-stealing queues
+//! ([`StealQueues`] / [`StealBoard`]) behind the continuous coordinator's
+//! dispatch (ARCHITECTURE.md §5.4).
 
 pub mod manifest;
 pub mod pool;
+pub mod steal;
 
 pub use manifest::{Manifest, ModelMeta};
 pub use pool::WorkerPool;
+pub use steal::{Claim, StealBoard, StealQueues};
 
 use crate::Result;
 use anyhow::{anyhow, Context};

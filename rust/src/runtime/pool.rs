@@ -20,6 +20,9 @@
 //!   pooled path **bit-identical** to its serial loop — asserted by the
 //!   integration tests, because the benches' pooled-vs-serial comparison
 //!   is only meaningful if pooling is purely a scheduling transform.
+//!   [`WorkerPool::map_stealing`] keeps the same bit-identity guarantee
+//!   with *self-scheduling* claim order instead of pre-chunking, for
+//!   skewed per-job costs.
 //! * **Panic = panic.** A panicking worker panics the calling thread with
 //!   the same message; no work is silently dropped.
 
@@ -97,6 +100,60 @@ impl WorkerPool {
             }
         });
         chunks.into_iter().flatten().collect()
+    }
+
+    /// Run jobs `0..jobs` with **self-scheduling** workers: instead of
+    /// pre-chunking, each worker repeatedly claims the next unclaimed index
+    /// from a shared atomic counter. When per-job cost is skewed (mixed
+    /// lengths, cold caches, NUMA noise) no worker is left holding a long
+    /// contiguous tail while the others idle — the stealing analogue for
+    /// flat fan-outs, used by the per-channel conv paths. Output is in
+    /// index order and **bit-identical** to [`Self::map`]: each job's value
+    /// depends only on its index and lands in its own slot, so claim order
+    /// cannot affect any result.
+    pub fn map_stealing<T, F>(&self, jobs: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let _t = crate::telemetry::span("pool", "pool.map_stealing").arg("jobs", jobs as f64);
+        pool_maps_counter().fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        if self.threads == 1 || jobs <= 1 {
+            return (0..jobs).map(f).collect();
+        }
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        let workers = self.threads.min(jobs);
+        let mut claimed: Vec<Vec<(usize, T)>> = Vec::with_capacity(workers);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    let f = &f;
+                    let next = &next;
+                    s.spawn(move || {
+                        let mut got = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            if i >= jobs {
+                                break;
+                            }
+                            got.push((i, f(i)));
+                        }
+                        let _c = crate::telemetry::span("pool", "pool.chunk")
+                            .arg("len", got.len() as f64);
+                        got
+                    })
+                })
+                .collect();
+            for h in handles {
+                claimed.push(h.join().expect("WorkerPool: a worker panicked"));
+            }
+        });
+        let mut out: Vec<Option<T>> = (0..jobs).map(|_| None).collect();
+        for (i, v) in claimed.into_iter().flatten() {
+            debug_assert!(out[i].is_none(), "job {i} produced twice");
+            out[i] = Some(v);
+        }
+        out.into_iter().map(|v| v.expect("every job claimed exactly once")).collect()
     }
 
     /// Mutate each item in place, `f(index, item)`, chunked contiguously
@@ -192,6 +249,36 @@ mod tests {
         assert!(ids.iter().any(|&id| id != main_id), "work must leave the main thread");
         let distinct: std::collections::HashSet<_> = ids.iter().collect();
         assert!(distinct.len() > 1, "expected multiple worker threads");
+    }
+
+    #[test]
+    fn map_stealing_matches_map_bit_for_bit() {
+        for threads in [1usize, 2, 3, 8, 33] {
+            let pool = WorkerPool::new(threads);
+            let want = pool.map(101, |i| (i * 31) as f64 / 7.0);
+            let got = pool.map_stealing(101, |i| (i * 31) as f64 / 7.0);
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn map_stealing_handles_degenerate_sizes() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.map_stealing(0, |i| i), Vec::<usize>::new());
+        assert_eq!(pool.map_stealing(1, |i| i + 7), vec![7]);
+        assert_eq!(pool.map_stealing(3, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn map_stealing_runs_every_job_exactly_once() {
+        let pool = WorkerPool::new(5);
+        let calls = AtomicUsize::new(0);
+        let got = pool.map_stealing(200, |i| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 200);
+        assert!(got.iter().enumerate().all(|(i, &x)| x == i));
     }
 
     #[test]

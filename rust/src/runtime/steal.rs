@@ -1,0 +1,342 @@
+//! Sharded work-stealing queues — the dispatch substrate that replaced the
+//! coordinator's iteration-barrier lockstep (see ARCHITECTURE.md §5.4).
+//!
+//! Two layers, split so the scheduling *policy* is testable without
+//! threads:
+//!
+//! * [`StealQueues`] — the pure data structure: one deque per chip plus
+//!   per-chip `outstanding` (queued + executing) counters. No locks, no
+//!   blocking; the deterministic interleaving stress test drives it
+//!   single-threaded through randomized push/pop/steal/complete schedules.
+//! * [`StealBoard`] — [`StealQueues`] behind a `Mutex` + `Condvar` with a
+//!   `closed` flag: the blocking facade the coordinator's worker threads
+//!   spin on. One lock for all chips is deliberate — claims are O(µs)
+//!   bookkeeping while step execution (the millisecond part) runs with the
+//!   lock released, so the lock is never held across real work.
+//!
+//! ## Ownership and stealing rules
+//!
+//! * Every item is pushed to its **home chip**'s deque (the chip holding
+//!   the session's cached state). Workers prefer their own home deque and
+//!   pop from the **front** (FIFO: oldest step first, preserving arrival
+//!   order per chip).
+//! * An idle worker **steals from the busiest** other chip — the one with
+//!   the longest queue — from the **back** of that deque (the youngest
+//!   work, the classic owner/thief split: the owner keeps draining the
+//!   front undisturbed).
+//! * Steal granularity is **one step**: steps are milliseconds, so single-
+//!   step steals rebalance fast without batching heuristics.
+//! * `outstanding` is charged to the item's **origin** chip from push until
+//!   [`StealQueues::complete`] — a stolen step still counts against the
+//!   chip that owns its session state, which is what the spill/restore
+//!   budget accounting needs.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// An item claimed from the queues: the payload plus where it came from and
+/// whether it was stolen (for telemetry and the completion credit).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Claim<T> {
+    /// The chip whose deque held the item (its origin/home chip).
+    pub origin: usize,
+    /// True when the claimant's home chip differs from `origin`.
+    pub stolen: bool,
+    /// The claimed work item.
+    pub item: T,
+}
+
+/// Per-chip work deques with origin-charged outstanding counters. The pure
+/// core of the work-stealing dispatcher — single-threaded by itself; wrap
+/// it in [`StealBoard`] (or your own lock) to share across threads.
+#[derive(Debug)]
+pub struct StealQueues<T> {
+    queues: Vec<VecDeque<T>>,
+    /// Queued + executing items charged to each origin chip.
+    outstanding: Vec<usize>,
+}
+
+impl<T> StealQueues<T> {
+    /// Empty queues for `chips` chips (clamped to ≥ 1).
+    pub fn new(chips: usize) -> Self {
+        let chips = chips.max(1);
+        Self { queues: (0..chips).map(|_| VecDeque::new()).collect(), outstanding: vec![0; chips] }
+    }
+
+    /// Number of chips (deques).
+    pub fn chips(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Enqueue an item on its home chip's deque.
+    pub fn push(&mut self, chip: usize, item: T) {
+        self.queues[chip].push_back(item);
+        self.outstanding[chip] += 1;
+    }
+
+    /// Pop the oldest item queued on `home` (FIFO). The item stays charged
+    /// to `home`'s outstanding count until [`Self::complete`].
+    pub fn pop_home(&mut self, home: usize) -> Option<T> {
+        self.queues[home].pop_front()
+    }
+
+    /// Steal the youngest item from the busiest chip other than `home`
+    /// (back of the longest queue). Returns the origin chip with the item.
+    pub fn steal_from_busiest(&mut self, home: usize) -> Option<(usize, T)> {
+        let victim = (0..self.queues.len())
+            .filter(|&c| c != home && !self.queues[c].is_empty())
+            .max_by_key(|&c| self.queues[c].len())?;
+        self.queues[victim].pop_back().map(|it| (victim, it))
+    }
+
+    /// Claim work for a worker homed on `home`: own deque first, then steal
+    /// from the busiest other chip.
+    pub fn claim(&mut self, home: usize) -> Option<Claim<T>> {
+        if let Some(item) = self.pop_home(home) {
+            return Some(Claim { origin: home, stolen: false, item });
+        }
+        self.steal_from_busiest(home)
+            .map(|(origin, item)| Claim { origin, stolen: true, item })
+    }
+
+    /// Mark one item from `origin` finished, releasing its outstanding
+    /// charge. Call with the `origin` of the [`Claim`], not the executing
+    /// worker's home.
+    pub fn complete(&mut self, origin: usize) {
+        assert!(self.outstanding[origin] > 0, "StealQueues: complete({origin}) with none due");
+        self.outstanding[origin] -= 1;
+    }
+
+    /// Items currently queued (not yet claimed) on `chip`.
+    pub fn queued(&self, chip: usize) -> usize {
+        self.queues[chip].len()
+    }
+
+    /// Items charged to `chip` (queued + executing).
+    pub fn outstanding(&self, chip: usize) -> usize {
+        self.outstanding[chip]
+    }
+
+    /// Total queued items across all chips.
+    pub fn total_queued(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Total outstanding (queued + executing) items across all chips.
+    pub fn total_outstanding(&self) -> usize {
+        self.outstanding.iter().sum()
+    }
+
+    /// True when nothing is queued or executing anywhere.
+    pub fn is_idle(&self) -> bool {
+        self.total_outstanding() == 0
+    }
+}
+
+/// The blocking facade over [`StealQueues`]: a single `Mutex` + `Condvar`
+/// plus a `closed` flag. Workers call [`StealBoard::next`] in a loop and
+/// exit when it returns `None` (closed and fully drained).
+#[derive(Debug)]
+pub struct StealBoard<T> {
+    inner: Mutex<BoardState<T>>,
+    cv: Condvar,
+}
+
+#[derive(Debug)]
+struct BoardState<T> {
+    queues: StealQueues<T>,
+    closed: bool,
+}
+
+impl<T> StealBoard<T> {
+    /// A fresh open board for `chips` chips.
+    pub fn new(chips: usize) -> Self {
+        Self {
+            inner: Mutex::new(BoardState { queues: StealQueues::new(chips), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BoardState<T>> {
+        self.inner.lock().expect("StealBoard lock poisoned")
+    }
+
+    /// Enqueue one item on `chip`'s deque and wake one worker.
+    pub fn push(&self, chip: usize, item: T) {
+        self.lock().queues.push(chip, item);
+        self.cv.notify_one();
+    }
+
+    /// Enqueue a batch on `chip`'s deque and wake all workers (a wave may
+    /// hold work for several of them, stolen or not).
+    pub fn push_many(&self, chip: usize, items: impl IntoIterator<Item = T>) {
+        let mut st = self.lock();
+        for it in items {
+            st.queues.push(chip, it);
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Block until work is claimable for a worker homed on `home` (own
+    /// deque first, else steal from the busiest chip), or until the board
+    /// is closed and every deque is empty — then `None`, the worker's exit
+    /// signal. In-flight items elsewhere don't delay the `None`: execution
+    /// happens outside the lock, and completion is reported via
+    /// [`Self::complete`].
+    pub fn next(&self, home: usize) -> Option<Claim<T>> {
+        let mut st = self.lock();
+        loop {
+            if let Some(c) = st.queues.claim(home) {
+                return Some(c);
+            }
+            if st.closed {
+                return None;
+            }
+            // Timeout guards the (push → notify) vs (drain → wait) race at
+            // close time; 50 ms matches the coordinator's event-loop tick.
+            let (guard, _timeout) = self
+                .cv
+                .wait_timeout(st, Duration::from_millis(50))
+                .expect("StealBoard condvar poisoned");
+            st = guard;
+        }
+    }
+
+    /// Release the outstanding charge of a finished claim (pass the claim's
+    /// `origin`), waking the dispatcher if it is waiting for drain.
+    pub fn complete(&self, origin: usize) {
+        self.lock().queues.complete(origin);
+        self.cv.notify_all();
+    }
+
+    /// Close the board: workers drain the remaining queued items and then
+    /// exit as [`Self::next`] starts returning `None`.
+    pub fn close(&self) {
+        self.lock().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Total outstanding (queued + executing) items across all chips.
+    pub fn total_outstanding(&self) -> usize {
+        self.lock().queues.total_outstanding()
+    }
+
+    /// Items currently queued (unclaimed) across all chips.
+    pub fn total_queued(&self) -> usize {
+        self.lock().queues.total_queued()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn home_pops_fifo_and_counts_outstanding() {
+        let mut q = StealQueues::new(2);
+        q.push(0, 'a');
+        q.push(0, 'b');
+        assert_eq!(q.queued(0), 2);
+        assert_eq!(q.outstanding(0), 2);
+        assert_eq!(q.pop_home(0), Some('a'), "home pops oldest first");
+        assert_eq!(q.queued(0), 1);
+        assert_eq!(q.outstanding(0), 2, "claimed-but-running stays charged");
+        q.complete(0);
+        assert_eq!(q.outstanding(0), 1);
+        assert_eq!(q.pop_home(1), None);
+    }
+
+    #[test]
+    fn steal_takes_youngest_from_busiest_other_chip() {
+        let mut q = StealQueues::new(3);
+        q.push(1, 10);
+        q.push(2, 20);
+        q.push(2, 21);
+        q.push(2, 22);
+        let (victim, item) = q.steal_from_busiest(0).unwrap();
+        assert_eq!((victim, item), (2, 22), "busiest chip, back of its deque");
+        assert_eq!(q.outstanding(2), 3, "steal keeps the origin charge");
+        q.complete(2);
+        assert_eq!(q.outstanding(2), 2);
+        // Never steals from its own home even when home is busiest.
+        let mut own = StealQueues::new(2);
+        own.push(0, 1);
+        own.push(0, 2);
+        assert_eq!(own.steal_from_busiest(0), None);
+    }
+
+    #[test]
+    fn claim_prefers_home_then_steals() {
+        let mut q = StealQueues::new(2);
+        q.push(0, 'h');
+        q.push(1, 's');
+        let first = q.claim(0).unwrap();
+        assert_eq!((first.origin, first.stolen, first.item), (0, false, 'h'));
+        let second = q.claim(0).unwrap();
+        assert_eq!((second.origin, second.stolen, second.item), (1, true, 's'));
+        assert_eq!(q.claim(0), None);
+        assert!(!q.is_idle(), "two claims still executing");
+        q.complete(0);
+        q.complete(1);
+        assert!(q.is_idle());
+    }
+
+    #[test]
+    #[should_panic(expected = "complete(0) with none due")]
+    fn complete_without_outstanding_panics() {
+        StealQueues::<u8>::new(1).complete(0);
+    }
+
+    #[test]
+    fn board_drains_then_workers_exit_on_close() {
+        let board = Arc::new(StealBoard::new(2));
+        let done = Arc::new(AtomicUsize::new(0));
+        for item in 0..10 {
+            board.push(item % 2, item);
+        }
+        let handles: Vec<_> = (0..3)
+            .map(|wid| {
+                let board = Arc::clone(&board);
+                let done = Arc::clone(&done);
+                std::thread::spawn(move || {
+                    let home = wid % 2;
+                    while let Some(claim) = board.next(home) {
+                        done.fetch_add(1, Ordering::Relaxed);
+                        board.complete(claim.origin);
+                    }
+                })
+            })
+            .collect();
+        // Wait for drain, then close; workers must all exit.
+        while board.total_outstanding() > 0 {
+            std::thread::yield_now();
+        }
+        board.close();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(done.load(Ordering::Relaxed), 10, "every item ran exactly once");
+        assert_eq!(board.total_queued(), 0);
+    }
+
+    #[test]
+    fn close_with_queued_work_still_drains() {
+        let board = Arc::new(StealBoard::new(1));
+        board.push_many(0, 0..5);
+        board.close();
+        let board2 = Arc::clone(&board);
+        let h = std::thread::spawn(move || {
+            let mut got = 0;
+            while let Some(claim) = board2.next(0) {
+                got += 1;
+                board2.complete(claim.origin);
+            }
+            got
+        });
+        assert_eq!(h.join().unwrap(), 5, "closing does not drop queued work");
+    }
+}

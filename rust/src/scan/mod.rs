@@ -16,6 +16,11 @@
 //!   scanned recursively, offsets added back.
 //! * [`recurrence`] — generic associative-operator scans and the Mamba
 //!   `h[t] = a[t]·h[t-1] + b[t]` recurrence with its associative lift.
+//! * [`chunked`] — [`LANES`]-wide channel-blocked scan/gate/pointwise
+//!   kernels: the recurrence's dependence-free axis is *channels*, so four
+//!   adjacent channels advance per `[f64; 4]` accumulator block
+//!   (autovectorizer-friendly time-major layout), bit-identical to the
+//!   `*_scalar` oracles kept beside every chunked path.
 //!
 //! **When the mapper picks which variant.** The workload builders expose
 //! the choice as `ScanVariant` (see `crate::workloads::mamba_decoder`):
@@ -34,12 +39,18 @@
 //! chips with an inter-chip carry exchange.
 
 pub mod blelloch;
+pub mod chunked;
 pub mod hillis_steele;
 pub mod recurrence;
 pub mod serial;
 pub mod tiled;
 
 pub use blelloch::blelloch_exclusive;
+pub use chunked::{
+    gate_silu_chunked, gate_silu_scalar, mamba_scan_channels_chunked, mamba_scan_channels_scalar,
+    scan_gate_channels_chunked, scan_gate_channels_scalar, silu_slice_chunked, silu_slice_scalar,
+    LANES,
+};
 pub use hillis_steele::hillis_steele_inclusive;
 pub use recurrence::{
     mamba_scan_parallel, mamba_scan_serial, scan_gate_fused, scan_gate_unfused, silu,

@@ -6,8 +6,8 @@
 //! schedules multi-turn/streaming decode over it:
 //!
 //! ```text
-//!                 admit                     next_batch (iteration-level)
-//!  clients ──▶ SessionScheduler ───────────────▶ StepBatch {prefill|decode}
+//!                 admit                     next_batch (ready steps)
+//!  clients ──▶ SessionScheduler ───────────────▶ steps {prefill|decode}
 //!               │  prefill_q → decode ring           │
 //!               │  retire / timeout                  ▼ execute
 //!               │                               Executor::begin_session

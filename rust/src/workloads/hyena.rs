@@ -82,8 +82,9 @@ pub fn fft_core_flops(cfg: &DecoderConfig, variant: BaileyVariant) -> f64 {
 
 /// Numeric golden model for one Hyena conv module across its D channels:
 /// channel `i` is the planned real-input linear convolution of `us[i]`
-/// with `ks[i]`, fanned over `pool`'s worker threads (each worker reuses
-/// one `fft::ConvPlan` across its chunk of channels). Bit-identical to
+/// with `ks[i]`, fanned over `pool`'s worker threads with self-scheduling
+/// claim order (each worker clones one `fft::ConvPlan` from the master
+/// cache and reuses it across every channel it claims). Bit-identical to
 /// the serial per-channel loop — pooling is a scheduling transform, not a
 /// numerics one.
 pub fn hyena_conv_channels(

@@ -35,11 +35,56 @@ use crate::util::XorShift;
 /// Materialize one channel's length-`l` S4D kernel from its `N` diagonal
 /// modes: `k[t] = Σ_n c[n]·λ[n]^t`, powers built by one cumulative product
 /// per mode (no `powi` re-derivation — the same no-recomputation discipline
-/// as the FFT plan tables).
+/// as the FFT plan tables). Routes through [`s4_kernel_chunked`]; the
+/// mode-at-a-time loop survives as [`s4_kernel_scalar`], the oracle.
 pub fn s4_kernel(lambda: &[f64], c: &[f64], l: usize) -> Vec<f64> {
+    s4_kernel_chunked(lambda, c, l)
+}
+
+/// Scalar oracle for [`s4_kernel_chunked`]: one mode at a time, one
+/// cumulative power product per mode.
+pub fn s4_kernel_scalar(lambda: &[f64], c: &[f64], l: usize) -> Vec<f64> {
     assert_eq!(lambda.len(), c.len(), "s4_kernel: lambda/c length mismatch");
     let mut k = vec![0.0; l];
     for (&cn, &ln) in c.iter().zip(lambda) {
+        let mut p = 1.0;
+        for kt in k.iter_mut() {
+            *kt += cn * p;
+            p *= ln;
+        }
+    }
+    k
+}
+
+/// Kernel materialization with [`crate::scan::LANES`]-wide mode blocks:
+/// four modes' power accumulators advance together per position (each
+/// lane's `p *= λ` is the scalar update verbatim), and their four
+/// contributions land in `k[t]` as one pairwise-reduced sum. The pairwise
+/// reduction **reassociates** the mode sum relative to the scalar
+/// mode-at-a-time loop, so this path is not bit-identical — it agrees with
+/// [`s4_kernel_scalar`] to ≤ 1e-9 (the property harness pins it around
+/// 1e-15 for stable `|λ| < 1` modes), the same documented budget as the
+/// FFT factorization changes.
+pub fn s4_kernel_chunked(lambda: &[f64], c: &[f64], l: usize) -> Vec<f64> {
+    assert_eq!(lambda.len(), c.len(), "s4_kernel: lambda/c length mismatch");
+    const LANES: usize = crate::scan::LANES;
+    let mut k = vec![0.0; l];
+    let modes = lambda.len();
+    let blocks = modes / LANES;
+    for blk in 0..blocks {
+        let m0 = blk * LANES;
+        let cb: [f64; LANES] = c[m0..m0 + LANES].try_into().unwrap();
+        let lb: [f64; LANES] = lambda[m0..m0 + LANES].try_into().unwrap();
+        let mut p = [1.0f64; LANES];
+        for kt in k.iter_mut() {
+            *kt += (cb[0] * p[0] + cb[1] * p[1]) + (cb[2] * p[2] + cb[3] * p[3]);
+            for l in 0..LANES {
+                p[l] *= lb[l];
+            }
+        }
+    }
+    for m in blocks * LANES..modes {
+        let (cn, ln) = (c[m], lambda[m]);
         let mut p = 1.0;
         for kt in k.iter_mut() {
             *kt += cn * p;
@@ -65,10 +110,11 @@ pub fn s4_conv_naive(u: &[f64], lambda: &[f64], c: &[f64]) -> Vec<f64> {
 
 /// Per-channel S4 convolutions fanned over the worker pool: channel `i`
 /// convolves `us[i]` with the kernel of `(lambdas[i], cs[i])`. Kernel
-/// materialization and convolution both run inside the worker, so each
-/// worker's cached [`crate::fft::ConvPlan`] serves its whole chunk;
-/// **bit-identical** to the serial per-channel loop (contiguous
-/// deterministic chunks, per-channel independence).
+/// materialization and convolution both run inside the worker; workers
+/// self-schedule channels (`map_stealing`) and each one's cached
+/// [`crate::fft::ConvPlan`] (a master-cache clone) serves every channel it
+/// claims. **Bit-identical** to the serial per-channel loop (per-channel
+/// independence; each channel's value depends only on its own inputs).
 pub fn s4_conv_channels(
     us: &[Vec<f64>],
     lambdas: &[Vec<f64>],
@@ -77,7 +123,7 @@ pub fn s4_conv_channels(
 ) -> Vec<Vec<f64>> {
     assert_eq!(us.len(), lambdas.len(), "s4_conv_channels: channel count mismatch");
     assert_eq!(us.len(), cs.len(), "s4_conv_channels: channel count mismatch");
-    pool.map(us.len(), |i| s4_conv(&us[i], &lambdas[i], &cs[i]))
+    pool.map_stealing(us.len(), |i| s4_conv(&us[i], &lambdas[i], &cs[i]))
 }
 
 /// FLOPs of materializing all `D` channel kernels: one MAC plus one power
@@ -223,6 +269,23 @@ mod tests {
         let k = s4_kernel(&[0.5, 0.25], &[1.0, 2.0], 4);
         // t=0: 1+2; t=1: 0.5+0.5; t=2: 0.25+0.125; t=3: 0.125+0.03125.
         assert_eq!(k, vec![3.0, 1.0, 0.375, 0.15625]);
+    }
+
+    #[test]
+    fn chunked_kernel_matches_scalar_oracle() {
+        // Mode-block reassociation budget: ≤1e-9 documented, ~1e-15 typical.
+        let mut rng = XorShift::new(94);
+        for modes in [1usize, 3, 4, 5, 8, 11] {
+            for l in [1usize, 17, 500] {
+                let lambda: Vec<f64> = (0..modes).map(|_| rng.uniform(-0.99, 0.99)).collect();
+                let c = rng.vec(modes, -1.0, 1.0);
+                let d = max_abs_diff(
+                    &s4_kernel_chunked(&lambda, &c, l),
+                    &s4_kernel_scalar(&lambda, &c, l),
+                );
+                assert!(d < 1e-9, "modes={modes} l={l}: |d|={d}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,425 @@
+//! Differential property-test harness for the serving hot loop (PR 7's
+//! lock-down suite): every chunked / pooled / sharded / planned fast path
+//! is fuzzed against its scalar oracle over adversarial shapes — lengths
+//! around the chunk width (1..=17), around the plan-cache watershed
+//! (1024 ± 1), around the split-radix watershed (16384 ± 1), non-powers of
+//! two, ragged channel sets, and arbitrary chip counts.
+//!
+//! The harness is `ssm_rdu::util::prop`: a dependency-free seeded runner
+//! (xorshift64*) with greedy shrinking, so failures print a *minimal*
+//! counterexample and reproduce exactly. CI pins the default seed; set
+//! `SSM_RDU_PROP_SEED=<u64>` to explore a different corner of the input
+//! space locally (documented in docs/WORKLOADS.md).
+
+use ssm_rdu::fft::conv::{direct_conv_circular, direct_conv_linear};
+use ssm_rdu::fft::{
+    fft_conv_linear, fft_conv_linear_channels, fft_conv_linear_naive, FftEngine, FftPlan,
+    RealFftPlan,
+};
+use ssm_rdu::runtime::{StealQueues, WorkerPool};
+use ssm_rdu::scan::{
+    gate_silu_chunked, gate_silu_scalar, mamba_scan_channels_chunked, mamba_scan_channels_scalar,
+    mamba_scan_serial, scan_gate_channels_chunked, scan_gate_channels_scalar, silu_slice_chunked,
+    silu_slice_scalar,
+};
+use ssm_rdu::shard::{sharded_mamba_scan, sharded_mamba_scan_pooled};
+use ssm_rdu::util::prop::{check, no_shrink, Config};
+use ssm_rdu::util::{max_abs_diff, C64, XorShift};
+use ssm_rdu::workloads::{s4_kernel_chunked, s4_kernel_scalar};
+
+/// Property-run config: the seed comes from `SSM_RDU_PROP_SEED` when set
+/// (so CI can pin it and a developer can sweep it), else the harness
+/// default.
+fn cfg(cases: usize) -> Config {
+    let mut c = Config { cases, ..Config::default() };
+    if let Some(seed) =
+        std::env::var("SSM_RDU_PROP_SEED").ok().and_then(|v| v.parse::<u64>().ok())
+    {
+        c.seed = seed;
+    }
+    c
+}
+
+/// Lengths the chunked and planned paths are most likely to get wrong:
+/// everything around one SIMD chunk, the two cache watersheds ± 1, and a
+/// random non-power-of-two filler.
+fn interesting_len(rng: &mut XorShift) -> usize {
+    const EDGES: &[usize] = &[
+        1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16, 17, 1023, 1024, 1025, 16383,
+        16384, 16385,
+    ];
+    if rng.below(2) == 0 {
+        *rng.choose(EDGES)
+    } else {
+        rng.range(1, 2048)
+    }
+}
+
+/// Shrink a (len-driven) generated case by halving its vectors together.
+fn shrink_ab(case: &(Vec<f64>, Vec<f64>)) -> Vec<(Vec<f64>, Vec<f64>)> {
+    let n = case.0.len();
+    if n <= 1 {
+        return Vec::new();
+    }
+    vec![
+        (case.0[..n / 2].to_vec(), case.1[..n / 2].to_vec()),
+        (case.0[n / 2..].to_vec(), case.1[n / 2..].to_vec()),
+    ]
+}
+
+// ---------------------------------------------------------------- chunked
+
+#[test]
+fn prop_silu_and_gate_chunked_bit_identical_to_scalar() {
+    check(
+        &cfg(96),
+        "silu/gate chunked == scalar",
+        |r| {
+            let n = interesting_len(r);
+            (r.vec(n, -4.0, 4.0), r.vec(n, -4.0, 4.0))
+        },
+        shrink_ab,
+        |(h, z)| {
+            if silu_slice_chunked(z) != silu_slice_scalar(z) {
+                return Err("silu_slice_chunked diverged".into());
+            }
+            if gate_silu_chunked(h, z) != gate_silu_scalar(h, z) {
+                return Err("gate_silu_chunked diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mamba_scan_channels_chunked_bit_identical_to_scalar() {
+    // The channel axis carries no dependency, so chunking reorders nothing:
+    // the lockstep per-channel recurrences must match the scalar loop bit
+    // for bit at every (T, C) — including C not a multiple of the lane
+    // width and T around the edge set.
+    check(
+        &cfg(64),
+        "mamba_scan_channels chunked == scalar",
+        |r| {
+            let t = interesting_len(r).min(2048);
+            let c = r.range(1, 9);
+            (r.vec(t * c, -0.99, 0.99), r.vec(t * c, -1.0, 1.0), c)
+        },
+        no_shrink,
+        |(a, b, c)| {
+            let got = mamba_scan_channels_chunked(a, b, *c);
+            let want = mamba_scan_channels_scalar(a, b, *c);
+            if got != want {
+                return Err(format!("diverged at C={c}, T={}", a.len() / c));
+            }
+            let gated_got = scan_gate_channels_chunked(a, b, b, *c);
+            let gated_want = scan_gate_channels_scalar(a, b, b, *c);
+            if gated_got != gated_want {
+                return Err(format!("gated scan diverged at C={c}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_s4_kernel_chunked_within_reassociation_budget() {
+    // Mode-block chunking reassociates the mode sum, so bit-identity is not
+    // on the table; the documented contract is ≤1e-9 against the scalar
+    // oracle (see workloads::s4).
+    check(
+        &cfg(48),
+        "s4_kernel chunked ~ scalar (1e-9)",
+        |r| {
+            let modes = r.range(1, 18);
+            let l = interesting_len(r).min(1024);
+            (r.vec(modes, -0.99, -0.01), r.vec(modes, -1.0, 1.0), l)
+        },
+        no_shrink,
+        |(lambda, c, l)| {
+            let d =
+                max_abs_diff(&s4_kernel_chunked(lambda, c, *l), &s4_kernel_scalar(lambda, c, *l));
+            if d <= 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("diff {d:e} at modes={}, L={l}", lambda.len()))
+            }
+        },
+    );
+}
+
+// ------------------------------------------------------------------ FFT
+
+#[test]
+fn prop_blocked_fft_traversal_bit_identical_to_flat() {
+    // The cache-blocked traversal reorders butterflies across *independent*
+    // halves only — same twiddles, same pairing, same order within each
+    // butterfly — so it must be exactly the breadth-first result, for any
+    // power-of-two length and any power-of-two base block.
+    check(
+        &cfg(48),
+        "blocked FFT == flat FFT (bit-identical)",
+        |r| {
+            let n = 1usize << r.range(1, 12);
+            let base = 1usize << r.range(1, 11);
+            (r.vec(2 * n, -1.0, 1.0), base)
+        },
+        no_shrink,
+        |(re_im, base)| {
+            let n = re_im.len() / 2;
+            let plan = FftPlan::new(n);
+            let x: Vec<C64> =
+                (0..n).map(|i| C64::new(re_im[2 * i], re_im[2 * i + 1])).collect();
+            let mut flat = x.clone();
+            plan.fft_in_place_flat(&mut flat);
+            let mut blocked = x;
+            plan.fft_in_place_blocked(&mut blocked, *base);
+            if flat != blocked {
+                return Err(format!("traversals diverged at n={n}, base={base}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_split_radix_engine_matches_radix2_engine() {
+    // Split-radix uses a different butterfly grouping, so agreement is
+    // analytic, not bit-level: ≤1e-9 between engines on the packed forward
+    // spectrum and ≤1e-10 on the roundtrip.
+    check(
+        &cfg(24),
+        "split-radix ~ radix-2 (1e-9)",
+        |r| (1usize << r.range(3, 13), r.next_u64()),
+        no_shrink,
+        |&(n, seed)| {
+            let mut rng = XorShift::new(seed);
+            let x = rng.vec(n, -1.0, 1.0);
+            let mut sr = RealFftPlan::with_engine(n, FftEngine::SplitRadix);
+            let mut r2 = RealFftPlan::with_engine(n, FftEngine::Radix2);
+            let mut spec_sr = vec![C64::ZERO; n / 2 + 1];
+            let mut spec_r2 = vec![C64::ZERO; n / 2 + 1];
+            sr.rfft_into(&x, &mut spec_sr);
+            r2.rfft_into(&x, &mut spec_r2);
+            let worst = spec_sr
+                .iter()
+                .zip(&spec_r2)
+                .map(|(a, b)| (*a - *b).abs())
+                .fold(0.0f64, f64::max);
+            if worst > 1e-9 {
+                return Err(format!("spectra diverged by {worst:e} at n={n}"));
+            }
+            let mut back = vec![0.0; n];
+            sr.irfft_into(&spec_sr, &mut back);
+            let rt = max_abs_diff(&back, &x);
+            if rt > 1e-10 {
+                return Err(format!("split-radix roundtrip err {rt:e} at n={n}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_planned_conv_matches_direct_oracle_at_awkward_lengths() {
+    // End-to-end: the planned real-input convolution (auto-routed engine)
+    // against the O(N²) direct oracles on small adversarial lengths.
+    check(
+        &cfg(48),
+        "fft_conv ~ direct oracle (1e-9)",
+        |r| {
+            let n = r.range(1, 160);
+            (r.vec(n, -1.0, 1.0), r.vec(n, -1.0, 1.0))
+        },
+        shrink_ab,
+        |(u, k)| {
+            let dl = max_abs_diff(&fft_conv_linear(u, k), &direct_conv_linear(u, k));
+            if dl > 1e-9 {
+                return Err(format!("linear diff {dl:e} at n={}", u.len()));
+            }
+            let dc = max_abs_diff(
+                &ssm_rdu::fft::fft_conv_circular(u, k),
+                &direct_conv_circular(u, k),
+            );
+            if dc > 1e-9 {
+                return Err(format!("circular diff {dc:e} at n={}", u.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn split_radix_conv_agrees_with_naive_at_16k_watershed() {
+    // L = 16384 ± 1 straddles SPLIT_RADIX_MIN_POINTS: 16383/16384 pad to a
+    // 32768-point split-radix transform, while shorter lengths stay on
+    // radix-2. Both sides of the watershed must agree with the unplanned
+    // complex-FFT baseline (O(N log N), so this stays fast in debug builds).
+    let mut rng = XorShift::new(cfg(1).seed);
+    for l in [16383usize, 16384, 16385] {
+        let u = rng.vec(l, -1.0, 1.0);
+        let k = rng.vec(l, -1.0, 1.0);
+        let d = max_abs_diff(&fft_conv_linear(&u, &k), &fft_conv_linear_naive(&u, &k));
+        assert!(d < 1e-6, "L={l}: planned vs naive diff {d:e}");
+    }
+}
+
+// ------------------------------------------------------- pooled / sharded
+
+#[test]
+fn prop_pooled_ragged_channels_bit_identical_to_serial() {
+    // Ragged channel sets through the work-stealing pool: every channel
+    // must be byte-equal to its own serial convolution regardless of the
+    // claim order or thread count.
+    check(
+        &cfg(16),
+        "pooled channels == serial per-channel",
+        |r| {
+            let ch = r.range(1, 6);
+            let pairs: Vec<(Vec<f64>, Vec<f64>)> = (0..ch)
+                .map(|_| {
+                    let n = r.range(1, 300);
+                    (r.vec(n, -1.0, 1.0), r.vec(n, -1.0, 1.0))
+                })
+                .collect();
+            (pairs, r.range(1, 5))
+        },
+        no_shrink,
+        |(pairs, threads)| {
+            let us: Vec<Vec<f64>> = pairs.iter().map(|p| p.0.clone()).collect();
+            let ks: Vec<Vec<f64>> = pairs.iter().map(|p| p.1.clone()).collect();
+            let pool = WorkerPool::new(*threads);
+            let got = fft_conv_linear_channels(&us, &ks, &pool);
+            for (i, (u, k)) in us.iter().zip(&ks).enumerate() {
+                if got[i] != fft_conv_linear(u, k) {
+                    return Err(format!("channel {i} diverged under {threads} threads"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sharded_scan_bit_identical_across_chip_counts() {
+    // The sharded scan's per-chip arithmetic is shared between the serial
+    // and pooled drivers, so any chip count must reproduce the single-chip
+    // stream bit for bit — and the pooled fan-out must match the serial
+    // sharded driver exactly.
+    check(
+        &cfg(32),
+        "sharded scan == pooled sharded scan",
+        |r| {
+            let n = interesting_len(r).min(4096);
+            (r.vec(n, -0.99, 0.99), r.vec(n, -1.0, 1.0), r.range(1, 6), r.range(1, 4))
+        },
+        no_shrink,
+        |(a, b, chips, threads)| {
+            let serial = sharded_mamba_scan(a, b, *chips);
+            let pooled = sharded_mamba_scan_pooled(a, b, *chips, &WorkerPool::new(*threads));
+            if serial != pooled {
+                return Err(format!("pooled diverged at chips={chips}, threads={threads}"));
+            }
+            // Single-chip sharding degenerates to the serial recurrence.
+            if *chips == 1 && serial != mamba_scan_serial(a, b) {
+                return Err("chips=1 shard != serial recurrence".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_map_stealing_bit_identical_to_map() {
+    check(
+        &cfg(32),
+        "map_stealing == map",
+        |r| (r.range(0, 80), r.range(1, 9), r.next_u64()),
+        no_shrink,
+        |&(jobs, threads, salt)| {
+            let pool = WorkerPool::new(threads);
+            let f = |i: usize| (i as f64 + (salt % 1024) as f64).sqrt() * 3.0;
+            let a: Vec<f64> = pool.map(jobs, f);
+            let b: Vec<f64> = pool.map_stealing(jobs, f);
+            if a == b {
+                Ok(())
+            } else {
+                Err(format!("diverged at jobs={jobs}, threads={threads}"))
+            }
+        },
+    );
+}
+
+// ------------------------------------------------------------- stealing
+
+#[test]
+fn prop_steal_queues_conserve_and_order_work() {
+    // Single-threaded model check of the deque policy itself: under any
+    // randomized push/claim/complete schedule, (a) nothing is lost or run
+    // twice, (b) home claims come off the *front* of the home deque in
+    // push order, and (c) outstanding accounting returns to zero.
+    check(
+        &cfg(64),
+        "StealQueues conservation",
+        |r| (r.range(1, 4), r.range(1, 40), r.next_u64()),
+        no_shrink,
+        |&(chips, items, seed)| {
+            let mut rng = XorShift::new(seed);
+            let mut q: StealQueues<(usize, usize)> = StealQueues::new(chips);
+            let mut pushed = 0usize;
+            let mut seen: Vec<(usize, usize)> = Vec::new();
+            let mut last_home_seq = vec![0usize; chips];
+            let mut inflight: Vec<usize> = Vec::new(); // origins
+            let mut seq = 0usize;
+            while pushed < items || !q.is_idle() {
+                match rng.below(3) {
+                    0 if pushed < items => {
+                        let chip = rng.below(chips);
+                        seq += 1;
+                        q.push(chip, (chip, seq));
+                        pushed += 1;
+                    }
+                    1 => {
+                        let home = rng.below(chips);
+                        if let Some(claim) = q.claim(home) {
+                            let (origin, s) = claim.item;
+                            if claim.origin != origin {
+                                return Err("claim origin mislabeled".into());
+                            }
+                            if !claim.stolen {
+                                // Home pops are FIFO per chip.
+                                if s <= last_home_seq[origin] {
+                                    return Err(format!("home pop out of order on chip {origin}"));
+                                }
+                                last_home_seq[origin] = s;
+                            }
+                            seen.push((origin, s));
+                            inflight.push(claim.origin);
+                        }
+                    }
+                    _ => {
+                        if let Some(origin) = inflight.pop() {
+                            q.complete(origin);
+                        }
+                    }
+                }
+            }
+            while let Some(origin) = inflight.pop() {
+                q.complete(origin);
+            }
+            if seen.len() != items {
+                return Err(format!("{} of {items} items executed", seen.len()));
+            }
+            let mut uniq = seen.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            if uniq.len() != items {
+                return Err("an item executed twice".into());
+            }
+            if q.total_outstanding() != 0 || q.total_queued() != 0 {
+                return Err("queues did not drain to zero".into());
+            }
+            Ok(())
+        },
+    );
+}
