@@ -1,0 +1,98 @@
+//! Fleet scaling gate (`BENCH_fleet.json`): a 2-node fleet must deliver at
+//! least the goodput of one node on the same offered load — otherwise the
+//! router, migration machinery, or per-node batching regressed into
+//! negative scaling.
+//!
+//! Method: calibrate one node's token capacity under full overload, offer a
+//! Poisson trace at 1.2× that capacity (so a single node saturates and
+//! queues, while two nodes have headroom), set the SLO to the single-node
+//! overload p50, and compare goodput — SLO-meeting tokens per modeled
+//! second — at 1 node vs 2 nodes. All quantities are modeled time, so the
+//! gate is machine-independent and deterministic; wall-clock `bench()`
+//! numbers are recorded informationally for the perf trajectory.
+
+use ssm_rdu::bench::{black_box, Bencher};
+use ssm_rdu::fleet::{
+    calibrate_single_node, generate, mock_factory, run_fleet, FleetConfig, FleetScenario,
+    TraceConfig,
+};
+
+/// CI gate: 2-node goodput must be ≥ this multiple of 1-node goodput.
+const GATE_MIN_SCALING: f64 = 1.0;
+
+fn main() {
+    let mut b = Bencher::from_env("fleet");
+    let sessions = 64;
+    let seed = 7;
+    let factory = mock_factory();
+    let base_cfg = FleetConfig::demo(1, 2);
+
+    // Calibrate: one node's capacity and overload p50 set the offered rate
+    // and the SLO (scale-free against the modeled step costs).
+    let probe_cfg = TraceConfig::poisson(sessions, 1.0, seed);
+    let (node_tok_s, p50_us) =
+        calibrate_single_node(&base_cfg, &generate(&probe_cfg), &factory).expect("calibration");
+    assert!(node_tok_s > 0.0 && p50_us > 0.0);
+    b.metric("calibrated_node_tok_s", node_tok_s);
+    b.metric("calibrated_p50_us", p50_us);
+
+    let rate = 1.2 * node_tok_s / probe_cfg.mean_decode_tokens();
+    let trace = generate(&TraceConfig::poisson(sessions, rate, seed));
+
+    let run_nodes = |nodes: usize| {
+        let mut cfg = FleetConfig::demo(nodes, 2);
+        cfg.slo_us = p50_us;
+        run_fleet(&cfg, &trace, &FleetScenario::default(), &factory).expect("fleet run")
+    };
+
+    // Wall-clock cost of simulating the fleet (informational only — the
+    // gate compares modeled goodput, not host time).
+    b.bench("simulate_1node_wall", || {
+        black_box(run_nodes(1));
+    });
+    b.bench("simulate_2node_wall", || {
+        black_box(run_nodes(2));
+    });
+
+    let r1 = run_nodes(1);
+    let r2 = run_nodes(2);
+    assert_eq!(r1.completed, sessions as u64, "1-node run must complete");
+    assert_eq!(r2.completed, sessions as u64, "2-node run must complete");
+
+    let scaling =
+        if r1.goodput_tok_s > 0.0 { r2.goodput_tok_s / r1.goodput_tok_s } else { f64::INFINITY };
+    b.metric("goodput_1node_tok_s", r1.goodput_tok_s);
+    b.metric("goodput_2node_tok_s", r2.goodput_tok_s);
+    b.metric("throughput_1node_tok_s", r1.throughput_tok_s);
+    b.metric("throughput_2node_tok_s", r2.throughput_tok_s);
+    b.metric("slo_attainment_1node", r1.slo_attainment);
+    b.metric("slo_attainment_2node", r2.slo_attainment);
+    b.metric("p99_us_1node", r1.p99_us);
+    b.metric("p99_us_2node", r2.p99_us);
+    b.metric("goodput_scaling_2node", scaling);
+    b.metric("gate_min_scaling", GATE_MIN_SCALING);
+
+    // Write BENCH_fleet.json before the verdict so a failure still leaves
+    // the numbers on disk for the perf-trajectory artifact.
+    b.finish();
+
+    if scaling < GATE_MIN_SCALING {
+        eprintln!(
+            "FLEET SCALING REGRESSION: 2-node goodput {:.0} tok/s is {:.2}x the 1-node \
+             {:.0} tok/s (gate ≥ {:.2}x) at 1.2x single-node offered load, SLO {:.2} us",
+            r2.goodput_tok_s, scaling, r1.goodput_tok_s, GATE_MIN_SCALING, p50_us
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "fleet gate OK: 2-node goodput {:.0} tok/s = {:.2}x 1-node {:.0} tok/s \
+         (gate ≥ {:.2}x; SLO {:.2} us, attainment {:.1}% -> {:.1}%)",
+        r2.goodput_tok_s,
+        scaling,
+        r1.goodput_tok_s,
+        GATE_MIN_SCALING,
+        p50_us,
+        r1.slo_attainment * 100.0,
+        r2.slo_attainment * 100.0,
+    );
+}

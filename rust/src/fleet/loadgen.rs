@@ -1,0 +1,337 @@
+//! Trace-driven load generation: deterministic session-arrival traces for
+//! the fleet simulator.
+//!
+//! A trace is a time-sorted list of [`Arrival`]s — each one session with an
+//! arrival instant, a model family, a prompt length, a decode budget, and a
+//! placement-affinity key (a tenant id class the locality-affine policy
+//! keys on). Three arrival processes are modeled:
+//!
+//! * **Poisson** — memoryless arrivals at a constant rate; the steady-state
+//!   baseline every queueing result assumes.
+//! * **Bursty** — an on/off cycle: a high-rate burst for the leading `duty`
+//!   fraction of every period, a low base rate for the rest. Exercises
+//!   admission-queue growth and the router's load-spreading under spikes.
+//! * **Diurnal** — a sinusoidal swing around a mean rate, the day/night
+//!   traffic envelope a long-running fleet actually sees.
+//!
+//! Non-constant rates are sampled exactly with Lewis–Shedler thinning:
+//! candidate gaps are drawn from the process's *peak* rate and accepted
+//! with probability `rate(t) / peak`, so the accepted stream is a true
+//! inhomogeneous Poisson process with the configured intensity. Everything
+//! derives from one [`crate::util::XorShift`] seed: the same
+//! [`TraceConfig`] always yields the bit-identical trace, which is what
+//! lets the fleet tests replay a trace against different topologies and
+//! compare token streams exactly.
+
+use crate::runtime::ModelKind;
+use crate::session::SessionId;
+use crate::util::XorShift;
+
+/// Arrival-process shapes for [`generate`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Constant-rate memoryless arrivals (`rate` sessions/second).
+    Poisson { rate: f64 },
+    /// On/off cycle: `burst_rate` for the first `duty` fraction of every
+    /// `period` seconds, `base_rate` for the remainder.
+    Bursty { base_rate: f64, burst_rate: f64, period: f64, duty: f64 },
+    /// Sinusoidal day/night swing: `mean_rate · (1 + amplitude·sin(2πt/period))`,
+    /// clamped at zero (an `amplitude` of 1.0 idles the troughs entirely).
+    Diurnal { mean_rate: f64, amplitude: f64, period: f64 },
+}
+
+impl ArrivalProcess {
+    /// Instantaneous arrival intensity at time `t` (sessions/second).
+    pub fn rate_at(&self, t: f64) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate } => rate,
+            ArrivalProcess::Bursty { base_rate, burst_rate, period, duty } => {
+                let phase = (t % period.max(1e-12)) / period.max(1e-12);
+                if phase < duty {
+                    burst_rate
+                } else {
+                    base_rate
+                }
+            }
+            ArrivalProcess::Diurnal { mean_rate, amplitude, period } => {
+                let s = (2.0 * std::f64::consts::PI * t / period.max(1e-12)).sin();
+                (mean_rate * (1.0 + amplitude * s)).max(0.0)
+            }
+        }
+    }
+
+    /// Upper bound on [`rate_at`](Self::rate_at) over all `t` — the
+    /// thinning envelope.
+    pub fn peak_rate(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate } => rate,
+            ArrivalProcess::Bursty { base_rate, burst_rate, .. } => base_rate.max(burst_rate),
+            ArrivalProcess::Diurnal { mean_rate, amplitude, .. } => {
+                mean_rate * (1.0 + amplitude.abs())
+            }
+        }
+    }
+
+    /// CLI name of the process shape.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson { .. } => "poisson",
+            ArrivalProcess::Bursty { .. } => "bursty",
+            ArrivalProcess::Diurnal { .. } => "diurnal",
+        }
+    }
+}
+
+/// One generated session arrival.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Arrival {
+    /// Session id, unique and dense from 1.
+    pub id: SessionId,
+    /// Arrival instant in modeled seconds from trace start (nondecreasing).
+    pub at: f64,
+    pub model: ModelKind,
+    /// Prompt length in tokens (scales the modeled prefill cost).
+    pub prompt_tokens: usize,
+    /// Tokens the session decodes (the prefill's first token counts).
+    pub decode_steps: usize,
+    /// Placement-affinity key — a tenant/user class; the locality-affine
+    /// policy maps it to a preferred node.
+    pub affinity: u64,
+}
+
+/// One load-generation scenario: how many sessions arrive, under what
+/// process, with what prompt/decode length mixes.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Sessions in the trace.
+    pub sessions: usize,
+    pub process: ArrivalProcess,
+    /// `(prompt_tokens, weight)` mix; weights need not sum to 1.
+    pub prompt_mix: Vec<(usize, f64)>,
+    /// `(decode_steps, weight)` mix.
+    pub decode_mix: Vec<(usize, f64)>,
+    /// Distinct affinity keys (tenants) to draw from.
+    pub tenants: usize,
+    /// PRNG seed; the whole trace is a pure function of this config.
+    pub seed: u64,
+}
+
+impl TraceConfig {
+    /// Default interactive-serving mix: mostly short prompts with a long
+    /// tail, short-to-medium decodes.
+    pub fn default_mixes() -> (Vec<(usize, f64)>, Vec<(usize, f64)>) {
+        (
+            vec![(16, 0.50), (64, 0.35), (256, 0.15)],
+            vec![(8, 0.50), (32, 0.35), (128, 0.15)],
+        )
+    }
+
+    fn with_process(sessions: usize, process: ArrivalProcess, seed: u64) -> Self {
+        let (prompt_mix, decode_mix) = Self::default_mixes();
+        Self { sessions, process, prompt_mix, decode_mix, tenants: 8, seed }
+    }
+
+    /// Constant-rate trace.
+    pub fn poisson(sessions: usize, rate: f64, seed: u64) -> Self {
+        Self::with_process(sessions, ArrivalProcess::Poisson { rate }, seed)
+    }
+
+    /// Bursty trace: 4× the base rate for the leading 20% of every cycle,
+    /// with the cycle sized to span several bursts across the trace.
+    pub fn bursty(sessions: usize, base_rate: f64, seed: u64) -> Self {
+        let period = (sessions as f64 / base_rate.max(1e-9) / 8.0).max(1e-6);
+        Self::with_process(
+            sessions,
+            ArrivalProcess::Bursty {
+                base_rate,
+                burst_rate: 4.0 * base_rate,
+                period,
+                duty: 0.2,
+            },
+            seed,
+        )
+    }
+
+    /// Diurnal trace: ±80% sinusoidal swing around `mean_rate`, two full
+    /// day/night cycles across the trace.
+    pub fn diurnal(sessions: usize, mean_rate: f64, seed: u64) -> Self {
+        let period = (sessions as f64 / mean_rate.max(1e-9) / 2.0).max(1e-6);
+        Self::with_process(
+            sessions,
+            ArrivalProcess::Diurnal { mean_rate, amplitude: 0.8, period },
+            seed,
+        )
+    }
+
+    /// Weighted mean of the prompt-length mix (for capacity estimates).
+    pub fn mean_prompt_tokens(&self) -> f64 {
+        weighted_mean(&self.prompt_mix)
+    }
+
+    /// Weighted mean of the decode-length mix.
+    pub fn mean_decode_tokens(&self) -> f64 {
+        weighted_mean(&self.decode_mix)
+    }
+}
+
+fn weighted_mean(mix: &[(usize, f64)]) -> f64 {
+    let total: f64 = mix.iter().map(|(_, w)| w).sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    mix.iter().map(|&(v, w)| v as f64 * w).sum::<f64>() / total
+}
+
+/// Draw one value from a `(value, weight)` mix.
+fn pick(mix: &[(usize, f64)], rng: &mut XorShift) -> usize {
+    let total: f64 = mix.iter().map(|(_, w)| w.max(0.0)).sum();
+    if total <= 0.0 || mix.is_empty() {
+        return 1;
+    }
+    let mut r = rng.next_f64() * total;
+    for &(v, w) in mix {
+        r -= w.max(0.0);
+        if r <= 0.0 {
+            return v;
+        }
+    }
+    mix.last().map(|&(v, _)| v).unwrap_or(1)
+}
+
+/// Generate the arrival trace for `cfg`: `cfg.sessions` arrivals, sorted by
+/// time, ids dense from 1. Deterministic in `cfg` (bit-identical replays).
+pub fn generate(cfg: &TraceConfig) -> Vec<Arrival> {
+    let peak = cfg.process.peak_rate();
+    assert!(peak > 0.0, "arrival process needs a positive peak rate");
+    let mut rng = XorShift::new(cfg.seed);
+    let mut out = Vec::with_capacity(cfg.sessions);
+    let mut t = 0.0f64;
+    let mut id: SessionId = 0;
+    while out.len() < cfg.sessions {
+        // Candidate gap at the envelope rate; `1 - u ∈ (0, 1]` keeps the
+        // log finite.
+        let u = rng.next_f64();
+        t += -(1.0 - u).ln() / peak;
+        // Thinning: accept with probability rate(t)/peak.
+        if rng.next_f64() * peak > cfg.process.rate_at(t) {
+            continue;
+        }
+        id += 1;
+        let model = if rng.next_f64() < 0.5 { ModelKind::Mamba } else { ModelKind::Hyena };
+        let prompt_tokens = pick(&cfg.prompt_mix, &mut rng).max(1);
+        let decode_steps = pick(&cfg.decode_mix, &mut rng).max(1);
+        let affinity = rng.next_u64() % cfg.tenants.max(1) as u64;
+        out.push(Arrival { id, at: t, model, prompt_tokens, decode_steps, affinity });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traces_are_deterministic_and_well_formed() {
+        let cfg = TraceConfig::poisson(200, 50.0, 11);
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a, b, "same config, same trace");
+        assert_eq!(a.len(), 200);
+        for (i, arr) in a.iter().enumerate() {
+            assert_eq!(arr.id, (i + 1) as SessionId, "ids dense from 1");
+            assert!(arr.prompt_tokens >= 1 && arr.decode_steps >= 1);
+            assert!(arr.affinity < 8);
+            if i > 0 {
+                assert!(arr.at >= a[i - 1].at, "arrivals sorted by time");
+            }
+        }
+        let c = generate(&TraceConfig { seed: 12, ..cfg });
+        assert_ne!(a, c, "different seed, different trace");
+    }
+
+    #[test]
+    fn poisson_mean_gap_matches_rate() {
+        let rate = 100.0;
+        let trace = generate(&TraceConfig::poisson(4000, rate, 3));
+        let span = trace.last().unwrap().at - trace[0].at;
+        let mean_gap = span / (trace.len() - 1) as f64;
+        let expect = 1.0 / rate;
+        assert!(
+            (mean_gap - expect).abs() < 0.15 * expect,
+            "mean gap {mean_gap:.5}s vs 1/rate {expect:.5}s"
+        );
+    }
+
+    #[test]
+    fn bursty_concentrates_arrivals_in_the_duty_window() {
+        let process =
+            ArrivalProcess::Bursty { base_rate: 10.0, burst_rate: 200.0, period: 1.0, duty: 0.2 };
+        let (prompt_mix, decode_mix) = TraceConfig::default_mixes();
+        let cfg = TraceConfig {
+            sessions: 2000,
+            process,
+            prompt_mix,
+            decode_mix,
+            tenants: 8,
+            seed: 9,
+        };
+        let trace = generate(&cfg);
+        let in_burst = trace.iter().filter(|a| (a.at % 1.0) < 0.2).count();
+        // Burst window carries 200·0.2 = 40 of the 48 arrivals/cycle ≈ 83%.
+        assert!(
+            in_burst as f64 > 0.7 * trace.len() as f64,
+            "burst window holds {} of {}",
+            in_burst,
+            trace.len()
+        );
+        assert_eq!(process.peak_rate(), 200.0);
+        assert_eq!(process.rate_at(0.1), 200.0);
+        assert_eq!(process.rate_at(0.5), 10.0);
+    }
+
+    #[test]
+    fn diurnal_rate_swings_and_clamps() {
+        let p = ArrivalProcess::Diurnal { mean_rate: 100.0, amplitude: 1.0, period: 4.0 };
+        assert!((p.rate_at(1.0) - 200.0).abs() < 1e-9, "crest at quarter period");
+        assert!(p.rate_at(3.0).abs() < 1e-9, "trough idles");
+        assert_eq!(p.peak_rate(), 200.0);
+        // Troughs thin arrivals: the first half-period (high rate) carries
+        // far more than the second.
+        let (prompt_mix, decode_mix) = TraceConfig::default_mixes();
+        let cfg = TraceConfig {
+            sessions: 1000,
+            process: p,
+            prompt_mix,
+            decode_mix,
+            tenants: 4,
+            seed: 21,
+        };
+        let trace = generate(&cfg);
+        let first_half = trace.iter().filter(|a| (a.at % 4.0) < 2.0).count();
+        assert!(first_half as f64 > 0.75 * trace.len() as f64, "{first_half}");
+    }
+
+    #[test]
+    fn mixes_only_emit_configured_lengths() {
+        let cfg = TraceConfig::poisson(500, 80.0, 4);
+        let trace = generate(&cfg);
+        for a in &trace {
+            assert!(matches!(a.prompt_tokens, 16 | 64 | 256), "{}", a.prompt_tokens);
+            assert!(matches!(a.decode_steps, 8 | 32 | 128), "{}", a.decode_steps);
+        }
+        // All three bins appear and both models occur.
+        assert!(trace.iter().any(|a| a.prompt_tokens == 256));
+        assert!(trace.iter().any(|a| a.decode_steps == 128));
+        assert!(trace.iter().any(|a| a.model == ModelKind::Mamba));
+        assert!(trace.iter().any(|a| a.model == ModelKind::Hyena));
+        assert!((TraceConfig::poisson(1, 1.0, 1).mean_prompt_tokens() - 68.8).abs() < 1e-9);
+        assert!((TraceConfig::poisson(1, 1.0, 1).mean_decode_tokens() - 34.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn named_constructors_choose_their_process() {
+        assert_eq!(TraceConfig::poisson(10, 5.0, 1).process.name(), "poisson");
+        assert_eq!(TraceConfig::bursty(10, 5.0, 1).process.name(), "bursty");
+        assert_eq!(TraceConfig::diurnal(10, 5.0, 1).process.name(), "diurnal");
+    }
+}

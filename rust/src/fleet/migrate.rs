@@ -1,0 +1,152 @@
+//! Migration and fail-stop checkpointing: what moves when a session leaves
+//! a node, and the durable store that makes fail-stop lossless.
+//!
+//! The migration lifecycle is **checkpoint → transfer → resume**:
+//!
+//! 1. **checkpoint** — detach the scheduler ticket
+//!    ([`crate::session::MigratedSession`]: model, shape, decode budget,
+//!    tokens done) and the moving payload
+//!    ([`super::node::SessionPayload`]: the `SsmState`, the last token,
+//!    the unprefilled prompt). Together they are a [`Checkpoint`] — the
+//!    complete session, no executor-side residue (executors are stateless
+//!    beyond the `SsmState`).
+//! 2. **transfer** — the checkpoint's bytes cross the node-to-node link at
+//!    the α–β price ([`crate::arch::InterchipLink::transfer_seconds`]);
+//!    the session is *in transit* and schedulable nowhere.
+//! 3. **resume** — the destination inserts the state into a chip cache,
+//!    re-admits the ticket at its carried progress, and the next decode
+//!    step produces exactly the token the source would have produced.
+//!
+//! [`CheckpointStore`] is the fail-stop half: with checkpointing on, the
+//! fleet writes a session's checkpoint through on admission and after
+//! every delivered token (modeled as asynchronous — it never adds to batch
+//! time, which is why `puts`/`bytes_written` are tracked for the report
+//! instead). A fail-stop recovers every session of the dead node from the
+//! store at its last *delivered* token: in-flight steps were never
+//! delivered, so re-executing them is exactly-once delivery, and zero
+//! tokens are lost.
+
+use super::node::SessionPayload;
+use crate::session::{MigratedSession, SessionId};
+use std::collections::BTreeMap;
+
+/// A complete detached session: scheduler ticket + moving payload.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub ticket: MigratedSession,
+    pub payload: SessionPayload,
+}
+
+impl Checkpoint {
+    /// Bytes on the wire (what the α–β transfer prices).
+    pub fn bytes(&self) -> usize {
+        self.payload.bytes()
+    }
+}
+
+/// Write-through checkpoint store (the durable side of fail-stop).
+#[derive(Debug, Default)]
+pub struct CheckpointStore {
+    map: BTreeMap<SessionId, Checkpoint>,
+    /// Checkpoint writes since start (admissions + per-token updates).
+    pub puts: u64,
+    /// Cumulative checkpoint bytes written.
+    pub bytes_written: u64,
+}
+
+impl CheckpointStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write (or overwrite) `id`'s checkpoint.
+    pub fn put(&mut self, id: SessionId, ck: Checkpoint) {
+        self.puts += 1;
+        self.bytes_written += ck.bytes() as u64;
+        self.map.insert(id, ck);
+    }
+
+    /// Remove and return `id`'s checkpoint (fail-stop recovery).
+    pub fn take(&mut self, id: SessionId) -> Option<Checkpoint> {
+        self.map.remove(&id)
+    }
+
+    /// Drop `id`'s checkpoint (retirement).
+    pub fn remove(&mut self, id: SessionId) {
+        self.map.remove(&id);
+    }
+
+    /// Checkpointed sessions.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// Fleet-wide migration/failover counters for the report.
+#[derive(Debug, Clone, Default)]
+pub struct MigrationStats {
+    /// Live migrations started (drains + scripted moves).
+    pub migrations: u64,
+    /// Fail-stop recoveries started.
+    pub failovers: u64,
+    /// Bytes moved across the node-to-node link.
+    pub bytes_moved: u64,
+    /// Modeled α–β transfer time summed over all moves.
+    pub transfer_seconds: f64,
+    /// Checkpoint-store writes (informational; modeled off the critical
+    /// path).
+    pub checkpoint_puts: u64,
+    /// Checkpoint-store bytes written.
+    pub checkpoint_bytes: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ModelKind;
+    use crate::session::{Phase, SessionInfo, SsmState, StateShape};
+
+    fn checkpoint(tokens_done: usize) -> Checkpoint {
+        let shape = StateShape::mamba(2, 4, 8); // 256 B
+        let state = SsmState::zeros(&shape).unwrap();
+        Checkpoint {
+            ticket: MigratedSession {
+                info: SessionInfo { model: ModelKind::Mamba, shape, decode_steps: 8 },
+                phase: Phase::Decode,
+                tokens_done,
+            },
+            payload: SessionPayload {
+                state: Some(state),
+                last_token: Some(vec![1.0; 8]), // 32 B
+                prompt: None,
+            },
+        }
+    }
+
+    #[test]
+    fn checkpoint_bytes_price_state_and_token() {
+        let ck = checkpoint(1);
+        assert_eq!(ck.bytes(), 256 + 32);
+    }
+
+    #[test]
+    fn store_overwrites_and_accounts() {
+        let mut s = CheckpointStore::new();
+        assert!(s.is_empty());
+        s.put(1, checkpoint(1));
+        s.put(1, checkpoint(2));
+        s.put(2, checkpoint(1));
+        assert_eq!(s.len(), 2, "overwrite does not duplicate");
+        assert_eq!(s.puts, 3, "every write counts");
+        assert_eq!(s.bytes_written, 3 * 288);
+        let ck = s.take(1).expect("present");
+        assert_eq!(ck.ticket.tokens_done, 2, "latest write wins");
+        assert!(s.take(1).is_none());
+        s.remove(2);
+        assert!(s.is_empty());
+    }
+}

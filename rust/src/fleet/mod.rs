@@ -1,0 +1,46 @@
+//! Fleet tier: a front-end router over N simulated multi-chip nodes, with
+//! live session migration and trace-driven load generation.
+//!
+//! One node runs the single-node serving stack ([`crate::session`]'s
+//! scheduler + per-chip state caches + a [`crate::coordinator::Executor`]);
+//! the fleet puts a placement [`Router`] in front of several of them and
+//! drives everything in modeled time:
+//!
+//! ```text
+//!   loadgen trace ──▶ Router ──place──▶ Node 0 [chip0|chip1] ─┐
+//!   (Poisson/bursty/   │               Node 1 [chip0|chip1] ─┤ tokens,
+//!    diurnal arrivals)  │   migrate     ...                   │ latencies
+//!                       ╰──◀─────────▶ Node N-1 ─────────────┘
+//!                          α–β link      │
+//!                          (bytes/s+lat) ╰─ checkpoint store (fail-stop)
+//! ```
+//!
+//! * [`loadgen`] — arrival-process traces (Poisson, bursty, diurnal) with
+//!   mixed prefill/decode lengths and tenant affinity keys.
+//! * [`router`] — placement policies (round-robin, least-loaded,
+//!   locality-affine) and the session → node table.
+//! * [`node`] — the simulated node: continuous batching in modeled time,
+//!   eager execution with buffered delivery, export/resume hooks.
+//! * [`migrate`] — the checkpoint → transfer → resume lifecycle and the
+//!   write-through [`CheckpointStore`] that makes fail-stop lossless.
+//! * [`sim`] — the event loop, drain/fail scenarios, and the SLO report
+//!   (p50/p99/p999 token latency, goodput, per-node attribution).
+//!
+//! The `fleet` CLI subcommand wires this to telemetry (per-node tracks,
+//! migration spans, `fleet.*` counters); `docs/FLEET.md` is the operator
+//! guide and `docs/ARCHITECTURE.md` §9 the design rationale.
+
+pub mod loadgen;
+pub mod migrate;
+pub mod node;
+pub mod router;
+pub mod sim;
+
+pub use loadgen::{generate, Arrival, ArrivalProcess, TraceConfig};
+pub use migrate::{Checkpoint, CheckpointStore, MigrationStats};
+pub use node::{Delivered, Node, SessionPayload, StepCosts};
+pub use router::{PlacementPolicy, Router, RouterStats, AFFINITY_OVERLOAD};
+pub use sim::{
+    calibrate_single_node, mock_factory, run_fleet, FleetConfig, FleetReport, FleetScenario,
+    NodeReport,
+};

@@ -1,0 +1,376 @@
+//! One simulated serving node: the fleet's unit of capacity and failure.
+//!
+//! A node wraps the same serving stack the single-node coordinator runs —
+//! a [`SessionScheduler`] doing continuous batching, one [`StateCache`] per
+//! chip (sessions stripe across chips by id, as in
+//! [`crate::coordinator::ContinuousConfig`]), and an [`Executor`] — but
+//! driven in *modeled* time by the fleet event loop instead of threads:
+//! the node executes a whole iteration batch eagerly when it starts, prices
+//! it with the [`crate::dfmodel::decode`] cost hook (batch time = slowest
+//! step + spill traffic, exactly the [`crate::session::driver`] model), and
+//! buffers the results until the batch's modeled completion instant.
+//! Buffering is what makes fail-stop honest: a node killed mid-batch
+//! simply drops the buffer, and the aborted steps re-execute elsewhere
+//! from checkpointed state — deterministically producing the same tokens,
+//! because executors are stateless beyond the [`SsmState`] that travels
+//! with the session (true of [`crate::coordinator::MockExecutor`]; a
+//! requirement on any future PJRT decode path).
+
+use crate::coordinator::Executor;
+use crate::runtime::ModelKind;
+use crate::session::{
+    CacheStats, MemoryBudget, MigratedSession, Phase, SchedStats, SchedulerConfig, ScheduledStep,
+    SessionId, SessionInfo, SessionScheduler, SsmState, StateCache,
+};
+use crate::telemetry;
+use crate::Result;
+use anyhow::anyhow;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Per-model decode-step costs (modeled seconds per token), shared by every
+/// node so the fleet's timing model is uniform. Prefill of a `P`-token
+/// prompt costs `P ×` the per-token figure, as in the session driver.
+#[derive(Debug, Clone, Copy)]
+pub struct StepCosts {
+    pub mamba: f64,
+    pub hyena: f64,
+}
+
+impl StepCosts {
+    pub fn of(&self, model: ModelKind) -> f64 {
+        match model {
+            ModelKind::Hyena => self.hyena,
+            _ => self.mamba,
+        }
+    }
+
+    /// The slower of the two families — the conservative per-step figure
+    /// capacity calibration uses.
+    pub fn worst(&self) -> f64 {
+        self.mamba.max(self.hyena)
+    }
+}
+
+/// Everything that travels with a session when it leaves a node: the
+/// checkpointed decode state, the last emitted token (the next decode
+/// step's input), and — for sessions that never prefilled — the prompt.
+#[derive(Debug, Clone, Default)]
+pub struct SessionPayload {
+    pub state: Option<SsmState>,
+    pub last_token: Option<Vec<f32>>,
+    pub prompt: Option<Vec<f32>>,
+}
+
+impl SessionPayload {
+    /// Bytes on the wire for the α–β transfer price: state bytes plus 4 B
+    /// per f32 of token/prompt.
+    pub fn bytes(&self) -> usize {
+        self.state.as_ref().map(|s| s.bytes()).unwrap_or(0)
+            + self.last_token.as_ref().map(|t| t.len() * 4).unwrap_or(0)
+            + self.prompt.as_ref().map(|p| p.len() * 4).unwrap_or(0)
+    }
+}
+
+/// One token delivered at a batch's completion instant.
+#[derive(Debug)]
+pub struct Delivered {
+    pub id: SessionId,
+    /// 0-based token index within the session (strictly sequential).
+    pub step: usize,
+    pub token: Vec<f32>,
+    /// Post-step state snapshot for write-through checkpointing; `None`
+    /// once the session retired (nothing left to checkpoint).
+    pub state: Option<SsmState>,
+    pub retired: bool,
+}
+
+/// A buffered step result awaiting its batch's completion instant.
+struct PendingStep {
+    step: ScheduledStep,
+    token: Vec<f32>,
+    state_snapshot: Option<SsmState>,
+}
+
+/// One simulated multi-chip node.
+pub struct Node {
+    pub id: usize,
+    chips: usize,
+    sched: SessionScheduler,
+    caches: Vec<StateCache>,
+    exec: Box<dyn Executor>,
+    costs: StepCosts,
+    prompts: BTreeMap<SessionId, Vec<f32>>,
+    last_token: BTreeMap<SessionId, Vec<f32>>,
+    /// Modeled instant the in-flight batch completes (stale when idle).
+    pub busy_until: f64,
+    pending: Vec<PendingStep>,
+    /// Router stops placing here; remaining sessions evacuate at the next
+    /// batch boundary.
+    pub draining: bool,
+    /// Fail-stopped: the node executes nothing further.
+    pub failed: bool,
+    pub batches: u64,
+    pub batched_steps: u64,
+    pub tokens: u64,
+}
+
+impl Node {
+    /// Build a node with `chips` state caches splitting `cache_bytes`
+    /// evenly (floored at one `max_state_bytes` each so a single state
+    /// always fits, as `serve --continuous` does), spilling at `dram`
+    /// prices. Cache spill/restore instants land on globally numbered chip
+    /// tracks (`id · chips + c`) so a fleet trace keeps per-chip
+    /// attribution across nodes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        id: usize,
+        chips: usize,
+        cache_bytes: usize,
+        max_state_bytes: usize,
+        dram: crate::arch::MemTech,
+        sched: SchedulerConfig,
+        costs: StepCosts,
+        exec: Box<dyn Executor>,
+    ) -> Self {
+        let chips = chips.max(1);
+        let per_chip = (cache_bytes / chips).max(max_state_bytes.max(1));
+        let caches = (0..chips)
+            .map(|c| {
+                let global = id * chips + c;
+                let mut cache = StateCache::new(MemoryBudget::new(per_chip), dram);
+                cache.set_track(telemetry::chip_track(global));
+                telemetry::name_track(
+                    telemetry::PID_HOST,
+                    telemetry::chip_track(global),
+                    format!("node {id} chip {c}"),
+                );
+                cache
+            })
+            .collect();
+        telemetry::name_track(
+            telemetry::PID_HOST,
+            telemetry::node_track(id),
+            format!("node {id}"),
+        );
+        Self {
+            id,
+            chips,
+            sched: SessionScheduler::new(sched),
+            caches,
+            exec,
+            costs,
+            prompts: BTreeMap::new(),
+            last_token: BTreeMap::new(),
+            busy_until: 0.0,
+            pending: Vec::new(),
+            draining: false,
+            failed: false,
+            batches: 0,
+            batched_steps: 0,
+            tokens: 0,
+        }
+    }
+
+    /// The chip cache holding session `id`'s state (sessions stripe by id).
+    fn cache_of(&mut self, id: SessionId) -> &mut StateCache {
+        let c = (id as usize) % self.chips;
+        &mut self.caches[c]
+    }
+
+    /// Admit a brand-new session with its synthesized prompt.
+    pub fn admit(&mut self, id: SessionId, info: SessionInfo, prompt: Vec<f32>) {
+        self.prompts.insert(id, prompt);
+        self.sched.admit(id, info, Instant::now());
+    }
+
+    /// Live sessions on this node (admitted, not retired/exported).
+    pub fn live(&self) -> usize {
+        self.sched.live()
+    }
+
+    /// Is a batch currently executing (results buffered, completion
+    /// pending)?
+    pub fn batch_in_flight(&self) -> bool {
+        !self.pending.is_empty()
+    }
+
+    /// True when the node can start a batch right now (draining nodes
+    /// never start new batches — they evacuate at the current boundary).
+    pub fn ready(&self) -> bool {
+        !self.failed && !self.draining && self.pending.is_empty() && !self.sched.is_idle()
+    }
+
+    /// Start (and eagerly execute) the next iteration batch at modeled
+    /// instant `now`. Returns the batch's completion instant, or `None`
+    /// when the node has nothing to run. Results are buffered until
+    /// [`complete_batch`](Self::complete_batch).
+    pub fn start_batch(&mut self, now: f64) -> Result<Option<f64>> {
+        if !self.ready() {
+            return Ok(None);
+        }
+        let steps = self.sched.next_batch();
+        if steps.is_empty() {
+            return Ok(None);
+        }
+        let spill0: f64 = self.caches.iter().map(|c| c.stats.spill_seconds).sum();
+        let mut batch_seconds = 0.0f64;
+        let mut pending = Vec::with_capacity(steps.len());
+        for s in steps {
+            let (token, snapshot) = match s.phase {
+                Phase::Prefill => {
+                    let prompt = self
+                        .prompts
+                        .remove(&s.id)
+                        .ok_or_else(|| anyhow!("session {} has no prompt on node {}", s.id, self.id))?;
+                    let shape = self.shape_of(s.id, s.model)?;
+                    let ptoks = (prompt.len() / shape.d_model.max(1)).max(1);
+                    let (state, first) = self.exec.begin_session(s.model, &prompt, &shape)?;
+                    let snapshot = state.clone();
+                    self.cache_of(s.id).insert(s.id, state);
+                    batch_seconds = batch_seconds.max(self.costs.of(s.model) * ptoks as f64);
+                    (first, snapshot)
+                }
+                Phase::Decode => {
+                    let token = self
+                        .last_token
+                        .get(&s.id)
+                        .cloned()
+                        .ok_or_else(|| anyhow!("session {} has no previous token", s.id))?;
+                    let mut state = self
+                        .cache_of(s.id)
+                        .checkout(s.id)
+                        .ok_or_else(|| anyhow!("session {} lost its cached state", s.id))?;
+                    let out = self.exec.step_decode(s.model, &mut state, &token)?;
+                    let snapshot = state.clone();
+                    self.cache_of(s.id).checkin(s.id, state);
+                    batch_seconds = batch_seconds.max(self.costs.of(s.model));
+                    (out, snapshot)
+                }
+            };
+            pending.push(PendingStep { step: s, token, state_snapshot: Some(snapshot) });
+        }
+        let spill1: f64 = self.caches.iter().map(|c| c.stats.spill_seconds).sum();
+        batch_seconds += spill1 - spill0;
+        self.batches += 1;
+        self.batched_steps += pending.len() as u64;
+        self.busy_until = now + batch_seconds;
+        telemetry::instant_on(
+            "fleet",
+            "node.batch",
+            telemetry::node_track(self.id),
+            "steps",
+            pending.len() as f64,
+        );
+        self.pending = pending;
+        Ok(Some(self.busy_until))
+    }
+
+    /// Deliver the buffered batch at its completion instant. Retired
+    /// sessions free their cache slot and token buffer.
+    pub fn complete_batch(&mut self) -> Vec<Delivered> {
+        let pending = std::mem::take(&mut self.pending);
+        let now = Instant::now();
+        let mut out = Vec::with_capacity(pending.len());
+        for mut p in pending {
+            let s = p.step;
+            self.tokens += 1;
+            self.last_token.insert(s.id, p.token.clone());
+            let retired = self.sched.on_step_done(s.id, now)
+                == crate::session::StepOutcome::Retired;
+            if retired {
+                self.cache_of(s.id).remove(s.id);
+                self.last_token.remove(&s.id);
+                p.state_snapshot = None;
+            }
+            out.push(Delivered {
+                id: s.id,
+                step: s.step,
+                token: p.token,
+                state: p.state_snapshot,
+                retired,
+            });
+        }
+        out
+    }
+
+    /// Fail-stop the node: cancel the in-flight batch (no tokens from it
+    /// are ever delivered) and refuse all further work. The sessions'
+    /// recovery happens fleet-side from the checkpoint store — nothing is
+    /// read back from a failed node.
+    pub fn fail(&mut self) {
+        self.failed = true;
+        for p in &self.pending {
+            self.sched.abort_step(p.step.id);
+        }
+        self.pending.clear();
+        telemetry::instant_on("fleet", "node.fail", telemetry::node_track(self.id), "node", self.id as f64);
+    }
+
+    /// Detach a live session for migration: scheduler ticket plus the
+    /// moving payload (state checked out of the chip cache, last token,
+    /// unprefilled prompt). `None` while the session has a step in the
+    /// in-flight batch — migrate at the batch boundary.
+    pub fn export_session(&mut self, id: SessionId) -> Option<(MigratedSession, SessionPayload)> {
+        let ticket = self.sched.export(id)?;
+        let payload = SessionPayload {
+            state: self.cache_of(id).remove(id),
+            last_token: self.last_token.remove(&id),
+            prompt: self.prompts.remove(&id),
+        };
+        Some((ticket, payload))
+    }
+
+    /// Attach a migrated/recovered session: payload pieces land in the chip
+    /// cache and token buffers, the ticket re-enters the scheduler at its
+    /// carried progress.
+    pub fn resume_session(&mut self, id: SessionId, ticket: MigratedSession, payload: SessionPayload) {
+        if let Some(state) = payload.state {
+            self.cache_of(id).insert(id, state);
+        }
+        if let Some(token) = payload.last_token {
+            self.last_token.insert(id, token);
+        }
+        if let Some(prompt) = payload.prompt {
+            self.prompts.insert(id, prompt);
+        }
+        self.sched.admit_migrated(id, ticket, Instant::now());
+    }
+
+    /// State shape of a live session (carried in its [`SessionInfo`]).
+    fn shape_of(&self, id: SessionId, model: ModelKind) -> Result<crate::session::StateShape> {
+        self.sched
+            .info(id)
+            .map(|i| i.shape)
+            .ok_or_else(|| anyhow!("session {id} ({model}) unknown to node {} scheduler", self.id))
+    }
+
+    /// Ids of every live session on this node, ascending.
+    pub fn live_ids(&self) -> Vec<SessionId> {
+        self.sched.live_ids()
+    }
+
+    /// Scheduler lifecycle counters.
+    pub fn sched_stats(&self) -> SchedStats {
+        self.sched.stats.clone()
+    }
+
+    /// Per-chip cache counters (index = local chip id).
+    pub fn chip_stats(&self) -> Vec<CacheStats> {
+        self.caches.iter().map(|c| c.stats.clone()).collect()
+    }
+
+    /// Node-level rollup of the per-chip counters.
+    pub fn cache_stats(&self) -> CacheStats {
+        CacheStats::merge_all(&self.chip_stats())
+    }
+
+    /// Mean iteration-batch occupancy.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_steps as f64 / self.batches as f64
+        }
+    }
+}

@@ -1,0 +1,277 @@
+//! The fleet front-end router: session placement across nodes.
+//!
+//! The router owns the session → node table and the placement policy. It
+//! never touches state or tokens — those move through
+//! [`super::node::Node`] exports and the α–β-priced transfers in
+//! [`super::sim`] — it only *decides* where sessions live:
+//!
+//! * **round-robin** — rotate over eligible nodes; the no-information
+//!   baseline.
+//! * **least-loaded** — place on the node with the fewest live sessions
+//!   (ties break to the lowest node id, keeping placement deterministic).
+//! * **locality-affine** — hash the arrival's affinity key (tenant/user
+//!   class) to a preferred node, so a tenant's sessions co-locate and its
+//!   working set stays in one node's caches; fall back to least-loaded
+//!   when the preferred node is draining, failed, or more than
+//!   [`AFFINITY_OVERLOAD`]× plus slack above the least-loaded node (a hot
+//!   tenant must not melt one node while others idle).
+//!
+//! Draining and failed nodes are never placement-eligible; when no node is
+//! eligible the placement fails and the caller counts the session refused.
+
+use super::node::Node;
+use crate::session::SessionId;
+use std::collections::BTreeMap;
+
+/// Load multiplier past which the affine policy abandons the preferred
+/// node: preferred is used while `live ≤ AFFINITY_OVERLOAD · least + 2`.
+pub const AFFINITY_OVERLOAD: usize = 2;
+
+/// Session placement policies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    RoundRobin,
+    LeastLoaded,
+    LocalityAffine,
+}
+
+impl PlacementPolicy {
+    /// Parse a CLI name (`round-robin`, `least-loaded`, `affine`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "round-robin" | "rr" => Some(Self::RoundRobin),
+            "least-loaded" | "ll" => Some(Self::LeastLoaded),
+            "affine" | "locality-affine" => Some(Self::LocalityAffine),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::RoundRobin => "round-robin",
+            Self::LeastLoaded => "least-loaded",
+            Self::LocalityAffine => "affine",
+        }
+    }
+}
+
+/// Router placement/migration counters.
+#[derive(Debug, Clone, Default)]
+pub struct RouterStats {
+    /// Successful initial placements.
+    pub placed: u64,
+    /// Arrivals refused because no node was eligible.
+    pub refused: u64,
+    /// Affine placements that landed on the preferred node.
+    pub affinity_hits: u64,
+    /// Affine placements that overflowed to the least-loaded fallback.
+    pub affinity_spills: u64,
+    /// Live migrations started (drain, rebalance, scripted moves).
+    pub migrations: u64,
+    /// Sessions re-placed after a node fail-stop.
+    pub failovers: u64,
+}
+
+/// The placement table + policy.
+pub struct Router {
+    policy: PlacementPolicy,
+    assignments: BTreeMap<SessionId, usize>,
+    rr_next: usize,
+    pub stats: RouterStats,
+}
+
+impl Router {
+    pub fn new(policy: PlacementPolicy) -> Self {
+        Self { policy, assignments: BTreeMap::new(), rr_next: 0, stats: RouterStats::default() }
+    }
+
+    pub fn policy(&self) -> PlacementPolicy {
+        self.policy
+    }
+
+    /// Choose a node for a session with affinity key `affinity`. Returns
+    /// `None` when every node is draining or failed. Does **not** record
+    /// the assignment — call [`assign`](Self::assign) once the session
+    /// actually lands (placement and arrival are separated by a transfer
+    /// for migrations).
+    pub fn place(&mut self, affinity: u64, nodes: &[Node]) -> Option<usize> {
+        let eligible: Vec<usize> =
+            (0..nodes.len()).filter(|&n| !nodes[n].draining && !nodes[n].failed).collect();
+        if eligible.is_empty() {
+            return None;
+        }
+        let least = *eligible
+            .iter()
+            .min_by_key(|&&n| (nodes[n].live(), n))
+            .expect("eligible is non-empty");
+        let chosen = match self.policy {
+            PlacementPolicy::LeastLoaded => least,
+            PlacementPolicy::RoundRobin => {
+                // Next eligible node at or after the rotor.
+                let k = eligible
+                    .iter()
+                    .position(|&n| n >= self.rr_next % nodes.len())
+                    .unwrap_or(0);
+                let n = eligible[k];
+                self.rr_next = n + 1;
+                n
+            }
+            PlacementPolicy::LocalityAffine => {
+                let preferred = (affinity % nodes.len() as u64) as usize;
+                let ok = eligible.contains(&preferred)
+                    && nodes[preferred].live() <= AFFINITY_OVERLOAD * nodes[least].live() + 2;
+                if ok {
+                    self.stats.affinity_hits += 1;
+                    preferred
+                } else {
+                    self.stats.affinity_spills += 1;
+                    least
+                }
+            }
+        };
+        Some(chosen)
+    }
+
+    /// Record that `id` now lives on `node`.
+    pub fn assign(&mut self, id: SessionId, node: usize) {
+        self.assignments.insert(id, node);
+    }
+
+    /// Which node serves `id` (`None` while retired, lost, or in transit).
+    pub fn node_of(&self, id: SessionId) -> Option<usize> {
+        self.assignments.get(&id).copied()
+    }
+
+    /// Drop `id` from the table (retirement, loss, or transfer start).
+    pub fn unassign(&mut self, id: SessionId) {
+        self.assignments.remove(&id);
+    }
+
+    /// Sessions currently assigned to `node`, ascending.
+    pub fn sessions_on(&self, node: usize) -> Vec<SessionId> {
+        self.assignments.iter().filter(|&(_, &n)| n == node).map(|(&id, _)| id).collect()
+    }
+
+    /// Total assigned sessions (excludes in-transit).
+    pub fn assigned(&self) -> usize {
+        self.assignments.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::MemTech;
+    use crate::coordinator::MockExecutor;
+    use crate::fleet::node::StepCosts;
+    use crate::runtime::ModelKind;
+    use crate::session::{SchedulerConfig, SessionInfo, StateShape};
+
+    fn test_nodes(n: usize) -> Vec<Node> {
+        (0..n)
+            .map(|id| {
+                Node::new(
+                    id,
+                    2,
+                    1 << 20,
+                    4096,
+                    MemTech::Hbm3e,
+                    SchedulerConfig::default(),
+                    StepCosts { mamba: 1e-6, hyena: 2e-6 },
+                    Box::new(MockExecutor::new(1, 1)),
+                )
+            })
+            .collect()
+    }
+
+    fn admit(node: &mut Node, id: SessionId) {
+        let shape = StateShape::mamba(2, 4, 8);
+        node.admit(
+            id,
+            SessionInfo { model: ModelKind::Mamba, shape, decode_steps: 4 },
+            vec![0.5; 8],
+        );
+    }
+
+    #[test]
+    fn least_loaded_picks_emptiest_with_lowest_id_ties() {
+        let mut nodes = test_nodes(3);
+        let mut r = Router::new(PlacementPolicy::LeastLoaded);
+        assert_eq!(r.place(0, &nodes), Some(0), "all empty: lowest id");
+        admit(&mut nodes[0], 1);
+        r.assign(1, 0);
+        assert_eq!(r.place(0, &nodes), Some(1), "node 0 now loaded");
+        admit(&mut nodes[1], 2);
+        admit(&mut nodes[2], 3);
+        assert_eq!(r.place(0, &nodes), Some(0), "tie at 1 breaks to lowest id");
+    }
+
+    #[test]
+    fn round_robin_rotates_and_skips_ineligible() {
+        let mut nodes = test_nodes(3);
+        let mut r = Router::new(PlacementPolicy::RoundRobin);
+        assert_eq!(r.place(0, &nodes), Some(0));
+        assert_eq!(r.place(0, &nodes), Some(1));
+        assert_eq!(r.place(0, &nodes), Some(2));
+        assert_eq!(r.place(0, &nodes), Some(0), "wraps");
+        nodes[1].draining = true;
+        assert_eq!(r.place(0, &nodes), Some(2), "skips the draining node");
+    }
+
+    #[test]
+    fn affine_prefers_hash_node_until_overloaded() {
+        let mut nodes = test_nodes(2);
+        let mut r = Router::new(PlacementPolicy::LocalityAffine);
+        // affinity 1 → node 1 while balanced.
+        assert_eq!(r.place(1, &nodes), Some(1));
+        assert_eq!(r.stats.affinity_hits, 1);
+        // Pile sessions onto node 1 until the overload bound trips
+        // (least = 0 live → bound is 2·0 + 2 = 2).
+        for id in 1..=3 {
+            admit(&mut nodes[1], id);
+            r.assign(id, 1);
+        }
+        assert_eq!(r.place(1, &nodes), Some(0), "overloaded preferred spills");
+        assert_eq!(r.stats.affinity_spills, 1);
+        // A failed preferred node also spills.
+        nodes[1].failed = true;
+        assert_eq!(r.place(1, &nodes), Some(0));
+        assert_eq!(r.stats.affinity_spills, 2);
+    }
+
+    #[test]
+    fn no_eligible_node_refuses() {
+        let mut nodes = test_nodes(2);
+        nodes[0].draining = true;
+        nodes[1].failed = true;
+        let mut r = Router::new(PlacementPolicy::LeastLoaded);
+        assert_eq!(r.place(0, &nodes), None);
+    }
+
+    #[test]
+    fn assignment_table_round_trips() {
+        let mut r = Router::new(PlacementPolicy::LeastLoaded);
+        r.assign(7, 1);
+        r.assign(9, 1);
+        r.assign(8, 0);
+        assert_eq!(r.node_of(7), Some(1));
+        assert_eq!(r.sessions_on(1), vec![7, 9]);
+        assert_eq!(r.assigned(), 3);
+        r.unassign(7);
+        assert_eq!(r.node_of(7), None);
+        assert_eq!(r.sessions_on(1), vec![9]);
+    }
+
+    #[test]
+    fn policy_names_parse_and_round_trip() {
+        for p in [
+            PlacementPolicy::RoundRobin,
+            PlacementPolicy::LeastLoaded,
+            PlacementPolicy::LocalityAffine,
+        ] {
+            assert_eq!(PlacementPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(PlacementPolicy::parse("ll"), Some(PlacementPolicy::LeastLoaded));
+        assert_eq!(PlacementPolicy::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,984 @@
+//! The fleet simulator: an event-driven loop over N nodes in modeled time.
+//!
+//! Arrivals (from [`super::loadgen`]), batch completions, scripted
+//! drain/fail/migrate events, and migration resumes are processed in
+//! global time order; after every event, each idle non-draining node with
+//! ready work starts its next iteration batch at the current instant. A
+//! batch executes eagerly when it starts but delivers its tokens at its
+//! modeled completion instant ([`super::node::Node`] explains why that
+//! buffering makes fail-stop honest). Ties at one instant resolve by a
+//! fixed priority — completions, then scenario events, then resumes, then
+//! arrivals, then ascending id — so every run of the same config, trace,
+//! and scenario is bit-identical, including the token streams themselves.
+//!
+//! Per-token latency is `completion − max(arrival, previous completion)`:
+//! queueing delay, batch co-residency stalls, spill traffic, and migration
+//! transfers all surface in it. The SLO report counts a token as *good*
+//! when its latency is at or under [`FleetConfig::slo_us`]; goodput is
+//! good tokens per modeled second.
+
+use super::loadgen::Arrival;
+use super::migrate::{Checkpoint, CheckpointStore, MigrationStats};
+use super::node::{Node, SessionPayload, StepCosts};
+use super::router::{PlacementPolicy, Router, RouterStats};
+use crate::arch::{InterchipLink, RduConfig};
+use crate::coordinator::{Executor, ExecutorFactory, MockExecutor};
+use crate::dfmodel::decode::decode_step_workload;
+use crate::runtime::ModelKind;
+use crate::session::driver::cost_config;
+use crate::session::{
+    CacheStats, MigratedSession, Phase, SchedStats, SchedulerConfig, SessionId, SessionInfo,
+    StateShape,
+};
+use crate::telemetry;
+use crate::util::XorShift;
+use crate::Result;
+use anyhow::anyhow;
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
+
+/// One fleet topology + serving policy.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    pub nodes: usize,
+    pub chips_per_node: usize,
+    /// Per-node resident state budget in bytes, split across the node's
+    /// chips (floored at one state per chip).
+    pub node_cache_bytes: usize,
+    pub sched: SchedulerConfig,
+    pub mamba_shape: StateShape,
+    pub hyena_shape: StateShape,
+    pub policy: PlacementPolicy,
+    /// Node-to-node network link (α–β priced); migrations and failover
+    /// restores cross it.
+    pub network: InterchipLink,
+    pub rdu: RduConfig,
+    /// Per-token latency SLO in µs; `≤ 0` disables the SLO cut (every
+    /// token counts as good).
+    pub slo_us: f64,
+    /// Write-through checkpointing: fail-stop recovers every session at
+    /// its last delivered token (zero lost tokens). Off, a fail-stop
+    /// loses the dead node's sessions.
+    pub checkpointing: bool,
+    /// Record every delivered token value per session in the report (the
+    /// bit-identity tests' hook; costs memory on large traces).
+    pub record_tokens: bool,
+    /// Seed for prompt synthesis (per-session streams derive from it).
+    pub seed: u64,
+}
+
+impl FleetConfig {
+    /// A small realistic fleet: the session driver's demo shapes, a
+    /// PCIe-class node-to-node network, least-loaded placement, and a
+    /// per-node budget of 32 worst-case states per node so saturation
+    /// exercises the spill path.
+    pub fn demo(nodes: usize, chips_per_node: usize) -> Self {
+        let mamba_shape = StateShape::mamba(8, 16, 64);
+        let hyena_shape = StateShape::hyena(8, 64, 256);
+        let max_state = mamba_shape.bytes().max(hyena_shape.bytes());
+        Self {
+            nodes: nodes.max(1),
+            chips_per_node: chips_per_node.max(1),
+            node_cache_bytes: 32 * max_state,
+            sched: SchedulerConfig::default(),
+            mamba_shape,
+            hyena_shape,
+            policy: PlacementPolicy::LeastLoaded,
+            network: InterchipLink::pcie5(),
+            rdu: RduConfig::hs_scan_mode(),
+            slo_us: 0.0,
+            checkpointing: true,
+            record_tokens: false,
+            seed: 7,
+        }
+    }
+
+    pub fn shape_for(&self, model: ModelKind) -> StateShape {
+        match model {
+            ModelKind::Hyena => self.hyena_shape,
+            _ => self.mamba_shape,
+        }
+    }
+
+    /// Largest single state either family allocates.
+    pub fn max_state_bytes(&self) -> usize {
+        self.mamba_shape.bytes().max(self.hyena_shape.bytes())
+    }
+
+    /// Per-model decode-step prices from the DFModel cost hook — the same
+    /// table [`crate::session::driver::simulate`] uses, so single-node and
+    /// fleet modeled times agree.
+    pub fn step_costs(&self) -> StepCosts {
+        let per = |model: ModelKind| {
+            let shape = self.shape_for(model);
+            let w = crate::workloads::family_workload(model);
+            decode_step_workload(w, &cost_config(&shape), shape.layers, &self.rdu).seconds
+        };
+        StepCosts { mamba: per(ModelKind::Mamba), hyena: per(ModelKind::Hyena) }
+    }
+}
+
+/// Scripted operational events driven against the fleet.
+#[derive(Debug, Clone, Default)]
+pub struct FleetScenario {
+    /// `(time, node)`: begin draining `node` — no new placements, every
+    /// session live-migrates away at the next batch boundary.
+    pub drain: Vec<(f64, usize)>,
+    /// `(time, node)`: fail-stop `node` — its in-flight batch is aborted
+    /// undelivered and its sessions recover from the checkpoint store.
+    pub fail: Vec<(f64, usize)>,
+    /// `(time, session, dest)`: live-migrate one session to `dest` (at the
+    /// next batch boundary if its step is in flight).
+    pub migrate: Vec<(f64, SessionId, usize)>,
+}
+
+/// Per-node slice of the fleet report (per-node attribution — chips of a
+/// node roll up together instead of flattening into one fleet-wide table).
+#[derive(Debug, Clone)]
+pub struct NodeReport {
+    pub node: usize,
+    pub tokens: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub sched: SchedStats,
+    /// Node-level rollup of the per-chip counters
+    /// ([`CacheStats::merge_all`]).
+    pub cache: CacheStats,
+    /// Per-chip counters (index = local chip id), kept for drill-down.
+    pub per_chip: Vec<CacheStats>,
+    pub drained: bool,
+    pub failed: bool,
+}
+
+/// The SLO report for one fleet run.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    /// Sessions in the trace.
+    pub sessions: u64,
+    /// Sessions that delivered every token.
+    pub completed: u64,
+    /// Sessions lost (fail-stop without checkpointing, or no eligible
+    /// node).
+    pub lost_sessions: u64,
+    pub tokens: u64,
+    /// Modeled instant of the last token delivery.
+    pub sim_seconds: f64,
+    pub throughput_tok_s: f64,
+    /// SLO-meeting tokens per modeled second.
+    pub goodput_tok_s: f64,
+    pub slo_us: f64,
+    /// Fraction of tokens at or under the SLO (1.0 when the SLO is off).
+    pub slo_attainment: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub p999_us: f64,
+    pub mean_us: f64,
+    pub max_us: f64,
+    pub migrations: MigrationStats,
+    pub router: RouterStats,
+    pub per_node: Vec<NodeReport>,
+    /// Every delivered token per session, in order (only when
+    /// [`FleetConfig::record_tokens`]).
+    pub token_log: BTreeMap<SessionId, Vec<Vec<f32>>>,
+}
+
+impl FleetReport {
+    /// One-line SLO summary for logs.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "sessions={} completed={} lost={} tokens={} sim_s={:.6} tok/s={:.0}",
+            self.sessions,
+            self.completed,
+            self.lost_sessions,
+            self.tokens,
+            self.sim_seconds,
+            self.throughput_tok_s,
+        );
+        if self.slo_us > 0.0 {
+            s.push_str(&format!(
+                " | SLO {:.0}µs: attained={:.1}% goodput={:.0} tok/s",
+                self.slo_us,
+                self.slo_attainment * 100.0,
+                self.goodput_tok_s,
+            ));
+        }
+        s.push_str(&format!(
+            " | p50={:.0}µs p99={:.0}µs p999={:.0}µs | migrations={} failovers={}",
+            self.p50_us, self.p99_us, self.p999_us, self.migrations.migrations,
+            self.migrations.failovers,
+        ));
+        s
+    }
+
+    /// Per-node table: one line per node with its chip-rollup cache
+    /// counters, then a fleet total line.
+    pub fn node_table(&self) -> String {
+        let mut out = String::from(
+            "node     tokens  batches  mean  admit  mig.in mig.out   hits misses  evict  spill KiB   hit%  flags\n",
+        );
+        let mut fleet = CacheStats::default();
+        for n in &self.per_node {
+            fleet.merge(&n.cache);
+            let flags = match (n.failed, n.drained) {
+                (true, _) => "FAILED",
+                (false, true) => "drained",
+                _ => "",
+            };
+            out.push_str(&format!(
+                "{:>4} {:>10} {:>8} {:>5.1} {:>6} {:>7} {:>7} {:>6} {:>6} {:>6} {:>10.1} {:>6.1}  {}\n",
+                n.node,
+                n.tokens,
+                n.batches,
+                n.mean_batch,
+                n.sched.admitted,
+                n.sched.migrated_in,
+                n.sched.migrated_out,
+                n.cache.hits,
+                n.cache.misses,
+                n.cache.evictions,
+                n.cache.spilled_bytes as f64 / 1024.0,
+                n.cache.hit_rate() * 100.0,
+                flags,
+            ));
+        }
+        out.push_str(&format!(
+            "fleet {:>9} {:>8}       {:>6} {:>7} {:>7} {:>6} {:>6} {:>6} {:>10.1} {:>6.1}\n",
+            self.tokens,
+            self.per_node.iter().map(|n| n.batches).sum::<u64>(),
+            self.per_node.iter().map(|n| n.sched.admitted).sum::<u64>(),
+            self.per_node.iter().map(|n| n.sched.migrated_in).sum::<u64>(),
+            self.per_node.iter().map(|n| n.sched.migrated_out).sum::<u64>(),
+            fleet.hits,
+            fleet.misses,
+            fleet.evictions,
+            fleet.spilled_bytes as f64 / 1024.0,
+            fleet.hit_rate() * 100.0,
+        ));
+        out
+    }
+}
+
+/// Executor factory for model-free fleet runs: the deterministic
+/// [`MockExecutor`] (its decode depends only on the session's own state,
+/// which is what makes migrated trajectories bit-identical).
+pub fn mock_factory() -> ExecutorFactory {
+    Box::new(|| Ok(Box::new(MockExecutor::new(1, 1)) as Box<dyn Executor>))
+}
+
+/// Per-session progress ledger (the conservation check's ground truth).
+struct Ledger {
+    arrival: f64,
+    affinity: u64,
+    info: SessionInfo,
+    expected: u64,
+    delivered: u64,
+    prev_done: f64,
+    done: bool,
+    lost: bool,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum ScenKind {
+    Drain(usize),
+    Fail(usize),
+    Migrate(SessionId, usize),
+}
+
+struct ScenEv {
+    at: f64,
+    seq: u64,
+    kind: ScenKind,
+}
+
+struct Resume {
+    at: f64,
+    id: SessionId,
+    ticket: MigratedSession,
+    payload: SessionPayload,
+    dest: usize,
+    failover: bool,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    Complete(usize),
+    Scen(usize),
+    Resume(usize),
+    Arrive,
+}
+
+struct FleetSim<'a> {
+    cfg: &'a FleetConfig,
+    nodes: Vec<Node>,
+    router: Router,
+    store: CheckpointStore,
+    scen: Vec<ScenEv>,
+    resumes: Vec<Resume>,
+    /// Scripted moves waiting for an in-flight step to finish.
+    pending_migrations: BTreeMap<SessionId, usize>,
+    ledgers: BTreeMap<SessionId, Ledger>,
+    latencies: Vec<f64>,
+    token_log: BTreeMap<SessionId, Vec<Vec<f32>>>,
+    clock: f64,
+    last_delivery: f64,
+    mig: MigrationStats,
+}
+
+/// Run `trace` (time-sorted [`Arrival`]s) against a fleet of
+/// `cfg.nodes` × `cfg.chips_per_node` chips under `scenario`, building each
+/// node's executor from `factory`. Deterministic in all inputs. Errors on
+/// executor failures, malformed scenarios, or a conservation violation
+/// (a token delivered out of order — which would mean the migration or
+/// recovery machinery replayed or skipped a step).
+pub fn run_fleet(
+    cfg: &FleetConfig,
+    trace: &[Arrival],
+    scenario: &FleetScenario,
+    factory: &ExecutorFactory,
+) -> Result<FleetReport> {
+    let _run = telemetry::span("fleet", "run")
+        .arg("nodes", cfg.nodes as f64)
+        .arg("sessions", trace.len() as f64);
+    for w in trace.windows(2) {
+        if w[1].at < w[0].at {
+            return Err(anyhow!("arrival trace is not time-sorted"));
+        }
+    }
+    let costs = cfg.step_costs();
+    let nodes: Vec<Node> = (0..cfg.nodes.max(1))
+        .map(|id| {
+            Ok(Node::new(
+                id,
+                cfg.chips_per_node,
+                cfg.node_cache_bytes,
+                cfg.max_state_bytes(),
+                cfg.rdu.spec.dram,
+                cfg.sched,
+                costs,
+                factory()?,
+            ))
+        })
+        .collect::<Result<_>>()?;
+
+    let mut scen = Vec::new();
+    let mut seq = 0u64;
+    for &(at, node) in &scenario.drain {
+        scen.push(ScenEv { at, seq, kind: ScenKind::Drain(node) });
+        seq += 1;
+    }
+    for &(at, node) in &scenario.fail {
+        scen.push(ScenEv { at, seq, kind: ScenKind::Fail(node) });
+        seq += 1;
+    }
+    for &(at, id, dest) in &scenario.migrate {
+        scen.push(ScenEv { at, seq, kind: ScenKind::Migrate(id, dest) });
+        seq += 1;
+    }
+    for e in &scen {
+        let node = match e.kind {
+            ScenKind::Drain(n) | ScenKind::Fail(n) => n,
+            ScenKind::Migrate(_, d) => d,
+        };
+        if node >= nodes.len() {
+            return Err(anyhow!("scenario names node {node}, fleet has {}", nodes.len()));
+        }
+        if !e.at.is_finite() || e.at < 0.0 {
+            return Err(anyhow!("scenario event at non-finite/negative time {}", e.at));
+        }
+    }
+
+    let mut sim = FleetSim {
+        cfg,
+        nodes,
+        router: Router::new(cfg.policy),
+        store: CheckpointStore::new(),
+        scen,
+        resumes: Vec::new(),
+        pending_migrations: BTreeMap::new(),
+        ledgers: BTreeMap::new(),
+        latencies: Vec::new(),
+        token_log: BTreeMap::new(),
+        clock: 0.0,
+        last_delivery: 0.0,
+        mig: MigrationStats::default(),
+    };
+    sim.run(trace)
+}
+
+impl FleetSim<'_> {
+    fn run(&mut self, trace: &[Arrival]) -> Result<FleetReport> {
+        let mut next_arrival = 0usize;
+        loop {
+            // Pick the earliest event; fixed tie priority keeps runs
+            // deterministic (completions < scenario < resumes < arrivals).
+            let mut best: Option<(f64, u8, u64, Ev)> = None;
+            let mut consider = |cand: (f64, u8, u64, Ev), best: &mut Option<(f64, u8, u64, Ev)>| {
+                let better = match best {
+                    None => true,
+                    Some((t, p, s, _)) => {
+                        (cand.0, cand.1, cand.2) < (*t, *p, *s)
+                    }
+                };
+                if better {
+                    *best = Some(cand);
+                }
+            };
+            for (i, n) in self.nodes.iter().enumerate() {
+                if n.batch_in_flight() {
+                    consider((n.busy_until, 0, i as u64, Ev::Complete(i)), &mut best);
+                }
+            }
+            for (i, e) in self.scen.iter().enumerate() {
+                consider((e.at, 1, e.seq, Ev::Scen(i)), &mut best);
+            }
+            for (i, r) in self.resumes.iter().enumerate() {
+                consider((r.at, 2, r.id, Ev::Resume(i)), &mut best);
+            }
+            if next_arrival < trace.len() {
+                let a = &trace[next_arrival];
+                consider((a.at, 3, a.id, Ev::Arrive), &mut best);
+            }
+            let Some((t, _, _, ev)) = best else { break };
+            self.clock = t;
+            match ev {
+                Ev::Complete(n) => self.on_complete(n)?,
+                Ev::Scen(i) => {
+                    let e = self.scen.swap_remove(i);
+                    match e.kind {
+                        ScenKind::Drain(n) => self.on_drain(n)?,
+                        ScenKind::Fail(n) => self.on_fail(n)?,
+                        ScenKind::Migrate(id, dest) => self.on_migrate(id, dest)?,
+                    }
+                }
+                Ev::Resume(i) => {
+                    let r = self.resumes.swap_remove(i);
+                    self.on_resume(r);
+                }
+                Ev::Arrive => {
+                    let a = trace[next_arrival];
+                    next_arrival += 1;
+                    self.on_arrival(&a);
+                }
+            }
+            // Every idle, non-draining node with ready work starts its next
+            // batch at the current instant.
+            for i in 0..self.nodes.len() {
+                if self.nodes[i].ready() {
+                    self.nodes[i].start_batch(self.clock)?;
+                }
+            }
+        }
+        for (id, lg) in &self.ledgers {
+            if !lg.done && !lg.lost {
+                return Err(anyhow!(
+                    "fleet stalled: session {id} delivered {}/{} tokens",
+                    lg.delivered,
+                    lg.expected
+                ));
+            }
+        }
+        Ok(self.report(trace.len() as u64))
+    }
+
+    fn on_arrival(&mut self, a: &Arrival) {
+        let shape = self.cfg.shape_for(a.model);
+        let info =
+            SessionInfo { model: a.model, shape, decode_steps: a.decode_steps };
+        let mut rng = XorShift::new(self.cfg.seed ^ a.id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let prompt: Vec<f32> = (0..a.prompt_tokens * shape.d_model)
+            .map(|_| rng.uniform(-1.0, 1.0) as f32)
+            .collect();
+        let mut lg = Ledger {
+            arrival: self.clock,
+            affinity: a.affinity,
+            info,
+            expected: a.decode_steps as u64,
+            delivered: 0,
+            prev_done: self.clock,
+            done: false,
+            lost: false,
+        };
+        match self.router.place(a.affinity, &self.nodes) {
+            Some(dest) => {
+                if self.cfg.checkpointing {
+                    self.store.put(
+                        a.id,
+                        Checkpoint {
+                            ticket: MigratedSession { info, phase: Phase::Prefill, tokens_done: 0 },
+                            payload: SessionPayload {
+                                prompt: Some(prompt.clone()),
+                                ..Default::default()
+                            },
+                        },
+                    );
+                }
+                self.nodes[dest].admit(a.id, info, prompt);
+                self.router.assign(a.id, dest);
+                self.router.stats.placed += 1;
+                telemetry::counter("fleet.placements").fetch_add(1, Ordering::Relaxed);
+                telemetry::instant_on(
+                    "fleet",
+                    "place",
+                    telemetry::node_track(dest),
+                    "session",
+                    a.id as f64,
+                );
+            }
+            None => {
+                lg.lost = true;
+                self.router.stats.refused += 1;
+                telemetry::counter("fleet.lost_sessions").fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        self.ledgers.insert(a.id, lg);
+    }
+
+    fn on_complete(&mut self, n: usize) -> Result<()> {
+        let delivered = self.nodes[n].complete_batch();
+        for d in delivered {
+            let lg = self
+                .ledgers
+                .get_mut(&d.id)
+                .ok_or_else(|| anyhow!("token for unknown session {}", d.id))?;
+            if d.step as u64 != lg.delivered {
+                return Err(anyhow!(
+                    "conservation violation: session {} delivered token {} but {} were done",
+                    d.id,
+                    d.step,
+                    lg.delivered
+                ));
+            }
+            lg.delivered += 1;
+            self.latencies.push(self.clock - lg.prev_done);
+            lg.prev_done = self.clock;
+            self.last_delivery = self.clock;
+            if self.cfg.record_tokens {
+                self.token_log.entry(d.id).or_default().push(d.token.clone());
+            }
+            if d.retired {
+                lg.done = true;
+                self.store.remove(d.id);
+                self.router.unassign(d.id);
+                self.pending_migrations.remove(&d.id);
+            } else if self.cfg.checkpointing {
+                let info = lg.info;
+                let tokens_done = lg.delivered as usize;
+                self.store.put(
+                    d.id,
+                    Checkpoint {
+                        ticket: MigratedSession { info, phase: Phase::Decode, tokens_done },
+                        payload: SessionPayload {
+                            state: d.state,
+                            last_token: Some(d.token),
+                            ..Default::default()
+                        },
+                    },
+                );
+            }
+        }
+        // Scripted moves waiting on this node's batch boundary.
+        let waiting: Vec<(SessionId, usize)> = self
+            .pending_migrations
+            .iter()
+            .filter(|&(id, _)| self.router.node_of(*id) == Some(n))
+            .map(|(&id, &dest)| (id, dest))
+            .collect();
+        for (id, dest) in waiting {
+            self.pending_migrations.remove(&id);
+            self.start_migration(id, Some(dest), false)?;
+        }
+        // A draining node evacuates everything at its batch boundary.
+        if self.nodes[n].draining {
+            self.evacuate(n)?;
+        }
+        Ok(())
+    }
+
+    fn on_drain(&mut self, n: usize) -> Result<()> {
+        if self.nodes[n].failed {
+            return Ok(());
+        }
+        self.nodes[n].draining = true;
+        telemetry::counter("fleet.drains").fetch_add(1, Ordering::Relaxed);
+        telemetry::instant_on("fleet", "node.drain", telemetry::node_track(n), "node", n as f64);
+        if !self.nodes[n].batch_in_flight() {
+            self.evacuate(n)?;
+        }
+        Ok(())
+    }
+
+    /// Live-migrate every session off node `n` (which must have no batch
+    /// in flight).
+    fn evacuate(&mut self, n: usize) -> Result<()> {
+        for id in self.router.sessions_on(n) {
+            self.start_migration(id, None, false)?;
+        }
+        Ok(())
+    }
+
+    /// Checkpoint → transfer → resume for one session: export it from its
+    /// node, price the payload across the network link, and schedule the
+    /// resume on `dest` (or wherever the policy places it).
+    fn start_migration(&mut self, id: SessionId, dest: Option<usize>, failover: bool) -> Result<()> {
+        let Some(src) = self.router.node_of(id) else { return Ok(()) };
+        let affinity = self.ledgers.get(&id).map(|l| l.affinity).unwrap_or(0);
+        let dest = match dest {
+            Some(d) if d == src => return Ok(()), // already home
+            Some(d) if !self.nodes[d].failed && !self.nodes[d].draining => d,
+            _ => match self.router.place(affinity, &self.nodes) {
+                Some(d) if d != src => d,
+                _ => return Ok(()), // nowhere better to go; stay put
+            },
+        };
+        let Some((ticket, payload)) = self.nodes[src].export_session(id) else {
+            return Err(anyhow!("migration of session {id}: step still in flight on node {src}"));
+        };
+        self.router.unassign(id);
+        let bytes = payload.bytes();
+        let secs = self.cfg.network.transfer_seconds(bytes as f64);
+        self.mig.migrations += 1;
+        self.mig.bytes_moved += bytes as u64;
+        self.mig.transfer_seconds += secs;
+        self.router.stats.migrations += 1;
+        telemetry::counter("fleet.migrations").fetch_add(1, Ordering::Relaxed);
+        {
+            let _t = telemetry::span("fleet", "migrate")
+                .arg("bytes", bytes as f64)
+                .arg("modeled_us", secs * 1e6);
+        }
+        telemetry::instant_on(
+            "fleet",
+            "migrate.out",
+            telemetry::node_track(src),
+            "bytes",
+            bytes as f64,
+        );
+        self.resumes.push(Resume { at: self.clock + secs, id, ticket, payload, dest, failover });
+        Ok(())
+    }
+
+    fn on_fail(&mut self, n: usize) -> Result<()> {
+        if self.nodes[n].failed {
+            return Ok(());
+        }
+        self.nodes[n].fail();
+        telemetry::counter("fleet.failstops").fetch_add(1, Ordering::Relaxed);
+        for id in self.router.sessions_on(n) {
+            self.router.unassign(id);
+            self.pending_migrations.remove(&id);
+            if !self.cfg.checkpointing {
+                if let Some(lg) = self.ledgers.get_mut(&id) {
+                    lg.lost = true;
+                }
+                self.store.remove(id);
+                telemetry::counter("fleet.lost_sessions").fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            let ck = self
+                .store
+                .take(id)
+                .ok_or_else(|| anyhow!("session {id} has no checkpoint to recover from"))?;
+            let affinity = self.ledgers.get(&id).map(|l| l.affinity).unwrap_or(0);
+            let Some(dest) = self.router.place(affinity, &self.nodes) else {
+                if let Some(lg) = self.ledgers.get_mut(&id) {
+                    lg.lost = true;
+                }
+                telemetry::counter("fleet.lost_sessions").fetch_add(1, Ordering::Relaxed);
+                continue;
+            };
+            let bytes = ck.bytes();
+            let secs = self.cfg.network.transfer_seconds(bytes as f64);
+            self.mig.failovers += 1;
+            self.mig.bytes_moved += bytes as u64;
+            self.mig.transfer_seconds += secs;
+            self.router.stats.failovers += 1;
+            telemetry::counter("fleet.failovers").fetch_add(1, Ordering::Relaxed);
+            self.resumes.push(Resume {
+                at: self.clock + secs,
+                id,
+                ticket: ck.ticket,
+                payload: ck.payload,
+                dest,
+                failover: true,
+            });
+        }
+        Ok(())
+    }
+
+    fn on_migrate(&mut self, id: SessionId, dest: usize) -> Result<()> {
+        let Some(lg) = self.ledgers.get(&id) else { return Ok(()) };
+        if lg.done || lg.lost {
+            return Ok(());
+        }
+        let Some(src) = self.router.node_of(id) else {
+            return Ok(()); // in transit; the scripted move is superseded
+        };
+        if src == dest {
+            return Ok(());
+        }
+        if self.nodes[src].batch_in_flight() {
+            // Step in flight: migrate at this node's batch boundary.
+            self.pending_migrations.insert(id, dest);
+            return Ok(());
+        }
+        self.start_migration(id, Some(dest), false)
+    }
+
+    fn on_resume(&mut self, r: Resume) {
+        let dest = if self.nodes[r.dest].failed || self.nodes[r.dest].draining {
+            // Destination changed state mid-transfer: re-place (one more
+            // network hop).
+            let affinity = self.ledgers.get(&r.id).map(|l| l.affinity).unwrap_or(0);
+            match self.router.place(affinity, &self.nodes) {
+                Some(d) => {
+                    let secs = self.cfg.network.transfer_seconds(r.payload.bytes() as f64);
+                    self.mig.transfer_seconds += secs;
+                    self.mig.bytes_moved += r.payload.bytes() as u64;
+                    self.resumes.push(Resume { at: self.clock + secs, dest: d, ..r });
+                    return;
+                }
+                None => {
+                    if let Some(lg) = self.ledgers.get_mut(&r.id) {
+                        lg.lost = true;
+                    }
+                    telemetry::counter("fleet.lost_sessions").fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+            }
+        } else {
+            r.dest
+        };
+        telemetry::instant_on(
+            "fleet",
+            if r.failover { "failover.in" } else { "migrate.in" },
+            telemetry::node_track(dest),
+            "bytes",
+            r.payload.bytes() as f64,
+        );
+        self.nodes[dest].resume_session(r.id, r.ticket, r.payload);
+        self.router.assign(r.id, dest);
+    }
+
+    fn report(&mut self, sessions: u64) -> FleetReport {
+        let mut sorted = self.latencies.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        let q = |q: f64| -> f64 {
+            if sorted.is_empty() {
+                return 0.0;
+            }
+            let idx = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len()) - 1;
+            sorted[idx] * 1e6
+        };
+        let tokens = sorted.len() as u64;
+        let slo = self.cfg.slo_us * 1e-6;
+        let good = if self.cfg.slo_us > 0.0 {
+            sorted.iter().filter(|&&l| l <= slo).count() as u64
+        } else {
+            tokens
+        };
+        let sim_seconds = self.last_delivery;
+        let per_sec = |n: u64| if sim_seconds > 0.0 { n as f64 / sim_seconds } else { 0.0 };
+        self.mig.checkpoint_puts = self.store.puts;
+        self.mig.checkpoint_bytes = self.store.bytes_written;
+        let per_node = self
+            .nodes
+            .iter()
+            .map(|n| NodeReport {
+                node: n.id,
+                tokens: n.tokens,
+                batches: n.batches,
+                mean_batch: n.mean_batch(),
+                sched: n.sched_stats(),
+                cache: n.cache_stats(),
+                per_chip: n.chip_stats(),
+                drained: n.draining,
+                failed: n.failed,
+            })
+            .collect();
+        FleetReport {
+            sessions,
+            completed: self.ledgers.values().filter(|l| l.done).count() as u64,
+            lost_sessions: self.ledgers.values().filter(|l| l.lost).count() as u64,
+            tokens,
+            sim_seconds,
+            throughput_tok_s: per_sec(tokens),
+            goodput_tok_s: per_sec(good),
+            slo_us: self.cfg.slo_us,
+            slo_attainment: if tokens == 0 { 1.0 } else { good as f64 / tokens as f64 },
+            p50_us: q(0.50),
+            p99_us: q(0.99),
+            p999_us: q(0.999),
+            mean_us: if tokens == 0 {
+                0.0
+            } else {
+                sorted.iter().sum::<f64>() * 1e6 / tokens as f64
+            },
+            max_us: sorted.last().copied().unwrap_or(0.0) * 1e6,
+            migrations: self.mig.clone(),
+            router: self.router.stats.clone(),
+            per_node,
+            token_log: std::mem::take(&mut self.token_log),
+        }
+    }
+}
+
+/// Measure a single node's achievable token throughput and median latency
+/// by replaying `trace` with every arrival at `t = 0` (full overload) on a
+/// one-node fleet. The CLI and the fleet bench calibrate offered load and
+/// the default SLO from this — scale-free against the modeled step costs.
+pub fn calibrate_single_node(
+    cfg: &FleetConfig,
+    trace: &[Arrival],
+    factory: &ExecutorFactory,
+) -> Result<(f64, f64)> {
+    let mut one = cfg.clone();
+    one.nodes = 1;
+    one.slo_us = 0.0;
+    one.record_tokens = false;
+    let burst: Vec<Arrival> = trace.iter().map(|a| Arrival { at: 0.0, ..*a }).collect();
+    let r = run_fleet(&one, &burst, &FleetScenario::default(), factory)?;
+    Ok((r.throughput_tok_s, r.p50_us))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::loadgen::{generate, TraceConfig};
+
+    fn burst_trace(n: usize, decode_steps: usize) -> Vec<Arrival> {
+        (1..=n)
+            .map(|i| Arrival {
+                id: i as SessionId,
+                at: 0.0,
+                model: if i % 2 == 0 { ModelKind::Hyena } else { ModelKind::Mamba },
+                prompt_tokens: 16,
+                decode_steps,
+                affinity: i as u64 % 4,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fleet_completes_a_poisson_trace() {
+        let cfg = FleetConfig::demo(2, 2);
+        let costs = cfg.step_costs();
+        assert!(costs.worst() > 0.0, "decode steps must cost modeled time");
+        // Arrival rate scaled to the modeled step cost so the run has both
+        // queueing and idle stretches.
+        let rate = 0.5 / costs.worst();
+        let trace = generate(&TraceConfig::poisson(24, rate, 3));
+        let r = run_fleet(&cfg, &trace, &FleetScenario::default(), &mock_factory()).unwrap();
+        assert_eq!(r.sessions, 24);
+        assert_eq!(r.completed, 24);
+        assert_eq!(r.lost_sessions, 0);
+        let expect: u64 = trace.iter().map(|a| a.decode_steps as u64).sum();
+        assert_eq!(r.tokens, expect, "every decoded token delivered exactly once");
+        assert!(r.sim_seconds > 0.0);
+        assert!(r.throughput_tok_s > 0.0);
+        assert!(r.p50_us > 0.0 && r.p50_us <= r.p99_us && r.p99_us <= r.p999_us);
+        assert_eq!(r.slo_attainment, 1.0, "SLO off: every token is good");
+        assert_eq!(r.per_node.len(), 2);
+        assert_eq!(r.per_node.iter().map(|n| n.tokens).sum::<u64>(), expect);
+        assert!(r.router.placed == 24);
+        let table = r.node_table();
+        assert!(table.contains("fleet"), "{table}");
+    }
+
+    #[test]
+    fn slo_cut_separates_goodput_from_throughput() {
+        let cfg = FleetConfig::demo(1, 1);
+        let trace = burst_trace(8, 8);
+        let mut strict = cfg.clone();
+        strict.slo_us = 1e-9; // nothing is this fast
+        let r = run_fleet(&strict, &trace, &FleetScenario::default(), &mock_factory()).unwrap();
+        assert_eq!(r.slo_attainment, 0.0);
+        assert_eq!(r.goodput_tok_s, 0.0);
+        assert!(r.throughput_tok_s > 0.0);
+        let mut loose = cfg;
+        loose.slo_us = 1e12;
+        let r = run_fleet(&loose, &trace, &FleetScenario::default(), &mock_factory()).unwrap();
+        assert_eq!(r.slo_attainment, 1.0);
+        assert!((r.goodput_tok_s - r.throughput_tok_s).abs() < 1e-9);
+        assert!(r.summary().contains("SLO"));
+    }
+
+    #[test]
+    fn drain_migrates_everything_losslessly() {
+        let cfg = FleetConfig::demo(2, 2);
+        let trace = burst_trace(12, 32);
+        let probe = run_fleet(&cfg, &trace, &FleetScenario::default(), &mock_factory()).unwrap();
+        let scenario =
+            FleetScenario { drain: vec![(probe.sim_seconds * 0.3, 0)], ..Default::default() };
+        let r = run_fleet(&cfg, &trace, &scenario, &mock_factory()).unwrap();
+        assert_eq!(r.completed, 12, "drain loses nothing");
+        assert_eq!(r.lost_sessions, 0);
+        assert_eq!(r.tokens, probe.tokens);
+        assert!(r.migrations.migrations > 0, "drain must move sessions");
+        assert!(r.migrations.bytes_moved > 0);
+        assert!(r.migrations.transfer_seconds > 0.0);
+        assert!(r.per_node[0].drained);
+        // Everything the drained node gave up landed on node 1.
+        assert_eq!(r.per_node[1].sched.migrated_in, r.per_node[0].sched.migrated_out);
+    }
+
+    #[test]
+    fn fail_stop_with_checkpointing_loses_zero_tokens() {
+        let cfg = FleetConfig::demo(2, 2);
+        let trace = burst_trace(12, 32);
+        let probe = run_fleet(&cfg, &trace, &FleetScenario::default(), &mock_factory()).unwrap();
+        let scenario =
+            FleetScenario { fail: vec![(probe.sim_seconds * 0.4, 0)], ..Default::default() };
+        let r = run_fleet(&cfg, &trace, &scenario, &mock_factory()).unwrap();
+        assert_eq!(r.completed, 12, "checkpointed fail-stop is lossless");
+        assert_eq!(r.lost_sessions, 0);
+        assert_eq!(r.tokens, probe.tokens, "exactly-once delivery across the failure");
+        assert!(r.migrations.failovers > 0, "failover must have happened");
+        assert!(r.per_node[0].failed);
+        assert!(r.migrations.checkpoint_puts > 0);
+    }
+
+    #[test]
+    fn fail_stop_without_checkpointing_loses_sessions() {
+        let mut cfg = FleetConfig::demo(2, 2);
+        cfg.checkpointing = false;
+        let trace = burst_trace(12, 64);
+        let probe = run_fleet(&cfg, &trace, &FleetScenario::default(), &mock_factory()).unwrap();
+        let scenario =
+            FleetScenario { fail: vec![(probe.sim_seconds * 0.4, 0)], ..Default::default() };
+        let r = run_fleet(&cfg, &trace, &scenario, &mock_factory()).unwrap();
+        assert!(r.lost_sessions > 0, "no checkpoints: the dead node's sessions are gone");
+        assert_eq!(r.completed + r.lost_sessions, 12, "every session accounted for");
+        assert_eq!(r.migrations.failovers, 0);
+    }
+
+    #[test]
+    fn scripted_migration_mid_decode_is_transparent() {
+        let mut cfg = FleetConfig::demo(2, 2);
+        cfg.record_tokens = true;
+        let trace = burst_trace(6, 16);
+        let base = run_fleet(&cfg, &trace, &FleetScenario::default(), &mock_factory()).unwrap();
+        let probe_mid = base.sim_seconds * 0.5;
+        // Session 1's location is policy-dependent, so script a move to
+        // each node: the one naming its current home is a no-op.
+        let scenario = FleetScenario {
+            migrate: vec![(probe_mid, 1, 1), (probe_mid, 1, 0)],
+            ..Default::default()
+        };
+        let r = run_fleet(&cfg, &trace, &scenario, &mock_factory()).unwrap();
+        assert_eq!(r.completed, 6);
+        assert!(r.migrations.migrations > 0, "one of the two scripted moves must apply");
+        assert_eq!(
+            r.token_log, base.token_log,
+            "migration must not change any session's token trajectory"
+        );
+    }
+
+    #[test]
+    fn calibration_reports_positive_capacity() {
+        let cfg = FleetConfig::demo(2, 2);
+        let trace = burst_trace(8, 16);
+        let (tok_s, p50_us) = calibrate_single_node(&cfg, &trace, &mock_factory()).unwrap();
+        assert!(tok_s > 0.0);
+        assert!(p50_us > 0.0);
+    }
+}

@@ -35,6 +35,11 @@
 //!   Hyena FFT caches) under a byte-budgeted LRU cache, plus the
 //!   continuous-batching scheduler that serves multi-turn/streaming decode
 //!   (`serve --continuous`).
+//! * [`fleet`] — the multi-node serving tier: a placement router over N
+//!   simulated nodes, live session migration (checkpoint → transfer →
+//!   resume over the α–β link), drain/fail-stop scenarios with lossless
+//!   recovery, and trace-driven load generation with an SLO report
+//!   (the `fleet` subcommand, `docs/FLEET.md`).
 //! * [`shard`] — multi-chip sequence sharding: exact sharded Mamba scan
 //!   (inter-chip carry exchange) and sharded Bailey FFT (all-to-all
 //!   transpose), priced end-to-end through [`arch::interchip`] and the
@@ -55,6 +60,7 @@ pub mod coordinator;
 pub mod dfmodel;
 pub mod fft;
 pub mod figures;
+pub mod fleet;
 pub mod gpu;
 pub mod graph;
 pub mod pcusim;

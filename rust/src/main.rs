@@ -60,6 +60,27 @@
 //!                                cache sized to its share of --cache-mb.
 //!                                Default budget is half the total state
 //!                                footprint so eviction is exercised.
+//!   fleet [--nodes N --chips C --sessions S --loadgen poisson,bursty,…
+//!          --rate R --policy P --slo-us U --network fabric|pcie5
+//!          --cache-mb M --drain NODE@FRAC,… --fail NODE@FRAC,…
+//!          --no-checkpoint --seed K] [--trace FILE --metrics FILE]
+//!                                multi-node serving tier: a placement
+//!                                router (round-robin | least-loaded |
+//!                                affine) over N simulated nodes of C chips
+//!                                each, driven by trace-generated arrivals
+//!                                (any comma list of poisson, bursty,
+//!                                diurnal) in modeled time. Prints the SLO
+//!                                report (p50/p99/p999 token latency,
+//!                                goodput vs throughput) and a per-node
+//!                                table. --rate 0 (default) calibrates the
+//!                                offered load to 1.2x one node's measured
+//!                                capacity; --slo-us 0 (default) sets the
+//!                                SLO to the single-node overload p50.
+//!                                --drain/--fail schedule node drains and
+//!                                fail-stops at FRAC (0..1) of the
+//!                                undisturbed run's duration; with
+//!                                checkpointing on (default) both are
+//!                                lossless and the exit code enforces it.
 //!
 //! Observability (`simulate` and both `serve` forms): `--trace FILE` records
 //! the run as Chrome trace-event JSON — load it at <https://ui.perfetto.dev>
@@ -229,10 +250,11 @@ fn main() {
         "sweep" => sweep(&args),
         "dot" => dot(&args),
         "serve" => serve(&args),
+        "fleet" => fleet(&args),
         other => {
             eprintln!(
                 "unknown subcommand `{other}`; usage: ssm-rdu \
-                 <spec|table2|table4|fig7|fig8|fig11|fig12|all|simulate|sweep|dot|serve> \
+                 <spec|table2|table4|fig7|fig8|fig11|fig12|all|simulate|sweep|dot|serve|fleet> \
                  [--options] — `simulate`/`sweep`/`serve`/`dot` take --workload/--model with \
                  any registered workload ({}); see README.md (or the rust/src/main.rs doc \
                  block) for the full reference",
@@ -567,6 +589,216 @@ fn dot(args: &Args) -> i32 {
     };
     println!("{}", g.to_dot());
     0
+}
+
+/// Parse a `NODE@FRAC[,NODE@FRAC…]` scenario list (`--drain 0@0.3`):
+/// node index, then the event instant as a fraction of the undisturbed
+/// run's duration.
+fn parse_scenario_list(spec: &str, what: &str) -> Result<Vec<(usize, f64)>, i32> {
+    spec.split(',')
+        .map(|item| {
+            let err = || {
+                eprintln!("bad --{what} entry `{item}`; expected NODE@FRAC, e.g. --{what} 0@0.3");
+                2
+            };
+            let (node, frac) = item.trim().split_once('@').ok_or_else(&err)?;
+            let node: usize = node.parse().map_err(|_| err())?;
+            let frac: f64 = frac.parse().map_err(|_| err())?;
+            if !(0.0..=1.0).contains(&frac) {
+                return Err(err());
+            }
+            Ok((node, frac))
+        })
+        .collect()
+}
+
+/// `fleet`: the multi-node serving tier — trace-driven load over a
+/// placement router, live migration on drains, checkpointed fail-stop
+/// recovery, and an SLO report. Everything runs in modeled time over the
+/// MockExecutor; see docs/FLEET.md for the operator guide.
+fn fleet(args: &Args) -> i32 {
+    use ssm_rdu::fleet::{
+        calibrate_single_node, generate, mock_factory, run_fleet, FleetConfig, FleetScenario,
+        PlacementPolicy, TraceConfig,
+    };
+
+    observability_begin(args);
+    let nodes = args.usize_or("nodes", 4).max(1);
+    let chips = args.usize_or("chips", 2).max(1);
+    let sessions = args.usize_or("sessions", 64).max(1);
+    let seed = args.usize_or("seed", 7) as u64;
+
+    let mut cfg = FleetConfig::demo(nodes, chips);
+    cfg.seed = seed;
+    cfg.checkpointing = !args.flag("no-checkpoint");
+    if args.get("cache-mb").is_some() {
+        cfg.node_cache_bytes = args.usize_or("cache-mb", 1) * (1 << 20);
+    }
+    if let Some(p) = args.get("policy") {
+        match PlacementPolicy::parse(p) {
+            Some(p) => cfg.policy = p,
+            None => {
+                eprintln!("unknown --policy `{p}`; valid: round-robin, least-loaded, affine");
+                return 2;
+            }
+        }
+    }
+    match args.get("network").unwrap_or("pcie5") {
+        "pcie5" => cfg.network = InterchipLink::pcie5(),
+        "fabric" => cfg.network = InterchipLink::rdu_fabric(),
+        other => {
+            eprintln!("unknown --network `{other}`; valid: fabric, pcie5");
+            return 2;
+        }
+    }
+    let drains = match args.get("drain").map(|s| parse_scenario_list(s, "drain")) {
+        Some(Ok(v)) => v,
+        Some(Err(code)) => return code,
+        None => Vec::new(),
+    };
+    let fails = match args.get("fail").map(|s| parse_scenario_list(s, "fail")) {
+        Some(Ok(v)) => v,
+        Some(Err(code)) => return code,
+        None => Vec::new(),
+    };
+    for &(node, _) in drains.iter().chain(&fails) {
+        if node >= nodes {
+            eprintln!("scenario names node {node}, but the fleet has {nodes}");
+            return 2;
+        }
+    }
+
+    // Capacity calibration: one node under full overload sets the offered
+    // rate (1.2x its token capacity, in sessions/s) and the default SLO
+    // (its overload p50) — scale-free against the modeled step costs.
+    let probe_cfg = TraceConfig::poisson(sessions, 1.0, seed);
+    let factory = mock_factory();
+    let (node_tok_s, probe_p50_us) =
+        match calibrate_single_node(&cfg, &generate(&probe_cfg), &factory) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("calibration failed: {e:#}");
+                return 1;
+            }
+        };
+    let rate = {
+        let r = args.f64_or("rate", 0.0);
+        if r > 0.0 {
+            r
+        } else {
+            1.2 * node_tok_s / probe_cfg.mean_decode_tokens().max(1.0)
+        }
+    };
+    cfg.slo_us = {
+        let s = args.f64_or("slo-us", 0.0);
+        if s > 0.0 {
+            s
+        } else {
+            probe_p50_us
+        }
+    };
+    println!(
+        "fleet: {nodes} nodes x {chips} chips, policy {}, network {}, checkpointing {}",
+        cfg.policy.name(),
+        args.get("network").unwrap_or("pcie5"),
+        if cfg.checkpointing { "on" } else { "off" },
+    );
+    println!(
+        "calibration: one node sustains {node_tok_s:.0} tok/s (overload p50 {probe_p50_us:.2} us) \
+         -> offering {rate:.1} sessions/s, SLO {:.2} us",
+        cfg.slo_us
+    );
+
+    let mut code = 0;
+    let mut kv: Vec<(String, f64)> = Vec::new();
+    for kind in args.get_or("loadgen", "poisson").split(',') {
+        let kind = kind.trim();
+        let tc = match kind {
+            "poisson" => TraceConfig::poisson(sessions, rate, seed),
+            "bursty" => TraceConfig::bursty(sessions, rate, seed),
+            "diurnal" => TraceConfig::diurnal(sessions, rate, seed),
+            other => {
+                eprintln!("unknown --loadgen `{other}`; valid: poisson, bursty, diurnal");
+                return 2;
+            }
+        };
+        let trace = generate(&tc);
+        // Scenario instants are fractions of the undisturbed run, so
+        // `--fail 0@0.5` lands mid-run whatever the modeled timescale is.
+        let scenario = if drains.is_empty() && fails.is_empty() {
+            FleetScenario::default()
+        } else {
+            let probe = match run_fleet(&cfg, &trace, &FleetScenario::default(), &factory) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("fleet probe run ({kind}) failed: {e:#}");
+                    return 1;
+                }
+            };
+            FleetScenario {
+                drain: drains.iter().map(|&(n, f)| (probe.sim_seconds * f, n)).collect(),
+                fail: fails.iter().map(|&(n, f)| (probe.sim_seconds * f, n)).collect(),
+                ..Default::default()
+            }
+        };
+        let r = match run_fleet(&cfg, &trace, &scenario, &factory) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("fleet run ({kind}) failed: {e:#}");
+                return 1;
+            }
+        };
+        println!("\n== {kind} trace: {} sessions ==", trace.len());
+        println!("{}", r.summary());
+        println!(
+            "latency: mean {:.2} us, max {:.2} us | router: placed {} refused {} \
+             affinity {}/{} | checkpoints: {} writes, {:.1} KiB",
+            r.mean_us,
+            r.max_us,
+            r.router.placed,
+            r.router.refused,
+            r.router.affinity_hits,
+            r.router.affinity_hits + r.router.affinity_spills,
+            r.migrations.checkpoint_puts,
+            r.migrations.checkpoint_bytes as f64 / 1024.0,
+        );
+        if r.migrations.migrations + r.migrations.failovers > 0 {
+            println!(
+                "migration: {} live + {} failover, {:.1} KiB over the link, {} modeled transfer",
+                r.migrations.migrations,
+                r.migrations.failovers,
+                r.migrations.bytes_moved as f64 / 1024.0,
+                fmt_time(r.migrations.transfer_seconds),
+            );
+        }
+        print!("{}", r.node_table());
+        if cfg.checkpointing && r.lost_sessions > 0 {
+            eprintln!(
+                "ERROR: {} session(s) lost under checkpointing — drains and fail-stops must \
+                 be lossless",
+                r.lost_sessions
+            );
+            code = 1;
+        }
+        kv = vec![
+            (format!("fleet_{kind}_p50_us"), r.p50_us),
+            (format!("fleet_{kind}_p99_us"), r.p99_us),
+            (format!("fleet_{kind}_p999_us"), r.p999_us),
+            (format!("fleet_{kind}_throughput_tok_s"), r.throughput_tok_s),
+            (format!("fleet_{kind}_goodput_tok_s"), r.goodput_tok_s),
+            (format!("fleet_{kind}_slo_attainment"), r.slo_attainment),
+            (format!("fleet_{kind}_lost_sessions"), r.lost_sessions as f64),
+        ]
+        .into_iter()
+        .chain(kv)
+        .collect();
+    }
+    let obs = write_observability(args, Vec::new(), &kv);
+    if code != 0 {
+        code
+    } else {
+        obs
+    }
 }
 
 /// Serve synthetic batched requests through the PJRT runtime, or — with

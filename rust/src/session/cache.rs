@@ -66,6 +66,19 @@ impl CacheStats {
         self.peak_resident_bytes += other.peak_resident_bytes;
         self.spill_seconds += other.spill_seconds;
     }
+
+    /// Merge a slice of per-chip counters into one aggregate — the
+    /// per-*node* rollup the fleet report prints. Fleet mode keeps one
+    /// aggregate per node (chips of the same node share a spill DRAM and a
+    /// scheduler, so their counters belong together) instead of flattening
+    /// every chip in the fleet into a single table and losing attribution.
+    pub fn merge_all(stats: &[CacheStats]) -> CacheStats {
+        let mut total = CacheStats::default();
+        for s in stats {
+            total.merge(s);
+        }
+        total
+    }
 }
 
 #[derive(Debug)]
@@ -358,6 +371,24 @@ mod tests {
         assert_eq!(a.peak_resident_bytes, 768);
         assert!((a.spill_seconds - 0.5).abs() < 1e-12);
         assert!((a.hit_rate() - 5.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_all_equals_pairwise_merges() {
+        let chips = [
+            CacheStats { hits: 2, spilled_bytes: 100, ..Default::default() },
+            CacheStats { hits: 3, misses: 1, spill_seconds: 0.25, ..Default::default() },
+            CacheStats { evictions: 7, peak_resident_bytes: 64, ..Default::default() },
+        ];
+        let node = CacheStats::merge_all(&chips);
+        let mut manual = CacheStats::default();
+        for c in &chips {
+            manual.merge(c);
+        }
+        assert_eq!(node, manual);
+        assert_eq!(node.hits, 5);
+        assert_eq!(node.evictions, 7);
+        assert_eq!(CacheStats::merge_all(&[]), CacheStats::default());
     }
 
     #[test]

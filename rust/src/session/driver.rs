@@ -121,8 +121,9 @@ impl SimReport {
     }
 }
 
-/// Decoder shape fed to the cost hook for a given state shape.
-fn cost_config(shape: &StateShape) -> crate::workloads::DecoderConfig {
+/// Decoder shape fed to the cost hook for a given state shape (shared with
+/// [`crate::fleet`] so fleet nodes price decode steps identically).
+pub(crate) fn cost_config(shape: &StateShape) -> crate::workloads::DecoderConfig {
     crate::workloads::DecoderConfig {
         seq_len: 1, // decode cost is O(1) in sequence length
         d_model: shape.d_model,

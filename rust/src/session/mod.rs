@@ -45,7 +45,8 @@ pub use budget::{spill_seconds, MemoryBudget};
 pub use cache::{CacheStats, StateCache};
 pub use driver::{simulate, simulate_pooled, SimConfig, SimReport};
 pub use scheduler::{
-    Phase, SchedStats, ScheduledStep, SchedulerConfig, SessionInfo, SessionScheduler, StepOutcome,
+    MigratedSession, Phase, SchedStats, ScheduledStep, SchedulerConfig, SessionInfo,
+    SessionScheduler, StepOutcome,
 };
 pub use state::{SsmState, StateShape};
 

@@ -90,6 +90,23 @@ pub struct SchedStats {
     pub prefill_steps: u64,
     pub decode_steps: u64,
     pub batches: u64,
+    /// Sessions detached via [`SessionScheduler::export`] (fleet migration).
+    pub migrated_out: u64,
+    /// Sessions re-attached via [`SessionScheduler::admit_migrated`].
+    pub migrated_in: u64,
+}
+
+/// A session's scheduler-side record, detached by
+/// [`SessionScheduler::export`] so a fleet router can move it to another
+/// node's scheduler with [`SessionScheduler::admit_migrated`]. Progress
+/// (`tokens_done`) travels with the ticket: the destination resumes decode
+/// at exactly the next token index, never replaying or skipping one.
+#[derive(Debug, Clone, Copy)]
+pub struct MigratedSession {
+    pub info: SessionInfo,
+    pub phase: Phase,
+    /// Tokens produced so far (prefill's first token included).
+    pub tokens_done: usize,
 }
 
 #[derive(Debug)]
@@ -203,6 +220,60 @@ impl SessionScheduler {
         }
     }
 
+    /// Detach a live session for migration to another node. Returns `None`
+    /// if the session is unknown or has a step in flight — an executing
+    /// step must finish (or be [`abort_step`](Self::abort_step)ed on
+    /// fail-stop) before its session can move, otherwise the in-flight
+    /// token would race the transfer. Queue entries left behind are lazily
+    /// skipped as stale by [`next_batch`](Self::next_batch).
+    pub fn export(&mut self, id: SessionId) -> Option<MigratedSession> {
+        match self.sessions.get(&id) {
+            Some(e) if !e.in_flight => {
+                let e = self.sessions.remove(&id).expect("checked above");
+                self.stats.migrated_out += 1;
+                Some(MigratedSession { info: e.info, phase: e.phase, tokens_done: e.tokens_done })
+            }
+            _ => None,
+        }
+    }
+
+    /// Cancel a session's in-flight step without crediting a token — the
+    /// fail-stop path: the node died mid-batch, the step's result is lost,
+    /// and the session must be exported at its *pre-batch* progress so the
+    /// recovering node re-executes the aborted step. Returns `true` if a
+    /// step was actually cancelled.
+    pub fn abort_step(&mut self, id: SessionId) -> bool {
+        match self.sessions.get_mut(&id) {
+            Some(e) if e.in_flight => {
+                e.in_flight = false;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Attach a session exported from another scheduler. It enters the
+    /// queue matching its phase: a mid-decode session joins the back of the
+    /// decode ring at its carried `tokens_done`, a not-yet-prefilled one
+    /// queues for prefill as if freshly admitted.
+    pub fn admit_migrated(&mut self, id: SessionId, m: MigratedSession, now: Instant) {
+        self.sessions.insert(
+            id,
+            Entry {
+                info: m.info,
+                phase: m.phase,
+                tokens_done: m.tokens_done,
+                in_flight: false,
+                last_activity: now,
+            },
+        );
+        match m.phase {
+            Phase::Prefill => self.prefill_q.push_back(id),
+            Phase::Decode => self.decode_q.push_back(id),
+        }
+        self.stats.migrated_in += 1;
+    }
+
     /// Drop a session whose step failed (executor error, lost state).
     pub fn fail(&mut self, id: SessionId) {
         if self.sessions.remove(&id).is_some() {
@@ -231,6 +302,18 @@ impl SessionScheduler {
     /// Live sessions (admitted, not yet retired/failed/expired).
     pub fn live(&self) -> usize {
         self.sessions.len()
+    }
+
+    /// Ids of every live session, ascending — what a fleet router walks to
+    /// drain a node.
+    pub fn live_ids(&self) -> Vec<SessionId> {
+        self.sessions.keys().copied().collect()
+    }
+
+    /// Immutable parameters of a live session (`None` once it retired,
+    /// failed, expired, or was exported).
+    pub fn info(&self, id: SessionId) -> Option<SessionInfo> {
+        self.sessions.get(&id).map(|e| e.info)
     }
 
     /// Sessions with a step currently executing.
@@ -365,6 +448,84 @@ mod tests {
         assert_eq!(dead, vec![1]);
         assert_eq!(s.stats.expired, 1);
         assert_eq!(s.live(), 1, "in-flight session 2 survives");
+    }
+
+    #[test]
+    fn export_moves_progress_between_schedulers() {
+        let mut src = sched(4);
+        let mut dst = sched(4);
+        let t = Instant::now();
+        src.admit(9, info(5), t);
+        // Prefill + one decode step on the source: tokens_done == 2.
+        for _ in 0..2 {
+            let b = src.next_batch();
+            assert_eq!(b.len(), 1);
+            src.on_step_done(9, t);
+        }
+        let m = src.export(9).expect("idle session exports");
+        assert_eq!(m.tokens_done, 2);
+        assert_eq!(m.phase, Phase::Decode);
+        assert!(src.is_idle());
+        assert_eq!(src.stats.migrated_out, 1);
+        // Destination resumes at token index 2 and retires after 5 total.
+        dst.admit_migrated(9, m, t);
+        assert_eq!(dst.stats.migrated_in, 1);
+        let b = dst.next_batch();
+        assert_eq!(b[0].phase, Phase::Decode);
+        assert_eq!(b[0].step, 2, "resume at the next token index");
+        assert_eq!(dst.on_step_done(9, t), StepOutcome::Continue);
+        for _ in 3..5 {
+            let b = dst.next_batch();
+            assert_eq!(b.len(), 1);
+            dst.on_step_done(9, t);
+        }
+        assert!(dst.is_idle());
+        assert_eq!(dst.stats.retired, 1);
+    }
+
+    #[test]
+    fn export_refuses_in_flight_until_aborted() {
+        let mut s = sched(4);
+        let t = Instant::now();
+        s.admit(3, info(4), t);
+        let b = s.next_batch();
+        assert_eq!(b.len(), 1);
+        assert!(s.export(3).is_none(), "in-flight step pins the session");
+        assert!(s.abort_step(3), "fail-stop cancels the step");
+        assert!(!s.abort_step(3), "nothing left to cancel");
+        let m = s.export(3).expect("aborted session exports");
+        assert_eq!(m.tokens_done, 0, "aborted step credits no token");
+        assert_eq!(m.phase, Phase::Prefill);
+        assert!(s.export(99).is_none(), "unknown session");
+    }
+
+    #[test]
+    fn migrated_prefill_session_queues_for_prefill() {
+        let mut src = sched(4);
+        let mut dst = sched(4);
+        let t = Instant::now();
+        src.admit(5, info(2), t);
+        let m = src.export(5).expect("never scheduled, exports clean");
+        dst.admit_migrated(5, m, t);
+        let b = dst.next_batch();
+        assert_eq!(b[0].phase, Phase::Prefill);
+        assert_eq!(dst.on_step_done(5, t), StepOutcome::Continue);
+    }
+
+    #[test]
+    fn stale_queue_entry_after_export_is_skipped() {
+        let mut s = sched(4);
+        let t = Instant::now();
+        s.admit(1, info(4), t);
+        s.admit(2, info(4), t);
+        for step in s.next_batch() {
+            s.on_step_done(step.id, t); // both now in the decode ring
+        }
+        let _ = s.export(1).expect("idle exports");
+        // 1's decode-ring entry is stale; only 2 schedules.
+        let b = s.next_batch();
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].id, 2);
     }
 
     #[test]

@@ -38,5 +38,6 @@ pub mod trace;
 pub use counters::{counter, metrics_json, snapshot, snapshot_text};
 pub use trace::{
     chip_track, disable, drain, enable, enabled, instant, instant_arg, instant_on, name_track,
-    span, trace_json, write_trace, EventKind, SpanGuard, TraceEvent, PID_HOST, PID_PCUSIM,
+    node_track, span, trace_json, write_trace, EventKind, SpanGuard, TraceEvent, PID_HOST,
+    PID_PCUSIM,
 };

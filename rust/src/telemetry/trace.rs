@@ -39,6 +39,18 @@ pub fn chip_track(chip: usize) -> u64 {
     CHIP_TRACK_BASE + chip as u64
 }
 
+/// Node tracks sit one power of two above the chip range: a fleet of
+/// `2^32` chips would be needed before the ranges meet.
+const NODE_TRACK_BASE: u64 = 1 << 33;
+
+/// The per-node track id for fleet instant events (session placement,
+/// migration out/in, drain, fail-stop) attributed to `node`. Chips of node
+/// `n` keep their own [`chip_track`]s (the fleet numbers them globally as
+/// `n * chips_per_node + c`); the node track carries router-level events.
+pub fn node_track(node: usize) -> u64 {
+    NODE_TRACK_BASE + node as u64
+}
+
 static ENABLED: AtomicBool = AtomicBool::new(false);
 
 /// Is tracing currently enabled? One relaxed load — this is the whole
@@ -531,5 +543,11 @@ mod tests {
     fn chip_tracks_cannot_collide_with_thread_tracks() {
         assert!(chip_track(0) > u32::MAX as u64);
         assert_eq!(chip_track(5) - chip_track(0), 5);
+    }
+
+    #[test]
+    fn node_tracks_sit_above_chip_tracks() {
+        assert!(node_track(0) > chip_track(u32::MAX as usize));
+        assert_eq!(node_track(3) - node_track(0), 3);
     }
 }

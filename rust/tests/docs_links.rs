@@ -92,9 +92,210 @@ fn all_relative_markdown_links_resolve() {
 #[test]
 fn docs_suite_files_exist() {
     let root = repo_root();
-    for required in ["README.md", "docs/ARCHITECTURE.md", "docs/WORKLOADS.md"] {
+    for required in ["README.md", "docs/ARCHITECTURE.md", "docs/WORKLOADS.md", "docs/FLEET.md"] {
         assert!(root.join(required).exists(), "missing {required}");
     }
+}
+
+/// Every `.rs` file under `rust/src`, read once.
+fn rust_sources() -> Vec<(PathBuf, String)> {
+    fn walk(dir: &Path, out: &mut Vec<(PathBuf, String)>) {
+        for entry in fs::read_dir(dir).unwrap_or_else(|e| panic!("read {dir:?}: {e}")) {
+            let path = entry.expect("dir entry").path();
+            if path.is_dir() {
+                walk(&path, out);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                let text =
+                    fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {path:?}: {e}"));
+                out.push((path, text));
+            }
+        }
+    }
+    let mut out = Vec::new();
+    walk(&repo_root().join("rust/src"), &mut out);
+    assert!(!out.is_empty(), "rust/src must contain sources");
+    out
+}
+
+/// Backtick-quoted inline code spans outside fenced blocks.
+fn inline_code_spans(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut in_fence = false;
+    for line in text.lines() {
+        if line.trim_start().starts_with("```") {
+            in_fence = !in_fence;
+            continue;
+        }
+        if in_fence {
+            continue;
+        }
+        let mut rest = line;
+        while let Some(i) = rest.find('`') {
+            let tail = &rest[i + 1..];
+            match tail.find('`') {
+                Some(j) => {
+                    out.push(tail[..j].to_string());
+                    rest = &tail[j + 1..];
+                }
+                None => break,
+            }
+        }
+    }
+    out
+}
+
+fn is_ident(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_')
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Does any source file declare `name` — as an item (`fn`/`struct`/`enum`/
+/// `trait`/`mod`/`const`/`static`/`type`/`union`/`macro_rules!`), an enum
+/// variant, or a struct field? Pattern-level, not a parser: good enough to
+/// catch renamed or deleted symbols referenced from the docs.
+fn crate_declares(name: &str, sources: &[(PathBuf, String)]) -> bool {
+    let item_forms: Vec<String> = ["fn", "struct", "enum", "trait", "mod", "const", "static", "type", "union"]
+        .iter()
+        .map(|kw| format!("{kw} {name}"))
+        .chain([format!("macro_rules! {name}")])
+        .collect();
+    // Variant / field forms: the name at a declaration position.
+    let member_forms: Vec<String> =
+        [":", ",", "(", " {", " ="].iter().map(|suffix| format!("{name}{suffix}")).collect();
+    sources.iter().any(|(_, text)| {
+        for form in &item_forms {
+            // Item declarations: keyword + name followed by a non-ident char.
+            for (pos, _) in text.match_indices(form.as_str()) {
+                let after = text[pos + form.len()..].chars().next();
+                if !after.is_some_and(|c| c.is_ascii_alphanumeric() || c == '_') {
+                    return true;
+                }
+            }
+        }
+        for form in &member_forms {
+            for (pos, _) in text.match_indices(form.as_str()) {
+                let before = text[..pos].chars().next_back();
+                if !before.is_some_and(|c| c.is_ascii_alphanumeric() || c == '_') {
+                    return true;
+                }
+            }
+        }
+        false
+    })
+}
+
+/// Does `rust/src` contain a module at `segments` (e.g. `["fleet",
+/// "loadgen"]` → `rust/src/fleet/loadgen.rs` or `.../loadgen/mod.rs`)?
+fn module_path_exists(segments: &[&str]) -> bool {
+    let base = repo_root().join("rust/src");
+    let dir = segments.iter().fold(base.clone(), |p, s| p.join(s));
+    if dir.is_dir() && dir.join("mod.rs").exists() {
+        return true;
+    }
+    if segments.is_empty() {
+        return false;
+    }
+    let parent = segments[..segments.len() - 1].iter().fold(base, |p, s| p.join(s));
+    parent.join(format!("{}.rs", segments.last().expect("non-empty"))).exists()
+}
+
+#[test]
+fn backticked_symbol_references_resolve_to_real_items() {
+    // Every backtick-quoted `module::symbol` path in the docs must point at
+    // something that exists in rust/src — module segments as files/dirs,
+    // the final symbol as a declared item (or `Type::member` with both the
+    // type and the member declared). Renaming an item without updating the
+    // docs fails here.
+    let sources = rust_sources();
+    let top_modules: Vec<String> = {
+        let lib = fs::read_to_string(repo_root().join("rust/src/lib.rs")).expect("lib.rs");
+        lib.lines()
+            .filter_map(|l| l.trim().strip_prefix("pub mod "))
+            .map(|m| m.trim_end_matches(';').to_string())
+            .collect()
+    };
+    assert!(top_modules.contains(&"fleet".to_string()), "lib.rs declares the fleet module");
+
+    let mut broken: Vec<String> = Vec::new();
+    let mut checked = 0usize;
+    for file in doc_files() {
+        let text = fs::read_to_string(&file).unwrap_or_else(|e| panic!("read {file:?}: {e}"));
+        for raw in inline_code_spans(&text) {
+            if !raw.contains("::") {
+                continue;
+            }
+            // Strip a call/macro suffix (`()`, `(args)`, `!`) and skip
+            // anything that is not a plain `a::b::c` path (generics,
+            // expressions, flag examples).
+            let span = raw.split('(').next().unwrap_or(&raw).trim_end_matches('!');
+            let segments: Vec<&str> = span.split("::").collect();
+            if segments.len() < 2 || !segments.iter().all(|s| is_ident(s)) {
+                continue;
+            }
+            let segments: Vec<&str> =
+                if segments[0] == "crate" { segments[1..].to_vec() } else { segments };
+            if segments.len() < 2 {
+                continue;
+            }
+            let first = segments[0];
+            let head_is_type = first.chars().next().is_some_and(|c| c.is_ascii_uppercase());
+            if !head_is_type && !top_modules.iter().any(|m| m == first) {
+                continue; // `std::`, `anyhow::`, CLI examples — out of scope
+            }
+            checked += 1;
+            if head_is_type {
+                // `Type::member`: both halves must be declared in-crate.
+                let ok = crate_declares(first, &sources)
+                    && segments[1..].iter().all(|s| crate_declares(s, &sources));
+                if !ok {
+                    broken.push(format!("{}: `{raw}`", file.display()));
+                }
+                continue;
+            }
+            // `module::…::tail` — greedily extend the module run while each
+            // lowercase prefix exists on disk; whatever remains (a type, fn,
+            // or constant) must be declared somewhere in the crate. A pure
+            // module path (`fleet::loadgen`) is fine on its own.
+            let mut mod_len = 1;
+            while mod_len < segments.len()
+                && segments[mod_len].chars().next().is_some_and(|c| c.is_ascii_lowercase())
+                && module_path_exists(&segments[..mod_len + 1])
+            {
+                mod_len += 1;
+            }
+            let mods_ok = module_path_exists(&segments[..mod_len]);
+            let tail_ok = segments[mod_len..].iter().all(|s| crate_declares(s, &sources));
+            if !(mods_ok && tail_ok) {
+                broken.push(format!("{}: `{raw}`", file.display()));
+            }
+        }
+    }
+    assert!(
+        checked >= 10,
+        "the docs suite should reference at least 10 `module::symbol` paths (found {checked})"
+    );
+    assert!(
+        broken.is_empty(),
+        "stale `module::symbol` references in docs:\n  {}",
+        broken.join("\n  ")
+    );
+}
+
+#[test]
+fn symbol_checker_helpers_are_honest() {
+    let sources = rust_sources();
+    // Real items in this repo resolve…
+    assert!(crate_declares("FleetConfig", &sources));
+    assert!(crate_declares("run_fleet", &sources));
+    assert!(crate_declares("merge_all", &sources));
+    assert!(module_path_exists(&["fleet"]));
+    assert!(module_path_exists(&["fleet", "loadgen"]));
+    assert!(module_path_exists(&["session", "driver"]));
+    // …and fabrications do not.
+    assert!(!crate_declares("definitely_not_a_real_symbol_xyz", &sources));
+    assert!(!module_path_exists(&["fleet", "no_such_module"]));
+    assert!(is_ident("run_fleet") && !is_ident("2fast") && !is_ident(""));
 }
 
 #[test]
