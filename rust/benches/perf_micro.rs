@@ -15,15 +15,24 @@
 //! * **raw-speed pass (PR 7)** — split-radix vs radix-2 real-FFT engines
 //!   at the 32k transform the L=16k conv runs, cache-blocked vs
 //!   breadth-first traversal, chunked vs scalar scan/gate kernels, and
-//!   `map_stealing` vs statically-chunked `map` on ragged job sets.
+//!   `map_stealing` vs statically-chunked `map` on ragged job sets;
+//! * **resident-team pass (PR 9)** — the resident `WorkerPool::map`
+//!   facade vs the scoped spawn-per-call baseline (`map_spawn`) on the
+//!   short-batch L=1k D=32 serve loop, and the explicit-lane SIMD scan
+//!   kernel vs its scalar oracle (backend recorded in provenance).
 //!
 //! This target doubles as the CI gate: it **exits non-zero** unless
 //!
 //! * the planned real-input convolution is ≥1.5× the pre-plan naive
 //!   complex path at **both** L = 4k and L = 16k (the split-radix regime),
-//!   and
 //! * the per-channel Hyena convolution fan-out over a 4-thread pool is
-//!   ≥2.5× its serial loop at L = 4k.
+//!   ≥3.0× its serial loop at L = 4k (ratcheted from 2.5× by the
+//!   resident team's µs-scale park/wake),
+//! * the resident team beats spawn-per-batch by ≥1.15× on the short-batch
+//!   serve loop, and
+//! * the SIMD Mamba scan is ≥2.5× its scalar oracle (ratcheted from the
+//!   chunked kernel's 2.21×) — skipped on the portable fallback backend,
+//!   where the two are the same code.
 //!
 //!     cargo bench --bench perf_micro -- --quick --json
 
@@ -42,7 +51,7 @@ use ssm_rdu::runtime::{ModelKind, WorkerPool};
 use ssm_rdu::scan::{
     blelloch_exclusive, c_scan_exclusive, gate_silu_chunked, gate_silu_scalar,
     hillis_steele_inclusive, mamba_scan_channels_chunked, mamba_scan_channels_scalar,
-    tiled_exclusive,
+    mamba_scan_channels_simd, simd_backend, tiled_exclusive,
 };
 use ssm_rdu::session::driver::{simulate, simulate_pooled, SimConfig};
 use ssm_rdu::shard::{
@@ -61,13 +70,34 @@ const GATE_L: usize = 1 << 12;
 const GATE_L_16K: usize = 1 << 14;
 const GATE_MIN_SPEEDUP: f64 = 1.5;
 const GATE_POOL_THREADS: usize = 4;
-const GATE_POOL_MIN_SPEEDUP: f64 = 2.5;
+/// PR 9 ratchet (was 2.5): the resident team's µs-scale park/wake removes
+/// the per-call spawn tax the old floor priced in.
+const GATE_POOL_MIN_SPEEDUP: f64 = 3.0;
+/// Resident `map` vs spawn-per-batch `map_spawn` on the short-batch serve
+/// loop (L=1k, D=32): residency must be worth ≥15%.
+const GATE_TEAM_MIN_SPEEDUP: f64 = 1.15;
+/// Explicit-lane SIMD scan vs its scalar oracle (ratcheted from the
+/// chunked kernel's 2.21×). Only enforced when a real vector backend is
+/// detected — the portable fallback *is* the chunked kernel.
+const GATE_SIMD_SCAN_MIN_SPEEDUP: f64 = 2.5;
 
 fn main() {
     let mut b = Bencher::from_env("hotpath");
     let mut rng = XorShift::new(99);
-    let pool = WorkerPool::from_env();
+    // Uncached: the bench honours SSM_RDU_THREADS even if some earlier
+    // code already resolved the process-wide cached pool.
+    let pool = WorkerPool::from_env_uncached();
     b.metric("pool_threads", pool.threads() as f64);
+    println!("simd backend: {}", simd_backend());
+    // Backend provenance as a scalar: 0 = portable, 1 = avx, 2 = neon.
+    b.metric(
+        "simd_backend_code",
+        match simd_backend() {
+            "avx" => 1.0,
+            "neon" => 2.0,
+            _ => 0.0,
+        },
+    );
 
     // --- FFT substrate: planned vs naive transform ------------------------
     let x16k = to_complex(&rng.vec(1 << 14, -1.0, 1.0));
@@ -129,7 +159,8 @@ fn main() {
         b.metric("fft_blocked_vs_flat_speedup_16k", t_flat / t_blocked);
     }
 
-    // --- Chunked scan/gate kernels vs their scalar oracles (PR 7) ---------
+    // --- Chunked/SIMD scan/gate kernels vs their scalar oracles -----------
+    let simd_scan_speedup;
     {
         let t = 1 << 12;
         let c = 64;
@@ -145,9 +176,17 @@ fn main() {
                 mamba_scan_channels_chunked(&a, &bb, c)
             })
             .min;
+        let t_simd = b
+            .bench("mamba scan channels: simd T=4K C=64", || {
+                mamba_scan_channels_simd(&a, &bb, c)
+            })
+            .min;
         b.metric("mamba_scan_channels_scalar_s", t_scalar);
         b.metric("mamba_scan_channels_chunked_s", t_chunked);
+        b.metric("mamba_scan_channels_simd_s", t_simd);
         b.metric("mamba_scan_chunked_speedup", t_scalar / t_chunked);
+        b.metric("mamba_scan_simd_speedup", t_scalar / t_simd);
+        simd_scan_speedup = t_scalar / t_simd;
 
         let z = rng.vec(1 << 18, -4.0, 4.0);
         let g_scalar = b.bench("gate: silu scalar 256K", || gate_silu_scalar(&z, &z)).min;
@@ -251,6 +290,33 @@ fn main() {
         b.metric("ragged_map_stealing_speedup", t_map / t_steal);
     }
 
+    // --- Resident team vs spawn-per-batch (PR 9) --------------------------
+    // The short-batch serve loop is where residency pays: at L=1k each
+    // per-channel conv is tens of µs, so a spawn/join per batch is a
+    // visible tax that the resident team's park/wake path avoids.
+    let team_gate_speedup;
+    {
+        let l = 1usize << 10;
+        let d = 32;
+        let pool4 = WorkerPool::new(GATE_POOL_THREADS);
+        let us: Vec<Vec<f64>> = (0..d).map(|_| rng.vec(l, -1.0, 1.0)).collect();
+        let ks: Vec<Vec<f64>> = (0..d).map(|_| rng.vec(l, -1.0, 1.0)).collect();
+        let t_spawn = b
+            .bench("serve loop: spawn-per-batch D=32 L=1K", || {
+                pool4.map_spawn(d, |i| fft_conv_linear(&us[i], &ks[i]))
+            })
+            .min;
+        let t_resident = b
+            .bench("serve loop: resident team D=32 L=1K", || {
+                pool4.map(d, |i| fft_conv_linear(&us[i], &ks[i]))
+            })
+            .min;
+        team_gate_speedup = t_spawn / t_resident;
+        b.metric("team_spawn_s_L1024", t_spawn);
+        b.metric("team_resident_s_L1024", t_resident);
+        b.metric("team_resident_vs_spawn", team_gate_speedup);
+    }
+
     // --- Pooled vs serial: sharded dataflows -------------------------------
     let n = 1 << 18;
     let sa: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 0.99)).collect();
@@ -350,6 +416,8 @@ fn main() {
     b.metric("conv_gate_min_speedup", GATE_MIN_SPEEDUP);
     b.metric("pool_gate_speedup", pool_gate_speedup);
     b.metric("pool_gate_min_speedup", GATE_POOL_MIN_SPEEDUP);
+    b.metric("team_gate_min_speedup", GATE_TEAM_MIN_SPEEDUP);
+    b.metric("simd_scan_gate_min_speedup", GATE_SIMD_SCAN_MIN_SPEEDUP);
     b.finish();
 
     // The perf gates (CI fails on regression rather than silently eroding
@@ -381,6 +449,37 @@ fn main() {
         println!(
             "hot-path gate OK: {GATE_POOL_THREADS}-thread channel fan-out {pool_gate_speedup:.2}x \
              serial at L={GATE_L} (gate: >= {GATE_POOL_MIN_SPEEDUP}x)"
+        );
+    }
+    if team_gate_speedup < GATE_TEAM_MIN_SPEEDUP {
+        eprintln!(
+            "HOT-PATH PERF REGRESSION: resident team is only {team_gate_speedup:.2}x \
+             spawn-per-batch on the short-batch serve loop (gate: >= {GATE_TEAM_MIN_SPEEDUP}x)"
+        );
+        failed = true;
+    } else {
+        println!(
+            "hot-path gate OK: resident team {team_gate_speedup:.2}x spawn-per-batch on the \
+             short-batch serve loop (gate: >= {GATE_TEAM_MIN_SPEEDUP}x)"
+        );
+    }
+    if simd_backend() == "portable" {
+        println!(
+            "hot-path gate SKIPPED: simd scan on the portable fallback backend \
+             ({simd_scan_speedup:.2}x scalar, not enforced)"
+        );
+    } else if simd_scan_speedup < GATE_SIMD_SCAN_MIN_SPEEDUP {
+        eprintln!(
+            "HOT-PATH PERF REGRESSION: simd [{}] mamba scan is only {simd_scan_speedup:.2}x \
+             scalar (gate: >= {GATE_SIMD_SCAN_MIN_SPEEDUP}x)",
+            simd_backend()
+        );
+        failed = true;
+    } else {
+        println!(
+            "hot-path gate OK: simd [{}] mamba scan {simd_scan_speedup:.2}x scalar \
+             (gate: >= {GATE_SIMD_SCAN_MIN_SPEEDUP}x)",
+            simd_backend()
         );
     }
     if failed {

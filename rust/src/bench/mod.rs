@@ -32,6 +32,11 @@
 use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
+/// Minimum timed iterations per benchmark, however slow one iteration is.
+/// The perf gates ratchet on `min_s`; a floor keeps that minimum a real
+/// order statistic instead of a one-shot sample.
+pub const MIN_TIMED_ITERS: u64 = 20;
+
 /// One benchmark's statistics, in seconds.
 #[derive(Debug, Clone)]
 pub struct Stats {
@@ -97,17 +102,27 @@ impl Bencher {
 
     /// Time a closure. The closure should perform one logical iteration and
     /// return a value (returned values are black-boxed to defeat DCE).
+    ///
+    /// Every bench gets a warmup pass (at least one iteration, even with a
+    /// zero warmup window) before any timing, and at least
+    /// [`MIN_TIMED_ITERS`] timed iterations — the ratchet gates compare
+    /// `min_s` across runs, and a near-single-sample minimum is noise.
     pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &Stats {
-        // Warmup, also estimates per-iter cost.
+        // Warmup, also estimates per-iter cost. `loop` (not `while`)
+        // guarantees one pass: caches, lazy statics and resident workers
+        // are warm before the first timed sample no matter the window.
         let wstart = Instant::now();
         let mut witers: u64 = 0;
-        while wstart.elapsed() < self.warmup {
+        loop {
             black_box(f());
             witers += 1;
+            if wstart.elapsed() >= self.warmup {
+                break;
+            }
         }
-        let est = wstart.elapsed().as_secs_f64() / witers.max(1) as f64;
-        let target_iters =
-            ((self.measure.as_secs_f64() / est.max(1e-9)).ceil() as u64).clamp(5, 5_000_000);
+        let est = wstart.elapsed().as_secs_f64() / witers as f64;
+        let target_iters = ((self.measure.as_secs_f64() / est.max(1e-9)).ceil() as u64)
+            .clamp(MIN_TIMED_ITERS, 5_000_000);
 
         // Timed runs: collect per-batch samples to get a stddev without
         // timing overhead dominating sub-microsecond bodies.
@@ -315,7 +330,7 @@ mod tests {
         let s = b.bench("noop-ish", || 1 + 1).clone();
         assert!(s.mean >= 0.0);
         assert!(s.min <= s.mean * 1.5 + 1e-9);
-        assert!(s.iters >= 5);
+        assert!(s.iters >= MIN_TIMED_ITERS);
         b.finish();
     }
 

@@ -232,12 +232,16 @@ impl Coordinator {
         // Worker pool. Executors are built *inside* each thread (PJRT
         // executables are thread-affine); a handshake channel surfaces
         // construction failures to the caller. Continuous-mode workers are
-        // homed on chip `wid % chips` and claim steps from the steal board;
-        // batch-mode workers share the batch channel.
+        // homed per `topology::worker_homes` — contiguous worker blocks per
+        // chip by default, so a chip's deque/state/arenas stay NUMA-local
+        // (`SSM_RDU_PIN_HOMES=0` restores the old `wid % chips` interleave)
+        // — and claim steps from the steal board; batch-mode workers share
+        // the batch channel.
         let factory = Arc::new(factory);
         let mut workers = Vec::with_capacity(cfg.workers);
         let (ready_tx, ready_rx) = channel::<Result<()>>();
         let chips = cfg.continuous.map(|cc| cc.chips.max(1)).unwrap_or(1);
+        let homes = crate::runtime::topology::worker_homes(cfg.workers, chips);
         for wid in 0..cfg.workers {
             let metrics = Arc::clone(&metrics);
             let factory = Arc::clone(&factory);
@@ -249,7 +253,7 @@ impl Coordinator {
                     let board = Arc::clone(b);
                     let caches =
                         Arc::clone(caches.as_ref().expect("continuous mode builds caches"));
-                    let home = wid % chips;
+                    let home = homes[wid];
                     spawn.spawn(move || match factory() {
                         Ok(exec) => {
                             let _ = ready.send(Ok(()));
@@ -509,7 +513,7 @@ fn dispatcher_loop(
         let timeout = batcher
             .next_deadline()
             .map(|d| d.saturating_duration_since(Instant::now()))
-            .unwrap_or(Duration::from_millis(50));
+            .unwrap_or(crate::runtime::EVENT_LOOP_TICK);
         match rx.recv_timeout(timeout) {
             Ok(Msg::Submit(req, reply)) => batcher.push(req, reply),
             Ok(Msg::Feedback(_)) => {} // continuous-mode only; ignore here
@@ -612,7 +616,7 @@ fn continuous_loop(
     'event: loop {
         // Block for one event, then drain everything already queued so the
         // scheduler sees the full picture before cutting the next wave.
-        match rx.recv_timeout(Duration::from_millis(50)) {
+        match rx.recv_timeout(crate::runtime::EVENT_LOOP_TICK) {
             Ok(msg) => {
                 if let Control::Shutdown = handle(msg, &mut side, &mut outstanding) {
                     break 'event;
@@ -923,6 +927,17 @@ fn run_step(
     let result: Result<Vec<f32>> = match task.phase {
         Phase::Prefill => {
             exec.begin_session(task.model, &task.input, &task.shape).map(|(state, first)| {
+                // First touch: the session's state buffer is allocated and
+                // written *here*, on the worker servicing the claim — with
+                // block homing (`runtime::topology`) that is a home worker
+                // of `task.chip`, so the pages land on the NUMA node that
+                // services every later decode of this session.
+                crate::telemetry::instant_arg(
+                    "placement",
+                    "place.first_touch",
+                    "chip",
+                    task.chip as f64,
+                );
                 cache.lock().expect("state cache lock").insert(task.session, state);
                 first
             })

@@ -18,11 +18,13 @@
 //! Hyena conv module across a [`crate::runtime::WorkerPool`] with
 //! self-scheduling claim order (`map_stealing`); channels are independent
 //! and the result is bit-identical to the serial per-channel loop. Plan
-//! reuse under pooling: pool workers are scoped (fresh threads per call),
-//! but a fresh worker's first conv at a length **clones** the plan out of
-//! the process-wide master cache (a memcpy — see
-//! [`super::plan::with_conv_plan`]) instead of rebuilding its trig tables,
-//! so pooled speedups no longer sink into per-call plan construction.
+//! reuse under pooling: since PR 9 the pool is a facade over the resident
+//! `crate::runtime::WorkerTeam`, so a worker's thread-local plan cache
+//! survives across calls — its *first ever* conv at a length clones the
+//! plan out of the process-wide master cache (a memcpy — see
+//! [`super::plan::with_conv_plan`]) and every later batch at that length
+//! finds it already warm (one of the sticky-state wins the
+//! `team_resident_vs_spawn` bench gate prices).
 
 use super::plan::with_conv_plan;
 use super::{cooley_tukey::{fft, ifft}, is_pow2, to_complex, to_real};

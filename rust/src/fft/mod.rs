@@ -52,6 +52,7 @@ pub mod conv;
 pub mod cooley_tukey;
 pub mod dft;
 pub mod plan;
+pub mod simd;
 
 pub use bailey::{bailey_fft, BaileyVariant};
 pub use conv::{

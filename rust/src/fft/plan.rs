@@ -204,19 +204,13 @@ impl FftPlan {
         let m = x.len();
         let mut len = 2;
         while len <= m {
-            let half = len / 2;
             let stride = self.n / len;
             for start in (0..m).step_by(len) {
-                for k in 0..half {
-                    let mut w = self.tw[k * stride];
-                    if inverse {
-                        w = w.conj();
-                    }
-                    let a = x[start + k];
-                    let b = x[start + k + half] * w;
-                    x[start + k] = a + b;
-                    x[start + k + half] = a - b;
-                }
+                // Explicit-lane butterflies (crate::fft::simd), bit-identical
+                // to the scalar loop by the no-FMA/exact-expansion rules —
+                // flat and blocked traversals share the same pass, so their
+                // differential contract is untouched.
+                super::simd::butterfly_block(&mut x[start..start + len], stride, &self.tw, inverse);
             }
             len <<= 1;
         }
@@ -225,19 +219,8 @@ impl FftPlan {
     /// The single combining stage at `len = x.len()` — the last stage of a
     /// blocked recursion level.
     fn stage_last(&self, x: &mut [C64], inverse: bool) {
-        let m = x.len();
-        let half = m / 2;
-        let stride = self.n / m;
-        for k in 0..half {
-            let mut w = self.tw[k * stride];
-            if inverse {
-                w = w.conj();
-            }
-            let a = x[k];
-            let b = x[k + half] * w;
-            x[k] = a + b;
-            x[k + half] = a - b;
-        }
+        let stride = self.n / x.len();
+        super::simd::butterfly_block(x, stride, &self.tw, inverse);
     }
 
     /// Depth-first cache-blocked traversal: finish *all* stages of each

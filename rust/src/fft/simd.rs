@@ -1,0 +1,164 @@
+//! Explicit-lane butterfly pass for the radix-2 FFT plans (PR 9).
+//!
+//! [`butterfly_block`] runs one combining stage over an aligned block: for
+//! `k < half`, with `w = tw[k·stride]` (conjugated when inverse),
+//!
+//! ```text
+//! a = x[k];  b = x[k + half] · w;
+//! x[k] = a + b;  x[k + half] = a − b;
+//! ```
+//!
+//! The scalar loop is the portable body; on x86_64-with-AVX two butterflies
+//! run per iteration in one 256-bit lane group, on aarch64-with-NEON one
+//! per 128-bit pair. Both are **bit-identical** to the scalar loop:
+//!
+//! * The complex product is expanded into exactly the scalar `Mul`'s four
+//!   products, one subtraction and one addition per butterfly — via
+//!   `addsub` on AVX, and via multiplying by a `[-w.im, w.im]` pair on
+//!   NEON (IEEE-754 guarantees `a + (−b) ≡ a − b` and `x·(−w) ≡ −(x·w)`
+//!   exactly, and `re·im + im·re` commutes bit-for-bit).
+//! * No FMA anywhere — the scalar path rounds after every product.
+//! * `C64` is `repr(C)`, so a vector load of `x[k..k+2]` reads
+//!   `[re₀, im₀, re₁, im₁]` by layout contract.
+//!
+//! The property harness fuzzes plan outputs against the naive DFT and the
+//! flat oracle, so a backend drifting by one bit fails `tests/prop.rs`.
+
+use crate::util::C64;
+
+/// One radix-2 combining stage over `block` (length = 2·half): butterfly
+/// `k` pairs `block[k]` with `block[k + half]` under twiddle
+/// `tw[k·stride]`. Dispatches to the widest bit-identical backend.
+pub(crate) fn butterfly_block(block: &mut [C64], stride: usize, tw: &[C64], inverse: bool) {
+    let half = block.len() / 2;
+    #[cfg(target_arch = "x86_64")]
+    {
+        if half >= 2 && std::arch::is_x86_feature_detected!("avx") {
+            // SAFETY: AVX presence checked above.
+            unsafe { butterfly_block_avx(block, stride, tw, inverse) };
+            return;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            // SAFETY: NEON presence checked above.
+            unsafe { butterfly_block_neon(block, stride, tw, inverse) };
+            return;
+        }
+    }
+    butterfly_block_scalar(block, stride, tw, inverse);
+}
+
+/// The portable body — and the reference the lane paths must match bit
+/// for bit.
+fn butterfly_block_scalar(block: &mut [C64], stride: usize, tw: &[C64], inverse: bool) {
+    let half = block.len() / 2;
+    for k in 0..half {
+        let mut w = tw[k * stride];
+        if inverse {
+            w = w.conj();
+        }
+        let a = block[k];
+        let b = block[k + half] * w;
+        block[k] = a + b;
+        block[k + half] = a - b;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn butterfly_block_avx(block: &mut [C64], stride: usize, tw: &[C64], inverse: bool) {
+    use core::arch::x86_64::*;
+    let half = block.len() / 2;
+    let p = block.as_mut_ptr() as *mut f64;
+    // half is a power of two ≥ 2 here, so the pair loop covers everything.
+    for k in (0..half).step_by(2) {
+        let mut w0 = tw[k * stride];
+        let mut w1 = tw[(k + 1) * stride];
+        if inverse {
+            w0 = w0.conj();
+            w1 = w1.conj();
+        }
+        let wv = _mm256_setr_pd(w0.re, w0.im, w1.re, w1.im);
+        let wre = _mm256_movedup_pd(wv); //            [re0, re0, re1, re1]
+        let wim = _mm256_permute_pd::<0b1111>(wv); //  [im0, im0, im1, im1]
+        let bv = _mm256_loadu_pd(p.add(2 * (k + half)));
+        let bsw = _mm256_permute_pd::<0b0101>(bv); //  [im, re] per complex
+        // (b.re·w.re − b.im·w.im, b.im·w.re + b.re·w.im): the scalar
+        // products verbatim, addsub doing the one sub / one add per lane
+        // pair. No FMA.
+        let prod = _mm256_addsub_pd(_mm256_mul_pd(bv, wre), _mm256_mul_pd(bsw, wim));
+        let av = _mm256_loadu_pd(p.add(2 * k));
+        _mm256_storeu_pd(p.add(2 * k), _mm256_add_pd(av, prod));
+        _mm256_storeu_pd(p.add(2 * (k + half)), _mm256_sub_pd(av, prod));
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn butterfly_block_neon(block: &mut [C64], stride: usize, tw: &[C64], inverse: bool) {
+    use core::arch::aarch64::*;
+    let half = block.len() / 2;
+    let p = block.as_mut_ptr() as *mut f64;
+    for k in 0..half {
+        let mut w = tw[k * stride];
+        if inverse {
+            w = w.conj();
+        }
+        let wre = vdupq_n_f64(w.re);
+        // [−w.im, w.im]: multiplying the swapped b by this yields
+        // [−(b.im·w.im), b.re·w.im], so one vadd gives the scalar's
+        // (sub, add) pair exactly (IEEE: a + (−b) ≡ a − b).
+        let wim = vld1q_f64([-w.im, w.im].as_ptr());
+        let bv = vld1q_f64(p.add(2 * (k + half)));
+        let bsw = vextq_f64::<1>(bv, bv); // [b.im, b.re]
+        let prod = vaddq_f64(vmulq_f64(bv, wre), vmulq_f64(bsw, wim));
+        let av = vld1q_f64(p.add(2 * k));
+        vst1q_f64(p.add(2 * k), vaddq_f64(av, prod));
+        vst1q_f64(p.add(2 * (k + half)), vsubq_f64(av, prod));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+    use std::f64::consts::PI;
+
+    fn random_block(rng: &mut XorShift, n: usize) -> Vec<C64> {
+        (0..n).map(|_| C64::new(rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0))).collect()
+    }
+
+    fn twiddles(n: usize) -> Vec<C64> {
+        (0..n).map(|j| C64::cis(-2.0 * PI * j as f64 / n as f64)).collect()
+    }
+
+    #[test]
+    fn dispatched_pass_is_bit_identical_to_scalar() {
+        let mut rng = XorShift::new(601);
+        for len in [2usize, 4, 8, 64, 256] {
+            let tw = twiddles(256 * len); // oversized table, strided reads
+            for stride in [1usize, 2, 16] {
+                for inverse in [false, true] {
+                    let x = random_block(&mut rng, len);
+                    let mut got = x.clone();
+                    let mut want = x;
+                    butterfly_block(&mut got, stride, &tw, inverse);
+                    butterfly_block_scalar(&mut want, stride, &tw, inverse);
+                    assert_eq!(got, want, "len={len} stride={stride} inverse={inverse}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unit_twiddle_pass_is_the_plain_sum_difference() {
+        // With w = 1 the butterfly is (a+b, a−b) exactly.
+        let tw = twiddles(4);
+        let mut x = vec![C64::new(1.0, 2.0), C64::new(3.0, -4.0)];
+        butterfly_block(&mut x, 0, &tw, false); // stride 0 → w = tw[0] = 1
+        assert_eq!(x[0], C64::new(4.0, -2.0));
+        assert_eq!(x[1], C64::new(-2.0, 6.0));
+    }
+}

@@ -227,6 +227,18 @@ impl Node {
                     let ptoks = (prompt.len() / shape.d_model.max(1)).max(1);
                     let (state, first) = self.exec.begin_session(s.model, &prompt, &shape)?;
                     let snapshot = state.clone();
+                    // First touch: the session's state buffer lands in this
+                    // chip's cache here and every later decode reuses it —
+                    // the same placement instant the coordinator emits, so
+                    // fleet traces carry the per-chip placement story too.
+                    let chip = (s.id as usize) % self.chips;
+                    telemetry::instant_on(
+                        "placement",
+                        "place.first_touch",
+                        telemetry::chip_track(self.id * self.chips + chip),
+                        "chip",
+                        chip as f64,
+                    );
                     self.cache_of(s.id).insert(s.id, state);
                     batch_seconds = batch_seconds.max(self.costs.of(s.model) * ptoks as f64);
                     (first, snapshot)

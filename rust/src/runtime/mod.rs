@@ -7,20 +7,29 @@
 //! model variant; Python is never on the request path.
 
 //!
-//! [`pool`] also lives here: the dependency-free [`WorkerPool`] that fans
-//! hot-path golden-model work (per-channel convolutions, per-chip shards,
-//! per-session decode steps, batch packing) across `std::thread::scope`
-//! workers. [`steal`] holds the sharded work-stealing queues
-//! ([`StealQueues`] / [`StealBoard`]) behind the continuous coordinator's
-//! dispatch (ARCHITECTURE.md §5.4).
+//! The host execution engine also lives here: [`team`] is the resident
+//! [`WorkerTeam`] (spawned once, `SSM_RDU_THREADS`-wide) that executes all
+//! pooled work; [`pool`] keeps the dependency-free [`WorkerPool`] API that
+//! fans hot-path golden-model work (per-channel convolutions, per-chip
+//! shards, per-session decode steps, batch packing) as a thin facade over
+//! the team. [`eventcount`] is the futex-style park/wake primitive both
+//! the team and [`steal`]'s sharded work-stealing queues
+//! ([`StealQueues`] / [`StealBoard`]) sleep on, and [`topology`] probes
+//! `/sys` NUMA layout for home-worker placement (ARCHITECTURE.md §5.4–5.5).
 
+pub mod eventcount;
 pub mod manifest;
 pub mod pool;
 pub mod steal;
+pub mod team;
+pub mod topology;
 
+pub use eventcount::EventCount;
 pub use manifest::{Manifest, ModelMeta};
 pub use pool::WorkerPool;
-pub use steal::{Claim, StealBoard, StealQueues};
+pub use steal::{Claim, StealBoard, StealQueues, EVENT_LOOP_TICK};
+pub use team::{worker_index, with_scratch_f64, WorkerTeam};
+pub use topology::Topology;
 
 use crate::Result;
 use anyhow::{anyhow, Context};

@@ -1,19 +1,25 @@
-//! Dependency-free worker pool over `std::thread::scope` — the fan-out
-//! substrate for every embarrassingly parallel axis in the golden models:
-//! per-channel Hyena convolutions (`crate::fft::conv`), per-chip sharded
-//! scan/FFT execution (`crate::shard`), per-session decode steps
+//! Dependency-free worker-pool facade — the fan-out API for every
+//! embarrassingly parallel axis in the golden models: per-channel Hyena
+//! convolutions (`crate::fft::conv`), per-chip sharded scan/FFT execution
+//! (`crate::shard`), per-session decode steps
 //! (`crate::session::driver::simulate_pooled`), and large batch packing in
 //! the coordinator. No crates are added: the build stays offline-vendorable.
 //!
 //! ## Design
 //!
-//! * **Scoped, not resident.** Each call spawns its workers inside
-//!   [`std::thread::scope`] and joins them before returning, so closures
-//!   may borrow locals and no thread ever outlives its work. Per-worker
-//!   *state* that must persist across batches (thread-affine executors,
-//!   plan caches) belongs to long-lived loops built directly on
-//!   `thread::scope` (see `simulate_pooled`) or to thread-locals
-//!   (`fft::with_conv_plan`), not to this struct.
+//! * **Facade over a resident team.** Since PR 9 a `WorkerPool` owns no
+//!   threads: `map`/`map_stealing`/`for_each_mut` submit to the
+//!   process-long [`super::team::WorkerTeam`] (ARCHITECTURE.md §5.5), so
+//!   the per-call thread spawn/join is gone and per-worker state (plan
+//!   caches, scratch arenas, sticky executors) stays warm across batches.
+//!   Closures may still borrow locals — the facade blocks until the
+//!   submitted job completes. The pre-PR-9 spawn-per-call path survives as
+//!   [`WorkerPool::map_spawn`], kept honest as the baseline for the
+//!   `team_resident_vs_spawn` bench gate.
+//! * **Width is fan-out, not threads.** `threads` now means "how many
+//!   contiguous chunks to cut" (`map`/`for_each_mut`); physical
+//!   parallelism is the team's width (`SSM_RDU_THREADS` at first use).
+//!   With the default `from_env` width the two coincide.
 //! * **Deterministic chunking.** Jobs `0..n` are split into at most
 //!   `threads` *contiguous* balanced chunks; outputs are reassembled in
 //!   index order. Combined with per-job independence this makes every
@@ -23,9 +29,11 @@
 //!   [`WorkerPool::map_stealing`] keeps the same bit-identity guarantee
 //!   with *self-scheduling* claim order instead of pre-chunking, for
 //!   skewed per-job costs.
-//! * **Panic = panic.** A panicking worker panics the calling thread with
-//!   the same message; no work is silently dropped.
+//! * **Panic = panic.** A panicking job panics the calling thread with the
+//!   original payload (`resume_unwind`, not a generic join message); no
+//!   work is silently dropped and the team stays reusable.
 
+use super::team::WorkerTeam;
 use std::ops::Range;
 use std::sync::OnceLock;
 
@@ -47,19 +55,30 @@ impl WorkerPool {
     }
 
     /// Width from the environment: `SSM_RDU_THREADS` if set (0 or unset →
-    /// the machine's available parallelism). Cached after the first read.
+    /// the machine's available parallelism). **Cached after the first
+    /// read**: a later change to the env var is silently ignored, which is
+    /// correct for servers (width is a process invariant) but wrong for
+    /// harnesses that sweep widths — those must use
+    /// [`WorkerPool::from_env_uncached`] or [`WorkerPool::with_threads`].
     pub fn from_env() -> Self {
         static THREADS: OnceLock<usize> = OnceLock::new();
-        let t = *THREADS.get_or_init(|| {
-            std::env::var("SSM_RDU_THREADS")
-                .ok()
-                .and_then(|v| v.parse::<usize>().ok())
-                .filter(|&v| v > 0)
-                .unwrap_or_else(|| {
-                    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-                })
-        });
-        Self::new(t)
+        Self::new(*THREADS.get_or_init(env_threads))
+    }
+
+    /// Like [`WorkerPool::from_env`] but re-reads `SSM_RDU_THREADS` on
+    /// every call — use from benches/tests that set the env var after the
+    /// process has already done pooled work.
+    pub fn from_env_uncached() -> Self {
+        Self::new(env_threads())
+    }
+
+    /// Explicit width when given, else a fresh env read — the harness
+    /// pattern for "CLI flag overrides `SSM_RDU_THREADS`".
+    pub fn with_threads(threads: Option<usize>) -> Self {
+        match threads {
+            Some(t) => Self::new(t),
+            None => Self::from_env_uncached(),
+        }
     }
 
     /// Worker width of this pool.
@@ -68,14 +87,33 @@ impl WorkerPool {
     }
 
     /// Run jobs `0..jobs` and collect their outputs in index order. Jobs
-    /// are chunked contiguously over the workers; with one thread (or ≤ 1
-    /// job) this is exactly the serial loop.
+    /// are chunked contiguously into at most `threads` tasks executed by
+    /// the resident team; with one thread (or ≤ 1 job) this is exactly the
+    /// serial loop, inline on the caller.
     pub fn map<T, F>(&self, jobs: usize, f: F) -> Vec<T>
     where
         T: Send,
         F: Fn(usize) -> T + Sync,
     {
         let _t = crate::telemetry::span("pool", "pool.map").arg("jobs", jobs as f64);
+        pool_maps_counter().fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        if self.threads == 1 || jobs <= 1 {
+            return (0..jobs).map(f).collect();
+        }
+        WorkerTeam::global().map_chunked(jobs, self.threads, f)
+    }
+
+    /// The pre-PR-9 `map`: spawn scoped workers, run, join — one OS thread
+    /// per chunk, created and destroyed inside the call. Bit-identical to
+    /// [`WorkerPool::map`]; kept (not as a dead branch but as a measured
+    /// baseline) so the `team_resident_vs_spawn` bench gate can price
+    /// residency against real spawn/join cost forever.
+    pub fn map_spawn<T, F>(&self, jobs: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let _t = crate::telemetry::span("pool", "pool.map_spawn").arg("jobs", jobs as f64);
         pool_maps_counter().fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         if self.threads == 1 || jobs <= 1 {
             return (0..jobs).map(f).collect();
@@ -96,7 +134,10 @@ impl WorkerPool {
                 })
                 .collect();
             for h in handles {
-                chunks.push(h.join().expect("WorkerPool: a worker panicked"));
+                match h.join() {
+                    Ok(chunk) => chunks.push(chunk),
+                    Err(payload) => std::panic::resume_unwind(payload),
+                }
             }
         });
         chunks.into_iter().flatten().collect()
@@ -121,39 +162,7 @@ impl WorkerPool {
         if self.threads == 1 || jobs <= 1 {
             return (0..jobs).map(f).collect();
         }
-        let next = std::sync::atomic::AtomicUsize::new(0);
-        let workers = self.threads.min(jobs);
-        let mut claimed: Vec<Vec<(usize, T)>> = Vec::with_capacity(workers);
-        std::thread::scope(|s| {
-            let handles: Vec<_> = (0..workers)
-                .map(|_| {
-                    let f = &f;
-                    let next = &next;
-                    s.spawn(move || {
-                        let mut got = Vec::new();
-                        loop {
-                            let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                            if i >= jobs {
-                                break;
-                            }
-                            got.push((i, f(i)));
-                        }
-                        let _c = crate::telemetry::span("pool", "pool.chunk")
-                            .arg("len", got.len() as f64);
-                        got
-                    })
-                })
-                .collect();
-            for h in handles {
-                claimed.push(h.join().expect("WorkerPool: a worker panicked"));
-            }
-        });
-        let mut out: Vec<Option<T>> = (0..jobs).map(|_| None).collect();
-        for (i, v) in claimed.into_iter().flatten() {
-            debug_assert!(out[i].is_none(), "job {i} produced twice");
-            out[i] = Some(v);
-        }
-        out.into_iter().map(|v| v.expect("every job claimed exactly once")).collect()
+        WorkerTeam::global().map_indexed(jobs, f)
     }
 
     /// Mutate each item in place, `f(index, item)`, chunked contiguously
@@ -174,25 +183,18 @@ impl WorkerPool {
             }
             return;
         }
-        let sizes: Vec<usize> =
-            chunk_ranges(n, self.threads).iter().map(|r| r.len()).collect();
-        std::thread::scope(|s| {
-            let mut rest = items;
-            let mut base = 0usize;
-            for len in sizes {
-                let (head, tail) = rest.split_at_mut(len);
-                rest = tail;
-                let f = &f;
-                s.spawn(move || {
-                    let _c = crate::telemetry::span("pool", "pool.chunk").arg("len", len as f64);
-                    for (j, it) in head.iter_mut().enumerate() {
-                        f(base + j, it);
-                    }
-                });
-                base += len;
-            }
-        });
+        WorkerTeam::global().for_each_mut_chunked(items, self.threads, f)
     }
+}
+
+/// Fresh `SSM_RDU_THREADS` read: the env var if set and nonzero, else the
+/// machine's available parallelism. Shared with the team's first spawn.
+pub(crate) fn env_threads() -> usize {
+    std::env::var("SSM_RDU_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&v| v > 0)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
 }
 
 /// The `pool.dispatches` counter (map + for_each_mut calls), resolved once
@@ -243,12 +245,94 @@ mod tests {
 
     #[test]
     fn map_actually_fans_out() {
+        // The facade submits to the resident team and the submitter never
+        // executes, so *all* work leaves this thread. (Deterministic
+        // multi-worker participation is asserted in `team::tests`, where
+        // the team width is pinned rather than env-dependent.)
         let pool = WorkerPool::new(4);
         let main_id = std::thread::current().id();
         let ids = pool.map(64, |_| std::thread::current().id());
-        assert!(ids.iter().any(|&id| id != main_id), "work must leave the main thread");
-        let distinct: std::collections::HashSet<_> = ids.iter().collect();
-        assert!(distinct.len() > 1, "expected multiple worker threads");
+        assert!(ids.iter().all(|&id| id != main_id), "work must leave the main thread");
+    }
+
+    #[test]
+    fn map_spawn_matches_map_bit_for_bit() {
+        for threads in [1usize, 2, 3, 8, 33] {
+            let pool = WorkerPool::new(threads);
+            let want = pool.map_spawn(101, |i| (i * 31) as f64 / 7.0);
+            let got = pool.map(101, |i| (i * 31) as f64 / 7.0);
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn map_panics_with_original_message_and_pool_stays_usable() {
+        let pool = WorkerPool::new(4);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.map(16, |i| {
+                if i == 11 {
+                    panic!("map job {i} exploded");
+                }
+                i
+            });
+        }))
+        .expect_err("panicking job must panic the caller");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("map job 11 exploded"), "original payload expected, got {msg:?}");
+        // The resident team survives a panicking job.
+        assert_eq!(pool.map(8, |i| i * 2), (0..8).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_stealing_panics_with_original_message_and_pool_stays_usable() {
+        let pool = WorkerPool::new(3);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.map_stealing(16, |i| {
+                if i == 5 {
+                    panic!("stolen job {i} exploded");
+                }
+                i
+            });
+        }))
+        .expect_err("panicking job must panic the caller");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("stolen job 5 exploded"), "original payload expected, got {msg:?}");
+        assert_eq!(pool.map_stealing(8, |i| i + 1), (1..=8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_spawn_panics_with_original_message() {
+        let pool = WorkerPool::new(4);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.map_spawn(16, |i| {
+                if i == 3 {
+                    panic!("spawned job {i} exploded");
+                }
+                i
+            });
+        }))
+        .expect_err("panicking job must panic the caller");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("spawned job 3 exploded"), "original payload expected, got {msg:?}");
+    }
+
+    #[test]
+    fn with_threads_override_beats_env() {
+        assert_eq!(WorkerPool::with_threads(Some(7)).threads(), 7);
+        assert!(WorkerPool::with_threads(None).threads() >= 1);
+        assert!(WorkerPool::from_env_uncached().threads() >= 1);
     }
 
     #[test]

@@ -8,11 +8,15 @@
 //!   per-chip `outstanding` (queued + executing) counters. No locks, no
 //!   blocking; the deterministic interleaving stress test drives it
 //!   single-threaded through randomized push/pop/steal/complete schedules.
-//! * [`StealBoard`] — [`StealQueues`] behind a `Mutex` + `Condvar` with a
-//!   `closed` flag: the blocking facade the coordinator's worker threads
-//!   spin on. One lock for all chips is deliberate — claims are O(µs)
-//!   bookkeeping while step execution (the millisecond part) runs with the
-//!   lock released, so the lock is never held across real work.
+//! * [`StealBoard`] — [`StealQueues`] behind a `Mutex` + an
+//!   [`super::eventcount::EventCount`] with a `closed` flag: the blocking
+//!   facade the coordinator's worker threads spin on. One lock for all
+//!   chips is deliberate — claims are O(µs) bookkeeping while step
+//!   execution (the millisecond part) runs with the lock released, so the
+//!   lock is never held across real work. Idle workers park on the
+//!   eventcount (µs wake on push) instead of the old 50 ms `Condvar`
+//!   timeout tick; [`EVENT_LOOP_TICK`] survives only as the fallback
+//!   re-check bound, and parked time is surfaced as `steal.park_us`.
 //!
 //! ## Ownership and stealing rules
 //!
@@ -31,9 +35,20 @@
 //!   chip that owns its session state, which is what the spill/restore
 //!   budget accounting needs.
 
+use super::eventcount::EventCount;
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
 use std::time::Duration;
+
+/// The continuous coordinator's event-loop tick: how often its dispatch
+/// loop re-checks timers/arrivals when nothing else wakes it, and the
+/// fallback bound on every eventcount park ([`StealBoard::next`], the
+/// resident team). Correctness never depends on it — pushes wake parked
+/// threads in microseconds via the eventcount — it only bounds the damage
+/// of a hypothetical lost wake. One named constant instead of scattered
+/// `50`s so the coordinator and the parking paths cannot drift apart.
+pub const EVENT_LOOP_TICK: Duration = Duration::from_millis(50);
 
 /// An item claimed from the queues: the payload plus where it came from and
 /// whether it was stolen (for telemetry and the completion credit).
@@ -134,13 +149,13 @@ impl<T> StealQueues<T> {
     }
 }
 
-/// The blocking facade over [`StealQueues`]: a single `Mutex` + `Condvar`
-/// plus a `closed` flag. Workers call [`StealBoard::next`] in a loop and
-/// exit when it returns `None` (closed and fully drained).
+/// The blocking facade over [`StealQueues`]: a single `Mutex` + an
+/// [`EventCount`] plus a `closed` flag. Workers call [`StealBoard::next`]
+/// in a loop and exit when it returns `None` (closed and fully drained).
 #[derive(Debug)]
 pub struct StealBoard<T> {
     inner: Mutex<BoardState<T>>,
-    cv: Condvar,
+    ec: EventCount,
 }
 
 #[derive(Debug)]
@@ -154,7 +169,7 @@ impl<T> StealBoard<T> {
     pub fn new(chips: usize) -> Self {
         Self {
             inner: Mutex::new(BoardState { queues: StealQueues::new(chips), closed: false }),
-            cv: Condvar::new(),
+            ec: EventCount::new(),
         }
     }
 
@@ -162,10 +177,10 @@ impl<T> StealBoard<T> {
         self.inner.lock().expect("StealBoard lock poisoned")
     }
 
-    /// Enqueue one item on `chip`'s deque and wake one worker.
+    /// Enqueue one item on `chip`'s deque and wake the parked workers.
     pub fn push(&self, chip: usize, item: T) {
         self.lock().queues.push(chip, item);
-        self.cv.notify_one();
+        self.ec.notify_all();
     }
 
     /// Enqueue a batch on `chip`'s deque and wake all workers (a wave may
@@ -176,7 +191,7 @@ impl<T> StealBoard<T> {
             st.queues.push(chip, it);
         }
         drop(st);
-        self.cv.notify_all();
+        self.ec.notify_all();
     }
 
     /// Block until work is claimable for a worker homed on `home` (own
@@ -185,22 +200,31 @@ impl<T> StealBoard<T> {
     /// signal. In-flight items elsewhere don't delay the `None`: execution
     /// happens outside the lock, and completion is reported via
     /// [`Self::complete`].
+    ///
+    /// Parking follows the eventcount protocol: the epoch key is read
+    /// *before* the claim re-check, so a push that lands between the empty
+    /// check and the park elides the sleep. Time actually spent parked is
+    /// accumulated in the `steal.park_us` counter (with a per-wake
+    /// `steal.park` trace instant) — park/wake stalls used to be invisible
+    /// in Perfetto.
     pub fn next(&self, home: usize) -> Option<Claim<T>> {
-        let mut st = self.lock();
         loop {
-            if let Some(c) = st.queues.claim(home) {
-                return Some(c);
+            let key = self.ec.epoch();
+            {
+                let mut st = self.lock();
+                if let Some(c) = st.queues.claim(home) {
+                    return Some(c);
+                }
+                if st.closed {
+                    return None;
+                }
             }
-            if st.closed {
-                return None;
+            let parked = self.ec.wait(key, EVENT_LOOP_TICK);
+            if !parked.is_zero() {
+                let us = parked.as_micros() as u64;
+                steal_park_us_counter().fetch_add(us, Ordering::Relaxed);
+                crate::telemetry::instant_arg("steal", "steal.park", "park_us", us as f64);
             }
-            // Timeout guards the (push → notify) vs (drain → wait) race at
-            // close time; 50 ms matches the coordinator's event-loop tick.
-            let (guard, _timeout) = self
-                .cv
-                .wait_timeout(st, Duration::from_millis(50))
-                .expect("StealBoard condvar poisoned");
-            st = guard;
         }
     }
 
@@ -208,14 +232,14 @@ impl<T> StealBoard<T> {
     /// `origin`), waking the dispatcher if it is waiting for drain.
     pub fn complete(&self, origin: usize) {
         self.lock().queues.complete(origin);
-        self.cv.notify_all();
+        self.ec.notify_all();
     }
 
     /// Close the board: workers drain the remaining queued items and then
     /// exit as [`Self::next`] starts returning `None`.
     pub fn close(&self) {
         self.lock().closed = true;
-        self.cv.notify_all();
+        self.ec.notify_all();
     }
 
     /// Total outstanding (queued + executing) items across all chips.
@@ -229,11 +253,19 @@ impl<T> StealBoard<T> {
     }
 }
 
+/// `steal.park_us`: cumulative microseconds steal-board workers spent
+/// parked waiting for work (resolved once; the hot path pays one add).
+fn steal_park_us_counter() -> &'static AtomicU64 {
+    static CELL: OnceLock<&'static AtomicU64> = OnceLock::new();
+    CELL.get_or_init(|| crate::telemetry::counter("steal.park_us"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::atomic::AtomicUsize;
     use std::sync::Arc;
+    use std::time::Instant;
 
     #[test]
     fn home_pops_fifo_and_counts_outstanding() {
@@ -321,6 +353,29 @@ mod tests {
         }
         assert_eq!(done.load(Ordering::Relaxed), 10, "every item ran exactly once");
         assert_eq!(board.total_queued(), 0);
+    }
+
+    #[test]
+    fn push_wakes_a_parked_worker_before_the_fallback_tick() {
+        // The eventcount must deliver a push to a parked worker in
+        // microseconds; well under one EVENT_LOOP_TICK is the loose,
+        // scheduler-noise-proof bound we assert.
+        let board = Arc::new(StealBoard::new(1));
+        let board2 = Arc::clone(&board);
+        let h = std::thread::spawn(move || board2.next(0));
+        std::thread::sleep(Duration::from_millis(20)); // let it park
+        let t0 = Instant::now();
+        board.push(0, 42);
+        let claim = h.join().unwrap().expect("board is open");
+        assert!(
+            t0.elapsed() < EVENT_LOOP_TICK,
+            "wake took {:?}, expected well under the {:?} fallback tick",
+            t0.elapsed(),
+            EVENT_LOOP_TICK
+        );
+        assert_eq!(claim.item, 42);
+        board.complete(claim.origin);
+        board.close();
     }
 
     #[test]

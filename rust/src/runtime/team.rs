@@ -1,0 +1,536 @@
+//! Resident worker team — the process-long execution engine behind
+//! [`super::WorkerPool`] (ARCHITECTURE.md §5.5).
+//!
+//! The paper's thesis is that SSM speedups come from keeping dataflows
+//! *resident* — configure once, stream forever — instead of paying launch
+//! overhead per call. PR 9 applies the same principle to the host engine:
+//! where `WorkerPool` used to spawn and join OS threads on every `map`,
+//! a single [`WorkerTeam`] is spawned once (width from `SSM_RDU_THREADS`)
+//! and every pooled call becomes a **submission**: the caller publishes a
+//! type-erased job to the injector deque, wakes the team through an
+//! [`EventCount`] (microsecond park/wake instead of thread spawn), and
+//! parks until the job's task counter drains.
+//!
+//! ## Ownership rules
+//!
+//! * **Jobs may borrow caller locals.** The borrow is erased to a raw
+//!   pointer when the job is published; safety is restored by the
+//!   completion barrier — [`WorkerTeam::run`] does not return until every
+//!   task has finished (`pending == 0`), and workers never invoke a job
+//!   after its claim counter passes `tasks`. The borrowed closure thus
+//!   strictly outlives every call through the raw pointer.
+//! * **External callers park; workers help.** A submitter that is not a
+//!   team worker contributes no execution — all work lands on the team
+//!   (so "work leaves the calling thread" stays a hard guarantee). A team
+//!   *worker* that submits (nested pooled calls) claims tasks of its own
+//!   job instead of parking, which makes nesting deadlock-free at any
+//!   team width: every claimed task is finishable by the thread that
+//!   claimed it.
+//! * **Per-worker epochs.** Each idle worker snapshots the injector
+//!   eventcount's epoch *before* its last empty re-check, then parks keyed
+//!   to that epoch ([`EventCount::wait`]) — a publish between the check
+//!   and the park bumps the epoch and the sleep is elided, so no wakeup
+//!   is ever missed and no polling tick is needed.
+//! * **Sticky state.** Workers are process-long, so everything
+//!   thread-local becomes resident for free: the per-thread FFT plan
+//!   cache (`crate::fft::plan::with_conv_plan`) stays warm across
+//!   batches, [`with_scratch_f64`] reuses a per-worker arena (first touch
+//!   on the owning worker — NUMA-local where that matters), and
+//!   `crate::session::driver::simulate_pooled` keeps one executor per
+//!   worker alive across iteration batches (`team.sticky_hit` counts the
+//!   reuses).
+//!
+//! ## Why a panic doesn't kill the team
+//!
+//! Tasks run under `catch_unwind`; the first payload is stashed on the
+//! job and re-raised **in the submitting thread** via `resume_unwind`, so
+//! the caller observes the original panic message (not a generic join
+//! error) and the workers keep running — the team is reusable after a
+//! panicking job, which `tests` assert.
+
+use super::eventcount::EventCount;
+use super::pool::chunk_ranges;
+use std::any::Any;
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+/// Fallback park bound for idle workers — correctness never depends on it
+/// (see [`EventCount`]); it only bounds the damage of a hypothetical lost
+/// wake. Matches the steal-board fallback, wired to the coordinator tick.
+const PARK_FALLBACK: Duration = super::steal::EVENT_LOOP_TICK;
+
+/// A type-erased task body: call with a task index. Lifetime is erased on
+/// submission (see the module-level ownership rules).
+type RawTask = *const (dyn Fn(usize) + Sync);
+
+/// One submitted fan-out: `tasks` indices claimed off an atomic counter.
+struct Job {
+    run: RawTask,
+    tasks: usize,
+    /// Next unclaimed task index (may overshoot `tasks` by one per
+    /// claimant; claims at or past `tasks` are no-ops).
+    next: AtomicUsize,
+    /// Tasks not yet finished; the submitter parks until this hits zero.
+    pending: AtomicUsize,
+    /// First panic payload raised by a task, re-raised in the submitter.
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+    /// Wakes the parked submitter when `pending` drains.
+    done: EventCount,
+}
+
+// SAFETY: `run` is only dereferenced while the submitting `run()` frame is
+// alive (completion barrier, see module docs); everything else is atomics
+// and mutexes. The closure behind `run` is `Sync`, so concurrent calls
+// from several workers are permitted by its own bound.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+struct TeamShared {
+    /// FIFO of live jobs; workers serve the front, exhausted jobs are
+    /// retired on the next grab. One short lock — never held across task
+    /// execution.
+    injector: Mutex<VecDeque<Arc<Job>>>,
+    /// Park/wake protocol for idle workers.
+    ec: EventCount,
+    shutdown: AtomicBool,
+}
+
+impl TeamShared {
+    /// First job with unclaimed tasks, retiring fully-claimed ones.
+    fn grab_job(&self) -> Option<Arc<Job>> {
+        let mut inj = self.injector.lock().expect("team injector poisoned");
+        while let Some(front) = inj.front() {
+            if front.next.load(Ordering::Relaxed) >= front.tasks {
+                inj.pop_front();
+            } else {
+                return Some(Arc::clone(front));
+            }
+        }
+        None
+    }
+}
+
+/// Claim and execute tasks of `job` until its counter is exhausted.
+fn execute_claims(job: &Job) {
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.tasks {
+            return;
+        }
+        // SAFETY: i < tasks and the submitter has not returned (pending
+        // has not drained), so the erased closure is alive.
+        let body = unsafe { &*job.run };
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| body(i))) {
+            let mut slot = job.panic.lock().expect("team panic slot poisoned");
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+        if job.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            job.done.notify_all();
+        }
+    }
+}
+
+thread_local! {
+    /// Set once in each team worker; `None` on every other thread.
+    static WORKER_INDEX: Cell<Option<usize>> = const { Cell::new(None) };
+    /// Per-worker reusable f64 arena (see [`with_scratch_f64`]).
+    static SCRATCH_F64: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// The index of the current thread within its [`WorkerTeam`], or `None`
+/// when called from a non-team thread (the main thread, coordinator
+/// workers, tests).
+pub fn worker_index() -> Option<usize> {
+    WORKER_INDEX.with(|c| c.get())
+}
+
+/// Run `f` over a zeroed thread-local scratch slice of `len` f64s,
+/// reusing the calling thread's arena when its capacity already suffices
+/// (counted as `team.sticky_hit`: on a resident worker the first call
+/// faults the pages in — first-touch on the worker's own NUMA node — and
+/// every later batch reuses them warm).
+pub fn with_scratch_f64<R>(len: usize, f: impl FnOnce(&mut [f64]) -> R) -> R {
+    SCRATCH_F64.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        if buf.capacity() >= len {
+            sticky_hit_counter().fetch_add(1, Ordering::Relaxed);
+        }
+        buf.clear();
+        buf.resize(len, 0.0);
+        f(&mut buf)
+    })
+}
+
+/// A process-long team of worker threads; see the module docs. The
+/// process-wide instance behind the [`super::WorkerPool`] facades is
+/// [`WorkerTeam::global`]; tests build private teams to pin widths.
+pub struct WorkerTeam {
+    shared: Arc<TeamShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    width: usize,
+}
+
+impl WorkerTeam {
+    /// Spawn a team of `width` resident workers (clamped to ≥ 1).
+    pub fn new(width: usize) -> Self {
+        let width = width.max(1);
+        let shared = Arc::new(TeamShared {
+            injector: Mutex::new(VecDeque::new()),
+            ec: EventCount::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..width)
+            .map(|wid| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("ssm-team-{wid}"))
+                    .spawn(move || worker_main(shared, wid))
+                    .expect("WorkerTeam: failed to spawn worker")
+            })
+            .collect();
+        Self { shared, handles, width }
+    }
+
+    /// The process-wide resident team. Spawned on first use, `SSM_RDU_THREADS`
+    /// wide (0/unset → available parallelism; the width is read **once** —
+    /// a resident team cannot resize to a changed env var, which is why
+    /// width-sensitive benches pin widths via [`WorkerTeam::new`] or
+    /// `WorkerPool` facades instead of the env).
+    pub fn global() -> &'static WorkerTeam {
+        static TEAM: OnceLock<WorkerTeam> = OnceLock::new();
+        TEAM.get_or_init(|| WorkerTeam::new(super::pool::env_threads()))
+    }
+
+    /// Number of resident workers.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Submit `tasks` task indices and block until all have executed.
+    /// The core primitive every facade builds on; panics in tasks re-raise
+    /// here with their original payload (team stays alive and reusable).
+    pub fn run<F>(&self, tasks: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if tasks == 0 {
+            return;
+        }
+        let _t = crate::telemetry::span("team", "team.run").arg("tasks", tasks as f64);
+        let body: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: lifetime erasure per the module-level ownership rules;
+        // this frame outlives every dereference (completion barrier below).
+        let raw: RawTask = unsafe { std::mem::transmute(body) };
+        let job = Arc::new(Job {
+            run: raw,
+            tasks,
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(tasks),
+            panic: Mutex::new(None),
+            done: EventCount::new(),
+        });
+        self.shared
+            .injector
+            .lock()
+            .expect("team injector poisoned")
+            .push_back(Arc::clone(&job));
+        self.shared.ec.notify_all();
+        if worker_index().is_some() {
+            // Nested submission from a team worker: help instead of
+            // parking, so a width-1 team cannot deadlock on itself.
+            execute_claims(&job);
+        }
+        while job.pending.load(Ordering::Acquire) != 0 {
+            let key = job.done.epoch();
+            if job.pending.load(Ordering::Acquire) == 0 {
+                break;
+            }
+            job.done.wait(key, PARK_FALLBACK);
+        }
+        // Retire our injector entry if no worker already did.
+        self.shared
+            .injector
+            .lock()
+            .expect("team injector poisoned")
+            .retain(|j| !Arc::ptr_eq(j, &job));
+        let payload = job.panic.lock().expect("team panic slot poisoned").take();
+        if let Some(p) = payload {
+            resume_unwind(p);
+        }
+    }
+
+    /// `WorkerPool::map` semantics on the team: jobs `0..jobs` split into
+    /// at most `chunks` contiguous balanced ranges (the *pool's* width,
+    /// independent of team width), outputs reassembled in index order —
+    /// bit-identical to the serial loop.
+    pub fn map_chunked<T, F>(&self, jobs: usize, chunks: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let ranges = chunk_ranges(jobs, chunks);
+        let slots: Vec<Mutex<Option<Vec<T>>>> =
+            (0..ranges.len()).map(|_| Mutex::new(None)).collect();
+        self.run(ranges.len(), |c| {
+            let _c = crate::telemetry::span("pool", "pool.chunk")
+                .arg("len", ranges[c].len() as f64);
+            let vals: Vec<T> = ranges[c].clone().map(&f).collect();
+            *slots[c].lock().expect("team chunk slot poisoned") = Some(vals);
+        });
+        slots
+            .into_iter()
+            .flat_map(|s| {
+                s.into_inner()
+                    .expect("team chunk slot poisoned")
+                    .expect("chunk completed (run() barriers on completion)")
+            })
+            .collect()
+    }
+
+    /// `WorkerPool::map_stealing` semantics on the team: one task per job
+    /// index, claimed self-scheduled off the job's atomic counter. Each
+    /// value lands in its own slot, so claim order cannot affect results.
+    pub fn map_indexed<T, F>(&self, jobs: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let slots: Vec<Mutex<Option<T>>> = (0..jobs).map(|_| Mutex::new(None)).collect();
+        self.run(jobs, |i| {
+            *slots[i].lock().expect("team job slot poisoned") = Some(f(i));
+        });
+        slots
+            .into_iter()
+            .map(|s| {
+                s.into_inner()
+                    .expect("team job slot poisoned")
+                    .expect("job completed (run() barriers on completion)")
+            })
+            .collect()
+    }
+
+    /// `WorkerPool::for_each_mut` semantics on the team: disjoint
+    /// contiguous chunks of `items` mutated in place, `f(index, item)`.
+    pub fn for_each_mut_chunked<T, F>(&self, items: &mut [T], chunks: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        let ranges = chunk_ranges(items.len(), chunks);
+        let base = SendPtr(items.as_mut_ptr());
+        self.run(ranges.len(), |c| {
+            let _c = crate::telemetry::span("pool", "pool.chunk")
+                .arg("len", ranges[c].len() as f64);
+            for j in ranges[c].clone() {
+                // SAFETY: ranges are disjoint, so each item is aliased by
+                // exactly one task; `items` outlives run()'s barrier.
+                let item = unsafe { &mut *base.0.add(j) };
+                f(j, item);
+            }
+        });
+    }
+}
+
+impl Drop for WorkerTeam {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.ec.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Raw-pointer wrapper so disjoint-chunk tasks can share a slice base.
+struct SendPtr<T>(*mut T);
+// SAFETY: dereferences are confined to disjoint index ranges per task.
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+fn worker_main(shared: Arc<TeamShared>, wid: usize) {
+    WORKER_INDEX.with(|c| c.set(Some(wid)));
+    loop {
+        // Epoch before the empty re-check: a publish in between bumps it
+        // and the park below is elided (no missed wake, no polling tick).
+        let key = shared.ec.epoch();
+        if let Some(job) = shared.grab_job() {
+            execute_claims(&job);
+            continue;
+        }
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        park_counter().fetch_add(1, Ordering::Relaxed);
+        let parked = shared.ec.wait(key, PARK_FALLBACK);
+        wake_counter().fetch_add(1, Ordering::Relaxed);
+        crate::telemetry::instant_arg("team", "team.wake", "park_us", parked.as_micros() as f64);
+    }
+}
+
+/// `team.park`: times a worker committed to parking (found no work).
+fn park_counter() -> &'static AtomicU64 {
+    static CELL: OnceLock<&'static AtomicU64> = OnceLock::new();
+    CELL.get_or_init(|| crate::telemetry::counter("team.park"))
+}
+
+/// `team.wake`: times a parked worker resumed (notify or fallback).
+fn wake_counter() -> &'static AtomicU64 {
+    static CELL: OnceLock<&'static AtomicU64> = OnceLock::new();
+    CELL.get_or_init(|| crate::telemetry::counter("team.wake"))
+}
+
+/// `team.sticky_hit`: reuses of per-worker resident state (scratch arenas,
+/// sticky executors) that a spawn-per-call pool would have rebuilt.
+pub(crate) fn sticky_hit_counter() -> &'static AtomicU64 {
+    static CELL: OnceLock<&'static AtomicU64> = OnceLock::new();
+    CELL.get_or_init(|| crate::telemetry::counter("team.sticky_hit"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::time::Instant;
+
+    #[test]
+    fn run_executes_every_task_exactly_once() {
+        let team = WorkerTeam::new(3);
+        let calls = AtomicUsize::new(0);
+        let hits: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+        team.run(100, |i| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 100);
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn external_submitter_does_not_execute() {
+        let team = WorkerTeam::new(2);
+        let main_id = std::thread::current().id();
+        let ids = team.map_indexed(16, |_| std::thread::current().id());
+        assert!(ids.iter().all(|&id| id != main_id), "work must leave the submitter");
+    }
+
+    #[test]
+    fn multiple_workers_participate() {
+        // Deterministic multi-worker check: the first claimant spins until
+        // a second worker starts a task, so ≥2 distinct workers must run
+        // (the submitter never helps; notify_all wakes the whole team).
+        let team = WorkerTeam::new(4);
+        let started = Arc::new(AtomicUsize::new(0));
+        let ids = team.map_indexed(4, |_| {
+            started.fetch_add(1, Ordering::SeqCst);
+            let t0 = Instant::now();
+            while started.load(Ordering::SeqCst) < 2 {
+                assert!(t0.elapsed() < Duration::from_secs(10), "second worker never arrived");
+                std::thread::yield_now();
+            }
+            std::thread::current().id()
+        });
+        let distinct: std::collections::HashSet<_> = ids.iter().collect();
+        assert!(distinct.len() >= 2, "expected at least two workers, got {distinct:?}");
+    }
+
+    #[test]
+    fn map_chunked_is_bit_identical_to_serial() {
+        let team = WorkerTeam::new(4);
+        for chunks in [1usize, 2, 3, 8, 33] {
+            let got = team.map_chunked(101, chunks, |i| (i * 31) as f64 / 7.0);
+            let want: Vec<f64> = (0..101).map(|i| (i * 31) as f64 / 7.0).collect();
+            assert_eq!(got, want, "chunks={chunks}");
+        }
+    }
+
+    #[test]
+    fn map_indexed_matches_map_chunked() {
+        let team = WorkerTeam::new(3);
+        let want = team.map_chunked(97, 3, |i| i * i);
+        let got = team.map_indexed(97, |i| i * i);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn for_each_mut_touches_every_item_once() {
+        let team = WorkerTeam::new(3);
+        let mut xs = vec![0usize; 97];
+        team.for_each_mut_chunked(&mut xs, 5, |i, x| *x = i + 1);
+        assert!(xs.iter().enumerate().all(|(i, &x)| x == i + 1));
+    }
+
+    #[test]
+    fn nested_submission_from_a_worker_completes() {
+        // A task that itself fans out exercises the help-don't-park rule;
+        // run it on a width-1 team, where parking instead would deadlock.
+        let team = Arc::new(WorkerTeam::new(1));
+        let t2 = Arc::clone(&team);
+        let sums = team.map_indexed(3, move |i| {
+            let inner = t2.map_chunked(4, 4, |j| i * 10 + j);
+            inner.iter().sum::<usize>()
+        });
+        assert_eq!(sums, vec![6, 46, 86]);
+    }
+
+    #[test]
+    fn panic_propagates_original_message_and_team_survives() {
+        let team = WorkerTeam::new(2);
+        let err = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            team.run(8, |i| {
+                if i == 5 {
+                    panic!("boom in task {i}");
+                }
+            });
+        }))
+        .expect_err("panicking task must panic the submitter");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("boom in task 5"), "original payload expected, got {msg:?}");
+        // The team is reusable: the next submission completes normally.
+        let got = team.map_indexed(10, |i| i + 1);
+        assert_eq!(got, (1..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scratch_arena_reuses_capacity() {
+        let before = sticky_hit_counter().load(Ordering::Relaxed);
+        let a = with_scratch_f64(64, |buf| {
+            buf[0] = 1.0;
+            buf.len()
+        });
+        let b = with_scratch_f64(32, |buf| {
+            assert_eq!(buf[0], 0.0, "arena re-zeroes");
+            buf.len()
+        });
+        assert_eq!((a, b), (64, 32));
+        assert!(
+            sticky_hit_counter().load(Ordering::Relaxed) > before,
+            "second call fits the warm arena"
+        );
+    }
+
+    #[test]
+    fn worker_index_is_set_on_workers_only() {
+        assert_eq!(worker_index(), None, "submitter is not a team worker");
+        let team = WorkerTeam::new(2);
+        let idxs = team.map_indexed(8, |_| worker_index());
+        assert!(idxs.iter().all(|w| w.is_some()));
+        assert!(idxs.iter().all(|w| w.unwrap() < 2));
+    }
+
+    #[test]
+    fn global_team_is_resident_across_calls() {
+        let t1 = WorkerTeam::global() as *const WorkerTeam;
+        let t2 = WorkerTeam::global() as *const WorkerTeam;
+        assert_eq!(t1, t2);
+        assert!(WorkerTeam::global().width() >= 1);
+    }
+}

@@ -1,0 +1,204 @@
+//! Host topology probe and home-worker placement (ARCHITECTURE.md §5.5).
+//!
+//! The steal scheduler gives every worker a **home chip** whose deque (and
+//! `StateCache`) it serves first. Placement decides which chip that is.
+//! Two policies:
+//!
+//! * **Block homing** (default): workers serving the same chip are
+//!   *contiguous* (`worker_homes` via [`block_homes`]). On multi-socket
+//!   hosts adjacent threads overwhelmingly land on the same NUMA node, so
+//!   a chip's deque, its cached state, and the scratch arenas its workers
+//!   first-touched all stay node-local. [`Topology::probe`] reads
+//!   `/sys/devices/system/node/node*/cpulist` to report how many nodes
+//!   the host actually has (no `/sys` → one node, a clean no-op).
+//! * **Round-robin** (`SSM_RDU_PIN_HOMES=0`): the pre-PR-9 `wid % chips`
+//!   interleave, kept as the opt-out and for A/B runs.
+//!
+//! Both policies serve every chip that can be served (`min(workers,
+//! chips)` distinct homes) — only the *grouping* differs, so scheduling
+//! results stay bit-identical either way (homing is a locality hint, not
+//! a correctness input). The `/sys` parsing is split into pure helpers
+//! ([`parse_cpulist`]) so the probe is testable without real sysfs.
+
+use super::pool::chunk_ranges;
+use std::path::Path;
+
+/// NUMA layout of the host: the CPU ids of each node.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    nodes: Vec<Vec<usize>>,
+}
+
+impl Topology {
+    /// Probe `/sys/devices/system/node`. Hosts without the tree (non-Linux,
+    /// containers with masked sysfs) get a single node holding the
+    /// machine's available parallelism — every policy then degrades to the
+    /// single-node behaviour, by construction a no-op.
+    pub fn probe() -> Self {
+        Self::from_sysfs(Path::new("/sys/devices/system/node"))
+    }
+
+    /// Probe an arbitrary sysfs-shaped directory (tests point this at a
+    /// fixture tree).
+    pub fn from_sysfs(root: &Path) -> Self {
+        let mut nodes: Vec<(usize, Vec<usize>)> = Vec::new();
+        if let Ok(entries) = std::fs::read_dir(root) {
+            for entry in entries.flatten() {
+                let name = entry.file_name();
+                let name = name.to_string_lossy();
+                let Some(idx) = name.strip_prefix("node").and_then(|s| s.parse::<usize>().ok())
+                else {
+                    continue;
+                };
+                let Ok(list) = std::fs::read_to_string(entry.path().join("cpulist")) else {
+                    continue;
+                };
+                let cpus = parse_cpulist(&list);
+                if !cpus.is_empty() {
+                    nodes.push((idx, cpus));
+                }
+            }
+        }
+        nodes.sort_by_key(|(idx, _)| *idx);
+        let nodes: Vec<Vec<usize>> = nodes.into_iter().map(|(_, cpus)| cpus).collect();
+        if nodes.is_empty() {
+            let width = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            return Self { nodes: vec![(0..width).collect()] };
+        }
+        Self { nodes }
+    }
+
+    /// Number of NUMA nodes (≥ 1).
+    pub fn nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// CPU ids belonging to `node`.
+    pub fn cpus(&self, node: usize) -> &[usize] {
+        &self.nodes[node]
+    }
+}
+
+/// Parse a sysfs `cpulist` string (`"0-3,8,10-11"`) into CPU ids.
+/// Malformed fragments are skipped rather than failing the probe — a
+/// placement hint must never take the server down.
+pub fn parse_cpulist(s: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    for part in s.trim().split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some((lo, hi)) = part.split_once('-') {
+            if let (Ok(lo), Ok(hi)) = (lo.trim().parse::<usize>(), hi.trim().parse::<usize>()) {
+                if lo <= hi {
+                    out.extend(lo..=hi);
+                }
+            }
+        } else if let Ok(v) = part.parse::<usize>() {
+            out.push(v);
+        }
+    }
+    out
+}
+
+/// Block homing: worker `w` serves the chip whose contiguous worker block
+/// contains `w` (balanced blocks, first `workers % chips` blocks one
+/// wider — the same split as `chunk_ranges`).
+pub fn block_homes(workers: usize, chips: usize) -> Vec<usize> {
+    let mut homes = vec![0usize; workers];
+    for (c, r) in chunk_ranges(workers, chips.max(1)).iter().enumerate() {
+        for w in r.clone() {
+            homes[w] = c;
+        }
+    }
+    homes
+}
+
+/// Round-robin homing: the pre-PR-9 `wid % chips` interleave.
+pub fn round_robin_homes(workers: usize, chips: usize) -> Vec<usize> {
+    (0..workers).map(|w| w % chips.max(1)).collect()
+}
+
+/// Home-chip assignment for `workers` steal workers over `chips` chips:
+/// block homing unless `SSM_RDU_PIN_HOMES` is `0`/`off`/`false` (then the
+/// legacy round-robin interleave).
+pub fn worker_homes(workers: usize, chips: usize) -> Vec<usize> {
+    let pin = std::env::var("SSM_RDU_PIN_HOMES")
+        .map(|v| !matches!(v.trim(), "0" | "off" | "false"))
+        .unwrap_or(true);
+    if pin {
+        block_homes(workers, chips)
+    } else {
+        round_robin_homes(workers, chips)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpulist_parses_ranges_singles_and_junk() {
+        assert_eq!(parse_cpulist("0-3,8,10-11\n"), vec![0, 1, 2, 3, 8, 10, 11]);
+        assert_eq!(parse_cpulist("5"), vec![5]);
+        assert_eq!(parse_cpulist(""), Vec::<usize>::new());
+        assert_eq!(parse_cpulist("2-1"), Vec::<usize>::new(), "inverted range skipped");
+        assert_eq!(parse_cpulist("x,3,4-y,7"), vec![3, 7], "malformed fragments skipped");
+    }
+
+    #[test]
+    fn block_homes_are_contiguous_and_cover_served_chips() {
+        for &(workers, chips) in &[(8usize, 2usize), (7, 3), (4, 4), (3, 8), (1, 1), (16, 5)] {
+            let homes = block_homes(workers, chips);
+            assert_eq!(homes.len(), workers);
+            // Non-decreasing ⇒ contiguous blocks.
+            assert!(homes.windows(2).all(|w| w[0] <= w[1]), "{workers}x{chips}: {homes:?}");
+            let served: std::collections::HashSet<_> = homes.iter().collect();
+            assert_eq!(served.len(), workers.min(chips), "{workers}x{chips}: {homes:?}");
+            assert!(homes.iter().all(|&c| c < chips.max(1)));
+        }
+    }
+
+    #[test]
+    fn block_and_round_robin_serve_the_same_chip_set() {
+        for &(workers, chips) in &[(8usize, 2usize), (7, 3), (3, 8)] {
+            let a: std::collections::HashSet<_> = block_homes(workers, chips).into_iter().collect();
+            let b: std::collections::HashSet<_> =
+                round_robin_homes(workers, chips).into_iter().collect();
+            assert_eq!(a, b, "{workers}x{chips}");
+        }
+    }
+
+    #[test]
+    fn probe_without_sysfs_degrades_to_one_node() {
+        let topo = Topology::from_sysfs(Path::new("/nonexistent/sysfs"));
+        assert_eq!(topo.nodes(), 1);
+        assert!(!topo.cpus(0).is_empty());
+    }
+
+    #[test]
+    fn probe_reads_a_fixture_tree() {
+        let dir = std::env::temp_dir().join("ssm_rdu_topo_fixture");
+        let _ = std::fs::remove_dir_all(&dir);
+        for (node, list) in [("node0", "0-3\n"), ("node1", "4-7\n")] {
+            let d = dir.join(node);
+            std::fs::create_dir_all(&d).unwrap();
+            std::fs::write(d.join("cpulist"), list).unwrap();
+        }
+        // Entries that must be ignored: non-node dirs, nodes sans cpulist.
+        std::fs::create_dir_all(dir.join("possible")).unwrap();
+        std::fs::create_dir_all(dir.join("node9")).unwrap();
+        let topo = Topology::from_sysfs(&dir);
+        assert_eq!(topo.nodes(), 2);
+        assert_eq!(topo.cpus(0), &[0, 1, 2, 3]);
+        assert_eq!(topo.cpus(1), &[4, 5, 6, 7]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn real_probe_never_panics_and_has_a_node() {
+        let topo = Topology::probe();
+        assert!(topo.nodes() >= 1);
+    }
+}

@@ -21,6 +21,10 @@
 //!   adjacent channels advance per `[f64; 4]` accumulator block
 //!   (autovectorizer-friendly time-major layout), bit-identical to the
 //!   `*_scalar` oracles kept beside every chunked path.
+//! * [`simd`] — the chunked twins with **explicit** lanes: runtime-detected
+//!   AVX/NEON `core::arch` intrinsics (separate mul/add, never FMA, so the
+//!   same bit-identity contract holds), falling back to the chunked code
+//!   on other hosts. [`simd_backend`] reports which path is live.
 //!
 //! **When the mapper picks which variant.** The workload builders expose
 //! the choice as `ScanVariant` (see `crate::workloads::mamba_decoder`):
@@ -43,6 +47,7 @@ pub mod chunked;
 pub mod hillis_steele;
 pub mod recurrence;
 pub mod serial;
+pub mod simd;
 pub mod tiled;
 
 pub use blelloch::blelloch_exclusive;
@@ -50,6 +55,9 @@ pub use chunked::{
     gate_silu_chunked, gate_silu_scalar, mamba_scan_channels_chunked, mamba_scan_channels_scalar,
     scan_gate_channels_chunked, scan_gate_channels_scalar, silu_slice_chunked, silu_slice_scalar,
     LANES,
+};
+pub use simd::{
+    gate_silu_simd, mamba_scan_channels_simd, scan_gate_channels_simd, simd_backend,
 };
 pub use hillis_steele::hillis_steele_inclusive;
 pub use recurrence::{

@@ -1,0 +1,385 @@
+//! Explicit-lane SIMD twins of the chunked scan/gate kernels (PR 9).
+//!
+//! [`super::chunked`] shapes the loops so the autovectorizer *can* emit
+//! packed code; this module stops hoping and writes the lanes down:
+//! arch-gated `core::arch` intrinsics on x86_64 (AVX, 4×f64 per ymm) and
+//! aarch64 (NEON, 2×2×f64 per q-pair), runtime-detected, with the chunked
+//! code as the portable fallback. No crates — the build stays
+//! offline-vendorable.
+//!
+//! ## The bit-identity contract (the SIMD-oracle contract)
+//!
+//! Every function here must equal its `*_scalar` oracle **bit for bit**,
+//! same as the chunked twins (WORKLOADS.md §4; fuzzed in `tests/prop.rs`).
+//! Three rules keep that true:
+//!
+//! * **No FMA.** The scalar recurrence is `a·h` rounded, then `+ b`
+//!   rounded — two roundings. A fused multiply-add rounds once and changes
+//!   low bits, so the kernels use separate `mul`/`add` intrinsics
+//!   (`vmulpd`+`vaddpd`, `fmul`+`fadd`), each IEEE-754-exact per lane.
+//! * **Lanes never mix.** Each lane runs one channel's scalar op sequence
+//!   verbatim; there are no horizontal reductions in these kernels.
+//! * **Transcendentals stay scalar.** `silu` calls `exp` (libm); a vector
+//!   `exp` approximation would break identity, so gates compute `silu`
+//!   lane-by-lane in scalar and vectorize only the exact multiplies.
+//!   This is also why the gate kernels gain less than the pure scan — the
+//!   scan's inner loop is 100% exact mul/add and vectorizes whole.
+//!
+//! The active backend is reported by [`simd_backend`] (surfaced in the
+//! bench provenance so `BENCH_hotpath.json` numbers say what ran).
+
+use super::chunked::{
+    gate_silu_chunked, mamba_scan_channels_chunked, scan_gate_channels_chunked, LANES,
+};
+use super::recurrence::silu;
+
+/// Which lane implementation [`gate_silu_simd`] and friends dispatch to on
+/// this host: `"avx"`, `"neon"`, or `"portable"` (the chunked fallback).
+pub fn simd_backend() -> &'static str {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx") {
+            return "avx";
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return "neon";
+        }
+    }
+    "portable"
+}
+
+/// The Mamba z-branch gate `y = h ⊙ silu(z)` with explicit lanes.
+/// Bit-identical to `gate_silu_scalar` (silu stays scalar; the multiply
+/// is one exact packed `mul`).
+pub fn gate_silu_simd(h: &[f64], z: &[f64]) -> Vec<f64> {
+    assert_eq!(h.len(), z.len(), "gate_silu: h/z length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx") {
+            let mut out = vec![0.0; h.len()];
+            // SAFETY: AVX presence checked above.
+            unsafe { gate_silu_avx(h, z, &mut out) };
+            return out;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            let mut out = vec![0.0; h.len()];
+            // SAFETY: NEON presence checked above.
+            unsafe { gate_silu_neon(h, z, &mut out) };
+            return out;
+        }
+    }
+    gate_silu_chunked(h, z)
+}
+
+/// Multi-channel Mamba scan (`h = a·h + b` down time, four channels per
+/// accumulator) with explicit lanes. Bit-identical to
+/// `mamba_scan_channels_scalar`; layout contract as in
+/// [`mamba_scan_channels_chunked`].
+pub fn mamba_scan_channels_simd(a: &[f64], b: &[f64], channels: usize) -> Vec<f64> {
+    assert_eq!(a.len(), b.len(), "mamba_scan_channels: a/b length mismatch");
+    assert!(channels > 0, "mamba_scan_channels: need at least one channel");
+    assert_eq!(a.len() % channels, 0, "mamba_scan_channels: len must divide by channels");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx") {
+            let mut out = vec![0.0; a.len()];
+            // SAFETY: AVX presence checked above.
+            unsafe { mamba_scan_channels_avx(a, b, channels, &mut out) };
+            return out;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            let mut out = vec![0.0; a.len()];
+            // SAFETY: NEON presence checked above.
+            unsafe { mamba_scan_channels_neon(a, b, channels, &mut out) };
+            return out;
+        }
+    }
+    mamba_scan_channels_chunked(a, b, channels)
+}
+
+/// Fused multi-channel scan→gate with explicit lanes. Bit-identical to
+/// `scan_gate_channels_scalar`.
+pub fn scan_gate_channels_simd(a: &[f64], b: &[f64], z: &[f64], channels: usize) -> Vec<f64> {
+    assert_eq!(a.len(), z.len(), "scan_gate_channels: z length mismatch");
+    assert_eq!(a.len(), b.len(), "scan_gate_channels: a/b length mismatch");
+    assert!(channels > 0, "scan_gate_channels: need at least one channel");
+    assert_eq!(a.len() % channels, 0, "scan_gate_channels: len must divide by channels");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx") {
+            let mut out = vec![0.0; a.len()];
+            // SAFETY: AVX presence checked above.
+            unsafe { scan_gate_channels_avx(a, b, z, channels, &mut out) };
+            return out;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            let mut out = vec![0.0; a.len()];
+            // SAFETY: NEON presence checked above.
+            unsafe { scan_gate_channels_neon(a, b, z, channels, &mut out) };
+            return out;
+        }
+    }
+    scan_gate_channels_chunked(a, b, z, channels)
+}
+
+/// Scalar tail shared by every backend: channels past the last full
+/// [`LANES`] block, one at a time (identical to the chunked tail).
+fn scan_tail(a: &[f64], b: &[f64], channels: usize, from: usize, out: &mut [f64]) {
+    let steps = a.len() / channels;
+    for c in from..channels {
+        let mut h = 0.0;
+        for t in 0..steps {
+            let i = t * channels + c;
+            h = a[i] * h + b[i];
+            out[i] = h;
+        }
+    }
+}
+
+fn scan_gate_tail(a: &[f64], b: &[f64], z: &[f64], channels: usize, from: usize, out: &mut [f64]) {
+    let steps = a.len() / channels;
+    for c in from..channels {
+        let mut h = 0.0;
+        for t in 0..steps {
+            let i = t * channels + c;
+            h = a[i] * h + b[i];
+            out[i] = h * silu(z[i]);
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn gate_silu_avx(h: &[f64], z: &[f64], out: &mut [f64]) {
+    use core::arch::x86_64::*;
+    let n = h.len();
+    let split = n - n % LANES;
+    for i in (0..split).step_by(LANES) {
+        // silu (exp) stays scalar for bit-identity; only the h·s multiply
+        // is packed (one exact vmulpd).
+        let s = [silu(z[i]), silu(z[i + 1]), silu(z[i + 2]), silu(z[i + 3])];
+        let hv = _mm256_loadu_pd(h.as_ptr().add(i));
+        let sv = _mm256_loadu_pd(s.as_ptr());
+        _mm256_storeu_pd(out.as_mut_ptr().add(i), _mm256_mul_pd(hv, sv));
+    }
+    for i in split..n {
+        out[i] = h[i] * silu(z[i]);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn mamba_scan_channels_avx(a: &[f64], b: &[f64], channels: usize, out: &mut [f64]) {
+    use core::arch::x86_64::*;
+    let steps = a.len() / channels;
+    let blocks = channels / LANES;
+    for blk in 0..blocks {
+        let c0 = blk * LANES;
+        let mut h = _mm256_setzero_pd();
+        for t in 0..steps {
+            let i = t * channels + c0;
+            let av = _mm256_loadu_pd(a.as_ptr().add(i));
+            let bv = _mm256_loadu_pd(b.as_ptr().add(i));
+            // mul then add, NOT vfmadd: the scalar oracle rounds twice.
+            h = _mm256_add_pd(_mm256_mul_pd(av, h), bv);
+            _mm256_storeu_pd(out.as_mut_ptr().add(i), h);
+        }
+    }
+    scan_tail(a, b, channels, blocks * LANES, out);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn scan_gate_channels_avx(
+    a: &[f64],
+    b: &[f64],
+    z: &[f64],
+    channels: usize,
+    out: &mut [f64],
+) {
+    use core::arch::x86_64::*;
+    let steps = a.len() / channels;
+    let blocks = channels / LANES;
+    for blk in 0..blocks {
+        let c0 = blk * LANES;
+        let mut h = _mm256_setzero_pd();
+        for t in 0..steps {
+            let i = t * channels + c0;
+            let av = _mm256_loadu_pd(a.as_ptr().add(i));
+            let bv = _mm256_loadu_pd(b.as_ptr().add(i));
+            h = _mm256_add_pd(_mm256_mul_pd(av, h), bv);
+            let s = [silu(z[i]), silu(z[i + 1]), silu(z[i + 2]), silu(z[i + 3])];
+            let sv = _mm256_loadu_pd(s.as_ptr());
+            _mm256_storeu_pd(out.as_mut_ptr().add(i), _mm256_mul_pd(h, sv));
+        }
+    }
+    scan_gate_tail(a, b, z, channels, blocks * LANES, out);
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn gate_silu_neon(h: &[f64], z: &[f64], out: &mut [f64]) {
+    use core::arch::aarch64::*;
+    let n = h.len();
+    let split = n - n % LANES;
+    for i in (0..split).step_by(LANES) {
+        let s = [silu(z[i]), silu(z[i + 1]), silu(z[i + 2]), silu(z[i + 3])];
+        let h0 = vld1q_f64(h.as_ptr().add(i));
+        let h1 = vld1q_f64(h.as_ptr().add(i + 2));
+        let s0 = vld1q_f64(s.as_ptr());
+        let s1 = vld1q_f64(s.as_ptr().add(2));
+        vst1q_f64(out.as_mut_ptr().add(i), vmulq_f64(h0, s0));
+        vst1q_f64(out.as_mut_ptr().add(i + 2), vmulq_f64(h1, s1));
+    }
+    for i in split..n {
+        out[i] = h[i] * silu(z[i]);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn mamba_scan_channels_neon(a: &[f64], b: &[f64], channels: usize, out: &mut [f64]) {
+    use core::arch::aarch64::*;
+    let steps = a.len() / channels;
+    let blocks = channels / LANES;
+    for blk in 0..blocks {
+        let c0 = blk * LANES;
+        let mut h0 = vdupq_n_f64(0.0);
+        let mut h1 = vdupq_n_f64(0.0);
+        for t in 0..steps {
+            let i = t * channels + c0;
+            let a0 = vld1q_f64(a.as_ptr().add(i));
+            let a1 = vld1q_f64(a.as_ptr().add(i + 2));
+            let b0 = vld1q_f64(b.as_ptr().add(i));
+            let b1 = vld1q_f64(b.as_ptr().add(i + 2));
+            // fmul then fadd, NOT fmla: the scalar oracle rounds twice.
+            h0 = vaddq_f64(vmulq_f64(a0, h0), b0);
+            h1 = vaddq_f64(vmulq_f64(a1, h1), b1);
+            vst1q_f64(out.as_mut_ptr().add(i), h0);
+            vst1q_f64(out.as_mut_ptr().add(i + 2), h1);
+        }
+    }
+    scan_tail(a, b, channels, blocks * LANES, out);
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn scan_gate_channels_neon(
+    a: &[f64],
+    b: &[f64],
+    z: &[f64],
+    channels: usize,
+    out: &mut [f64],
+) {
+    use core::arch::aarch64::*;
+    let steps = a.len() / channels;
+    let blocks = channels / LANES;
+    for blk in 0..blocks {
+        let c0 = blk * LANES;
+        let mut h0 = vdupq_n_f64(0.0);
+        let mut h1 = vdupq_n_f64(0.0);
+        for t in 0..steps {
+            let i = t * channels + c0;
+            let a0 = vld1q_f64(a.as_ptr().add(i));
+            let a1 = vld1q_f64(a.as_ptr().add(i + 2));
+            let b0 = vld1q_f64(b.as_ptr().add(i));
+            let b1 = vld1q_f64(b.as_ptr().add(i + 2));
+            h0 = vaddq_f64(vmulq_f64(a0, h0), b0);
+            h1 = vaddq_f64(vmulq_f64(a1, h1), b1);
+            let s = [silu(z[i]), silu(z[i + 1]), silu(z[i + 2]), silu(z[i + 3])];
+            let s0 = vld1q_f64(s.as_ptr());
+            let s1 = vld1q_f64(s.as_ptr().add(2));
+            vst1q_f64(out.as_mut_ptr().add(i), vmulq_f64(h0, s0));
+            vst1q_f64(out.as_mut_ptr().add(i + 2), vmulq_f64(h1, s1));
+        }
+    }
+    scan_gate_tail(a, b, z, channels, blocks * LANES, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::chunked::{
+        gate_silu_scalar, mamba_scan_channels_scalar, scan_gate_channels_scalar,
+    };
+    use crate::util::XorShift;
+
+    #[test]
+    fn backend_is_one_of_the_known_three() {
+        assert!(matches!(simd_backend(), "avx" | "neon" | "portable"));
+    }
+
+    #[test]
+    fn gate_simd_bit_identical_to_scalar() {
+        let mut rng = XorShift::new(501);
+        for n in [0usize, 1, 3, 4, 5, 7, 129, 1024, 1025] {
+            let h = rng.vec(n, -2.0, 2.0);
+            let z = rng.vec(n, -4.0, 4.0);
+            assert_eq!(gate_silu_simd(&h, &z), gate_silu_scalar(&h, &z), "n={n}");
+        }
+    }
+
+    #[test]
+    fn scan_simd_bit_identical_to_scalar() {
+        let mut rng = XorShift::new(502);
+        for channels in [1usize, 2, 3, 4, 5, 7, 8, 9, 16, 33] {
+            for steps in [1usize, 2, 17, 100] {
+                let a = rng.vec(steps * channels, -1.0, 1.0);
+                let b = rng.vec(steps * channels, -1.0, 1.0);
+                assert_eq!(
+                    mamba_scan_channels_simd(&a, &b, channels),
+                    mamba_scan_channels_scalar(&a, &b, channels),
+                    "channels={channels} steps={steps}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_simd_bit_identical_to_scalar() {
+        let mut rng = XorShift::new(503);
+        for channels in [1usize, 4, 5, 12] {
+            for steps in [1usize, 33, 128] {
+                let a = rng.vec(steps * channels, -1.0, 1.0);
+                let b = rng.vec(steps * channels, -1.0, 1.0);
+                let z = rng.vec(steps * channels, -4.0, 4.0);
+                assert_eq!(
+                    scan_gate_channels_simd(&a, &b, &z, channels),
+                    scan_gate_channels_scalar(&a, &b, &z, channels),
+                    "channels={channels} steps={steps}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simd_equals_chunked_exactly() {
+        // Both twins sit on the same contract, so they must agree with
+        // each other too — catches a backend drifting from the fallback.
+        let mut rng = XorShift::new(504);
+        let (steps, channels) = (64usize, 12usize);
+        let a = rng.vec(steps * channels, -1.0, 1.0);
+        let b = rng.vec(steps * channels, -1.0, 1.0);
+        let z = rng.vec(steps * channels, -4.0, 4.0);
+        assert_eq!(
+            mamba_scan_channels_simd(&a, &b, channels),
+            mamba_scan_channels_chunked(&a, &b, channels)
+        );
+        assert_eq!(
+            scan_gate_channels_simd(&a, &b, &z, channels),
+            scan_gate_channels_chunked(&a, &b, &z, channels)
+        );
+    }
+}

@@ -5,13 +5,16 @@
 //!
 //! Two drivers share the scheduling/caching/timing logic: the
 //! single-threaded [`simulate`], and [`simulate_pooled`], which fans each
-//! iteration batch's *independent session steps* across a team of scoped
-//! worker threads. Executors are thread-affine (deliberately not `Send` —
-//! see [`crate::coordinator::Executor`]), so each worker constructs its own
-//! executor from the [`ExecutorFactory`] once and keeps it for the whole
-//! simulation; states and tokens travel to the workers instead. Tokens are
-//! bit-identical between the two drivers because each step depends only on
-//! its session's own state.
+//! iteration batch's *independent session steps* across the resident
+//! [`crate::runtime::team::WorkerTeam`]. Executors are thread-affine
+//! (deliberately not `Send` — see [`crate::coordinator::Executor`]), so
+//! each resident worker builds its own executor from the
+//! [`ExecutorFactory`] the first time a simulation's work reaches it and
+//! keeps it *sticky* in thread-local storage for every later batch of the
+//! same simulation (keyed by a per-simulation instance id; reuse counts
+//! `team.sticky_hit`); states and tokens travel to the workers instead.
+//! Tokens are bit-identical between the two drivers because each step
+//! depends only on its session's own state.
 //!
 //! Used by `benches/serve_sessions.rs` and `examples/chat_sessions.rs`;
 //! the threaded production path lives in [`crate::coordinator`].
@@ -26,13 +29,15 @@ use crate::arch::RduConfig;
 use crate::coordinator::{Executor, ExecutorFactory};
 use crate::dfmodel::decode::decode_step_workload;
 use crate::runtime::pool::chunk_ranges;
-use crate::runtime::ModelKind;
+use crate::runtime::{ModelKind, WorkerTeam};
 use crate::session::budget::MemoryBudget;
 use crate::util::XorShift;
 use crate::Result;
 use anyhow::anyhow;
+use std::cell::RefCell;
 use std::collections::BTreeMap;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// One simulated serving scenario.
@@ -283,45 +288,71 @@ struct StepDone {
     result: Result<Vec<f32>>,
 }
 
-/// Worker body: build one executor from the factory, then serve step
-/// chunks until the job channel closes. A factory failure is reported
-/// through each job's result rather than by panicking, so the main loop
-/// surfaces it as a clean `Err`.
-fn pooled_worker(factory: &ExecutorFactory, rx: Receiver<Vec<StepJob>>, tx: Sender<StepDone>) {
-    let mut exec: Result<Box<dyn Executor>> = factory();
-    while let Ok(jobs) = rx.recv() {
-        for mut job in jobs {
-            let done = match &mut exec {
-                Err(e) => StepDone {
-                    idx: job.idx,
-                    state: job.state.take(),
-                    result: Err(anyhow!("pooled worker failed to build its executor: {e:#}")),
-                },
-                Ok(exec) => match job.phase {
-                    Phase::Prefill => match exec.begin_session(job.model, &job.input, &job.shape) {
-                        Ok((state, first)) => {
-                            StepDone { idx: job.idx, state: Some(state), result: Ok(first) }
-                        }
-                        Err(e) => StepDone { idx: job.idx, state: None, result: Err(e) },
-                    },
-                    Phase::Decode => {
-                        let mut st = job.state.take().expect("decode job carries its state");
-                        let r = exec.step_decode(job.model, &mut st, &job.input);
-                        StepDone { idx: job.idx, state: Some(st), result: r }
-                    }
-                },
-            };
-            if tx.send(done).is_err() {
-                return; // main loop gone (error path); nothing to report to
+/// Monotonic id distinguishing [`simulate_pooled`] invocations, so a
+/// resident worker's sticky executor from one simulation is never reused
+/// by the next (a fresh factory means fresh executors).
+static NEXT_SIM_ID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// A resident worker's sticky executor: `(owning sim id, executor)`.
+    /// Built from the factory the first time a simulation's work reaches
+    /// this worker and reused for every later batch of the same simulation,
+    /// so executor-internal buffers and plan caches warm up exactly once
+    /// per worker. Replaced in place when a different simulation arrives.
+    static STICKY_EXEC: RefCell<Option<(u64, Box<dyn Executor>)>> = const { RefCell::new(None) };
+}
+
+/// Run `f` against this thread's sticky executor for simulation `sim`,
+/// building it from `factory` on first touch. Reuse counts
+/// `team.sticky_hit`. A factory failure surfaces as `Err` (and is retried
+/// on the next step, matching the old per-worker-channel behaviour of one
+/// factory call per worker).
+fn with_sticky_executor<R>(
+    sim: u64,
+    factory: &ExecutorFactory,
+    f: impl FnOnce(&mut dyn Executor) -> R,
+) -> Result<R> {
+    STICKY_EXEC.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        match slot.as_ref() {
+            Some((owner, _)) if *owner == sim => {
+                crate::runtime::team::sticky_hit_counter().fetch_add(1, Ordering::Relaxed);
+            }
+            _ => {
+                let exec = factory()
+                    .map_err(|e| anyhow!("pooled worker failed to build its executor: {e:#}"))?;
+                *slot = Some((sim, exec));
             }
         }
-    }
+        let (_, exec) = slot.as_mut().expect("sticky executor installed above");
+        Ok(f(exec.as_mut()))
+    })
+}
+
+/// Execute one staged step on this thread's sticky executor.
+fn run_step_job(sim: u64, factory: &ExecutorFactory, job: &mut StepJob) -> StepDone {
+    let idx = job.idx;
+    let ran = with_sticky_executor(sim, factory, |exec| match job.phase {
+        Phase::Prefill => match exec.begin_session(job.model, &job.input, &job.shape) {
+            Ok((state, first)) => StepDone { idx, state: Some(state), result: Ok(first) },
+            Err(e) => StepDone { idx, state: None, result: Err(e) },
+        },
+        Phase::Decode => {
+            let mut st = job.state.take().expect("decode job carries its state");
+            let r = exec.step_decode(job.model, &mut st, &job.input);
+            StepDone { idx, state: Some(st), result: r }
+        }
+    });
+    // Factory failure: the step never ran, so a decode's checked-out state
+    // travels back intact for the cache.
+    ran.unwrap_or_else(|e| StepDone { idx, state: job.state.take(), result: Err(e) })
 }
 
 /// [`simulate`] with each iteration batch's session steps fanned across
-/// `threads` scoped workers — the pooled mirror of the continuous-batching
-/// executor loop. Each worker owns one executor built from `factory` (the
-/// same per-worker-executor pattern as [`crate::coordinator::Coordinator`],
+/// the resident [`WorkerTeam`] in `threads` contiguous chunks — the pooled
+/// mirror of the continuous-batching executor loop. Each resident worker
+/// keeps a sticky executor built from `factory` (the same
+/// per-worker-executor pattern as [`crate::coordinator::Coordinator`],
 /// because executors are thread-affine); the main thread keeps sole
 /// ownership of the scheduler and state cache, checking states out before
 /// dispatch and back in — in scheduler order — after the batch returns, so
@@ -339,6 +370,8 @@ pub fn simulate_pooled(
     threads: usize,
 ) -> Result<SimReport> {
     let threads = threads.max(1);
+    let sim = NEXT_SIM_ID.fetch_add(1, Ordering::Relaxed);
+    let team = WorkerTeam::global();
     let t0 = Instant::now();
     let mut cache = StateCache::new(MemoryBudget::new(cfg.budget_bytes), rdu.spec.dram);
     let mut sched = SessionScheduler::new(cfg.sched);
@@ -347,112 +380,108 @@ pub fn simulate_pooled(
     let mut prompts = admit_sessions(cfg, &mut sched, &mut rng);
     let mut last_token: BTreeMap<SessionId, Vec<f32>> = BTreeMap::new();
 
-    std::thread::scope(|scope| -> Result<SimReport> {
-        // Spawn the worker team; each builds its own executor and lives for
-        // the whole simulation so plan caches and executors warm up once.
-        let (res_tx, res_rx) = channel::<StepDone>();
-        let mut job_txs: Vec<Sender<Vec<StepJob>>> = Vec::with_capacity(threads);
-        for _ in 0..threads {
-            let (tx, rx) = channel::<Vec<StepJob>>();
-            job_txs.push(tx);
-            let res_tx = res_tx.clone();
-            scope.spawn(move || pooled_worker(factory, rx, res_tx));
+    let mut tokens = 0u64;
+    let mut sim_seconds = 0.0f64;
+    let mut batches = 0u64;
+    let mut batched_steps = 0u64;
+    while !sched.is_idle() {
+        let steps = sched.next_batch();
+        if steps.is_empty() {
+            return Err(anyhow!("scheduler stalled with {} live sessions", sched.live()));
         }
-        drop(res_tx);
+        batches += 1;
+        batched_steps += steps.len() as u64;
+        let spill0 = cache.stats.spill_seconds;
 
-        let mut tokens = 0u64;
-        let mut sim_seconds = 0.0f64;
-        let mut batches = 0u64;
-        let mut batched_steps = 0u64;
-        while !sched.is_idle() {
-            let steps = sched.next_batch();
-            if steps.is_empty() {
-                return Err(anyhow!("scheduler stalled with {} live sessions", sched.live()));
-            }
-            batches += 1;
-            batched_steps += steps.len() as u64;
-            let spill0 = cache.stats.spill_seconds;
-
-            // Stage the batch in scheduler order: prompts move out, decode
-            // states check out of the cache deterministically.
-            let mut jobs: Vec<StepJob> = Vec::with_capacity(steps.len());
-            for (idx, s) in steps.iter().enumerate() {
-                let job = match s.phase {
-                    Phase::Prefill => StepJob {
-                        idx,
-                        model: s.model,
-                        phase: s.phase,
-                        shape: cfg.shape_for(s.model),
-                        state: None,
-                        input: prompts.remove(&s.id).unwrap_or_default(),
-                    },
-                    Phase::Decode => StepJob {
-                        idx,
-                        model: s.model,
-                        phase: s.phase,
-                        shape: cfg.shape_for(s.model),
-                        state: Some(
-                            cache
-                                .checkout(s.id)
-                                .ok_or_else(|| anyhow!("session {} lost its cached state", s.id))?,
-                        ),
-                        input: last_token
-                            .get(&s.id)
-                            .cloned()
-                            .ok_or_else(|| anyhow!("session {} has no previous token", s.id))?,
-                    },
-                };
-                jobs.push(job);
-            }
-
-            // Fan out contiguous chunks, one per worker.
-            let n = jobs.len();
-            for (w, r) in chunk_ranges(n, threads).into_iter().enumerate().rev() {
-                let chunk = jobs.split_off(r.start);
-                if !chunk.is_empty() && job_txs[w].send(chunk).is_err() {
-                    return Err(anyhow!("pooled sim worker {w} died"));
-                }
-            }
-
-            // Gather, then merge in scheduler order.
-            let mut outs: Vec<Option<StepDone>> = (0..n).map(|_| None).collect();
-            for _ in 0..n {
-                let done =
-                    res_rx.recv().map_err(|_| anyhow!("pooled sim workers disconnected"))?;
-                let slot = done.idx;
-                outs[slot] = Some(done);
-            }
-            let mut batch_seconds = 0.0f64;
-            for (idx, s) in steps.iter().enumerate() {
-                let done = outs[idx].take().expect("one result per step");
-                let out = match s.phase {
-                    Phase::Prefill => {
-                        let first = done.result?;
-                        cache.insert(s.id, done.state.expect("prefill produces a state"));
-                        batch_seconds =
-                            batch_seconds.max(cost_of(s.model) * cfg.prompt_tokens.max(1) as f64);
-                        first
-                    }
-                    Phase::Decode => {
-                        let token = done.result?;
-                        cache.checkin(s.id, done.state.expect("decode returns its state"));
-                        batch_seconds = batch_seconds.max(cost_of(s.model));
-                        token
-                    }
-                };
-                tokens += 1;
-                last_token.insert(s.id, out);
-                if sched.on_step_done(s.id, Instant::now()) == StepOutcome::Retired {
-                    cache.remove(s.id);
-                    last_token.remove(&s.id);
-                }
-            }
-            sim_seconds += batch_seconds + (cache.stats.spill_seconds - spill0);
+        // Stage the batch in scheduler order: prompts move out, decode
+        // states check out of the cache deterministically.
+        let mut jobs: Vec<StepJob> = Vec::with_capacity(steps.len());
+        for (idx, s) in steps.iter().enumerate() {
+            let job = match s.phase {
+                Phase::Prefill => StepJob {
+                    idx,
+                    model: s.model,
+                    phase: s.phase,
+                    shape: cfg.shape_for(s.model),
+                    state: None,
+                    input: prompts.remove(&s.id).unwrap_or_default(),
+                },
+                Phase::Decode => StepJob {
+                    idx,
+                    model: s.model,
+                    phase: s.phase,
+                    shape: cfg.shape_for(s.model),
+                    state: Some(
+                        cache
+                            .checkout(s.id)
+                            .ok_or_else(|| anyhow!("session {} lost its cached state", s.id))?,
+                    ),
+                    input: last_token
+                        .get(&s.id)
+                        .cloned()
+                        .ok_or_else(|| anyhow!("session {} has no previous token", s.id))?,
+                },
+            };
+            jobs.push(job);
         }
-        drop(job_txs); // release the workers before the scope joins them
 
-        Ok(build_report(t0, tokens, sim_seconds, &cache, &sched, batches, batched_steps))
-    })
+        // Fan out contiguous chunks onto the resident team. Jobs park in
+        // per-index slots (the claiming worker takes each out exactly
+        // once); answers land in matching slots, so claim order cannot
+        // affect results. `run` barriers on completion, so borrowing the
+        // batch locals is safe.
+        let n = jobs.len();
+        let ranges = chunk_ranges(n, threads);
+        let job_slots: Vec<Mutex<Option<StepJob>>> =
+            jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+        let out_slots: Vec<Mutex<Option<StepDone>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        team.run(ranges.len(), |c| {
+            for i in ranges[c].clone() {
+                let mut job = job_slots[i]
+                    .lock()
+                    .expect("pooled job slot poisoned")
+                    .take()
+                    .expect("each job is claimed exactly once");
+                let done = run_step_job(sim, factory, &mut job);
+                *out_slots[i].lock().expect("pooled result slot poisoned") = Some(done);
+            }
+        });
+
+        // Merge in scheduler order.
+        let mut batch_seconds = 0.0f64;
+        for (idx, s) in steps.iter().enumerate() {
+            let done = out_slots[idx]
+                .lock()
+                .expect("pooled result slot poisoned")
+                .take()
+                .expect("one result per step (run() barriers on completion)");
+            debug_assert_eq!(done.idx, idx);
+            let out = match s.phase {
+                Phase::Prefill => {
+                    let first = done.result?;
+                    cache.insert(s.id, done.state.expect("prefill produces a state"));
+                    batch_seconds =
+                        batch_seconds.max(cost_of(s.model) * cfg.prompt_tokens.max(1) as f64);
+                    first
+                }
+                Phase::Decode => {
+                    let token = done.result?;
+                    cache.checkin(s.id, done.state.expect("decode returns its state"));
+                    batch_seconds = batch_seconds.max(cost_of(s.model));
+                    token
+                }
+            };
+            tokens += 1;
+            last_token.insert(s.id, out);
+            if sched.on_step_done(s.id, Instant::now()) == StepOutcome::Retired {
+                cache.remove(s.id);
+                last_token.remove(&s.id);
+            }
+        }
+        sim_seconds += batch_seconds + (cache.stats.spill_seconds - spill0);
+    }
+
+    Ok(build_report(t0, tokens, sim_seconds, &cache, &sched, batches, batched_steps))
 }
 
 #[cfg(test)]
@@ -506,6 +535,51 @@ mod tests {
         let err = simulate_pooled(&factory, &cfg, &RduConfig::hs_scan_mode(), 2)
             .expect_err("factory failure must surface");
         assert!(format!("{err:#}").contains("executor"), "{err:#}");
+    }
+
+    #[test]
+    fn sticky_executor_is_reused_within_a_sim_and_rebuilt_across_sims() {
+        use std::sync::atomic::AtomicUsize;
+        use std::sync::Arc;
+        let builds = Arc::new(AtomicUsize::new(0));
+        let b = Arc::clone(&builds);
+        let factory: ExecutorFactory = Box::new(move || {
+            b.fetch_add(1, Ordering::SeqCst);
+            Ok(Box::new(MockExecutor::new(1, 8)) as Box<dyn Executor>)
+        });
+        // TLS is per-thread, so driving the helper directly on the test
+        // thread is deterministic regardless of team width.
+        let hits0 = crate::runtime::team::sticky_hit_counter().load(Ordering::Relaxed);
+        let sim_a = NEXT_SIM_ID.fetch_add(1, Ordering::Relaxed);
+        with_sticky_executor(sim_a, &factory, |_| ()).unwrap();
+        with_sticky_executor(sim_a, &factory, |_| ()).unwrap();
+        assert_eq!(builds.load(Ordering::SeqCst), 1, "second touch reuses the executor");
+        let sim_b = NEXT_SIM_ID.fetch_add(1, Ordering::Relaxed);
+        with_sticky_executor(sim_b, &factory, |_| ()).unwrap();
+        assert_eq!(builds.load(Ordering::SeqCst), 2, "a new sim id rebuilds");
+        let hits1 = crate::runtime::team::sticky_hit_counter().load(Ordering::Relaxed);
+        assert!(hits1 >= hits0 + 1, "reuse counts team.sticky_hit ({hits0} -> {hits1})");
+    }
+
+    #[test]
+    fn failed_factory_is_retried_on_the_next_touch() {
+        use std::sync::atomic::AtomicUsize;
+        use std::sync::Arc;
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        // First call fails, later calls succeed.
+        let factory: ExecutorFactory = Box::new(move || {
+            if c.fetch_add(1, Ordering::SeqCst) == 0 {
+                Err(anyhow!("transient executor failure"))
+            } else {
+                Ok(Box::new(MockExecutor::new(1, 8)) as Box<dyn Executor>)
+            }
+        });
+        let sim = NEXT_SIM_ID.fetch_add(1, Ordering::Relaxed);
+        let err = with_sticky_executor(sim, &factory, |_| ()).expect_err("first touch fails");
+        assert!(format!("{err:#}").contains("executor"), "{err:#}");
+        with_sticky_executor(sim, &factory, |_| ()).expect("second touch rebuilds");
+        assert_eq!(calls.load(Ordering::SeqCst), 2);
     }
 
     #[test]

@@ -3,8 +3,10 @@
 
 use std::ops::{Add, AddAssign, Mul, Neg, Sub};
 
-/// Complex number over `f64`.
+/// Complex number over `f64`. `repr(C)` pins the `[re, im]` memory layout
+/// the FFT SIMD butterflies (`crate::fft::simd`) load vectors from.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
+#[repr(C)]
 pub struct C64 {
     /// Real part.
     pub re: f64,

@@ -58,7 +58,10 @@ pub use registry::{
     family_workload, lookup, registry, registry_names, ssm_workloads, DecodeDemand, GoldenCheck,
     ShardComm, Workload,
 };
-pub use s4::{s4_conv, s4_conv_channels, s4_decoder, s4_kernel, s4_kernel_chunked, s4_kernel_scalar};
+pub use s4::{
+    s4_conv, s4_conv_channels, s4_decoder, s4_kernel, s4_kernel_chunked, s4_kernel_scalar,
+    s4_kernel_simd,
+};
 pub use ssd::{ssd_decoder, ssd_scan, ssd_scan_semiseparable, ssd_scan_with_carry};
 
 #[cfg(test)]

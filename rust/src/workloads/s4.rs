@@ -35,10 +35,11 @@ use crate::util::XorShift;
 /// Materialize one channel's length-`l` S4D kernel from its `N` diagonal
 /// modes: `k[t] = Σ_n c[n]·λ[n]^t`, powers built by one cumulative product
 /// per mode (no `powi` re-derivation — the same no-recomputation discipline
-/// as the FFT plan tables). Routes through [`s4_kernel_chunked`]; the
+/// as the FFT plan tables). Routes through [`s4_kernel_simd`] (explicit
+/// lanes where the host has them, [`s4_kernel_chunked`] otherwise); the
 /// mode-at-a-time loop survives as [`s4_kernel_scalar`], the oracle.
 pub fn s4_kernel(lambda: &[f64], c: &[f64], l: usize) -> Vec<f64> {
-    s4_kernel_chunked(lambda, c, l)
+    s4_kernel_simd(lambda, c, l)
 }
 
 /// Scalar oracle for [`s4_kernel_chunked`]: one mode at a time, one
@@ -92,6 +93,104 @@ pub fn s4_kernel_chunked(lambda: &[f64], c: &[f64], l: usize) -> Vec<f64> {
         }
     }
     k
+}
+
+/// [`s4_kernel_chunked`] with explicit lanes (`crate::scan::simd` rules:
+/// runtime-detected AVX/NEON, separate mul/add, chunked fallback). The
+/// pairwise mode reduction keeps the chunked association *exactly* —
+/// `(t0+t1) + (t2+t3)` — so this path is **bit-identical to the chunked
+/// twin** (asserted in tests) and carries the same documented ≤ 1e-9
+/// reassociation budget against [`s4_kernel_scalar`].
+pub fn s4_kernel_simd(lambda: &[f64], c: &[f64], l: usize) -> Vec<f64> {
+    assert_eq!(lambda.len(), c.len(), "s4_kernel: lambda/c length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx") {
+            let mut k = vec![0.0; l];
+            // SAFETY: AVX presence checked above.
+            unsafe { s4_kernel_avx(lambda, c, &mut k) };
+            return k;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            let mut k = vec![0.0; l];
+            // SAFETY: NEON presence checked above.
+            unsafe { s4_kernel_neon(lambda, c, &mut k) };
+            return k;
+        }
+    }
+    s4_kernel_chunked(lambda, c, l)
+}
+
+/// Scalar tail shared by the lane backends: modes past the last full
+/// 4-block, identical to the chunked tail.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+fn s4_kernel_tail(lambda: &[f64], c: &[f64], from: usize, k: &mut [f64]) {
+    for m in from..lambda.len() {
+        let (cn, ln) = (c[m], lambda[m]);
+        let mut p = 1.0;
+        for kt in k.iter_mut() {
+            *kt += cn * p;
+            p *= ln;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn s4_kernel_avx(lambda: &[f64], c: &[f64], k: &mut [f64]) {
+    use core::arch::x86_64::*;
+    const LANES: usize = crate::scan::LANES;
+    let modes = lambda.len();
+    let blocks = modes / LANES;
+    for blk in 0..blocks {
+        let m0 = blk * LANES;
+        let cv = _mm256_loadu_pd(c.as_ptr().add(m0));
+        let lv = _mm256_loadu_pd(lambda.as_ptr().add(m0));
+        let mut pv = _mm256_set1_pd(1.0);
+        for kt in k.iter_mut() {
+            let t = _mm256_mul_pd(cv, pv);
+            // Pairwise exactly as chunked: (t0+t1) + (t2+t3).
+            let lo = _mm256_castpd256_pd128(t);
+            let hi = _mm256_extractf128_pd::<1>(t);
+            let pair = _mm_hadd_pd(lo, hi); // [t0+t1, t2+t3]
+            let sum = _mm_cvtsd_f64(pair) + _mm_cvtsd_f64(_mm_unpackhi_pd(pair, pair));
+            *kt += sum;
+            pv = _mm256_mul_pd(pv, lv);
+        }
+    }
+    s4_kernel_tail(lambda, c, blocks * LANES, k);
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn s4_kernel_neon(lambda: &[f64], c: &[f64], k: &mut [f64]) {
+    use core::arch::aarch64::*;
+    const LANES: usize = crate::scan::LANES;
+    let modes = lambda.len();
+    let blocks = modes / LANES;
+    for blk in 0..blocks {
+        let m0 = blk * LANES;
+        let c01 = vld1q_f64(c.as_ptr().add(m0));
+        let c23 = vld1q_f64(c.as_ptr().add(m0 + 2));
+        let l01 = vld1q_f64(lambda.as_ptr().add(m0));
+        let l23 = vld1q_f64(lambda.as_ptr().add(m0 + 2));
+        let mut p01 = vdupq_n_f64(1.0);
+        let mut p23 = vdupq_n_f64(1.0);
+        for kt in k.iter_mut() {
+            let t01 = vmulq_f64(c01, p01);
+            let t23 = vmulq_f64(c23, p23);
+            // Pairwise exactly as chunked: (t0+t1) + (t2+t3).
+            let pair = vpaddq_f64(t01, t23); // [t0+t1, t2+t3]
+            let sum = vgetq_lane_f64::<0>(pair) + vgetq_lane_f64::<1>(pair);
+            *kt += sum;
+            p01 = vmulq_f64(p01, l01);
+            p23 = vmulq_f64(p23, l23);
+        }
+    }
+    s4_kernel_tail(lambda, c, blocks * LANES, k);
 }
 
 /// One channel's S4 token mixer: materialize the kernel, then the causal
@@ -281,6 +380,30 @@ mod tests {
                 let c = rng.vec(modes, -1.0, 1.0);
                 let d = max_abs_diff(
                     &s4_kernel_chunked(&lambda, &c, l),
+                    &s4_kernel_scalar(&lambda, &c, l),
+                );
+                assert!(d < 1e-9, "modes={modes} l={l}: |d|={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_kernel_is_bit_identical_to_chunked() {
+        // The lane backends keep the chunked pairwise association exactly,
+        // so simd == chunked bit for bit (and both share the ≤1e-9 budget
+        // against the scalar oracle).
+        let mut rng = XorShift::new(95);
+        for modes in [1usize, 3, 4, 5, 8, 11] {
+            for l in [1usize, 17, 500] {
+                let lambda: Vec<f64> = (0..modes).map(|_| rng.uniform(-0.99, 0.99)).collect();
+                let c = rng.vec(modes, -1.0, 1.0);
+                assert_eq!(
+                    s4_kernel_simd(&lambda, &c, l),
+                    s4_kernel_chunked(&lambda, &c, l),
+                    "modes={modes} l={l}"
+                );
+                let d = max_abs_diff(
+                    &s4_kernel_simd(&lambda, &c, l),
                     &s4_kernel_scalar(&lambda, &c, l),
                 );
                 assert!(d < 1e-9, "modes={modes} l={l}: |d|={d}");

@@ -1,6 +1,7 @@
 //! Differential property-test harness for the serving hot loop (PR 7's
-//! lock-down suite): every chunked / pooled / sharded / planned fast path
-//! is fuzzed against its scalar oracle over adversarial shapes — lengths
+//! lock-down suite): every chunked / SIMD / pooled / sharded / planned
+//! fast path is fuzzed against its scalar oracle over adversarial shapes —
+//! lengths
 //! around the chunk width (1..=17), around the plan-cache watershed
 //! (1024 ± 1), around the split-radix watershed (16384 ± 1), non-powers of
 //! two, ragged channel sets, and arbitrary chip counts.
@@ -18,14 +19,15 @@ use ssm_rdu::fft::{
 };
 use ssm_rdu::runtime::{StealQueues, WorkerPool};
 use ssm_rdu::scan::{
-    gate_silu_chunked, gate_silu_scalar, mamba_scan_channels_chunked, mamba_scan_channels_scalar,
-    mamba_scan_serial, scan_gate_channels_chunked, scan_gate_channels_scalar, silu_slice_chunked,
-    silu_slice_scalar,
+    gate_silu_chunked, gate_silu_scalar, gate_silu_simd, mamba_scan_channels_chunked,
+    mamba_scan_channels_scalar, mamba_scan_channels_simd, mamba_scan_serial,
+    scan_gate_channels_chunked, scan_gate_channels_scalar, scan_gate_channels_simd,
+    silu_slice_chunked, silu_slice_scalar,
 };
 use ssm_rdu::shard::{sharded_mamba_scan, sharded_mamba_scan_pooled};
 use ssm_rdu::util::prop::{check, no_shrink, Config};
 use ssm_rdu::util::{max_abs_diff, C64, XorShift};
-use ssm_rdu::workloads::{s4_kernel_chunked, s4_kernel_scalar};
+use ssm_rdu::workloads::{s4_kernel_chunked, s4_kernel_scalar, s4_kernel_simd};
 
 /// Property-run config: the seed comes from `SSM_RDU_PROP_SEED` when set
 /// (so CI can pin it and a developer can sweep it), else the harness
@@ -143,6 +145,68 @@ fn prop_s4_kernel_chunked_within_reassociation_budget() {
                 Ok(())
             } else {
                 Err(format!("diff {d:e} at modes={}, L={l}", lambda.len()))
+            }
+        },
+    );
+}
+
+// ------------------------------------------------------------------ simd
+
+#[test]
+fn prop_simd_kernels_bit_identical_to_scalar() {
+    // The explicit-lane kernels (scan::simd) carry the same contract as
+    // the chunked twins: no FMA, lanes never mix, transcendentals stay
+    // scalar — so on *every* backend (avx / neon / portable) the outputs
+    // must be byte-equal to the scalar oracles at any (T, C).
+    check(
+        &cfg(64),
+        "simd scan/gate == scalar",
+        |r| {
+            let t = interesting_len(r).min(2048);
+            let c = r.range(1, 9);
+            (r.vec(t * c, -0.99, 0.99), r.vec(t * c, -1.0, 1.0), c)
+        },
+        no_shrink,
+        |(a, b, c)| {
+            if mamba_scan_channels_simd(a, b, *c) != mamba_scan_channels_scalar(a, b, *c) {
+                return Err(format!("simd scan diverged at C={c}, T={}", a.len() / c));
+            }
+            if scan_gate_channels_simd(a, b, b, *c) != scan_gate_channels_scalar(a, b, b, *c) {
+                return Err(format!("simd gated scan diverged at C={c}"));
+            }
+            if gate_silu_simd(a, b) != gate_silu_scalar(a, b) {
+                return Err("simd gate diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_s4_kernel_simd_exactly_chunked_within_budget_of_scalar() {
+    // The SIMD s4 kernel keeps the chunked kernel's pairwise association
+    // exactly (its horizontal adds reduce (t0+t1)+(t2+t3) in the same
+    // order), so it is bit-identical to chunked — and therefore inherits
+    // chunked's documented ≤1e-9 budget against the scalar oracle.
+    check(
+        &cfg(48),
+        "s4 simd == chunked, ~ scalar (1e-9)",
+        |r| {
+            let modes = r.range(1, 18);
+            let l = interesting_len(r).min(1024);
+            (r.vec(modes, -0.99, -0.01), r.vec(modes, -1.0, 1.0), l)
+        },
+        no_shrink,
+        |(lambda, c, l)| {
+            let simd = s4_kernel_simd(lambda, c, *l);
+            if simd != s4_kernel_chunked(lambda, c, *l) {
+                return Err(format!("simd != chunked at modes={}, L={l}", lambda.len()));
+            }
+            let d = max_abs_diff(&simd, &s4_kernel_scalar(lambda, c, *l));
+            if d <= 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("diff {d:e} vs scalar at modes={}, L={l}", lambda.len()))
             }
         },
     );
@@ -342,6 +406,30 @@ fn prop_map_stealing_bit_identical_to_map() {
             let a: Vec<f64> = pool.map(jobs, f);
             let b: Vec<f64> = pool.map_stealing(jobs, f);
             if a == b {
+                Ok(())
+            } else {
+                Err(format!("diverged at jobs={jobs}, threads={threads}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_resident_map_bit_identical_to_spawn_baseline() {
+    // The resident-team facade must preserve the scoped-spawn baseline's
+    // results exactly: same contiguous chunking, same index order, for any
+    // (jobs, threads) — `map_spawn` is kept precisely to witness this.
+    check(
+        &cfg(24),
+        "resident map == map_spawn",
+        |r| (r.range(0, 80), r.range(1, 9), r.next_u64()),
+        no_shrink,
+        |&(jobs, threads, salt)| {
+            let pool = WorkerPool::new(threads);
+            let f = |i: usize| ((i * 7 + (salt % 513) as usize) as f64).sqrt().sin();
+            let resident: Vec<f64> = pool.map(jobs, f);
+            let spawned: Vec<f64> = pool.map_spawn(jobs, f);
+            if resident == spawned {
                 Ok(())
             } else {
                 Err(format!("diverged at jobs={jobs}, threads={threads}"))
