@@ -1,0 +1,111 @@
+//! Author a PCU program with `define_pcu_program!` and single-step it
+//! through the pcusim debugger.
+//!
+//! The walkthrough does what the `debug` CLI subcommand does, but from the
+//! library API: author a gained Hillis–Steele scan in the DSL, break when
+//! its `gain` stage first computes, dump pipeline registers and in-flight
+//! NoC traffic, resume to completion, and verify the interrupted run
+//! reproduces the batch engine bit for bit. A second pass breaks inside
+//! the canonical fused DIF→filter→DIT convolution at its `filter` stage —
+//! the snapshot there is the CI smoke contract (non-empty NoC state while
+//! the dif stages behind the filter still carry cross-lane traffic).
+//!
+//! Run: `cargo run --release --example debug_pipeline -- \
+//!     [--lanes 32] [--vectors 8] [--seed 7] [--gain 0.125]`
+
+use ssm_rdu::arch::PcuGeometry;
+use ssm_rdu::define_pcu_program;
+use ssm_rdu::pcusim::dsl::ops;
+use ssm_rdu::pcusim::{fused_conv_program, DebugSession, Pcu, RunOutcome};
+use ssm_rdu::util::cli::Args;
+use ssm_rdu::util::{C64, XorShift};
+
+define_pcu_program! {
+    /// Inclusive Hillis–Steele scan over `lanes` lanes, then a constant
+    /// gain — the smallest program that mixes cross-lane and straight
+    /// stages.
+    fn gained_scan(lanes: usize, gain: f64) {
+        name: format!("gained-scan{lanes}"),
+        mode: HsScan,
+        width: lanes,
+        let n = lanes.trailing_zeros() as usize;
+        stage shift[b in 0..n] = |i| {
+            let stride = 1 << b;
+            if i >= stride { ops::add(i - stride) } else { ops::pass() }
+        };
+        stage gain = |i| {
+            let _ = i;
+            ops::mul(C64::real(gain))
+        };
+    }
+}
+
+fn rand_batch(rng: &mut XorShift, vectors: usize, lanes: usize) -> Vec<Vec<C64>> {
+    (0..vectors)
+        .map(|_| {
+            (0..lanes)
+                .map(|_| C64::new(rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0)))
+                .collect()
+        })
+        .collect()
+}
+
+/// Run `session` to the first hit of breakpoint `label`, print the hit and
+/// the snapshot, then resume to completion and check against the engine.
+fn debug_and_verify(pcu: Pcu, prog: &ssm_rdu::pcusim::Program, inputs: &[Vec<C64>], label: &str) {
+    println!("== {} ({} levels, {} vectors) ==", prog.name, prog.levels.len(), inputs.len());
+    let mut dbg = DebugSession::new(pcu, prog, inputs.to_vec());
+    let id = dbg.break_on_label(label).expect("program has the named stage");
+    match dbg.run() {
+        RunOutcome::Break(hit) => {
+            println!(
+                "breakpoint {id} hit at cycle {}: stage {:?} ({label}), vector {:?}",
+                hit.cycle, hit.stage, hit.vector
+            );
+        }
+        other => panic!("expected a break at `{label}`, got {other:?}"),
+    }
+    let snap = dbg.snapshot();
+    println!("{}", snap.render());
+    println!("in-flight NoC flits at the break: {}", snap.noc.len());
+    // Resume: the remaining breakpoint hits are counted, not printed.
+    let mut more = 0usize;
+    loop {
+        match dbg.run() {
+            RunOutcome::Break(_) => more += 1,
+            RunOutcome::Done => break,
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    let (want_out, want_stats) = pcu.run(prog, inputs);
+    assert_eq!(dbg.outputs(), &want_out[..], "resume must match the batch engine");
+    assert_eq!(dbg.stats().unwrap(), want_stats, "stats must match the batch engine");
+    println!(
+        "resumed past {more} further hits; deterministic resume verified: {} cycles, {} vectors\n",
+        want_stats.cycles,
+        want_out.len()
+    );
+}
+
+fn main() {
+    let args = Args::from_env();
+    let lanes = args.usize_or("lanes", 32);
+    let vectors = args.usize_or("vectors", 8);
+    let seed = args.usize_or("seed", 7) as u64;
+    let gain: f64 = args.get("gain").map(|s| s.parse().expect("--gain: float")).unwrap_or(0.125);
+    assert!(lanes.is_power_of_two() && lanes >= 2, "--lanes must be a power of two >= 2");
+
+    let mut rng = XorShift::new(seed);
+    let geom = PcuGeometry::new(lanes, 12);
+    let inputs = rand_batch(&mut rng, vectors, lanes);
+
+    // 1. DSL-authored scan, break at its straight gain stage.
+    let scan = gained_scan(lanes, gain);
+    debug_and_verify(Pcu::with_extension(geom, scan.mode), &scan, &inputs, "gain");
+
+    // 2. The fused convolution, break at the filter stage between the DIF
+    //    and DIT halves — the snapshot the CI smoke run asserts on.
+    let h: Vec<C64> = (0..lanes).map(|_| C64::new(rng.uniform(-1.0, 1.0), 0.0)).collect();
+    let fused = fused_conv_program(lanes, &h);
+    debug_and_verify(Pcu::with_extension(geom, fused.mode), &fused, &inputs, "filter");
+}

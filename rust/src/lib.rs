@@ -11,7 +11,12 @@
 //! * [`arch`] — the RDU chip description (Table I) and platform abstractions.
 //! * [`pcusim`] — a cycle-level functional simulator of a PCU in every mode
 //!   (element-wise / systolic / reduction / FFT / HS-scan / B-scan); numerics
-//!   checked against the algorithm substrates, utilization feeds the perf model.
+//!   checked against the algorithm substrates, utilization feeds the perf
+//!   model. Programs are authored with the
+//!   [`define_pcu_program!`](crate::define_pcu_program) DSL (named stages,
+//!   folded constants, routes checked at construction) and can be
+//!   single-stepped in the [`pcusim::debug`] debugger — breakpoints,
+//!   register/NoC snapshots, deterministic resume (`debug` subcommand).
 //! * [`fft`], [`scan`] — the algorithm substrates (Cooley–Tukey, Bailey 4-step
 //!   Vector/GEMM variants, C-scan, Hillis–Steele, Blelloch, tiled scan).
 //! * [`graph`], [`workloads`] — dataflow-graph IR, the decoder builders

@@ -25,6 +25,21 @@
 //!                                the strong-scaling sweep (speedup and
 //!                                communication share per chip count) for
 //!                                the selected workloads
+//!   debug [--program P --lanes N --stages M --vectors V --seed K]
+//!         [--break-stage LABEL|IDX --break-cycle C --step K]
+//!         [--dump --json FILE --expect-noc --serialized --interactive]
+//!                                single-step a PCU program in the pcusim
+//!                                debugger: run to a stage/cycle breakpoint,
+//!                                dump pipeline registers and NoC route
+//!                                traffic, then resume and verify the
+//!                                interrupted run reproduces the engine's
+//!                                outputs and ExecStats exactly. --program
+//!                                names any canonical program (fused_conv,
+//!                                fft, dif_fft, idit_fft, freq_filter,
+//!                                hs_scan, b_scan, reduction, twiddle);
+//!                                --serialized forces the baseline-PCU
+//!                                serialized regime; --interactive opens a
+//!                                stdin REPL (s/c/b/r/dump/stats/q)
 //!   sweep [--seq-len L] [--pcus N1,N2,…] [--stages S1,S2,…] [--fuse]
 //!         [--workload W1,W2,…]
 //!                                design-space ablations (PCU count, DRAM
@@ -247,6 +262,7 @@ fn main() {
             0
         }
         "simulate" => simulate(&args),
+        "debug" => debug(&args),
         "sweep" => sweep(&args),
         "dot" => dot(&args),
         "serve" => serve(&args),
@@ -254,7 +270,7 @@ fn main() {
         other => {
             eprintln!(
                 "unknown subcommand `{other}`; usage: ssm-rdu \
-                 <spec|table2|table4|fig7|fig8|fig11|fig12|all|simulate|sweep|dot|serve|fleet> \
+                 <spec|table2|table4|fig7|fig8|fig11|fig12|all|simulate|debug|sweep|dot|serve|fleet> \
                  [--options] — `simulate`/`sweep`/`serve`/`dot` take --workload/--model with \
                  any registered workload ({}); see README.md (or the rust/src/main.rs doc \
                  block) for the full reference",
@@ -268,6 +284,239 @@ fn main() {
 
 fn seq_lens(args: &Args) -> Vec<usize> {
     args.usize_list_or("seq-lens", &figures::PAPER_SEQ_LENS)
+}
+
+/// Single-step a canonical PCU program in the pcusim debugger: run to a
+/// breakpoint, dump architectural state, resume, and verify the interrupted
+/// run reproduces the batch engine's outputs and `ExecStats` exactly.
+fn debug(args: &Args) -> i32 {
+    let lanes = args.usize_or("lanes", 32);
+    let stages = args.usize_or("stages", 12);
+    let vectors = args.usize_or("vectors", 8).max(1);
+    let seed = args.usize_or("seed", 42) as u64;
+    let name = args.get_or("program", "fused_conv");
+    let Some(prog) = pcusim::demo_program(&name, lanes, seed) else {
+        eprintln!(
+            "unknown --program `{name}`; valid: {}",
+            pcusim::programs::DEMO_PROGRAM_NAMES.join(", ")
+        );
+        return 2;
+    };
+    let geom = PcuGeometry::new(lanes, stages);
+    let pcu = if args.flag("serialized") {
+        Pcu::baseline(geom)
+    } else {
+        Pcu::with_extension(geom, prog.mode)
+    };
+    let mut rng = XorShift::new(seed ^ 0x5eed);
+    let inputs: Vec<Vec<C64>> = (0..vectors)
+        .map(|_| {
+            (0..lanes)
+                .map(|_| C64::new(rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0)))
+                .collect()
+        })
+        .collect();
+    let mut session = pcusim::DebugSession::new(pcu, &prog, inputs.clone());
+    println!(
+        "debug: {} on {} PCU ({}), {} levels, {} vectors",
+        prog.name,
+        geom,
+        if session.is_spatial() { "spatial" } else { "serialized" },
+        prog.levels.len(),
+        vectors
+    );
+
+    if args.flag("interactive") {
+        return debug_repl(&mut session, &pcu, &prog, &inputs);
+    }
+
+    // Optional manual single-stepping before the breakpoint run.
+    for _ in 0..args.usize_or("step", 0) {
+        if session.is_done() {
+            break;
+        }
+        let rep = session.step();
+        let computed: Vec<String> = rep
+            .computed
+            .iter()
+            .map(|&(l, v)| format!("v{v}@{}", prog.stage_label(l)))
+            .collect();
+        let emitted =
+            rep.emitted_vector.map(|v| format!("  out v{v}")).unwrap_or_default();
+        println!("  cycle {:>4}: [{}]{}", rep.cycle, computed.join(" "), emitted);
+    }
+
+    // Register breakpoints and run to the first hit.
+    let mut have_break = false;
+    if let Some(spec) = args.get("break-stage") {
+        let id = session.break_on_label(spec).or_else(|| {
+            spec.parse::<usize>()
+                .ok()
+                .filter(|&i| i < prog.levels.len())
+                .map(|i| session.break_on_stage(i))
+        });
+        if id.is_none() {
+            eprintln!(
+                "--break-stage `{spec}` names no stage of `{}`; labels: {}",
+                prog.name,
+                (0..prog.levels.len()).map(|i| prog.stage_label(i)).collect::<Vec<_>>().join(", ")
+            );
+            return 2;
+        }
+        have_break = true;
+    }
+    if let Some(c) = args.get("break-cycle") {
+        match c.parse::<u64>() {
+            Ok(c) => {
+                session.break_on_cycle(c);
+                have_break = true;
+            }
+            Err(_) => {
+                eprintln!("--break-cycle wants a cycle number, got `{c}`");
+                return 2;
+            }
+        }
+    }
+
+    let mut dumped_snapshot = None;
+    if have_break && !session.is_done() {
+        match session.run() {
+            pcusim::RunOutcome::Break(hit) => {
+                let at = hit
+                    .stage
+                    .map(|s| format!(" at stage {} ({})", s, prog.stage_label(s)))
+                    .unwrap_or_default();
+                let vec_s = hit.vector.map(|v| format!(", vector {v}")).unwrap_or_default();
+                println!("breakpoint {} hit: cycle {}{}{}", hit.id, hit.cycle, at, vec_s);
+                dumped_snapshot = Some(session.snapshot());
+            }
+            pcusim::RunOutcome::Done => println!("run completed before any breakpoint fired"),
+            pcusim::RunOutcome::AtCycle(c) => println!("stopped at cycle {c}"),
+        }
+    }
+    if let Some(snap) = &dumped_snapshot {
+        if args.flag("dump") {
+            print!("{}", snap.render());
+        }
+        if let Some(path) = args.get("json") {
+            if let Err(e) = std::fs::write(path, snap.to_json()) {
+                eprintln!("failed to write --json {path}: {e}");
+                return 1;
+            }
+            println!("snapshot written to {path}");
+        }
+    }
+    if args.flag("expect-noc") {
+        match &dumped_snapshot {
+            Some(snap) if !snap.noc.is_empty() => {
+                println!("noc check: {} flits in flight at the break", snap.noc.len());
+            }
+            Some(_) => {
+                eprintln!("--expect-noc: snapshot has no cross-lane traffic");
+                return 1;
+            }
+            None => {
+                eprintln!("--expect-noc: no breakpoint snapshot was taken");
+                return 1;
+            }
+        }
+    }
+
+    // Resume to completion, counting further breakpoint fires.
+    let mut extra_fires = 0u64;
+    while !session.is_done() {
+        match session.run() {
+            pcusim::RunOutcome::Break(_) => extra_fires += 1,
+            pcusim::RunOutcome::Done => break,
+            pcusim::RunOutcome::AtCycle(_) => unreachable!("run() never reports AtCycle"),
+        }
+    }
+    if extra_fires > 0 {
+        println!("resumed through {extra_fires} further breakpoint fire(s)");
+    }
+
+    // The debugger must be a faithful re-enactment of the batch engine:
+    // interrupted or not, outputs and ExecStats match exactly.
+    let (want_out, want_stats) = pcu.run(&prog, &inputs);
+    let stats = session.stats().expect("session is done");
+    if session.outputs() != &want_out[..] || stats != want_stats {
+        eprintln!("MISMATCH: debugger diverged from engine (stats {stats:?} vs {want_stats:?})");
+        return 1;
+    }
+    println!(
+        "deterministic resume verified: {} vectors, {} cycles, utilization {:.3}",
+        stats.vectors,
+        stats.cycles,
+        stats.utilization()
+    );
+    0
+}
+
+/// Minimal stdin REPL for `debug --interactive`:
+/// `s` step · `c N` run to cycle N · `b LABEL` breakpoint · `r` run ·
+/// `dump` snapshot · `stats` final stats · `q` quit.
+fn debug_repl(
+    session: &mut pcusim::DebugSession<'_>,
+    pcu: &Pcu,
+    prog: &pcusim::Program,
+    inputs: &[Vec<C64>],
+) -> i32 {
+    use std::io::{BufRead, Write};
+    let stdin = std::io::stdin();
+    let mut lines = stdin.lock().lines();
+    loop {
+        print!("(pcudbg) ");
+        let _ = std::io::stdout().flush();
+        let Some(Ok(line)) = lines.next() else { break };
+        let mut words = line.split_whitespace();
+        match words.next() {
+            Some("s") => {
+                if session.is_done() {
+                    println!("done");
+                } else {
+                    let rep = session.step();
+                    println!("cycle {} computed {:?}", rep.cycle, rep.computed);
+                }
+            }
+            Some("c") => {
+                let target = words.next().and_then(|w| w.parse().ok()).unwrap_or(u64::MAX);
+                println!("{:?}", session.run_to(target));
+            }
+            Some("b") => match words.next() {
+                Some(label) => match session.break_on_label(label) {
+                    Some(id) => println!("breakpoint {id} on `{label}`"),
+                    None => println!("no stage labeled `{label}`"),
+                },
+                None => println!("usage: b LABEL"),
+            },
+            Some("r") => {
+                if session.is_done() {
+                    println!("done");
+                } else {
+                    println!("{:?}", session.run());
+                }
+            }
+            Some("dump") => print!("{}", session.snapshot().render()),
+            Some("stats") => match session.stats() {
+                Some(s) => println!("{s:?}"),
+                None => println!("not done yet (cycle {})", session.cycle()),
+            },
+            Some("q") => break,
+            Some(other) => println!("unknown command `{other}` (s/c/b/r/dump/stats/q)"),
+            None => {}
+        }
+    }
+    // Even an abandoned REPL session must not leave a wrong impression:
+    // finish the run and verify against the engine before exiting.
+    while !session.is_done() {
+        session.step();
+    }
+    let (want_out, want_stats) = pcu.run(prog, inputs);
+    if session.outputs() != &want_out[..] || session.stats() != Some(want_stats) {
+        eprintln!("MISMATCH: debugger diverged from engine");
+        return 1;
+    }
+    0
 }
 
 /// Demonstrate the PCU simulator: FFT and scan programs on baseline vs

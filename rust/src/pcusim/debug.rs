@@ -1,0 +1,862 @@
+//! Single-step debugger for PCU programs: a cycle-by-cycle re-enactment of
+//! the two execution regimes in [`crate::pcusim::engine`], with visible
+//! pipeline registers, NoC route traffic, breakpoints, and deterministic
+//! resume.
+//!
+//! The batch engine computes outputs functionally and *accounts* cycles in
+//! closed form (`V + stages − 1` spatial, `V·levels + (stages−1)·levels`
+//! serialized). [`DebugSession`] instead advances one cycle per [`step`]
+//! call, moving vectors through the stage registers exactly as the closed
+//! form assumes — and its [`stats`] at completion are asserted (in the
+//! integration tests) to equal the engine's `ExecStats` bit-for-bit, so the
+//! debugger cannot drift from the thing it debugs. Op semantics are not
+//! duplicated either: each register advance calls the engine's own
+//! `eval_level`.
+//!
+//! State model (spatial): `stages` pipeline registers, each `None` or a
+//! `(vector, values)` pair. A step shifts register *s−1* into *s*, applying
+//! level *s* when one exists (stage *s* computes level *s*; deeper stages
+//! forward unchanged), admits the next input vector into stage 0 through
+//! level 0, and pops stage `stages−1` into the output list. Cross-lane
+//! reads performed while applying level *s* are recorded as [`RouteFlit`]s
+//! at fabric boundary *s* — the same `(boundary, dest, src)` triple
+//! `topology::allows` admitted at construction.
+//!
+//! State model (serialized): one register recirculates at stage 0, applying
+//! one level per cycle; after the last vector's last level, `stages − 1`
+//! drain cycles per recirculation tick away with the register empty,
+//! matching the engine's accounting of the trailing pass-through stages.
+//!
+//! [`step`]: DebugSession::step
+//! [`stats`]: DebugSession::stats
+
+use crate::pcusim::engine::{ExecStats, Pcu};
+use crate::pcusim::program::Program;
+use crate::util::json::Json;
+use crate::util::C64;
+use std::fmt;
+
+/// One cross-lane value movement observed during a step: the fabric at
+/// `boundary` carried lane `src`'s register value into lane `dest`'s FU.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RouteFlit {
+    /// Fabric boundary index (= level index being applied).
+    pub boundary: usize,
+    /// Lane whose FU consumed the value.
+    pub dest: usize,
+    /// Lane whose register supplied the value.
+    pub src: usize,
+    /// The value that crossed.
+    pub value: C64,
+}
+
+/// The contents of one occupied pipeline stage at snapshot time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageSnap {
+    /// Pipeline stage index.
+    pub stage: usize,
+    /// DSL stage label (`dif0`, `filter`, …), `L{i}` for unlabeled
+    /// programs, or `pass` for forward-only stages past the program depth.
+    pub label: String,
+    /// Input vector occupying the stage, if tracked (serialized drain
+    /// snapshots carry `None`).
+    pub vector: Option<usize>,
+    /// Per-lane register values after the stage's level was applied.
+    pub values: Vec<C64>,
+}
+
+/// A point-in-time dump of the debugger's architectural state: cycle count,
+/// admitted/emitted vector counts, every occupied stage register, and the
+/// NoC traffic of the most recent step. Round-trips through
+/// [`Snapshot::to_json`] / [`Snapshot::from_json`] losslessly (floats are
+/// serialized shortest-round-trip), which the regression tests pin.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    /// Program name.
+    pub program: String,
+    /// Execution regime.
+    pub spatial: bool,
+    /// Cycles elapsed.
+    pub cycle: u64,
+    /// Input vectors admitted so far.
+    pub fed: usize,
+    /// Output vectors emitted so far.
+    pub emitted: usize,
+    /// Occupied stage registers.
+    pub stages: Vec<StageSnap>,
+    /// Cross-lane traffic observed in the most recent step.
+    pub noc: Vec<RouteFlit>,
+}
+
+fn f64_json(v: f64) -> String {
+    // `{:?}` is shortest-round-trip for f64, and for all finite values it
+    // is valid JSON number syntax.
+    format!("{v:?}")
+}
+
+fn c64_from_json(j: &Json) -> Result<C64, String> {
+    let a = j.as_arr().ok_or("value must be a [re, im] array")?;
+    if a.len() != 2 {
+        return Err(format!("value array has {} elements, want 2", a.len()));
+    }
+    let re = a[0].as_f64().ok_or("re must be a number")?;
+    let im = a[1].as_f64().ok_or("im must be a number")?;
+    Ok(C64::new(re, im))
+}
+
+impl Snapshot {
+    /// Serialize to a JSON document (the `debug --json` artifact format).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "{{\"program\": \"{}\", \"spatial\": {}, \"cycle\": {}, \"fed\": {}, \"emitted\": {},",
+            self.program.replace('\\', "\\\\").replace('"', "\\\""),
+            self.spatial,
+            self.cycle,
+            self.fed,
+            self.emitted
+        ));
+        s.push_str(" \"stages\": [");
+        for (i, st) in self.stages.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            let vector =
+                st.vector.map(|v| v.to_string()).unwrap_or_else(|| "null".to_string());
+            let values: Vec<String> = st
+                .values
+                .iter()
+                .map(|z| format!("[{}, {}]", f64_json(z.re), f64_json(z.im)))
+                .collect();
+            s.push_str(&format!(
+                "{{\"stage\": {}, \"label\": \"{}\", \"vector\": {}, \"values\": [{}]}}",
+                st.stage,
+                st.label.replace('\\', "\\\\").replace('"', "\\\""),
+                vector,
+                values.join(", ")
+            ));
+        }
+        s.push_str("], \"noc\": [");
+        for (i, fl) in self.noc.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!(
+                "{{\"boundary\": {}, \"dest\": {}, \"src\": {}, \"value\": [{}, {}]}}",
+                fl.boundary,
+                fl.dest,
+                fl.src,
+                f64_json(fl.value.re),
+                f64_json(fl.value.im)
+            ));
+        }
+        s.push_str("]}");
+        s
+    }
+
+    /// Reconstruct a snapshot from parsed JSON (inverse of [`to_json`]).
+    ///
+    /// [`to_json`]: Snapshot::to_json
+    pub fn from_json(j: &Json) -> Result<Snapshot, String> {
+        let field = |k: &str| j.get(k).ok_or_else(|| format!("missing field `{k}`"));
+        let program = field("program")?.as_str().ok_or("program must be a string")?.to_string();
+        let spatial = match field("spatial")? {
+            Json::Bool(b) => *b,
+            _ => return Err("spatial must be a bool".into()),
+        };
+        let cycle = field("cycle")?.as_f64().ok_or("cycle must be a number")? as u64;
+        let fed = field("fed")?.as_usize().ok_or("fed must be a non-negative integer")?;
+        let emitted = field("emitted")?.as_usize().ok_or("emitted must be a non-negative integer")?;
+        let mut stages = Vec::new();
+        for st in field("stages")?.as_arr().ok_or("stages must be an array")? {
+            let sub = |k: &str| st.get(k).ok_or_else(|| format!("stage missing field `{k}`"));
+            let vector = match sub("vector")? {
+                Json::Null => None,
+                v => Some(v.as_usize().ok_or("vector must be an integer or null")?),
+            };
+            let values = sub("values")?
+                .as_arr()
+                .ok_or("values must be an array")?
+                .iter()
+                .map(c64_from_json)
+                .collect::<Result<Vec<_>, _>>()?;
+            stages.push(StageSnap {
+                stage: sub("stage")?.as_usize().ok_or("stage must be an integer")?,
+                label: sub("label")?.as_str().ok_or("label must be a string")?.to_string(),
+                vector,
+                values,
+            });
+        }
+        let mut noc = Vec::new();
+        for fl in field("noc")?.as_arr().ok_or("noc must be an array")? {
+            let sub = |k: &str| fl.get(k).ok_or_else(|| format!("flit missing field `{k}`"));
+            noc.push(RouteFlit {
+                boundary: sub("boundary")?.as_usize().ok_or("boundary must be an integer")?,
+                dest: sub("dest")?.as_usize().ok_or("dest must be an integer")?,
+                src: sub("src")?.as_usize().ok_or("src must be an integer")?,
+                value: c64_from_json(sub("value")?)?,
+            });
+        }
+        Ok(Snapshot { program, spatial, cycle, fed, emitted, stages, noc })
+    }
+
+    /// Human-readable dump (the `debug --dump` format). Wide programs elide
+    /// per-lane values past the first eight lanes.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "[{}] cycle {} ({}) — fed {}, emitted {}\n",
+            self.program,
+            self.cycle,
+            if self.spatial { "spatial" } else { "serialized" },
+            self.fed,
+            self.emitted
+        ));
+        for st in &self.stages {
+            let vec_s = st.vector.map(|v| format!("v{v}")).unwrap_or_else(|| "-".to_string());
+            let shown = st.values.len().min(8);
+            let vals: Vec<String> = st.values[..shown]
+                .iter()
+                .map(|z| format!("{:+.4}{:+.4}i", z.re, z.im))
+                .collect();
+            let ell = if st.values.len() > shown { ", …" } else { "" };
+            out.push_str(&format!(
+                "  stage {:>2} [{:<10}] {:>4}: {}{}\n",
+                st.stage,
+                st.label,
+                vec_s,
+                vals.join(" "),
+                ell
+            ));
+        }
+        if self.noc.is_empty() {
+            out.push_str("  noc: (no cross-lane traffic this cycle)\n");
+        } else {
+            out.push_str(&format!("  noc: {} flits\n", self.noc.len()));
+            for fl in self.noc.iter().take(16) {
+                out.push_str(&format!(
+                    "    boundary {:>2}: lane {:>2} ← lane {:>2}  ({:+.4}{:+.4}i)\n",
+                    fl.boundary, fl.dest, fl.src, fl.value.re, fl.value.im
+                ));
+            }
+            if self.noc.len() > 16 {
+                out.push_str(&format!("    … {} more\n", self.noc.len() - 16));
+            }
+        }
+        out
+    }
+}
+
+/// A breakpoint condition, checked after every step.
+pub enum Breakpoint {
+    /// Fire when any vector computes the given program stage (level index).
+    Stage(usize),
+    /// Fire when the cycle counter reaches the given value.
+    Cycle(u64),
+    /// Fire when the predicate holds on the post-step snapshot.
+    Predicate(Box<dyn Fn(&Snapshot) -> bool>),
+}
+
+impl fmt::Debug for Breakpoint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Breakpoint::Stage(s) => write!(f, "Stage({s})"),
+            Breakpoint::Cycle(c) => write!(f, "Cycle({c})"),
+            Breakpoint::Predicate(_) => write!(f, "Predicate(..)"),
+        }
+    }
+}
+
+/// What one [`DebugSession::step`] did.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepReport {
+    /// Cycle counter after the step.
+    pub cycle: u64,
+    /// `(level, vector)` pairs computed this cycle.
+    pub computed: Vec<(usize, usize)>,
+    /// Vector whose output was emitted this cycle, if any.
+    pub emitted_vector: Option<usize>,
+    /// Whether the run is complete after this step.
+    pub done: bool,
+}
+
+/// A fired breakpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BreakHit {
+    /// Id returned when the breakpoint was registered.
+    pub id: usize,
+    /// Cycle at which it fired.
+    pub cycle: u64,
+    /// Level index that triggered a [`Breakpoint::Stage`], if that kind.
+    pub stage: Option<usize>,
+    /// Vector that computed the triggering level, if applicable.
+    pub vector: Option<usize>,
+}
+
+/// Why [`DebugSession::run`] / [`DebugSession::run_to`] returned.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RunOutcome {
+    /// A breakpoint fired.
+    Break(BreakHit),
+    /// `run_to` reached its target cycle without a break.
+    AtCycle(u64),
+    /// The batch completed.
+    Done,
+}
+
+#[derive(Clone)]
+struct StageReg {
+    vector: usize,
+    values: Vec<C64>,
+}
+
+struct SerialState {
+    vector: usize,
+    level: usize,
+    values: Vec<C64>,
+    /// Level applied in the most recent step (labels the stage-0 snapshot).
+    last_applied: Option<usize>,
+    /// Remaining engine-accounted drain cycles after the last level.
+    drain_left: u64,
+}
+
+/// An interactive, single-steppable execution of one program over one input
+/// batch. Construct with [`DebugSession::new`], advance with
+/// [`step`](DebugSession::step) / [`run`](DebugSession::run) /
+/// [`run_to`](DebugSession::run_to), inspect with
+/// [`snapshot`](DebugSession::snapshot). Stepping is deterministic: the
+/// sequence of snapshots is a pure function of `(pcu, program, inputs)`, so
+/// resuming after any break reproduces the uninterrupted run exactly.
+pub struct DebugSession<'p> {
+    pcu: Pcu,
+    prog: &'p Program,
+    inputs: Vec<Vec<C64>>,
+    spatial: bool,
+    cycle: u64,
+    next_input: usize,
+    /// Spatial regime: one register per pipeline stage.
+    regs: Vec<Option<StageReg>>,
+    /// Serialized regime state (`None` when spatial).
+    serial: Option<SerialState>,
+    outputs: Vec<Vec<C64>>,
+    last_computed: Vec<(usize, usize)>,
+    last_traffic: Vec<RouteFlit>,
+    breakpoints: Vec<(usize, Breakpoint)>,
+    next_bp_id: usize,
+}
+
+impl<'p> DebugSession<'p> {
+    /// Start a session. Picks the regime the engine's [`Pcu::run`] would:
+    /// spatial when `pcu.mappable(prog)` holds, serialized otherwise.
+    pub fn new(pcu: Pcu, prog: &'p Program, inputs: Vec<Vec<C64>>) -> Self {
+        assert!(!inputs.is_empty(), "debug session needs at least one input vector");
+        assert!(!prog.levels.is_empty(), "debug session needs a non-empty program");
+        for v in &inputs {
+            assert_eq!(v.len(), pcu.geom.lanes, "input width != lanes");
+        }
+        assert_eq!(prog.width(), pcu.geom.lanes, "program width != lanes");
+        let spatial = pcu.mappable(prog).is_ok();
+        let stages = pcu.geom.stages;
+        Self {
+            pcu,
+            prog,
+            inputs,
+            spatial,
+            cycle: 0,
+            next_input: 0,
+            regs: (0..stages).map(|_| None).collect(),
+            serial: None,
+            outputs: Vec::new(),
+            last_computed: Vec::new(),
+            last_traffic: Vec::new(),
+            breakpoints: Vec::new(),
+            next_bp_id: 0,
+        }
+    }
+
+    /// Whether the regime is spatial (true) or serialized (false).
+    pub fn is_spatial(&self) -> bool {
+        self.spatial
+    }
+
+    /// Cycles elapsed.
+    pub fn cycle(&self) -> u64 {
+        self.cycle
+    }
+
+    /// Outputs emitted so far, in input order.
+    pub fn outputs(&self) -> &[Vec<C64>] {
+        &self.outputs
+    }
+
+    /// Has every vector been emitted (and, when serialized, the pipeline
+    /// fully drained)?
+    pub fn is_done(&self) -> bool {
+        let emitted_all = self.outputs.len() == self.inputs.len();
+        match &self.serial {
+            Some(s) => emitted_all && s.drain_left == 0,
+            None => emitted_all,
+        }
+    }
+
+    /// Execution statistics, available once [`is_done`](DebugSession::is_done)
+    /// — constructed from the stepped cycle counter, and equal to what
+    /// [`Pcu::run`] reports for the same `(program, inputs)`.
+    pub fn stats(&self) -> Option<ExecStats> {
+        if !self.is_done() {
+            return None;
+        }
+        let v = self.inputs.len() as u64;
+        Some(ExecStats {
+            cycles: self.cycle,
+            useful_fu_cycles: v * self.prog.useful_ops() as u64,
+            total_fu_cycles: self.cycle * self.pcu.geom.fu_count() as u64,
+            vectors: v,
+            spatial: self.spatial,
+        })
+    }
+
+    /// Register a breakpoint on a program stage by level index.
+    pub fn break_on_stage(&mut self, level: usize) -> usize {
+        self.add_bp(Breakpoint::Stage(level))
+    }
+
+    /// Register a breakpoint on a program stage by DSL label (`filter`,
+    /// `dif2`, or the `L{i}` fallback). `None` if no stage has that label.
+    pub fn break_on_label(&mut self, label: &str) -> Option<usize> {
+        let idx = (0..self.prog.levels.len()).find(|&i| self.prog.stage_label(i) == label)?;
+        Some(self.break_on_stage(idx))
+    }
+
+    /// Register a breakpoint on an absolute cycle number.
+    pub fn break_on_cycle(&mut self, cycle: u64) -> usize {
+        self.add_bp(Breakpoint::Cycle(cycle))
+    }
+
+    /// Register a predicate breakpoint evaluated on each post-step snapshot.
+    pub fn break_when(&mut self, pred: impl Fn(&Snapshot) -> bool + 'static) -> usize {
+        self.add_bp(Breakpoint::Predicate(Box::new(pred)))
+    }
+
+    /// Remove a breakpoint by id; `true` if it existed.
+    pub fn clear_breakpoint(&mut self, id: usize) -> bool {
+        let before = self.breakpoints.len();
+        self.breakpoints.retain(|(bid, _)| *bid != id);
+        self.breakpoints.len() != before
+    }
+
+    fn add_bp(&mut self, bp: Breakpoint) -> usize {
+        let id = self.next_bp_id;
+        self.next_bp_id += 1;
+        self.breakpoints.push((id, bp));
+        id
+    }
+
+    /// Advance one cycle. Panics if the run is already complete.
+    pub fn step(&mut self) -> StepReport {
+        assert!(!self.is_done(), "step() after completion");
+        if self.spatial {
+            self.step_spatial()
+        } else {
+            self.step_serialized()
+        }
+    }
+
+    fn record_traffic(
+        traffic: &mut Vec<RouteFlit>,
+        prog: &Program,
+        level: usize,
+        prev: &[C64],
+    ) {
+        for (dest, op) in prog.levels[level].ops.iter().enumerate() {
+            if let Some(src) = op.cross_src() {
+                traffic.push(RouteFlit { boundary: level, dest, src, value: prev[src] });
+            }
+        }
+    }
+
+    fn step_spatial(&mut self) -> StepReport {
+        let stages = self.pcu.geom.stages;
+        let depth = self.prog.levels.len();
+        let mut computed = Vec::new();
+        let mut traffic = Vec::new();
+        let mut new_regs: Vec<Option<StageReg>> = (0..stages).map(|_| None).collect();
+        // Shift stage s−1 into stage s, applying level s where one exists.
+        for s in 1..stages {
+            if let Some(r) = self.regs[s - 1].take() {
+                let values = if s < depth {
+                    Self::record_traffic(&mut traffic, self.prog, s, &r.values);
+                    computed.push((s, r.vector));
+                    Pcu::eval_level(&self.prog.levels[s], &r.values)
+                } else {
+                    r.values
+                };
+                new_regs[s] = Some(StageReg { vector: r.vector, values });
+            }
+        }
+        // Admit the next input vector into stage 0 through level 0.
+        if self.next_input < self.inputs.len() {
+            let vector = self.next_input;
+            let input = &self.inputs[vector];
+            Self::record_traffic(&mut traffic, self.prog, 0, input);
+            computed.push((0, vector));
+            let values = Pcu::eval_level(&self.prog.levels[0], input);
+            new_regs[0] = Some(StageReg { vector, values });
+            self.next_input += 1;
+        }
+        // The last stage doubles as the output latch: whatever reaches it
+        // is emitted this cycle (this is what makes a batch of V vectors
+        // finish in exactly V + stages − 1 cycles).
+        let mut emitted_vector = None;
+        if let Some(r) = new_regs[stages - 1].take() {
+            emitted_vector = Some(r.vector);
+            self.outputs.push(r.values);
+        }
+        self.regs = new_regs;
+        self.cycle += 1;
+        computed.sort_unstable();
+        self.last_computed = computed.clone();
+        self.last_traffic = traffic;
+        StepReport { cycle: self.cycle, computed, emitted_vector, done: self.is_done() }
+    }
+
+    fn step_serialized(&mut self) -> StepReport {
+        let stages = self.pcu.geom.stages as u64;
+        let depth = self.prog.levels.len();
+        let mut computed = Vec::new();
+        let mut traffic = Vec::new();
+        let mut emitted_vector = None;
+        // Lazily start the first recirculation.
+        if self.serial.is_none() {
+            self.serial = Some(SerialState {
+                vector: 0,
+                level: 0,
+                values: self.inputs[0].clone(),
+                last_applied: None,
+                drain_left: (stages - 1) * depth as u64,
+            });
+            self.next_input = 1;
+        }
+        let s = self.serial.as_mut().expect("serialized state initialized above");
+        if s.vector < self.inputs.len() {
+            // Work cycle: stage 0 applies one level to the resident vector.
+            Self::record_traffic(&mut traffic, self.prog, s.level, &s.values);
+            s.values = Pcu::eval_level(&self.prog.levels[s.level], &s.values);
+            computed.push((s.level, s.vector));
+            s.last_applied = Some(s.level);
+            s.level += 1;
+            if s.level == depth {
+                emitted_vector = Some(s.vector);
+                self.outputs.push(std::mem::take(&mut s.values));
+                s.vector += 1;
+                s.level = 0;
+                if s.vector < self.inputs.len() {
+                    s.values = self.inputs[s.vector].clone();
+                    self.next_input = s.vector + 1;
+                } else {
+                    s.last_applied = None;
+                }
+            }
+        } else {
+            // Drain cycle: the final recirculations still traverse the
+            // forward-only tail of the pipeline.
+            s.drain_left -= 1;
+        }
+        self.cycle += 1;
+        self.last_computed = computed.clone();
+        self.last_traffic = traffic;
+        StepReport { cycle: self.cycle, computed, emitted_vector, done: self.is_done() }
+    }
+
+    fn check_breakpoints(&self, snap_cache: &mut Option<Snapshot>) -> Option<BreakHit> {
+        for (id, bp) in &self.breakpoints {
+            let hit = match bp {
+                Breakpoint::Stage(level) => {
+                    self.last_computed.iter().find(|(l, _)| l == level).map(|&(l, v)| BreakHit {
+                        id: *id,
+                        cycle: self.cycle,
+                        stage: Some(l),
+                        vector: Some(v),
+                    })
+                }
+                Breakpoint::Cycle(c) => (self.cycle == *c)
+                    .then_some(BreakHit { id: *id, cycle: self.cycle, stage: None, vector: None }),
+                Breakpoint::Predicate(pred) => {
+                    let snap = snap_cache.get_or_insert_with(|| self.snapshot());
+                    pred(snap).then_some(BreakHit {
+                        id: *id,
+                        cycle: self.cycle,
+                        stage: None,
+                        vector: None,
+                    })
+                }
+            };
+            if hit.is_some() {
+                return hit;
+            }
+        }
+        None
+    }
+
+    /// Step until a breakpoint fires or the batch completes. Always takes
+    /// at least one step, so calling `run()` again after a break resumes
+    /// past it instead of re-firing on the same cycle.
+    pub fn run(&mut self) -> RunOutcome {
+        loop {
+            self.step();
+            let mut cache = None;
+            if let Some(hit) = self.check_breakpoints(&mut cache) {
+                return RunOutcome::Break(hit);
+            }
+            if self.is_done() {
+                return RunOutcome::Done;
+            }
+        }
+    }
+
+    /// Step until the cycle counter reaches `target`, a breakpoint fires,
+    /// or the batch completes — whichever comes first.
+    pub fn run_to(&mut self, target: u64) -> RunOutcome {
+        while self.cycle < target {
+            if self.is_done() {
+                return RunOutcome::Done;
+            }
+            self.step();
+            let mut cache = None;
+            if let Some(hit) = self.check_breakpoints(&mut cache) {
+                return RunOutcome::Break(hit);
+            }
+        }
+        if self.is_done() {
+            RunOutcome::Done
+        } else {
+            RunOutcome::AtCycle(self.cycle)
+        }
+    }
+
+    /// Dump the current architectural state.
+    pub fn snapshot(&self) -> Snapshot {
+        let depth = self.prog.levels.len();
+        let mut stages = Vec::new();
+        if self.spatial {
+            for (s, reg) in self.regs.iter().enumerate() {
+                if let Some(r) = reg {
+                    let label = if s < depth {
+                        self.prog.stage_label(s)
+                    } else {
+                        "pass".to_string()
+                    };
+                    stages.push(StageSnap {
+                        stage: s,
+                        label,
+                        vector: Some(r.vector),
+                        values: r.values.clone(),
+                    });
+                }
+            }
+        } else if let Some(s) = &self.serial {
+            if s.vector < self.inputs.len() {
+                let label = match s.last_applied {
+                    Some(li) => self.prog.stage_label(li),
+                    None => "fetch".to_string(),
+                };
+                stages.push(StageSnap {
+                    stage: 0,
+                    label,
+                    vector: Some(s.vector),
+                    values: s.values.clone(),
+                });
+            }
+        }
+        Snapshot {
+            program: self.prog.name.clone(),
+            spatial: self.spatial,
+            cycle: self.cycle,
+            fed: self.next_input,
+            emitted: self.outputs.len(),
+            stages,
+            noc: self.last_traffic.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::PcuGeometry;
+    use crate::pcusim::programs::{fused_conv_program, hs_scan_program};
+    use crate::util::XorShift;
+
+    fn rand_batch(rng: &mut XorShift, v: usize, lanes: usize) -> Vec<Vec<C64>> {
+        (0..v)
+            .map(|_| {
+                (0..lanes)
+                    .map(|_| C64::new(rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0)))
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn spatial_cycle_count_matches_engine_closed_form() {
+        let mut rng = XorShift::new(31);
+        let geom = PcuGeometry::synthesis();
+        let pcu = Pcu::hs_scan_mode(geom);
+        let prog = hs_scan_program(8);
+        let inputs = rand_batch(&mut rng, 5, 8);
+        let mut dbg = DebugSession::new(pcu, &prog, inputs.clone());
+        assert!(dbg.is_spatial());
+        while !dbg.is_done() {
+            dbg.step();
+        }
+        let (want_out, want_stats) = pcu.run(&prog, &inputs);
+        assert_eq!(dbg.outputs(), &want_out[..]);
+        assert_eq!(dbg.stats().unwrap(), want_stats);
+        assert_eq!(dbg.cycle(), 5 + 6 - 1);
+    }
+
+    #[test]
+    fn serialized_cycle_count_matches_engine_closed_form() {
+        let mut rng = XorShift::new(32);
+        let geom = PcuGeometry::synthesis();
+        let pcu = Pcu::baseline(geom);
+        let prog = hs_scan_program(8); // needs HS fabric → serializes
+        let inputs = rand_batch(&mut rng, 3, 8);
+        let mut dbg = DebugSession::new(pcu, &prog, inputs.clone());
+        assert!(!dbg.is_spatial());
+        while !dbg.is_done() {
+            dbg.step();
+        }
+        let (want_out, want_stats) = pcu.run(&prog, &inputs);
+        assert_eq!(dbg.outputs(), &want_out[..]);
+        assert_eq!(dbg.stats().unwrap(), want_stats);
+        assert_eq!(dbg.cycle(), 3 * 3 + (6 - 1) * 3);
+    }
+
+    #[test]
+    fn stage_breakpoint_fires_when_level_first_computes() {
+        let mut rng = XorShift::new(33);
+        let pcu = Pcu::fft_mode(PcuGeometry::table1());
+        let h = (0..32).map(|_| C64::new(rng.uniform(-1.0, 1.0), 0.0)).collect::<Vec<_>>();
+        let prog = fused_conv_program(32, &h);
+        let inputs = rand_batch(&mut rng, 4, 32);
+        let mut dbg = DebugSession::new(pcu, &prog, inputs);
+        let id = dbg.break_on_label("filter").expect("fused conv has a filter stage");
+        // filter is level 5 at 32 lanes: vector 0 computes it when it
+        // reaches stage 5, i.e. at cycle 6.
+        match dbg.run() {
+            RunOutcome::Break(hit) => {
+                assert_eq!(hit.id, id);
+                assert_eq!(hit.cycle, 6);
+                assert_eq!(hit.stage, Some(5));
+                assert_eq!(hit.vector, Some(0));
+            }
+            other => panic!("expected break, got {other:?}"),
+        }
+        // While vector 0 sits in the filter stage, vectors 1..5 are in the
+        // dif stages generating cross-lane traffic.
+        let snap = dbg.snapshot();
+        assert!(!snap.noc.is_empty(), "dif stages must show NoC traffic");
+        // Resuming fires again for vector 1, one cycle later.
+        match dbg.run() {
+            RunOutcome::Break(hit) => {
+                assert_eq!(hit.cycle, 7);
+                assert_eq!(hit.vector, Some(1));
+            }
+            other => panic!("expected second break, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cycle_breakpoint_and_run_to() {
+        let mut rng = XorShift::new(34);
+        let pcu = Pcu::hs_scan_mode(PcuGeometry::synthesis());
+        let prog = hs_scan_program(8);
+        let inputs = rand_batch(&mut rng, 6, 8);
+        let mut dbg = DebugSession::new(pcu, &prog, inputs);
+        assert_eq!(dbg.run_to(4), RunOutcome::AtCycle(4));
+        assert_eq!(dbg.cycle(), 4);
+        let id = dbg.break_on_cycle(7);
+        match dbg.run() {
+            RunOutcome::Break(hit) => {
+                assert_eq!((hit.id, hit.cycle), (id, 7));
+            }
+            other => panic!("expected break, got {other:?}"),
+        }
+        assert_eq!(dbg.run(), RunOutcome::Done);
+        assert!(dbg.is_done());
+    }
+
+    #[test]
+    fn resume_after_break_equals_uninterrupted_run() {
+        let mut rng = XorShift::new(35);
+        for (pcu, label) in [
+            (Pcu::hs_scan_mode(PcuGeometry::synthesis()), "spatial"),
+            (Pcu::baseline(PcuGeometry::synthesis()), "serialized"),
+        ] {
+            let prog = hs_scan_program(8);
+            let inputs = rand_batch(&mut rng, 7, 8);
+            let mut interrupted = DebugSession::new(pcu, &prog, inputs.clone());
+            interrupted.break_on_stage(1);
+            let mut breaks = 0usize;
+            loop {
+                match interrupted.run() {
+                    RunOutcome::Break(_) => breaks += 1,
+                    RunOutcome::Done => break,
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+            assert!(breaks > 0, "{label}: stage breakpoint never fired");
+            let (want_out, want_stats) = pcu.run(&prog, &inputs);
+            assert_eq!(interrupted.outputs(), &want_out[..], "{label}");
+            assert_eq!(interrupted.stats().unwrap(), want_stats, "{label}");
+        }
+    }
+
+    #[test]
+    fn predicate_breakpoint_sees_snapshots() {
+        let mut rng = XorShift::new(36);
+        let pcu = Pcu::hs_scan_mode(PcuGeometry::synthesis());
+        let prog = hs_scan_program(8);
+        let inputs = rand_batch(&mut rng, 4, 8);
+        let mut dbg = DebugSession::new(pcu, &prog, inputs);
+        dbg.break_when(|s| s.emitted >= 2);
+        match dbg.run() {
+            RunOutcome::Break(hit) => {
+                // Vector 1 exits at cycle stages + 1 = 7.
+                assert_eq!(hit.cycle, 7);
+            }
+            other => panic!("expected break, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn snapshot_json_round_trip() {
+        let mut rng = XorShift::new(37);
+        let pcu = Pcu::hs_scan_mode(PcuGeometry::synthesis());
+        let prog = hs_scan_program(8);
+        let inputs = rand_batch(&mut rng, 4, 8);
+        let mut dbg = DebugSession::new(pcu, &prog, inputs);
+        dbg.run_to(3);
+        let snap = dbg.snapshot();
+        assert!(!snap.noc.is_empty());
+        let doc = snap.to_json();
+        let parsed = Json::parse(&doc).unwrap_or_else(|e| panic!("emitted invalid JSON: {e}"));
+        let back = Snapshot::from_json(&parsed).expect("round-trip failed");
+        assert_eq!(back, snap, "snapshot must survive the JSON round-trip exactly");
+    }
+
+    #[test]
+    fn render_mentions_stages_and_noc() {
+        let mut rng = XorShift::new(38);
+        let pcu = Pcu::hs_scan_mode(PcuGeometry::synthesis());
+        let prog = hs_scan_program(8);
+        let inputs = rand_batch(&mut rng, 2, 8);
+        let mut dbg = DebugSession::new(pcu, &prog, inputs);
+        dbg.run_to(2);
+        let text = dbg.snapshot().render();
+        assert!(text.contains("cycle 2"));
+        assert!(text.contains("shift0"), "labeled stage missing from dump:\n{text}");
+        assert!(text.contains("noc:"));
+    }
+}

@@ -1,0 +1,470 @@
+//! Declarative authoring of PCU programs: [`ProgramBuilder`], the per-lane
+//! op constructors in [`ops`], and the [`define_pcu_program!`](crate::define_pcu_program)
+//! macro.
+//!
+//! Hand-assembling a [`Program`] means nested loops pushing [`Level`]s of
+//! [`Op`]s — workable for five butterfly levels, painful for the 11-level
+//! fused convolution, and silent about route mistakes until a `mappable`
+//! call at *map time*. The DSL moves both costs to authoring time, in the
+//! spirit of `y86-pipe-rs`'s `define_stages!` idiom (see SNIPPETS.md):
+//!
+//! * a program is a list of **named stages** (`dif0…`, `filter`, `idit0…`),
+//!   each an op expression over the lane index — single stages or indexed
+//!   stage families (`stage bfly[b in 0..n] = |i| …`);
+//! * **constant folding** happens in `let` clauses evaluated once at
+//!   construction (twiddle tables, frequency-domain filter taps), not per
+//!   lane or per run;
+//! * every cross-lane edge is checked against [`topology::allows`] when the
+//!   builder finishes: an illegal route is a [`DslError::IllegalRoute`]
+//!   *naming the stage*, instead of a serialized-fallback surprise (or a
+//!   bare `MapError::IllegalEdge`) when the program is later mapped.
+//!
+//! **Route-check-at-construction is equivalent to the map-time check.**
+//! [`topology::allows`] consults the geometry only for lane/boundary bounds
+//! and `log₂(lanes)`; given the same lane count it answers identically for
+//! every PCU with `stages ≥ levels`. So a program that passes
+//! [`ProgramBuilder::finish`] can only fail `Program::validate_spatial` for
+//! the honest capacity reasons — `TooDeep`, `WidthMismatch`,
+//! `ModeUnavailable` — never for a miswired edge. Programs with no
+//! cross-lane traffic (e.g. `twiddle_program`) skip the geometry entirely
+//! and may have any width, matching the engine's behaviour.
+
+use crate::arch::{PcuGeometry, PcuMode};
+use crate::pcusim::program::{Level, Op, Program};
+use crate::pcusim::topology;
+use std::fmt;
+
+/// Concise per-lane [`Op`] constructors for DSL stage bodies. One short
+/// function per FU configuration keeps `define_pcu_program!` bodies close
+/// to the paper's dataflow figures (`mac(i + half, w)` reads like Fig. 5).
+pub mod ops {
+    use super::Op;
+    use crate::util::C64;
+
+    /// `out = a` — forward the lane value unchanged.
+    pub fn pass() -> Op {
+        Op::Pass
+    }
+
+    /// `out = c` — load a constant.
+    pub fn cnst(c: C64) -> Op {
+        Op::Const(c)
+    }
+
+    /// `out = a + b` where `b` is lane `src`'s previous-level value.
+    pub fn add(src: usize) -> Op {
+        Op::Add { src }
+    }
+
+    /// `out = a − b`.
+    pub fn sub(src: usize) -> Op {
+        Op::Sub { src }
+    }
+
+    /// `out = a · c`.
+    pub fn mul(c: C64) -> Op {
+        Op::MulConst(c)
+    }
+
+    /// `out = a + c·b` — the MAC butterfly workhorse.
+    pub fn mac(src: usize, c: C64) -> Op {
+        Op::Mac { src, c }
+    }
+
+    /// `out = c·a + b` — the mirrored MAC (butterfly subtract side).
+    pub fn mac_self(src: usize, c: C64) -> Op {
+        Op::MacSelf { src, c }
+    }
+
+    /// `out = c·(b − a)` — the DIF lower-lane subtract-then-twiddle.
+    pub fn twiddle_sub(src: usize, c: C64) -> Op {
+        Op::TwiddleSub { src, c }
+    }
+
+    /// `out = b` — take the cross-lane value (down-sweep swap).
+    pub fn take(src: usize) -> Op {
+        Op::Take { src }
+    }
+}
+
+/// Why a DSL program failed construction. Unlike `MapError` these point at
+/// the *authoring* mistake by stage name, before any PCU is in sight.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DslError {
+    /// The program declared no stages.
+    Empty { program: String },
+    /// A stage's op count differs from the declared lane width.
+    RaggedStage { program: String, stage: String, got: usize, want: usize },
+    /// A cross-lane op reads a source the mode's fabric does not wire at
+    /// this stage boundary (or the source lane is out of range).
+    IllegalRoute {
+        program: String,
+        stage: String,
+        level: usize,
+        dest: usize,
+        src: usize,
+        mode: PcuMode,
+    },
+    /// Cross-lane traffic requires a power-of-two lane count (the butterfly
+    /// and scan fabrics are defined on power-of-two widths).
+    WidthNotPowerOfTwo { program: String, width: usize },
+}
+
+impl fmt::Display for DslError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DslError::Empty { program } => write!(f, "program `{program}` has no stages"),
+            DslError::RaggedStage { program, stage, got, want } => write!(
+                f,
+                "program `{program}` stage `{stage}`: {got} lane ops, expected {want}"
+            ),
+            DslError::IllegalRoute { program, stage, level, dest, src, mode } => write!(
+                f,
+                "program `{program}` stage `{stage}` (level {level}): lane {dest} reads \
+                 lane {src}, not wired by the {mode} fabric at this boundary"
+            ),
+            DslError::WidthNotPowerOfTwo { program, width } => write!(
+                f,
+                "program `{program}`: cross-lane ops need a power-of-two lane count, got {width}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for DslError {}
+
+/// Incremental [`Program`] constructor with route validation at
+/// [`finish`](ProgramBuilder::finish) time. The `define_pcu_program!` macro
+/// expands to calls on this builder; it is equally usable by hand (the
+/// property harness generates random programs through it).
+#[derive(Debug, Clone)]
+pub struct ProgramBuilder {
+    name: String,
+    mode: PcuMode,
+    width: usize,
+    levels: Vec<Level>,
+    labels: Vec<String>,
+}
+
+impl ProgramBuilder {
+    /// Start a program named `name` in interconnect `mode` over `width`
+    /// lanes.
+    pub fn new(name: impl Into<String>, mode: PcuMode, width: usize) -> Self {
+        Self { name: name.into(), mode, width, levels: Vec::new(), labels: Vec::new() }
+    }
+
+    /// Append one named stage (one dataflow level) with `ops[lane]` per
+    /// lane. Validation is deferred to [`finish`](ProgramBuilder::finish) so
+    /// errors can be reported with full program context.
+    pub fn stage(&mut self, label: impl Into<String>, ops: Vec<Op>) -> &mut Self {
+        self.levels.push(Level::new(ops));
+        self.labels.push(label.into());
+        self
+    }
+
+    /// Number of stages appended so far.
+    pub fn depth(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Validate and build the [`Program`]: width agreement per stage, and
+    /// every cross-lane edge admitted by [`topology::allows`] for this mode
+    /// at its stage boundary (the construction-time half of
+    /// `Program::validate_spatial` — see the module docs for why the two
+    /// agree).
+    pub fn finish(self) -> Result<Program, DslError> {
+        let Self { name, mode, width, levels, labels } = self;
+        if levels.is_empty() {
+            return Err(DslError::Empty { program: name });
+        }
+        for (li, level) in levels.iter().enumerate() {
+            if level.ops.len() != width {
+                return Err(DslError::RaggedStage {
+                    program: name,
+                    stage: labels[li].clone(),
+                    got: level.ops.len(),
+                    want: width,
+                });
+            }
+        }
+        let has_cross =
+            levels.iter().any(|l| l.ops.iter().any(|o| o.cross_src().is_some()));
+        if has_cross {
+            if !width.is_power_of_two() {
+                return Err(DslError::WidthNotPowerOfTwo { program: name, width });
+            }
+            // The geometry only supplies bounds to `allows`: `stages` is the
+            // program's own depth (boundary i < depth always holds) and
+            // `levels()` is log₂(width), identical on any same-width PCU.
+            let geom = PcuGeometry::new(width, levels.len());
+            for (li, level) in levels.iter().enumerate() {
+                for (dest, op) in level.ops.iter().enumerate() {
+                    if let Some(src) = op.cross_src() {
+                        if src >= width || !topology::allows(mode, geom, li, dest, src) {
+                            return Err(DslError::IllegalRoute {
+                                program: name,
+                                stage: labels[li].clone(),
+                                level: li,
+                                dest,
+                                src,
+                                mode,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        Ok(Program::new(&name, mode, levels).with_labels(labels))
+    }
+}
+
+/// Declare a PCU program as named stages — the `define_stages!`-style DSL
+/// over [`ProgramBuilder`].
+///
+/// Grammar (one function per invocation):
+///
+/// ```text
+/// define_pcu_program! {
+///     /// Doc comment for the generated function.
+///     pub fn my_program(arg: Ty, …) {
+///         name: <expr: String or &str>,
+///         mode: <PcuMode variant ident>,
+///         width: <expr: usize>,
+///         let folded = <expr>;                  // constant folding, 0+ times
+///         stage single = |lane| <op expr>;      // one level
+///         stage fam[i in <range>] = |lane| <op expr>;  // one level per i
+///     }
+/// }
+/// ```
+///
+/// Expands to `$vis fn my_program(…) -> Program` that builds the stages in
+/// order, labels them (`single`, `fam0`, `fam1`, …), and validates every
+/// cross-lane route against `topology::allows` at construction, panicking
+/// with the offending program/stage on a [`DslError`](crate::pcusim::dsl::DslError)
+/// (authoring bugs are programmer errors, caught by the differential tests).
+///
+/// ```
+/// use ssm_rdu::define_pcu_program;
+/// use ssm_rdu::pcusim::dsl::ops;
+///
+/// define_pcu_program! {
+///     /// Inclusive Hillis–Steele scan over `lanes` elements.
+///     fn my_scan(lanes: usize) {
+///         name: format!("my-scan{lanes}"),
+///         mode: HsScan,
+///         width: lanes,
+///         let n = lanes.trailing_zeros() as usize;
+///         stage shift[b in 0..n] = |i| {
+///             let stride = 1 << b;
+///             if i >= stride { ops::add(i - stride) } else { ops::pass() }
+///         };
+///     }
+/// }
+///
+/// let p = my_scan(8);
+/// assert_eq!(p.levels.len(), 3);
+/// assert_eq!(p.stage_label(1), "shift1");
+/// ```
+#[macro_export]
+macro_rules! define_pcu_program {
+    (
+        $(#[$meta:meta])*
+        $vis:vis fn $fname:ident ( $($arg:ident : $argty:ty),* $(,)? ) {
+            name: $name:expr,
+            mode: $mode:ident,
+            width: $width:expr,
+            $( let $cname:ident = $cval:expr; )*
+            $( stage $sname:ident $( [ $ivar:ident in $irange:expr ] )? = |$lane:ident| $body:expr; )+
+        }
+    ) => {
+        $(#[$meta])*
+        $vis fn $fname ( $($arg : $argty),* ) -> $crate::pcusim::Program {
+            let __width: usize = $width;
+            let mut __builder = $crate::pcusim::dsl::ProgramBuilder::new(
+                $name,
+                $crate::arch::PcuMode::$mode,
+                __width,
+            );
+            $( let $cname = $cval; )*
+            $(
+                $crate::define_pcu_program!(
+                    @stage __builder, __width, $sname $( [ $ivar in $irange ] )?, |$lane| $body
+                );
+            )+
+            match __builder.finish() {
+                Ok(p) => p,
+                Err(e) => panic!("define_pcu_program!({}): {e}", stringify!($fname)),
+            }
+        }
+    };
+    (@stage $b:ident, $w:ident, $sname:ident, $mk:expr) => {
+        $b.stage(stringify!($sname), (0..$w).map($mk).collect());
+    };
+    (@stage $b:ident, $w:ident, $sname:ident [ $ivar:ident in $irange:expr ], $mk:expr) => {
+        for $ivar in $irange {
+            $b.stage(
+                format!("{}{}", stringify!($sname), $ivar),
+                (0..$w).map($mk).collect(),
+            );
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::C64;
+
+    #[test]
+    fn builder_accepts_legal_hs_chain() {
+        let mut b = ProgramBuilder::new("hs4", PcuMode::HsScan, 4);
+        b.stage("s0", vec![ops::pass(), ops::add(0), ops::add(1), ops::add(2)]);
+        b.stage("s1", vec![ops::pass(), ops::pass(), ops::add(0), ops::add(1)]);
+        let p = b.finish().unwrap();
+        assert_eq!(p.levels.len(), 2);
+        assert_eq!(p.stage_label(0), "s0");
+        assert_eq!(p.width(), 4);
+    }
+
+    #[test]
+    fn builder_rejects_empty() {
+        let b = ProgramBuilder::new("none", PcuMode::ElementWise, 4);
+        assert_eq!(b.finish(), Err(DslError::Empty { program: "none".into() }));
+    }
+
+    #[test]
+    fn builder_rejects_ragged_stage_by_name() {
+        let mut b = ProgramBuilder::new("rag", PcuMode::ElementWise, 4);
+        b.stage("ok", vec![ops::pass(); 4]);
+        b.stage("bad", vec![ops::pass(); 3]);
+        assert_eq!(
+            b.finish(),
+            Err(DslError::RaggedStage {
+                program: "rag".into(),
+                stage: "bad".into(),
+                got: 3,
+                want: 4
+            })
+        );
+    }
+
+    #[test]
+    fn builder_rejects_route_not_in_fabric() {
+        // Element-wise mode wires no cross-lane edges at all.
+        let mut b = ProgramBuilder::new("ew", PcuMode::ElementWise, 4);
+        let mut l = vec![ops::pass(); 4];
+        l[1] = ops::add(0);
+        b.stage("cross", l);
+        match b.finish() {
+            Err(DslError::IllegalRoute { stage, level, dest, src, mode, .. }) => {
+                assert_eq!((stage.as_str(), level, dest, src), ("cross", 0, 1, 0));
+                assert_eq!(mode, PcuMode::ElementWise);
+            }
+            other => panic!("expected IllegalRoute, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn builder_rejects_wrong_boundary_for_scan_fabric() {
+        // HS stride 1 belongs at boundary 0; declaring it at boundary 1 is
+        // the classic off-by-one the construction check exists to catch.
+        let mut b = ProgramBuilder::new("hs-off", PcuMode::HsScan, 4);
+        b.stage("s0", vec![ops::pass(); 4]);
+        let mut l = vec![ops::pass(); 4];
+        l[1] = ops::add(0); // stride 1 at boundary 1 — fabric has stride 2 here
+        b.stage("s1", l);
+        assert!(matches!(b.finish(), Err(DslError::IllegalRoute { level: 1, .. })));
+    }
+
+    #[test]
+    fn builder_rejects_out_of_range_src() {
+        let mut b = ProgramBuilder::new("oob", PcuMode::Fft, 4);
+        let mut l = vec![ops::pass(); 4];
+        l[0] = ops::mac(4, C64::ONE); // src == width
+        b.stage("s0", l);
+        assert!(matches!(b.finish(), Err(DslError::IllegalRoute { src: 4, .. })));
+    }
+
+    #[test]
+    fn builder_rejects_non_pow2_width_with_cross_traffic() {
+        let mut b = ProgramBuilder::new("odd", PcuMode::Fft, 3);
+        let mut l = vec![ops::pass(); 3];
+        l[0] = ops::add(1);
+        b.stage("s0", l);
+        assert_eq!(
+            b.finish(),
+            Err(DslError::WidthNotPowerOfTwo { program: "odd".into(), width: 3 })
+        );
+    }
+
+    #[test]
+    fn builder_allows_any_width_without_cross_traffic() {
+        // The twiddle-scaling case: element-wise, arbitrary length.
+        let mut b = ProgramBuilder::new("tw", PcuMode::ElementWise, 5);
+        b.stage("scale", (0..5).map(|i| ops::mul(C64::real(i as f64))).collect());
+        let p = b.finish().unwrap();
+        assert_eq!(p.width(), 5);
+    }
+
+    #[test]
+    fn dsl_errors_display_name_the_stage() {
+        let e = DslError::IllegalRoute {
+            program: "p".into(),
+            stage: "filter".into(),
+            level: 3,
+            dest: 1,
+            src: 2,
+            mode: PcuMode::Fft,
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("filter") && msg.contains("level 3"), "{msg}");
+    }
+
+    // Macro smoke tests: families, constant folding, labels, and the
+    // construction-time panic (the exemplar programs in `programs.rs` are
+    // covered by the differential wall in tests/integration_pcusim_dsl.rs).
+    crate::define_pcu_program! {
+        /// Two-stage FFT-mode test pipeline with folded constants.
+        fn macro_demo(lanes: usize, gain: f64) {
+            name: format!("demo{lanes}"),
+            mode: Fft,
+            width: lanes,
+            let g = C64::real(gain);
+            let n = lanes.trailing_zeros() as usize;
+            stage bfly[b in 0..n] = |i| ops::mac(i ^ (1 << b), g);
+            stage scale = |i| {
+                let _ = i;
+                ops::mul(g)
+            };
+        }
+    }
+
+    #[test]
+    fn macro_builds_labeled_families() {
+        let p = macro_demo(8, 2.0);
+        assert_eq!(p.name, "demo8");
+        assert_eq!(p.levels.len(), 4);
+        assert_eq!(p.stage_label(0), "bfly0");
+        assert_eq!(p.stage_label(2), "bfly2");
+        assert_eq!(p.stage_label(3), "scale");
+        // Constant folding: the gain landed in every MAC constant.
+        assert!(matches!(p.levels[0].ops[0], Op::Mac { src: 1, c } if c == C64::real(2.0)));
+    }
+
+    crate::define_pcu_program! {
+        /// Illegal on purpose: butterfly edges under element-wise mode.
+        fn macro_bad(lanes: usize) {
+            name: "bad",
+            mode: ElementWise,
+            width: lanes,
+            stage oops = |i| ops::add(i ^ 1);
+        }
+    }
+
+    #[test]
+    fn macro_route_violation_panics_at_construction_with_fn_name() {
+        let err = std::panic::catch_unwind(|| macro_bad(4)).unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("macro_bad") && msg.contains("oops"), "{msg}");
+    }
+}

@@ -86,13 +86,29 @@ impl Pcu {
         Self { geom, extensions: &[PcuMode::BScan] }
     }
 
+    /// PCU carrying whichever extension fabric `mode` names — the baseline
+    /// PCU for the three baseline modes. This is how mode-generic callers
+    /// (the `debug` CLI, the property harness) pick the fabric a program's
+    /// `mode` field asks for without a six-way match.
+    pub fn with_extension(geom: PcuGeometry, mode: PcuMode) -> Self {
+        match mode {
+            PcuMode::Fft => Self::fft_mode(geom),
+            PcuMode::HsScan => Self::hs_scan_mode(geom),
+            PcuMode::BScan => Self::b_scan_mode(geom),
+            PcuMode::ElementWise | PcuMode::Systolic | PcuMode::Reduction => Self::baseline(geom),
+        }
+    }
+
     /// Does this PCU support `mode`?
     pub fn supports(&self, mode: PcuMode) -> bool {
         !mode.is_extension() || self.extensions.contains(&mode)
     }
 
     /// Functionally evaluate one level against the previous level's outputs.
-    fn eval_level(level: &Level, prev: &[C64]) -> Vec<C64> {
+    /// `pub(crate)` so the single-step debugger (`pcusim::debug`) advances
+    /// pipeline registers through the *same* op semantics the batch engine
+    /// uses — one implementation, two drivers.
+    pub(crate) fn eval_level(level: &Level, prev: &[C64]) -> Vec<C64> {
         level
             .ops
             .iter()
@@ -304,6 +320,19 @@ mod tests {
         assert_eq!(ys[0][3], 4.0 * 6.0);
         let u = stats.utilization();
         assert!(u > 0.9, "u={u}"); // fill/drain keeps it just under 1.0
+    }
+
+    #[test]
+    fn with_extension_picks_matching_fabric() {
+        for mode in PcuMode::EXTENSIONS {
+            let pcu = Pcu::with_extension(geom(), mode);
+            assert!(pcu.supports(mode), "{mode}");
+        }
+        for mode in PcuMode::BASELINE {
+            let pcu = Pcu::with_extension(geom(), mode);
+            assert!(pcu.extensions.is_empty(), "{mode}");
+            assert!(pcu.supports(mode), "{mode}: baseline modes always supported");
+        }
     }
 
     #[test]

@@ -1,0 +1,190 @@
+//! Hand-assembled PCU program constructors, kept verbatim as **differential
+//! oracles** for the `define_pcu_program!` migration.
+//!
+//! Every builder in [`crate::pcusim::programs`] was originally written as
+//! the explicit level-pushing loops below. When the constructors moved to
+//! the DSL, the originals moved here unchanged (modulo `legacy_` name
+//! prefixes), so the migration is *provable* rather than trusted:
+//! `tests/integration_pcusim_dsl.rs` asserts, for every program and a grid
+//! of lane counts and batch lengths, that the macro-built program has
+//! structurally identical levels, byte-identical outputs, and identical
+//! `ExecStats` to its oracle here. The twiddle expressions are kept
+//! *textually* identical to the DSL helpers so the comparison is exact
+//! float equality, not epsilon closeness.
+//!
+//! This module is test collateral, not API: nothing in the crate calls it
+//! outside the differential tests, and it can be deleted once a release
+//! has shipped with the wall green. Until then it also documents what the
+//! DSL replaced.
+
+use crate::arch::PcuMode;
+use crate::pcusim::program::{Level, Op, Program};
+use crate::pcusim::programs::bit_reverse;
+use crate::util::C64;
+use std::f64::consts::PI;
+
+/// Decimation-in-time butterfly levels over `lanes` points with twiddles
+/// `e^{sign·2πi·j/len}` — the original shared helper of the DIT builders.
+#[allow(clippy::needless_range_loop)] // lanes indexed by butterfly position math
+fn dit_levels(lanes: usize, sign: f64) -> Vec<Level> {
+    assert!(lanes.is_power_of_two() && lanes >= 2);
+    let levels_n = lanes.trailing_zeros() as usize;
+    let mut levels = Vec::with_capacity(levels_n);
+    for b in 0..levels_n {
+        let half = 1 << b;
+        let len = half << 1;
+        let mut ops = vec![Op::Pass; lanes];
+        for i in 0..lanes {
+            let j = i % len;
+            if j < half {
+                // x[i] ← x[i] + w_j · x[i+half]
+                let w = C64::cis(sign * 2.0 * PI * j as f64 / len as f64);
+                ops[i] = Op::Mac { src: i + half, c: w };
+            } else {
+                // x[i] ← x[i−half] − w_{j−half} · x[i]  =  (−w)·a + b
+                let w = C64::cis(sign * 2.0 * PI * (j - half) as f64 / len as f64);
+                ops[i] = Op::MacSelf { src: i - half, c: C64::real(-1.0) * w };
+            }
+        }
+        levels.push(Level::new(ops));
+    }
+    levels
+}
+
+/// Oracle for `fft_program`.
+pub fn legacy_fft_program(lanes: usize) -> Program {
+    Program::new(&format!("fft{lanes}"), PcuMode::Fft, dit_levels(lanes, -1.0))
+}
+
+/// Oracle for `idit_fft_program`.
+pub fn legacy_idit_fft_program(lanes: usize) -> Program {
+    Program::new(&format!("idit-fft{lanes}"), PcuMode::Fft, dit_levels(lanes, 1.0))
+}
+
+/// Oracle for `dif_fft_program`.
+#[allow(clippy::needless_range_loop)] // lanes indexed by butterfly position math
+pub fn legacy_dif_fft_program(lanes: usize) -> Program {
+    assert!(lanes.is_power_of_two() && lanes >= 2);
+    let levels_n = lanes.trailing_zeros() as usize;
+    let mut levels = Vec::with_capacity(levels_n);
+    for step in 0..levels_n {
+        let half = lanes >> (step + 1);
+        let len = half << 1;
+        let mut ops = vec![Op::Pass; lanes];
+        for i in 0..lanes {
+            let j = i % len;
+            if j < half {
+                // Upper lane: u ← u + v.
+                ops[i] = Op::Add { src: i + half };
+            } else {
+                // Lower lane: v ← w_{j−half} · (u − v).
+                let w = C64::cis(-2.0 * PI * (j - half) as f64 / len as f64);
+                ops[i] = Op::TwiddleSub { src: i - half, c: w };
+            }
+        }
+        levels.push(Level::new(ops));
+    }
+    Program::new(&format!("dif-fft{lanes}"), PcuMode::Fft, levels)
+}
+
+/// Oracle for `freq_filter_program`.
+pub fn legacy_freq_filter_program(h: &[C64]) -> Program {
+    let n = h.len();
+    assert!(n.is_power_of_two() && n >= 2);
+    let hf = crate::fft::fft(h);
+    let ops = bit_reverse(&hf).iter().map(|z| Op::MulConst(z.scale(1.0 / n as f64))).collect();
+    Program::new(&format!("freq-filter{n}"), PcuMode::ElementWise, vec![Level::new(ops)])
+}
+
+/// Oracle for `fused_conv_program`.
+pub fn legacy_fused_conv_program(lanes: usize, h: &[C64]) -> Program {
+    assert_eq!(h.len(), lanes, "filter length must match lane count");
+    let mut levels = legacy_dif_fft_program(lanes).levels;
+    levels.extend(legacy_freq_filter_program(h).levels);
+    levels.extend(dit_levels(lanes, 1.0));
+    Program::new(&format!("fused-conv{lanes}"), PcuMode::Fft, levels)
+}
+
+/// Oracle for `unfused_conv_programs`.
+pub fn legacy_unfused_conv_programs(lanes: usize, h: &[C64]) -> [Program; 3] {
+    assert_eq!(h.len(), lanes, "filter length must match lane count");
+    [legacy_dif_fft_program(lanes), legacy_freq_filter_program(h), legacy_idit_fft_program(lanes)]
+}
+
+/// Oracle for `hs_scan_program`.
+#[allow(clippy::needless_range_loop)] // lanes indexed by shift-distance math
+pub fn legacy_hs_scan_program(lanes: usize) -> Program {
+    assert!(lanes.is_power_of_two() && lanes >= 2);
+    let levels_n = lanes.trailing_zeros() as usize;
+    let mut levels = Vec::with_capacity(levels_n);
+    for b in 0..levels_n {
+        let stride = 1 << b;
+        let mut ops = vec![Op::Pass; lanes];
+        for i in stride..lanes {
+            ops[i] = Op::Add { src: i - stride };
+        }
+        levels.push(Level::new(ops));
+    }
+    Program::new(&format!("hs-scan{lanes}"), PcuMode::HsScan, levels)
+}
+
+/// Oracle for `b_scan_program`.
+pub fn legacy_b_scan_program(lanes: usize) -> Program {
+    assert!(lanes.is_power_of_two() && lanes >= 2);
+    let levels_n = lanes.trailing_zeros() as usize;
+    let mut levels = Vec::with_capacity(2 * levels_n);
+    // Up-sweep: at stride 2^b, tree nodes accumulate their left sibling.
+    for b in 0..levels_n {
+        let stride = 1 << b;
+        let group = stride << 1;
+        let mut ops = vec![Op::Pass; lanes];
+        for i in ((group - 1)..lanes).step_by(group) {
+            ops[i] = Op::Add { src: i - stride };
+        }
+        levels.push(Level::new(ops));
+    }
+    // Down-sweep. First level folds the root-zeroing: after the up-sweep the
+    // root would be set to 0, so its left child receives Const(0) and the
+    // root receives the left child's value.
+    for (step, _) in (0..levels_n).enumerate() {
+        let stride = 1 << (levels_n - 1 - step);
+        let group = stride << 1;
+        let mut ops = vec![Op::Pass; lanes];
+        for i in ((group - 1)..lanes).step_by(group) {
+            if step == 0 {
+                // Root pair: left child ← 0, root ← left child.
+                ops[i - stride] = Op::Const(C64::ZERO);
+                ops[i] = Op::Take { src: i - stride };
+            } else {
+                // t = x[i−k]; x[i−k] = x[i]; x[i] = t + x[i].
+                ops[i - stride] = Op::Take { src: i };
+                ops[i] = Op::Add { src: i - stride };
+            }
+        }
+        levels.push(Level::new(ops));
+    }
+    Program::new(&format!("b-scan{lanes}"), PcuMode::BScan, levels)
+}
+
+/// Oracle for `reduction_program`.
+pub fn legacy_reduction_program(lanes: usize) -> Program {
+    assert!(lanes.is_power_of_two() && lanes >= 2);
+    let levels_n = lanes.trailing_zeros() as usize;
+    let mut levels = Vec::with_capacity(levels_n);
+    for b in 0..levels_n {
+        let stride = 1 << b;
+        let group = stride << 1;
+        let mut ops = vec![Op::Pass; lanes];
+        for i in (0..lanes).step_by(group) {
+            ops[i] = Op::Add { src: i + stride };
+        }
+        levels.push(Level::new(ops));
+    }
+    Program::new(&format!("reduce{lanes}"), PcuMode::Reduction, levels)
+}
+
+/// Oracle for `twiddle_program`.
+pub fn legacy_twiddle_program(factors: &[C64]) -> Program {
+    let ops = factors.iter().map(|&c| Op::MulConst(c)).collect();
+    Program::new("twiddle", PcuMode::ElementWise, vec![Level::new(ops)])
+}

@@ -9,13 +9,22 @@
 //! * [`topology`] — the interconnect fabrics of each [`crate::arch::PcuMode`]
 //!   and the added-route counts behind Table IV.
 //! * [`program`] — FU-level program IR + spatial-mapping validation.
+//! * [`dsl`] — the [`define_pcu_program!`](crate::define_pcu_program)
+//!   authoring macro and its [`dsl::ProgramBuilder`]: named stages, folded
+//!   constants, and cross-lane routes checked against [`topology::allows`]
+//!   at construction time rather than at map time.
 //! * [`programs`] — canonical FFT / HS-scan / B-scan / reduction programs,
-//!   verified against the [`crate::fft`] and [`crate::scan`] substrates,
-//!   plus the fused DIF→filter→DIT convolution pipeline
-//!   ([`programs::fused_conv_program`]) that grounds the mapper's fusion
-//!   pass: bit-identical to its three-launch unfused counterpart.
+//!   all DSL-authored, verified against the [`crate::fft`] and
+//!   [`crate::scan`] substrates, plus the fused DIF→filter→DIT convolution
+//!   pipeline ([`programs::fused_conv_program`]) that grounds the mapper's
+//!   fusion pass: bit-identical to its three-launch unfused counterpart.
+//! * [`legacy`] — the pre-DSL hand-assembled constructors, kept as
+//!   differential oracles for the migration tests.
 //! * [`engine`] — spatial vs serialized ("first stage only", §III-B)
 //!   execution with cycle and FU-utilization accounting.
+//! * [`debug`] — single-step debugger over the engine: pipeline-register
+//!   and NoC-traffic snapshots, stage/cycle/predicate breakpoints,
+//!   deterministic resume (`debug` CLI subcommand).
 //! * [`utilization`] — the measured steady-state factors DFModel consumes.
 //! * [`noc`] — chip-grid placement, hop counts, fill latency and link
 //!   bandwidth audit of mapped sections.
@@ -33,7 +42,10 @@
 //! from, so the simulator is the ground truth under the performance model,
 //! which in turn prices the multi-chip dataflows of [`crate::shard`].
 
+pub mod debug;
+pub mod dsl;
 pub mod engine;
+pub mod legacy;
 pub mod noc;
 pub mod program;
 pub mod programs;
@@ -41,11 +53,14 @@ pub mod timeline;
 pub mod topology;
 pub mod utilization;
 
+pub use debug::{DebugSession, RunOutcome, Snapshot};
+pub use dsl::{DslError, ProgramBuilder};
 pub use engine::{ExecStats, Pcu};
 pub use program::{Level, MapError, Op, Program};
 pub use programs::{
-    b_scan_program, bit_reverse, dif_fft_program, fft_program, freq_filter_program,
-    fused_conv_program, hs_scan_program, idit_fft_program, unfused_conv_programs,
+    b_scan_program, bit_reverse, demo_program, dif_fft_program, fft_program,
+    freq_filter_program, fused_conv_program, hs_scan_program, idit_fft_program,
+    reduction_program, twiddle_program, unfused_conv_programs,
 };
 pub use timeline::{stage_timeline, timeline_cycles};
 pub use utilization::Measurement;

@@ -120,6 +120,10 @@ pub struct Program {
     pub levels: Vec<Level>,
     /// Human-readable kernel name for reports.
     pub name: String,
+    /// Per-level stage labels (`dif0`, `filter`, …). Populated by the
+    /// `define_pcu_program!` DSL; empty for hand-assembled programs, in
+    /// which case [`Program::stage_label`] falls back to `L{i}`.
+    pub labels: Vec<String>,
 }
 
 /// Why a program cannot be spatially mapped onto a PCU configuration.
@@ -161,7 +165,27 @@ impl Program {
             levels.iter().all(|l| l.ops.len() == width),
             "all levels of `{name}` must have equal width"
         );
-        Self { mode, levels, name: name.to_string() }
+        Self { mode, levels, name: name.to_string(), labels: Vec::new() }
+    }
+
+    /// Attach per-level stage labels (the DSL's named stages). Must supply
+    /// exactly one label per level.
+    pub fn with_labels(mut self, labels: Vec<String>) -> Self {
+        assert_eq!(
+            labels.len(),
+            self.levels.len(),
+            "`{}`: {} labels for {} levels",
+            self.name,
+            labels.len(),
+            self.levels.len()
+        );
+        self.labels = labels;
+        self
+    }
+
+    /// Label of level `i`: the DSL stage name when present, `L{i}` otherwise.
+    pub fn stage_label(&self, i: usize) -> String {
+        self.labels.get(i).cloned().unwrap_or_else(|| format!("L{i}"))
     }
 
     /// Lane width of the program.
@@ -284,6 +308,23 @@ mod tests {
             Err(MapError::ModeUnavailable { required: PcuMode::Fft })
         );
         assert_eq!(p.validate_spatial(geom(), true), Ok(()));
+    }
+
+    #[test]
+    fn stage_labels_and_fallback() {
+        let p = Program::new("t", PcuMode::ElementWise, vec![Level::pass(4), Level::pass(4)]);
+        assert_eq!(p.stage_label(0), "L0");
+        let p = p.with_labels(vec!["warm".into(), "cool".into()]);
+        assert_eq!(p.stage_label(0), "warm");
+        assert_eq!(p.stage_label(1), "cool");
+        assert_eq!(p.stage_label(7), "L7", "out-of-range falls back");
+    }
+
+    #[test]
+    #[should_panic(expected = "labels for")]
+    fn label_count_mismatch_panics() {
+        Program::new("t", PcuMode::ElementWise, vec![Level::pass(4)])
+            .with_labels(vec!["a".into(), "b".into()]);
     }
 
     #[test]

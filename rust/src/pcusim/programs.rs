@@ -5,14 +5,25 @@
 //! fabric, so `Program::validate_spatial` succeeds on the extended PCU and
 //! fails (→ serialized fallback) on the baseline PCU.
 //!
+//! Every constructor is authored through the
+//! [`define_pcu_program!`](crate::define_pcu_program) DSL
+//! ([`crate::pcusim::dsl`]): named stages, per-lane op expressions, folded
+//! constants, and cross-lane routes checked against `topology::allows` at
+//! construction. The original hand-assembled loop builders live on in
+//! [`crate::pcusim::legacy`] as differential oracles —
+//! `tests/integration_pcusim_dsl.rs` proves each migration produces
+//! structurally identical levels, byte-identical outputs, and identical
+//! `ExecStats`.
+//!
 //! Functional correctness of every program is asserted against the
 //! [`crate::fft`] / [`crate::scan`] substrates in the tests below — the same
 //! oracles the Pallas kernels are tested against in `python/tests`, closing
 //! the cross-layer loop promised in DESIGN.md §7.
 
-use crate::arch::PcuMode;
-use crate::pcusim::program::{Level, Op, Program};
-use crate::util::C64;
+use crate::define_pcu_program;
+use crate::pcusim::dsl::ops;
+use crate::pcusim::program::{Op, Program};
+use crate::util::{C64, XorShift};
 use std::f64::consts::PI;
 
 /// Bit-reversal permutation of a power-of-two-length slice. On the RDU this
@@ -31,207 +42,279 @@ pub fn bit_reverse(x: &[C64]) -> Vec<C64> {
         .collect()
 }
 
-/// Decimation-in-time butterfly levels over `lanes` points with twiddles
-/// `e^{sign·2πi·j/len}`: `sign = −1` is the forward FFT, `sign = +1` the
-/// (unnormalized) inverse. Bit-reversed input → natural-order output.
-#[allow(clippy::needless_range_loop)] // lanes indexed by butterfly position math
-fn dit_levels(lanes: usize, sign: f64) -> Vec<Level> {
+/// `log₂(lanes)` with the power-of-two precondition every butterfly/scan
+/// program shares.
+fn log2_lanes(lanes: usize) -> usize {
     assert!(lanes.is_power_of_two() && lanes >= 2);
-    let levels_n = lanes.trailing_zeros() as usize;
-    let mut levels = Vec::with_capacity(levels_n);
-    for b in 0..levels_n {
-        let half = 1 << b;
-        let len = half << 1;
-        let mut ops = vec![Op::Pass; lanes];
-        for i in 0..lanes {
-            let j = i % len;
-            if j < half {
-                // x[i] ← x[i] + w_j · x[i+half]
-                let w = C64::cis(sign * 2.0 * PI * j as f64 / len as f64);
-                ops[i] = Op::Mac { src: i + half, c: w };
-            } else {
-                // x[i] ← x[i−half] − w_{j−half} · x[i]  =  (−w)·a + b
-                let w = C64::cis(sign * 2.0 * PI * (j - half) as f64 / len as f64);
-                ops[i] = Op::MacSelf { src: i - half, c: C64::real(-1.0) * w };
-            }
-        }
-        levels.push(Level::new(ops));
+    lanes.trailing_zeros() as usize
+}
+
+/// Per-lane decimation-in-time butterfly op at level `b` (stride `2^b`),
+/// twiddle sign `sign` (−1 forward, +1 inverse) — the stage body shared by
+/// [`fft_program`], [`idit_fft_program`] and [`fused_conv_program`]. The
+/// twiddle expressions are textually identical to the legacy oracles so the
+/// differential tests compare exact floats.
+fn dit_butterfly(b: usize, i: usize, sign: f64) -> Op {
+    let half = 1 << b;
+    let len = half << 1;
+    let j = i % len;
+    if j < half {
+        // x[i] ← x[i] + w_j · x[i+half]
+        let w = C64::cis(sign * 2.0 * PI * j as f64 / len as f64);
+        ops::mac(i + half, w)
+    } else {
+        // x[i] ← x[i−half] − w_{j−half} · x[i]  =  (−w)·a + b
+        let w = C64::cis(sign * 2.0 * PI * (j - half) as f64 / len as f64);
+        ops::mac_self(i - half, C64::real(-1.0) * w)
     }
-    levels
 }
 
-/// Radix-2 decimation-in-time FFT over `lanes` complex points, expecting
-/// bit-reversed input (see [`bit_reverse`]). Level *b* performs the
-/// stride-`2^b` butterflies: the pair-leader lane computes `a + w·b` (MAC)
-/// and the partner lane computes `a_partner − w·b_self` via the mirrored MAC
-/// — exactly the dataflow Fig. 5 unrolls across the pipeline.
-pub fn fft_program(lanes: usize) -> Program {
-    Program::new(&format!("fft{lanes}"), PcuMode::Fft, dit_levels(lanes, -1.0))
-}
-
-/// Unnormalized inverse DIT FFT: bit-reversed input → natural-order output,
-/// conjugate twiddles, **no** 1/N scaling (the fused convolution folds the
-/// 1/N into the frequency-domain filter constants — see
-/// [`freq_filter_program`]).
-pub fn idit_fft_program(lanes: usize) -> Program {
-    Program::new(&format!("idit-fft{lanes}"), PcuMode::Fft, dit_levels(lanes, 1.0))
-}
-
-/// Radix-2 decimation-in-frequency forward FFT: natural-order input →
-/// bit-reversed output. Level *s* runs the stride-`lanes/2^{s+1}`
-/// butterflies: the upper lane computes `a + b` (Add) and the lower lane
-/// `w·(a − b)` via [`Op::TwiddleSub`]. Paired with [`idit_fft_program`]
-/// this gives a transform→inverse chain with *no* reordering in between —
-/// DIF emits exactly the bit-reversed order DIT ingests — which is what
-/// makes the fused convolution a single straight-line spatial program.
-#[allow(clippy::needless_range_loop)] // lanes indexed by butterfly position math
-pub fn dif_fft_program(lanes: usize) -> Program {
-    assert!(lanes.is_power_of_two() && lanes >= 2);
-    let levels_n = lanes.trailing_zeros() as usize;
-    let mut levels = Vec::with_capacity(levels_n);
-    for step in 0..levels_n {
-        let half = lanes >> (step + 1);
-        let len = half << 1;
-        let mut ops = vec![Op::Pass; lanes];
-        for i in 0..lanes {
-            let j = i % len;
-            if j < half {
-                // Upper lane: u ← u + v.
-                ops[i] = Op::Add { src: i + half };
-            } else {
-                // Lower lane: v ← w_{j−half} · (u − v).
-                let w = C64::cis(-2.0 * PI * (j - half) as f64 / len as f64);
-                ops[i] = Op::TwiddleSub { src: i - half, c: w };
-            }
-        }
-        levels.push(Level::new(ops));
+/// Per-lane decimation-in-frequency butterfly op at level `step` (stride
+/// `lanes/2^{step+1}`) — shared by [`dif_fft_program`] and
+/// [`fused_conv_program`].
+fn dif_butterfly(lanes: usize, step: usize, i: usize) -> Op {
+    let half = lanes >> (step + 1);
+    let len = half << 1;
+    let j = i % len;
+    if j < half {
+        // Upper lane: u ← u + v.
+        ops::add(i + half)
+    } else {
+        // Lower lane: v ← w_{j−half} · (u − v).
+        let w = C64::cis(-2.0 * PI * (j - half) as f64 / len as f64);
+        ops::twiddle_sub(i - half, w)
     }
-    Program::new(&format!("dif-fft{lanes}"), PcuMode::Fft, levels)
 }
 
-/// Frequency-domain filter multiply for the fused convolution: one
-/// element-wise level whose per-lane constants are `FFT(h)` permuted to
-/// bit-reversed order (matching the DIF output the level consumes) and
-/// pre-scaled by `1/N` (folding the inverse transform's normalization into
-/// the resident filter — zero extra levels).
-pub fn freq_filter_program(h: &[C64]) -> Program {
+/// Folded frequency-domain filter taps: `FFT(h)` permuted to bit-reversed
+/// order (matching the DIF output that consumes them) and pre-scaled by
+/// `1/N` — the constant-folding step of [`freq_filter_program`] and
+/// [`fused_conv_program`].
+fn freq_filter_taps(h: &[C64]) -> Vec<C64> {
     let n = h.len();
     assert!(n.is_power_of_two() && n >= 2);
     let hf = crate::fft::fft(h);
-    let ops = bit_reverse(&hf).iter().map(|z| Op::MulConst(z.scale(1.0 / n as f64))).collect();
-    Program::new(&format!("freq-filter{n}"), PcuMode::ElementWise, vec![Level::new(ops)])
+    bit_reverse(&hf).iter().map(|z| z.scale(1.0 / n as f64)).collect()
 }
 
-/// The **fused** FFT→filter→iFFT circular-convolution pipeline, the
-/// pcusim-level ground truth for the mapper's fusion pass: DIF forward
-/// levels, one filter-multiply level, DIT inverse levels — `2·log₂(N)+1`
-/// stages, natural-order input *and* output, intermediates never leaving
-/// the pipeline registers. On the Table I PCU (32×12) it occupies 11 of 12
-/// stages of a single FFT-mode PCU; on a baseline PCU it serializes.
-///
-/// [`unfused_conv_programs`] exposes the identical arithmetic as three
-/// separate program launches; the integration tests assert the two are
-/// bit-identical (fusion is a scheduling transform, not a numerics one).
-pub fn fused_conv_program(lanes: usize, h: &[C64]) -> Program {
-    assert_eq!(h.len(), lanes, "filter length must match lane count");
-    let mut levels = dif_fft_program(lanes).levels;
-    levels.extend(freq_filter_program(h).levels);
-    levels.extend(dit_levels(lanes, 1.0));
-    Program::new(&format!("fused-conv{lanes}"), PcuMode::Fft, levels)
+define_pcu_program! {
+    /// Radix-2 decimation-in-time FFT over `lanes` complex points, expecting
+    /// bit-reversed input (see [`bit_reverse`]). Level *b* performs the
+    /// stride-`2^b` butterflies: the pair-leader lane computes `a + w·b`
+    /// (MAC) and the partner lane computes `a_partner − w·b_self` via the
+    /// mirrored MAC — exactly the dataflow Fig. 5 unrolls across the
+    /// pipeline.
+    pub fn fft_program(lanes: usize) {
+        name: format!("fft{lanes}"),
+        mode: Fft,
+        width: lanes,
+        let n = log2_lanes(lanes);
+        stage bfly[b in 0..n] = |i| dit_butterfly(b, i, -1.0);
+    }
+}
+
+define_pcu_program! {
+    /// Unnormalized inverse DIT FFT: bit-reversed input → natural-order
+    /// output, conjugate twiddles, **no** 1/N scaling (the fused convolution
+    /// folds the 1/N into the frequency-domain filter constants — see
+    /// [`freq_filter_program`]).
+    pub fn idit_fft_program(lanes: usize) {
+        name: format!("idit-fft{lanes}"),
+        mode: Fft,
+        width: lanes,
+        let n = log2_lanes(lanes);
+        stage ibfly[b in 0..n] = |i| dit_butterfly(b, i, 1.0);
+    }
+}
+
+define_pcu_program! {
+    /// Radix-2 decimation-in-frequency forward FFT: natural-order input →
+    /// bit-reversed output. Level *s* runs the stride-`lanes/2^{s+1}`
+    /// butterflies: the upper lane computes `a + b` (Add) and the lower lane
+    /// `w·(a − b)` via [`Op::TwiddleSub`]. Paired with [`idit_fft_program`]
+    /// this gives a transform→inverse chain with *no* reordering in between
+    /// — DIF emits exactly the bit-reversed order DIT ingests — which is
+    /// what makes the fused convolution a single straight-line spatial
+    /// program.
+    pub fn dif_fft_program(lanes: usize) {
+        name: format!("dif-fft{lanes}"),
+        mode: Fft,
+        width: lanes,
+        let n = log2_lanes(lanes);
+        stage dif[step in 0..n] = |i| dif_butterfly(lanes, step, i);
+    }
+}
+
+define_pcu_program! {
+    /// Frequency-domain filter multiply for the fused convolution: one
+    /// element-wise level whose per-lane constants are `FFT(h)` permuted to
+    /// bit-reversed order (matching the DIF output the level consumes) and
+    /// pre-scaled by `1/N` (folding the inverse transform's normalization
+    /// into the resident filter — zero extra levels).
+    pub fn freq_filter_program(h: &[C64]) {
+        name: format!("freq-filter{}", h.len()),
+        mode: ElementWise,
+        width: h.len(),
+        let taps = freq_filter_taps(h);
+        stage filter = |i| ops::mul(taps[i]);
+    }
+}
+
+define_pcu_program! {
+    /// The **fused** FFT→filter→iFFT circular-convolution pipeline, the
+    /// pcusim-level ground truth for the mapper's fusion pass: DIF forward
+    /// levels, one filter-multiply level, DIT inverse levels —
+    /// `2·log₂(N)+1` stages, natural-order input *and* output,
+    /// intermediates never leaving the pipeline registers. On the Table I
+    /// PCU (32×12) it occupies 11 of 12 stages of a single FFT-mode PCU; on
+    /// a baseline PCU it serializes.
+    ///
+    /// [`unfused_conv_programs`] exposes the identical arithmetic as three
+    /// separate program launches; the integration tests assert the two are
+    /// bit-identical (fusion is a scheduling transform, not a numerics one).
+    pub fn fused_conv_program(lanes: usize, h: &[C64]) {
+        name: format!("fused-conv{lanes}"),
+        mode: Fft,
+        width: lanes,
+        let n = log2_lanes(lanes);
+        let taps = {
+            assert_eq!(h.len(), lanes, "filter length must match lane count");
+            freq_filter_taps(h)
+        };
+        stage dif[step in 0..n] = |i| dif_butterfly(lanes, step, i);
+        stage filter = |i| ops::mul(taps[i]);
+        stage idit[b in 0..n] = |i| dit_butterfly(b, i, 1.0);
+    }
 }
 
 /// The unfused counterpart of [`fused_conv_program`]: the same three stages
 /// as separate program launches (forward DIF, filter multiply, inverse
 /// DIT), each intermediate staged through a PMU/DRAM buffer between
 /// launches. Same levels, same constants, same order — running them
-/// back-to-back is bit-identical to the fused pipeline.
+/// back-to-back is bit-identical to the fused pipeline. (A composition of
+/// three DSL programs, not a fourth dataflow.)
 pub fn unfused_conv_programs(lanes: usize, h: &[C64]) -> [Program; 3] {
     assert_eq!(h.len(), lanes, "filter length must match lane count");
     [dif_fft_program(lanes), freq_filter_program(h), idit_fft_program(lanes)]
 }
 
-/// Inclusive Hillis–Steele scan over `lanes` elements: level *b* has lane
-/// *i ≥ 2^b* add lane *i − 2^b* (Fig. 9 left / Fig. 10 top).
-#[allow(clippy::needless_range_loop)] // lanes indexed by shift-distance math
-pub fn hs_scan_program(lanes: usize) -> Program {
-    assert!(lanes.is_power_of_two() && lanes >= 2);
-    let levels_n = lanes.trailing_zeros() as usize;
-    let mut levels = Vec::with_capacity(levels_n);
-    for b in 0..levels_n {
-        let stride = 1 << b;
-        let mut ops = vec![Op::Pass; lanes];
-        for i in stride..lanes {
-            ops[i] = Op::Add { src: i - stride };
-        }
-        levels.push(Level::new(ops));
+define_pcu_program! {
+    /// Inclusive Hillis–Steele scan over `lanes` elements: level *b* has
+    /// lane *i ≥ 2^b* add lane *i − 2^b* (Fig. 9 left / Fig. 10 top).
+    pub fn hs_scan_program(lanes: usize) {
+        name: format!("hs-scan{lanes}"),
+        mode: HsScan,
+        width: lanes,
+        let n = log2_lanes(lanes);
+        stage shift[b in 0..n] = |i| {
+            let stride = 1 << b;
+            if i >= stride { ops::add(i - stride) } else { ops::pass() }
+        };
     }
-    Program::new(&format!("hs-scan{lanes}"), PcuMode::HsScan, levels)
 }
 
-/// Exclusive Blelloch scan over `lanes` elements: `log₂(lanes)` up-sweep
-/// levels build the reduction tree, then `log₂(lanes)` down-sweep levels
-/// distribute prefixes (Fig. 9 right / Fig. 10 bottom). The root zeroing is
-/// folded into the first down-sweep level, so the program needs exactly
-/// `2·log₂(lanes)` stages.
-pub fn b_scan_program(lanes: usize) -> Program {
-    assert!(lanes.is_power_of_two() && lanes >= 2);
-    let levels_n = lanes.trailing_zeros() as usize;
-    let mut levels = Vec::with_capacity(2 * levels_n);
-    // Up-sweep: at stride 2^b, tree nodes accumulate their left sibling.
-    for b in 0..levels_n {
-        let stride = 1 << b;
-        let group = stride << 1;
-        let mut ops = vec![Op::Pass; lanes];
-        for i in ((group - 1)..lanes).step_by(group) {
-            ops[i] = Op::Add { src: i - stride };
-        }
-        levels.push(Level::new(ops));
-    }
-    // Down-sweep. First level folds the root-zeroing: after the up-sweep the
-    // root would be set to 0, so its left child receives Const(0) and the
-    // root receives the left child's value.
-    for (step, _) in (0..levels_n).enumerate() {
-        let stride = 1 << (levels_n - 1 - step);
-        let group = stride << 1;
-        let mut ops = vec![Op::Pass; lanes];
-        for i in ((group - 1)..lanes).step_by(group) {
-            if step == 0 {
-                // Root pair: left child ← 0, root ← left child.
-                ops[i - stride] = Op::Const(C64::ZERO);
-                ops[i] = Op::Take { src: i - stride };
+define_pcu_program! {
+    /// Exclusive Blelloch scan over `lanes` elements: `log₂(lanes)` up-sweep
+    /// levels build the reduction tree, then `log₂(lanes)` down-sweep levels
+    /// distribute prefixes (Fig. 9 right / Fig. 10 bottom). The root zeroing
+    /// is folded into the first down-sweep level, so the program needs
+    /// exactly `2·log₂(lanes)` stages.
+    pub fn b_scan_program(lanes: usize) {
+        name: format!("b-scan{lanes}"),
+        mode: BScan,
+        width: lanes,
+        let n = log2_lanes(lanes);
+        // Up-sweep: at stride 2^b, tree nodes accumulate their left sibling.
+        stage up[b in 0..n] = |i| {
+            let stride = 1 << b;
+            let group = stride << 1;
+            if i % group == group - 1 { ops::add(i - stride) } else { ops::pass() }
+        };
+        // Down-sweep: the tree pair (left child at `group`-offset stride−1,
+        // parent at group−1) exchanges; step 0 folds the root zeroing.
+        stage down[step in 0..n] = |i| {
+            let stride = 1 << (n - 1 - step);
+            let group = stride << 1;
+            if i % group == group - 1 {
+                // Parent: root takes its (zeroed) left child at step 0,
+                // otherwise t + x[i] with t the left child's old value.
+                if step == 0 { ops::take(i - stride) } else { ops::add(i - stride) }
+            } else if i % group == stride - 1 {
+                // Left child: zeroed at the root step, else takes the parent.
+                if step == 0 { ops::cnst(C64::ZERO) } else { ops::take(i + stride) }
             } else {
-                // t = x[i−k]; x[i−k] = x[i]; x[i] = t + x[i].
-                ops[i - stride] = Op::Take { src: i };
-                ops[i] = Op::Add { src: i - stride };
+                ops::pass()
             }
-        }
-        levels.push(Level::new(ops));
+        };
     }
-    Program::new(&format!("b-scan{lanes}"), PcuMode::BScan, levels)
 }
 
-/// Baseline reduction-tree sum into lane 0 (Fig. 2, reduction mode).
-pub fn reduction_program(lanes: usize) -> Program {
-    assert!(lanes.is_power_of_two() && lanes >= 2);
-    let levels_n = lanes.trailing_zeros() as usize;
-    let mut levels = Vec::with_capacity(levels_n);
-    for b in 0..levels_n {
-        let stride = 1 << b;
-        let group = stride << 1;
-        let mut ops = vec![Op::Pass; lanes];
-        for i in (0..lanes).step_by(group) {
-            ops[i] = Op::Add { src: i + stride };
-        }
-        levels.push(Level::new(ops));
+define_pcu_program! {
+    /// Baseline reduction-tree sum into lane 0 (Fig. 2, reduction mode).
+    pub fn reduction_program(lanes: usize) {
+        name: format!("reduce{lanes}"),
+        mode: Reduction,
+        width: lanes,
+        let n = log2_lanes(lanes);
+        stage fold[b in 0..n] = |i| {
+            let stride = 1 << b;
+            let group = stride << 1;
+            if i % group == 0 { ops::add(i + stride) } else { ops::pass() }
+        };
     }
-    Program::new(&format!("reduce{lanes}"), PcuMode::Reduction, levels)
 }
 
-/// Element-wise multiply by per-lane constants — the Bailey twiddle-scaling
-/// step (§III-A step 3), runnable on any PCU in element-wise mode.
-pub fn twiddle_program(factors: &[C64]) -> Program {
-    let ops = factors.iter().map(|&c| Op::MulConst(c)).collect();
-    Program::new("twiddle", PcuMode::ElementWise, vec![Level::new(ops)])
+define_pcu_program! {
+    /// Element-wise multiply by per-lane constants — the Bailey
+    /// twiddle-scaling step (§III-A step 3), runnable on any PCU in
+    /// element-wise mode. Width is `factors.len()`, not necessarily a power
+    /// of two: with no cross-lane traffic the DSL skips the fabric check.
+    pub fn twiddle_program(factors: &[C64]) {
+        name: "twiddle",
+        mode: ElementWise,
+        width: factors.len(),
+        stage twiddle = |i| ops::mul(factors[i]);
+    }
+}
+
+/// Names accepted by [`demo_program`] — the `debug` CLI's program registry.
+pub const DEMO_PROGRAM_NAMES: [&str; 9] = [
+    "fft",
+    "dif_fft",
+    "idit_fft",
+    "freq_filter",
+    "fused_conv",
+    "hs_scan",
+    "b_scan",
+    "reduction",
+    "twiddle",
+];
+
+/// Look up a canonical program by name for the `debug` CLI and examples.
+/// `-` and `_` are interchangeable in `name`. Programs that need constants
+/// (filter taps, twiddle factors) derive them deterministically from
+/// `seed`, so a debug session is reproducible from its command line.
+pub fn demo_program(name: &str, lanes: usize, seed: u64) -> Option<Program> {
+    let mut rng = XorShift::new(seed | 1);
+    let rand_c: Vec<C64> = (0..lanes)
+        .map(|_| C64::new(rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0)))
+        .collect();
+    match name.replace('-', "_").as_str() {
+        "fft" => Some(fft_program(lanes)),
+        "dif_fft" => Some(dif_fft_program(lanes)),
+        "idit_fft" => Some(idit_fft_program(lanes)),
+        "freq_filter" => Some(freq_filter_program(&rand_c)),
+        "fused_conv" => Some(fused_conv_program(lanes, &rand_c)),
+        "hs_scan" => Some(hs_scan_program(lanes)),
+        "b_scan" => Some(b_scan_program(lanes)),
+        "reduction" => Some(reduction_program(lanes)),
+        "twiddle" => {
+            let f: Vec<C64> =
+                (0..lanes).map(|i| C64::cis(-PI * i as f64 / lanes as f64)).collect();
+            Some(twiddle_program(&f))
+        }
+        _ => None,
+    }
 }
 
 #[cfg(test)]
@@ -486,5 +569,41 @@ mod tests {
         assert!(!stats.spatial);
         let want = cooley_tukey::fft(&x);
         assert!(max_abs_diff_c(&outs[0], &want) < 1e-11);
+    }
+
+    #[test]
+    fn dsl_labels_name_the_fused_stages() {
+        // The debugger and timeline rely on these names (`--break-stage
+        // filter` in CI); pin them.
+        let mut rng = XorShift::new(27);
+        let h = rand_c(&mut rng, 8);
+        let p = fused_conv_program(8, &h);
+        assert_eq!(p.stage_label(0), "dif0");
+        assert_eq!(p.stage_label(2), "dif2");
+        assert_eq!(p.stage_label(3), "filter");
+        assert_eq!(p.stage_label(4), "idit0");
+        assert_eq!(p.stage_label(6), "idit2");
+        assert_eq!(p.labels.len(), p.levels.len());
+    }
+
+    #[test]
+    fn demo_program_registry_resolves_all_names() {
+        for name in DEMO_PROGRAM_NAMES {
+            let p = demo_program(name, 8, 42).unwrap_or_else(|| panic!("{name} must resolve"));
+            assert!(!p.levels.is_empty(), "{name}");
+            assert_eq!(p.width(), 8, "{name}");
+        }
+        // Dash/underscore interchangeable; unknown names are None.
+        assert!(demo_program("fused-conv", 8, 42).is_some());
+        assert!(demo_program("nope", 8, 42).is_none());
+    }
+
+    #[test]
+    fn demo_program_deterministic_per_seed() {
+        let a = demo_program("fused_conv", 8, 7).unwrap();
+        let b = demo_program("fused_conv", 8, 7).unwrap();
+        let c = demo_program("fused_conv", 8, 8).unwrap();
+        assert_eq!(a.levels, b.levels, "same seed, same taps");
+        assert_ne!(a.levels, c.levels, "different seed, different taps");
     }
 }

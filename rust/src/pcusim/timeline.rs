@@ -10,7 +10,10 @@
 //!   starting at cycle `s` and busy for `vectors` cycles — the classic
 //!   skewed-pipeline parallelogram. Unused trailing stages forward data as
 //!   `pass` spans; a fused program fills them with useful work, which is
-//!   exactly what the flame view is for.
+//!   exactly what the flame view is for. Spans are named by
+//!   [`Program::stage_label`], so DSL-authored programs render their stage
+//!   names (`fused-conv32: filter`) and hand-assembled ones keep the `L{s}`
+//!   fallback.
 //! * **Serialized** (baseline fabric, §III-B): every level re-executes on
 //!   stage 0, one level per cycle per vector — the timeline shows the
 //!   1/stages throughput collapse as a single saturated track.
@@ -54,7 +57,7 @@ pub fn stage_timeline(pcu: &Pcu, prog: &Program, vectors: usize, t0_cycles: u64)
         for (s, level) in prog.levels.iter().enumerate() {
             name_track(PID_PCUSIM, s as u64, format!("stage {s}"));
             out.push(ev(
-                format!("{}: L{s}", prog.name),
+                format!("{}: {}", prog.name, prog.stage_label(s)),
                 s as u64,
                 t0_cycles + s as u64,
                 v,
@@ -73,7 +76,7 @@ pub fn stage_timeline(pcu: &Pcu, prog: &Program, vectors: usize, t0_cycles: u64)
         for vec_i in 0..v.min(max_vectors) {
             for (li, level) in prog.levels.iter().enumerate() {
                 out.push(ev(
-                    format!("{}: v{vec_i} L{li}", prog.name),
+                    format!("{}: v{vec_i} {}", prog.name, prog.stage_label(li)),
                     0,
                     t0_cycles + vec_i * levels as u64 + li as u64,
                     1,
@@ -136,6 +139,38 @@ mod tests {
         starts.sort_unstable();
         let want: Vec<u64> = (0..(vectors * prog.levels.len()) as u64).collect();
         assert_eq!(starts, want);
+    }
+
+    #[test]
+    fn spatial_spans_carry_dsl_stage_labels() {
+        let geom = PcuGeometry::new(8, 8);
+        let prog = fft_program(8); // DSL-authored: stages bfly0..bfly2
+        let pcu = Pcu::fft_mode(geom);
+        let evs = stage_timeline(&pcu, &prog, 4, 0);
+        assert_eq!(evs[0].name, "fft8: bfly0");
+        assert_eq!(evs[2].name, "fft8: bfly2");
+        assert_eq!(evs[3].name, "fft8: pass");
+        // Unlabeled programs keep the historical L{s} span names.
+        let plain = crate::pcusim::legacy::legacy_fft_program(8);
+        let evs2 = stage_timeline(&pcu, &plain, 4, 0);
+        assert_eq!(evs2[0].name, "fft8: L0");
+    }
+
+    #[test]
+    fn serialized_timeline_cycles_pin_to_exec_stats_minus_drain() {
+        // The serialized export covers only the v·levels work cycles at
+        // stage 0; the engine additionally accounts (stages−1)·levels drain
+        // cycles. Pin the exact relation for a labeled (DSL) program.
+        let geom = PcuGeometry::new(8, 8);
+        let prog = fft_program(8);
+        let pcu = Pcu::baseline(geom);
+        let vectors = 4usize;
+        let evs = stage_timeline(&pcu, &prog, vectors, 0);
+        let inputs: Vec<Vec<C64>> = vec![vec![C64::real(1.0); 8]; vectors];
+        let (_, stats) = pcu.run(&prog, &inputs);
+        assert!(!stats.spatial);
+        let drain = (geom.stages as u64 - 1) * prog.levels.len() as u64;
+        assert_eq!(timeline_cycles(&evs), stats.cycles - drain);
     }
 
     #[test]

@@ -1,0 +1,259 @@
+//! Differential wall for the `define_pcu_program!` migration.
+//!
+//! Every DSL-authored pcusim program must be **bit-identical** to its
+//! hand-assembled `legacy_*` oracle — same level tables at construction,
+//! same outputs (down to the f64 bit pattern) and same `ExecStats` when
+//! executed on both the extension and the baseline fabric, across
+//! power-of-two and non-power-of-two batch lengths. On top of that, the
+//! single-step debugger must agree with the batch engine under
+//! breakpoints, deterministic resume, and snapshot JSON round-trips.
+
+use ssm_rdu::arch::PcuGeometry;
+use ssm_rdu::pcusim::{
+    self, legacy, stage_timeline, timeline_cycles, DebugSession, Pcu, Program, RunOutcome,
+};
+use ssm_rdu::util::json::Json;
+use ssm_rdu::util::{C64, XorShift};
+
+fn rand_c(rng: &mut XorShift, n: usize) -> Vec<C64> {
+    (0..n).map(|_| C64::new(rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0))).collect()
+}
+
+fn rand_batch(rng: &mut XorShift, vectors: usize, lanes: usize) -> Vec<Vec<C64>> {
+    (0..vectors).map(|_| rand_c(rng, lanes)).collect()
+}
+
+/// Every (DSL, legacy) constructor pair at a given lane count, sharing the
+/// same randomly drawn filter taps / twiddle factors.
+fn pairs(lanes: usize, rng: &mut XorShift) -> Vec<(Program, Program)> {
+    let h = rand_c(rng, lanes);
+    let tw = rand_c(rng, lanes);
+    let mut out = vec![
+        (pcusim::fft_program(lanes), legacy::legacy_fft_program(lanes)),
+        (pcusim::idit_fft_program(lanes), legacy::legacy_idit_fft_program(lanes)),
+        (pcusim::dif_fft_program(lanes), legacy::legacy_dif_fft_program(lanes)),
+        (pcusim::freq_filter_program(&h), legacy::legacy_freq_filter_program(&h)),
+        (pcusim::fused_conv_program(lanes, &h), legacy::legacy_fused_conv_program(lanes, &h)),
+        (pcusim::hs_scan_program(lanes), legacy::legacy_hs_scan_program(lanes)),
+        (pcusim::b_scan_program(lanes), legacy::legacy_b_scan_program(lanes)),
+        (pcusim::reduction_program(lanes), legacy::legacy_reduction_program(lanes)),
+        (pcusim::twiddle_program(&tw), legacy::legacy_twiddle_program(&tw)),
+    ];
+    let [d1, d2, d3] = pcusim::unfused_conv_programs(lanes, &h);
+    let [l1, l2, l3] = legacy::legacy_unfused_conv_programs(lanes, &h);
+    out.push((d1, l1));
+    out.push((d2, l2));
+    out.push((d3, l3));
+    out
+}
+
+/// Exact f64 bit patterns of a batch of output vectors: "bit-identical"
+/// means exactly this, not approximate equality.
+fn bits(out: &[Vec<C64>]) -> Vec<(u64, u64)> {
+    out.iter().flatten().map(|z| (z.re.to_bits(), z.im.to_bits())).collect()
+}
+
+// ---------------------------------------------------------------- structure
+
+#[test]
+fn dsl_programs_are_structurally_identical_to_legacy() {
+    let mut rng = XorShift::new(0x15541);
+    for lanes in [2usize, 4, 8, 32] {
+        for (dsl, leg) in pairs(lanes, &mut rng) {
+            assert_eq!(dsl.name, leg.name, "at {lanes} lanes");
+            assert_eq!(dsl.mode, leg.mode, "{}", dsl.name);
+            assert_eq!(
+                dsl.levels, leg.levels,
+                "{} at {lanes} lanes: DSL and legacy level tables must be bit-identical",
+                dsl.name
+            );
+            assert_eq!(
+                dsl.labels.len(),
+                dsl.levels.len(),
+                "{}: the DSL labels every stage",
+                dsl.name
+            );
+            assert!(leg.labels.is_empty(), "{}: legacy oracles stay unlabeled", leg.name);
+        }
+    }
+}
+
+#[test]
+fn non_pow2_elementwise_widths_build_and_match_legacy() {
+    // The execution engine's geometry is power-of-two-laned, so odd widths
+    // exercise the construction path only: the level table is the contract.
+    let mut rng = XorShift::new(0x0dd);
+    for width in [3usize, 5, 7] {
+        let factors = rand_c(&mut rng, width);
+        let dsl = pcusim::twiddle_program(&factors);
+        let leg = legacy::legacy_twiddle_program(&factors);
+        assert_eq!(dsl.width(), width);
+        assert_eq!(dsl.levels, leg.levels, "twiddle at width {width}");
+    }
+}
+
+// ---------------------------------------------------------------- behavior
+
+#[test]
+fn dsl_programs_run_bit_identically_to_legacy_on_both_fabrics() {
+    let mut rng = XorShift::new(0xd1ff);
+    for lanes in [2usize, 4, 8] {
+        let progs = pairs(lanes, &mut rng);
+        let geom = PcuGeometry::new(lanes, 12);
+        for vectors in [1usize, 3, 4, 7, 8, 17] {
+            let inputs = rand_batch(&mut rng, vectors, lanes);
+            for (dsl, leg) in &progs {
+                // Extension fabric (spatial where the mode allows it) and
+                // baseline fabric (scan/FFT programs serialize).
+                for pcu in [Pcu::with_extension(geom, dsl.mode), Pcu::baseline(geom)] {
+                    let (a, sa) = pcu.run(dsl, &inputs);
+                    let (b, sb) = pcu.run(leg, &inputs);
+                    assert_eq!(
+                        bits(&a),
+                        bits(&b),
+                        "{} lanes={lanes} vectors={vectors}: outputs must be bit-identical",
+                        dsl.name
+                    );
+                    assert_eq!(sa, sb, "{}: ExecStats (incl. cycles) must match", dsl.name);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn timeline_totals_pin_to_exec_stats_for_macro_programs() {
+    let mut rng = XorShift::new(0x7177);
+    let lanes = 8usize;
+    let geom = PcuGeometry::new(lanes, 12);
+    let h = rand_c(&mut rng, lanes);
+    let vectors = 6usize;
+    let inputs = rand_batch(&mut rng, vectors, lanes);
+    let progs = [
+        pcusim::fused_conv_program(lanes, &h),
+        pcusim::fft_program(lanes),
+        pcusim::hs_scan_program(lanes),
+        pcusim::b_scan_program(lanes),
+    ];
+    for prog in &progs {
+        // Spatial on the matching extension fabric: timeline total == cycles.
+        let ext = Pcu::with_extension(geom, prog.mode);
+        let (_, stats) = ext.run(prog, &inputs);
+        assert!(stats.spatial, "{}", prog.name);
+        let evs = stage_timeline(&ext, prog, vectors, 0);
+        assert_eq!(timeline_cycles(&evs), stats.cycles, "{}: spatial timeline", prog.name);
+        // Serialized on baseline: the export covers the stage-0 work cycles;
+        // the engine additionally accounts the (stages-1)*levels drain.
+        let base = Pcu::baseline(geom);
+        let (_, sstats) = base.run(prog, &inputs);
+        assert!(!sstats.spatial, "{}", prog.name);
+        let sevs = stage_timeline(&base, prog, vectors, 0);
+        let drain = (geom.stages as u64 - 1) * prog.levels.len() as u64;
+        assert_eq!(
+            timeline_cycles(&sevs),
+            sstats.cycles - drain,
+            "{}: serialized timeline",
+            prog.name
+        );
+    }
+}
+
+// ---------------------------------------------------------------- debugger
+
+#[test]
+fn stage_and_cycle_breakpoints_are_deterministic() {
+    let lanes = 32usize;
+    let mut rng = XorShift::new(0xb0b);
+    let h = rand_c(&mut rng, lanes);
+    let prog = pcusim::fused_conv_program(lanes, &h);
+    let inputs = rand_batch(&mut rng, 5, lanes);
+    let pcu = Pcu::with_extension(PcuGeometry::new(lanes, 12), prog.mode);
+    let hits = |prog: &Program, inputs: &[Vec<C64>]| -> Vec<(u64, Option<usize>)> {
+        let mut dbg = DebugSession::new(pcu, prog, inputs.to_vec());
+        dbg.break_on_label("filter").expect("fused conv has a filter stage");
+        let mut seen = Vec::new();
+        loop {
+            match dbg.run() {
+                RunOutcome::Break(hit) => seen.push((hit.cycle, hit.vector)),
+                RunOutcome::Done => return seen,
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    };
+    let first = hits(&prog, &inputs);
+    let second = hits(&prog, &inputs);
+    assert_eq!(first, second, "same program + inputs must break at the same cycles");
+    // filter is level log2(32) = 5; vector v reaches it at cycle 6 + v.
+    assert_eq!(first, (0..5).map(|v| (6 + v as u64, Some(v))).collect::<Vec<_>>());
+}
+
+#[test]
+fn resume_after_break_matches_uninterrupted_engine_run() {
+    let lanes = 8usize;
+    let mut rng = XorShift::new(0x5e5);
+    let h = rand_c(&mut rng, lanes);
+    let prog = pcusim::fused_conv_program(lanes, &h);
+    let inputs = rand_batch(&mut rng, 7, lanes);
+    let geom = PcuGeometry::new(lanes, 12);
+    for (pcu, regime) in [
+        (Pcu::with_extension(geom, prog.mode), "spatial"),
+        (Pcu::baseline(geom), "serialized"),
+    ] {
+        let mut dbg = DebugSession::new(pcu, &prog, inputs.clone());
+        dbg.break_on_cycle(3);
+        dbg.break_on_stage(1);
+        let mut breaks = 0usize;
+        loop {
+            match dbg.run() {
+                RunOutcome::Break(_) => breaks += 1,
+                RunOutcome::Done => break,
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert!(breaks > 1, "{regime}: expected multiple breakpoint hits");
+        let (want_out, want_stats) = pcu.run(&prog, &inputs);
+        assert_eq!(bits(dbg.outputs()), bits(&want_out), "{regime}: outputs after resume");
+        assert_eq!(dbg.stats().unwrap(), want_stats, "{regime}: stats after resume");
+    }
+}
+
+#[test]
+fn snapshot_round_trips_through_util_json() {
+    let lanes = 32usize;
+    let mut rng = XorShift::new(0x5a9);
+    let h = rand_c(&mut rng, lanes);
+    let prog = pcusim::fused_conv_program(lanes, &h);
+    let inputs = rand_batch(&mut rng, 8, lanes);
+    let pcu = Pcu::with_extension(PcuGeometry::new(lanes, 12), prog.mode);
+    let mut dbg = DebugSession::new(pcu, &prog, inputs);
+    // The CI smoke contract: breaking on the filter stage of fused_conv
+    // must observe in-flight NoC traffic from the dif stages behind it.
+    dbg.break_on_label("filter").unwrap();
+    match dbg.run() {
+        RunOutcome::Break(hit) => assert_eq!(hit.stage, Some(5)),
+        other => panic!("expected break, got {other:?}"),
+    }
+    let snap = dbg.snapshot();
+    assert!(!snap.noc.is_empty(), "dif stages must show cross-lane traffic");
+    assert!(!snap.stages.is_empty());
+    let doc = snap.to_json();
+    let parsed = Json::parse(&doc).unwrap_or_else(|e| panic!("snapshot emitted invalid JSON: {e}"));
+    let back = pcusim::Snapshot::from_json(&parsed).expect("snapshot JSON failed to parse back");
+    assert_eq!(back, snap, "snapshot must survive the JSON round-trip exactly");
+}
+
+#[test]
+fn run_to_then_finish_equals_engine() {
+    let lanes = 4usize;
+    let mut rng = XorShift::new(0xee7);
+    let prog = pcusim::b_scan_program(lanes);
+    let inputs = rand_batch(&mut rng, 9, lanes);
+    let pcu = Pcu::with_extension(PcuGeometry::new(lanes, 12), prog.mode);
+    let mut dbg = DebugSession::new(pcu, &prog, inputs.clone());
+    assert_eq!(dbg.run_to(2), RunOutcome::AtCycle(2));
+    assert_eq!(dbg.cycle(), 2);
+    assert_eq!(dbg.run(), RunOutcome::Done);
+    let (want_out, want_stats) = pcu.run(&prog, &inputs);
+    assert_eq!(bits(dbg.outputs()), bits(&want_out));
+    assert_eq!(dbg.stats().unwrap(), want_stats);
+}

@@ -11,12 +11,22 @@
 //! counterexample and reproduce exactly. CI pins the default seed; set
 //! `SSM_RDU_PROP_SEED=<u64>` to explore a different corner of the input
 //! space locally (documented in docs/WORKLOADS.md).
+//!
+//! Since the `define_pcu_program!` migration this file also fuzzes the
+//! pcusim DSL: random stage chains whose cross-lane routes are admitted by
+//! `topology::allows` must build through `ProgramBuilder`, execute
+//! identically to a straight-line scalar reference on both fabrics, and
+//! single-step through the debugger to the same outputs and stats.
 
+use ssm_rdu::arch::{PcuGeometry, PcuMode};
 use ssm_rdu::fft::conv::{direct_conv_circular, direct_conv_linear};
 use ssm_rdu::fft::{
     fft_conv_linear, fft_conv_linear_channels, fft_conv_linear_naive, FftEngine, FftPlan,
     RealFftPlan,
 };
+use ssm_rdu::pcusim::dsl::ops;
+use ssm_rdu::pcusim::program::Op;
+use ssm_rdu::pcusim::{topology, DebugSession, Pcu, ProgramBuilder};
 use ssm_rdu::runtime::{StealQueues, WorkerPool};
 use ssm_rdu::scan::{
     gate_silu_chunked, gate_silu_scalar, gate_silu_simd, mamba_scan_channels_chunked,
@@ -506,6 +516,194 @@ fn prop_steal_queues_conserve_and_order_work() {
             }
             if q.total_outstanding() != 0 || q.total_queued() != 0 {
                 return Err("queues did not drain to zero".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------- pcusim
+
+/// A generated pcusim case: lane count, interconnect mode, per-level op
+/// rows (only routes `topology::allows` admits), and a random input batch.
+type PcusimCase = (usize, PcuMode, Vec<Vec<Op>>, Vec<Vec<C64>>);
+
+fn rand_c64(r: &mut XorShift) -> C64 {
+    C64::new(r.uniform(-1.0, 1.0), r.uniform(-1.0, 1.0))
+}
+
+/// Draw a random stage chain the DSL must accept: every cross-lane source
+/// is filtered through `topology::allows` against the same geometry the
+/// builder validates with (stages = program depth).
+fn gen_pcusim_case(r: &mut XorShift) -> PcusimCase {
+    let lanes = *r.choose(&[2usize, 4, 8]);
+    let mode = *r.choose(&[
+        PcuMode::ElementWise,
+        PcuMode::Reduction,
+        PcuMode::Fft,
+        PcuMode::HsScan,
+        PcuMode::BScan,
+    ]);
+    let depth = r.range(1, 4);
+    let geom = PcuGeometry::new(lanes, depth);
+    let mut levels = Vec::with_capacity(depth);
+    for li in 0..depth {
+        let mut row = Vec::with_capacity(lanes);
+        for dest in 0..lanes {
+            let srcs: Vec<usize> = (0..lanes)
+                .filter(|&s| s != dest && topology::allows(mode, geom, li, dest, s))
+                .collect();
+            let kind = r.below(6);
+            let op = if kind >= 3 && srcs.is_empty() {
+                ops::pass()
+            } else {
+                match kind {
+                    0 => ops::pass(),
+                    1 => ops::cnst(rand_c64(r)),
+                    2 => ops::mul(rand_c64(r)),
+                    3 => ops::add(*r.choose(&srcs)),
+                    4 => ops::take(*r.choose(&srcs)),
+                    _ => ops::mac(*r.choose(&srcs), rand_c64(r)),
+                }
+            };
+            row.push(op);
+        }
+        levels.push(row);
+    }
+    let vectors = r.range(1, 6);
+    let inputs =
+        (0..vectors).map(|_| (0..lanes).map(|_| rand_c64(r)).collect()).collect();
+    (lanes, mode, levels, inputs)
+}
+
+/// Straight-line scalar reference: apply each level's ops to the previous
+/// level's outputs, per the `Op` semantics table in `pcusim::program`.
+fn scalar_reference(levels: &[Vec<Op>], input: &[C64]) -> Vec<C64> {
+    let mut cur = input.to_vec();
+    for row in levels {
+        let next: Vec<C64> = row
+            .iter()
+            .enumerate()
+            .map(|(lane, op)| {
+                let a = cur[lane];
+                match *op {
+                    Op::Pass => a,
+                    Op::Const(c) => c,
+                    Op::Add { src } => a + cur[src],
+                    Op::Sub { src } => a - cur[src],
+                    Op::MulConst(c) => a * c,
+                    Op::Mac { src, c } => a + c * cur[src],
+                    Op::MacSelf { src, c } => c * a + cur[src],
+                    Op::TwiddleSub { src, c } => c * (cur[src] - a),
+                    Op::Take { src } => cur[src],
+                }
+            })
+            .collect();
+        cur = next;
+    }
+    cur
+}
+
+#[test]
+fn prop_pcusim_dsl_program_matches_scalar_reference() {
+    check(
+        &cfg(48),
+        "pcusim DSL program == straight-line scalar reference",
+        gen_pcusim_case,
+        no_shrink,
+        |(lanes, mode, levels, inputs)| {
+            let mut b = ProgramBuilder::new("prop-prog", *mode, *lanes);
+            for (li, row) in levels.iter().enumerate() {
+                b.stage(format!("s{li}"), row.clone());
+            }
+            let prog =
+                b.finish().map_err(|e| format!("builder rejected admitted routes: {e}"))?;
+            let want: Vec<Vec<C64>> =
+                inputs.iter().map(|v| scalar_reference(levels, v)).collect();
+            let geom = PcuGeometry::new(*lanes, 12);
+            // Extension fabric maps spatially; baseline serializes whenever
+            // the mode is an extension. Both regimes must agree with the
+            // reference exactly.
+            for pcu in [Pcu::with_extension(geom, *mode), Pcu::baseline(geom)] {
+                let (got, _) = pcu.run(&prog, inputs);
+                if got != want {
+                    return Err(format!(
+                        "engine diverged from scalar reference ({lanes} lanes, {mode:?})"
+                    ));
+                }
+            }
+            // Routes were admitted at construction, so the matching fabric
+            // must map the program spatially: vectors + stages - 1 cycles.
+            let pcu = Pcu::with_extension(geom, *mode);
+            let (_, stats) = pcu.run(&prog, inputs);
+            if !stats.spatial {
+                return Err("program with admitted routes must map spatially".into());
+            }
+            if stats.cycles != (inputs.len() + geom.stages - 1) as u64 {
+                return Err(format!("spatial cycle count off: {}", stats.cycles));
+            }
+            // Single-stepping the debugger to completion reproduces the
+            // batch engine bit for bit, stats included.
+            let mut dbg = DebugSession::new(pcu, &prog, inputs.clone());
+            while !dbg.is_done() {
+                dbg.step();
+            }
+            if dbg.outputs() != &want[..] {
+                return Err("debugger outputs diverged from reference".into());
+            }
+            if dbg.stats() != Some(stats) {
+                return Err("debugger stats diverged from engine".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pcusim_builder_accepts_any_width_without_cross_routes() {
+    // Straight-line (element-wise) programs carry no cross-lane routes, so
+    // the builder must accept any width — including non-powers of two the
+    // pow2-laned engine can never run. The level table is the contract.
+    check(
+        &cfg(32),
+        "pcusim builder: straight-line programs at any width",
+        |r| {
+            let width = r.range(2, 9);
+            let depth = r.range(1, 3);
+            let levels: Vec<Vec<Op>> = (0..depth)
+                .map(|_| {
+                    (0..width)
+                        .map(|_| match r.below(3) {
+                            0 => ops::pass(),
+                            1 => ops::cnst(rand_c64(r)),
+                            _ => ops::mul(rand_c64(r)),
+                        })
+                        .collect()
+                })
+                .collect();
+            let input: Vec<C64> = (0..width).map(|_| rand_c64(r)).collect();
+            (width, levels, input)
+        },
+        no_shrink,
+        |(width, levels, input)| {
+            let mut b = ProgramBuilder::new("prop-ew", PcuMode::ElementWise, *width);
+            for (li, row) in levels.iter().enumerate() {
+                b.stage(format!("s{li}"), row.clone());
+            }
+            let prog = b.finish().map_err(|e| e.to_string())?;
+            if prog.width() != *width {
+                return Err(format!("width {} != {width}", prog.width()));
+            }
+            for (li, level) in prog.levels.iter().enumerate() {
+                if level.ops != levels[li] {
+                    return Err(format!("level {li} not preserved by the builder"));
+                }
+            }
+            // The reference executor runs fine at odd widths even though
+            // the engine's geometry cannot.
+            let out = scalar_reference(levels, input);
+            if out.len() != *width {
+                return Err("reference output width mismatch".into());
             }
             Ok(())
         },
